@@ -1,0 +1,84 @@
+//! Paper §5 metrics suite (experiment M1 in DESIGN.md): goodput, request
+//! throughput, TTFT, TPOT, EAF and SLO attainment for each of the four
+//! datasets × {TMO, SSD-Smallest, SSD-Tuned, SpecRouter}.
+//!
+//! SSD-Tuned is derived per dataset by an offline profile sweep (the
+//! paper's description of the conceptual tuned baseline).
+use anyhow::Result;
+use specrouter::config::Mode;
+use specrouter::harness::{bench_pool, prompt_set, quick, run_offline,
+                          with_dataset, Table};
+
+fn main() -> Result<()> {
+    let pool = bench_pool()?;
+    let batch = if quick() { 4 } else { 8 };
+    let n = if quick() { 6 } else { 12 };
+    let datasets = ["gsm8k", "humaneval", "mtbench", "mgsm"];
+
+    for ds in datasets {
+        let prompts = with_dataset(ds, prompt_set(&pool, ds, n, 77, 32));
+        let probe = prompts[..prompts.len().min(3)].to_vec();
+
+        // offline tune: best static (draft, window) by measured TPOT
+        let mut tuned: Option<(f64, Mode)> = None;
+        for draft in ["m0", "m1"] {
+            for &w in &pool.manifest.windows.clone() {
+                let mode = Mode::Fixed {
+                    chain: vec![draft.into(), "m2".into()], window: w };
+                let (s, _) = run_offline(&pool, mode.clone(), batch,
+                                         &probe)?;
+                if tuned.as_ref().map_or(true, |(t, _)| s.tpot_ms_mean < *t) {
+                    tuned = Some((s.tpot_ms_mean, mode));
+                }
+            }
+        }
+        let tuned = tuned.unwrap().1;
+
+        let systems: Vec<(String, Mode)> = vec![
+            ("TMO".into(), Mode::Tmo),
+            ("SSD-Smallest".into(), Mode::Fixed {
+                chain: vec!["m0".into(), "m2".into()], window: 4 }),
+            (format!("SSD-Tuned {}", tuned.label()), tuned),
+            ("SpecRouter (Ours)".into(), Mode::Adaptive),
+        ];
+
+        let mut table = Table::new(&["system", "goodput(t/s)", "req/s",
+                                     "TTFT ms", "TPOT ms", "EAF", "SLO %",
+                                     "acc len"]);
+        let mut tmo_tpot = 0.0;
+        for (name, mode) in systems {
+            let (s, router) = run_offline(&pool, mode, batch, &prompts)?;
+            if name == "TMO" {
+                tmo_tpot = s.tpot_ms_mean;
+            }
+            // mean accepted tokens/step across speculative chains
+            let acc = {
+                let t = router.prof.selection_table();
+                let (mut steps, mut toks) = (0u64, 0.0);
+                for (chain, n) in &t {
+                    if let Some(a) = router.prof.mean_accept(chain) {
+                        steps += n;
+                        toks += a * *n as f64;
+                    }
+                }
+                if steps > 0 { toks / steps as f64 } else { 0.0 }
+            };
+            table.row(vec![
+                name,
+                format!("{:.2}", s.goodput_tps),
+                format!("{:.3}", s.req_throughput),
+                format!("{:.0}", s.ttft_ms_mean),
+                format!("{:.1}", s.tpot_ms_mean),
+                format!("{:.2}", s.eaf_vs(tmo_tpot)),
+                format!("{:.0}", s.slo_attainment * 100.0),
+                format!("{acc:.2}"),
+            ]);
+        }
+        println!("\n=== dataset {ds} (batch {batch}, {n} requests) ===");
+        table.print();
+    }
+    println!("\nshape to match: SpecRouter EAF >= tuned static >= naive \
+              static on every dataset; higher-determinism datasets \
+              (humaneval) should show the largest EAF.");
+    Ok(())
+}

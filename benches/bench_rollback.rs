@@ -1,0 +1,115 @@
+//! Paper Figure 3 / §4.4 (experiment F3): cost of the two-phase rollback
+//! machinery — O(1) logical mask rollback vs physical cache truncation —
+//! plus the slot-insert (admission) data movement. Pure host microbench:
+//! no PJRT involved, so timings are stable.
+use std::time::Instant;
+
+use specrouter::harness::Table;
+use specrouter::rng::Rng;
+use specrouter::state::kv_cache::{extract_slot_flat, insert_slot_flat,
+                                  truncate_tail_flat, KvDims};
+use specrouter::state::CacheMask;
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    println!("=== Figure 3 / state-management microbenchmarks ===\n");
+    let mut table = Table::new(&["operation", "config", "time/op",
+                                 "throughput"]);
+
+    // -- logical rollback: O(1) regardless of rollback depth -------------
+    for (slots, cap) in [(8usize, 128usize), (64, 128)] {
+        let mut mask = CacheMask::new(slots, cap);
+        for s in 0..slots {
+            mask.append_valid(s, cap - 16);
+        }
+        let mut rng = Rng::new(1);
+        let t = bench(200_000, || {
+            let s = rng.below(slots);
+            let v = mask.valid_len(s);
+            let depth = rng.below(8.min(v.max(1)));
+            mask.rollback_to(s, v - depth);
+            mask.append_valid(s, depth); // restore for the next iter
+        });
+        table.row(vec![
+            "logical rollback (Eq. 8)".into(),
+            format!("B={slots} S={cap}"),
+            format!("{:.0} ns", t * 1e9),
+            format!("{:.1} M ops/s", 1e-6 / t),
+        ]);
+    }
+
+    // -- physical truncation: proportional to reclaimed volume -----------
+    // m2-shaped cache (6 layers, 8 heads, S=128, Dh=16)
+    for batch in [8usize, 64] {
+        let d = KvDims { layers: 6, batch, heads: 8, seq: 128,
+                         head_dim: 16 };
+        let mut buf = vec![1.0f32; d.elements()];
+        let t = bench(20, || {
+            truncate_tail_flat(&mut buf, d, 120);
+            buf[0] = 1.0;
+        });
+        let bytes = d.elements() * 4;
+        table.row(vec![
+            "physical truncate (Eq. 9)".into(),
+            format!("m2 B={batch} ({:.0} MiB)", bytes as f64 / 1048576.0),
+            format!("{:.2} ms", t * 1e3),
+            format!("{:.1} GiB/s touched",
+                    bytes as f64 / t / 1073741824.0 / 16.0),
+        ]);
+    }
+
+    // -- admission slot insert -------------------------------------------
+    for batch in [8usize, 64] {
+        let dd = KvDims { layers: 6, batch, heads: 8, seq: 128,
+                          head_dim: 16 };
+        let sd = KvDims { batch: 1, ..dd };
+        let mut dst = vec![0.0f32; dd.elements()];
+        let src = vec![1.0f32; sd.elements()];
+        let mut rng = Rng::new(2);
+        let t = bench(200, || {
+            insert_slot_flat(&mut dst, dd, &src, sd, rng.below(batch))
+                .unwrap();
+        });
+        table.row(vec![
+            "slot insert (admission)".into(),
+            format!("m2 B={batch}"),
+            format!("{:.2} ms", t * 1e3),
+            format!("{:.1} GiB/s", sd.elements() as f64 * 4.0 / t
+                    / 1073741824.0),
+        ]);
+    }
+
+    // -- slot extract (eviction staging) ----------------------------------
+    let dd = KvDims { layers: 6, batch: 8, heads: 8, seq: 128, head_dim: 16 };
+    let src = vec![1.0f32; dd.elements()];
+    let t = bench(200, || {
+        let _ = extract_slot_flat(&src, dd, 3);
+    });
+    table.row(vec![
+        "slot extract (eviction)".into(),
+        "m2 B=8".into(),
+        format!("{:.2} ms", t * 1e3),
+        String::new(),
+    ]);
+
+    table.print();
+    println!("\nkey property (paper Fig. 3): logical rollback is O(1) \
+              bookkeeping — nanoseconds — while physical reclamation is \
+              batched and amortized; speculation never blocks on data \
+              movement.");
+
+    // correctness spot-check under the bench's own churn
+    let mut mask = CacheMask::new(4, 64);
+    mask.append_valid(0, 10);
+    mask.append_speculative(0, 5);
+    mask.rollback_to(0, 8);
+    mask.debug_validate();
+    println!("\nmask invariants hold after churn: OK");
+}

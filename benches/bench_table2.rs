@@ -1,0 +1,110 @@
+//! Paper Table 2: "Speed Ratio of Different Models Relative to
+//! Autoregressive Baseline" — batch sizes {1, 4, 8, 16, 32, 64} ×
+//! {Second-level SD, Third-level SD (static), Third-level SpecRouter}.
+//!
+//! Speed ratio = mean TPOT of TMO / mean TPOT of the system, measured on
+//! an identical mixed-corpus prompt set per batch size. Expect the paper's
+//! *shape*: ours >= both static systems at every batch size, and static
+//! third-level sometimes dipping below second-level (intermediate
+//! verification overhead without adaptivity).
+//!
+//! SPECROUTER_QUICK=1 restricts to batches {1, 4, 8} with fewer requests.
+use anyhow::Result;
+use specrouter::config::Mode;
+use specrouter::harness::{bench_pool, mixed_prompt_set, quick,
+                          run_offline_steady, Table};
+
+fn main() -> Result<()> {
+    let pool = bench_pool()?;
+    let batches: Vec<usize> = if quick() {
+        vec![1, 4, 8]
+    } else {
+        vec![1, 4, 8, 16, 32, 64]
+    };
+    let systems: Vec<(&str, Mode)> = vec![
+        ("Second-level SD", Mode::Fixed {
+            chain: vec!["m0".into(), "m2".into()], window: 4 }),
+        ("Third-level SD", Mode::Fixed {
+            chain: vec!["m0".into(), "m1".into(), "m2".into()], window: 4 }),
+        ("Third-level (Ours)", Mode::Adaptive),
+    ];
+
+    let mut table = Table::new(&["Batch Size", "Second-level SD",
+                                 "Third-level SD", "Third-level (Ours)"]);
+    println!("Table 2 reproduction: speed ratio vs autoregressive baseline");
+    println!("(target m2; mixed GSM8K/HumanEval/MTBench/MGSM prompts)\n");
+
+    for &b in &batches {
+        // enough requests for several continuous-batching waves — TPOT
+        // variance on a 1-core box needs averaging
+        let n = (4 * b).clamp(8, if quick() { 16 } else { 256 });
+        let prompts = mixed_prompt_set(&pool, n, 1000 + b as u64, 24);
+        // Speed ratio = steady-state goodput (tokens/s over full-occupancy
+        // ticks) relative to the autoregressive baseline on the same
+        // prompts. Full-occupancy filtering removes ramp/drain tail bias;
+        // the same requests flow through every system.
+        let (tmo_sum, _, tmo) = run_offline_steady(&pool, Mode::Tmo, b,
+                                                   &prompts)?;
+        eprintln!("[b={b}] TMO steady {:.1} t/s (whole-run {:.1}; {} req)",
+                  tmo.goodput_tps(), tmo_sum.goodput_tps, n);
+        let mut cells = vec![b.to_string()];
+        for (name, mode) in &systems {
+            let (_, router, st) = run_offline_steady(&pool, mode.clone(), b,
+                                                     &prompts)?;
+            let ratio = st.goodput_tps() / tmo.goodput_tps().max(1e-9);
+            eprintln!("[b={b}] {name}: steady {:.1} t/s ratio {ratio:.2} \
+                       ({} full ticks, {} steps)", st.goodput_tps(),
+                      st.full_ticks, router.prof.steps);
+            cells.push(format!("{ratio:.2}"));
+        }
+        table.row(cells);
+    }
+    println!();
+    table.print();
+    println!("\npaper reference (A100 testbed): b=16 row was \
+              1.31 / 1.20 / 1.91; shape to match: ours >= both statics.");
+
+    // --- calibrated-cost companion run (DESIGN.md §2) --------------------
+    // Re-run a subset with per-model spin-wait multipliers that stretch
+    // the pool's cost ratios toward the paper's GPU testbed (68m:7B is
+    // ~1:100 there; the miniature pool's honest CPU ratio is ~1:12).
+    if std::env::var("SPECROUTER_CALIBRATE").map_or(false, |v| v == "1") {
+        use specrouter::config::EngineConfig;
+        use specrouter::coordinator::{ChainRouter, Request};
+        use specrouter::metrics;
+        let muls = vec![("m1".to_string(), 2.0), ("m2".to_string(), 4.0)];
+        println!("\ncalibrated-cost mode (multipliers {muls:?}):");
+        let mut table = Table::new(&["Batch Size", "Second-level SD",
+                                     "Third-level SD",
+                                     "Third-level (Ours)"]);
+        for &b in &[1usize, 4, 8] {
+            let n = (2 * b).clamp(4, 8);
+            let prompts = mixed_prompt_set(&pool, n, 2000 + b as u64, 16);
+            let run = |mode: Mode| -> Result<f64> {
+                let mut cfg = EngineConfig::new(
+                    pool.manifest.root.clone());
+                cfg.batch = b;
+                cfg.mode = mode;
+                cfg.cost_multipliers = muls.clone();
+                let mut router = ChainRouter::with_pool(cfg, pool.clone())?;
+                for (d, p, m) in &prompts {
+                    router.submit(Request {
+                        id: 0, dataset: d.clone(), prompt: p.clone(),
+                        max_new: *m,
+                        arrival: std::time::Instant::now() });
+                }
+                router.run_until_idle(10_000_000)?;
+                Ok(metrics::summarize(&router.finished, 60_000.0)
+                   .tpot_ms_mean)
+            };
+            let tmo = run(Mode::Tmo)?;
+            let mut cells = vec![b.to_string()];
+            for (_, mode) in &systems {
+                cells.push(format!("{:.2}", tmo / run(mode.clone())?));
+            }
+            table.row(cells);
+        }
+        table.print();
+    }
+    Ok(())
+}

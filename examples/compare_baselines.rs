@@ -1,0 +1,99 @@
+//! Baseline comparison on an identical request trace (paper §5 Baselines):
+//! TMO vs SSD-Smallest vs SSD-Tuned vs static three-level vs SpecRouter.
+//!
+//! SSD-Tuned is produced the way the paper describes — an offline profile
+//! sweep over (draft model, window) pairs picks the best static
+//! configuration — so the adaptive router is compared against a genuinely
+//! tuned static opponent.
+//!
+//!   cargo run --release --example compare_baselines -- [dataset] [n] [batch]
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use specrouter::config::{EngineConfig, Mode};
+use specrouter::coordinator::{ChainRouter, Request};
+use specrouter::metrics;
+use specrouter::model_pool::ModelPool;
+use specrouter::workload::DatasetGen;
+
+fn run_mode(pool: &Arc<ModelPool>, mode: Mode, batch: usize,
+            prompts: &[(Vec<i32>, usize)], dataset: &str)
+            -> Result<metrics::Summary> {
+    let mut cfg = EngineConfig::new("artifacts");
+    cfg.batch = batch;
+    cfg.mode = mode;
+    let mut router = ChainRouter::with_pool(cfg, pool.clone())?;
+    for (prompt, max_new) in prompts {
+        router.submit(Request {
+            id: 0,
+            dataset: dataset.into(),
+            prompt: prompt.clone(),
+            max_new: *max_new,
+            arrival: Instant::now(),
+        });
+    }
+    router.run_until_idle(1_000_000)?;
+    Ok(metrics::summarize(&router.finished, 30_000.0))
+}
+
+/// Offline profile sweep for SSD-Tuned: run a few prompts through every
+/// (draft, window) pair and pick the best measured TPOT.
+fn tune_ssd(pool: &Arc<ModelPool>, batch: usize, dataset: &str,
+            probe: &[(Vec<i32>, usize)]) -> Result<Mode> {
+    let target = "m2".to_string();
+    let mut best: Option<(f64, Mode)> = None;
+    for draft in ["m0", "m1"] {
+        for &w in &pool.manifest.windows.clone() {
+            let mode = Mode::Fixed {
+                chain: vec![draft.into(), target.clone()], window: w };
+            let s = run_mode(pool, mode.clone(), batch, probe, dataset)?;
+            let tpot = s.tpot_ms_mean;
+            eprintln!("  [tune] {}: TPOT {:.1} ms", mode.label(), tpot);
+            if best.as_ref().map_or(true, |(b, _)| tpot < *b) {
+                best = Some((tpot, mode));
+            }
+        }
+    }
+    Ok(best.unwrap().1)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().cloned().unwrap_or_else(|| "gsm8k".into());
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let pool = Arc::new(ModelPool::open(std::path::Path::new("artifacts"))?);
+    let spec = pool.manifest.datasets[&dataset].clone();
+    let mut gen = DatasetGen::new(spec, 7);
+    let prompts: Vec<_> = (0..n).map(|_| gen.sample()).collect();
+    let probe: Vec<_> = prompts.iter().take(3).cloned().collect();
+
+    eprintln!("offline tuning of SSD-Tuned ({dataset}, batch {batch}):");
+    let tuned = tune_ssd(&pool, batch, &dataset, &probe)?;
+    eprintln!("  -> tuned static config: {}\n", tuned.label());
+
+    let systems: Vec<(&str, Mode)> = vec![
+        ("TMO", Mode::Tmo),
+        ("SSD-Smallest", Mode::Fixed {
+            chain: vec!["m0".into(), "m2".into()], window: 4 }),
+        ("SSD-Tuned", tuned),
+        ("Static-3level", Mode::Fixed {
+            chain: vec!["m0".into(), "m1".into(), "m2".into()], window: 4 }),
+        ("SpecRouter", Mode::Adaptive),
+    ];
+
+    let mut tmo_tpot = 0.0;
+    println!("=== {dataset}, {n} requests, batch {batch} ===");
+    for (name, mode) in systems {
+        let s = run_mode(&pool, mode, batch, &prompts, &dataset)?;
+        if name == "TMO" {
+            tmo_tpot = s.tpot_ms_mean;
+        }
+        let eaf = if tmo_tpot > 0.0 { Some(tmo_tpot / s.tpot_ms_mean) }
+                  else { None };
+        println!("{}", metrics::row(name, &s, eaf));
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! End-to-end serving driver (the validation run recorded in
+//! EXPERIMENTS.md): a mixed-dataset Poisson workload served by the full
+//! stack — TCP-less open loop through the engine — reporting goodput,
+//! request throughput, TTFT, TPOT and SLO attainment, with the adaptive
+//! router's diagnostics.
+//!
+//!   cargo run --release --example serve_trace -- [n_requests] [rate] [batch]
+use std::time::Instant;
+
+use anyhow::Result;
+use specrouter::config::EngineConfig;
+use specrouter::coordinator::ChainRouter;
+use specrouter::metrics;
+use specrouter::workload::poisson::requests_from_trace;
+use specrouter::workload::{open_loop_trace, ArrivalSpec, DatasetGen};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let mut cfg = EngineConfig::new("artifacts");
+    cfg.batch = batch;
+    cfg.slo_ms = 30_000.0;
+    let label = cfg.mode.label();
+    let mut router = ChainRouter::new(cfg)?;
+
+    // mixed trace: round-robin over the four datasets, one Poisson stream
+    let specs: Vec<_> = router.pool.manifest.datasets.values()
+        .cloned().collect();
+    let mut gens: Vec<DatasetGen> = specs.into_iter().enumerate()
+        .map(|(i, s)| DatasetGen::new(s, 100 + i as u64))
+        .collect();
+    let mut trace = Vec::new();
+    for (i, chunk) in (0..n).collect::<Vec<_>>().chunks(gens.len())
+        .enumerate() {
+        for (j, _) in chunk.iter().enumerate() {
+            let gi = j % gens.len();
+            let g = &mut gens[gi];
+            let mut t = open_loop_trace(&ArrivalSpec {
+                rate, n_requests: 1, seed: (i * 13 + j) as u64 }, g);
+            t[0].offset_s = (i * gens.len() + j) as f64 / rate;
+            trace.extend(t);
+        }
+    }
+
+    println!("serving {n} requests (Poisson rate {rate}/s, batch {batch}, \
+              mode {label}) ...");
+    let start = Instant::now();
+    let mut pending = requests_from_trace(&trace, start).into_iter()
+        .peekable();
+    while pending.peek().is_some() || !router.batcher.is_idle() {
+        let now = Instant::now();
+        while pending.peek().map_or(false, |r| r.arrival <= now) {
+            router.submit(pending.next().unwrap());
+        }
+        if router.tick()?.is_none() {
+            if let Some(r) = pending.peek() {
+                std::thread::sleep(
+                    r.arrival.saturating_duration_since(Instant::now())
+                        .min(std::time::Duration::from_millis(5)));
+            }
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    let s = metrics::summarize(&router.finished, 30_000.0);
+    println!("\n=== end-to-end summary ({wall:.1}s wall) ===");
+    println!("{}", metrics::row(&label, &s, None));
+
+    println!("\nper-dataset breakdown:");
+    for ds in ["gsm8k", "humaneval", "mtbench", "mgsm"] {
+        let sub: Vec<_> = router.finished.iter()
+            .filter(|f| f.dataset == ds).cloned().collect();
+        if !sub.is_empty() {
+            let ss = metrics::summarize(&sub, 30_000.0);
+            println!("{}", metrics::row(ds, &ss, None));
+        }
+    }
+
+    println!("\nchain selection frequencies (Internal Diagnostics):");
+    for (chain, cnt) in router.prof.selection_table() {
+        let acc = router.prof.mean_accept(&chain)
+            .map(|a| format!("  tokens/step={a:.2}"))
+            .unwrap_or_default();
+        println!("  {chain:<22} {cnt:>5} steps{acc}");
+    }
+
+    println!("\nstate manager: {} physical truncations, {} elements \
+              reclaimed", router.states.physical_truncations,
+             router.states.elements_reclaimed);
+    println!("XLA compilation: {} executables, {:.1}s total",
+             router.pool.compiled_count(),
+             router.pool.total_compile_time().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! TCP serving demo: spins up the engine + JSON-lines server in-process,
+//! then acts as several concurrent clients — the deployment shape a
+//! downstream user would run (`specrouter serve-tcp`) exercised end to end.
+//!
+//!   cargo run --release --example tcp_serving -- [n_clients]
+use std::sync::mpsc;
+
+use anyhow::Result;
+use specrouter::config::EngineConfig;
+use specrouter::server::{client_request, serve_tcp, spawn_engine, EngineMsg};
+use specrouter::workload::DatasetGen;
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let mut cfg = EngineConfig::new("artifacts");
+    cfg.batch = 4;
+    let engine = spawn_engine(cfg)?;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let tx = engine.tx.clone();
+    std::thread::spawn(move || serve_tcp("127.0.0.1:0", tx, Some(ready_tx)));
+    let addr = ready_rx.recv()?;
+    println!("server listening on {addr}");
+
+    // n concurrent clients, one per dataset (round-robin)
+    let datasets = ["gsm8k", "humaneval", "mtbench", "mgsm"];
+    let handles: Vec<_> = (0..n).map(|i| {
+        let ds = datasets[i % datasets.len()].to_string();
+        std::thread::spawn(move || -> Result<(String, usize, f64, f64)> {
+            // each client builds its own prompt stream
+            let manifest_spec = specrouter::runtime::DatasetSpec {
+                name: ds.clone(),
+                range: match ds.as_str() {
+                    "gsm8k" => (64, 192),
+                    "humaneval" => (192, 320),
+                    "mtbench" => (320, 448),
+                    _ => (448, 512),
+                },
+                p_det: 0.75,
+                lengths: (12, 24, 8, 16),
+                paper_size: 0,
+            };
+            let mut gen = DatasetGen::new(manifest_spec, i as u64);
+            let (prompt, max_new) = gen.sample();
+            let resp = client_request(addr, &ds, &prompt, max_new)?;
+            Ok((ds,
+                resp.get("tokens")?.as_arr()?.len(),
+                resp.get("ttft_ms")?.as_f64()?,
+                resp.get("latency_ms")?.as_f64()?))
+        })
+    }).collect();
+
+    for h in handles {
+        let (ds, ntok, ttft, lat) = h.join().unwrap()?;
+        println!("  {ds:<10} {ntok:>3} tokens  TTFT {ttft:>8.1} ms  \
+                  latency {lat:>8.1} ms");
+    }
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap()?;
+    println!("engine shut down cleanly");
+    Ok(())
+}

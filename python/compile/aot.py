@@ -1,0 +1,184 @@
+# AOT export: lowers every (model, fn, batch, window) variant to HLO *text*
+# + writes the artifact manifest. This is the only bridge between python
+# (build time) and rust (runtime): after `make artifacts` the rust binary is
+# self-contained.
+#
+# HLO text — NOT serialized HloModuleProto — is the interchange format:
+# jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+# the text parser reassigns ids (see /opt/xla-example/README.md).
+#
+# Exported entry points per model (DESIGN.md §3):
+#   prefill   (B=1)            — prompts are admitted one at a time and the
+#                                resulting KV is `insert`ed into a slot of
+#                                the engine's fixed-capacity batch buffer
+#   decode    (per B)          — one autoregressive step (TMO baseline path)
+#   draft_w   (per B, w)       — greedy scan of w speculative steps
+#   verify_w  (per B, w)       — one parallel forward over w+1 candidates
+#   insert    (per B)          — place a B=1 KV cache into batch slot i
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from . import corpus
+
+BATCHES = [1, 4, 8, 16, 32, 64]
+WINDOWS = [4, 8]
+
+
+def to_hlo_text(lowered, return_tuple=False):
+    # return_tuple=False: every exported fn has a SINGLE array output, so
+    # PJRT yields one array buffer that the rust runtime keeps
+    # device-resident and feeds back into the next call (execute_b). See
+    # model.py "Packed-state layer".
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
+    return comp.as_hlo_text()
+
+
+def variants(cfg):
+    """Yield (name, fn, example_args, outputs) for every export of a model.
+
+    All functions use the packed-state ABI (model.py): one flat f32 state
+    in, one flat f32 state out; `extract` slices the tail for the host.
+    """
+    pc = M.param_count(cfg)
+    params = SDS((pc,), jnp.float32)
+    i32 = jnp.int32
+    wm = max(WINDOWS)
+
+    def state(b):
+        return SDS((M.state_len(cfg, b, wm),), jnp.float32)
+
+    # prefill: admission path, B=1, creates a fresh packed state
+    yield ("prefill_b1",
+           lambda p, t, l: M.prefill_state(cfg, p, t, l, wm),
+           (params, SDS((1, cfg.prefill), i32), SDS((1,), i32)),
+           ["state1"])
+    # extract for the B=1 prefill state (admission logits)
+    yield ("extract1_b1",
+           lambda s: M.extract_state(cfg, s, 1, wm),
+           (state(1),),
+           ["tail1"])
+
+    for b in BATCHES:
+        yield (f"decode_b{b}",
+               lambda p, t, s, l: M.decode_state(cfg, p, t, s, l, wm),
+               (params, SDS((b,), i32), state(b), SDS((b,), i32)),
+               ["state; tail=logits[B,V]"])
+        for w in WINDOWS:
+            yield (f"draft_w{w}_b{b}",
+                   (lambda w: lambda p, t, s, l:
+                    M.draft_state(cfg, p, t, s, l, w, wm))(w),
+                   (params, SDS((b,), i32), state(b), SDS((b,), i32)),
+                   ["state; tail=logits[B,w,V]++tokens_f32[B,w]"])
+            yield (f"verify_w{w}_b{b}",
+                   (lambda w: lambda p, t, s, l:
+                    M.verify_state(cfg, p, t, s, l, wm))(w),
+                   (params, SDS((b, w + 1), i32), state(b), SDS((b,), i32)),
+                   ["state; tail=logits[B,w+1,V]"])
+        yield (f"insert_b{b}",
+               (lambda b: lambda sb, s1, sl:
+                M.insert_state(cfg, sb, s1, sl, b, wm))(b),
+               (state(b), state(1), SDS((), i32)),
+               ["state"])
+        yield (f"extract_b{b}",
+               (lambda b: lambda s: M.extract_state(cfg, s, b, wm))(b),
+               (state(b),),
+               ["tail"])
+
+
+def export_model(cfg, hlo_dir, log, only_batches=None):
+    entries = []
+    for name, fn, args, outs in variants(cfg):
+        if only_batches is not None:
+            b = name.rsplit("_b", 1)[-1]
+            if int(b) not in only_batches:
+                continue
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        with open(os.path.join(hlo_dir, fname), "w") as f:
+            f.write(text)
+        parts = name.split("_")
+        entry = {
+            "fn": parts[0],
+            "file": os.path.join("hlo", fname),
+            "batch": int(parts[-1][1:]) if parts[-1].startswith("b") else 1,
+            "window": next((int(p[1:]) for p in parts
+                            if p.startswith("w") and p[1:].isdigit()), 0),
+            "outputs": outs,
+        }
+        entries.append(entry)
+        log(f"[aot] {fname:34s} {len(text)/1024:8.0f} KiB "
+            f"{time.time() - t0:5.1f}s")
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(M.MODEL_ORDER))
+    ap.add_argument("--batches", default=",".join(map(str, BATCHES)))
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--skip-weights", action="store_true",
+                    help="only lower HLO (weights must already exist)")
+    args = ap.parse_args()
+
+    art = args.art_dir
+    hlo_dir = os.path.join(art, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    only_batches = set(int(b) for b in args.batches.split(","))
+
+    if args.skip_weights:
+        with open(os.path.join(art, "weights_meta.json")) as f:
+            wmeta = json.load(f)
+    else:
+        wmeta = T.ensure_weights(art, force=args.retrain)
+
+    manifest = {
+        "vocab": M.VOCAB,
+        "seq": M.SEQ,
+        "prefill": M.PREFILL,
+        "windows": WINDOWS,
+        "batches": sorted(only_batches),
+        "special_tokens": {"pad": corpus.PAD, "bos": corpus.BOS,
+                           "eos": corpus.EOS, "sep": corpus.SEP},
+        "datasets": {
+            name: {
+                "range": list(corpus.RANGES[name]),
+                "p_det": corpus.P_DET[name],
+                "lengths": list(corpus.LENGTHS[name]),
+                "paper_size": corpus.PAPER_SIZES[name],
+            } for name in corpus.DATASETS
+        },
+        "similarity": wmeta.get("similarity", {}),
+        "models": {},
+    }
+    for name in args.models.split(","):
+        cfg = M.MODELS[name]
+        entries = export_model(cfg, hlo_dir, print, only_batches)
+        manifest["models"][name] = {
+            "d": cfg.d, "layers": cfg.layers, "heads": cfg.heads,
+            "head_dim": cfg.head_dim,
+            "param_count": wmeta["models"][name]["param_count"],
+            "weights_file": wmeta["models"][name]["weights_file"],
+            "artifacts": entries,
+        }
+    with open(os.path.join(art, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written: "
+          f"{sum(len(m['artifacts']) for m in manifest['models'].values())}"
+          f" artifacts")
+
+
+if __name__ == "__main__":
+    main()

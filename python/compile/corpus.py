@@ -1,0 +1,122 @@
+# Synthetic corpora standing in for the paper's four evaluation datasets
+# (GSM8K, HumanEval, MT-Bench, MGSM — paper Table 1).
+#
+# DESIGN.md §2: the datasets matter to SpecRouter only through (a) their
+# prompt/output length distributions and (b) how content-dependent model
+# agreement (acceptance rate alpha) is. Each synthetic dataset is a seeded
+# first-order process over its own token sub-range with a *determinism
+# level*: with probability `p_det` the next token is a fixed permutation of
+# the previous one (learnable structure), otherwise it is drawn from a
+# seeded per-dataset Markov table (noise). Low-entropy datasets (code-like
+# HumanEval) yield high acceptance; high-entropy dialogue yields low
+# acceptance — exactly the per-dataset grading the adaptive scheduler
+# exploits.
+#
+# The rust workload generator (rust/src/workload/datasets.rs) implements the
+# same family of processes (same ranges, determinism levels and length
+# distributions) so build-time training and runtime serving see matching
+# distributions. They need not be bit-identical.
+import zlib
+
+import numpy as np
+
+
+def _stable_hash(name):
+    # python's builtin hash() is salted per process; artifacts must be
+    # reproducible across runs, so use crc32.
+    return zlib.crc32(name.encode())
+
+VOCAB = 512
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+
+# token id sub-ranges per dataset: (lo, hi) half-open
+RANGES = {
+    "gsm8k": (64, 192),      # math-word-problem tokens
+    "humaneval": (192, 320),  # code tokens
+    "mtbench": (320, 448),    # dialogue tokens
+    "mgsm": (448, 512),       # multilingual-math tokens
+}
+
+# determinism level: P(next = fixed permutation of prev)
+P_DET = {"gsm8k": 0.75, "humaneval": 0.90, "mtbench": 0.50, "mgsm": 0.70}
+
+# (prompt_lo, prompt_hi, gen_lo, gen_hi) inclusive length bounds; mirrors the
+# qualitative shape of the real datasets (code: short prompt / long output,
+# dialogue: long prompt, etc.).
+LENGTHS = {
+    "gsm8k": (12, 32, 16, 48),
+    "humaneval": (8, 24, 24, 64),
+    "mtbench": (24, 40, 12, 40),
+    "mgsm": (12, 28, 16, 48),
+}
+
+DATASETS = ["gsm8k", "humaneval", "mtbench", "mgsm"]
+
+# sizes quoted by the paper's Table 1 description (for the T1 bench/table)
+PAPER_SIZES = {"gsm8k": 8500, "humaneval": 164, "mtbench": 6142, "mgsm": 250}
+
+
+def _permutation(name, lo, hi):
+    """Fixed per-dataset permutation of its token range (the learnable map)."""
+    r = np.random.default_rng(_stable_hash(name) % (2**31) + 7)
+    width = hi - lo
+    return lo + r.permutation(width)
+
+
+def _markov(name, lo, hi):
+    """Seeded per-dataset Markov table: each token has 4 plausible successors."""
+    r = np.random.default_rng(_stable_hash(name) % (2**31) + 13)
+    width = hi - lo
+    return lo + r.integers(0, width, size=(width, 4))
+
+
+class DatasetGen:
+    """Seeded stream of (prompt, max_new_tokens) samples for one dataset."""
+
+    def __init__(self, name, seed=0):
+        assert name in RANGES, name
+        self.name = name
+        self.lo, self.hi = RANGES[name]
+        self.p_det = P_DET[name]
+        self.perm = _permutation(name, self.lo, self.hi)
+        self.markov = _markov(name, self.lo, self.hi)
+        self.rng = np.random.default_rng(seed * 9973 + _stable_hash(name) % 997)
+
+    def _walk(self, start, n):
+        out = np.empty(n, np.int64)
+        cur = start
+        for i in range(n):
+            if self.rng.random() < self.p_det:
+                cur = int(self.perm[cur - self.lo])
+            else:
+                cur = int(self.markov[cur - self.lo,
+                                      self.rng.integers(0, 4)])
+            out[i] = cur
+        return out
+
+    def sample_prompt(self):
+        """-> (prompt tokens incl. BOS, suggested max_new_tokens)."""
+        plo, phi, glo, ghi = LENGTHS[self.name]
+        plen = int(self.rng.integers(plo, phi + 1))
+        glen = int(self.rng.integers(glo, ghi + 1))
+        start = int(self.rng.integers(self.lo, self.hi))
+        body = self._walk(start, plen - 1)
+        return np.concatenate([[BOS], body]).astype(np.int32), glen
+
+    def sample_sequence(self, total_len):
+        """Full training sequence (prompt + continuation) of total_len."""
+        start = int(self.rng.integers(self.lo, self.hi))
+        body = self._walk(start, total_len - 1)
+        return np.concatenate([[BOS], body]).astype(np.int32)
+
+
+def training_batches(n_batches, batch, seq_len, seed=0):
+    """Mixed-corpus LM training batches: int32 [batch, seq_len] arrays."""
+    gens = [DatasetGen(n, seed=seed + i) for i, n in enumerate(DATASETS)]
+    rng = np.random.default_rng(seed + 4242)
+    out = []
+    for _ in range(n_batches):
+        rows = [gens[int(rng.integers(0, len(gens)))].sample_sequence(seq_len)
+                for _ in range(batch)]
+        out.append(np.stack(rows))
+    return out

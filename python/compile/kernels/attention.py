@@ -1,0 +1,163 @@
+# L1: Pallas chunked masked-attention kernel — the compute hot-spot of the
+# SpecRouter stack (decode, draft and verify all funnel through it).
+#
+# The paper's state-management contribution (§4.4) needs attention that
+# respects a *logical* validity prefix over a *physical* KV cache: after a
+# speculative rollback the cache still physically contains rejected entries,
+# and the attention mask (paper Eq. 8) must ignore them. Both kernel
+# variants below implement that rule: key position p is visible to chunk
+# query i of sequence b iff p <= lens[b] + i.
+#
+# Hardware adaptation (DESIGN.md §2): the paper targets CUDA GPUs; we
+# re-express the kernel TPU-style. BlockSpec tiles the KV cache HBM->VMEM
+# along the sequence axis, matmuls are MXU-shaped (q.kT and p.v), and the
+# flash variant keeps a running-softmax accumulator in VMEM scratch so the
+# VMEM footprint is O(B*T*Dh + B*S_TILE*Dh) instead of O(B*S*Dh).
+#
+# interpret=True ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls; interpret mode lowers to plain HLO, which is what the rust
+# runtime loads. Real-TPU performance is estimated from the block structure
+# (see EXPERIMENTS.md §Perf L1).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # plain python float: jnp scalars would be captured consts
+
+
+def _single_block_kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, *, scale):
+    """One grid step = one attention head over the full cache.
+
+    Block shapes: q [B,T,1,Dh], k/v [B,1,S,Dh], lens [B], o [B,T,1,Dh].
+    """
+    q = q_ref[...].astype(jnp.float32)[:, :, 0, :]       # [B, T, Dh]
+    k = k_ref[...].astype(jnp.float32)[:, 0, :, :]       # [B, S, Dh]
+    v = v_ref[...].astype(jnp.float32)[:, 0, :, :]       # [B, S, Dh]
+    lens = lens_ref[...].astype(jnp.int32)               # [B]
+    B, T, Dh = q.shape
+    S = k.shape[1]
+    scores = jnp.einsum("btd,bsd->bts", q, k) * scale    # [B, T, S]
+    kpos = jnp.arange(S, dtype=jnp.int32)[None, None, :]
+    qpos = lens[:, None, None] + jnp.arange(T, dtype=jnp.int32)[None, :, None]
+    scores = jnp.where(kpos <= qpos, scores, NEG_INF)    # Eq. 8
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bts,bsd->btd", p, v)               # [B, T, Dh]
+    o_ref[...] = out[:, :, None, :].astype(o_ref.dtype)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale, s_tile, n_s):
+    """Flash-style online softmax: grid = (H, S // s_tile).
+
+    The sequence axis is the innermost (sequential) grid dimension; m/l/acc
+    scratch lives in VMEM across those steps. Block shapes: q [B,T,1,Dh],
+    k/v [B,1,s_tile,Dh]; scratch m/l [B,T], acc [B,T,Dh] (f32).
+    """
+    s_idx = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)[:, :, 0, :]       # [B, T, Dh]
+    k = k_ref[...].astype(jnp.float32)[:, 0, :, :]       # [B, St, Dh]
+    v = v_ref[...].astype(jnp.float32)[:, 0, :, :]
+    lens = lens_ref[...].astype(jnp.int32)
+    B, T, Dh = q.shape
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full((B, T), NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros((B, T), jnp.float32)
+        acc_ref[...] = jnp.zeros((B, T, Dh), jnp.float32)
+
+    scores = jnp.einsum("btd,bsd->bts", q, k) * scale    # [B, T, St]
+    kpos = (s_idx * s_tile
+            + jnp.arange(k.shape[1], dtype=jnp.int32))[None, None, :]
+    qpos = lens[:, None, None] + jnp.arange(T, dtype=jnp.int32)[None, :, None]
+    scores = jnp.where(kpos <= qpos, scores, NEG_INF)    # Eq. 8
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    correction = jnp.exp(m_prev - m_cur)
+    e = jnp.exp(scores - m_cur[:, :, None])
+    l_ref[...] = l_ref[...] * correction + jnp.sum(e, axis=-1)
+    acc_ref[...] = (acc_ref[...] * correction[:, :, None]
+                    + jnp.einsum("bts,bsd->btd", e, v))
+    m_ref[...] = m_cur
+
+    @pl.when(s_idx == n_s - 1)
+    def _finalize():
+        # Fully-masked rows (cannot happen for valid lens >= 0, since a
+        # query always sees at least its own key) would have l == 0; guard
+        # anyway so the kernel never emits NaNs on degenerate inputs.
+        l = jnp.maximum(l_ref[...], jnp.float32(1e-30))
+        out = acc_ref[...] / l[:, :, None]
+        o_ref[...] = out[:, :, None, :].astype(o_ref.dtype)
+
+
+def chunk_attention(q, k, v, lens, *, s_tile=None):
+    """Pallas chunked masked attention (see module docstring).
+
+    Args:
+      q:      [B, T, H, Dh] chunk queries.
+      k, v:   [B, H, S, Dh] physical KV cache including the chunk's keys.
+      lens:   [B] int32 logical lengths before the chunk.
+      s_tile: None -> single-block variant (one grid step per head; fastest
+              under CPU interpret mode). int -> flash variant with the KV
+              sequence axis tiled HBM->VMEM in s_tile chunks (the TPU
+              deployment shape; S must be divisible by s_tile).
+
+    Returns: [B, T, H, Dh], dtype of q.
+    """
+    B, T, H, Dh = q.shape
+    S = k.shape[2]
+    assert k.shape == (B, H, S, Dh) and v.shape == k.shape, (q.shape, k.shape)
+    assert lens.shape == (B,)
+    scale = 1.0 / (Dh ** 0.5)
+    out_shape = jax.ShapeDtypeStruct((B, T, H, Dh), q.dtype)
+    q_spec = pl.BlockSpec((B, T, 1, Dh), lambda h, *s: (0, 0, h, 0))
+    lens_spec = pl.BlockSpec((B,), lambda h, *s: (0,))
+    o_spec = pl.BlockSpec((B, T, 1, Dh), lambda h, *s: (0, 0, h, 0))
+
+    if s_tile is None:
+        kv_spec = pl.BlockSpec((B, 1, S, Dh), lambda h: (0, h, 0, 0))
+        return pl.pallas_call(
+            functools.partial(_single_block_kernel, scale=scale),
+            grid=(H,),
+            in_specs=[q_spec, kv_spec, kv_spec, lens_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(q, k, v, lens)
+
+    assert S % s_tile == 0, (S, s_tile)
+    n_s = S // s_tile
+    kv_spec = pl.BlockSpec((B, 1, s_tile, Dh), lambda h, s: (0, h, s, 0))
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, s_tile=s_tile, n_s=n_s),
+        grid=(H, n_s),
+        in_specs=[q_spec, kv_spec, kv_spec, lens_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((B, T), jnp.float32),
+            pltpu.VMEM((B, T), jnp.float32),
+            pltpu.VMEM((B, T, Dh), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, lens)
+
+
+def vmem_footprint_bytes(B, T, H, Dh, S, s_tile=None, dtype_bytes=4):
+    """Estimated per-grid-step VMEM footprint of the kernel (perf model).
+
+    Used by the DESIGN.md / EXPERIMENTS.md roofline estimate: a TPU core
+    has ~16 MiB of VMEM; the chosen block shapes must fit comfortably.
+    """
+    s_eff = S if s_tile is None else s_tile
+    q_o = 2 * B * T * Dh * dtype_bytes
+    kv = 2 * B * s_eff * Dh * dtype_bytes
+    scores = B * T * s_eff * 4
+    scratch = 0 if s_tile is None else (2 * B * T + B * T * Dh) * 4
+    return q_o + kv + scores + scratch

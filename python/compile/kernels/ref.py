@@ -1,0 +1,52 @@
+# Pure-jnp oracle for the chunked masked decode/verify attention kernel.
+#
+# This is the CORE correctness contract for Layer 1: the Pallas kernel in
+# attention.py must agree with this reference (pytest + hypothesis sweep
+# shapes/dtypes and assert_allclose). It also serves as the fast attention
+# path used during build-time training (train.py), where the interpret-mode
+# Pallas kernel would be needlessly slow.
+#
+# Semantics (paper §4.4, Eq. 8 — logical validity masking):
+#   - q holds T "chunk" queries per sequence; query i of sequence b sits at
+#     absolute position lens[b] + i.
+#   - k/v hold the physical KV cache of capacity S. Entries at positions
+#     >= lens[b] + i + 1 are logically invalid for query i (either stale
+#     garbage from a rolled-back speculation, or simply unwritten) and MUST
+#     be ignored; this implements the prefix-validity cache_mask without
+#     materializing it.
+#   - Causality within the chunk is the same rule: key position p is visible
+#     to query i iff p <= lens[b] + i.
+import jax
+import jax.numpy as jnp
+
+
+def chunk_attention_ref(q, k, v, lens):
+    """Masked chunk attention over a logically-valid KV-cache prefix.
+
+    Args:
+      q:    [B, T, H, Dh] chunk queries (T=1 for decode, T=w+1 for verify).
+      k:    [B, H, S, Dh] physical key cache (already containing the chunk's
+            own keys at positions lens[b] .. lens[b]+T-1).
+      v:    [B, H, S, Dh] physical value cache.
+      lens: [B] int32 logical lengths *before* the chunk was appended.
+
+    Returns:
+      [B, T, H, Dh] attention outputs, same dtype as q.
+    """
+    B, T, H, Dh = q.shape
+    S = k.shape[2]
+    scale = 1.0 / (Dh ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # scores[b, h, t, s]
+    scores = jnp.einsum("bthd,bhsd->bhts", qf, kf) * scale
+    pos = jnp.arange(S, dtype=jnp.int32)[None, None, None, :]       # key pos
+    qpos = lens[:, None, None, None].astype(jnp.int32) + jnp.arange(
+        T, dtype=jnp.int32
+    )[None, None, :, None]                                          # query pos
+    mask = pos <= qpos                                              # Eq. 8
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bthd", p, vf)
+    return out.astype(q.dtype)

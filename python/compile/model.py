@@ -1,0 +1,332 @@
+# L2: the SpecRouter model family — decoder-only transformers written in JAX,
+# calling the L1 Pallas chunk-attention kernel.
+#
+# Every model exposes four entry points (DESIGN.md §3), all of which funnel
+# through a single `forward_chunk` that processes T new positions against a
+# physical KV cache with per-sequence *logical* lengths (the paper's
+# cache_mask state model, §4.4):
+#
+#   prefill  : tokens[B,P], plens[B]          -> last-logits[B,V], kv
+#   decode   : token[B],    kv, lens[B]       -> logits[B,V],      kv'
+#   draft_w  : token[B],    kv, lens[B]       -> tokens[B,w], logits[B,w,V], kv'
+#   verify_w : tokens[B,w+1], kv, lens[B]     -> logits[B,w+1,V],  kv'
+#
+# Weights travel as ONE flat f32 vector (runtime parameter) so the rust
+# coordinator uploads them once per model as a device buffer; artifacts stay
+# structure-only and small. Parameter layout is fixed by `param_spec`.
+#
+# `use_pallas=True` (the AOT/export path) routes attention through the Pallas
+# kernel; `use_pallas=False` (the training path) uses the pure-jnp oracle —
+# the two are interchangeable by the L1 kernel-vs-ref test contract.
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.attention import chunk_attention
+from .kernels.ref import chunk_attention_ref
+
+VOCAB = 512
+SEQ = 128     # physical KV capacity S
+PREFILL = 48  # static prompt pad P
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d: int        # model width
+    layers: int
+    heads: int
+    vocab: int = VOCAB
+    seq: int = SEQ
+    prefill: int = PREFILL
+
+    @property
+    def head_dim(self):
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+
+# The heterogeneous pool (DESIGN.md §3). Names carry the paper analogue.
+MODELS = {
+    "m0": ModelConfig("m0", d=64, layers=2, heads=4),     # ~ Llama-68m
+    "m1": ModelConfig("m1", d=96, layers=4, heads=6),     # ~ TinyLlama-1.1B
+    "m2": ModelConfig("m2", d=128, layers=6, heads=8),    # ~ Llama-2-7b
+    "m3": ModelConfig("m3", d=160, layers=8, heads=8),    # ~ Llama-2-13b
+}
+MODEL_ORDER = ["m0", "m1", "m2", "m3"]  # sorted by capability (Alg. 1 step 1)
+
+
+def param_spec(cfg):
+    """Ordered (name, shape) list defining the flat weight vector layout."""
+    d, h = cfg.d, 4 * cfg.d
+    spec = [("tok_emb", (cfg.vocab, d)), ("pos_emb", (cfg.seq, d))]
+    for i in range(cfg.layers):
+        spec += [
+            (f"l{i}.ln1_s", (d,)), (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.wq", (d, d)), (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)), (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_s", (d,)), (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.w1", (d, h)), (f"l{i}.b1", (h,)),
+            (f"l{i}.w2", (h, d)), (f"l{i}.b2", (d,)),
+        ]
+    spec += [("lnf_s", (d,)), ("lnf_b", (d,))]
+    return spec
+
+
+def param_count(cfg):
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_spec(cfg))
+
+
+def unflatten(cfg, flat):
+    """Flat f32 vector -> dict of named tensors (static offsets)."""
+    out, off = {}, 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_params(cfg, seed=0):
+    """Deterministic scaled-gaussian init, returned as the flat vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_s",)):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        elif name.endswith(("_b", ".b1", ".b2")):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.02 if "emb" in name else (fan_in ** -0.5)
+            chunks.append(
+                (jax.random.normal(sub, shape, jnp.float32) * scale).ravel())
+    return jnp.concatenate(chunks)
+
+
+def _layernorm(x, s, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * s + b
+
+
+def _append_kv(cache, new, lens):
+    """Write T new K/V rows per sequence at its logical length.
+
+    cache: [B, H, S, Dh]; new: [B, T, H, Dh]; lens: [B] int32.
+    Stale physical entries beyond lens are simply overwritten — the logical
+    cache_mask semantics (attention never reads past the logical frontier).
+    """
+    newt = jnp.transpose(new, (0, 2, 1, 3))  # [B, H, T, Dh]
+
+    def one(c, n, l):
+        return lax.dynamic_update_slice(c, n, (0, l, 0))
+
+    return jax.vmap(one)(cache, newt, lens)
+
+
+def kv_shape(cfg, batch):
+    return (cfg.layers, 2, batch, cfg.heads, cfg.seq, cfg.head_dim)
+
+
+def forward_chunk(cfg, flat_params, tokens, kv, lens, use_pallas=True):
+    """Process a chunk of T new tokens for every sequence in the batch.
+
+    tokens: [B, T] int32 (position of tokens[b, i] is lens[b] + i)
+    kv:     [L, 2, B, H, S, Dh] physical cache
+    lens:   [B] int32 logical lengths before this chunk
+
+    Returns (logits [B, T, V], kv').
+    """
+    p = unflatten(cfg, flat_params)
+    B, T = tokens.shape
+    attn = chunk_attention if use_pallas else chunk_attention_ref
+
+    pos = lens[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    pos = jnp.clip(pos, 0, cfg.seq - 1)
+    x = p["tok_emb"][tokens] + p["pos_emb"][pos]
+
+    new_kv = []
+    for i in range(cfg.layers):
+        h = _layernorm(x, p[f"l{i}.ln1_s"], p[f"l{i}.ln1_b"])
+        q = (h @ p[f"l{i}.wq"]).reshape(B, T, cfg.heads, cfg.head_dim)
+        k = (h @ p[f"l{i}.wk"]).reshape(B, T, cfg.heads, cfg.head_dim)
+        v = (h @ p[f"l{i}.wv"]).reshape(B, T, cfg.heads, cfg.head_dim)
+        k_cache = _append_kv(kv[i, 0], k, lens)
+        v_cache = _append_kv(kv[i, 1], v, lens)
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+        a = attn(q, k_cache, v_cache, lens)              # [B, T, H, Dh]
+        x = x + a.reshape(B, T, cfg.d) @ p[f"l{i}.wo"]
+        h2 = _layernorm(x, p[f"l{i}.ln2_s"], p[f"l{i}.ln2_b"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] \
+            + p[f"l{i}.b2"]
+    x = _layernorm(x, p["lnf_s"], p["lnf_b"])
+    logits = x @ p["tok_emb"].T                          # weight-tied unembed
+    return logits, jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# The four exported entry points. Shapes are static per (B, w) variant; the
+# rust ModelPool lazily compiles whichever variants it needs.
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, flat_params, tokens, plens, use_pallas=True):
+    """tokens: [B, P] padded prompts; plens: [B] prompt lengths (>=1).
+
+    The whole P-chunk is processed from position 0; rows beyond plens[b]
+    write physically-present but logically-invalid KV entries — they are
+    masked by later chunks (paper Fig. 3) and overwritten as generation
+    advances. Returns logits at each prompt's last valid position.
+    """
+    B, P = tokens.shape
+    kv = jnp.zeros(kv_shape(cfg, B), jnp.float32)
+    lens0 = jnp.zeros((B,), jnp.int32)
+    logits, kv = forward_chunk(cfg, flat_params, tokens, kv, lens0,
+                               use_pallas=use_pallas)
+    last = jnp.clip(plens - 1, 0, P - 1).astype(jnp.int32)
+    out = logits[jnp.arange(B), last]
+    return out, kv
+
+
+def decode(cfg, flat_params, token, kv, lens, use_pallas=True):
+    """Single-token decode step. token: [B] int32."""
+    logits, kv = forward_chunk(cfg, flat_params, token[:, None], kv, lens,
+                               use_pallas=use_pallas)
+    return logits[:, 0], kv
+
+
+def draft(cfg, flat_params, token, kv, lens, w, use_pallas=True):
+    """Greedy scan of w decode steps (the speculative draft, paper §2.2).
+
+    Returns (tokens [B, w], logits [B, w, V], kv'). The drafted token at
+    step i is argmax of that step's logits; full logit rows are returned so
+    the verifier can run probabilistic (Leviathan) acceptance on q(x).
+    """
+    def step(carry, _):
+        tok, kv, lens = carry
+        logits, kv = decode(cfg, flat_params, tok, kv, lens,
+                            use_pallas=use_pallas)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, kv, lens + 1), (nxt, logits)
+
+    (_, kv, _), (toks, logits) = lax.scan(
+        step, (token, kv, lens), None, length=w)
+    # scan stacks on axis 0 -> [w, B, ...]; present batch-major
+    return (jnp.transpose(toks, (1, 0)),
+            jnp.transpose(logits, (1, 0, 2)), kv)
+
+
+def verify(cfg, flat_params, tokens, kv, lens, use_pallas=True):
+    """One parallel forward over a candidate block (w+1 positions).
+
+    tokens[:, 0] is the last committed token; tokens[:, 1:] are candidates.
+    Returns logits at every position — logits[:, i] is this model's
+    distribution for position lens + i + 1 — plus the updated cache. The
+    coordinator decides acceptance and rolls back rejected entries via the
+    logical mask.
+    """
+    return forward_chunk(cfg, flat_params, tokens, kv, lens,
+                         use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Packed-state layer (the AOT/runtime ABI).
+#
+# PJRT materializes a multi-output computation as one tuple buffer, which
+# would force the (large) KV cache through the host on every call. Instead
+# every exported function takes and returns ONE flat f32 "state" vector
+#
+#     state = [ kv (kv_len) | tail (tail_len) ]
+#
+# so the whole state stays device-resident across calls; a tiny `extract`
+# computation slices out the tail (logits / drafted tokens) for the host.
+# tail layout per producing fn, from offset 0 of the tail region:
+#     prefill : logits[B, V]
+#     decode  : logits[B, V]
+#     draft_w : logits[B, w, V] ++ tokens_as_f32[B, w]
+#     verify_w: logits[B, w+1, V]
+# (w_max = max exported window; tail_len covers the largest producer.)
+# ---------------------------------------------------------------------------
+
+def kv_len(cfg, batch):
+    n = 1
+    for s in kv_shape(cfg, batch):
+        n *= s
+    return n
+
+
+def tail_len(cfg, batch, w_max):
+    return batch * ((w_max + 1) * cfg.vocab + w_max)
+
+
+def state_len(cfg, batch, w_max):
+    return kv_len(cfg, batch) + tail_len(cfg, batch, w_max)
+
+
+def _unpack_kv(cfg, state, batch):
+    return state[:kv_len(cfg, batch)].reshape(kv_shape(cfg, batch))
+
+
+def _pack(cfg, kv, parts, batch, w_max):
+    tl = tail_len(cfg, batch, w_max)
+    flat_parts = [p.reshape(-1).astype(jnp.float32) for p in parts]
+    tail = jnp.concatenate(flat_parts) if flat_parts else \
+        jnp.zeros((0,), jnp.float32)
+    pad = jnp.zeros((tl - tail.shape[0],), jnp.float32)
+    return jnp.concatenate([kv.reshape(-1), tail, pad])
+
+
+def prefill_state(cfg, flat_params, tokens, plens, w_max, use_pallas=True):
+    logits, kv = prefill(cfg, flat_params, tokens, plens,
+                         use_pallas=use_pallas)
+    return _pack(cfg, kv, [logits], tokens.shape[0], w_max)
+
+
+def decode_state(cfg, flat_params, token, state, lens, w_max,
+                 use_pallas=True):
+    b = token.shape[0]
+    kv = _unpack_kv(cfg, state, b)
+    logits, kv = decode(cfg, flat_params, token, kv, lens,
+                        use_pallas=use_pallas)
+    return _pack(cfg, kv, [logits], b, w_max)
+
+
+def draft_state(cfg, flat_params, token, state, lens, w, w_max,
+                use_pallas=True):
+    b = token.shape[0]
+    kv = _unpack_kv(cfg, state, b)
+    toks, logits, kv = draft(cfg, flat_params, token, kv, lens, w=w,
+                             use_pallas=use_pallas)
+    return _pack(cfg, kv, [logits, toks], b, w_max)
+
+
+def verify_state(cfg, flat_params, tokens, state, lens, w_max,
+                 use_pallas=True):
+    b = tokens.shape[0]
+    kv = _unpack_kv(cfg, state, b)
+    logits, kv = verify(cfg, flat_params, tokens, kv, lens,
+                        use_pallas=use_pallas)
+    return _pack(cfg, kv, [logits], b, w_max)
+
+
+def insert_state(cfg, state_batch, state_one, slot, batch, w_max):
+    """Place a prefilled B=1 state's KV into slot `slot` of the batch
+    state (admission). The batch tail region is preserved untouched."""
+    kvb = _unpack_kv(cfg, state_batch, batch)
+    kv1 = _unpack_kv(cfg, state_one, 1)
+    kvb = jax.lax.dynamic_update_slice(kvb, kv1, (0, 0, slot, 0, 0, 0))
+    tail = state_batch[kv_len(cfg, batch):]
+    return jnp.concatenate([kvb.reshape(-1), tail])
+
+
+def extract_state(cfg, state, batch, w_max):
+    """Slice the tail (logits/tokens region) out of a packed state."""
+    kl = kv_len(cfg, batch)
+    return jax.lax.dynamic_slice(state, (kl,),
+                                 (tail_len(cfg, batch, w_max),))

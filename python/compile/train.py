@@ -1,0 +1,211 @@
+# Build-time training: makes the synthetic model pool *behave like* the
+# paper's Llama family (DESIGN.md §2 substitution table).
+#
+#   1. The largest model (m3) is trained with a plain LM loss on the mixed
+#      synthetic corpus until its predictions are structured.
+#   2. Every other model is *distilled* from m3 (KL to teacher logits).
+#      Capacity grading then yields graded distribution similarity —
+#      SimScore(m2, m3) > SimScore(m1, m3) > SimScore(m0, m3) — which is
+#      exactly the property multi-level speculation needs from a model pool.
+#
+# Runs ONCE under `make artifacts` (aot.py calls ensure_weights); never on
+# the request path. Training uses the pure-jnp attention oracle for speed;
+# the exported artifacts use the Pallas kernel (L1 tests guarantee the two
+# agree).
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import corpus
+from . import model as M
+
+
+@dataclass
+class TrainConfig:
+    batch: int = 16
+    seq_len: int = 48
+    lm_steps: int = 450        # m3 LM training
+    distill_steps: int = 160   # per student (fallback)
+    n_data_batches: int = 80   # fixed pool of batches (teacher logits cached)
+    lr: float = 3e-3
+    seed: int = 0
+
+    # Distillation budget graded by student capacity: more steps for the
+    # larger students widens the SimScore/acceptance ladder
+    # (Sim(m2,target) > Sim(m1,target) > Sim(m0,target)) that multi-level
+    # scheduling exploits.
+    def distill_steps_for(self, name):
+        return {"m2": 400, "m1": 220, "m0": 100}.get(name,
+                                                     self.distill_steps)
+
+
+def lm_loss(cfg, params, tokens):
+    kv = jnp.zeros(M.kv_shape(cfg, tokens.shape[0]), jnp.float32)
+    lens = jnp.zeros((tokens.shape[0],), jnp.int32)
+    logits, _ = M.forward_chunk(cfg, params, tokens, kv, lens,
+                                use_pallas=False)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def distill_loss(cfg, params, tokens, teacher_logits):
+    kv = jnp.zeros(M.kv_shape(cfg, tokens.shape[0]), jnp.float32)
+    lens = jnp.zeros((tokens.shape[0],), jnp.int32)
+    logits, _ = M.forward_chunk(cfg, params, tokens, kv, lens,
+                                use_pallas=False)
+    t = jax.nn.softmax(teacher_logits, axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -(t * logp).sum(-1).mean()
+
+
+def make_adam(lr):
+    def init(params):
+        return (jnp.zeros_like(params), jnp.zeros_like(params), 0)
+
+    def update(grads, state, params):
+        m, v, t = state
+        t = t + 1
+        m = 0.9 * m + 0.1 * grads
+        v = 0.999 * v + 0.001 * grads * grads
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        return params - lr * mh / (jnp.sqrt(vh) + 1e-8), (m, v, t)
+
+    return init, update
+
+
+def train_target(cfg, batches, tc, log):
+    params = M.init_params(cfg, seed=tc.seed + 100)
+    init, update = make_adam(tc.lr)
+    opt = init(params)
+
+    @jax.jit
+    def step(params, opt, tokens):
+        loss, g = jax.value_and_grad(lambda p: lm_loss(cfg, p, tokens))(params)
+        params, opt = update(g, opt, params)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(tc.lm_steps):
+        tokens = jnp.asarray(batches[i % len(batches)])
+        params, opt, loss = step(params, opt, tokens)
+        if i % 40 == 0 or i == tc.lm_steps - 1:
+            log(f"[train {cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def distill_student(cfg, teacher_logits, batches, tc, log):
+    params = M.init_params(cfg, seed=tc.seed + 200 + cfg.layers)
+    init, update = make_adam(tc.lr)
+    opt = init(params)
+    n_steps = tc.distill_steps_for(cfg.name)
+
+    @jax.jit
+    def step(params, opt, tokens, tlogits):
+        loss, g = jax.value_and_grad(
+            lambda p: distill_loss(cfg, p, tokens, tlogits))(params)
+        params, opt = update(g, opt, params)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(n_steps):
+        j = i % len(batches)
+        params, opt, loss = step(params, opt, jnp.asarray(batches[j]),
+                                 teacher_logits[j])
+        if i % 40 == 0 or i == n_steps - 1:
+            log(f"[distill {cfg.name}] step {i:4d} KL {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def measure_similarity(params_by_name, batches, n_eval=4):
+    """Offline ground-truth SimScore (paper Eq. 5-6) on held-out batches.
+
+    Returns {(a, b): 1 - mean DTV(p_a, p_b)} for every ordered pair. Stored
+    in weights_meta.json: used by tests (grading must be monotone in
+    capacity) and by the SSD-Tuned baseline's offline profile.
+    """
+    names = list(params_by_name)
+    probs = {}
+    for n in names:
+        cfg = M.MODELS[n]
+        ps = []
+        for b in batches[:n_eval]:
+            tokens = jnp.asarray(b)
+            kv = jnp.zeros(M.kv_shape(cfg, tokens.shape[0]), jnp.float32)
+            lens = jnp.zeros((tokens.shape[0],), jnp.int32)
+            logits, _ = M.forward_chunk(cfg, params_by_name[n], tokens, kv,
+                                        lens, use_pallas=False)
+            ps.append(jax.nn.softmax(logits, axis=-1))
+        probs[n] = ps
+    sim = {}
+    for a in names:
+        for b in names:
+            if a == b:
+                sim[f"{a},{b}"] = 1.0
+                continue
+            dtvs = [float(0.5 * jnp.abs(pa - pb).sum(-1).mean())
+                    for pa, pb in zip(probs[a], probs[b])]
+            sim[f"{a},{b}"] = 1.0 - float(np.mean(dtvs))
+    return sim
+
+
+def ensure_weights(art_dir, tc=None, force=False, log=print):
+    """Train + distill the pool if artifacts are missing; return meta dict."""
+    tc = tc or TrainConfig()
+    meta_path = os.path.join(art_dir, "weights_meta.json")
+    if not force and os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+        if all(os.path.exists(os.path.join(art_dir, m["weights_file"]))
+               for m in meta["models"].values()):
+            log("[weights] cached, skipping training")
+            return meta
+
+    os.makedirs(art_dir, exist_ok=True)
+    batches = corpus.training_batches(
+        tc.n_data_batches, tc.batch, tc.seq_len, seed=tc.seed)
+
+    teacher_cfg = M.MODELS["m3"]
+    t0 = time.time()
+    teacher = train_target(teacher_cfg, batches, tc, log)
+    params_by_name = {"m3": teacher}
+
+    # cache teacher logits once; reused by all students
+    @jax.jit
+    def tlogits(tokens):
+        kv = jnp.zeros(M.kv_shape(teacher_cfg, tokens.shape[0]), jnp.float32)
+        lens = jnp.zeros((tokens.shape[0],), jnp.int32)
+        lg, _ = M.forward_chunk(teacher_cfg, teacher, tokens, kv, lens,
+                                use_pallas=False)
+        return lg
+    teacher_logits = [tlogits(jnp.asarray(b)) for b in batches]
+
+    for name in ["m2", "m1", "m0"]:
+        params_by_name[name] = distill_student(
+            M.MODELS[name], teacher_logits, batches, tc, log)
+
+    sim = measure_similarity(params_by_name, batches)
+    log(f"[weights] offline SimScore vs m2: "
+        + ", ".join(f"{a}={sim[f'{a},m2']:.3f}" for a in ["m0", "m1", "m3"]))
+
+    meta = {"train": tc.__dict__, "similarity": sim,
+            "elapsed_s": round(time.time() - t0, 1), "models": {}}
+    for name, params in params_by_name.items():
+        fn = f"{name}.weights.bin"
+        np.asarray(params, dtype="<f4").tofile(os.path.join(art_dir, fn))
+        meta["models"][name] = {
+            "weights_file": fn,
+            "param_count": int(params.shape[0]),
+        }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta

@@ -1,0 +1,135 @@
+# L1 correctness: the Pallas chunk-attention kernel vs the pure-jnp oracle.
+#
+# hypothesis sweeps shapes/dtypes/lens; every case asserts allclose against
+# ref.py. This is the contract that lets train.py use the fast jnp path
+# while the exported artifacts use the Pallas kernel.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import chunk_attention, vmem_footprint_bytes
+from compile.kernels.ref import chunk_attention_ref
+
+
+def _mk(rng, B, T, H, Dh, S, dtype):
+    q = jnp.asarray(rng.normal(size=(B, T, H, Dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, H, S, Dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, H, S, Dh)), dtype)
+    lens = jnp.asarray(rng.integers(0, S - T + 1, size=(B,)), jnp.int32)
+    return q, k, v, lens
+
+
+def _check(q, k, v, lens, s_tile, rtol, atol):
+    ref = chunk_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), lens)
+    out = chunk_attention(q, k, v, lens, s_tile=s_tile)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref),
+        rtol=rtol, atol=atol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    t=st.integers(1, 9),
+    h=st.integers(1, 4),
+    dh=st.sampled_from([4, 8, 16]),
+    s_pow=st.integers(4, 6),   # S in {16, 32, 64}
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_single_block_matches_ref_f32(b, t, h, dh, s_pow, seed):
+    S = 2 ** s_pow
+    rng = np.random.default_rng(seed)
+    q, k, v, lens = _mk(rng, b, t, h, dh, S, jnp.float32)
+    _check(q, k, v, lens, None, 2e-5, 2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    t=st.integers(1, 5),
+    h=st.integers(1, 3),
+    dh=st.sampled_from([4, 8]),
+    tile_pow=st.integers(2, 4),  # s_tile in {4, 8, 16}
+    n_tiles=st.integers(2, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_matches_ref_f32(b, t, h, dh, tile_pow, n_tiles, seed):
+    s_tile = 2 ** tile_pow
+    S = s_tile * n_tiles
+    if S - t + 1 <= 0:
+        return
+    rng = np.random.default_rng(seed)
+    q, k, v, lens = _mk(rng, b, t, h, dh, S, jnp.float32)
+    _check(q, k, v, lens, s_tile, 2e-5, 2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    variant=st.sampled_from([None, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bf16_matches_ref_loose(variant, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v, lens = _mk(rng, 2, 3, 2, 8, 32, jnp.bfloat16)
+    _check(q, k, v, lens, variant, 6e-2, 6e-2)
+
+
+def test_decode_shape_t1():
+    rng = np.random.default_rng(0)
+    q, k, v, lens = _mk(rng, 4, 1, 2, 8, 32, jnp.float32)
+    _check(q, k, v, lens, None, 2e-5, 2e-5)
+
+
+def test_zero_lens_attends_only_self():
+    # lens=0, T=1: the single query sees only key position 0, so the output
+    # must equal v[:, :, 0, :] exactly (softmax over one element).
+    rng = np.random.default_rng(1)
+    B, H, Dh, S = 2, 2, 8, 16
+    q = jnp.asarray(rng.normal(size=(B, 1, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, Dh)), jnp.float32)
+    lens = jnp.zeros((B,), jnp.int32)
+    out = chunk_attention(q, k, v, lens)
+    expect = jnp.transpose(v[:, :, 0:1, :], (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_garbage_beyond_lens_is_ignored():
+    # Paper Fig. 3: physically-present but logically-invalid cache entries
+    # (e.g. from a rolled-back speculation) must not affect the output.
+    rng = np.random.default_rng(2)
+    B, T, H, Dh, S = 2, 3, 2, 8, 32
+    q, k, v, lens = _mk(rng, B, T, H, Dh, S, jnp.float32)
+    lens = jnp.asarray([4, 9], jnp.int32)
+    out_clean = chunk_attention(q, k, v, lens)
+    # Trash every cache slot beyond the chunk's reach.
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    for b in range(B):
+        hi = int(lens[b]) + T
+        k2[b, :, hi:, :] = 1e4
+        v2[b, :, hi:, :] = -1e4
+    out_trash = chunk_attention(q, jnp.asarray(k2), jnp.asarray(v2), lens)
+    np.testing.assert_allclose(np.asarray(out_clean), np.asarray(out_trash),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_flash_and_single_block_agree():
+    rng = np.random.default_rng(3)
+    q, k, v, lens = _mk(rng, 3, 5, 4, 16, 64, jnp.float32)
+    a = chunk_attention(q, k, v, lens)
+    b = chunk_attention(q, k, v, lens, s_tile=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_vmem_footprint_model():
+    # Deployment-shape sanity: the flash variant's per-step VMEM footprint
+    # must fit a TPU core's ~16 MiB VMEM with the configured tiles.
+    fp = vmem_footprint_bytes(B=64, T=9, H=8, Dh=16, S=160, s_tile=32)
+    assert fp < 16 * 1024 * 1024, fp
+    # and tiling must strictly shrink the footprint vs the full-S block
+    assert fp < vmem_footprint_bytes(B=64, T=9, H=8, Dh=16, S=160)

@@ -1,0 +1,215 @@
+# L2 invariants: KV-cache consistency, draft/verify equivalence, and the
+# pallas-vs-ref interchangeability the AOT export relies on.
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+# A small config keeps every test fast on the 1-core CI box while exercising
+# the same code paths as the production pool.
+TCFG = M.ModelConfig("t", d=32, layers=2, heads=2, seq=32, prefill=12)
+
+
+def _params(cfg=TCFG, seed=3):
+    return M.init_params(cfg, seed=seed)
+
+
+def _full_next(cfg, params, seq):
+    """Oracle: next-token logits by recomputing the whole sequence."""
+    t = jnp.asarray(seq, jnp.int32)[None, :]
+    kv0 = jnp.zeros(M.kv_shape(cfg, 1), jnp.float32)
+    lg, _ = M.forward_chunk(cfg, params, t, kv0, jnp.zeros((1,), jnp.int32),
+                            use_pallas=False)
+    return lg[0, len(seq) - 1]
+
+
+def test_param_spec_roundtrip():
+    p = _params()
+    d = M.unflatten(TCFG, p)
+    total = sum(int(np.prod(v.shape)) for v in d.values())
+    assert total == p.shape[0] == M.param_count(TCFG)
+    # re-flattening in spec order reproduces the vector exactly
+    flat = jnp.concatenate([d[name].ravel() for name, _ in
+                            M.param_spec(TCFG)])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(p))
+
+
+def test_pool_configs_are_graded():
+    sizes = [M.param_count(M.MODELS[n]) for n in M.MODEL_ORDER]
+    assert sizes == sorted(sizes), sizes
+    for n in M.MODEL_ORDER:
+        cfg = M.MODELS[n]
+        assert cfg.d % cfg.heads == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), plen=st.integers(1, 12),
+       steps=st.integers(1, 3))
+def test_prefill_decode_matches_full_recompute(seed, plen, steps):
+    rng = np.random.default_rng(seed)
+    params = _params()
+    toks = jnp.asarray(rng.integers(3, M.VOCAB, size=(1, TCFG.prefill)),
+                       jnp.int32)
+    plens = jnp.asarray([plen], jnp.int32)
+    lg, kv = M.prefill(TCFG, params, toks, plens, use_pallas=False)
+    seq = list(np.asarray(toks[0][:plen]))
+    np.testing.assert_allclose(np.asarray(lg[0]),
+                               np.asarray(_full_next(TCFG, params, seq)),
+                               rtol=1e-4, atol=1e-4)
+    lens = plens
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    for _ in range(steps):
+        seq.append(int(tok[0]))
+        lg, kv = M.decode(TCFG, params, tok, kv, lens, use_pallas=False)
+        lens = lens + 1
+        np.testing.assert_allclose(np.asarray(lg[0]),
+                                   np.asarray(_full_next(TCFG, params, seq)),
+                                   rtol=1e-4, atol=1e-4)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+
+
+def test_draft_equals_sequential_greedy_decode():
+    rng = np.random.default_rng(7)
+    params = _params()
+    B, w = 3, 4
+    toks = jnp.asarray(rng.integers(3, M.VOCAB, size=(B, TCFG.prefill)),
+                       jnp.int32)
+    plens = jnp.asarray([4, 9, 12], jnp.int32)
+    lg, kv = M.prefill(TCFG, params, toks, plens, use_pallas=False)
+    tok0 = jnp.argmax(lg, -1).astype(jnp.int32)
+
+    dt, dl, _ = M.draft(TCFG, params, tok0, kv, plens, w=w, use_pallas=False)
+
+    tok, kv2, lens = tok0, kv, plens
+    for i in range(w):
+        lg, kv2 = M.decode(TCFG, params, tok, kv2, lens, use_pallas=False)
+        lens = lens + 1
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(dt[:, i]), np.asarray(tok))
+        np.testing.assert_allclose(np.asarray(dl[:, i]), np.asarray(lg),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_verify_block_matches_sequential_decode():
+    # The verifier's parallel forward over w+1 candidates must produce the
+    # same per-position logits as feeding the candidates one at a time.
+    rng = np.random.default_rng(11)
+    params = _params()
+    B, w = 2, 3
+    toks = jnp.asarray(rng.integers(3, M.VOCAB, size=(B, TCFG.prefill)),
+                       jnp.int32)
+    plens = jnp.asarray([5, 8], jnp.int32)
+    _, kv = M.prefill(TCFG, params, toks, plens, use_pallas=False)
+    cand = jnp.asarray(rng.integers(3, M.VOCAB, size=(B, w + 1)), jnp.int32)
+
+    vl, _ = M.verify(TCFG, params, cand, kv, plens, use_pallas=False)
+
+    kv2, lens = kv, plens
+    for i in range(w + 1):
+        lg, kv2 = M.decode(TCFG, params, cand[:, i], kv2, lens,
+                           use_pallas=False)
+        lens = lens + 1
+        np.testing.assert_allclose(np.asarray(vl[:, i]), np.asarray(lg),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_stale_cache_entries_do_not_leak():
+    # Speculative rollback model (paper §4.4): write w candidates, "reject"
+    # them by NOT advancing lens, then decode a different token — the result
+    # must equal decoding that token with a never-polluted cache.
+    rng = np.random.default_rng(13)
+    params = _params()
+    toks = jnp.asarray(rng.integers(3, M.VOCAB, size=(1, TCFG.prefill)),
+                       jnp.int32)
+    plens = jnp.asarray([6], jnp.int32)
+    _, kv_clean = M.prefill(TCFG, params, toks, plens, use_pallas=False)
+
+    cand = jnp.asarray(rng.integers(3, M.VOCAB, size=(1, 4)), jnp.int32)
+    _, kv_dirty = M.verify(TCFG, params, cand, kv_clean, plens,
+                           use_pallas=False)
+
+    nxt = jnp.asarray([42], jnp.int32)
+    lg_c, _ = M.decode(TCFG, params, nxt, kv_clean, plens, use_pallas=False)
+    lg_d, _ = M.decode(TCFG, params, nxt, kv_dirty, plens, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lg_c), np.asarray(lg_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_and_ref_paths_agree_end_to_end():
+    rng = np.random.default_rng(17)
+    params = _params()
+    toks = jnp.asarray(rng.integers(3, M.VOCAB, size=(2, TCFG.prefill)),
+                       jnp.int32)
+    plens = jnp.asarray([6, 10], jnp.int32)
+    lg_r, kv_r = M.prefill(TCFG, params, toks, plens, use_pallas=False)
+    lg_p, kv_p = M.prefill(TCFG, params, toks, plens, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_r),
+                               rtol=3e-4, atol=3e-4)
+    tok = jnp.argmax(lg_r, -1).astype(jnp.int32)
+    d_r, _, _ = M.draft(TCFG, params, tok, kv_r, plens, w=4,
+                        use_pallas=False)
+    d_p, _, _ = M.draft(TCFG, params, tok, kv_p, plens, w=4,
+                        use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(d_r), np.asarray(d_p))
+
+
+def test_insert_state_places_slot_and_preserves_tail():
+    wm = 8
+    B = 4
+    stb = jnp.zeros((M.state_len(TCFG, B, wm),), jnp.float32)
+    # non-zero batch tail must survive the insert untouched
+    stb = stb.at[M.kv_len(TCFG, B):].set(7.0)
+    st1 = jnp.ones((M.state_len(TCFG, 1, wm),), jnp.float32)
+    out = M.insert_state(TCFG, stb, st1, jnp.int32(2), B, wm)
+    kv = out[:M.kv_len(TCFG, B)].reshape(M.kv_shape(TCFG, B))
+    arr = np.asarray(kv)
+    assert arr[:, :, 2].sum() == np.prod(M.kv_shape(TCFG, 1))
+    assert arr[:, :, [0, 1, 3]].sum() == 0
+    assert np.asarray(out[M.kv_len(TCFG, B):] == 7.0).all()
+
+
+def test_packed_state_abi_matches_raw_pipeline():
+    # The runtime ABI (DESIGN.md / model.py "Packed-state layer"): packed
+    # prefill+insert+decode/draft/verify must reproduce the raw-pipeline
+    # results exactly; the tail region carries logits (and draft tokens).
+    import numpy as np
+    rng = np.random.default_rng(0)
+    wm = 8
+    B = 2
+    cfg, params = TCFG, _params()
+    toks = jnp.asarray(rng.integers(3, M.VOCAB, size=(B, cfg.prefill)),
+                       jnp.int32)
+    plens = jnp.asarray([5, 9], jnp.int32)
+    lg, kv = M.prefill(cfg, params, toks, plens, use_pallas=False)
+
+    stb = jnp.zeros((M.state_len(cfg, B, wm),), jnp.float32)
+    for b in range(B):
+        s1 = M.prefill_state(cfg, params, toks[b:b + 1], plens[b:b + 1],
+                             wm, use_pallas=False)
+        tail1 = M.extract_state(cfg, s1, 1, wm)
+        np.testing.assert_allclose(np.asarray(tail1[:M.VOCAB]),
+                                   np.asarray(lg[b]), rtol=1e-4, atol=1e-4)
+        stb = M.insert_state(cfg, stb, s1, jnp.int32(b), B, wm)
+
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    st2 = M.draft_state(cfg, params, tok, stb, plens, 4, wm,
+                        use_pallas=False)
+    tail = M.extract_state(cfg, st2, B, wm)
+    dt, dl, _ = M.draft(cfg, params, tok, kv, plens, w=4, use_pallas=False)
+    nl = B * 4 * M.VOCAB
+    np.testing.assert_allclose(
+        np.asarray(tail[:nl]).reshape(B, 4, M.VOCAB), np.asarray(dl),
+        rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(tail[nl:nl + B * 4], dtype=np.int32).reshape(B, 4),
+        np.asarray(dt))
+
+
+def test_state_geometry():
+    wm = 8
+    assert M.state_len(TCFG, 3, wm) == M.kv_len(TCFG, 3) \
+        + M.tail_len(TCFG, 3, wm)
+    assert M.tail_len(TCFG, 3, wm) == 3 * ((wm + 1) * M.VOCAB + wm)

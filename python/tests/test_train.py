@@ -1,0 +1,70 @@
+# Build-time training pipeline tests (tiny configs: a few steps of a small
+# model — the full pipeline runs under `make artifacts`, not here).
+import numpy as np
+import jax.numpy as jnp
+
+from compile import corpus, train as T, model as M
+
+TCFG = M.ModelConfig("t", d=32, layers=2, heads=2, seq=32, prefill=12)
+
+
+def _batches(n=3, b=4, t=24):
+    return corpus.training_batches(n, b, t, seed=0)
+
+
+def test_lm_loss_decreases():
+    tc = T.TrainConfig(batch=4, seq_len=24, lm_steps=25, lr=5e-3,
+                       n_data_batches=3)
+    batches = _batches()
+    p0 = M.init_params(TCFG, seed=tc.seed + 100)
+    l0 = float(T.lm_loss(TCFG, p0, jnp.asarray(batches[0])))
+    p = T.train_target(TCFG, batches, tc, lambda *_: None)
+    l1 = float(T.lm_loss(TCFG, p, jnp.asarray(batches[0])))
+    assert l1 < l0 - 0.2, (l0, l1)
+
+
+def test_distill_reduces_divergence():
+    batches = _batches()
+    tc = T.TrainConfig(batch=4, seq_len=24, distill_steps=25, lr=5e-3)
+    teacher = M.init_params(TCFG, seed=999)
+
+    def tl(tokens):
+        kv = jnp.zeros(M.kv_shape(TCFG, tokens.shape[0]), jnp.float32)
+        lens = jnp.zeros((tokens.shape[0],), jnp.int32)
+        lg, _ = M.forward_chunk(TCFG, teacher, tokens, kv, lens,
+                                use_pallas=False)
+        return lg
+    tlogits = [tl(jnp.asarray(b)) for b in batches]
+
+    s0 = M.init_params(TCFG, seed=tc.seed + 200 + TCFG.layers)
+    d0 = float(T.distill_loss(TCFG, s0, jnp.asarray(batches[0]), tlogits[0]))
+    s = T.distill_student(TCFG, tlogits, batches, tc, lambda *_: None)
+    d1 = float(T.distill_loss(TCFG, s, jnp.asarray(batches[0]), tlogits[0]))
+    assert d1 < d0, (d0, d1)
+
+
+def test_measure_similarity_properties():
+    batches = _batches(2)
+    pa = {"a": M.init_params(TCFG, seed=1), "b": M.init_params(TCFG, seed=2)}
+    # monkey-style: measure_similarity looks up M.MODELS by name
+    M.MODELS["a"] = TCFG
+    M.MODELS["b"] = TCFG
+    try:
+        sim = T.measure_similarity(pa, batches, n_eval=2)
+    finally:
+        del M.MODELS["a"], M.MODELS["b"]
+    assert sim["a,a"] == 1.0 and sim["b,b"] == 1.0
+    # DTV symmetry (paper: chosen for its symmetry)
+    assert abs(sim["a,b"] - sim["b,a"]) < 1e-5
+    assert 0.0 <= sim["a,b"] <= 1.0
+    # identical-model similarity dominates cross-model similarity
+    assert sim["a,b"] < 1.0
+
+
+def test_adam_reduces_quadratic():
+    init, update = T.make_adam(0.1)
+    x = jnp.asarray([5.0, -3.0])
+    st = init(x)
+    for _ in range(150):
+        x, st = update(2 * x, st, x)  # grad of x^2
+    assert float(jnp.abs(x).max()) < 0.2

@@ -1,0 +1,30 @@
+// One-off probe (also a living regression check): how does this PJRT
+// client materialize multi-output HLO computations?
+//
+// The runtime design hinges on the answer: if a multi-output root yields
+// one buffer per leaf, the KV cache can stay device-resident across steps
+// (execute_b feeding outputs back as inputs); if it yields a single tuple
+// buffer, every step must round-trip the state through a host literal.
+use anyhow::Result;
+
+fn probe(path: &str) -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+    let outs = exe.execute::<xla::Literal>(&[x, y])?;
+    println!("{path}: replicas={} outputs={}", outs.len(), outs[0].len());
+    for (i, b) in outs[0].iter().enumerate() {
+        let shape = b.on_device_shape()?;
+        println!("  out[{i}]: {shape:?}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    probe("/tmp/multi_notuple.hlo.txt")?;
+    probe("/tmp/multi_tuple.hlo.txt")?;
+    Ok(())
+}

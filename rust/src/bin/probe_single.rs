@@ -1,0 +1,18 @@
+// Probe: single-array-output HLO (return_tuple=False) — does execute_b
+// return ONE array buffer (device-resident chaining possible)?
+use anyhow::Result;
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/single_out.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let x = client.buffer_from_host_buffer(&[1f32, 2., 3., 4.], &[2, 2], None)?;
+    let y = client.buffer_from_host_buffer(&[1f32, 1., 1., 1.], &[2, 2], None)?;
+    let outs = exe.execute_b(&[&x, &y])?;
+    println!("outputs={} shape={:?}", outs[0].len(), outs[0][0].on_device_shape()?);
+    let mut tail = [0f32; 4];
+    outs[0][0].copy_raw_to_host_sync(&mut tail, 4)?;
+    println!("tail={tail:?}");
+    assert_eq!(tail, [0f32, 1., 2., 3.]);
+    println!("probe_single OK");
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Engine configuration: every knob of the serving system in one place.
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// How tokens are accepted during verification (paper §2.2 step 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcceptRule {
+    /// Accept while the candidate equals the verifier's argmax. With this
+    /// rule SpecRouter's output is bit-identical to target-only greedy
+    /// decoding (the paper's Output Quality check).
+    Greedy,
+    /// Leviathan-style probabilistic acceptance: accept candidate x with
+    /// probability min(1, p(x)/q(x)); on rejection sample from
+    /// norm(max(0, p-q)). Seeded for reproducibility.
+    Probabilistic { seed: u64 },
+}
+
+/// Which serving strategy the engine runs (paper §5 Baselines + ours).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Mode {
+    /// Target Model Only: plain autoregressive decoding.
+    Tmo,
+    /// Static speculative decoding with a fixed chain (2 entries = classic
+    /// SSD; 3+ = static multi-level) and fixed window.
+    Fixed { chain: Vec<String>, window: usize },
+    /// SpecRouter: adaptive chain + window selection (Algorithm 1).
+    Adaptive,
+}
+
+impl Mode {
+    pub fn label(&self) -> String {
+        match self {
+            Mode::Tmo => "TMO".into(),
+            Mode::Fixed { chain, window } =>
+                format!("SSD[{}]w{}", chain.join(">"), window),
+            Mode::Adaptive => "SpecRouter".into(),
+        }
+    }
+}
+
+/// Full engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub art_dir: PathBuf,
+    /// Engine slot count; must be one of the manifest's exported batches.
+    pub batch: usize,
+    /// Default draft window; must be one of the manifest's windows.
+    pub window: usize,
+    /// The designated final target model (quality anchor).
+    pub target: String,
+    pub mode: Mode,
+    pub rule: AcceptRule,
+    /// Maximum chain length the scheduler may construct (incl. target).
+    pub max_chain_len: usize,
+    /// ε-greedy exploration rate for the adaptive scheduler.
+    pub explore_eps: f64,
+    /// EMA smoothing factor for profiler + similarity updates.
+    pub ema_alpha: f64,
+    /// SLO threshold on request completion latency, in milliseconds.
+    pub slo_ms: f64,
+    /// Seed the scheduler's α estimates with the manifest's offline
+    /// (build-time) similarity instead of the optimistic prior.
+    pub offline_sim_prior: bool,
+    /// Logical accelerator devices and per-device memory budget.
+    pub n_devices: usize,
+    pub device_bytes: usize,
+    /// Scheduler re-plans every `replan_every` steps (1 = every step).
+    pub replan_every: usize,
+    /// Calibrated-cost mode (DESIGN.md §2): per-model execution-cost
+    /// multipliers, emulated by spin-waiting after each call. Lets benches
+    /// explore paper-scale cost ratios (a 7B target is ~100× a 68m draft
+    /// on GPUs; the miniature pool's real CPU ratio is ~12×). Empty =
+    /// honest measured costs.
+    pub cost_multipliers: Vec<(String, f64)>,
+}
+
+impl EngineConfig {
+    pub fn new(art_dir: impl Into<PathBuf>) -> Self {
+        EngineConfig {
+            art_dir: art_dir.into(),
+            batch: 4,
+            window: 4,
+            target: "m2".into(),
+            mode: Mode::Adaptive,
+            rule: AcceptRule::Greedy,
+            max_chain_len: 3,
+            explore_eps: 0.08,
+            ema_alpha: 0.2,
+            slo_ms: 60_000.0,
+            offline_sim_prior: false,
+            n_devices: 4,
+            device_bytes: 2 << 30,
+            replan_every: 1,
+            cost_multipliers: Vec::new(),
+        }
+    }
+
+    pub fn cost_multiplier(&self, model: &str) -> f64 {
+        self.cost_multipliers.iter()
+            .find(|(m, _)| m == model)
+            .map(|(_, f)| *f)
+            .unwrap_or(1.0)
+    }
+
+    pub fn validate(&self, batches: &[usize], windows: &[usize])
+                    -> Result<()> {
+        if !batches.contains(&self.batch) {
+            bail!("batch {} not exported (available: {batches:?})",
+                  self.batch);
+        }
+        if !windows.contains(&self.window) {
+            bail!("window {} not exported (available: {windows:?})",
+                  self.window);
+        }
+        if let Mode::Fixed { chain, window } = &self.mode {
+            if chain.is_empty() {
+                bail!("fixed chain must be non-empty");
+            }
+            if chain.len() > 1 && !windows.contains(window) {
+                bail!("fixed window {window} not exported");
+            }
+        }
+        if self.max_chain_len < 1 {
+            bail!("max_chain_len must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.explore_eps) {
+            bail!("explore_eps out of range");
+        }
+        if !(0.0 < self.ema_alpha && self.ema_alpha <= 1.0) {
+            bail!("ema_alpha out of range");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_catches_bad_knobs() {
+        let mut c = EngineConfig::new("/tmp/a");
+        let batches = [1, 4, 8];
+        let windows = [4, 8];
+        assert!(c.validate(&batches, &windows).is_ok());
+        c.batch = 3;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.batch = 4;
+        c.window = 5;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.window = 8;
+        c.mode = Mode::Fixed { chain: vec![], window: 4 };
+        assert!(c.validate(&batches, &windows).is_err());
+        c.mode = Mode::Fixed { chain: vec!["m0".into(), "m2".into()],
+                               window: 16 };
+        assert!(c.validate(&batches, &windows).is_err());
+        c.mode = Mode::Tmo;
+        c.ema_alpha = 0.0;
+        assert!(c.validate(&batches, &windows).is_err());
+    }
+
+    #[test]
+    fn mode_labels() {
+        assert_eq!(Mode::Tmo.label(), "TMO");
+        assert_eq!(Mode::Adaptive.label(), "SpecRouter");
+        let m = Mode::Fixed { chain: vec!["m0".into(), "m2".into()],
+                              window: 4 };
+        assert_eq!(m.label(), "SSD[m0>m2]w4");
+    }
+}

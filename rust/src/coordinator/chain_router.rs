@@ -1,0 +1,382 @@
+//! ChainRouter (paper §4.1): the control plane. Owns the model pool,
+//! scheduler, state manager, batcher and profiler; drives the request
+//! lifecycle end to end:
+//!
+//!   admit (prefill + slot insert) → [select chain → multi-level
+//!   speculative step → commit / rollback → terminate?]* → finish.
+//!
+//! One `tick()` is one generation cycle of Listing 1 in the paper.
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{AcceptRule, EngineConfig, Mode};
+use crate::coordinator::engine::{Batcher, Finished, Request, Slot};
+use crate::coordinator::executor::Executor;
+use crate::coordinator::profiler::Profiler;
+use crate::coordinator::scheduler::{Chain, Scheduler};
+use crate::coordinator::similarity::SimilarityTracker;
+use crate::coordinator::spec_step::{run_spec_step, StepCtx};
+use crate::model_pool::ModelPool;
+use crate::rng::{argmax, softmax, Rng};
+use crate::state::{KvDims, StateManager};
+
+/// How often opportunistic physical truncation runs (steps).
+const FIX_CACHES_EVERY: u64 = 32;
+
+pub struct ChainRouter {
+    pub cfg: EngineConfig,
+    pub pool: Arc<ModelPool>,
+    exec: Executor,
+    pub prof: Profiler,
+    pub sim: SimilarityTracker,
+    pub sched: Scheduler,
+    pub states: StateManager,
+    pub batcher: Batcher,
+    pub finished: Vec<Finished>,
+    rng: Rng,
+    cached_chain: Option<Chain>,
+    pub steps: u64,
+    next_id: u64,
+}
+
+impl ChainRouter {
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let pool = Arc::new(ModelPool::open(&cfg.art_dir)?);
+        Self::with_pool(cfg, pool)
+    }
+
+    /// Build on an existing pool (benches share one pool across engines to
+    /// amortize XLA compilation).
+    pub fn with_pool(cfg: EngineConfig, pool: Arc<ModelPool>) -> Result<Self> {
+        let manifest = pool.manifest.clone();
+        cfg.validate(&manifest.batches, &manifest.windows)?;
+        if !manifest.models.contains_key(&cfg.target) {
+            bail!("target model {:?} not in manifest", cfg.target);
+        }
+        if let Mode::Fixed { chain, .. } = &cfg.mode {
+            for m in chain {
+                manifest.model(m)?;
+            }
+            if chain.last() != Some(&cfg.target) {
+                bail!("fixed chain must end at the target model");
+            }
+        }
+        let mut sim = SimilarityTracker::new(cfg.ema_alpha);
+        if cfg.offline_sim_prior {
+            for a in manifest.models.keys() {
+                for b in manifest.models.keys() {
+                    if let Some(s) = manifest.offline_similarity(a, b) {
+                        sim.set_prior(a, b, s);
+                    }
+                }
+            }
+        }
+        let seed = 0xC0FFEE;
+        let sched = Scheduler::new(manifest.clone(), cfg.clone(), seed);
+        let exec = Executor::with_cost_multipliers(
+            pool.clone(), cfg.cost_multipliers.clone());
+        let batch = cfg.batch;
+        let rng_seed = match cfg.rule {
+            AcceptRule::Probabilistic { seed } => seed,
+            AcceptRule::Greedy => 7,
+        };
+        let router = ChainRouter {
+            exec,
+            prof: Profiler::new(cfg.ema_alpha),
+            sim,
+            sched,
+            states: StateManager::new(),
+            batcher: Batcher::new(batch, 4096),
+            finished: Vec::new(),
+            rng: Rng::new(rng_seed),
+            cached_chain: None,
+            steps: 0,
+            next_id: 1,
+            cfg,
+            pool,
+        };
+        for m in router.prefill_set() {
+            router.pool.register(&m)?;
+        }
+        Ok(router)
+    }
+
+    /// Models prefilled eagerly at admission: the ones this mode can ever
+    /// route through. Anything else catches up lazily if the scheduler
+    /// later picks it.
+    fn prefill_set(&self) -> Vec<String> {
+        match &self.cfg.mode {
+            Mode::Tmo => vec![self.cfg.target.clone()],
+            Mode::Fixed { chain, .. } => chain.clone(),
+            Mode::Adaptive => {
+                // once a chain is cached, only its members (plus the
+                // target) are prefilled at admission — other pool models
+                // catch up lazily if the scheduler routes to them later.
+                // Before the first plan, warm everything ≤ target so the
+                // exploration phase starts from consistent states.
+                if let Some(chain) = &self.cached_chain {
+                    let mut set = chain.models.clone();
+                    if !set.contains(&self.cfg.target) {
+                        set.push(self.cfg.target.clone());
+                    }
+                    return set;
+                }
+                let cap = self.pool.manifest.models[&self.cfg.target]
+                    .param_count;
+                self.pool.manifest.models_by_capability()
+                    .into_iter()
+                    .filter(|m| self.pool.manifest.models[m].param_count
+                            <= cap)
+                    .collect()
+            }
+        }
+    }
+
+    fn kv_dims(&self, model: &str) -> KvDims {
+        let m = &self.pool.manifest.models[model];
+        KvDims {
+            layers: m.layers,
+            batch: self.cfg.batch,
+            heads: m.heads,
+            seq: self.pool.manifest.seq,
+            head_dim: m.head_dim,
+        }
+    }
+
+    fn state_len(&self, model: &str) -> usize {
+        let m = &self.pool.manifest.models[model];
+        self.pool.manifest.state_len(m, self.cfg.batch)
+    }
+
+    /// Enqueue a request (assigning its id). Returns the id, or None if
+    /// backpressure rejected it.
+    pub fn submit(&mut self, mut req: Request) -> Option<u64> {
+        req.id = self.next_id;
+        self.next_id += 1;
+        let id = req.id;
+        self.batcher.submit(req).then_some(id)
+    }
+
+    /// Admit as many waiting requests as there are free slots: prefill on
+    /// the prefill set, commit the first token (TTFT), insert KV.
+    pub fn admit_pending(&mut self) -> Result<usize> {
+        let mut admitted = 0;
+        while let Some((slot_idx, req)) = self.batcher.next_admission() {
+            if req.prompt.is_empty()
+                || req.prompt.len() > self.pool.manifest.prefill {
+                // unservable request: drop with an empty record
+                let now = Instant::now();
+                self.finished.push(Finished {
+                    id: req.id,
+                    dataset: req.dataset.clone(),
+                    prompt_len: req.prompt.len(),
+                    tokens: vec![],
+                    arrival: req.arrival,
+                    admitted: now,
+                    first_token: now,
+                    completed: now,
+                    finished_by_eos: false,
+                });
+                continue;
+            }
+            let admitted_at = Instant::now();
+            let plen = req.prompt.len();
+            // target prefill: produces the first committed token
+            let target = self.cfg.target.clone();
+            let mut first_token = 0i32;
+            for m in self.prefill_set() {
+                let dims = self.kv_dims(&m);
+                let state_len = self.state_len(&m);
+                let (logits, state1) = self.exec
+                    .prefill(&mut self.prof, &m, &req.prompt)
+                    .with_context(|| format!("prefill {m}"))?;
+                let batch = self.cfg.batch;
+                let st = self.states.ensure(&m, dims, state_len);
+                st.mask.clear_slot(slot_idx);
+                self.exec.insert(&mut self.prof, &m, batch, &mut st.kv,
+                                 &state1, slot_idx)?;
+                st.mask.append_valid(slot_idx, plen);
+                if m == target {
+                    first_token = match self.cfg.rule {
+                        AcceptRule::Greedy => argmax(&logits) as i32,
+                        AcceptRule::Probabilistic { .. } =>
+                            self.rng.categorical(&softmax(&logits)) as i32,
+                    };
+                }
+            }
+            let first_token_at = Instant::now();
+            let mut committed = req.prompt.clone();
+            committed.push(first_token);
+            let slot = Slot {
+                req,
+                committed,
+                admitted: admitted_at,
+                first_token: first_token_at,
+                finished_by_eos: first_token
+                    == self.pool.manifest.special.eos,
+            };
+            let done = slot.finished_by_eos || slot.remaining() == 0;
+            self.batcher.occupy(slot_idx, slot);
+            admitted += 1;
+            if done {
+                self.complete(slot_idx);
+            }
+        }
+        Ok(admitted)
+    }
+
+    /// The chain for the next step, per mode (adaptive: Algorithm 1 with
+    /// replan cadence).
+    pub fn current_chain(&mut self) -> Chain {
+        match &self.cfg.mode {
+            Mode::Tmo => Chain::target_only(&self.cfg.target),
+            Mode::Fixed { chain, window } => {
+                if chain.len() == 1 {
+                    Chain::target_only(&chain[0])
+                } else {
+                    Chain { models: chain.clone(), window: *window }
+                }
+            }
+            Mode::Adaptive => {
+                let replan = self.cached_chain.is_none()
+                    || self.steps % self.cfg.replan_every as u64 == 0;
+                if replan {
+                    let c = self.sched.select_from(
+                        &self.prof, &self.sim, self.cached_chain.as_ref());
+                    self.cached_chain = Some(c);
+                }
+                self.cached_chain.clone().unwrap()
+            }
+        }
+    }
+
+    /// One generation cycle (paper Listing 1 steps 2a-2d). Returns the
+    /// number of tokens committed, or None when the engine is idle.
+    pub fn tick(&mut self) -> Result<Option<usize>> {
+        self.admit_pending()?;
+        if self.batcher.active() == 0 {
+            return Ok(if self.batcher.is_idle() { None } else { Some(0) });
+        }
+        let chain = self.current_chain();
+        self.prof.record_chain_selected(&chain.label());
+        // chain members that skipped admission prefill (lazy adaptive
+        // routing) still need state entries; their caches catch up inside
+        // the step
+        for m in &chain.models {
+            let dims = self.kv_dims(m);
+            let state_len = self.state_len(m);
+            self.states.ensure(m, dims, state_len);
+        }
+
+        let outcome = {
+            let seqs = self.batcher.slot_seqs();
+            let mut ctx = StepCtx {
+                exec: &self.exec,
+                prof: &mut self.prof,
+                sim: &mut self.sim,
+                states: &mut self.states,
+                batch: self.cfg.batch,
+                vocab: self.pool.manifest.vocab,
+                rule: self.cfg.rule,
+                rng: &mut self.rng,
+            };
+            run_spec_step(&mut ctx, &chain, &seqs,
+                          self.pool.manifest.special.pad)?
+        };
+
+        let eos = self.pool.manifest.special.eos;
+        let seq_cap = self.pool.manifest.seq;
+        let guard = self.cfg.window + 2;
+        let mut total = 0usize;
+        let mut to_complete = Vec::new();
+        for b in 0..self.batcher.batch() {
+            let Some(slot) = self.batcher.slots[b].as_mut() else {
+                continue;
+            };
+            let mut done = false;
+            for &t in &outcome.appended[b] {
+                if slot.remaining() == 0 {
+                    done = true;
+                    break;
+                }
+                slot.committed.push(t);
+                total += 1;
+                if t == eos {
+                    slot.finished_by_eos = true;
+                    done = true;
+                    break;
+                }
+            }
+            if slot.remaining() == 0
+                || slot.committed.len() + guard > seq_cap {
+                done = true;
+            }
+            // commits may have been truncated: clamp every model's mask to
+            // the authoritative frontier
+            let frontier = slot.committed.len() - 1;
+            self.states.clamp_slot(b, frontier);
+            if done {
+                to_complete.push(b);
+            }
+        }
+        for b in to_complete {
+            self.complete(b);
+        }
+        self.prof.record_chain_step(&chain.label(), total as u64);
+        self.steps += 1;
+        if self.steps % FIX_CACHES_EVERY == 0 {
+            self.states.fix_caches()?;
+        }
+        Ok(Some(total))
+    }
+
+    fn complete(&mut self, slot_idx: usize) {
+        let Some(slot) = self.batcher.free(slot_idx) else { return };
+        self.states.clear_slot(slot_idx);
+        self.finished.push(Finished {
+            id: slot.req.id,
+            dataset: slot.req.dataset.clone(),
+            prompt_len: slot.req.prompt.len(),
+            tokens: slot.generated().to_vec(),
+            arrival: slot.req.arrival,
+            admitted: slot.admitted,
+            first_token: slot.first_token,
+            completed: Instant::now(),
+            finished_by_eos: slot.finished_by_eos,
+        });
+    }
+
+    /// Drive until every submitted request finishes (offline workloads).
+    pub fn run_until_idle(&mut self, max_steps: u64) -> Result<u64> {
+        let mut n = 0;
+        while !self.batcher.is_idle() {
+            if self.tick()?.is_none() {
+                break;
+            }
+            n += 1;
+            if n >= max_steps {
+                bail!("run_until_idle exceeded {max_steps} steps");
+            }
+        }
+        Ok(n)
+    }
+
+    /// Convenience: synchronous single-prompt generation (quickstart /
+    /// tests). Returns the generated tokens.
+    pub fn generate(&mut self, dataset: &str, prompt: &[i32], max_new: usize)
+                    -> Result<Vec<i32>> {
+        let id = self.submit(Request {
+            id: 0,
+            dataset: dataset.to_string(),
+            prompt: prompt.to_vec(),
+            max_new,
+            arrival: Instant::now(),
+        }).context("queue full")?;
+        self.run_until_idle(100_000)?;
+        let rec = self.finished.iter().rev().find(|f| f.id == id)
+            .context("request did not finish")?;
+        Ok(rec.tokens.clone())
+    }
+}

@@ -1,0 +1,213 @@
+//! Batching substrate: requests, slots, and the admission queue.
+//!
+//! The engine runs a fixed-capacity slot batch (the paper's Table 2 sweeps
+//! fixed batch sizes) with *continuous refill*: a slot freed by a finished
+//! request is immediately handed to the next waiting request, whose prompt
+//! is prefilled at B=1 and whose KV is inserted into the batch buffer
+//! (`KvCache::insert_slot`). This is continuous batching at slot
+//! granularity — the dynamic-growth variant of vLLM is out of scope
+//! (DESIGN.md §4).
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A generation request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub dataset: String,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub arrival: Instant,
+}
+
+/// A finished request with its full timing record (metrics input).
+#[derive(Debug, Clone)]
+pub struct Finished {
+    pub id: u64,
+    pub dataset: String,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub arrival: Instant,
+    pub admitted: Instant,
+    pub first_token: Instant,
+    pub completed: Instant,
+    pub finished_by_eos: bool,
+}
+
+/// One occupied batch slot.
+#[derive(Debug)]
+pub struct Slot {
+    pub req: Request,
+    /// committed = prompt ++ generated (authoritative sequence)
+    pub committed: Vec<i32>,
+    pub admitted: Instant,
+    pub first_token: Instant,
+    pub finished_by_eos: bool,
+}
+
+impl Slot {
+    pub fn generated(&self) -> &[i32] {
+        &self.committed[self.req.prompt.len()..]
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.req.max_new.saturating_sub(self.generated().len())
+    }
+}
+
+/// Waiting queue + slot table.
+pub struct Batcher {
+    pub slots: Vec<Option<Slot>>,
+    queue: VecDeque<Request>,
+    pub admitted_total: u64,
+    pub rejected_total: u64,
+    max_queue: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, max_queue: usize) -> Self {
+        Batcher {
+            slots: (0..batch).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            admitted_total: 0,
+            rejected_total: 0,
+            max_queue,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Enqueue; returns false (rejected) if the queue is at capacity —
+    /// backpressure toward the client.
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.max_queue {
+            self.rejected_total += 1;
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active() == 0 && self.queue.is_empty()
+    }
+
+    /// Next (slot index, request) pair to admit, if a slot is free and a
+    /// request waits. The caller performs the prefill and then `occupy`s.
+    pub fn next_admission(&mut self) -> Option<(usize, Request)> {
+        let free = self.slots.iter().position(|s| s.is_none())?;
+        let req = self.queue.pop_front()?;
+        Some((free, req))
+    }
+
+    pub fn occupy(&mut self, slot: usize, s: Slot) {
+        assert!(self.slots[slot].is_none(), "slot {slot} already occupied");
+        self.slots[slot] = Some(s);
+        self.admitted_total += 1;
+    }
+
+    pub fn free(&mut self, slot: usize) -> Option<Slot> {
+        self.slots[slot].take()
+    }
+
+    /// Committed sequences per slot for the spec step (None = idle).
+    pub fn slot_seqs(&self) -> Vec<Option<&[i32]>> {
+        self.slots.iter()
+            .map(|s| s.as_ref().map(|s| s.committed.as_slice()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            dataset: "gsm8k".into(),
+            prompt: vec![1, 10, 11],
+            max_new: 4,
+            arrival: Instant::now(),
+        }
+    }
+
+    fn slot_for(r: Request) -> Slot {
+        let committed = r.prompt.clone();
+        Slot {
+            req: r,
+            committed,
+            admitted: Instant::now(),
+            first_token: Instant::now(),
+            finished_by_eos: false,
+        }
+    }
+
+    #[test]
+    fn admission_fills_free_slots_fifo() {
+        let mut b = Batcher::new(2, 10);
+        assert!(b.next_admission().is_none());
+        b.submit(req(1));
+        b.submit(req(2));
+        b.submit(req(3));
+        let (s0, r1) = b.next_admission().unwrap();
+        assert_eq!((s0, r1.id), (0, 1));
+        b.occupy(s0, slot_for(r1));
+        let (s1, r2) = b.next_admission().unwrap();
+        assert_eq!((s1, r2.id), (1, 2));
+        b.occupy(s1, slot_for(r2));
+        assert!(b.next_admission().is_none()); // full
+        assert_eq!(b.queued(), 1);
+        b.free(0);
+        let (s, r3) = b.next_admission().unwrap();
+        assert_eq!((s, r3.id), (0, 3));
+    }
+
+    #[test]
+    fn backpressure_rejects_above_capacity() {
+        let mut b = Batcher::new(1, 2);
+        assert!(b.submit(req(1)));
+        assert!(b.submit(req(2)));
+        assert!(!b.submit(req(3)));
+        assert_eq!(b.rejected_total, 1);
+    }
+
+    #[test]
+    fn slot_bookkeeping() {
+        let mut b = Batcher::new(2, 4);
+        assert!(b.is_idle());
+        b.submit(req(7));
+        assert!(!b.is_idle());
+        let (i, r) = b.next_admission().unwrap();
+        let mut s = slot_for(r);
+        s.committed.push(99);
+        b.occupy(i, s);
+        assert_eq!(b.active(), 1);
+        let seqs = b.slot_seqs();
+        assert_eq!(seqs[0].unwrap(), &[1, 10, 11, 99]);
+        assert!(seqs[1].is_none());
+        let slot = b.free(i).unwrap();
+        assert_eq!(slot.generated(), &[99]);
+        assert_eq!(slot.remaining(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "already occupied")]
+    fn double_occupy_panics() {
+        let mut b = Batcher::new(1, 4);
+        b.submit(req(1));
+        let (i, r) = b.next_admission().unwrap();
+        b.occupy(i, slot_for(r));
+        b.occupy(i, slot_for(req(2)));
+    }
+}

@@ -1,0 +1,217 @@
+//! Executor + Processors (paper §4.3): the data-plane dispatcher.
+//!
+//! Each method is one stateless processor — Prefill, Decode (TMO path),
+//! Draft, Verify — that fetches the right lazily-compiled executable from
+//! the ModelPool, marshals inputs, runs the call, and reports its wall
+//! time to the PerformanceProfiler.
+//!
+//! Hot-path data flow (the §Perf device-residency optimization): the
+//! packed model state `[kv | tail]` lives as a `PjRtBuffer`; every call is
+//! `execute_b([weights_buf, small inputs..., state_buf, lens_buf])` whose
+//! single array output replaces the state in place. A tiny `extract`
+//! computation slices the tail (logits/drafted tokens) out for the host —
+//! the multi-megabyte KV region never crosses the host boundary.
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::profiler::Profiler;
+use crate::model_pool::{FnKey, ModelPool};
+use crate::runtime::FnKind;
+use crate::state::StateBuf;
+
+pub struct Executor {
+    pub pool: Arc<ModelPool>,
+    /// Calibrated-cost mode (DESIGN.md §2): per-model multipliers emulated
+    /// by spin-waiting after each call, so benches can explore paper-scale
+    /// cost ratios. Empty = honest measured costs.
+    cost_multipliers: Vec<(String, f64)>,
+}
+
+impl Executor {
+    pub fn new(pool: Arc<ModelPool>) -> Self {
+        Executor { pool, cost_multipliers: Vec::new() }
+    }
+
+    pub fn with_cost_multipliers(pool: Arc<ModelPool>,
+                                 muls: Vec<(String, f64)>) -> Self {
+        Executor { pool, cost_multipliers: muls }
+    }
+
+    /// Stretch a call to `multiplier ×` its measured duration (spin-wait:
+    /// sleep granularity is too coarse for ms-scale calls).
+    fn calibrate(&self, model: &str, dur: Duration) -> Duration {
+        let f = self.cost_multipliers.iter()
+            .find(|(m, _)| m == model)
+            .map(|(_, f)| *f)
+            .unwrap_or(1.0);
+        if f <= 1.0 {
+            return dur;
+        }
+        let target = dur.mul_f64(f);
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() + dur < target {
+            std::hint::spin_loop();
+        }
+        target
+    }
+
+    fn key(model: &str, kind: FnKind, batch: usize, window: usize) -> FnKey {
+        FnKey { model: model.into(), kind, batch, window }
+    }
+
+    /// Read the tail region of a state buffer to the host via the model's
+    /// `extract` computation. Returns the full tail; callers slice.
+    fn extract_tail(&self, model: &str, batch: usize,
+                    state: &mut StateBuf) -> Result<(Vec<f32>, Duration)> {
+        let exe = self.pool.get(
+            &Self::key(model, FnKind::Extract, batch, 0))?;
+        let rt = &self.pool.runtime;
+        let buf = state.buffer(rt)?;
+        exe.run_b_to_host(&[buf])
+    }
+
+    /// PrefillProcessor: process one prompt (B=1), returning the
+    /// last-position logits `[V]` and the fresh packed B=1 state buffer.
+    pub fn prefill(&self, prof: &mut Profiler, model: &str, prompt: &[i32])
+                   -> Result<(Vec<f32>, xla::PjRtBuffer)> {
+        let p = self.pool.manifest.prefill;
+        if prompt.is_empty() || prompt.len() > p {
+            bail!("prompt length {} outside 1..={p}", prompt.len());
+        }
+        let key = Self::key(model, FnKind::Prefill, 1, 0);
+        let exe = self.pool.get(&key)?;
+        let weights = self.pool.weights_buffer(model)?;
+        let rt = &self.pool.runtime;
+        let mut padded = prompt.to_vec();
+        padded.resize(p, self.pool.manifest.special.pad);
+        let tokens = rt.to_device_i32(&padded, &[1, p])?;
+        let plen = rt.to_device_i32(&[prompt.len() as i32], &[1])?;
+        let (state1, d1) = exe.run_b(&[&weights, &tokens, &plen])?;
+
+        let xexe = self.pool.get(&Self::key(model, FnKind::Extract1, 1, 0))?;
+        let (tail, d2) = xexe.run_b_to_host(&[&state1])?;
+        let dur = self.calibrate(model, d1 + d2);
+        prof.record_call(&key, dur);
+        let v = self.pool.manifest.vocab;
+        Ok((tail[..v].to_vec(), state1))
+    }
+
+    /// Admission: place a prefilled B=1 state into batch slot `slot`
+    /// on-device (exported `insert` computation).
+    pub fn insert(&self, prof: &mut Profiler, model: &str, batch: usize,
+                  state: &mut StateBuf, one: &xla::PjRtBuffer, slot: usize)
+                  -> Result<()> {
+        let key = Self::key(model, FnKind::Insert, batch, 0);
+        let exe = self.pool.get(&key)?;
+        let rt = &self.pool.runtime;
+        let slot_b = rt.scalar_i32(slot as i32)?;
+        let (out, dur) = {
+            let buf = state.buffer(rt)?;
+            exe.run_b(&[buf, one, &slot_b])?
+        };
+        state.replace(out)?;
+        prof.record_call(&key, dur);
+        Ok(())
+    }
+
+    /// Shared body of decode/draft/verify: dispatch the packed-state fn,
+    /// adopt the new state, pull the tail.
+    fn step_fn(&self, prof: &mut Profiler, key: &FnKey, tokens: &[i32],
+               token_dims: &[usize], state: &mut StateBuf, lens: &[i32])
+               -> Result<Vec<f32>> {
+        let batch = key.batch;
+        if lens.len() != batch {
+            bail!("lens length != batch {batch}");
+        }
+        self.check_capacity(lens, key)?;
+        let exe = self.pool.get(key)?;
+        let weights = self.pool.weights_buffer(&key.model)?;
+        let rt = &self.pool.runtime;
+        let t = rt.to_device_i32(tokens, token_dims)?;
+        let l = rt.to_device_i32(lens, &[batch])?;
+        let (out, d1) = {
+            let buf = state.buffer(rt)?;
+            exe.run_b(&[&weights, &t, buf, &l])?
+        };
+        state.replace(out)?;
+        let (tail, d2) = self.extract_tail(&key.model, batch, state)?;
+        let dur = self.calibrate(&key.model, d1 + d2);
+        prof.record_call(key, dur);
+        Ok(tail)
+    }
+
+    /// DecodeProcessor (the TMO / autoregressive path): one step for the
+    /// whole batch. Returns logits `[B*V]`.
+    pub fn decode(&self, prof: &mut Profiler, model: &str, batch: usize,
+                  tokens: &[i32], state: &mut StateBuf, lens: &[i32])
+                  -> Result<Vec<f32>> {
+        if tokens.len() != batch {
+            bail!("decode tokens != batch {batch}");
+        }
+        let key = Self::key(model, FnKind::Decode, batch, 0);
+        let mut tail = self.step_fn(prof, &key, tokens, &[batch], state,
+                                    lens)?;
+        tail.truncate(batch * self.pool.manifest.vocab);
+        Ok(tail)
+    }
+
+    /// DraftProcessor: greedy scan of `window` speculative tokens.
+    /// Returns (drafted tokens `[B*w]`, draft logits `[B*w*V]`).
+    pub fn draft(&self, prof: &mut Profiler, model: &str, batch: usize,
+                 window: usize, tokens: &[i32], state: &mut StateBuf,
+                 lens: &[i32]) -> Result<(Vec<i32>, Vec<f32>)> {
+        if tokens.len() != batch {
+            bail!("draft tokens != batch {batch}");
+        }
+        let key = Self::key(model, FnKind::Draft, batch, window);
+        let mut tail = self.step_fn(prof, &key, tokens, &[batch], state,
+                                    lens)?;
+        let v = self.pool.manifest.vocab;
+        let nl = batch * window * v;
+        // tail layout: logits[B,w,V] ++ tokens_as_f32[B,w]
+        let toks: Vec<i32> = tail[nl..nl + batch * window]
+            .iter()
+            .map(|&x| x as i32)
+            .collect();
+        tail.truncate(nl);
+        Ok((toks, tail))
+    }
+
+    /// VerifyProcessor: one parallel forward over `window`+1 positions.
+    /// `block` is row-major `[B, window+1]`. Returns logits
+    /// `[B*(window+1)*V]`.
+    pub fn verify(&self, prof: &mut Profiler, model: &str, batch: usize,
+                  window: usize, block: &[i32], state: &mut StateBuf,
+                  lens: &[i32]) -> Result<Vec<f32>> {
+        let w1 = window + 1;
+        if block.len() != batch * w1 {
+            bail!("verify block len mismatch (batch {batch}, w {window})");
+        }
+        let key = Self::key(model, FnKind::Verify, batch, window);
+        let mut tail = self.step_fn(prof, &key, block, &[batch, w1], state,
+                                    lens)?;
+        tail.truncate(batch * w1 * self.pool.manifest.vocab);
+        Ok(tail)
+    }
+
+    /// Guard: a chunk of `positions` starting at each slot's length must
+    /// fit the physical capacity S (the engine retires sequences well
+    /// before this, so a violation is a logic error worth failing loudly).
+    fn check_capacity(&self, lens: &[i32], key: &FnKey) -> Result<()> {
+        let positions = match key.kind {
+            FnKind::Decode => 1,
+            FnKind::Draft | FnKind::Verify => key.window + 1,
+            _ => 0,
+        };
+        let s = self.pool.manifest.seq;
+        for (b, &l) in lens.iter().enumerate() {
+            if l as usize + positions > s {
+                bail!("slot {b}: chunk of {positions} at len {l} exceeds \
+                       capacity {s} ({})", key.label());
+            }
+        }
+        Ok(())
+    }
+}

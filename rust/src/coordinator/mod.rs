@@ -1,0 +1,19 @@
+//! Layer 3 — the SpecRouter coordinator (the paper's system contribution):
+//! adaptive chain scheduling (§4.2), collaborative multi-level verification
+//! (§4.3), state synchronization (§4.4), profiling (§4.6), and the control
+//! plane that ties them together (§4.1).
+pub mod chain_router;
+pub mod engine;
+pub mod executor;
+pub mod profiler;
+pub mod scheduler;
+pub mod similarity;
+pub mod spec_step;
+
+pub use chain_router::ChainRouter;
+pub use engine::{Batcher, Finished, Request, Slot};
+pub use executor::Executor;
+pub use profiler::Profiler;
+pub use scheduler::{Chain, Scheduler, ScoredChain};
+pub use similarity::SimilarityTracker;
+pub use spec_step::{StepCtx, StepOutcome};

@@ -1,0 +1,179 @@
+//! PerformanceProfiler (paper §4.6): low-overhead timing + counter
+//! collection feeding the ModelChainScheduler's adaptive loop.
+//!
+//! Every PJRT call is recorded under its (model, fn kind, batch, window)
+//! key; per-call wall time is folded into an EMA (paper:
+//! `T_new = α·T_measured + (1-α)·T_old`). The scheduler reads smoothed
+//! *call-level* costs — the natural unit for Eq. 7's cost model under
+//! batched execution — and derived per-token times for diagnostics.
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::model_pool::FnKey;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EmaStat {
+    pub ema_s: f64,
+    pub count: u64,
+    pub total_s: f64,
+}
+
+impl EmaStat {
+    fn update(&mut self, x: f64, alpha: f64) {
+        self.ema_s = if self.count == 0 {
+            x
+        } else {
+            alpha * x + (1.0 - alpha) * self.ema_s
+        };
+        self.count += 1;
+        self.total_s += x;
+    }
+}
+
+/// Collected runtime metrics.
+#[derive(Debug)]
+pub struct Profiler {
+    alpha: f64,
+    calls: HashMap<FnKey, EmaStat>,
+    /// per-chain-step acceptance counters: (chain label) -> (steps, tokens)
+    chain_outcomes: HashMap<String, (u64, u64)>,
+    /// per-chain selection counts (Internal Diagnostics, paper §5)
+    chain_selected: HashMap<String, u64>,
+    pub steps: u64,
+    pub committed_tokens: u64,
+}
+
+impl Profiler {
+    pub fn new(alpha: f64) -> Self {
+        Profiler {
+            alpha,
+            calls: HashMap::new(),
+            chain_outcomes: HashMap::new(),
+            chain_selected: HashMap::new(),
+            steps: 0,
+            committed_tokens: 0,
+        }
+    }
+
+    /// Record one executed call.
+    pub fn record_call(&mut self, key: &FnKey, dur: Duration) {
+        self.calls
+            .entry(key.clone())
+            .or_default()
+            .update(dur.as_secs_f64(), self.alpha);
+    }
+
+    /// Smoothed call cost for a key, if it has ever been measured.
+    pub fn call_cost(&self, key: &FnKey) -> Option<f64> {
+        self.calls.get(key).map(|s| s.ema_s)
+    }
+
+    /// Smoothed per-token time T_i for a model fn: call cost divided by
+    /// (batch × positions-per-call).
+    pub fn per_token(&self, key: &FnKey, positions: usize) -> Option<f64> {
+        self.call_cost(key)
+            .map(|c| c / (key.batch.max(1) * positions.max(1)) as f64)
+    }
+
+    pub fn record_chain_step(&mut self, chain_label: &str, committed: u64) {
+        let e = self.chain_outcomes.entry(chain_label.to_string())
+            .or_insert((0, 0));
+        e.0 += 1;
+        e.1 += committed;
+        self.steps += 1;
+        self.committed_tokens += committed;
+    }
+
+    pub fn record_chain_selected(&mut self, chain_label: &str) {
+        *self.chain_selected.entry(chain_label.to_string()).or_insert(0) += 1;
+    }
+
+    /// Mean accepted tokens per step for a chain (diagnostics).
+    pub fn mean_accept(&self, chain_label: &str) -> Option<f64> {
+        self.chain_outcomes.get(chain_label)
+            .filter(|(s, _)| *s > 0)
+            .map(|(s, t)| *t as f64 / *s as f64)
+    }
+
+    /// Chain-selection frequency table (paper Internal Diagnostics).
+    pub fn selection_table(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<_> = self.chain_selected.iter()
+            .map(|(k, c)| (k.clone(), *c))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// All measured call stats (label, ema seconds, calls) for reports.
+    pub fn call_table(&self) -> Vec<(String, f64, u64)> {
+        let mut v: Vec<_> = self.calls.iter()
+            .map(|(k, s)| (k.label(), s.ema_s, s.count))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn total_call_time(&self) -> f64 {
+        self.calls.values().map(|s| s.total_s).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::FnKind;
+
+    fn key(model: &str, batch: usize) -> FnKey {
+        FnKey { model: model.into(), kind: FnKind::Decode, batch, window: 0 }
+    }
+
+    #[test]
+    fn ema_converges_toward_signal() {
+        let mut p = Profiler::new(0.5);
+        let k = key("m0", 4);
+        for _ in 0..20 {
+            p.record_call(&k, Duration::from_millis(10));
+        }
+        let c = p.call_cost(&k).unwrap();
+        assert!((c - 0.010).abs() < 1e-6, "{c}");
+        // step change is tracked
+        for _ in 0..20 {
+            p.record_call(&k, Duration::from_millis(30));
+        }
+        let c = p.call_cost(&k).unwrap();
+        assert!((c - 0.030).abs() < 1e-4, "{c}");
+    }
+
+    #[test]
+    fn first_sample_initializes_not_decays() {
+        let mut p = Profiler::new(0.1);
+        let k = key("m1", 1);
+        p.record_call(&k, Duration::from_millis(50));
+        assert!((p.call_cost(&k).unwrap() - 0.050).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_token_normalizes_by_batch_and_positions() {
+        let mut p = Profiler::new(1.0);
+        let k = key("m0", 8);
+        p.record_call(&k, Duration::from_millis(80));
+        let t = p.per_token(&k, 1).unwrap();
+        assert!((t - 0.010).abs() < 1e-9);
+        assert!(p.per_token(&key("nope", 1), 1).is_none());
+    }
+
+    #[test]
+    fn chain_accounting() {
+        let mut p = Profiler::new(0.2);
+        p.record_chain_selected("A");
+        p.record_chain_selected("A");
+        p.record_chain_selected("B");
+        p.record_chain_step("A", 3);
+        p.record_chain_step("A", 5);
+        assert_eq!(p.mean_accept("A"), Some(4.0));
+        assert_eq!(p.mean_accept("B"), None);
+        assert_eq!(p.selection_table()[0], ("A".to_string(), 2));
+        assert_eq!(p.steps, 2);
+        assert_eq!(p.committed_tokens, 8);
+    }
+}

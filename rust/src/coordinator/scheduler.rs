@@ -1,0 +1,601 @@
+//! ModelChainScheduler (paper §4.2, Algorithm 1): dynamic selection of the
+//! model chain [M_1, ..., M_N = M_t] and draft window minimizing the
+//! predicted effective time per generated target token (Eq. 7).
+//!
+//! Candidate chains are the capability-increasing subsequences of the pool
+//! ending at the target (Alg. 1 step 1). For each candidate (and each
+//! exported window size) `predict_effective_time` models:
+//!
+//! ```text
+//! T_eff(C, W) = (draft cost + Σ_j verify cost at level j)
+//!               / (1 + Σ_{k=1..W} α_eff^k)
+//! ```
+//!
+//! with α_eff the product of per-hop acceptance estimates — the cascade
+//! survival probability of one drafted token (DESIGN.md §6 documents this
+//! specialization of Eq. 7: in our collaborative verification scheme every
+//! level always runs, so the "probability of reaching level j" is 1 and
+//! the chain composes through α instead).
+//!
+//! Costs come from the Profiler's EMA call costs; unmeasured costs fall
+//! back to an analytic FLOP model scaled by a measured reference so cold
+//! chains can still be compared (and ε-exploration refreshes stale ones).
+use std::sync::Arc;
+
+use crate::config::EngineConfig;
+use crate::coordinator::profiler::Profiler;
+use crate::coordinator::similarity::SimilarityTracker;
+use crate::model_pool::FnKey;
+use crate::rng::Rng;
+use crate::runtime::{FnKind, Manifest};
+
+/// An inference path: draft model, optional intermediate verifiers, and
+/// the final target. `models.len() == 1` means target-only decoding.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Chain {
+    pub models: Vec<String>,
+    pub window: usize,
+}
+
+impl Chain {
+    pub fn target_only(target: &str) -> Self {
+        Chain { models: vec![target.to_string()], window: 0 }
+    }
+
+    pub fn label(&self) -> String {
+        if self.models.len() == 1 {
+            format!("[{}]", self.models[0])
+        } else {
+            format!("[{}]w{}", self.models.join(">"), self.window)
+        }
+    }
+
+    pub fn is_speculative(&self) -> bool {
+        self.models.len() > 1
+    }
+
+    pub fn target(&self) -> &str {
+        self.models.last().unwrap()
+    }
+}
+
+/// One scored candidate (exposed for the Figure-2 bench / explorer).
+#[derive(Debug, Clone)]
+pub struct ScoredChain {
+    pub chain: Chain,
+    pub predicted_eff_s: f64,
+    pub alpha_eff: f64,
+    pub cost_s: f64,
+    pub expected_tokens: f64,
+    /// true if any cost in the prediction came from the analytic fallback
+    /// rather than a measurement
+    pub cold: bool,
+}
+
+pub struct Scheduler {
+    pub manifest: Arc<Manifest>,
+    cfg: EngineConfig,
+    rng: Rng,
+    pub plans: u64,
+    pub explorations: u64,
+}
+
+impl Scheduler {
+    pub fn new(manifest: Arc<Manifest>, cfg: EngineConfig, seed: u64) -> Self {
+        Scheduler { manifest, cfg, rng: Rng::new(seed), plans: 0,
+                    explorations: 0 }
+    }
+
+    /// Algorithm 1 step 1: capability-increasing subsequences ending at
+    /// the target, up to max_chain_len.
+    pub fn candidate_chains(&self) -> Vec<Chain> {
+        let order = self.manifest.models_by_capability();
+        let tpos = match order.iter().position(|m| m == &self.cfg.target) {
+            Some(p) => p,
+            None => return vec![Chain::target_only(&self.cfg.target)],
+        };
+        let smaller = &order[..tpos];
+        let mut chains = vec![Chain::target_only(&self.cfg.target)];
+        // enumerate non-empty increasing subsequences of `smaller` with
+        // length <= max_chain_len - 1 (bitmask enumeration: pools are small)
+        let n = smaller.len();
+        for mask in 1u32..(1 << n) {
+            let picked: Vec<String> = (0..n)
+                .filter(|i| mask & (1 << i) != 0)
+                .map(|i| smaller[i].clone())
+                .collect();
+            if picked.len() + 1 > self.cfg.max_chain_len {
+                continue;
+            }
+            for &w in &self.manifest.windows {
+                let mut models = picked.clone();
+                models.push(self.cfg.target.clone());
+                chains.push(Chain { models, window: w });
+            }
+        }
+        chains
+    }
+
+    /// Analytic per-call FLOP estimate used as cold-start fallback:
+    /// 12·d²·L per token-position, scaled to seconds by a measured
+    /// reference (or a nominal CPU rate when nothing is measured yet).
+    fn analytic_cost(&self, model: &str, positions: usize,
+                     profiler: &Profiler) -> f64 {
+        let meta = &self.manifest.models[model];
+        let flops_per_pos = 12.0 * (meta.d * meta.d * meta.layers) as f64;
+        let flops = flops_per_pos * (positions * self.cfg.batch) as f64;
+        // calibrate $/flop from any measured decode call
+        let mut rate = 2.0e9; // nominal 2 GFLOP/s fallback
+        for m in self.manifest.models.keys() {
+            let key = FnKey { model: m.clone(), kind: FnKind::Decode,
+                              batch: self.cfg.batch, window: 0 };
+            if let Some(c) = profiler.call_cost(&key) {
+                let mm = &self.manifest.models[m];
+                let f = 12.0 * (mm.d * mm.d * mm.layers) as f64
+                    * self.cfg.batch as f64;
+                rate = f / c.max(1e-9);
+                break;
+            }
+        }
+        flops / rate
+    }
+
+    fn measured_or_analytic(&self, key: &FnKey, positions: usize,
+                            profiler: &Profiler, cold: &mut bool) -> f64 {
+        match profiler.call_cost(key) {
+            Some(c) => c,
+            None => {
+                *cold = true;
+                self.analytic_cost(&key.model, positions, profiler)
+            }
+        }
+    }
+
+    /// Eq. 7: predicted effective seconds per committed target token.
+    pub fn predict_effective_time(&self, chain: &Chain, profiler: &Profiler,
+                                  sim: &SimilarityTracker) -> ScoredChain {
+        let mut cold = false;
+        if !chain.is_speculative() {
+            let key = FnKey { model: chain.target().into(),
+                              kind: FnKind::Decode,
+                              batch: self.cfg.batch, window: 0 };
+            let cost = self.measured_or_analytic(&key, 1, profiler, &mut cold);
+            return ScoredChain {
+                chain: chain.clone(),
+                predicted_eff_s: cost,
+                alpha_eff: 1.0,
+                cost_s: cost,
+                expected_tokens: 1.0,
+                cold,
+            };
+        }
+        let w = chain.window;
+        // numerator: draft call + verify call per level
+        let draft_key = FnKey { model: chain.models[0].clone(),
+                                kind: FnKind::Draft,
+                                batch: self.cfg.batch, window: w };
+        let mut cost = self.measured_or_analytic(&draft_key, w, profiler,
+                                                 &mut cold);
+        for j in 1..chain.models.len() {
+            let vk = FnKey { model: chain.models[j].clone(),
+                             kind: FnKind::Verify,
+                             batch: self.cfg.batch, window: w };
+            cost += self.measured_or_analytic(&vk, w + 1, profiler,
+                                              &mut cold);
+        }
+        // denominator: 1 (bonus token) + Σ α_eff^k, α_eff = Π per-hop α
+        let mut alpha_eff = 1.0;
+        for j in 1..chain.models.len() {
+            alpha_eff *= sim.accept_estimate(&chain.models[j - 1],
+                                             &chain.models[j]);
+        }
+        // state-sync (catch-up) cost: non-target chain members lag the
+        // committed frontier whenever the commit extends past what they
+        // physically wrote (paper §4.4 asynchronous progress); each then
+        // needs one extra chunked verify next step. The lag probability
+        // grows with acceptance — approximate it by α_eff. Without this
+        // term the scheduler systematically over-ranks expensive drafters.
+        for m in chain.models[..chain.models.len() - 1].iter() {
+            let ck = FnKey { model: m.clone(), kind: FnKind::Verify,
+                             batch: self.cfg.batch, window: w };
+            cost += alpha_eff
+                * self.measured_or_analytic(&ck, w + 1, profiler, &mut cold);
+        }
+        let mut expected = 1.0;
+        let mut a = alpha_eff;
+        for _ in 0..w {
+            expected += a;
+            a *= alpha_eff;
+        }
+        ScoredChain {
+            chain: chain.clone(),
+            predicted_eff_s: cost / expected,
+            alpha_eff,
+            cost_s: cost,
+            expected_tokens: expected,
+            cold,
+        }
+    }
+
+    /// Score every candidate (the Figure-2 view).
+    pub fn score_all(&self, profiler: &Profiler, sim: &SimilarityTracker)
+                     -> Vec<ScoredChain> {
+        let mut scored: Vec<_> = self.candidate_chains()
+            .iter()
+            .map(|c| self.predict_effective_time(c, profiler, sim))
+            .collect();
+        scored.sort_by(|a, b| a.predicted_eff_s
+                       .partial_cmp(&b.predicted_eff_s).unwrap());
+        scored
+    }
+
+    /// Algorithm 1 steps 2–3 (+ ε-exploration): the chain to run next.
+    ///
+    /// Cold-start rule: while candidates exist whose costs have never been
+    /// measured, they are tried first (bounded by a warm-up budget) — the
+    /// analytic FLOP fallback cannot see per-call overheads, so a cold
+    /// chain's true cost is only knowable by running it once. After
+    /// warm-up, ε-greedy keeps estimates fresh.
+    pub fn select(&mut self, profiler: &Profiler, sim: &SimilarityTracker)
+                  -> Chain {
+        self.select_from(profiler, sim, None)
+    }
+
+    /// `select` with switch hysteresis: when `current` is set, switching
+    /// away from it requires a predicted improvement of at least 10%.
+    /// Switching chains is not free — the incoming models' KV caches must
+    /// catch up to the committed frontier (paper §4.4) — so flip-flopping
+    /// between near-equal chains costs real verify calls.
+    pub fn select_from(&mut self, profiler: &Profiler,
+                       sim: &SimilarityTracker, current: Option<&Chain>)
+                       -> Chain {
+        self.plans += 1;
+        let scored = self.score_all(profiler, sim);
+        let warmup_budget = 3 * scored.len() as u64;
+        if self.plans <= warmup_budget {
+            if let Some(c) = scored.iter().find(|s| s.cold) {
+                self.explorations += 1;
+                return c.chain.clone();
+            }
+        }
+        if scored.len() > 1 && self.rng.f64() < self.cfg.explore_eps {
+            // explore: prefer cold (never-measured) chains, else uniform
+            self.explorations += 1;
+            let cold: Vec<_> = scored.iter().filter(|s| s.cold).collect();
+            if !cold.is_empty() {
+                return cold[self.rng.below(cold.len())].chain.clone();
+            }
+            return scored[self.rng.below(scored.len())].chain.clone();
+        }
+        if let Some(cur) = current {
+            if let Some(cur_scored) = scored.iter()
+                .find(|s| &s.chain == cur) {
+                // 25%: switching re-syncs the incoming models' caches
+                // across every in-flight sequence, which near-tied
+                // predictions never pay back
+                if scored[0].predicted_eff_s
+                    > cur_scored.predicted_eff_s * 0.75 {
+                    return cur.clone();
+                }
+            }
+        }
+        scored[0].chain.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+    use std::path::Path;
+    use std::time::Duration;
+
+    fn manifest() -> Arc<Manifest> {
+        // minimal 3-model manifest (no files needed for scheduler tests)
+        let txt = r#"{
+          "vocab":512,"seq":128,"prefill":48,
+          "windows":[4,8],"batches":[1,4],
+          "special_tokens":{"pad":0,"bos":1,"eos":2,"sep":3},
+          "datasets":{},
+          "models":{
+            "m0":{"d":64,"layers":2,"heads":4,"head_dim":16,
+                  "param_count":100,"weights_file":"x","artifacts":[]},
+            "m1":{"d":96,"layers":4,"heads":6,"head_dim":16,
+                  "param_count":200,"weights_file":"x","artifacts":[]},
+            "m2":{"d":128,"layers":6,"heads":8,"head_dim":16,
+                  "param_count":300,"weights_file":"x","artifacts":[]}
+          }
+        }"#;
+        let v = json::parse(txt).unwrap();
+        // reuse the manifest parser through its public API
+        Arc::new(Manifest::load_from_value_for_tests(Path::new("/tmp"), &v))
+    }
+
+    fn cfg() -> EngineConfig {
+        let mut c = EngineConfig::new("/tmp");
+        c.batch = 4;
+        c.window = 4;
+        c.target = "m2".into();
+        c.max_chain_len = 3;
+        c.explore_eps = 0.0;
+        c
+    }
+
+    #[test]
+    fn candidates_end_at_target_and_respect_length() {
+        let s = Scheduler::new(manifest(), cfg(), 1);
+        let cands = s.candidate_chains();
+        // [m2], and per window: [m0,m2], [m1,m2], [m0,m1,m2]
+        assert_eq!(cands.len(), 1 + 3 * 2);
+        for c in &cands {
+            assert_eq!(c.target(), "m2");
+            assert!(c.models.len() <= 3);
+            // capability-increasing
+            let caps: Vec<_> = c.models.iter()
+                .map(|m| s.manifest.models[m].param_count).collect();
+            let mut sorted = caps.clone();
+            sorted.sort();
+            assert_eq!(caps, sorted);
+        }
+        let mut c2 = cfg();
+        c2.max_chain_len = 2;
+        let s = Scheduler::new(manifest(), c2, 1);
+        assert_eq!(s.candidate_chains().len(), 1 + 2 * 2);
+    }
+
+    #[test]
+    fn prediction_prefers_fast_accurate_draft() {
+        let s = Scheduler::new(manifest(), cfg(), 1);
+        let mut prof = Profiler::new(1.0);
+        let mut sim = SimilarityTracker::new(1.0);
+        // measured costs: m2 decode 100ms; draft m0 20ms; verify m2 110ms;
+        // draft m1 60ms
+        let k = |m: &str, kind, w| FnKey { model: m.into(), kind,
+                                           batch: 4, window: w };
+        prof.record_call(&k("m2", FnKind::Decode, 0),
+                         Duration::from_millis(100));
+        prof.record_call(&k("m0", FnKind::Draft, 4),
+                         Duration::from_millis(20));
+        prof.record_call(&k("m1", FnKind::Draft, 4),
+                         Duration::from_millis(60));
+        prof.record_call(&k("m2", FnKind::Verify, 4),
+                         Duration::from_millis(110));
+        // catch-up (state-sync) costs for the drafters
+        prof.record_call(&k("m0", FnKind::Verify, 4),
+                         Duration::from_millis(15));
+        prof.record_call(&k("m1", FnKind::Verify, 4),
+                         Duration::from_millis(45));
+        // m0 accepted well by m2
+        sim.observe_acceptance("m0", "m2", 3, 4);
+        sim.observe_acceptance("m1", "m2", 3, 4);
+
+        let c_m0 = Chain { models: vec!["m0".into(), "m2".into()], window: 4 };
+        let c_m1 = Chain { models: vec!["m1".into(), "m2".into()], window: 4 };
+        let tmo = Chain::target_only("m2");
+        let s_m0 = s.predict_effective_time(&c_m0, &prof, &sim);
+        let s_m1 = s.predict_effective_time(&c_m1, &prof, &sim);
+        let s_t = s.predict_effective_time(&tmo, &prof, &sim);
+        // same acceptance, cheaper draft -> better
+        assert!(s_m0.predicted_eff_s < s_m1.predicted_eff_s);
+        // good acceptance -> beats TMO
+        assert!(s_m0.predicted_eff_s < s_t.predicted_eff_s);
+        assert!(!s_m0.cold && !s_t.cold);
+    }
+
+    #[test]
+    fn low_acceptance_falls_back_to_target_only() {
+        let s = Scheduler::new(manifest(), cfg(), 1);
+        let mut prof = Profiler::new(1.0);
+        let mut sim = SimilarityTracker::new(1.0);
+        let k = |m: &str, kind, w| FnKey { model: m.into(), kind,
+                                           batch: 4, window: w };
+        prof.record_call(&k("m2", FnKind::Decode, 0),
+                         Duration::from_millis(100));
+        for m in ["m0", "m1"] {
+            prof.record_call(&k(m, FnKind::Draft, 4),
+                             Duration::from_millis(90));
+            prof.record_call(&k(m, FnKind::Draft, 8),
+                             Duration::from_millis(180));
+            sim.observe_acceptance(m, "m2", 0, 4);
+        }
+        sim.observe_acceptance("m0", "m1", 0, 4);
+        prof.record_call(&k("m1", FnKind::Verify, 4),
+                         Duration::from_millis(70));
+        prof.record_call(&k("m1", FnKind::Verify, 8),
+                         Duration::from_millis(140));
+        prof.record_call(&k("m2", FnKind::Verify, 4),
+                         Duration::from_millis(110));
+        prof.record_call(&k("m2", FnKind::Verify, 8),
+                         Duration::from_millis(220));
+        let best = &s.score_all(&prof, &sim)[0];
+        assert_eq!(best.chain, Chain::target_only("m2"),
+                   "got {:?}", best.chain);
+    }
+
+    fn warm_profiler(s: &Scheduler) -> (Profiler, SimilarityTracker) {
+        // measure every key any candidate could use (incl. the drafter
+        // catch-up verifies), so nothing is cold
+        let mut prof = Profiler::new(1.0);
+        let sim = SimilarityTracker::new(1.0);
+        for c in s.candidate_chains() {
+            if c.is_speculative() {
+                prof.record_call(&FnKey { model: c.models[0].clone(),
+                                          kind: FnKind::Draft, batch: 4,
+                                          window: c.window },
+                                 Duration::from_millis(10));
+                for m in &c.models {
+                    prof.record_call(&FnKey { model: m.clone(),
+                                              kind: FnKind::Verify, batch: 4,
+                                              window: c.window },
+                                     Duration::from_millis(20));
+                }
+            } else {
+                prof.record_call(&FnKey { model: c.target().into(),
+                                          kind: FnKind::Decode, batch: 4,
+                                          window: 0 },
+                                 Duration::from_millis(30));
+            }
+        }
+        (prof, sim)
+    }
+
+    #[test]
+    fn cold_chains_are_forced_first_then_eps_applies() {
+        // cold start: with nothing measured, select() must explore
+        let mut c = cfg();
+        c.explore_eps = 0.0;
+        let mut s = Scheduler::new(manifest(), c, 7);
+        let prof = Profiler::new(1.0);
+        let sim = SimilarityTracker::new(1.0);
+        let first = s.select(&prof, &sim);
+        assert!(s.explorations >= 1, "cold chain not explored");
+        assert!(first.is_speculative() || first.models.len() == 1);
+    }
+
+    #[test]
+    fn exploration_rate_is_respected_when_warm() {
+        let mut c = cfg();
+        c.explore_eps = 1.0;
+        let mut s = Scheduler::new(manifest(), c, 7);
+        let (prof, sim) = warm_profiler(&s);
+        for _ in 0..10 {
+            let _ = s.select(&prof, &sim);
+        }
+        assert_eq!(s.explorations, 10);
+        let mut c = cfg();
+        c.explore_eps = 0.0;
+        let mut s = Scheduler::new(manifest(), c, 7);
+        let (prof, sim) = warm_profiler(&s);
+        for _ in 0..10 {
+            let _ = s.select(&prof, &sim);
+        }
+        assert_eq!(s.explorations, 0);
+        // warm + greedy: always the predicted optimum
+        let best = s.score_all(&prof, &sim)[0].chain.clone();
+        assert_eq!(s.select(&prof, &sim), best);
+    }
+
+    /// Property (Eq. 7): with costs held fixed, higher acceptance must
+    /// never predict a worse (higher) effective time, and raising any
+    /// level's cost must never predict a better one.
+    #[test]
+    fn property_teff_monotone_in_alpha_and_cost() {
+        use crate::rng::Rng;
+        let s = Scheduler::new(manifest(), cfg(), 1);
+        let mut rng = Rng::new(99);
+        for _ in 0..300 {
+            let w = if rng.below(2) == 0 { 4 } else { 8 };
+            let chain = Chain { models: vec!["m0".into(), "m2".into()],
+                                window: w };
+            let mut prof = Profiler::new(1.0);
+            let k = |m: &str, kind, wdw| FnKey { model: m.into(), kind,
+                                                 batch: 4, window: wdw };
+            let d_ms = 1 + rng.below(50) as u64;
+            let v_ms = 1 + rng.below(200) as u64;
+            prof.record_call(&k("m0", FnKind::Draft, w),
+                             Duration::from_millis(d_ms));
+            prof.record_call(&k("m2", FnKind::Verify, w),
+                             Duration::from_millis(v_ms));
+            let mut lo = SimilarityTracker::new(1.0);
+            let mut hi = SimilarityTracker::new(1.0);
+            let a = rng.below(w);
+            lo.observe_acceptance("m0", "m2", a, w);
+            hi.observe_acceptance("m0", "m2", a + 1, w);
+            let t_lo = s.predict_effective_time(&chain, &prof, &lo);
+            let t_hi = s.predict_effective_time(&chain, &prof, &hi);
+            assert!(t_hi.predicted_eff_s <= t_lo.predicted_eff_s + 1e-12,
+                    "alpha up must not raise T_eff: {t_lo:?} {t_hi:?}");
+            // cost monotonicity
+            let mut prof2 = Profiler::new(1.0);
+            prof2.record_call(&k("m0", FnKind::Draft, w),
+                              Duration::from_millis(d_ms + 10));
+            prof2.record_call(&k("m2", FnKind::Verify, w),
+                              Duration::from_millis(v_ms));
+            let t_cost = s.predict_effective_time(&chain, &prof2, &lo);
+            assert!(t_cost.predicted_eff_s >= t_lo.predicted_eff_s - 1e-12);
+        }
+    }
+
+    /// Property (Alg. 1): the selected chain is always a scored candidate,
+    /// and with exploration off + warm metrics it is the argmin.
+    #[test]
+    fn property_selection_soundness() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(7);
+        for trial in 0..50 {
+            let mut c = cfg();
+            c.explore_eps = if trial % 2 == 0 { 0.0 } else { 0.5 };
+            let mut s = Scheduler::new(manifest(), c.clone(), trial);
+            let mut prof = Profiler::new(1.0);
+            let mut sim = SimilarityTracker::new(1.0);
+            // randomize a fully-warm profile
+            for m in ["m0", "m1", "m2"] {
+                prof.record_call(
+                    &FnKey { model: m.into(), kind: FnKind::Decode,
+                             batch: 4, window: 0 },
+                    Duration::from_millis(1 + rng.below(100) as u64));
+                for w in [4usize, 8] {
+                    prof.record_call(
+                        &FnKey { model: m.into(), kind: FnKind::Draft,
+                                 batch: 4, window: w },
+                        Duration::from_millis(1 + rng.below(100) as u64));
+                    prof.record_call(
+                        &FnKey { model: m.into(), kind: FnKind::Verify,
+                                 batch: 4, window: w },
+                        Duration::from_millis(1 + rng.below(100) as u64));
+                }
+            }
+            for a in ["m0", "m1"] {
+                for b in ["m1", "m2"] {
+                    sim.observe_acceptance(a, b, rng.below(5), 4);
+                }
+            }
+            let candidates: Vec<String> = s.candidate_chains().iter()
+                .map(|c| c.label()).collect();
+            let picked = s.select(&prof, &sim);
+            assert!(candidates.contains(&picked.label()),
+                    "selected non-candidate {}", picked.label());
+            if c.explore_eps == 0.0 {
+                let best = s.score_all(&prof, &sim)[0].chain.clone();
+                assert_eq!(picked, best);
+            }
+        }
+    }
+
+    #[test]
+    fn deeper_chain_wins_when_intermediate_filter_is_cheap_and_good() {
+        let s = Scheduler::new(manifest(), cfg(), 1);
+        let mut prof = Profiler::new(1.0);
+        let mut sim = SimilarityTracker::new(1.0);
+        let k = |m: &str, kind, w| FnKey { model: m.into(), kind,
+                                           batch: 4, window: w };
+        prof.record_call(&k("m2", FnKind::Decode, 0),
+                         Duration::from_millis(100));
+        prof.record_call(&k("m0", FnKind::Draft, 8),
+                         Duration::from_millis(10));
+        prof.record_call(&k("m1", FnKind::Verify, 8),
+                         Duration::from_millis(15));
+        prof.record_call(&k("m2", FnKind::Verify, 8),
+                         Duration::from_millis(120));
+        // perfect cascade
+        sim.observe_acceptance("m0", "m1", 8, 8);
+        sim.observe_acceptance("m1", "m2", 8, 8);
+        sim.observe_acceptance("m0", "m2", 8, 8);
+        let deep = Chain { models: vec!["m0".into(), "m1".into(),
+                                        "m2".into()], window: 8 };
+        let flat = Chain { models: vec!["m0".into(), "m2".into()],
+                           window: 8 };
+        let sd = s.predict_effective_time(&deep, &prof, &sim);
+        let sf = s.predict_effective_time(&flat, &prof, &sim);
+        // with near-1 acceptance everywhere, the extra intermediate level
+        // costs 15ms for no token gain -> flat should win ...
+        assert!(sf.predicted_eff_s < sd.predicted_eff_s);
+        // ... but when m0->m2 direct acceptance is poor while the cascade
+        // m0->m1->m2 stays strong, the deep chain wins.
+        sim.observe_acceptance("m0", "m2", 1, 8);
+        let sd = s.predict_effective_time(&deep, &prof, &sim);
+        let sf = s.predict_effective_time(&flat, &prof, &sim);
+        assert!(sd.predicted_eff_s < sf.predicted_eff_s,
+                "deep {} vs flat {}", sd.predicted_eff_s, sf.predicted_eff_s);
+    }
+}

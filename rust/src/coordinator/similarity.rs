@@ -1,0 +1,226 @@
+//! Predictive similarity tracking (paper §4.2, Eq. 5–6).
+//!
+//! During verification the coordinator holds both the proposer's
+//! distribution q (from the level below) and the verifier's distribution p
+//! for the same positions; their Total Variation Distance is folded into a
+//! per-(proposer, verifier) EMA:
+//!
+//!   DTV(p, q)       = ½ Σ_v |p(v) − q(v)|                       (Eq. 5)
+//!   SimScore(i, j)  = 1 − E[DTV(p_i, p_j)]                      (Eq. 6)
+//!
+//! The acceptance probability fed to the chain-efficiency predictor is
+//! α̂_ij = f(SimScore) through a calibrated sigmoid — refined further by a
+//! direct empirical acceptance-rate EMA once real verification outcomes
+//! exist (the empirical signal dominates when present).
+use std::collections::HashMap;
+
+use crate::rng::softmax;
+
+/// DTV between two probability vectors (Eq. 5).
+pub fn dtv(p: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    0.5 * p.iter().zip(q)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .sum::<f64>()
+}
+
+/// DTV computed from raw logits.
+pub fn dtv_logits(pl: &[f32], ql: &[f32]) -> f64 {
+    dtv(&softmax(pl), &softmax(ql))
+}
+
+/// Calibrated sigmoid mapping SimScore -> acceptance probability
+/// (paper: "α_ij ≈ f(SimScore)", f a calibrated sigmoid). Calibration
+/// chosen so Sim ≈ 0.45 maps to α ≈ 0.5 and saturates by Sim ≈ 0.95.
+pub fn accept_from_sim(sim: f64) -> f64 {
+    let a = 6.0;
+    let b = 0.45;
+    (1.0 / (1.0 + (-a * (sim - b)).exp())).clamp(0.02, 0.98)
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PairStat {
+    sim_ema: f64,
+    sim_n: u64,
+    acc_ema: f64,
+    acc_n: u64,
+}
+
+/// EMA state for every ordered (proposer, verifier) pair.
+#[derive(Debug)]
+pub struct SimilarityTracker {
+    alpha: f64,
+    pairs: HashMap<(String, String), PairStat>,
+    /// α estimate used before any observation exists. Optimistic by
+    /// default so unexplored chains get tried; can be seeded from the
+    /// manifest's offline similarity (SSD-Tuned / warm start).
+    optimistic_prior: f64,
+    priors: HashMap<(String, String), f64>,
+}
+
+impl SimilarityTracker {
+    pub fn new(alpha: f64) -> Self {
+        SimilarityTracker {
+            alpha,
+            pairs: HashMap::new(),
+            optimistic_prior: 0.85,
+            priors: HashMap::new(),
+        }
+    }
+
+    /// Seed a pair's prior acceptance estimate (e.g. from build-time
+    /// offline similarity measurements).
+    pub fn set_prior(&mut self, proposer: &str, verifier: &str, sim: f64) {
+        self.priors.insert((proposer.into(), verifier.into()),
+                           accept_from_sim(sim));
+    }
+
+    /// Fold one batch of per-position DTVs into the pair's SimScore EMA.
+    pub fn observe_dtv(&mut self, proposer: &str, verifier: &str,
+                       dtvs: &[f64]) {
+        if dtvs.is_empty() {
+            return;
+        }
+        let mean = dtvs.iter().sum::<f64>() / dtvs.len() as f64;
+        let sim = 1.0 - mean;
+        let e = self.pairs
+            .entry((proposer.into(), verifier.into()))
+            .or_insert(PairStat { sim_ema: sim, sim_n: 0,
+                                  acc_ema: 0.0, acc_n: 0 });
+        e.sim_ema = if e.sim_n == 0 {
+            sim
+        } else {
+            self.alpha * sim + (1.0 - self.alpha) * e.sim_ema
+        };
+        e.sim_n += 1;
+    }
+
+    /// Fold an empirical verification outcome: `accepted` of `window`
+    /// candidates survived.
+    pub fn observe_acceptance(&mut self, proposer: &str, verifier: &str,
+                              accepted: usize, window: usize) {
+        if window == 0 {
+            return;
+        }
+        let rate = accepted as f64 / window as f64;
+        let e = self.pairs
+            .entry((proposer.into(), verifier.into()))
+            .or_insert(PairStat { sim_ema: 0.0, sim_n: 0,
+                                  acc_ema: rate, acc_n: 0 });
+        e.acc_ema = if e.acc_n == 0 {
+            rate
+        } else {
+            self.alpha * rate + (1.0 - self.alpha) * e.acc_ema
+        };
+        e.acc_n += 1;
+    }
+
+    /// Current SimScore estimate (Eq. 6), if observed.
+    pub fn sim_score(&self, proposer: &str, verifier: &str) -> Option<f64> {
+        self.pairs.get(&(proposer.into(), verifier.into()))
+            .filter(|e| e.sim_n > 0)
+            .map(|e| e.sim_ema)
+    }
+
+    /// Acceptance-probability estimate α̂_ij for the scheduler: empirical
+    /// EMA when present, else f(SimScore), else prior.
+    pub fn accept_estimate(&self, proposer: &str, verifier: &str) -> f64 {
+        let key = (proposer.to_string(), verifier.to_string());
+        if let Some(e) = self.pairs.get(&key) {
+            if e.acc_n > 0 {
+                return e.acc_ema.clamp(0.01, 0.99);
+            }
+            if e.sim_n > 0 {
+                return accept_from_sim(e.sim_ema);
+            }
+        }
+        self.priors.get(&key).copied().unwrap_or(self.optimistic_prior)
+    }
+
+    /// Dump (proposer, verifier, sim, acc, n) rows for diagnostics.
+    pub fn table(&self) -> Vec<(String, String, f64, f64, u64)> {
+        let mut v: Vec<_> = self.pairs.iter()
+            .map(|((a, b), e)| (a.clone(), b.clone(), e.sim_ema, e.acc_ema,
+                                e.sim_n + e.acc_n))
+            .collect();
+        v.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtv_basic_properties() {
+        let p = [0.5f32, 0.5, 0.0];
+        let q = [0.0f32, 0.5, 0.5];
+        assert!((dtv(&p, &q) - 0.5).abs() < 1e-6);
+        assert!(dtv(&p, &p) < 1e-9);
+        // symmetry (the paper's stated reason for choosing DTV)
+        assert!((dtv(&p, &q) - dtv(&q, &p)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dtv_logits_matches_manual_softmax() {
+        let pl = [1.0f32, 0.0, -1.0];
+        let ql = [0.0f32, 0.0, 0.0];
+        let d = dtv_logits(&pl, &ql);
+        assert!(d > 0.0 && d < 1.0);
+        assert!(dtv_logits(&pl, &pl) < 1e-9);
+    }
+
+    #[test]
+    fn sigmoid_mapping_is_monotone_and_clamped() {
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let s = i as f64 / 20.0;
+            let a = accept_from_sim(s);
+            assert!(a >= prev);
+            assert!((0.02..=0.98).contains(&a));
+            prev = a;
+        }
+        assert!(accept_from_sim(0.9) > 0.9);
+        assert!(accept_from_sim(0.1) < 0.2);
+    }
+
+    #[test]
+    fn estimates_prefer_empirical_over_sim_over_prior() {
+        let mut t = SimilarityTracker::new(0.5);
+        // nothing observed: optimistic prior
+        assert!((t.accept_estimate("a", "b") - 0.85).abs() < 1e-9);
+        t.set_prior("a", "b", 0.5);
+        let with_prior = t.accept_estimate("a", "b");
+        assert!(with_prior < 0.85);
+        // DTV observations switch to f(SimScore)
+        t.observe_dtv("a", "b", &[0.4, 0.6]);
+        assert_eq!(t.sim_score("a", "b"), Some(0.5));
+        let sim_based = t.accept_estimate("a", "b");
+        assert!((sim_based - accept_from_sim(0.5)).abs() < 1e-9);
+        // empirical acceptance dominates everything
+        t.observe_acceptance("a", "b", 1, 4);
+        assert!((t.accept_estimate("a", "b") - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_tracks_shifts() {
+        let mut t = SimilarityTracker::new(0.5);
+        for _ in 0..12 {
+            t.observe_acceptance("a", "b", 4, 4);
+        }
+        assert!(t.accept_estimate("a", "b") > 0.95);
+        for _ in 0..12 {
+            t.observe_acceptance("a", "b", 0, 4);
+        }
+        assert!(t.accept_estimate("a", "b") < 0.05);
+    }
+
+    #[test]
+    fn empty_observations_are_ignored() {
+        let mut t = SimilarityTracker::new(0.5);
+        t.observe_dtv("a", "b", &[]);
+        t.observe_acceptance("a", "b", 0, 0);
+        assert!((t.accept_estimate("a", "b") - 0.85).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,468 @@
+//! One multi-level speculative step (paper §4.3 + DESIGN.md §6), plus the
+//! RollbackProcessor logic and per-model catch-up.
+//!
+//! Flow for a chain [M_1, ..., M_N = M_t] with window w:
+//!
+//!   1. catch-up: every chain model's cache is brought to the committed
+//!      frontier (C-1 tokens forwarded) via chunked verify calls;
+//!   2. M_1 drafts w candidates (greedy scan on-device);
+//!   3. for j = 2..N, M_j runs one parallel verify over the surviving
+//!      block [base, c_1..c_k, bonus_{j-1}, …]; acceptance is judged under
+//!      the configured rule, a bonus token is appended at the cut, and the
+//!      surviving block feeds the next level;
+//!   4. only tokens accepted (plus bonus) by M_N are committed — output
+//!      quality is the target's by construction;
+//!   5. rollback: every chain model's validity mask is advanced exactly to
+//!      its prefix agreement with the committed tokens (logical rollback
+//!      of everything else, paper Eq. 8).
+//!
+//! Along the way the verifier/proposal distributions at the same positions
+//! feed DTV similarity observations (Eq. 5-6) and empirical acceptance
+//! EMAs to the scheduler's tracker.
+use anyhow::{bail, Result};
+
+use crate::config::AcceptRule;
+use crate::coordinator::executor::Executor;
+use crate::coordinator::profiler::Profiler;
+use crate::coordinator::scheduler::Chain;
+use crate::coordinator::similarity::{dtv_logits, SimilarityTracker};
+use crate::rng::{argmax, softmax, Rng};
+use crate::state::StateManager;
+
+/// Everything a step needs, borrowed from the engine.
+pub struct StepCtx<'a> {
+    pub exec: &'a Executor,
+    pub prof: &'a mut Profiler,
+    pub sim: &'a mut SimilarityTracker,
+    pub states: &'a mut StateManager,
+    pub batch: usize,
+    pub vocab: usize,
+    pub rule: AcceptRule,
+    pub rng: &'a mut Rng,
+}
+
+/// Result of one step: tokens committed per slot (empty for idle slots),
+/// and per-level accepted counts for diagnostics.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    pub appended: Vec<Vec<i32>>,
+    pub accepted_per_level: Vec<Vec<usize>>,
+}
+
+/// Per-slot view the engine passes in: committed token sequence of every
+/// *active* slot (None = idle slot).
+pub type SlotSeqs<'a> = Vec<Option<&'a [i32]>>;
+
+fn base_tokens(slots: &SlotSeqs, pad: i32) -> Vec<i32> {
+    slots.iter()
+        .map(|s| s.map_or(pad, |c| *c.last().unwrap()))
+        .collect()
+}
+
+fn lens_of(states: &StateManager, model: &str, batch: usize) -> Vec<i32> {
+    let st = states.get(model).unwrap();
+    (0..batch).map(|b| st.mask.valid_len(b) as i32).collect()
+}
+
+/// Bring `model`'s cache to the committed frontier (valid == C-1) on every
+/// active slot, using chunked verify calls of up to w+1 tokens.
+pub fn catch_up(ctx: &mut StepCtx, model: &str, window: usize,
+                slots: &SlotSeqs) -> Result<usize> {
+    let w1 = window + 1;
+    let mut calls = 0;
+    loop {
+        let mut deficit = 0usize;
+        {
+            let st = ctx.states.get(model)?;
+            for (b, s) in slots.iter().enumerate() {
+                if let Some(c) = s {
+                    let target = c.len() - 1;
+                    deficit = deficit.max(
+                        target.saturating_sub(st.mask.valid_len(b)));
+                }
+            }
+        }
+        if deficit == 0 {
+            return Ok(calls);
+        }
+        // Build one batch chunk: each active slot advances by up to w+1 of
+        // its own pending tokens; already-caught-up slots harmlessly
+        // re-forward their base token (identical K/V rewrite).
+        let mut block = vec![0i32; ctx.batch * w1];
+        let mut advance = vec![0usize; ctx.batch];
+        let lens = lens_of(ctx.states, model, ctx.batch);
+        for (b, s) in slots.iter().enumerate() {
+            if let Some(c) = s {
+                let v = lens[b] as usize;
+                let n = (c.len() - 1 - v).min(w1);
+                for i in 0..w1 {
+                    block[b * w1 + i] = c[(v + i).min(c.len() - 1)];
+                }
+                advance[b] = n;
+            }
+        }
+        let st = ctx.states.get_mut(model)?;
+        let _logits = ctx.exec.verify(
+            ctx.prof, model, ctx.batch, window, &block, &mut st.kv, &lens)?;
+        for (b, s) in slots.iter().enumerate() {
+            if s.is_some() && advance[b] > 0 {
+                st.mask.append_speculative(b, w1);
+                st.mask.promote(b, advance[b]);
+            }
+        }
+        calls += 1;
+        if calls > 64 {
+            bail!("catch-up did not converge for {model}");
+        }
+    }
+}
+
+/// Acceptance decision for one candidate under the configured rule.
+/// `p_row` is the verifier's logits; `q_row` the proposer's (None => the
+/// proposer is trusted blindly — not used in practice).
+fn accept_one(rule: AcceptRule, rng: &mut Rng, cand: i32, p_row: &[f32],
+              q_row: Option<&[f32]>) -> bool {
+    match rule {
+        AcceptRule::Greedy => argmax(p_row) as i32 == cand,
+        AcceptRule::Probabilistic { .. } => {
+            let p = softmax(p_row);
+            let q = q_row.map(softmax);
+            let pq = match &q {
+                Some(q) => (p[cand as usize] / q[cand as usize].max(1e-9))
+                    .min(1.0),
+                None => 1.0,
+            };
+            (rng.f64() as f32) < pq
+        }
+    }
+}
+
+/// Bonus token at the cut position under the configured rule.
+fn bonus_token(rule: AcceptRule, rng: &mut Rng, p_row: &[f32],
+               q_row: Option<&[f32]>, rejected: bool) -> i32 {
+    match rule {
+        AcceptRule::Greedy => argmax(p_row) as i32,
+        AcceptRule::Probabilistic { .. } => {
+            let p = softmax(p_row);
+            if rejected {
+                if let Some(ql) = q_row {
+                    // residual distribution norm(max(0, p - q))
+                    let q = softmax(ql);
+                    let resid: Vec<f32> = p.iter().zip(&q)
+                        .map(|(a, b)| (a - b).max(0.0))
+                        .collect();
+                    if resid.iter().sum::<f32>() > 1e-9 {
+                        return rng.categorical(&resid) as i32;
+                    }
+                }
+            }
+            rng.categorical(&p) as i32
+        }
+    }
+}
+
+/// Execute one full chain step. `slots[b] = Some(committed)` for active
+/// slots. Commits via the returned outcome; masks are synchronized here.
+pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
+                     pad: i32) -> Result<StepOutcome> {
+    if chain.models.len() == 1 {
+        return run_tmo_step(ctx, chain.target(), slots, pad);
+    }
+    let w = chain.window;
+    let w1 = w + 1;
+    let v = ctx.vocab;
+    let n_levels = chain.models.len();
+
+    for m in &chain.models {
+        catch_up(ctx, m, w, slots)?;
+    }
+    let base = base_tokens(slots, pad);
+
+    // --- Draft (level 1) -------------------------------------------------
+    let drafter = &chain.models[0];
+    let lens1 = lens_of(ctx.states, drafter, ctx.batch);
+    let (d_toks, d_logits) = {
+        let st = ctx.states.get_mut(drafter)?;
+        let out = ctx.exec.draft(ctx.prof, drafter, ctx.batch, w, &base,
+                                 &mut st.kv, &lens1)?;
+        for (b, s) in slots.iter().enumerate() {
+            if s.is_some() {
+                // base + w-1 drafted K/V rows were written
+                st.mask.append_speculative(b, w);
+            }
+        }
+        out
+    };
+
+    // Per-slot block state threaded through the levels.
+    // block[b] = [base, candidates...] (w1 long, padded); cand_len[b] =
+    // number of real candidates; q_rows[b][i] = proposer logits for
+    // candidate i; written[b][model] tracked for mask sync.
+    let mut block: Vec<Vec<i32>> = Vec::with_capacity(ctx.batch);
+    let mut cand_len = vec![0usize; ctx.batch];
+    let mut q_rows: Vec<Vec<Vec<f32>>> = vec![Vec::new(); ctx.batch];
+    for (b, s) in slots.iter().enumerate() {
+        let mut row = vec![pad; w1];
+        row[0] = base[b];
+        if s.is_some() {
+            for i in 0..w {
+                row[1 + i] = d_toks[b * w + i];
+            }
+            cand_len[b] = w;
+            q_rows[b] = (0..w)
+                .map(|i| d_logits[(b * w + i) * v..(b * w + i + 1) * v]
+                     .to_vec())
+                .collect();
+        }
+        block.push(row);
+    }
+    // tokens each model has physically written past base (for mask sync):
+    // drafter wrote its first w-1 drafts' K/V
+    let mut written: Vec<(String, Vec<Vec<i32>>)> = Vec::new();
+    written.push((drafter.clone(),
+                  (0..ctx.batch).map(|b| {
+                      if slots[b].is_some() {
+                          block[b][1..w.max(1)].to_vec() // w-1 tokens
+                      } else {
+                          Vec::new()
+                      }
+                  }).collect()));
+
+    let mut outcome = StepOutcome {
+        appended: vec![Vec::new(); ctx.batch],
+        accepted_per_level: Vec::new(),
+    };
+
+    // --- Verification levels 2..N ---------------------------------------
+    for j in 1..n_levels {
+        let verifier = chain.models[j].clone();
+        let proposer = chain.models[j - 1].clone();
+        let is_final = j == n_levels - 1;
+        let lens = lens_of(ctx.states, &verifier, ctx.batch);
+        let flat: Vec<i32> = block.iter().flatten().copied().collect();
+        let p_flat = {
+            let st = ctx.states.get_mut(&verifier)?;
+            let out = ctx.exec.verify(ctx.prof, &verifier, ctx.batch, w,
+                                      &flat, &mut st.kv, &lens)?;
+            for (b, s) in slots.iter().enumerate() {
+                if s.is_some() {
+                    st.mask.append_speculative(b, w1);
+                }
+            }
+            out
+        };
+        written.push((verifier.clone(),
+                      (0..ctx.batch).map(|b| {
+                          if slots[b].is_some() {
+                              block[b][1..].to_vec()
+                          } else {
+                              Vec::new()
+                          }
+                      }).collect()));
+
+        let mut accepted_row = vec![0usize; ctx.batch];
+        // similarity observations are aggregated across the batch and
+        // folded ONCE per level per step: per-slot updates would give the
+        // EMA batch-many twitchy samples per step and destabilize the
+        // scheduler at large batch sizes
+        let mut agg_dtvs: Vec<f64> = Vec::new();
+        let mut agg_accepted = 0usize;
+        let mut agg_cands = 0usize;
+        for b in 0..ctx.batch {
+            if slots[b].is_none() {
+                continue;
+            }
+            let p_row = |i: usize| &p_flat[(b * w1 + i) * v
+                                           ..(b * w1 + i + 1) * v];
+            // acceptance scan over the real candidates
+            let mut k = 0;
+            while k < cand_len[b] {
+                let cand = block[b][1 + k];
+                let q = q_rows[b].get(k).map(|r| r.as_slice());
+                if accept_one(ctx.rule, ctx.rng, cand, p_row(k), q) {
+                    k += 1;
+                } else {
+                    break;
+                }
+            }
+            accepted_row[b] = k;
+            // similarity observations (Eq. 5-6) on compared positions
+            agg_dtvs.extend((0..cand_len[b])
+                .filter_map(|i| q_rows[b].get(i)
+                            .map(|q| dtv_logits(p_row(i), q))));
+            agg_accepted += k;
+            agg_cands += cand_len[b];
+
+            let rejected = k < cand_len[b];
+            let q_at_cut = q_rows[b].get(k).map(|r| r.as_slice());
+            let bonus = bonus_token(ctx.rule, ctx.rng, p_row(k), q_at_cut,
+                                    rejected);
+            if is_final {
+                // Commit: accepted prefix + the target's bonus token.
+                let mut out: Vec<i32> = block[b][1..1 + k].to_vec();
+                out.push(bonus);
+                outcome.appended[b] = out;
+            } else {
+                // Survivors for the next level: accepted prefix (+ bonus
+                // when there is room — a full acceptance already fills w).
+                let mut nc: Vec<i32> = block[b][1..1 + k].to_vec();
+                let mut nq: Vec<Vec<f32>> = (0..k).map(|i| p_row(i).to_vec())
+                    .collect();
+                if nc.len() < w {
+                    nc.push(bonus);
+                    nq.push(p_row(k).to_vec());
+                }
+                cand_len[b] = nc.len();
+                q_rows[b] = nq;
+                let mut row = vec![pad; w1];
+                row[0] = base[b];
+                row[1..1 + nc.len()].copy_from_slice(&nc);
+                block[b] = row;
+            }
+        }
+        ctx.sim.observe_dtv(&proposer, &verifier, &agg_dtvs);
+        ctx.sim.observe_acceptance(&proposer, &verifier, agg_accepted,
+                                   agg_cands);
+        outcome.accepted_per_level.push(accepted_row);
+    }
+
+    // --- Rollback / mask synchronization (RollbackProcessor) ------------
+    for (model, wt) in &written {
+        let st = ctx.states.get_mut(model)?;
+        for (b, s) in slots.iter().enumerate() {
+            if s.is_none() {
+                continue;
+            }
+            let committed = &outcome.appended[b];
+            let m = committed.len();
+            // prefix agreement between what this model physically wrote
+            // and what was finally committed, capped at m-1 (the last
+            // committed token is re-forwarded next step by convention)
+            let mut match_len = 0;
+            while match_len < wt[b].len().min(m.saturating_sub(1))
+                && wt[b][match_len] == committed[match_len] {
+                match_len += 1;
+            }
+            // base token (+ agreed prefix) become valid; the rest of the
+            // speculative writes stay stale (mask=0, paper Fig. 3)
+            st.mask.promote(b, 1 + match_len);
+        }
+    }
+
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_peaked(v: usize, at: usize, height: f32) -> Vec<f32> {
+        let mut l = vec![0.0f32; v];
+        l[at] = height;
+        l
+    }
+
+    #[test]
+    fn greedy_accepts_exactly_argmax() {
+        let mut rng = Rng::new(1);
+        let p = logits_peaked(16, 5, 4.0);
+        assert!(accept_one(AcceptRule::Greedy, &mut rng, 5, &p, None));
+        assert!(!accept_one(AcceptRule::Greedy, &mut rng, 6, &p, None));
+    }
+
+    #[test]
+    fn greedy_bonus_is_argmax() {
+        let mut rng = Rng::new(1);
+        let p = logits_peaked(16, 9, 3.0);
+        assert_eq!(bonus_token(AcceptRule::Greedy, &mut rng, &p, None, true),
+                   9);
+        assert_eq!(bonus_token(AcceptRule::Greedy, &mut rng, &p, None,
+                               false), 9);
+    }
+
+    #[test]
+    fn probabilistic_always_accepts_when_p_equals_q() {
+        let mut rng = Rng::new(2);
+        let rule = AcceptRule::Probabilistic { seed: 2 };
+        let p = logits_peaked(16, 3, 2.0);
+        for cand in 0..16 {
+            assert!(accept_one(rule, &mut rng, cand, &p, Some(&p)),
+                    "p==q must accept candidate {cand} w.p. 1");
+        }
+    }
+
+    #[test]
+    fn probabilistic_acceptance_rate_tracks_min_p_over_q() {
+        // q puts high mass on token 0; p puts low mass there ->
+        // acceptance of token 0 should approximate p0/q0
+        let mut rng = Rng::new(3);
+        let rule = AcceptRule::Probabilistic { seed: 3 };
+        let q = logits_peaked(8, 0, 2.0);
+        let p = logits_peaked(8, 1, 2.0);
+        let (pv, qv) = (softmax(&p), softmax(&q));
+        let want = (pv[0] / qv[0]).min(1.0) as f64;
+        let n = 20_000;
+        let acc = (0..n)
+            .filter(|_| accept_one(rule, &mut rng, 0, &p, Some(&q)))
+            .count() as f64 / n as f64;
+        assert!((acc - want).abs() < 0.02, "acc {acc} want {want}");
+    }
+
+    #[test]
+    fn probabilistic_rejection_bonus_avoids_q_dominated_tokens() {
+        // residual norm(max(0, p-q)) puts zero mass where q >= p: with
+        // p peaked at 1 and q peaked at 0, a rejection bonus must never
+        // be token 0
+        let mut rng = Rng::new(4);
+        let rule = AcceptRule::Probabilistic { seed: 4 };
+        let q = logits_peaked(8, 0, 4.0);
+        let p = logits_peaked(8, 1, 4.0);
+        for _ in 0..500 {
+            let b = bonus_token(rule, &mut rng, &p, Some(&q), true);
+            assert_ne!(b, 0, "bonus sampled from residual hit q's peak");
+        }
+    }
+
+    #[test]
+    fn base_tokens_pads_idle_slots() {
+        let seq0 = [1i32, 5, 9];
+        let seq1 = [1i32, 7];
+        let slots: SlotSeqs = vec![Some(&seq0), None, Some(&seq1)];
+        assert_eq!(base_tokens(&slots, 0), vec![9, 0, 7]);
+    }
+}
+
+/// Target-only autoregressive step (TMO baseline; also the [M_t] chain the
+/// adaptive scheduler can fall back to).
+fn run_tmo_step(ctx: &mut StepCtx, target: &str, slots: &SlotSeqs, pad: i32)
+                -> Result<StepOutcome> {
+    // TMO still needs catch-up (right after admission prefill the cache is
+    // already at C-1, so this is a no-op; after a truncating commit or a
+    // chain switch it may not be).
+    let w0 = ctx.exec.pool.manifest.windows[0];
+    catch_up(ctx, target, w0, slots)?;
+    let base = base_tokens(slots, pad);
+    let lens = lens_of(ctx.states, target, ctx.batch);
+    let st = ctx.states.get_mut(target)?;
+    let logits = ctx.exec.decode(ctx.prof, target, ctx.batch, &base,
+                                 &mut st.kv, &lens)?;
+    let v = ctx.vocab;
+    let mut outcome = StepOutcome {
+        appended: vec![Vec::new(); ctx.batch],
+        accepted_per_level: Vec::new(),
+    };
+    for (b, s) in slots.iter().enumerate() {
+        if s.is_none() {
+            continue;
+        }
+        let row = &logits[b * v..(b + 1) * v];
+        let tok = match ctx.rule {
+            AcceptRule::Greedy => argmax(row) as i32,
+            AcceptRule::Probabilistic { .. } =>
+                ctx.rng.categorical(&softmax(row)) as i32,
+        };
+        outcome.appended[b] = vec![tok];
+        st.mask.append_valid(b, 1);
+    }
+    Ok(outcome)
+}

@@ -1,0 +1,30 @@
+//! # SpecRouter
+//!
+//! Reproduction of "SpecRouter: Adaptive Routing for Multi-Level
+//! Speculative Decoding in Large Language Models" (Wu et al., 2025) as a
+//! three-layer rust + JAX + Pallas system (see DESIGN.md):
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: adaptive model
+//!   chain scheduling, collaborative multi-level verification, and
+//!   synchronized KV-cache state management, plus batching, workloads,
+//!   metrics, and a TCP front-end.
+//! * **Layer 2** — the JAX model family (`python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! * **Layer 1** — the Pallas chunk-attention kernel
+//!   (`python/compile/kernels/attention.py`) embedded in those artifacts.
+//!
+//! Python never runs at serving time: after `make artifacts` the binary is
+//! self-contained.
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod json;
+pub mod metrics;
+pub mod model_pool;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod state;
+pub mod workload;
+
+pub use config::EngineConfig;

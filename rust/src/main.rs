@@ -1,0 +1,303 @@
+//! SpecRouter CLI — the leader entrypoint.
+//!
+//! Subcommands (no external CLI crate is available offline; parsing is
+//! hand-rolled):
+//!   info                         manifest + device placement report
+//!   datasets                     the Table-1 dataset summary
+//!   generate [opts]              one prompt through the engine
+//!   serve [opts]                 drive a Poisson workload, print metrics
+//!   chains [opts]                scored candidate chains (paper Fig. 2)
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use specrouter::config::{AcceptRule, EngineConfig, Mode};
+use specrouter::coordinator::ChainRouter;
+use specrouter::metrics;
+use specrouter::model_pool::ModelPool;
+use specrouter::workload::{open_loop_trace, ArrivalSpec, DatasetGen};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig> {
+    let art = flags.get("artifacts").cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let mut cfg = EngineConfig::new(PathBuf::from(art));
+    if let Some(b) = flags.get("batch") {
+        cfg.batch = b.parse().context("--batch")?;
+    }
+    if let Some(w) = flags.get("window") {
+        cfg.window = w.parse().context("--window")?;
+    }
+    if let Some(t) = flags.get("target") {
+        cfg.target = t.clone();
+    }
+    if let Some(s) = flags.get("slo-ms") {
+        cfg.slo_ms = s.parse().context("--slo-ms")?;
+    }
+    if flags.contains_key("offline-prior") {
+        cfg.offline_sim_prior = true;
+    }
+    if let Some(seed) = flags.get("sample-seed") {
+        cfg.rule = AcceptRule::Probabilistic {
+            seed: seed.parse().context("--sample-seed")?,
+        };
+    }
+    cfg.mode = match flags.get("mode").map(|s| s.as_str()) {
+        None | Some("adaptive") => Mode::Adaptive,
+        Some("tmo") => Mode::Tmo,
+        Some(chain) => {
+            let models: Vec<String> = chain.split('>')
+                .map(|s| s.trim().to_string())
+                .collect();
+            Mode::Fixed { chain: models, window: cfg.window }
+        }
+    };
+    Ok(cfg)
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = engine_config(flags)?;
+    let pool = ModelPool::open(&cfg.art_dir)?;
+    let m = &pool.manifest;
+    println!("platform: {} ({} device(s))", pool.runtime.platform(),
+             pool.runtime.device_count());
+    println!("vocab={} seq={} prefill={} windows={:?} batches={:?}",
+             m.vocab, m.seq, m.prefill, m.windows, m.batches);
+    println!("\nmodel pool (by capability):");
+    for name in m.models_by_capability() {
+        let mm = &m.models[&name];
+        pool.register(&name)?;
+        println!("  {name}: d={} layers={} heads={} params={} ({:.1} MiB \
+                  weights)", mm.d, mm.layers, mm.heads, mm.param_count,
+                 mm.weight_bytes() as f64 / (1 << 20) as f64);
+    }
+    println!("\nplacement:");
+    for (dev, residents) in pool.placement() {
+        if residents.is_empty() {
+            continue;
+        }
+        let names: Vec<String> = residents.iter()
+            .map(|(n, b)| format!("{n} ({:.1} MiB)",
+                                  *b as f64 / (1 << 20) as f64))
+            .collect();
+        println!("  {dev}: {}", names.join(", "));
+    }
+    if !m.similarity.is_empty() {
+        println!("\noffline SimScore (build-time ground truth):");
+        for (k, v) in &m.similarity {
+            if v < &1.0 {
+                println!("  {k}: {v:.3}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datasets(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = engine_config(flags)?;
+    let pool = ModelPool::open(&cfg.art_dir)?;
+    println!("{:<12} {:<36} {:>6} {:>8} {:>14} {:>14}",
+             "Dataset", "Type (synthetic analogue)", "p_det",
+             "size", "prompt len", "output len");
+    let kinds = [
+        ("gsm8k", "Mathematics Word Problems"),
+        ("humaneval", "Code Generation Evaluation"),
+        ("mtbench", "Multi-Turn Dialogue"),
+        ("mgsm", "Multilingual Arithmetic Reasoning"),
+    ];
+    for (name, kind) in kinds {
+        if let Some(d) = pool.manifest.datasets.get(name) {
+            let (pl, ph, gl, gh) = d.lengths;
+            println!("{:<12} {:<36} {:>6.2} {:>8} {:>10}-{:<3} {:>10}-{:<3}",
+                     name, kind, d.p_det, d.paper_size, pl, ph, gl, gh);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = engine_config(flags)?;
+    let dataset = flags.get("dataset").cloned()
+        .unwrap_or_else(|| "gsm8k".to_string());
+    let max_new: usize = flags.get("max-new")
+        .map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let seed: u64 = flags.get("seed")
+        .map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let mut router = ChainRouter::new(cfg)?;
+    let spec = router.pool.manifest.datasets.get(&dataset)
+        .with_context(|| format!("unknown dataset {dataset}"))?
+        .clone();
+    let mut gen = DatasetGen::new(spec, seed);
+    let (prompt, _) = gen.sample();
+    println!("prompt ({} tokens): {:?}", prompt.len(), prompt);
+    let t0 = Instant::now();
+    let tokens = router.generate(&dataset, &prompt, max_new)?;
+    let dt = t0.elapsed();
+    println!("generated {} tokens in {:.2}s ({:.1} tok/s): {:?}",
+             tokens.len(), dt.as_secs_f64(),
+             tokens.len() as f64 / dt.as_secs_f64(), tokens);
+    println!("\nchain selections:");
+    for (chain, n) in router.prof.selection_table() {
+        let acc = router.prof.mean_accept(&chain)
+            .map(|a| format!(" mean_accept={a:.2}"))
+            .unwrap_or_default();
+        println!("  {chain}: {n} steps{acc}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = engine_config(flags)?;
+    let dataset = flags.get("dataset").cloned()
+        .unwrap_or_else(|| "gsm8k".to_string());
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?
+        .unwrap_or(16);
+    let rate: f64 = flags.get("rate").map(|s| s.parse()).transpose()?
+        .unwrap_or(2.0);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?
+        .unwrap_or(0);
+    let slo = cfg.slo_ms;
+    let label = cfg.mode.label();
+    let mut router = ChainRouter::new(cfg)?;
+    let spec = router.pool.manifest.datasets.get(&dataset)
+        .with_context(|| format!("unknown dataset {dataset}"))?
+        .clone();
+    let mut gen = DatasetGen::new(spec, seed);
+    let trace = open_loop_trace(
+        &ArrivalSpec { rate, n_requests: n, seed }, &mut gen);
+    let start = Instant::now();
+    let reqs = specrouter::workload::poisson::requests_from_trace(
+        &trace, start);
+    // open-loop: submit when the arrival time passes, tick in between
+    let mut pending = reqs.into_iter().peekable();
+    while pending.peek().is_some() || !router.batcher.is_idle() {
+        let now = Instant::now();
+        while pending.peek().map_or(false, |r| r.arrival <= now) {
+            router.submit(pending.next().unwrap());
+        }
+        match router.tick()? {
+            Some(_) => {}
+            None => {
+                if let Some(r) = pending.peek() {
+                    let wait = r.arrival.saturating_duration_since(
+                        Instant::now());
+                    std::thread::sleep(wait.min(
+                        std::time::Duration::from_millis(5)));
+                }
+            }
+        }
+    }
+    let s = metrics::summarize(&router.finished, slo);
+    println!("{}", metrics::row(&label, &s, None));
+    println!("\nchain selections:");
+    for (chain, cnt) in router.prof.selection_table() {
+        println!("  {chain}: {cnt}");
+    }
+    println!("\nprofiler (EMA call costs):");
+    for (label, ema, n) in router.prof.call_table() {
+        println!("  {label:<24} {:8.2} ms × {n}", ema * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_chains(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = engine_config(flags)?;
+    let dataset = flags.get("dataset").cloned()
+        .unwrap_or_else(|| "gsm8k".to_string());
+    let warmup: usize = flags.get("warmup").map(|s| s.parse()).transpose()?
+        .unwrap_or(8);
+    let mut router = ChainRouter::new(cfg)?;
+    let spec = router.pool.manifest.datasets.get(&dataset)
+        .with_context(|| format!("unknown dataset {dataset}"))?
+        .clone();
+    let mut gen = DatasetGen::new(spec, 0);
+    for _ in 0..warmup {
+        let (prompt, max_new) = gen.sample();
+        router.generate(&dataset, &prompt, max_new.min(24))?;
+    }
+    println!("scored candidate chains after {warmup} warm-up requests \
+              (dataset {dataset}, batch {}):", router.cfg.batch);
+    println!("{:<22} {:>12} {:>8} {:>10} {:>10} {:>6}",
+             "chain", "T_eff(ms/tok)", "alpha", "cost(ms)", "E[tokens]",
+             "cold");
+    for s in router.sched.score_all(&router.prof, &router.sim) {
+        println!("{:<22} {:>12.2} {:>8.3} {:>10.2} {:>10.2} {:>6}",
+                 s.chain.label(), s.predicted_eff_s * 1e3, s.alpha_eff,
+                 s.cost_s * 1e3, s.expected_tokens, s.cold);
+    }
+    println!("\nsimilarity tracker:");
+    for (a, b, sim, acc, n) in router.sim.table() {
+        println!("  {a}->{b}: sim={sim:.3} acc={acc:.3} (n={n})");
+    }
+    Ok(())
+}
+
+fn cmd_serve_tcp(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = engine_config(flags)?;
+    let addr = flags.get("addr").cloned()
+        .unwrap_or_else(|| "127.0.0.1:7450".to_string());
+    let handle = specrouter::server::spawn_engine(cfg)?;
+    println!("engine up; serving JSON-lines on {addr}");
+    println!("  request:  {{\"prompt\":[1,70,71],\"max_new\":16,\
+              \"dataset\":\"gsm8k\"}}");
+    specrouter::server::serve_tcp(&addr, handle.tx.clone(), None)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "info" => cmd_info(&flags),
+        "datasets" => cmd_datasets(&flags),
+        "generate" => cmd_generate(&flags),
+        "serve" => cmd_serve(&flags),
+        "serve-tcp" => cmd_serve_tcp(&flags),
+        "chains" => cmd_chains(&flags),
+        "help" | "--help" => {
+            println!(
+                "specrouter <cmd> [--flag value ...]\n\
+                 \n\
+                 commands:\n\
+                 \x20 info       manifest + device placement\n\
+                 \x20 datasets   dataset summary (paper Table 1)\n\
+                 \x20 generate   one prompt (--dataset --max-new --mode)\n\
+                 \x20 serve      Poisson workload (--dataset --n --rate)\n\
+                 \x20 serve-tcp  JSON-lines TCP server (--addr host:port)\n\
+                 \x20 chains     scored candidate chains (paper Fig. 2)\n\
+                 \n\
+                 common flags:\n\
+                 \x20 --artifacts DIR    artifact dir (default: artifacts)\n\
+                 \x20 --mode M           adaptive | tmo | m0>m2 | m0>m1>m2\n\
+                 \x20 --batch B          engine slots (1,4,8,16,32,64)\n\
+                 \x20 --window W         draft window (4, 8)\n\
+                 \x20 --target M         target model (default m2)\n\
+                 \x20 --sample-seed S    probabilistic sampling (default \
+                 greedy)\n\
+                 \x20 --offline-prior    seed scheduler with build-time \
+                 similarity");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `specrouter help`)"),
+    }
+}

@@ -1,0 +1,186 @@
+//! Serving metrics (paper §5 Metrics): goodput, request throughput, TTFT,
+//! TPOT, EAF (speedup) and SLO attainment over finished-request records.
+use std::time::Instant;
+
+use crate::coordinator::engine::Finished;
+
+/// Aggregate summary over a set of finished requests.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub requests: usize,
+    pub tokens: u64,
+    pub makespan_s: f64,
+    /// valid target tokens per second across all requests (Goodput)
+    pub goodput_tps: f64,
+    pub req_throughput: f64,
+    pub ttft_ms_mean: f64,
+    pub ttft_ms_p50: f64,
+    pub ttft_ms_p95: f64,
+    pub tpot_ms_mean: f64,
+    pub tpot_ms_p50: f64,
+    pub tpot_ms_p95: f64,
+    pub latency_ms_p95: f64,
+    /// fraction of requests completing within the SLO threshold
+    pub slo_attainment: f64,
+}
+
+impl Summary {
+    /// Effective Acceleration Factor vs a baseline's mean TPOT
+    /// (paper: EAF = TPOT_TMO / TPOT_system).
+    pub fn eaf_vs(&self, baseline_tpot_ms: f64) -> f64 {
+        if self.tpot_ms_mean <= 0.0 {
+            return 0.0;
+        }
+        baseline_tpot_ms / self.tpot_ms_mean
+    }
+}
+
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn ms(a: Instant, b: Instant) -> f64 {
+    b.duration_since(a).as_secs_f64() * 1e3
+}
+
+/// Per-request TPOT in ms: time after the first token divided by the
+/// remaining tokens (None for single-token outputs).
+pub fn request_tpot_ms(f: &Finished) -> Option<f64> {
+    if f.tokens.len() < 2 {
+        return None;
+    }
+    Some(ms(f.first_token, f.completed) / (f.tokens.len() - 1) as f64)
+}
+
+/// Summarize a batch of finished requests against an SLO threshold on
+/// total request latency.
+pub fn summarize(finished: &[Finished], slo_ms: f64) -> Summary {
+    let n = finished.len();
+    if n == 0 {
+        return Summary {
+            requests: 0, tokens: 0, makespan_s: 0.0, goodput_tps: 0.0,
+            req_throughput: 0.0, ttft_ms_mean: 0.0, ttft_ms_p50: 0.0,
+            ttft_ms_p95: 0.0, tpot_ms_mean: 0.0, tpot_ms_p50: 0.0,
+            tpot_ms_p95: 0.0, latency_ms_p95: 0.0, slo_attainment: 0.0,
+        };
+    }
+    let tokens: u64 = finished.iter().map(|f| f.tokens.len() as u64).sum();
+    let t0 = finished.iter().map(|f| f.arrival).min().unwrap();
+    let t1 = finished.iter().map(|f| f.completed).max().unwrap();
+    let makespan_s = t1.duration_since(t0).as_secs_f64().max(1e-9);
+
+    let mut ttfts: Vec<f64> = finished.iter()
+        .map(|f| ms(f.arrival, f.first_token))
+        .collect();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut tpots: Vec<f64> = finished.iter()
+        .filter_map(request_tpot_ms)
+        .collect();
+    tpots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut lats: Vec<f64> = finished.iter()
+        .map(|f| ms(f.arrival, f.completed))
+        .collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let slo_ok = lats.iter().filter(|&&l| l <= slo_ms).count();
+
+    Summary {
+        requests: n,
+        tokens,
+        makespan_s,
+        goodput_tps: tokens as f64 / makespan_s,
+        req_throughput: n as f64 / makespan_s,
+        ttft_ms_mean: ttfts.iter().sum::<f64>() / n as f64,
+        ttft_ms_p50: percentile(&ttfts, 0.50),
+        ttft_ms_p95: percentile(&ttfts, 0.95),
+        tpot_ms_mean: if tpots.is_empty() { 0.0 }
+            else { tpots.iter().sum::<f64>() / tpots.len() as f64 },
+        tpot_ms_p50: percentile(&tpots, 0.50),
+        tpot_ms_p95: percentile(&tpots, 0.95),
+        latency_ms_p95: percentile(&lats, 0.95),
+        slo_attainment: slo_ok as f64 / n as f64,
+    }
+}
+
+/// Render a summary row for the bench tables.
+pub fn row(label: &str, s: &Summary, eaf: Option<f64>) -> String {
+    format!(
+        "{label:<24} req={:<4} tok={:<6} goodput={:>8.2} t/s  \
+         req/s={:>6.3}  TTFT(ms) mean={:>8.1} p95={:>8.1}  \
+         TPOT(ms) mean={:>8.1} p95={:>8.1}  SLO={:>5.1}%{}",
+        s.requests, s.tokens, s.goodput_tps, s.req_throughput,
+        s.ttft_ms_mean, s.ttft_ms_p95, s.tpot_ms_mean, s.tpot_ms_p95,
+        s.slo_attainment * 100.0,
+        eaf.map(|e| format!("  EAF={e:>5.2}x")).unwrap_or_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn fin(arrival: Instant, ttft_ms: u64, total_ms: u64, ntok: usize)
+           -> Finished {
+        Finished {
+            id: 0,
+            dataset: "d".into(),
+            prompt_len: 4,
+            tokens: vec![7; ntok],
+            arrival,
+            admitted: arrival,
+            first_token: arrival + Duration::from_millis(ttft_ms),
+            completed: arrival + Duration::from_millis(total_ms),
+            finished_by_eos: false,
+        }
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn summary_math() {
+        let t = Instant::now();
+        // 2 requests: 10 tokens over 1s window
+        let fs = vec![
+            fin(t, 100, 1000, 5),                       // tpot=900/4=225
+            fin(t + Duration::from_millis(200), 50, 800, 5), // tpot=750/4
+        ];
+        let s = summarize(&fs, 950.0);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.tokens, 10);
+        assert!((s.ttft_ms_mean - 75.0).abs() < 1.0);
+        assert!((s.tpot_ms_mean - (225.0 + 187.5) / 2.0).abs() < 1.0);
+        // second request completes at 1000ms after t: makespan 1.0s
+        assert!((s.makespan_s - 1.0).abs() < 0.05);
+        assert!((s.goodput_tps - 10.0).abs() < 0.5);
+        // SLO 950ms: first request took 1000ms (miss), second 800ms (hit)
+        assert!((s.slo_attainment - 0.5).abs() < 1e-9);
+        // EAF
+        assert!((s.eaf_vs(412.5) - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn single_token_requests_have_no_tpot() {
+        let t = Instant::now();
+        let fs = vec![fin(t, 10, 10, 1)];
+        let s = summarize(&fs, 1e9);
+        assert_eq!(s.tpot_ms_mean, 0.0);
+        assert!(request_tpot_ms(&fs[0]).is_none());
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let s = summarize(&[], 100.0);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.goodput_tps, 0.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! DeviceManager (paper §4.5): placement of whole models onto logical
+//! devices with memory accounting and CPU fallback.
+//!
+//! The paper's platform is a 10×A100 node where each assistant/target model
+//! occupies its own GPU. The decision logic — capacity check, least-loaded
+//! placement, fallback — is device-count agnostic; here the devices are
+//! logical partitions of the CPU PJRT backend (DESIGN.md §2), each with a
+//! configurable memory budget, so placement decisions and OOM behaviour can
+//! be exercised and tested faithfully.
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceId {
+    /// Logical accelerator partition (analogue of one GPU).
+    Accel(usize),
+    /// Host fallback: always available, never rejects (paper §4.7).
+    Cpu,
+}
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceId::Accel(i) => write!(f, "accel{i}"),
+            DeviceId::Cpu => write!(f, "cpu"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct DeviceState {
+    capacity: usize,
+    used: usize,
+    residents: BTreeMap<String, usize>, // model -> bytes
+}
+
+/// Tracks which model lives where and how much memory it pins.
+#[derive(Debug)]
+pub struct DeviceManager {
+    accels: Vec<DeviceState>,
+    cpu: DeviceState,
+}
+
+impl DeviceManager {
+    /// `n_devices` logical accelerators with `bytes_each` capacity.
+    pub fn new(n_devices: usize, bytes_each: usize) -> Self {
+        DeviceManager {
+            accels: vec![
+                DeviceState {
+                    capacity: bytes_each,
+                    used: 0,
+                    residents: BTreeMap::new()
+                };
+                n_devices
+            ],
+            cpu: DeviceState {
+                capacity: usize::MAX,
+                used: 0,
+                residents: BTreeMap::new(),
+            },
+        }
+    }
+
+    /// Place a model, preferring the least-loaded accelerator that fits;
+    /// falls back to the CPU device when nothing fits (paper §4.7).
+    pub fn place(&mut self, model: &str, bytes: usize) -> DeviceId {
+        if let Some(existing) = self.locate(model) {
+            return existing;
+        }
+        let mut best: Option<(usize, usize)> = None; // (idx, free)
+        for (i, d) in self.accels.iter().enumerate() {
+            let free = d.capacity.saturating_sub(d.used);
+            if free >= bytes && best.map_or(true, |(_, bf)| free > bf) {
+                best = Some((i, free));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                self.accels[i].used += bytes;
+                self.accels[i].residents.insert(model.to_string(), bytes);
+                DeviceId::Accel(i)
+            }
+            None => {
+                self.cpu.used += bytes;
+                self.cpu.residents.insert(model.to_string(), bytes);
+                DeviceId::Cpu
+            }
+        }
+    }
+
+    /// Where does a model currently live?
+    pub fn locate(&self, model: &str) -> Option<DeviceId> {
+        for (i, d) in self.accels.iter().enumerate() {
+            if d.residents.contains_key(model) {
+                return Some(DeviceId::Accel(i));
+            }
+        }
+        if self.cpu.residents.contains_key(model) {
+            return Some(DeviceId::Cpu);
+        }
+        None
+    }
+
+    /// Release a model's reservation (garbage collection / eviction).
+    pub fn evict(&mut self, model: &str) -> Result<()> {
+        for d in self.accels.iter_mut().chain(std::iter::once(&mut self.cpu)) {
+            if let Some(bytes) = d.residents.remove(model) {
+                d.used -= bytes;
+                return Ok(());
+            }
+        }
+        bail!("model {model:?} not resident anywhere")
+    }
+
+    /// Grow a model's reservation in place (e.g. KV cache for a new batch
+    /// size); fails if its device cannot fit the growth.
+    pub fn reserve_extra(&mut self, model: &str, bytes: usize) -> Result<()> {
+        let id = match self.locate(model) {
+            Some(id) => id,
+            None => bail!("model {model:?} not placed"),
+        };
+        let d = match id {
+            DeviceId::Accel(i) => &mut self.accels[i],
+            DeviceId::Cpu => &mut self.cpu,
+        };
+        if d.used + bytes > d.capacity {
+            bail!("device {id} over capacity for {model:?} (+{bytes}B)");
+        }
+        d.used += bytes;
+        *d.residents.get_mut(model).unwrap() += bytes;
+        Ok(())
+    }
+
+    pub fn used_bytes(&self, id: DeviceId) -> usize {
+        match id {
+            DeviceId::Accel(i) => self.accels[i].used,
+            DeviceId::Cpu => self.cpu.used,
+        }
+    }
+
+    /// (device, residents) listing for diagnostics / the CLI `pool` cmd.
+    pub fn placement_report(&self) -> Vec<(DeviceId, Vec<(String, usize)>)> {
+        let mut out = Vec::new();
+        for (i, d) in self.accels.iter().enumerate() {
+            out.push((DeviceId::Accel(i),
+                      d.residents.iter().map(|(k, v)| (k.clone(), *v))
+                          .collect()));
+        }
+        out.push((DeviceId::Cpu,
+                  self.cpu.residents.iter().map(|(k, v)| (k.clone(), *v))
+                      .collect()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn places_least_loaded_first() {
+        let mut dm = DeviceManager::new(2, 100);
+        assert_eq!(dm.place("a", 60), DeviceId::Accel(0));
+        // accel0 now has 40 free; accel1 has 100 free -> next goes to 1
+        assert_eq!(dm.place("b", 50), DeviceId::Accel(1));
+        assert_eq!(dm.place("c", 40), DeviceId::Accel(1));
+        assert_eq!(dm.locate("a"), Some(DeviceId::Accel(0)));
+    }
+
+    #[test]
+    fn idempotent_placement() {
+        let mut dm = DeviceManager::new(1, 100);
+        assert_eq!(dm.place("a", 60), DeviceId::Accel(0));
+        assert_eq!(dm.place("a", 60), DeviceId::Accel(0));
+        assert_eq!(dm.used_bytes(DeviceId::Accel(0)), 60); // not double-counted
+    }
+
+    #[test]
+    fn cpu_fallback_when_full() {
+        let mut dm = DeviceManager::new(1, 100);
+        dm.place("a", 90);
+        assert_eq!(dm.place("big", 50), DeviceId::Cpu);
+        assert_eq!(dm.used_bytes(DeviceId::Cpu), 50);
+    }
+
+    #[test]
+    fn evict_frees_space() {
+        let mut dm = DeviceManager::new(1, 100);
+        dm.place("a", 90);
+        assert_eq!(dm.place("b", 50), DeviceId::Cpu);
+        dm.evict("a").unwrap();
+        assert_eq!(dm.used_bytes(DeviceId::Accel(0)), 0);
+        assert_eq!(dm.place("c", 80), DeviceId::Accel(0));
+        assert!(dm.evict("nope").is_err());
+    }
+
+    #[test]
+    fn reserve_extra_respects_capacity() {
+        let mut dm = DeviceManager::new(1, 100);
+        dm.place("a", 60);
+        assert!(dm.reserve_extra("a", 30).is_ok());
+        assert!(dm.reserve_extra("a", 30).is_err());
+        assert_eq!(dm.used_bytes(DeviceId::Accel(0)), 90);
+    }
+}

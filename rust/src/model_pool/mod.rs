@@ -1,0 +1,7 @@
+//! Model pool layer (paper §4.5): heterogeneous model lifecycle and
+//! device placement.
+pub mod device;
+pub mod pool;
+
+pub use device::{DeviceId, DeviceManager};
+pub use pool::{FnKey, ModelPool};

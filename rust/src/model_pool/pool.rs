@@ -1,0 +1,152 @@
+//! ModelPool (paper §4.5): lifecycle of the heterogeneous model pool —
+//! weight loading, lazy per-variant executable compilation with caching,
+//! device placement, and eviction.
+//!
+//! "Loading a model" in this AOT architecture means (a) reading its weight
+//! vector from `artifacts/<m>.weights.bin` into a literal that is passed as
+//! the first argument of every call, and (b) compiling whichever HLO
+//! variants (fn kind × batch × window) the coordinator actually uses —
+//! compiled lazily and memoized, mirroring the paper's lazy loading.
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model_pool::device::{DeviceId, DeviceManager};
+use crate::runtime::{FnKind, Manifest, Runtime};
+use crate::runtime::client::CompiledFn;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FnKey {
+    pub model: String,
+    pub kind: FnKind,
+    pub batch: usize,
+    pub window: usize,
+}
+
+impl FnKey {
+    pub fn label(&self) -> String {
+        format!("{}:{}/b{}/w{}", self.model, self.kind.name(), self.batch,
+                self.window)
+    }
+}
+
+pub struct ModelPool {
+    pub runtime: Arc<Runtime>,
+    pub manifest: Arc<Manifest>,
+    weights: Mutex<HashMap<String, Arc<xla::Literal>>>,
+    weight_bufs: Mutex<HashMap<String, Arc<xla::PjRtBuffer>>>,
+    fns: Mutex<HashMap<FnKey, Arc<CompiledFn>>>,
+    devices: Mutex<DeviceManager>,
+}
+
+impl ModelPool {
+    pub fn new(runtime: Arc<Runtime>, manifest: Arc<Manifest>,
+               n_devices: usize, device_bytes: usize) -> Self {
+        ModelPool {
+            runtime,
+            manifest,
+            weights: Mutex::new(HashMap::new()),
+            weight_bufs: Mutex::new(HashMap::new()),
+            fns: Mutex::new(HashMap::new()),
+            devices: Mutex::new(DeviceManager::new(n_devices, device_bytes)),
+        }
+    }
+
+    /// Open a pool rooted at an artifacts dir with default device topology
+    /// (one logical device per model, 2 GiB each — generous for this pool).
+    pub fn open(art_dir: &Path) -> Result<Self> {
+        let manifest = Arc::new(Manifest::load(art_dir)?);
+        let runtime = Arc::new(Runtime::cpu()?);
+        let n = manifest.models.len().max(1);
+        Ok(Self::new(runtime, manifest, n, 2 << 30))
+    }
+
+    /// Register (place + load weights for) a model. Idempotent.
+    pub fn register(&self, model: &str) -> Result<DeviceId> {
+        let meta = self.manifest.model(model)?;
+        let id = self.devices.lock().unwrap()
+            .place(model, meta.weight_bytes());
+        self.weights_literal(model)?;
+        Ok(id)
+    }
+
+    /// The model's flat weight vector as a literal (lazy, cached).
+    pub fn weights_literal(&self, model: &str) -> Result<Arc<xla::Literal>> {
+        if let Some(w) = self.weights.lock().unwrap().get(model) {
+            return Ok(w.clone());
+        }
+        let meta = self.manifest.model(model)?;
+        let path = self.manifest.root.join(&meta.weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weights {path:?}"))?;
+        if bytes.len() != meta.param_count * 4 {
+            bail!("weights {path:?}: got {}B, want {}B",
+                  bytes.len(), meta.param_count * 4);
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let lit = Arc::new(xla::Literal::vec1(&floats));
+        self.weights.lock().unwrap().insert(model.to_string(), lit.clone());
+        Ok(lit)
+    }
+
+    /// The model's weights as a device buffer, uploaded once and reused by
+    /// every call (hot-path: weights never re-cross the host boundary).
+    pub fn weights_buffer(&self, model: &str)
+                          -> Result<Arc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weight_bufs.lock().unwrap().get(model) {
+            return Ok(b.clone());
+        }
+        let lit = self.weights_literal(model)?;
+        let data = lit.to_vec::<f32>()?;
+        let buf = Arc::new(
+            self.runtime.to_device_f32(&data, &[data.len()])?);
+        self.weight_bufs.lock().unwrap()
+            .insert(model.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    /// Fetch (lazily compiling) one executable variant.
+    pub fn get(&self, key: &FnKey) -> Result<Arc<CompiledFn>> {
+        if let Some(f) = self.fns.lock().unwrap().get(key) {
+            return Ok(f.clone());
+        }
+        let meta = self.manifest.model(&key.model)?;
+        let entry = meta.artifact(key.kind, key.batch, key.window)?;
+        let path = self.manifest.root.join(&entry.file);
+        let compiled = Arc::new(
+            self.runtime.compile(&path, &key.label())?);
+        log::debug!("compiled {} in {:?}", key.label(), compiled.compile_time);
+        self.fns.lock().unwrap().insert(key.clone(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Evict a model: drops weights, all its compiled variants, and its
+    /// device reservation (paper §4.5 garbage collection).
+    pub fn evict(&self, model: &str) -> Result<()> {
+        self.weights.lock().unwrap().remove(model);
+        self.weight_bufs.lock().unwrap().remove(model);
+        self.fns.lock().unwrap().retain(|k, _| k.model != model);
+        self.devices.lock().unwrap().evict(model)
+    }
+
+    pub fn placement(&self) -> Vec<(DeviceId, Vec<(String, usize)>)> {
+        self.devices.lock().unwrap().placement_report()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.fns.lock().unwrap().len()
+    }
+
+    /// Total time spent in XLA compilation so far (startup-cost metric).
+    pub fn total_compile_time(&self) -> Duration {
+        self.fns.lock().unwrap().values()
+            .map(|f| f.compile_time)
+            .sum()
+    }
+}

@@ -1,0 +1,306 @@
+//! Artifact manifest: the contract between the python build path and the
+//! rust runtime. `python -m compile.aot` writes `artifacts/manifest.json`
+//! describing every model (dims, weights file) and every lowered HLO
+//! variant (fn kind × batch × window); this module parses it.
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Which exported entry point an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FnKind {
+    Prefill,
+    Decode,
+    Draft,
+    Verify,
+    Insert,
+    /// Slice the tail (logits/tokens) out of a batch packed state.
+    Extract,
+    /// Same for the B=1 prefill state (admission logits).
+    Extract1,
+}
+
+impl FnKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "prefill" => FnKind::Prefill,
+            "decode" => FnKind::Decode,
+            "draft" => FnKind::Draft,
+            "verify" => FnKind::Verify,
+            "insert" => FnKind::Insert,
+            "extract" => FnKind::Extract,
+            "extract1" => FnKind::Extract1,
+            _ => bail!("unknown fn kind {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FnKind::Prefill => "prefill",
+            FnKind::Decode => "decode",
+            FnKind::Draft => "draft",
+            FnKind::Verify => "verify",
+            FnKind::Insert => "insert",
+            FnKind::Extract => "extract",
+            FnKind::Extract1 => "extract1",
+        }
+    }
+}
+
+/// One lowered HLO file.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub fn_kind: FnKind,
+    pub file: PathBuf,
+    pub batch: usize,
+    /// Draft/verify window size; 0 for prefill/decode/insert.
+    pub window: usize,
+}
+
+/// Static description of one model in the pool.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub param_count: usize,
+    pub weights_file: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl ModelMeta {
+    /// Bytes of one KV cache tensor at the given batch size.
+    pub fn kv_bytes(&self, batch: usize, seq: usize) -> usize {
+        self.layers * 2 * batch * self.heads * seq * self.head_dim * 4
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.param_count * 4
+    }
+
+    /// Find the artifact implementing (kind, batch, window).
+    pub fn artifact(&self, kind: FnKind, batch: usize, window: usize)
+                    -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.fn_kind == kind && a.batch == batch
+                  && a.window == window)
+            .with_context(|| format!(
+                "model {} has no artifact {}/b{}/w{}",
+                self.name, kind.name(), batch, window))
+    }
+}
+
+/// Per-dataset generation parameters mirrored from python/compile/corpus.py.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub range: (usize, usize),
+    pub p_det: f64,
+    /// (prompt_lo, prompt_hi, gen_lo, gen_hi)
+    pub lengths: (usize, usize, usize, usize),
+    pub paper_size: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SpecialTokens {
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub sep: i32,
+}
+
+/// The whole parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab: usize,
+    pub seq: usize,
+    pub prefill: usize,
+    pub windows: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub special: SpecialTokens,
+    pub datasets: BTreeMap<String, DatasetSpec>,
+    /// Offline ground-truth SimScore pairs "a,b" -> 1 - E[DTV], measured at
+    /// build time (used by tests and the SSD-Tuned offline profile).
+    pub similarity: BTreeMap<String, f64>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(art_dir: &Path) -> Result<Self> {
+        let path = art_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_value(art_dir, &v)
+    }
+
+    fn from_value(art_dir: &Path, v: &Value) -> Result<Self> {
+        let st = v.get("special_tokens")?;
+        let special = SpecialTokens {
+            pad: st.get("pad")?.as_usize()? as i32,
+            bos: st.get("bos")?.as_usize()? as i32,
+            eos: st.get("eos")?.as_usize()? as i32,
+            sep: st.get("sep")?.as_usize()? as i32,
+        };
+        let mut datasets = BTreeMap::new();
+        for (name, d) in v.get("datasets")?.as_obj()? {
+            let r = d.get("range")?.as_arr()?;
+            let l = d.get("lengths")?.as_arr()?;
+            datasets.insert(name.clone(), DatasetSpec {
+                name: name.clone(),
+                range: (r[0].as_usize()?, r[1].as_usize()?),
+                p_det: d.get("p_det")?.as_f64()?,
+                lengths: (l[0].as_usize()?, l[1].as_usize()?,
+                          l[2].as_usize()?, l[3].as_usize()?),
+                paper_size: d.get("paper_size")?.as_usize()?,
+            });
+        }
+        let mut similarity = BTreeMap::new();
+        if let Some(sim) = v.opt("similarity") {
+            for (k, s) in sim.as_obj()? {
+                similarity.insert(k.clone(), s.as_f64()?);
+            }
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in v.get("models")?.as_obj()? {
+            let mut artifacts = Vec::new();
+            for a in m.get("artifacts")?.as_arr()? {
+                artifacts.push(ArtifactEntry {
+                    fn_kind: FnKind::parse(a.get("fn")?.as_str()?)?,
+                    file: PathBuf::from(a.get("file")?.as_str()?),
+                    batch: a.get("batch")?.as_usize()?,
+                    window: a.get("window")?.as_usize()?,
+                });
+            }
+            models.insert(name.clone(), ModelMeta {
+                name: name.clone(),
+                d: m.get("d")?.as_usize()?,
+                layers: m.get("layers")?.as_usize()?,
+                heads: m.get("heads")?.as_usize()?,
+                head_dim: m.get("head_dim")?.as_usize()?,
+                param_count: m.get("param_count")?.as_usize()?,
+                weights_file: PathBuf::from(m.get("weights_file")?.as_str()?),
+                artifacts,
+            });
+        }
+        Ok(Manifest {
+            root: art_dir.to_path_buf(),
+            vocab: v.get("vocab")?.as_usize()?,
+            seq: v.get("seq")?.as_usize()?,
+            prefill: v.get("prefill")?.as_usize()?,
+            windows: v.get("windows")?.as_arr()?
+                .iter().map(|x| x.as_usize()).collect::<Result<_>>()?,
+            batches: v.get("batches")?.as_arr()?
+                .iter().map(|x| x.as_usize()).collect::<Result<_>>()?,
+            special,
+            datasets,
+            similarity,
+            models,
+        })
+    }
+
+    /// Build a manifest straight from a parsed JSON value (unit tests of
+    /// higher layers construct small synthetic manifests this way).
+    pub fn load_from_value_for_tests(root: &Path, v: &Value) -> Manifest {
+        Self::from_value(root, v).expect("synthetic manifest must parse")
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name)
+            .with_context(|| format!("unknown model {name:?}"))
+    }
+
+    /// Model names sorted by capability (parameter count, ascending) —
+    /// the ordering Algorithm 1 step 1 operates on.
+    pub fn models_by_capability(&self) -> Vec<String> {
+        let mut names: Vec<_> = self.models.keys().cloned().collect();
+        names.sort_by_key(|n| self.models[n].param_count);
+        names
+    }
+
+    /// Offline similarity (build-time ground truth), if recorded.
+    pub fn offline_similarity(&self, a: &str, b: &str) -> Option<f64> {
+        self.similarity.get(&format!("{a},{b}")).copied()
+    }
+
+    /// KV shape [L, 2, B, H, S, Dh] for a model at a batch size.
+    pub fn kv_dims(&self, model: &ModelMeta, batch: usize) -> Vec<usize> {
+        vec![model.layers, 2, batch, model.heads, self.seq, model.head_dim]
+    }
+
+    /// Packed-state ABI geometry (mirrors python/compile/model.py):
+    /// state = [kv (kv_len) | tail (tail_len)], one flat f32 vector.
+    pub fn kv_len(&self, model: &ModelMeta, batch: usize) -> usize {
+        self.kv_dims(model, batch).iter().product()
+    }
+
+    pub fn w_max(&self) -> usize {
+        self.windows.iter().copied().max().unwrap_or(8)
+    }
+
+    pub fn tail_len(&self, batch: usize) -> usize {
+        batch * ((self.w_max() + 1) * self.vocab + self.w_max())
+    }
+
+    pub fn state_len(&self, model: &ModelMeta, batch: usize) -> usize {
+        self.kv_len(model, batch) + self.tail_len(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> String {
+        r#"{
+          "vocab": 512, "seq": 128, "prefill": 48,
+          "windows": [4, 8], "batches": [1, 4],
+          "special_tokens": {"pad":0,"bos":1,"eos":2,"sep":3},
+          "datasets": {
+            "gsm8k": {"range":[64,192],"p_det":0.75,
+                      "lengths":[12,32,16,48],"paper_size":8500}
+          },
+          "similarity": {"m0,m1": 0.8, "m1,m0": 0.8},
+          "models": {
+            "m0": {"d":64,"layers":2,"heads":4,"head_dim":16,
+                   "param_count":1000,"weights_file":"m0.weights.bin",
+                   "artifacts":[
+                     {"fn":"prefill","file":"hlo/m0_prefill_b1.hlo.txt",
+                      "batch":1,"window":0,"outputs":[]},
+                     {"fn":"draft","file":"hlo/m0_draft_w4_b4.hlo.txt",
+                      "batch":4,"window":4,"outputs":[]}
+                   ]}
+          }
+        }"#.to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(&sample_manifest_json()).unwrap();
+        let m = Manifest::from_value(Path::new("/tmp/x"), &v).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.windows, vec![4, 8]);
+        let m0 = m.model("m0").unwrap();
+        assert_eq!(m0.layers, 2);
+        assert!(m0.artifact(FnKind::Draft, 4, 4).is_ok());
+        assert!(m0.artifact(FnKind::Draft, 8, 4).is_err());
+        assert_eq!(m.offline_similarity("m0", "m1"), Some(0.8));
+        assert_eq!(m.offline_similarity("m0", "mX"), None);
+        assert_eq!(m.kv_dims(m0, 4), vec![2, 2, 4, 4, 128, 16]);
+        assert_eq!(m0.kv_bytes(4, 128), 2 * 2 * 4 * 4 * 128 * 16 * 4);
+    }
+
+    #[test]
+    fn capability_ordering() {
+        let v = json::parse(&sample_manifest_json()).unwrap();
+        let m = Manifest::from_value(Path::new("/tmp/x"), &v).unwrap();
+        assert_eq!(m.models_by_capability(), vec!["m0".to_string()]);
+    }
+}

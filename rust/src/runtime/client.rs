@@ -1,0 +1,157 @@
+//! PJRT runtime wrapper: load HLO text artifacts, compile them once, and
+//! execute them with host literals.
+//!
+//! Interchange is HLO *text* (see DESIGN.md §1): `HloModuleProto::
+//! from_text_file` re-parses and re-assigns instruction ids, which is what
+//! makes jax ≥ 0.5 output loadable on xla_extension 0.5.1.
+//!
+//! Execution notes (measured, see rust/src/bin/probe_{outputs,single}.rs):
+//! * a multi-output computation materializes as ONE tuple buffer — outputs
+//!   cannot be kept device-resident selectively;
+//! * a SINGLE-array-output computation yields one array `PjRtBuffer` that
+//!   can be fed straight back into the next `execute_b` call.
+//! The packed-state ABI exploits the second fact: every exported fn takes
+//! and returns one flat f32 state (kv ++ tail), which stays device-
+//! resident across the request lifetime; only small token/length inputs
+//! and the extracted tail cross the host boundary. (`copy_raw_to_host_
+//! sync` is unimplemented on this CPU client, hence the dedicated
+//! `extract` computations for tail reads.)
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Upload host f32 data to a device buffer.
+    pub fn to_device_f32(&self, data: &[f32], dims: &[usize])
+                         -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload host i32 data to a device buffer.
+    pub fn to_device_i32(&self, data: &[i32], dims: &[usize])
+                         -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a scalar i32 (e.g. a slot index).
+    pub fn scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Compile one HLO-text artifact into an executable.
+    pub fn compile(&self, path: &Path, label: &str) -> Result<CompiledFn> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {label}"))?;
+        Ok(CompiledFn {
+            exe,
+            label: label.to_string(),
+            compile_time: t0.elapsed(),
+        })
+    }
+}
+
+/// One compiled entry point. `run` executes with host literals and returns
+/// the decomposed output tuple plus the wall-clock execution time (the
+/// PerformanceProfiler's raw signal).
+pub struct CompiledFn {
+    exe: xla::PjRtLoadedExecutable,
+    pub label: String,
+    pub compile_time: Duration,
+}
+
+impl CompiledFn {
+    /// Literal-based execution (tests/tools): returns host literals.
+    pub fn run(&self, args: &[&xla::Literal])
+               -> Result<(Vec<xla::Literal>, Duration)> {
+        let t0 = Instant::now();
+        let outs = self.exe.execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.label))?;
+        let root = outs[0][0].to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.label))?;
+        let parts = match root.shape()? {
+            xla::Shape::Tuple(_) => root.to_tuple()?,
+            _ => vec![root],
+        };
+        Ok((parts, t0.elapsed()))
+    }
+
+    /// Buffer-based execution (the hot path): inputs stay wherever they
+    /// are, the single array output is returned as a device buffer.
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer])
+                 -> Result<(xla::PjRtBuffer, Duration)> {
+        let t0 = Instant::now();
+        let mut outs = self.exe.execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.label))?;
+        let mut replica = outs.pop()
+            .with_context(|| format!("{}: no replica output", self.label))?;
+        if replica.len() != 1 {
+            anyhow::bail!("{}: expected 1 output buffer, got {} (packed-\
+                           state fns are single-output)", self.label,
+                          replica.len());
+        }
+        Ok((replica.pop().unwrap(), t0.elapsed()))
+    }
+
+    /// Buffer-based execution returning the output as a host literal
+    /// (extract fns: the output is small).
+    pub fn run_b_to_host(&self, args: &[&xla::PjRtBuffer])
+                         -> Result<(Vec<f32>, Duration)> {
+        let (buf, d) = self.run_b(args)?;
+        let lit = buf.to_literal_sync()?;
+        Ok((lit.to_vec::<f32>()?, d))
+    }
+}
+
+/// Literal construction / extraction helpers used across the coordinator.
+pub mod lit {
+    use anyhow::Result;
+
+    pub fn i32_vec(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    pub fn f32_vec(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    pub fn i32_scalar(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+
+    pub fn to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+        Ok(l.to_vec::<i32>()?)
+    }
+
+    /// Dims of an array literal.
+    pub fn dims(l: &xla::Literal) -> Result<Vec<usize>> {
+        Ok(l.array_shape()?.dims().iter().map(|&d| d as usize).collect())
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, and literal
+//! helpers. Everything above this module is backend-agnostic; everything
+//! below it is the `xla` crate.
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactEntry, DatasetSpec, FnKind, Manifest, ModelMeta,
+                   SpecialTokens};
+pub use client::{lit, CompiledFn, Runtime};

@@ -1,0 +1,205 @@
+//! Serving front-end: an engine thread owning the ChainRouter plus a
+//! JSON-lines TCP server.
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"prompt": [1, 70, ...], "max_new": 32, "dataset": "gsm8k"}
+//!   response: {"id": 7, "tokens": [...], "ttft_ms": 12.3, "tpot_ms": 4.5,
+//!              "latency_ms": 200.1, "eos": false}
+//!
+//! The engine thread multiplexes: it drains the submission channel, runs
+//! `tick()`, and routes finished records back to per-request responders.
+//! Python is nowhere in this path.
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::EngineConfig;
+use crate::coordinator::engine::{Finished, Request};
+use crate::coordinator::ChainRouter;
+use crate::json::{self, Value};
+use crate::metrics::request_tpot_ms;
+
+/// Messages into the engine thread.
+pub enum EngineMsg {
+    Submit(Request, mpsc::Sender<Finished>),
+    Shutdown,
+}
+
+/// Handle to a running engine thread.
+pub struct EngineHandle {
+    pub tx: mpsc::Sender<EngineMsg>,
+    pub join: JoinHandle<Result<()>>,
+}
+
+/// Spawn the engine loop on its own thread.
+pub fn spawn_engine(cfg: EngineConfig) -> Result<EngineHandle> {
+    let (tx, rx) = mpsc::channel::<EngineMsg>();
+    let join = std::thread::Builder::new()
+        .name("specrouter-engine".into())
+        .spawn(move || engine_loop(cfg, rx))?;
+    Ok(EngineHandle { tx, join })
+}
+
+fn engine_loop(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>)
+               -> Result<()> {
+    let mut router = ChainRouter::new(cfg)?;
+    let mut waiters: HashMap<u64, mpsc::Sender<Finished>> = HashMap::new();
+    let mut drained = 0usize;
+    loop {
+        // 1. drain submissions (block briefly when idle to avoid spinning)
+        let idle = router.batcher.is_idle();
+        let mut shutdown = false;
+        if idle {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(EngineMsg::Submit(req, reply)) => {
+                    if let Some(id) = router.submit(req) {
+                        waiters.insert(id, reply);
+                    }
+                }
+                Ok(EngineMsg::Shutdown) => shutdown = true,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(EngineMsg::Submit(req, reply)) => {
+                    if let Some(id) = router.submit(req) {
+                        waiters.insert(id, reply);
+                    }
+                }
+                Ok(EngineMsg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        // 2. advance generation
+        router.tick()?;
+        // 3. deliver completions
+        while drained < router.finished.len() {
+            let f = router.finished[drained].clone();
+            drained += 1;
+            if let Some(reply) = waiters.remove(&f.id) {
+                let _ = reply.send(f);
+            }
+        }
+        if shutdown && router.batcher.is_idle() {
+            return Ok(());
+        }
+    }
+}
+
+/// Submit one request to a running engine and wait for completion.
+pub fn request_sync(tx: &mpsc::Sender<EngineMsg>, dataset: &str,
+                    prompt: Vec<i32>, max_new: usize) -> Result<Finished> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    tx.send(EngineMsg::Submit(Request {
+        id: 0,
+        dataset: dataset.to_string(),
+        prompt,
+        max_new,
+        arrival: Instant::now(),
+    }, reply_tx)).ok().context("engine thread gone")?;
+    reply_rx.recv().context("engine dropped the request")
+}
+
+fn finished_to_json(f: &Finished) -> Value {
+    json::obj(vec![
+        ("id", json::num(f.id as f64)),
+        ("tokens", json::arr(f.tokens.iter()
+            .map(|&t| json::num(t as f64)).collect())),
+        ("ttft_ms", json::num(
+            f.first_token.duration_since(f.arrival).as_secs_f64() * 1e3)),
+        ("tpot_ms", json::num(request_tpot_ms(f).unwrap_or(0.0))),
+        ("latency_ms", json::num(
+            f.completed.duration_since(f.arrival).as_secs_f64() * 1e3)),
+        ("eos", json::Value::Bool(f.finished_by_eos)),
+    ])
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match serve_one(&tx, &line) {
+            Ok(v) => v,
+            Err(e) => json::obj(vec![("error", json::s(&format!("{e:#}")))]),
+        };
+        writeln!(writer, "{resp}")?;
+    }
+    log::debug!("connection {peer:?} closed");
+    Ok(())
+}
+
+fn serve_one(tx: &mpsc::Sender<EngineMsg>, line: &str) -> Result<Value> {
+    let v = json::parse(line).context("bad request JSON")?;
+    let prompt: Vec<i32> = v.get("prompt")?.as_arr()?
+        .iter()
+        .map(|t| Ok(t.as_f64()? as i32))
+        .collect::<Result<_>>()?;
+    let max_new = v.opt("max_new")
+        .map(|m| m.as_usize()).transpose()?.unwrap_or(32);
+    let dataset = v.opt("dataset")
+        .map(|d| d.as_str().map(str::to_string)).transpose()?
+        .unwrap_or_else(|| "gsm8k".to_string());
+    let f = request_sync(tx, &dataset, prompt, max_new)?;
+    Ok(finished_to_json(&f))
+}
+
+/// Run the TCP front-end forever (or until the listener errors). Binds
+/// `addr` (e.g. "127.0.0.1:7450"); `ready` is signalled with the bound
+/// address once listening — tests use an ephemeral port via ":0".
+pub fn serve_tcp(addr: &str, tx: mpsc::Sender<EngineMsg>,
+                 ready: Option<mpsc::Sender<std::net::SocketAddr>>)
+                 -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    log::info!("listening on {local}");
+    if let Some(r) = ready {
+        let _ = r.send(local);
+    }
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, tx) {
+                log::warn!("connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Minimal client for examples/tests: one request over a fresh connection.
+pub fn client_request(addr: std::net::SocketAddr, dataset: &str,
+                      prompt: &[i32], max_new: usize) -> Result<Value> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = json::obj(vec![
+        ("prompt", json::arr(prompt.iter()
+            .map(|&t| json::num(t as f64)).collect())),
+        ("max_new", json::num(max_new as f64)),
+        ("dataset", json::s(dataset)),
+    ]);
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    json::parse(line.trim())
+}

@@ -1,0 +1,331 @@
+//! Host-resident KV cache storage and its slot operations.
+//!
+//! The cache layout matches the exported HLO signature:
+//! `f32[L, 2, B, H, S, Dh]` (layers × {key,value} × batch slot × heads ×
+//! sequence capacity × head dim). Between PJRT calls the cache lives as a
+//! host literal (see runtime::client for why); the engine threads it
+//! through each call and replaces it with the returned one.
+//!
+//! Slot-level operations (admission insert, physical truncation) are
+//! strided host copies. The index arithmetic is factored into pure
+//! functions so it is unit-testable without touching XLA.
+use anyhow::{bail, Result};
+
+/// Dims of a KV tensor: [L, 2, B, H, S, Dh].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvDims {
+    pub layers: usize,
+    pub batch: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub head_dim: usize,
+}
+
+impl KvDims {
+    pub fn shape(&self) -> [usize; 6] {
+        [self.layers, 2, self.batch, self.heads, self.seq, self.head_dim]
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Elements in one (layer, k/v, slot) plane: H * S * Dh.
+    pub fn plane(&self) -> usize {
+        self.heads * self.seq * self.head_dim
+    }
+
+    /// Flat offset of the (l, c, b) plane.
+    pub fn plane_offset(&self, l: usize, c: usize, b: usize) -> usize {
+        ((l * 2 + c) * self.batch + b) * self.plane()
+    }
+
+    /// Row length of one sequence position within a head: Dh.
+    pub fn row(&self) -> usize {
+        self.head_dim
+    }
+}
+
+/// Copy slot data from a B=1 cache into slot `slot` of a batch cache.
+/// Pure host-side index arithmetic over flat f32 slices.
+pub fn insert_slot_flat(dst: &mut [f32], dd: KvDims, src: &[f32],
+                        sd: KvDims, slot: usize) -> Result<()> {
+    if sd.batch != 1 || dd.layers != sd.layers || dd.heads != sd.heads
+        || dd.seq != sd.seq || dd.head_dim != sd.head_dim {
+        bail!("kv dims mismatch: dst {dd:?} src {sd:?}");
+    }
+    if slot >= dd.batch {
+        bail!("slot {slot} out of range (batch {})", dd.batch);
+    }
+    let plane = dd.plane();
+    for l in 0..dd.layers {
+        for c in 0..2 {
+            let doff = dd.plane_offset(l, c, slot);
+            let soff = sd.plane_offset(l, c, 0);
+            dst[doff..doff + plane]
+                .copy_from_slice(&src[soff..soff + plane]);
+        }
+    }
+    Ok(())
+}
+
+/// Zero all positions >= `frontier` along the sequence axis, every slot:
+/// the physical-truncation analogue of paper Eq. 9 for fixed-capacity
+/// buffers (entries are reclaimed by zeroing rather than freeing; the
+/// logical mask has already excluded them from attention).
+pub fn truncate_tail_flat(buf: &mut [f32], d: KvDims, frontier: usize)
+                          -> usize {
+    if frontier >= d.seq {
+        return 0;
+    }
+    let mut zeroed = 0;
+    let row = d.row();
+    for l in 0..d.layers {
+        for c in 0..2 {
+            for b in 0..d.batch {
+                let plane = d.plane_offset(l, c, b);
+                for h in 0..d.heads {
+                    let head = plane + h * d.seq * row;
+                    let start = head + frontier * row;
+                    let end = head + d.seq * row;
+                    buf[start..end].fill(0.0);
+                    zeroed += end - start;
+                }
+            }
+        }
+    }
+    zeroed
+}
+
+/// Extract one slot into a fresh B=1 flat buffer (eviction staging, tests).
+pub fn extract_slot_flat(src: &[f32], sd: KvDims, slot: usize) -> Vec<f32> {
+    let od = KvDims { batch: 1, ..sd };
+    let mut out = vec![0.0; od.elements()];
+    let plane = sd.plane();
+    for l in 0..sd.layers {
+        for c in 0..2 {
+            let soff = sd.plane_offset(l, c, slot);
+            let ooff = od.plane_offset(l, c, 0);
+            out[ooff..ooff + plane].copy_from_slice(&src[soff..soff + plane]);
+        }
+    }
+    out
+}
+
+/// The device-resident packed state handle (see runtime::client and
+/// python/compile/model.py "Packed-state layer"): one flat f32 buffer
+/// `[kv (kv_len) | tail (tail_len)]` that never leaves the device on the
+/// hot path. Slot-level host operations (`insert_slot_flat`, truncation)
+/// apply to *staged* host copies (eviction, benches); admission inserts
+/// run on-device through the exported `insert` computation.
+pub struct StateBuf {
+    /// geometry of the kv region
+    pub dims: KvDims,
+    /// total packed length (kv + tail)
+    pub state_len: usize,
+    buf: Option<xla::PjRtBuffer>,
+}
+
+impl StateBuf {
+    pub fn new(dims: KvDims, state_len: usize) -> Self {
+        assert!(state_len >= dims.elements());
+        StateBuf { dims, state_len, buf: None }
+    }
+
+    pub fn kv_len(&self) -> usize {
+        self.dims.elements()
+    }
+
+    pub fn tail_len(&self) -> usize {
+        self.state_len - self.kv_len()
+    }
+
+    /// The device buffer, materializing zeros lazily on first use.
+    pub fn buffer(&mut self, rt: &crate::runtime::Runtime)
+                  -> Result<&xla::PjRtBuffer> {
+        if self.buf.is_none() {
+            let zeros = vec![0.0f32; self.state_len];
+            self.buf = Some(rt.to_device_f32(&zeros, &[self.state_len])?);
+        }
+        Ok(self.buf.as_ref().unwrap())
+    }
+
+    /// Adopt the buffer returned by a packed-state call.
+    pub fn replace(&mut self, buf: xla::PjRtBuffer) -> Result<()> {
+        let shape = buf.on_device_shape()?;
+        match shape {
+            xla::Shape::Array(a)
+                if a.dims() == [self.state_len as i64] => {}
+            other => bail!("state replace shape mismatch: got {other:?}, \
+                            want f32[{}]", self.state_len),
+        }
+        self.buf = Some(buf);
+        Ok(())
+    }
+
+    /// Stage the full state to the host (eviction / debugging / physical
+    /// truncation staging). One large copy — not a hot-path operation.
+    pub fn to_host(&mut self, rt: &crate::runtime::Runtime)
+                   -> Result<Vec<f32>> {
+        let lit = self.buffer(rt)?.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Restore a staged state (host -> device).
+    pub fn from_host(&mut self, rt: &crate::runtime::Runtime, flat: &[f32])
+                     -> Result<()> {
+        if flat.len() != self.state_len {
+            bail!("staged state length {} != {}", flat.len(),
+                  self.state_len);
+        }
+        self.buf = Some(rt.to_device_f32(flat, &[self.state_len])?);
+        Ok(())
+    }
+
+    /// Drop the device allocation (slot-free models, GC).
+    pub fn release(&mut self) {
+        self.buf = None;
+    }
+
+    pub fn is_materialized(&self) -> bool {
+        self.buf.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims(b: usize) -> KvDims {
+        KvDims { layers: 2, batch: b, heads: 3, seq: 8, head_dim: 4 }
+    }
+
+    fn pattern(d: KvDims, salt: f32) -> Vec<f32> {
+        (0..d.elements()).map(|i| i as f32 * 0.5 + salt).collect()
+    }
+
+    #[test]
+    fn insert_then_extract_roundtrip() {
+        let dd = dims(4);
+        let sd = dims(1);
+        let mut dst = vec![0.0; dd.elements()];
+        let src = pattern(sd, 100.0);
+        insert_slot_flat(&mut dst, dd, &src, sd, 2).unwrap();
+        let back = extract_slot_flat(&dst, dd, 2);
+        assert_eq!(back, src);
+        // other slots untouched
+        for s in [0usize, 1, 3] {
+            assert!(extract_slot_flat(&dst, dd, s).iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn insert_rejects_bad_dims() {
+        let dd = dims(4);
+        let mut bad = dims(1);
+        bad.seq = 16;
+        let mut dst = vec![0.0; dd.elements()];
+        let src = vec![0.0; bad.elements()];
+        assert!(insert_slot_flat(&mut dst, dd, &src, bad, 0).is_err());
+        let sd = dims(1);
+        let src = vec![0.0; sd.elements()];
+        assert!(insert_slot_flat(&mut dst, dd, &src, sd, 4).is_err());
+    }
+
+    #[test]
+    fn truncate_zeroes_exactly_the_tail() {
+        let d = dims(2);
+        let mut buf = pattern(d, 1.0);
+        let zeroed = truncate_tail_flat(&mut buf, d, 5);
+        // every (l, c, b, h) head has seq-5 = 3 rows of Dh zeroed
+        assert_eq!(zeroed, 2 * 2 * 2 * 3 * 3 * 4);
+        for l in 0..d.layers {
+            for c in 0..2 {
+                for b in 0..d.batch {
+                    for h in 0..d.heads {
+                        let head =
+                            d.plane_offset(l, c, b) + h * d.seq * d.row();
+                        for s in 0..d.seq {
+                            let row = &buf[head + s * d.row()
+                                           ..head + (s + 1) * d.row()];
+                            if s >= 5 {
+                                assert!(row.iter().all(|&x| x == 0.0));
+                            } else {
+                                assert!(row.iter().all(|&x| x != 0.0));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_past_capacity_is_noop() {
+        let d = dims(1);
+        let mut buf = pattern(d, 1.0);
+        assert_eq!(truncate_tail_flat(&mut buf, d, 8), 0);
+        assert_eq!(truncate_tail_flat(&mut buf, d, 99), 0);
+        assert!(buf.iter().all(|&x| x != 0.0));
+    }
+
+    // StateBuf tests need a PJRT client (buffers are device objects);
+    // creating a CPU client in-process is cheap.
+    fn runtime() -> crate::runtime::Runtime {
+        crate::runtime::Runtime::cpu().unwrap()
+    }
+
+    #[test]
+    fn statebuf_lazy_zeros_and_roundtrip() {
+        let rt = runtime();
+        let d = dims(2);
+        let state_len = d.elements() + 10;
+        let mut st = StateBuf::new(d, state_len);
+        assert!(!st.is_materialized());
+        assert_eq!(st.kv_len(), d.elements());
+        assert_eq!(st.tail_len(), 10);
+        let host = st.to_host(&rt).unwrap();
+        assert_eq!(host.len(), state_len);
+        assert!(host.iter().all(|&x| x == 0.0));
+        // stage a pattern and restore
+        let mut flat = host;
+        for (i, x) in flat.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        st.from_host(&rt, &flat).unwrap();
+        assert_eq!(st.to_host(&rt).unwrap(), flat);
+        st.release();
+        assert!(!st.is_materialized());
+    }
+
+    #[test]
+    fn statebuf_replace_checks_shape() {
+        let rt = runtime();
+        let d = dims(1);
+        let mut st = StateBuf::new(d, d.elements() + 4);
+        let wrong = rt.to_device_f32(&[0.0; 16], &[16]).unwrap();
+        assert!(st.replace(wrong).is_err());
+        let right = rt
+            .to_device_f32(&vec![2.0; d.elements() + 4],
+                           &[d.elements() + 4])
+            .unwrap();
+        st.replace(right).unwrap();
+        assert!(st.to_host(&rt).unwrap().iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn staged_slot_ops_compose_with_statebuf() {
+        // eviction path: stage to host, extract a slot, truncate, restore
+        let rt = runtime();
+        let d = dims(2);
+        let state_len = d.elements() + 6;
+        let mut st = StateBuf::new(d, state_len);
+        let mut flat = vec![0.0f32; state_len];
+        let sd = dims(1);
+        let one = pattern(sd, 3.0);
+        insert_slot_flat(&mut flat[..d.elements()], d, &one, sd, 1).unwrap();
+        st.from_host(&rt, &flat).unwrap();
+        let staged = st.to_host(&rt).unwrap();
+        assert_eq!(extract_slot_flat(&staged[..d.elements()], d, 1), one);
+    }
+}

@@ -1,0 +1,239 @@
+//! The logical validity mask (paper §4.4, Fig. 3, Eq. 8).
+//!
+//! `CacheMask` tracks, per batch slot, which physical KV-cache positions
+//! hold *logically valid* entries. Speculative execution writes candidate
+//! K/V rows eagerly; when candidates are rejected the mask is truncated
+//! immediately (logical rollback, O(1)) while the physical storage is left
+//! in place to be overwritten — decoupling validity from storage exactly as
+//! the paper describes. Physical truncation (Eq. 9) is batched separately
+//! (see `KvCache::fix_kv_cache`).
+//!
+//! Invariant maintained throughout: validity is always a *prefix* — a
+//! rollback removes a suffix, never punches holes. `debug_validate`
+//! asserts it.
+
+#[derive(Debug, Clone)]
+pub struct CacheMask {
+    /// valid_len[b] = number of leading valid positions for slot b.
+    valid: Vec<usize>,
+    /// written[b] = high-water mark of physically written positions.
+    written: Vec<usize>,
+    capacity: usize,
+    /// cumulative counters for diagnostics / the rollback bench
+    pub logical_rollbacks: u64,
+    pub entries_invalidated: u64,
+}
+
+impl CacheMask {
+    pub fn new(slots: usize, capacity: usize) -> Self {
+        CacheMask {
+            valid: vec![0; slots],
+            written: vec![0; slots],
+            capacity,
+            logical_rollbacks: 0,
+            entries_invalidated: 0,
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.valid.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn valid_len(&self, slot: usize) -> usize {
+        self.valid[slot]
+    }
+
+    pub fn written_len(&self, slot: usize) -> usize {
+        self.written[slot]
+    }
+
+    /// Record that `n` new positions were written AND are valid (a
+    /// committed append).
+    pub fn append_valid(&mut self, slot: usize, n: usize) {
+        assert!(self.valid[slot] + n <= self.capacity,
+                "slot {slot} overflow: {} + {n} > {}", self.valid[slot],
+                self.capacity);
+        self.valid[slot] += n;
+        self.written[slot] = self.written[slot].max(self.valid[slot]);
+    }
+
+    /// Record that `n` positions past the valid frontier were written
+    /// speculatively (candidate K/V rows, not yet valid).
+    pub fn append_speculative(&mut self, slot: usize, n: usize) {
+        let end = (self.valid[slot] + n).min(self.capacity);
+        self.written[slot] = self.written[slot].max(end);
+    }
+
+    /// Promote `n` speculative positions to valid (accepted candidates).
+    pub fn promote(&mut self, slot: usize, n: usize) {
+        assert!(self.valid[slot] + n <= self.written[slot],
+                "promoting unwritten entries");
+        self.valid[slot] += n;
+    }
+
+    /// Logical rollback (paper Eq. 8 path): truncate slot validity to
+    /// `new_len`. O(1): no data movement. Returns entries invalidated.
+    pub fn rollback_to(&mut self, slot: usize, new_len: usize) -> usize {
+        assert!(new_len <= self.valid[slot],
+                "rollback_to({new_len}) beyond valid {}", self.valid[slot]);
+        let dropped = self.valid[slot] - new_len;
+        self.valid[slot] = new_len;
+        if dropped > 0 {
+            self.logical_rollbacks += 1;
+            self.entries_invalidated += dropped as u64;
+        }
+        dropped
+    }
+
+    /// Stale suffix length per slot: written but no longer valid. These
+    /// are the Mask=0 entries of paper Fig. 3.
+    pub fn stale(&self, slot: usize) -> usize {
+        self.written[slot] - self.valid[slot]
+    }
+
+    /// The minimum rollback across the batch: positions >= this high-water
+    /// mark are stale in EVERY slot, so physical truncation can reclaim
+    /// them batch-wide (paper Eq. 9's r_min condition).
+    pub fn common_physical_frontier(&self) -> usize {
+        self.written.iter().zip(&self.valid)
+            .map(|(_, &v)| v)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Record a physical truncation at `frontier`: written marks clamp.
+    pub fn physical_truncate(&mut self, frontier: usize) {
+        for w in &mut self.written {
+            *w = (*w).min(frontier);
+        }
+        debug_assert!(self.valid.iter().zip(&self.written)
+                      .all(|(v, w)| v <= w || v == w),
+                      "truncated below valid data");
+    }
+
+    /// Reset one slot entirely (request completed, slot reused).
+    pub fn clear_slot(&mut self, slot: usize) {
+        self.valid[slot] = 0;
+        self.written[slot] = 0;
+    }
+
+    /// Expand the full boolean mask for one slot (the cache_mask row of
+    /// paper Fig. 3) — used by tests and diagnostics, not the hot path.
+    pub fn mask_row(&self, slot: usize) -> Vec<bool> {
+        (0..self.capacity).map(|i| i < self.valid[slot]).collect()
+    }
+
+    /// Check the prefix invariant.
+    pub fn debug_validate(&self) {
+        for s in 0..self.slots() {
+            assert!(self.valid[s] <= self.written[s]);
+            assert!(self.written[s] <= self.capacity);
+            let row = self.mask_row(s);
+            // prefix property: no valid entry after the first invalid one
+            let first_invalid = row.iter().position(|&b| !b)
+                .unwrap_or(row.len());
+            assert!(row[first_invalid..].iter().all(|&b| !b));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn append_and_rollback() {
+        let mut m = CacheMask::new(2, 16);
+        m.append_valid(0, 5);
+        m.append_speculative(0, 4);
+        assert_eq!(m.valid_len(0), 5);
+        assert_eq!(m.written_len(0), 9);
+        assert_eq!(m.stale(0), 4);
+        m.promote(0, 3);
+        assert_eq!(m.valid_len(0), 8);
+        let dropped = m.rollback_to(0, 6);
+        assert_eq!(dropped, 2);
+        assert_eq!(m.stale(0), 3);
+        m.debug_validate();
+    }
+
+    #[test]
+    fn mask_row_matches_fig3_semantics() {
+        let mut m = CacheMask::new(1, 8);
+        m.append_valid(0, 3);
+        m.append_speculative(0, 2);
+        let row = m.mask_row(0);
+        assert_eq!(row, vec![true, true, true, false, false, false, false,
+                             false]);
+    }
+
+    #[test]
+    fn clear_slot_resets() {
+        let mut m = CacheMask::new(2, 8);
+        m.append_valid(1, 7);
+        m.clear_slot(1);
+        assert_eq!(m.valid_len(1), 0);
+        assert_eq!(m.written_len(1), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_is_caught() {
+        let mut m = CacheMask::new(1, 4);
+        m.append_valid(0, 5);
+    }
+
+    #[test]
+    fn rollback_counters_accumulate() {
+        let mut m = CacheMask::new(1, 32);
+        m.append_valid(0, 10);
+        m.rollback_to(0, 8);
+        m.rollback_to(0, 8); // no-op: not counted
+        m.rollback_to(0, 5);
+        assert_eq!(m.logical_rollbacks, 2);
+        assert_eq!(m.entries_invalidated, 5);
+    }
+
+    /// Property: under arbitrary interleavings of append/speculate/promote/
+    /// rollback, the prefix invariant holds and valid <= written <= cap.
+    #[test]
+    fn property_prefix_invariant_under_random_ops() {
+        let mut rng = Rng::new(2024);
+        for _case in 0..200 {
+            let cap = rng.range(4, 64);
+            let mut m = CacheMask::new(rng.range(1, 4), cap);
+            for _ in 0..50 {
+                let s = rng.below(m.slots());
+                match rng.below(4) {
+                    0 => {
+                        let room = cap - m.valid_len(s);
+                        if room > 0 {
+                            let n = rng.range(1, room);
+                            m.append_valid(s, n);
+                        }
+                    }
+                    1 => {
+                        let n = rng.range(0, cap - m.valid_len(s));
+                        m.append_speculative(s, n);
+                    }
+                    2 => {
+                        let stale = m.stale(s);
+                        if stale > 0 {
+                            m.promote(s, rng.range(1, stale));
+                        }
+                    }
+                    _ => {
+                        let v = m.valid_len(s);
+                        m.rollback_to(s, rng.range(0, v));
+                    }
+                }
+                m.debug_validate();
+            }
+        }
+    }
+}

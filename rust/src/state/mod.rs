@@ -1,0 +1,9 @@
+//! State layer (paper §4.4): KV caches, the logical validity mask, and
+//! the per-model state registry with two-phase rollback.
+pub mod kv_cache;
+pub mod mask;
+pub mod state_manager;
+
+pub use kv_cache::{KvDims, StateBuf};
+pub use mask::CacheMask;
+pub use state_manager::{ModelState, StateManager};

@@ -1,0 +1,214 @@
+//! StateManager (paper §4.4): per-model inference state for multi-level
+//! heterogeneous chains.
+//!
+//! Each model in the pool has a `ModelState`: its physical KV cache plus
+//! the logical `CacheMask`. The mask's valid length for a slot is exactly
+//! "how many committed tokens this model has forwarded" — the quantity the
+//! coordinator uses to decide whether a model needs catch-up before it can
+//! draft or verify (asynchronous progress across heterogeneous models is
+//! the paper's central state-management challenge).
+//!
+//! Rollbacks are two-phase, following the paper:
+//!   1. logical  — O(1) mask truncation per slot, immediately after
+//!      verification (`rollback_to`);
+//!   2. physical — batched truncation of storage (`fix_kv_cache`) when the
+//!      whole batch agrees (Eq. 9), performed opportunistically.
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::state::kv_cache::{KvDims, StateBuf};
+use crate::state::mask::CacheMask;
+
+pub struct ModelState {
+    pub model: String,
+    pub kv: StateBuf,
+    pub mask: CacheMask,
+}
+
+impl ModelState {
+    pub fn new(model: &str, dims: KvDims, state_len: usize) -> Self {
+        ModelState {
+            model: model.to_string(),
+            kv: StateBuf::new(dims, state_len),
+            mask: CacheMask::new(dims.batch, dims.seq),
+        }
+    }
+
+    /// Tokens of the committed sequence this model has forwarded (slot).
+    pub fn forwarded(&self, slot: usize) -> usize {
+        self.mask.valid_len(slot)
+    }
+}
+
+/// Registry of per-model states plus lifecycle + rollback bookkeeping.
+pub struct StateManager {
+    states: BTreeMap<String, ModelState>,
+    pub physical_truncations: u64,
+    pub elements_reclaimed: u64,
+}
+
+impl StateManager {
+    pub fn new() -> Self {
+        StateManager {
+            states: BTreeMap::new(),
+            physical_truncations: 0,
+            elements_reclaimed: 0,
+        }
+    }
+
+    /// Get-or-create the state for a model.
+    pub fn ensure(&mut self, model: &str, dims: KvDims, state_len: usize)
+                  -> &mut ModelState {
+        self.states
+            .entry(model.to_string())
+            .or_insert_with(|| ModelState::new(model, dims, state_len))
+    }
+
+    pub fn get(&self, model: &str) -> Result<&ModelState> {
+        self.states.get(model)
+            .with_context(|| format!("no state for model {model:?}"))
+    }
+
+    pub fn get_mut(&mut self, model: &str) -> Result<&mut ModelState> {
+        self.states.get_mut(model)
+            .with_context(|| format!("no state for model {model:?}"))
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = &str> {
+        self.states.keys().map(|s| s.as_str())
+    }
+
+    /// Logical rollback for one model/slot (paper Eq. 8 path).
+    pub fn rollback(&mut self, model: &str, slot: usize, new_len: usize)
+                    -> Result<usize> {
+        Ok(self.get_mut(model)?.mask.rollback_to(slot, new_len))
+    }
+
+    /// Clamp every model's validity for a slot to `max_valid` (used after
+    /// a truncating commit: EOS / max_new cut the committed sequence below
+    /// what verification accepted).
+    pub fn clamp_slot(&mut self, slot: usize, max_valid: usize) {
+        for st in self.states.values_mut() {
+            if st.mask.valid_len(slot) > max_valid {
+                st.mask.rollback_to(slot, max_valid);
+            }
+        }
+    }
+
+    /// Request completed: wipe the slot across every model state.
+    pub fn clear_slot(&mut self, slot: usize) {
+        for st in self.states.values_mut() {
+            st.mask.clear_slot(slot);
+        }
+    }
+
+    /// Drop a model's state entirely (pool eviction / GC).
+    pub fn drop_model(&mut self, model: &str) {
+        self.states.remove(model);
+    }
+
+    /// Opportunistic physical truncation (paper Eq. 9). With the packed
+    /// state held in fixed-capacity device buffers, "reclaiming" the
+    /// common stale tail is bookkeeping — the region is excluded from
+    /// attention by the mask and will be overwritten in place — so this
+    /// clamps the written high-water marks and accounts the reclaimed
+    /// volume. (Host-staged caches — eviction, benches — use the real
+    /// zeroing path in kv_cache::truncate_tail_flat.)
+    pub fn fix_caches(&mut self) -> Result<usize> {
+        let mut total = 0usize;
+        for st in self.states.values_mut() {
+            let frontier = st.mask.common_physical_frontier();
+            let max_written = (0..st.mask.slots())
+                .map(|s| st.mask.written_len(s))
+                .max()
+                .unwrap_or(0);
+            if max_written > frontier {
+                let d = st.kv.dims;
+                total += d.layers * 2 * d.batch * d.heads
+                    * (max_written - frontier) * d.head_dim;
+                st.mask.physical_truncate(frontier);
+                self.physical_truncations += 1;
+            }
+        }
+        self.elements_reclaimed += total as u64;
+        Ok(total)
+    }
+
+    /// Diagnostics: (model, per-slot valid, per-slot stale).
+    pub fn report(&self) -> Vec<(String, Vec<usize>, Vec<usize>)> {
+        self.states.values().map(|st| {
+            let v = (0..st.mask.slots()).map(|s| st.mask.valid_len(s))
+                .collect();
+            let stale = (0..st.mask.slots()).map(|s| st.mask.stale(s))
+                .collect();
+            (st.model.clone(), v, stale)
+        }).collect()
+    }
+}
+
+impl Default for StateManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> KvDims {
+        KvDims { layers: 2, batch: 2, heads: 2, seq: 16, head_dim: 4 }
+    }
+
+    const SLEN: usize = 2 * 2 * 2 * 2 * 16 * 4 + 8;
+
+    #[test]
+    fn ensure_is_idempotent() {
+        let mut sm = StateManager::new();
+        sm.ensure("m0", dims(), SLEN).mask.append_valid(0, 5);
+        assert_eq!(sm.ensure("m0", dims(), SLEN).forwarded(0), 5);
+        assert!(sm.get("m1").is_err());
+    }
+
+    #[test]
+    fn rollback_and_clear() {
+        let mut sm = StateManager::new();
+        sm.ensure("m0", dims(), SLEN).mask.append_valid(0, 8);
+        sm.ensure("m1", dims(), SLEN).mask.append_valid(0, 6);
+        assert_eq!(sm.rollback("m0", 0, 5).unwrap(), 3);
+        assert_eq!(sm.get("m0").unwrap().forwarded(0), 5);
+        sm.clear_slot(0);
+        assert_eq!(sm.get("m0").unwrap().forwarded(0), 0);
+        assert_eq!(sm.get("m1").unwrap().forwarded(0), 0);
+    }
+
+    #[test]
+    fn fix_caches_reclaims_common_stale_tail() {
+        let mut sm = StateManager::new();
+        {
+            let st = sm.ensure("m0", dims(), SLEN);
+            st.mask.append_valid(0, 4);
+            st.mask.append_speculative(0, 6); // written to 10
+            st.mask.append_valid(1, 7);
+        }
+        let reclaimed = sm.fix_caches().unwrap();
+        assert!(reclaimed > 0);
+        assert_eq!(sm.physical_truncations, 1);
+        // frontier = max valid = 7: slot 0's written clamps to 7
+        let st = sm.get("m0").unwrap();
+        assert_eq!(st.mask.written_len(0), 7);
+        // second call is a no-op
+        let mut sm2 = sm;
+        let again = sm2.fix_caches().unwrap();
+        assert_eq!(again, 0);
+    }
+
+    #[test]
+    fn drop_model_removes_state() {
+        let mut sm = StateManager::new();
+        sm.ensure("m0", dims(), SLEN);
+        sm.drop_model("m0");
+        assert!(sm.get("m0").is_err());
+    }
+}

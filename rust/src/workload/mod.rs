@@ -1,0 +1,9 @@
+//! Workload generation (paper §5 Workloads): the four synthetic datasets
+//! and Poisson request arrival processes, plus trace record/replay.
+pub mod datasets;
+pub mod poisson;
+pub mod trace;
+
+pub use datasets::DatasetGen;
+pub use poisson::{open_loop_trace, ArrivalSpec};
+pub use trace::{load_trace, save_trace, TraceEntry};

@@ -1,0 +1,74 @@
+//! Trace record/replay: persist a workload (arrival offsets + prompts) so
+//! baselines and SpecRouter can be compared on the *identical* request
+//! stream.
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Value};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    pub offset_s: f64,
+    pub dataset: String,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+pub fn save_trace(path: &Path, trace: &[TraceEntry]) -> Result<()> {
+    let entries: Vec<Value> = trace.iter().map(|e| {
+        json::obj(vec![
+            ("offset_s", json::num(e.offset_s)),
+            ("dataset", json::s(&e.dataset)),
+            ("prompt", json::arr(e.prompt.iter()
+                .map(|&t| json::num(t as f64)).collect())),
+            ("max_new", json::num(e.max_new as f64)),
+        ])
+    }).collect();
+    std::fs::write(path, json::arr(entries).to_string())
+        .with_context(|| format!("writing trace {path:?}"))
+}
+
+pub fn load_trace(path: &Path) -> Result<Vec<TraceEntry>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path:?}"))?;
+    let v = json::parse(&text)?;
+    v.as_arr()?.iter().map(|e| {
+        Ok(TraceEntry {
+            offset_s: e.get("offset_s")?.as_f64()?,
+            dataset: e.get("dataset")?.as_str()?.to_string(),
+            prompt: e.get("prompt")?.as_arr()?.iter()
+                .map(|t| Ok(t.as_f64()? as i32))
+                .collect::<Result<_>>()?,
+            max_new: e.get("max_new")?.as_usize()?,
+        })
+    }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("specrouter_trace_test.json");
+        let t = vec![
+            TraceEntry { offset_s: 0.0, dataset: "gsm8k".into(),
+                         prompt: vec![1, 70, 71], max_new: 8 },
+            TraceEntry { offset_s: 0.25, dataset: "mtbench".into(),
+                         prompt: vec![1, 330], max_new: 4 },
+        ];
+        save_trace(&dir, &t).unwrap();
+        let back = load_trace(&dir).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn load_errors_on_garbage() {
+        let dir = std::env::temp_dir().join("specrouter_trace_bad.json");
+        std::fs::write(&dir, "{not json").unwrap();
+        assert!(load_trace(&dir).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -1,0 +1,56 @@
+#![allow(dead_code)] // each test binary uses a subset of these fixtures
+//! Shared fixtures for the integration suite: one PJRT pool for the whole
+//! test binary (XLA compilation is the dominant cost on this box), plus
+//! small helpers for configs and prompts.
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use specrouter::config::{EngineConfig, Mode};
+use specrouter::coordinator::ChainRouter;
+use specrouter::model_pool::ModelPool;
+use specrouter::workload::DatasetGen;
+
+pub fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The `xla` crate's wrappers use `Rc` internally, so `ModelPool` is not
+/// `Send`/`Sync`. The libtest harness runs tests *sequentially* (one
+/// thread alive at a time, joined in between: RUST_TEST_THREADS defaults
+/// to the core count, which is 1 on this box, and the Makefile pins
+/// `--test-threads=1` regardless), so handing the pool from one finished
+/// test thread to the next is sound — accesses are totally ordered by the
+/// harness's thread joins.
+struct SharedPool(Arc<ModelPool>);
+unsafe impl Send for SharedPool {}
+unsafe impl Sync for SharedPool {}
+
+pub fn shared_pool() -> Arc<ModelPool> {
+    static POOL: OnceLock<SharedPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        SharedPool(Arc::new(ModelPool::open(&art_dir()).expect(
+            "artifacts missing — run `make artifacts` first")))
+    }).0.clone()
+}
+
+pub fn cfg(batch: usize, mode: Mode) -> EngineConfig {
+    let mut c = EngineConfig::new(art_dir());
+    c.batch = batch;
+    c.window = 4;
+    c.target = "m2".into();
+    c.mode = mode;
+    c
+}
+
+pub fn router(batch: usize, mode: Mode) -> ChainRouter {
+    ChainRouter::with_pool(cfg(batch, mode), shared_pool())
+        .expect("router construction")
+}
+
+pub fn dataset_gen(name: &str, seed: u64) -> DatasetGen {
+    let pool = shared_pool();
+    let spec = pool.manifest.datasets.get(name)
+        .unwrap_or_else(|| panic!("dataset {name} missing"))
+        .clone();
+    DatasetGen::new(spec, seed)
+}

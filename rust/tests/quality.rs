@@ -1,0 +1,91 @@
+//! Output-quality integration tests (paper §5 "Output Quality"): under
+//! greedy decoding, every speculative configuration must produce output
+//! bit-identical to Target-Model-Only decoding. This is experiment Q1 of
+//! DESIGN.md §5 and the core correctness guarantee of the whole system.
+mod common;
+
+use specrouter::config::Mode;
+
+fn tmo_reference(dataset: &str, seed: u64, n: usize, max_new: usize)
+                 -> Vec<Vec<i32>> {
+    let mut gen = common::dataset_gen(dataset, seed);
+    let mut router = common::router(1, Mode::Tmo);
+    (0..n).map(|_| {
+        let (prompt, _) = gen.sample();
+        router.generate(dataset, &prompt, max_new).expect("tmo generate")
+    }).collect()
+}
+
+fn check_mode_matches_tmo(mode: Mode, dataset: &str, seed: u64, n: usize,
+                          max_new: usize) {
+    let expect = tmo_reference(dataset, seed, n, max_new);
+    let mut gen = common::dataset_gen(dataset, seed);
+    let mut router = common::router(1, mode.clone());
+    for want in &expect {
+        let (prompt, _) = gen.sample();
+        let got = router.generate(dataset, &prompt, max_new)
+            .expect("spec generate");
+        assert_eq!(&got, want,
+                   "greedy output diverged from TMO under {:?}", mode);
+    }
+}
+
+#[test]
+fn ssd_two_level_matches_tmo_greedy() {
+    check_mode_matches_tmo(
+        Mode::Fixed { chain: vec!["m0".into(), "m2".into()], window: 4 },
+        "gsm8k", 11, 3, 16);
+}
+
+#[test]
+fn ssd_mid_draft_matches_tmo_greedy() {
+    check_mode_matches_tmo(
+        Mode::Fixed { chain: vec!["m1".into(), "m2".into()], window: 8 },
+        "humaneval", 13, 3, 16);
+}
+
+#[test]
+fn three_level_matches_tmo_greedy() {
+    check_mode_matches_tmo(
+        Mode::Fixed { chain: vec!["m0".into(), "m1".into(), "m2".into()],
+                      window: 4 },
+        "mtbench", 17, 3, 16);
+}
+
+#[test]
+fn adaptive_matches_tmo_greedy() {
+    // the adaptive scheduler may route through any chain, including
+    // exploration steps — output must STILL be exactly TMO's
+    check_mode_matches_tmo(Mode::Adaptive, "mgsm", 19, 4, 16);
+}
+
+#[test]
+fn batched_spec_matches_tmo_greedy() {
+    // same property under batch=4 continuous batching: collect outputs by
+    // submitting everything at once
+    let dataset = "gsm8k";
+    let max_new = 12;
+    let expect = tmo_reference(dataset, 23, 4, max_new);
+
+    let mut gen = common::dataset_gen(dataset, 23);
+    let mut router = common::router(
+        4, Mode::Fixed { chain: vec!["m0".into(), "m2".into()], window: 4 });
+    let mut ids = Vec::new();
+    for _ in 0..4 {
+        let (prompt, _) = gen.sample();
+        let id = router.submit(specrouter::coordinator::Request {
+            id: 0,
+            dataset: dataset.into(),
+            prompt,
+            max_new,
+            arrival: std::time::Instant::now(),
+        }).unwrap();
+        ids.push(id);
+    }
+    router.run_until_idle(10_000).unwrap();
+    for (id, want) in ids.iter().zip(&expect) {
+        let got = &router.finished.iter().find(|f| f.id == *id)
+            .expect("finished").tokens;
+        assert_eq!(got, want, "batched greedy output diverged for {id}");
+    }
+}

@@ -1,0 +1,50 @@
+//! TCP front-end integration: JSON-lines protocol round-trip against a
+//! live engine thread on an ephemeral port.
+mod common;
+
+use std::sync::mpsc;
+
+use specrouter::config::Mode;
+use specrouter::server::{client_request, serve_tcp, spawn_engine, EngineMsg};
+
+#[test]
+fn tcp_roundtrip_and_concurrent_clients() {
+    let cfg = common::cfg(4, Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()], window: 4 });
+    let engine = spawn_engine(cfg).expect("engine");
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let tx = engine.tx.clone();
+    std::thread::spawn(move || {
+        serve_tcp("127.0.0.1:0", tx, Some(ready_tx)).ok();
+    });
+    let addr = ready_rx.recv().expect("server ready");
+
+    let mut gen = common::dataset_gen("gsm8k", 1);
+    // two concurrent clients
+    let handles: Vec<_> = (0..2).map(|_| {
+        let (prompt, _) = gen.sample();
+        std::thread::spawn(move || {
+            client_request(addr, "gsm8k", &prompt, 8).expect("client")
+        })
+    }).collect();
+    for h in handles {
+        let resp = h.join().unwrap();
+        let tokens = resp.get("tokens").unwrap().as_arr().unwrap();
+        assert!(!tokens.is_empty() && tokens.len() <= 8);
+        assert!(resp.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(resp.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    // malformed request gets an error object, not a hang
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(s, "this is not json").unwrap();
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "{line}");
+    }
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
