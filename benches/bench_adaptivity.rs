@@ -56,6 +56,8 @@ fn main() -> Result<()> {
             prompt: prompt.clone(),
             max_new: *max_new,
             arrival: Instant::now(),
+            class: specrouter::admission::SloClass::Standard,
+            slo_ms: None,
         });
         router.run_until_idle(1_000_000)?;
         let scored = router.sched.score_all(&router.prof, &router.sim);

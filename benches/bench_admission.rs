@@ -1,0 +1,89 @@
+//! SLO-aware admission under overload: FIFO vs the deadline-aware
+//! controller on identical Poisson traces, swept across load factors.
+//!
+//! The headline number (ISSUE 1 acceptance): under 2x overload the
+//! deadline-aware controller must hold interactive-class SLO attainment
+//! strictly above the FIFO baseline. Runs in virtual time against the
+//! real `AdmissionController` — no artifacts needed, deterministic.
+//!
+//!   cargo bench --bench bench_admission
+//!   SPECROUTER_QUICK=1 restricts the sweep to the 2x point.
+use specrouter::admission::{never_shed_table, run_sim, Discipline,
+                            SimResult, SimSpec, SloClass, SloTable};
+use specrouter::harness::{quick, Table};
+use specrouter::metrics;
+
+fn attainment(r: &SimResult, class: SloClass) -> f64 {
+    metrics::summarize_with_shed(&r.finished, 1e9, &r.shed)
+        .class_summary(class)
+        .map(|c| c.slo_attainment)
+        .unwrap_or(1.0)
+}
+
+fn main() {
+    let overloads: Vec<f64> = if quick() {
+        vec![2.0]
+    } else {
+        vec![0.5, 1.0, 1.5, 2.0, 3.0]
+    };
+
+    println!("SLO-class admission under overload \
+              (batch 4, TPOT 10ms, 600 requests, mix 30/40/30)\n");
+    let mut table = Table::new(&[
+        "load", "policy", "int SLO%", "std SLO%", "batch SLO%", "shed",
+        "int qdelay p95 (ms)",
+    ]);
+    let mut headline: Option<(f64, f64)> = None;
+    for &overload in &overloads {
+        let mut esf_spec = SimSpec::overload_default(
+            Discipline::EarliestSlackFirst, SloTable::default());
+        esf_spec.overload = overload;
+        let mut fifo_spec = SimSpec::overload_default(
+            Discipline::Fifo, never_shed_table());
+        fifo_spec.overload = overload;
+        for (name, spec) in [("fifo", fifo_spec), ("deadline", esf_spec)] {
+            let r = run_sim(&spec);
+            let s = metrics::summarize_with_shed(&r.finished, 1e9, &r.shed);
+            let qd = s.class_summary(SloClass::Interactive)
+                .map(|c| c.queue_delay_ms_p95)
+                .unwrap_or(0.0);
+            table.row(vec![
+                format!("{overload:.1}x"),
+                name.into(),
+                format!("{:.1}", attainment(&r, SloClass::Interactive)
+                        * 100.0),
+                format!("{:.1}", attainment(&r, SloClass::Standard)
+                        * 100.0),
+                format!("{:.1}", attainment(&r, SloClass::Batch) * 100.0),
+                s.shed.to_string(),
+                format!("{qd:.0}"),
+            ]);
+            if (overload - 2.0).abs() < 1e-9 {
+                let att = attainment(&r, SloClass::Interactive);
+                headline = Some(match headline {
+                    None => (att, 0.0),
+                    Some((fifo_att, _)) => (fifo_att, att),
+                });
+            }
+        }
+    }
+    table.print();
+
+    let (fifo_att, esf_att) = headline.expect("2x point missing");
+    println!("\n2x overload interactive attainment: \
+              FIFO {:.1}% vs deadline-aware {:.1}%",
+             fifo_att * 100.0, esf_att * 100.0);
+    // full per-class summary rows at the 2x point (metrics::Summary view)
+    let r = run_sim(&SimSpec::overload_default(
+        Discipline::EarliestSlackFirst, SloTable::default()));
+    let s = metrics::summarize_with_shed(&r.finished, 1e9, &r.shed);
+    println!("\n{}", metrics::row("deadline-aware @2x", &s, None));
+    for line in metrics::class_rows(&s) {
+        println!("{line}");
+    }
+    assert!(esf_att > fifo_att,
+            "ACCEPTANCE FAILED: deadline-aware interactive attainment \
+             {esf_att:.3} must exceed FIFO {fifo_att:.3} at 2x overload");
+    println!("\nacceptance: deadline-aware > FIFO for interactive \
+              attainment at 2x overload ✓");
+}

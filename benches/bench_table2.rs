@@ -91,7 +91,9 @@ fn main() -> Result<()> {
                     router.submit(Request {
                         id: 0, dataset: d.clone(), prompt: p.clone(),
                         max_new: *m,
-                        arrival: std::time::Instant::now() });
+                        arrival: std::time::Instant::now(),
+                        class: specrouter::admission::SloClass::Standard,
+                        slo_ms: None });
                 }
                 router.run_until_idle(10_000_000)?;
                 Ok(metrics::summarize(&router.finished, 60_000.0)

@@ -44,6 +44,8 @@ fn main() -> Result<()> {
             prompt,
             max_new: max_new.min(24),
             arrival: Instant::now(),
+            class: specrouter::admission::SloClass::Standard,
+            slo_ms: None,
         });
         router.run_until_idle(100_000)?;
         if i == 0 || i == n / 2 || i == n - 1 {

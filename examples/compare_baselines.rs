@@ -31,6 +31,8 @@ fn run_mode(pool: &Arc<ModelPool>, mode: Mode, batch: usize,
             prompt: prompt.clone(),
             max_new: *max_new,
             arrival: Instant::now(),
+            class: specrouter::admission::SloClass::Standard,
+            slo_ms: None,
         });
     }
     router.run_until_idle(1_000_000)?;

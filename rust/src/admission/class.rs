@@ -1,0 +1,250 @@
+//! SLO classes and the per-class policy table.
+//!
+//! Every request belongs to one of three service classes. A class binds a
+//! latency target (the per-request deadline is `arrival + target`), a
+//! priority weight (how urgent one second of slack is relative to other
+//! classes), and a shed policy (what the admission controller does with a
+//! request whose deadline is already unreachable).
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Service class of a request (paper-style serving tiers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Human-in-the-loop traffic: tight deadline, highest priority,
+    /// doomed requests are rejected fast rather than served late.
+    Interactive,
+    /// Default API traffic: moderate deadline, downgraded under overload.
+    Standard,
+    /// Offline / bulk traffic: loose deadline, never shed — it waits.
+    Batch,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] =
+        [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SloClass> {
+        match s {
+            "interactive" => Ok(SloClass::Interactive),
+            "standard" => Ok(SloClass::Standard),
+            "batch" => Ok(SloClass::Batch),
+            other => bail!("unknown slo_class {other:?} \
+                            (expected interactive|standard|batch)"),
+        }
+    }
+}
+
+impl fmt::Display for SloClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What the controller does with a request it judges doomed (its deadline
+/// cannot be met given the estimated queue delay and service time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedAction {
+    /// Reject immediately with a structured error — the client can retry
+    /// elsewhere instead of waiting for a guaranteed SLO miss.
+    Reject,
+    /// Re-class into a lower tier (looser deadline, lower priority) and
+    /// re-evaluate; the request is served late rather than dropped.
+    Downgrade(SloClass),
+    /// Queue regardless: the class tolerates arbitrary lateness.
+    Queue,
+}
+
+/// Per-class admission policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassPolicy {
+    /// Latency SLO for the class, in milliseconds from arrival.
+    pub target_ms: f64,
+    /// Priority weight: slack is divided by this when ordering the queue,
+    /// so a higher weight makes one second of slack more urgent.
+    pub weight: f64,
+    /// Doomed-request policy.
+    pub shed: ShedAction,
+}
+
+/// The per-class SLO table (config surface of the admission subsystem).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloTable {
+    pub interactive: ClassPolicy,
+    pub standard: ClassPolicy,
+    pub batch: ClassPolicy,
+    /// Aging rate: effective urgency gained per second spent waiting.
+    /// Prevents starvation of low-priority classes under sustained
+    /// high-priority load (earliest-slack-first alone would never serve
+    /// a batch request while interactive traffic keeps arriving).
+    pub aging_per_s: f64,
+}
+
+impl Default for SloTable {
+    fn default() -> Self {
+        // Targets sized for the miniature CPU pool (TPOT is tens of ms);
+        // production deployments override via EngineConfig.
+        SloTable {
+            interactive: ClassPolicy {
+                target_ms: 8_000.0,
+                weight: 4.0,
+                shed: ShedAction::Reject,
+            },
+            standard: ClassPolicy {
+                target_ms: 30_000.0,
+                weight: 2.0,
+                shed: ShedAction::Downgrade(SloClass::Batch),
+            },
+            batch: ClassPolicy {
+                target_ms: 120_000.0,
+                weight: 1.0,
+                shed: ShedAction::Queue,
+            },
+            aging_per_s: 1.0,
+        }
+    }
+}
+
+impl SloTable {
+    /// This table with every shed policy forced to `Queue` — the seed's
+    /// behaviour (pure queueing, nothing rejected or downgraded). Used by
+    /// the FIFO baseline so A/B comparisons measure the whole subsystem.
+    pub fn without_shedding(mut self) -> Self {
+        self.interactive.shed = ShedAction::Queue;
+        self.standard.shed = ShedAction::Queue;
+        self.batch.shed = ShedAction::Queue;
+        self
+    }
+
+    pub fn policy(&self, class: SloClass) -> &ClassPolicy {
+        match class {
+            SloClass::Interactive => &self.interactive,
+            SloClass::Standard => &self.standard,
+            SloClass::Batch => &self.batch,
+        }
+    }
+
+    /// Follow a class's downgrade chain to its terminal action — always
+    /// `Queue` or `Reject` for a validated table (the bound is a
+    /// belt-and-braces guard against unvalidated cycles).
+    pub fn terminal_action(&self, mut class: SloClass) -> ShedAction {
+        for _ in 0..SloClass::ALL.len() + 1 {
+            match self.policy(class).shed {
+                ShedAction::Downgrade(next) if next != class => class = next,
+                other => return other,
+            }
+        }
+        ShedAction::Reject
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for class in SloClass::ALL {
+            let p = self.policy(class);
+            if !p.target_ms.is_finite() || p.target_ms <= 0.0 {
+                bail!("slo class {class}: target_ms must be a positive \
+                       finite number");
+            }
+            if !p.weight.is_finite() || p.weight <= 0.0 {
+                bail!("slo class {class}: weight must be a positive \
+                       finite number");
+            }
+            if let ShedAction::Downgrade(to) = p.shed {
+                if to == class {
+                    bail!("slo class {class}: downgrade to itself");
+                }
+                if self.policy(to).target_ms < p.target_ms {
+                    bail!("slo class {class}: downgrade target {to} has a \
+                           tighter SLO ({} < {} ms)",
+                          self.policy(to).target_ms, p.target_ms);
+                }
+            }
+        }
+        // downgrade chains must terminate (no cycles)
+        for class in SloClass::ALL {
+            let mut cur = class;
+            for _ in 0..SloClass::ALL.len() + 1 {
+                match self.policy(cur).shed {
+                    ShedAction::Downgrade(to) if to != cur => cur = to,
+                    _ => break,
+                }
+            }
+            if let ShedAction::Downgrade(to) = self.policy(cur).shed {
+                if to != cur {
+                    bail!("downgrade cycle starting at {class}");
+                }
+            }
+        }
+        if !(self.aging_per_s >= 0.0) {
+            bail!("aging_per_s must be >= 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for c in SloClass::ALL {
+            assert_eq!(SloClass::parse(c.name()).unwrap(), c);
+        }
+        assert!(SloClass::parse("premium").is_err());
+    }
+
+    #[test]
+    fn default_table_is_valid() {
+        SloTable::default().validate().unwrap();
+    }
+
+    #[test]
+    fn terminal_action_resolves_downgrade_chains() {
+        let t = SloTable::default();
+        // interactive rejects directly; standard ends in batch's Queue
+        assert_eq!(t.terminal_action(SloClass::Interactive),
+                   ShedAction::Reject);
+        assert_eq!(t.terminal_action(SloClass::Standard), ShedAction::Queue);
+        assert_eq!(t.terminal_action(SloClass::Batch), ShedAction::Queue);
+    }
+
+    #[test]
+    fn validation_rejects_bad_tables() {
+        let mut t = SloTable::default();
+        t.interactive.target_ms = 0.0;
+        assert!(t.validate().is_err());
+
+        let mut t = SloTable::default();
+        t.standard.weight = -1.0;
+        assert!(t.validate().is_err());
+
+        // self-downgrade
+        let mut t = SloTable::default();
+        t.standard.shed = ShedAction::Downgrade(SloClass::Standard);
+        assert!(t.validate().is_err());
+
+        // downgrade into a tighter SLO makes doomed requests more doomed
+        let mut t = SloTable::default();
+        t.batch.target_ms = 1_000.0;
+        t.standard.shed = ShedAction::Downgrade(SloClass::Batch);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_downgrade_cycles() {
+        let mut t = SloTable::default();
+        t.standard.shed = ShedAction::Downgrade(SloClass::Batch);
+        t.batch.shed = ShedAction::Downgrade(SloClass::Standard);
+        // equal targets so the tighter-SLO check does not fire first
+        t.batch.target_ms = t.standard.target_ms;
+        assert!(t.validate().is_err());
+    }
+}

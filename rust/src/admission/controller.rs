@@ -1,0 +1,540 @@
+//! The admission controller: SLO-class-aware queueing and load shedding.
+//!
+//! Sits between `submit` and slot occupancy:
+//!
+//! * resolves each request's class policy into an absolute deadline,
+//! * estimates its service time from the observed TPOT (EMA fed by the
+//!   router as requests complete),
+//! * sheds or downgrades requests that are already *doomed* — the
+//!   estimated queue delay plus service time exceeds the deadline — so
+//!   the engine never burns slots on guaranteed SLO misses,
+//! * orders the survivors with the deadline-aware priority queue,
+//! * re-checks doom at pop time (queue state may have worsened while the
+//!   request waited), and
+//! * exports a headroom signal the scheduler uses to bias chain choice
+//!   under SLO pressure.
+//!
+//! All methods take `now: Instant` explicitly: real callers pass
+//! `Instant::now()`, while benches and tests drive virtual time for
+//! deterministic overload experiments.
+use std::collections::HashMap;
+use std::fmt;
+use std::time::{Duration, Instant};
+
+use crate::admission::class::{ShedAction, SloClass, SloTable};
+use crate::admission::queue::{signed_since, DeadlineQueue, Discipline,
+                              QueuedReq};
+use crate::coordinator::engine::Request;
+
+/// Fallback per-token service estimate before any TPOT was observed.
+const DEFAULT_TPOT_S: f64 = 1e-3;
+
+/// Ceiling on any resolved latency target (~1 year in ms): keeps
+/// client-supplied `slo_ms` inside `Duration`/`Instant` arithmetic range.
+const MAX_SLO_MS: f64 = 3.2e10;
+
+/// Why a request was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The waiting queue hit its hard capacity (backpressure).
+    QueueFull,
+    /// Estimated completion already misses the deadline.
+    Doomed,
+}
+
+impl ShedReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Doomed => "doomed",
+        }
+    }
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Record of one shed request (metrics input; delivered to waiting
+/// clients by the server loop).
+#[derive(Debug, Clone)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub dataset: String,
+    pub class: SloClass,
+    pub reason: ShedReason,
+    pub arrival: Instant,
+    pub shed_at: Instant,
+}
+
+/// Outcome of a submit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Queued under the request's own class.
+    Queued(SloClass),
+    /// Queued, but re-classed into a lower tier because the original
+    /// class's deadline was already unreachable.
+    Downgraded { from: SloClass, to: SloClass },
+    /// Rejected outright.
+    Shed(ShedReason),
+}
+
+impl SubmitOutcome {
+    pub fn is_shed(&self) -> bool {
+        matches!(self, SubmitOutcome::Shed(_))
+    }
+}
+
+/// SLO headroom snapshot fed back into chain selection: how much slack
+/// the tightest in-flight request has.
+#[derive(Debug, Clone, Copy)]
+pub struct HeadroomSignal {
+    /// Minimum (deadline - now - remaining work) over active slots, s.
+    pub slack_s: f64,
+}
+
+/// SLO-class-aware admission control (see module docs).
+pub struct AdmissionController {
+    queue: DeadlineQueue,
+    table: SloTable,
+    /// Engine slot count: queue delay is work divided by parallel slots.
+    batch: usize,
+    /// EMA of observed seconds-per-token; None until the first completion.
+    tpot_ema_s: Option<f64>,
+    ema_alpha: f64,
+    pub admitted_total: u64,
+    pub shed_total: u64,
+    pub downgraded_total: u64,
+    shed_by_class: HashMap<SloClass, u64>,
+    /// Pop-time sheds awaiting delivery to their clients.
+    pending_shed: Vec<ShedRecord>,
+}
+
+impl AdmissionController {
+    pub fn new(batch: usize, max_queue: usize, table: SloTable,
+               discipline: Discipline, ema_alpha: f64) -> Self {
+        let aging = table.aging_per_s;
+        AdmissionController {
+            queue: DeadlineQueue::new(max_queue, discipline, aging),
+            table,
+            batch: batch.max(1),
+            tpot_ema_s: None,
+            ema_alpha,
+            admitted_total: 0,
+            shed_total: 0,
+            downgraded_total: 0,
+            shed_by_class: HashMap::new(),
+            pending_shed: Vec::new(),
+        }
+    }
+
+    pub fn table(&self) -> &SloTable {
+        &self.table
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn shed_by_class(&self, class: SloClass) -> u64 {
+        self.shed_by_class.get(&class).copied().unwrap_or(0)
+    }
+
+    /// Observed seconds-per-token, if any request has completed yet.
+    pub fn tpot_estimate(&self) -> Option<f64> {
+        self.tpot_ema_s
+    }
+
+    /// Fold one observed per-token service time into the EMA.
+    pub fn observe_tpot(&mut self, tpot_s: f64) {
+        if !tpot_s.is_finite() || tpot_s <= 0.0 {
+            return;
+        }
+        self.tpot_ema_s = Some(match self.tpot_ema_s {
+            None => tpot_s,
+            Some(prev) =>
+                self.ema_alpha * tpot_s + (1.0 - self.ema_alpha) * prev,
+        });
+    }
+
+    fn tpot_or_default(&self) -> f64 {
+        self.tpot_ema_s.unwrap_or(DEFAULT_TPOT_S)
+    }
+
+    /// Estimated service time for a request, seconds.
+    pub fn est_service_s(&self, req: &Request) -> f64 {
+        req.max_new.max(1) as f64 * self.tpot_or_default()
+    }
+
+    /// Estimated queue delay for a newly-arriving request: all queued work
+    /// plus the in-flight remainder, spread over the slot count.
+    /// `active_tokens` is the sum of remaining tokens across occupied
+    /// slots (the router supplies it).
+    pub fn est_queue_delay_s(&self, active_tokens: usize) -> f64 {
+        let active_work = active_tokens as f64 * self.tpot_or_default();
+        (self.queue.queued_work_s() + active_work) / self.batch as f64
+    }
+
+    /// Class-aware queue-delay estimate for doom checks: under the
+    /// deadline discipline a request only waits behind work of its own or
+    /// higher priority, so counting the whole queue would over-shed
+    /// high-priority traffic. FIFO waits behind everything.
+    fn est_queue_delay_for(&self, weight: f64, active_tokens: usize) -> f64 {
+        let active_work = active_tokens as f64 * self.tpot_or_default();
+        let queued = match self.queue.discipline() {
+            Discipline::Fifo => self.queue.queued_work_s(),
+            Discipline::EarliestSlackFirst =>
+                self.queue.queued_work_at_least(weight),
+        };
+        (queued + active_work) / self.batch as f64
+    }
+
+    /// Resolve a request's deadline for a class: an explicit per-request
+    /// `slo_ms` pins the deadline regardless of class. The target is
+    /// clamped to a finite sane range — `slo_ms` arrives straight off the
+    /// wire, and `Duration::from_secs_f64` panics on NaN/inf/overflow,
+    /// which would let one malformed request kill the engine thread.
+    fn deadline_for(&self, req: &Request, class: SloClass) -> Instant {
+        let target_ms = req.slo_ms
+            .unwrap_or_else(|| self.table.policy(class).target_ms);
+        // NaN.max(0.0) == 0.0, so this also neutralizes NaN
+        let target_ms = target_ms.max(0.0).min(MAX_SLO_MS);
+        req.arrival + Duration::from_secs_f64(target_ms / 1e3)
+    }
+
+    fn record_shed(&mut self, req: &Request, class: SloClass,
+                   reason: ShedReason, now: Instant) -> ShedRecord {
+        self.shed_total += 1;
+        *self.shed_by_class.entry(class).or_insert(0) += 1;
+        ShedRecord {
+            id: req.id,
+            dataset: req.dataset.clone(),
+            class,
+            reason,
+            arrival: req.arrival,
+            shed_at: now,
+        }
+    }
+
+    fn enqueue(&mut self, req: Request, class: SloClass, deadline: Instant,
+               est_service_s: f64, now: Instant) {
+        let weight = self.table.policy(class).weight;
+        self.queue.push(QueuedReq {
+            class,
+            deadline,
+            est_service_s,
+            weight,
+            enqueued: now,
+            req,
+        });
+    }
+
+    /// Admit a request into the waiting queue (or shed it).
+    /// `active_tokens`: remaining generation work currently occupying
+    /// slots, used for the queue-delay estimate.
+    pub fn submit(&mut self, req: Request, now: Instant,
+                  active_tokens: usize) -> SubmitOutcome {
+        if self.queue.is_full() {
+            let rec = self.record_shed(&req, req.class,
+                                       ShedReason::QueueFull, now);
+            self.pending_shed.push(rec);
+            return SubmitOutcome::Shed(ShedReason::QueueFull);
+        }
+        let est_service = self.est_service_s(&req);
+        let original = req.class;
+        let mut class = original;
+        // walk the downgrade chain until the deadline is feasible or the
+        // policy ends in Reject/Queue (table validation bounds the walk,
+        // the counter is belt-and-braces)
+        for _ in 0..SloClass::ALL.len() + 1 {
+            let weight = self.table.policy(class).weight;
+            let est_delay = self.est_queue_delay_for(weight, active_tokens);
+            let deadline = self.deadline_for(&req, class);
+            let time_left = signed_since(deadline, now);
+            let doomed = est_delay + est_service > time_left;
+            let action = self.table.policy(class).shed;
+            if !doomed || action == ShedAction::Queue {
+                self.enqueue(req, class, deadline, est_service, now);
+                return if class == original {
+                    SubmitOutcome::Queued(class)
+                } else {
+                    self.downgraded_total += 1;
+                    SubmitOutcome::Downgraded { from: original, to: class }
+                };
+            }
+            match action {
+                ShedAction::Downgrade(to) if to != class => {
+                    if req.slo_ms.is_none() {
+                        class = to;
+                    } else if self.table.terminal_action(to)
+                        == ShedAction::Queue {
+                        // explicit slo_ms pins the deadline, so
+                        // re-classing cannot loosen it and would only
+                        // lower the queue priority — strictly worsening
+                        // the miss. Honor the chain's terminal Queue by
+                        // keeping the request at its own class.
+                        self.enqueue(req, class, deadline, est_service,
+                                     now);
+                        return SubmitOutcome::Queued(class);
+                    } else {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let rec = self.record_shed(&req, class, ShedReason::Doomed, now);
+        self.pending_shed.push(rec);
+        SubmitOutcome::Shed(ShedReason::Doomed)
+    }
+
+    /// Pop the next request to occupy a slot. Re-checks doom at pop time:
+    /// a `Reject`-policy request whose deadline became unreachable while
+    /// it waited is shed here instead of wasting a slot (its record lands
+    /// in `take_shed`).
+    pub fn pop(&mut self, now: Instant) -> Option<QueuedReq> {
+        while let Some(entry) = self.queue.pop(now) {
+            let doomed = entry.slack_s(now) < 0.0;
+            let action = self.table.policy(entry.class).shed;
+            if doomed && action == ShedAction::Reject {
+                let rec = self.record_shed(&entry.req, entry.class,
+                                           ShedReason::Doomed, now);
+                self.pending_shed.push(rec);
+                continue;
+            }
+            self.admitted_total += 1;
+            return Some(entry);
+        }
+        None
+    }
+
+    /// Drain shed records accumulated since the last call.
+    pub fn take_shed(&mut self) -> Vec<ShedRecord> {
+        std::mem::take(&mut self.pending_shed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admission::class::ClassPolicy;
+
+    fn req(id: u64, class: SloClass, max_new: usize, arrival: Instant)
+           -> Request {
+        Request {
+            id,
+            dataset: "gsm8k".into(),
+            prompt: vec![1, 2, 3],
+            max_new,
+            arrival,
+            class,
+            slo_ms: None,
+        }
+    }
+
+    fn ctrl(max_queue: usize) -> AdmissionController {
+        AdmissionController::new(1, max_queue, SloTable::default(),
+                                 Discipline::EarliestSlackFirst, 0.5)
+    }
+
+    #[test]
+    fn feasible_requests_queue_under_own_class() {
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        let out = c.submit(req(1, SloClass::Interactive, 8, now), now, 0);
+        assert_eq!(out, SubmitOutcome::Queued(SloClass::Interactive));
+        assert_eq!(c.queued(), 1);
+        let popped = c.pop(now).unwrap();
+        assert_eq!(popped.req.id, 1);
+        assert_eq!(c.admitted_total, 1);
+    }
+
+    #[test]
+    fn queue_full_sheds_with_backpressure() {
+        let now = Instant::now();
+        let mut c = ctrl(2);
+        for i in 0..2 {
+            assert!(!c.submit(req(i, SloClass::Standard, 8, now), now, 0)
+                    .is_shed());
+        }
+        let out = c.submit(req(9, SloClass::Standard, 8, now), now, 0);
+        assert_eq!(out, SubmitOutcome::Shed(ShedReason::QueueFull));
+        assert_eq!(c.shed_total, 1);
+        assert_eq!(c.take_shed().len(), 1);
+    }
+
+    #[test]
+    fn doomed_interactive_is_rejected_at_submit() {
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        // deadline pinned in the past via explicit slo_ms
+        let mut r = req(1, SloClass::Interactive, 8, now);
+        r.slo_ms = Some(0.0);
+        let later = now + Duration::from_millis(10);
+        let out = c.submit(r, later, 0);
+        assert_eq!(out, SubmitOutcome::Shed(ShedReason::Doomed));
+        assert_eq!(c.shed_by_class(SloClass::Interactive), 1);
+    }
+
+    #[test]
+    fn doomed_standard_downgrades_to_batch() {
+        let now = Instant::now();
+        // observed TPOT of 1s/token makes a 40-token request take ~40s,
+        // beyond standard's 30s target but inside batch's 120s
+        let mut c = ctrl(8);
+        c.observe_tpot(1.0);
+        let out = c.submit(req(1, SloClass::Standard, 40, now), now, 0);
+        assert_eq!(out, SubmitOutcome::Downgraded {
+            from: SloClass::Standard, to: SloClass::Batch });
+        assert_eq!(c.downgraded_total, 1);
+        assert_eq!(c.queued(), 1);
+        // the queued entry carries the batch deadline
+        let e = c.pop(now).unwrap();
+        assert_eq!(e.class, SloClass::Batch);
+        assert!(signed_since(e.deadline, now) > 100.0);
+    }
+
+    #[test]
+    fn batch_never_sheds_even_when_doomed() {
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        c.observe_tpot(10.0); // 10 s/token: everything is doomed
+        let out = c.submit(req(1, SloClass::Batch, 64, now), now, 0);
+        assert!(matches!(out, SubmitOutcome::Queued(SloClass::Batch)));
+        assert!(c.pop(now).is_some());
+        assert_eq!(c.shed_total, 0);
+    }
+
+    #[test]
+    fn pop_resheds_interactive_that_expired_while_waiting() {
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        assert!(!c.submit(req(1, SloClass::Interactive, 8, now), now, 0)
+                .is_shed());
+        // 20s later the 8s interactive deadline is long gone
+        let later = now + Duration::from_secs(20);
+        assert!(c.pop(later).is_none());
+        let shed = c.take_shed();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].reason, ShedReason::Doomed);
+        assert_eq!(shed[0].id, 1);
+    }
+
+    #[test]
+    fn queue_delay_estimate_scales_with_work_and_slots() {
+        let now = Instant::now();
+        let mut c = AdmissionController::new(
+            4, 64, SloTable::default(), Discipline::EarliestSlackFirst, 0.5);
+        c.observe_tpot(0.01);
+        assert_eq!(c.est_queue_delay_s(0), 0.0);
+        for i in 0..8 {
+            c.submit(req(i, SloClass::Batch, 100, now), now, 0);
+        }
+        // 8 requests x 100 tokens x 10ms / 4 slots = 2s
+        assert!((c.est_queue_delay_s(0) - 2.0).abs() < 1e-9);
+        // active work is folded in: 400 extra tokens over 4 slots = +1s
+        assert!((c.est_queue_delay_s(400) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tpot_ema_converges() {
+        let mut c = ctrl(8);
+        assert!(c.tpot_estimate().is_none());
+        c.observe_tpot(0.1);
+        assert!((c.tpot_estimate().unwrap() - 0.1).abs() < 1e-12);
+        for _ in 0..50 {
+            c.observe_tpot(0.2);
+        }
+        assert!((c.tpot_estimate().unwrap() - 0.2).abs() < 1e-6);
+        // garbage observations are ignored
+        c.observe_tpot(f64::NAN);
+        c.observe_tpot(-1.0);
+        assert!((c.tpot_estimate().unwrap() - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn explicit_slo_ms_overrides_class_target() {
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        c.observe_tpot(0.1);
+        // class batch would allow 120s, but the client pinned 1s; a
+        // 64-token request needs ~6.4s -> doomed -> batch policy queues
+        // it anyway (Queue action)
+        let mut r = req(1, SloClass::Batch, 64, now);
+        r.slo_ms = Some(1_000.0);
+        assert!(matches!(c.submit(r, now, 0),
+                         SubmitOutcome::Queued(SloClass::Batch)));
+        // same pinned deadline on an interactive request is rejected
+        let mut r = req(2, SloClass::Interactive, 64, now);
+        r.slo_ms = Some(1_000.0);
+        assert_eq!(c.submit(r, now, 0),
+                   SubmitOutcome::Shed(ShedReason::Doomed));
+    }
+
+    #[test]
+    fn explicit_slo_doom_keeps_class_instead_of_downgrading() {
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        c.observe_tpot(0.1);
+        // standard policy is Downgrade(Batch), but the pinned 1s deadline
+        // cannot be loosened by re-classing — dropping the priority would
+        // only make the miss worse. The chain terminates in Queue, so the
+        // request queues at its OWN class and weight.
+        let mut r = req(1, SloClass::Standard, 64, now);
+        r.slo_ms = Some(1_000.0);
+        assert_eq!(c.submit(r, now, 0),
+                   SubmitOutcome::Queued(SloClass::Standard));
+        assert_eq!(c.downgraded_total, 0);
+        let e = c.pop(now).unwrap();
+        assert_eq!(e.class, SloClass::Standard);
+        assert!((e.weight - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hostile_slo_ms_values_resolve_to_safe_deadlines() {
+        // slo_ms arrives straight off the wire; non-finite or absurd
+        // values must clamp instead of panicking the engine thread
+        // (Duration::from_secs_f64 panics on NaN/inf/overflow)
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        for (id, bad) in [f64::INFINITY, f64::NAN, 1e300, -1e300]
+            .into_iter().enumerate() {
+            let mut r = req(id as u64, SloClass::Batch, 4, now);
+            r.slo_ms = Some(bad);
+            // no panic is the property under test; batch policy queues
+            // or serves late depending on the clamped deadline
+            let out = c.submit(r, now, 0);
+            assert!(matches!(out, SubmitOutcome::Queued(_)
+                             | SubmitOutcome::Downgraded { .. }));
+        }
+        while c.pop(now).is_some() {}
+    }
+
+    #[test]
+    fn fifo_discipline_is_available_as_baseline() {
+        let now = Instant::now();
+        let mut c = AdmissionController::new(
+            1, 8, SloTable::default(), Discipline::Fifo, 0.5);
+        c.submit(req(1, SloClass::Batch, 8, now), now, 0);
+        c.submit(req(2, SloClass::Interactive, 8, now), now, 0);
+        assert_eq!(c.pop(now).unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn custom_table_policies_apply() {
+        let now = Instant::now();
+        let mut table = SloTable::default();
+        table.standard = ClassPolicy {
+            target_ms: 10.0,
+            weight: 2.0,
+            shed: ShedAction::Reject,
+        };
+        let mut c = AdmissionController::new(
+            1, 8, table, Discipline::EarliestSlackFirst, 0.5);
+        c.observe_tpot(1.0);
+        assert_eq!(c.submit(req(1, SloClass::Standard, 8, now), now, 0),
+                   SubmitOutcome::Shed(ShedReason::Doomed));
+    }
+}

@@ -1,0 +1,18 @@
+//! SLO-aware admission control (DESIGN.md §7): per-request service
+//! classes, a deadline-aware priority queue with aging, doom-based load
+//! shedding, and the headroom signal that feeds SLO pressure back into
+//! the scheduler's chain choice.
+//!
+//! The `Batcher` delegates all queueing here; the FIFO discipline is kept
+//! as a measured baseline (`bench_admission` compares the two under
+//! overload).
+pub mod class;
+pub mod controller;
+pub mod queue;
+pub mod sim;
+
+pub use class::{ClassPolicy, ShedAction, SloClass, SloTable};
+pub use controller::{AdmissionController, HeadroomSignal, ShedReason,
+                     ShedRecord, SubmitOutcome};
+pub use queue::{signed_since, DeadlineQueue, Discipline, QueuedReq};
+pub use sim::{never_shed_table, run_sim, SimResult, SimSpec};

@@ -1,0 +1,271 @@
+//! Deadline-aware priority queue: earliest-slack-first with aging.
+//!
+//! Each waiting request carries a deadline (arrival + class target) and a
+//! service-time estimate. The queue pops the entry with the smallest
+//! *effective urgency key*
+//!
+//! ```text
+//! key = (deadline - now - est_service) / class_weight - aging * waited
+//! ```
+//!
+//! Slack (time to spare if service started now) shrinks as real time
+//! passes, so within one class this is earliest-deadline-first; across
+//! classes the weight makes interactive slack more urgent than batch
+//! slack; and the aging term guarantees a long-waiting low-priority entry
+//! eventually outranks fresh high-priority arrivals (bounded starvation).
+//!
+//! A `Fifo` discipline is kept as the measured baseline — `bench_admission`
+//! compares per-class SLO attainment of the two under overload.
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::admission::class::SloClass;
+use crate::coordinator::engine::Request;
+
+/// Queue service discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// Arrival order (the seed's behaviour; baseline).
+    Fifo,
+    /// Weighted earliest-slack-first with aging.
+    EarliestSlackFirst,
+}
+
+/// One waiting request plus its resolved admission metadata.
+#[derive(Debug, Clone)]
+pub struct QueuedReq {
+    pub req: Request,
+    /// Effective class after any downgrade at submit time.
+    pub class: SloClass,
+    /// Absolute deadline (arrival + resolved latency target).
+    pub deadline: Instant,
+    /// Estimated service time (max_new x observed TPOT), seconds.
+    pub est_service_s: f64,
+    /// Priority weight copied from the class policy at enqueue.
+    pub weight: f64,
+    pub enqueued: Instant,
+}
+
+/// Signed seconds of `a - b` (Instant subtraction that can go negative).
+pub fn signed_since(a: Instant, b: Instant) -> f64 {
+    if a >= b {
+        a.duration_since(b).as_secs_f64()
+    } else {
+        -b.duration_since(a).as_secs_f64()
+    }
+}
+
+impl QueuedReq {
+    /// Seconds of slack left if service started at `now`.
+    pub fn slack_s(&self, now: Instant) -> f64 {
+        signed_since(self.deadline, now) - self.est_service_s
+    }
+}
+
+pub struct DeadlineQueue {
+    /// VecDeque so the FIFO discipline pops O(1); the deadline discipline
+    /// uses swap_remove_back, also O(1) after its O(n) scan.
+    items: VecDeque<QueuedReq>,
+    max_len: usize,
+    discipline: Discipline,
+    aging_per_s: f64,
+}
+
+impl DeadlineQueue {
+    pub fn new(max_len: usize, discipline: Discipline, aging_per_s: f64)
+               -> Self {
+        DeadlineQueue {
+            items: VecDeque::new(),
+            max_len,
+            discipline,
+            aging_per_s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.max_len
+    }
+
+    /// Total estimated service work (seconds) waiting in the queue.
+    pub fn queued_work_s(&self) -> f64 {
+        self.items.iter().map(|e| e.est_service_s).sum()
+    }
+
+    /// Queued work (seconds) at priority weight >= `weight` — the work a
+    /// new arrival of that weight would actually wait behind under the
+    /// earliest-slack-first discipline.
+    pub fn queued_work_at_least(&self, weight: f64) -> f64 {
+        self.items.iter()
+            .filter(|e| e.weight >= weight - 1e-12)
+            .map(|e| e.est_service_s)
+            .sum()
+    }
+
+    pub fn discipline(&self) -> Discipline {
+        self.discipline
+    }
+
+    /// Push without capacity check (the controller enforces capacity so it
+    /// can record the shed).
+    pub fn push(&mut self, entry: QueuedReq) {
+        self.items.push_back(entry);
+    }
+
+    fn key(&self, e: &QueuedReq, now: Instant) -> f64 {
+        e.slack_s(now) / e.weight
+            - self.aging_per_s * signed_since(now, e.enqueued).max(0.0)
+    }
+
+    /// Pop the next entry to admit under the configured discipline.
+    pub fn pop(&mut self, now: Instant) -> Option<QueuedReq> {
+        if self.items.is_empty() {
+            return None;
+        }
+        match self.discipline {
+            Discipline::Fifo => self.items.pop_front(),
+            Discipline::EarliestSlackFirst => {
+                // ties (possible under a coarse clock) break toward the
+                // earlier enqueue, then the smaller id — keeps pop order
+                // deterministic even though swap_remove reorders storage
+                let rank = |e: &QueuedReq| {
+                    (self.key(e, now), e.enqueued, e.req.id)
+                };
+                let mut best = 0;
+                let mut best_rank = rank(&self.items[0]);
+                for (i, e) in self.items.iter().enumerate().skip(1) {
+                    let r = rank(e);
+                    if r.partial_cmp(&best_rank)
+                        == Some(std::cmp::Ordering::Less) {
+                        best = i;
+                        best_rank = r;
+                    }
+                }
+                self.items.swap_remove_back(best)
+            }
+        }
+    }
+
+    /// Iterate waiting entries (diagnostics / shed sweeps).
+    pub fn iter(&self) -> impl Iterator<Item = &QueuedReq> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64, max_new: usize, arrival: Instant) -> Request {
+        Request {
+            id,
+            dataset: "gsm8k".into(),
+            prompt: vec![1, 2, 3],
+            max_new,
+            arrival,
+            class: SloClass::Standard,
+            slo_ms: None,
+        }
+    }
+
+    fn entry(id: u64, class: SloClass, deadline_in_s: f64, weight: f64,
+             now: Instant) -> QueuedReq {
+        QueuedReq {
+            req: req(id, 8, now),
+            class,
+            deadline: now + Duration::from_secs_f64(deadline_in_s),
+            est_service_s: 0.1,
+            weight,
+            enqueued: now,
+        }
+    }
+
+    #[test]
+    fn esf_orders_by_deadline_within_class() {
+        let now = Instant::now();
+        let mut q = DeadlineQueue::new(16, Discipline::EarliestSlackFirst,
+                                       0.0);
+        q.push(entry(1, SloClass::Standard, 9.0, 1.0, now));
+        q.push(entry(2, SloClass::Standard, 3.0, 1.0, now));
+        q.push(entry(3, SloClass::Standard, 6.0, 1.0, now));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop(now))
+            .map(|e| e.req.id)
+            .collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order() {
+        let now = Instant::now();
+        let mut q = DeadlineQueue::new(16, Discipline::Fifo, 0.0);
+        q.push(entry(1, SloClass::Standard, 9.0, 1.0, now));
+        q.push(entry(2, SloClass::Interactive, 0.5, 4.0, now));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop(now))
+            .map(|e| e.req.id)
+            .collect();
+        assert_eq!(order, vec![1, 2]);
+    }
+
+    #[test]
+    fn weight_makes_interactive_preempt_batch() {
+        let now = Instant::now();
+        let mut q = DeadlineQueue::new(16, Discipline::EarliestSlackFirst,
+                                       0.0);
+        // batch arrived first but has 120s of slack; interactive has 4s
+        q.push(entry(1, SloClass::Batch, 120.0, 1.0, now));
+        q.push(entry(2, SloClass::Interactive, 4.0, 4.0, now));
+        assert_eq!(q.pop(now).unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn aging_prevents_starvation() {
+        let now = Instant::now();
+        let later = now + Duration::from_secs(200);
+        let mut q = DeadlineQueue::new(16, Discipline::EarliestSlackFirst,
+                                       1.0);
+        // a batch entry enqueued 200s ago (at `now`), still 120s of slack
+        // at `later`...
+        q.push(entry(1, SloClass::Batch, 320.0, 1.0, now));
+        // ...beats a freshly-enqueued interactive entry
+        // (key 120 - 200 < ~4/4)
+        let mut fresh = entry(2, SloClass::Interactive, 204.0, 4.0, now);
+        fresh.enqueued = later;
+        q.push(fresh);
+        assert_eq!(q.pop(later).unwrap().req.id, 1);
+        // without the accumulated wait it would not win
+        let mut q = DeadlineQueue::new(16, Discipline::EarliestSlackFirst,
+                                       1.0);
+        q.push(entry(1, SloClass::Batch, 120.0, 1.0, now));
+        q.push(entry(2, SloClass::Interactive, 4.0, 4.0, now));
+        assert_eq!(q.pop(now).unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn slack_goes_negative_past_deadline() {
+        let now = Instant::now();
+        let e = entry(1, SloClass::Interactive, 1.0, 4.0, now);
+        let later = now + Duration::from_secs(5);
+        assert!(e.slack_s(later) < 0.0);
+        assert!(e.slack_s(now) > 0.0);
+    }
+
+    #[test]
+    fn queued_work_sums_service_estimates() {
+        let now = Instant::now();
+        let mut q = DeadlineQueue::new(16, Discipline::Fifo, 0.0);
+        assert_eq!(q.queued_work_s(), 0.0);
+        q.push(entry(1, SloClass::Standard, 9.0, 1.0, now));
+        q.push(entry(2, SloClass::Standard, 9.0, 1.0, now));
+        assert!((q.queued_work_s() - 0.2).abs() < 1e-12);
+        assert_eq!(q.len(), 2);
+        assert!(!q.is_full());
+    }
+}

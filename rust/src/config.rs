@@ -3,6 +3,8 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use crate::admission::SloTable;
+
 /// How tokens are accepted during verification (paper §2.2 step 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AcceptRule {
@@ -58,7 +60,16 @@ pub struct EngineConfig {
     /// EMA smoothing factor for profiler + similarity updates.
     pub ema_alpha: f64,
     /// SLO threshold on request completion latency, in milliseconds.
+    /// Used as the legacy single-threshold metric; admission decisions
+    /// use the per-class `slo_classes` table instead.
     pub slo_ms: f64,
+    /// Per-class SLO targets, priorities and shed policies.
+    pub slo_classes: SloTable,
+    /// Waiting-queue hard capacity (backpressure bound).
+    pub max_queue: usize,
+    /// Use plain FIFO admission instead of the deadline-aware queue
+    /// (baseline for A/B comparison; the seed's behaviour).
+    pub fifo_admission: bool,
     /// Seed the scheduler's α estimates with the manifest's offline
     /// (build-time) similarity instead of the optimistic prior.
     pub offline_sim_prior: bool,
@@ -88,6 +99,9 @@ impl EngineConfig {
             explore_eps: 0.08,
             ema_alpha: 0.2,
             slo_ms: 60_000.0,
+            slo_classes: SloTable::default(),
+            max_queue: 4096,
+            fifo_admission: false,
             offline_sim_prior: false,
             n_devices: 4,
             device_bytes: 2 << 30,
@@ -130,6 +144,10 @@ impl EngineConfig {
         if !(0.0 < self.ema_alpha && self.ema_alpha <= 1.0) {
             bail!("ema_alpha out of range");
         }
+        if self.max_queue < 1 {
+            bail!("max_queue must be >= 1");
+        }
+        self.slo_classes.validate()?;
         Ok(())
     }
 }
@@ -157,6 +175,19 @@ mod tests {
         assert!(c.validate(&batches, &windows).is_err());
         c.mode = Mode::Tmo;
         c.ema_alpha = 0.0;
+        assert!(c.validate(&batches, &windows).is_err());
+    }
+
+    #[test]
+    fn validation_covers_admission_knobs() {
+        let batches = [1, 4, 8];
+        let windows = [4, 8];
+        let mut c = EngineConfig::new("/tmp/a");
+        assert!(c.validate(&batches, &windows).is_ok());
+        c.max_queue = 0;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.max_queue = 16;
+        c.slo_classes.interactive.target_ms = -5.0;
         assert!(c.validate(&batches, &windows).is_err());
     }
 

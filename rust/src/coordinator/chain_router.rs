@@ -11,6 +11,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::admission::{Discipline, HeadroomSignal, QueuedReq, ShedRecord,
+                       SubmitOutcome};
 use crate::config::{AcceptRule, EngineConfig, Mode};
 use crate::coordinator::engine::{Batcher, Finished, Request, Slot};
 use crate::coordinator::executor::Executor;
@@ -24,6 +26,11 @@ use crate::state::{KvDims, StateManager};
 
 /// How often opportunistic physical truncation runs (steps).
 const FIX_CACHES_EVERY: u64 = 32;
+
+/// Signed milliseconds of `a - b`.
+fn signed_ms(a: Instant, b: Instant) -> f64 {
+    crate::admission::signed_since(a, b) * 1e3
+}
 
 pub struct ChainRouter {
     pub cfg: EngineConfig,
@@ -82,13 +89,23 @@ impl ChainRouter {
             AcceptRule::Probabilistic { seed } => seed,
             AcceptRule::Greedy => 7,
         };
+        // fifo_admission reproduces the seed end to end: arrival-order
+        // queueing AND no shedding/downgrading, so A/B runs compare the
+        // whole admission subsystem against the true baseline
+        let (discipline, table) = if cfg.fifo_admission {
+            (Discipline::Fifo, cfg.slo_classes.clone().without_shedding())
+        } else {
+            (Discipline::EarliestSlackFirst, cfg.slo_classes.clone())
+        };
+        let batcher = Batcher::with_admission(
+            batch, cfg.max_queue, table, discipline, cfg.ema_alpha);
         let router = ChainRouter {
             exec,
             prof: Profiler::new(cfg.ema_alpha),
             sim,
             sched,
             states: StateManager::new(),
-            batcher: Batcher::new(batch, 4096),
+            batcher,
             finished: Vec::new(),
             rng: Rng::new(rng_seed),
             cached_chain: None,
@@ -151,19 +168,41 @@ impl ChainRouter {
     }
 
     /// Enqueue a request (assigning its id). Returns the id, or None if
-    /// backpressure rejected it.
-    pub fn submit(&mut self, mut req: Request) -> Option<u64> {
+    /// admission shed it (queue full or deadline unreachable).
+    pub fn submit(&mut self, req: Request) -> Option<u64> {
+        let (id, outcome) = self.submit_detailed(req);
+        (!outcome.is_shed()).then_some(id)
+    }
+
+    /// `submit` exposing the admission decision (shed reason, downgrade).
+    /// Shed records for rejected requests land in [`Self::take_shed`].
+    pub fn submit_detailed(&mut self, mut req: Request)
+                           -> (u64, SubmitOutcome) {
         req.id = self.next_id;
         self.next_id += 1;
         let id = req.id;
-        self.batcher.submit(req).then_some(id)
+        (id, self.batcher.submit(req))
+    }
+
+    /// Drain shed records (rejected requests) for delivery to clients.
+    pub fn take_shed(&mut self) -> Vec<ShedRecord> {
+        self.batcher.take_shed()
+    }
+
+    /// Drain finished records. The serving loop uses this instead of
+    /// indexing `finished` so a long-running server does not accumulate
+    /// every record it ever produced.
+    pub fn drain_finished(&mut self) -> Vec<Finished> {
+        std::mem::take(&mut self.finished)
     }
 
     /// Admit as many waiting requests as there are free slots: prefill on
     /// the prefill set, commit the first token (TTFT), insert KV.
     pub fn admit_pending(&mut self) -> Result<usize> {
         let mut admitted = 0;
-        while let Some((slot_idx, req)) = self.batcher.next_admission() {
+        while let Some((slot_idx, entry)) = self.batcher.next_admission() {
+            let QueuedReq { req, class, deadline, .. } = entry;
+            let slo_ms = signed_ms(deadline, req.arrival);
             if req.prompt.is_empty()
                 || req.prompt.len() > self.pool.manifest.prefill {
                 // unservable request: drop with an empty record
@@ -178,6 +217,8 @@ impl ChainRouter {
                     first_token: now,
                     completed: now,
                     finished_by_eos: false,
+                    class,
+                    slo_ms,
                 });
                 continue;
             }
@@ -216,6 +257,8 @@ impl ChainRouter {
                 first_token: first_token_at,
                 finished_by_eos: first_token
                     == self.pool.manifest.special.eos,
+                class,
+                deadline,
             };
             let done = slot.finished_by_eos || slot.remaining() == 0;
             self.batcher.occupy(slot_idx, slot);
@@ -243,8 +286,10 @@ impl ChainRouter {
                 let replan = self.cached_chain.is_none()
                     || self.steps % self.cfg.replan_every as u64 == 0;
                 if replan {
-                    let c = self.sched.select_from(
-                        &self.prof, &self.sim, self.cached_chain.as_ref());
+                    let headroom = self.headroom_signal();
+                    let c = self.sched.select_with_headroom(
+                        &self.prof, &self.sim, self.cached_chain.as_ref(),
+                        headroom.as_ref());
                     self.cached_chain = Some(c);
                 }
                 self.cached_chain.clone().unwrap()
@@ -332,9 +377,39 @@ impl ChainRouter {
         Ok(Some(total))
     }
 
+    /// SLO headroom over the in-flight requests: minimum slack (deadline
+    /// minus now minus estimated remaining work) across occupied slots.
+    /// None until a TPOT has been observed or when no slot is occupied —
+    /// the scheduler then runs unbiased.
+    fn headroom_signal(&self) -> Option<HeadroomSignal> {
+        if self.cfg.fifo_admission {
+            // the FIFO baseline reproduces the seed end to end: no part
+            // of the admission subsystem may leak into chain selection
+            return None;
+        }
+        let tpot = self.batcher.admission.tpot_estimate()?;
+        let now = Instant::now();
+        let slack = self.batcher.slots.iter().flatten()
+            .map(|s| {
+                crate::admission::signed_since(s.deadline, now)
+                    - s.remaining() as f64 * tpot
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap())?;
+        Some(HeadroomSignal { slack_s: slack })
+    }
+
     fn complete(&mut self, slot_idx: usize) {
         let Some(slot) = self.batcher.free(slot_idx) else { return };
         self.states.clear_slot(slot_idx);
+        let completed = Instant::now();
+        let ntok = slot.generated().len();
+        if ntok >= 2 {
+            // feed the observed per-token service time back into the
+            // admission controller's doom / headroom estimates
+            let tpot_s = completed.duration_since(slot.first_token)
+                .as_secs_f64() / (ntok - 1) as f64;
+            self.batcher.admission.observe_tpot(tpot_s);
+        }
         self.finished.push(Finished {
             id: slot.req.id,
             dataset: slot.req.dataset.clone(),
@@ -343,8 +418,10 @@ impl ChainRouter {
             arrival: slot.req.arrival,
             admitted: slot.admitted,
             first_token: slot.first_token,
-            completed: Instant::now(),
+            completed,
             finished_by_eos: slot.finished_by_eos,
+            class: slot.class,
+            slo_ms: signed_ms(slot.deadline, slot.req.arrival),
         });
     }
 
@@ -373,7 +450,9 @@ impl ChainRouter {
             prompt: prompt.to_vec(),
             max_new,
             arrival: Instant::now(),
-        }).context("queue full")?;
+            class: crate::admission::SloClass::Standard,
+            slo_ms: None,
+        }).context("request shed at admission")?;
         self.run_until_idle(100_000)?;
         let rec = self.finished.iter().rev().find(|f| f.id == id)
             .context("request did not finish")?;

@@ -7,8 +7,15 @@
 //! (`KvCache::insert_slot`). This is continuous batching at slot
 //! granularity — the dynamic-growth variant of vLLM is out of scope
 //! (DESIGN.md §4).
-use std::collections::VecDeque;
+//!
+//! Queueing is delegated to the SLO-aware [`AdmissionController`]
+//! (DESIGN.md §7): requests carry a service class, waiting order is
+//! weighted earliest-slack-first with aging, and doomed requests are shed
+//! or downgraded instead of occupying slots they cannot use.
 use std::time::Instant;
+
+use crate::admission::{AdmissionController, Discipline, QueuedReq,
+                       ShedRecord, SloClass, SloTable, SubmitOutcome};
 
 /// A generation request as submitted by a client.
 #[derive(Debug, Clone)]
@@ -18,6 +25,10 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     pub arrival: Instant,
+    /// Service class (admission priority + default latency target).
+    pub class: SloClass,
+    /// Optional explicit latency target overriding the class default.
+    pub slo_ms: Option<f64>,
 }
 
 /// A finished request with its full timing record (metrics input).
@@ -32,6 +43,10 @@ pub struct Finished {
     pub first_token: Instant,
     pub completed: Instant,
     pub finished_by_eos: bool,
+    /// Effective service class (after any admission downgrade).
+    pub class: SloClass,
+    /// Resolved latency target the request was served under, ms.
+    pub slo_ms: f64,
 }
 
 /// One occupied batch slot.
@@ -43,6 +58,9 @@ pub struct Slot {
     pub admitted: Instant,
     pub first_token: Instant,
     pub finished_by_eos: bool,
+    /// Effective class + absolute deadline resolved at admission.
+    pub class: SloClass,
+    pub deadline: Instant,
 }
 
 impl Slot {
@@ -55,23 +73,25 @@ impl Slot {
     }
 }
 
-/// Waiting queue + slot table.
+/// Slot table + SLO-aware admission queue.
 pub struct Batcher {
     pub slots: Vec<Option<Slot>>,
-    queue: VecDeque<Request>,
-    pub admitted_total: u64,
-    pub rejected_total: u64,
-    max_queue: usize,
+    pub admission: AdmissionController,
 }
 
 impl Batcher {
+    /// Default policy table and deadline-aware discipline.
     pub fn new(batch: usize, max_queue: usize) -> Self {
+        Self::with_admission(batch, max_queue, SloTable::default(),
+                             Discipline::EarliestSlackFirst, 0.2)
+    }
+
+    pub fn with_admission(batch: usize, max_queue: usize, table: SloTable,
+                          discipline: Discipline, ema_alpha: f64) -> Self {
         Batcher {
             slots: (0..batch).map(|_| None).collect(),
-            queue: VecDeque::new(),
-            admitted_total: 0,
-            rejected_total: 0,
-            max_queue,
+            admission: AdmissionController::new(batch, max_queue, table,
+                                                discipline, ema_alpha),
         }
     }
 
@@ -79,19 +99,21 @@ impl Batcher {
         self.slots.len()
     }
 
-    /// Enqueue; returns false (rejected) if the queue is at capacity —
-    /// backpressure toward the client.
-    pub fn submit(&mut self, req: Request) -> bool {
-        if self.queue.len() >= self.max_queue {
-            self.rejected_total += 1;
-            return false;
-        }
-        self.queue.push_back(req);
-        true
+    /// Remaining generation work across occupied slots (tokens) — input
+    /// to the controller's queue-delay estimate.
+    pub fn active_tokens(&self) -> usize {
+        self.slots.iter().flatten().map(|s| s.remaining()).sum()
+    }
+
+    /// Enqueue through the admission controller (sheds on a full queue or
+    /// a doomed deadline — backpressure toward the client).
+    pub fn submit(&mut self, req: Request) -> SubmitOutcome {
+        let active = self.active_tokens();
+        self.admission.submit(req, Instant::now(), active)
     }
 
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.admission.queued()
     }
 
     pub fn active(&self) -> usize {
@@ -99,21 +121,27 @@ impl Batcher {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.active() == 0 && self.queue.is_empty()
+        self.active() == 0 && self.admission.queued() == 0
     }
 
-    /// Next (slot index, request) pair to admit, if a slot is free and a
-    /// request waits. The caller performs the prefill and then `occupy`s.
-    pub fn next_admission(&mut self) -> Option<(usize, Request)> {
+    /// Next (slot index, queued request) pair to admit, if a slot is free
+    /// and a viable request waits. Doomed reject-class requests are shed
+    /// inside the controller (drain with [`Batcher::take_shed`]). The
+    /// caller performs the prefill and then `occupy`s.
+    pub fn next_admission(&mut self) -> Option<(usize, QueuedReq)> {
         let free = self.slots.iter().position(|s| s.is_none())?;
-        let req = self.queue.pop_front()?;
-        Some((free, req))
+        let entry = self.admission.pop(Instant::now())?;
+        Some((free, entry))
+    }
+
+    /// Drain shed records accumulated by the controller.
+    pub fn take_shed(&mut self) -> Vec<ShedRecord> {
+        self.admission.take_shed()
     }
 
     pub fn occupy(&mut self, slot: usize, s: Slot) {
         assert!(self.slots[slot].is_none(), "slot {slot} already occupied");
         self.slots[slot] = Some(s);
-        self.admitted_total += 1;
     }
 
     pub fn free(&mut self, slot: usize) -> Option<Slot> {
@@ -131,6 +159,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::admission::ShedReason;
 
     fn req(id: u64) -> Request {
         Request {
@@ -139,47 +168,67 @@ mod tests {
             prompt: vec![1, 10, 11],
             max_new: 4,
             arrival: Instant::now(),
+            class: SloClass::Standard,
+            slo_ms: None,
         }
     }
 
-    fn slot_for(r: Request) -> Slot {
-        let committed = r.prompt.clone();
+    fn slot_for(entry: QueuedReq) -> Slot {
+        let committed = entry.req.prompt.clone();
         Slot {
-            req: r,
+            req: entry.req,
             committed,
             admitted: Instant::now(),
             first_token: Instant::now(),
             finished_by_eos: false,
+            class: entry.class,
+            deadline: entry.deadline,
         }
     }
 
     #[test]
-    fn admission_fills_free_slots_fifo() {
+    fn admission_fills_free_slots_in_order() {
         let mut b = Batcher::new(2, 10);
         assert!(b.next_admission().is_none());
         b.submit(req(1));
         b.submit(req(2));
         b.submit(req(3));
-        let (s0, r1) = b.next_admission().unwrap();
-        assert_eq!((s0, r1.id), (0, 1));
-        b.occupy(s0, slot_for(r1));
-        let (s1, r2) = b.next_admission().unwrap();
-        assert_eq!((s1, r2.id), (1, 2));
-        b.occupy(s1, slot_for(r2));
+        // same class + near-identical deadlines: earliest-deadline order
+        // matches arrival order
+        let (s0, e1) = b.next_admission().unwrap();
+        assert_eq!((s0, e1.req.id), (0, 1));
+        b.occupy(s0, slot_for(e1));
+        let (s1, e2) = b.next_admission().unwrap();
+        assert_eq!((s1, e2.req.id), (1, 2));
+        b.occupy(s1, slot_for(e2));
         assert!(b.next_admission().is_none()); // full
         assert_eq!(b.queued(), 1);
         b.free(0);
-        let (s, r3) = b.next_admission().unwrap();
-        assert_eq!((s, r3.id), (0, 3));
+        let (s, e3) = b.next_admission().unwrap();
+        assert_eq!((s, e3.req.id), (0, 3));
     }
 
     #[test]
     fn backpressure_rejects_above_capacity() {
         let mut b = Batcher::new(1, 2);
-        assert!(b.submit(req(1)));
-        assert!(b.submit(req(2)));
-        assert!(!b.submit(req(3)));
-        assert_eq!(b.rejected_total, 1);
+        assert!(!b.submit(req(1)).is_shed());
+        assert!(!b.submit(req(2)).is_shed());
+        assert_eq!(b.submit(req(3)),
+                   SubmitOutcome::Shed(ShedReason::QueueFull));
+        assert_eq!(b.admission.shed_total, 1);
+        assert_eq!(b.take_shed().len(), 1);
+    }
+
+    #[test]
+    fn higher_priority_class_jumps_the_queue() {
+        let mut b = Batcher::new(1, 10);
+        b.submit(req(1)); // standard
+        let mut vip = req(2);
+        vip.class = SloClass::Interactive;
+        b.submit(vip);
+        let (_, e) = b.next_admission().unwrap();
+        assert_eq!(e.req.id, 2, "interactive must preempt standard");
+        assert_eq!(e.class, SloClass::Interactive);
     }
 
     #[test]
@@ -188,11 +237,12 @@ mod tests {
         assert!(b.is_idle());
         b.submit(req(7));
         assert!(!b.is_idle());
-        let (i, r) = b.next_admission().unwrap();
-        let mut s = slot_for(r);
+        let (i, e) = b.next_admission().unwrap();
+        let mut s = slot_for(e);
         s.committed.push(99);
         b.occupy(i, s);
         assert_eq!(b.active(), 1);
+        assert_eq!(b.active_tokens(), 3); // max_new 4, 1 generated
         let seqs = b.slot_seqs();
         assert_eq!(seqs[0].unwrap(), &[1, 10, 11, 99]);
         assert!(seqs[1].is_none());
@@ -206,8 +256,10 @@ mod tests {
     fn double_occupy_panics() {
         let mut b = Batcher::new(1, 4);
         b.submit(req(1));
-        let (i, r) = b.next_admission().unwrap();
-        b.occupy(i, slot_for(r));
-        b.occupy(i, slot_for(req(2)));
+        b.submit(req(2));
+        let (i, e) = b.next_admission().unwrap();
+        b.occupy(i, slot_for(e));
+        let e2 = b.admission.pop(Instant::now()).unwrap();
+        b.occupy(i, slot_for(e2));
     }
 }

@@ -22,6 +22,7 @@
 //! chains can still be compared (and ε-exploration refreshes stale ones).
 use std::sync::Arc;
 
+use crate::admission::HeadroomSignal;
 use crate::config::EngineConfig;
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::similarity::SimilarityTracker;
@@ -71,6 +72,11 @@ pub struct ScoredChain {
     /// rather than a measurement
     pub cold: bool,
 }
+
+/// Floor on the per-step time budget derived from headroom, so a nearly
+/// blown deadline cannot drive the budget to zero and the penalty to
+/// infinity.
+const MIN_STEP_BUDGET_S: f64 = 5e-3;
 
 pub struct Scheduler {
     pub manifest: Arc<Manifest>,
@@ -249,8 +255,45 @@ impl Scheduler {
     pub fn select_from(&mut self, profiler: &Profiler,
                        sim: &SimilarityTracker, current: Option<&Chain>)
                        -> Chain {
+        self.select_with_headroom(profiler, sim, current, None)
+    }
+
+    /// Headroom-adjusted score: under tight SLO headroom a chain whose
+    /// *whole step* costs more than a fraction of the tightest in-flight
+    /// slack risks blowing a deadline inside a single step, so its
+    /// predicted effective time is penalized proportionally — and a chain
+    /// whose single step exceeds the entire remaining slack (a guaranteed
+    /// mid-step deadline blow) is excluded outright. With generous
+    /// headroom (or none reported, or the deadline already lost) this is
+    /// exactly `predicted_eff_s` — pure Eq. 7 throughput optimization.
+    fn effective_score(s: &ScoredChain, headroom: Option<&HeadroomSignal>)
+                       -> f64 {
+        match headroom {
+            // slack already gone: rushing cannot save the deadline, so
+            // fall back to throughput-optimal
+            Some(h) if h.slack_s > 0.0 => {
+                if s.cost_s > h.slack_s {
+                    return f64::INFINITY;
+                }
+                // a step may consume at most a quarter of the worst slack
+                let budget = (h.slack_s * 0.25).max(MIN_STEP_BUDGET_S);
+                let over = (s.cost_s / budget - 1.0).max(0.0);
+                s.predicted_eff_s * (1.0 + over)
+            }
+            _ => s.predicted_eff_s,
+        }
+    }
+
+    /// `select_from` with SLO feedback (DESIGN.md §7): the admission
+    /// layer's headroom signal biases the choice toward chains with
+    /// cheaper worst-case steps when in-flight deadlines are tight.
+    pub fn select_with_headroom(&mut self, profiler: &Profiler,
+                                sim: &SimilarityTracker,
+                                current: Option<&Chain>,
+                                headroom: Option<&HeadroomSignal>)
+                                -> Chain {
         self.plans += 1;
-        let scored = self.score_all(profiler, sim);
+        let mut scored = self.score_all(profiler, sim);
         let warmup_budget = 3 * scored.len() as u64;
         if self.plans <= warmup_budget {
             if let Some(c) = scored.iter().find(|s| s.cold) {
@@ -259,13 +302,30 @@ impl Scheduler {
             }
         }
         if scored.len() > 1 && self.rng.f64() < self.cfg.explore_eps {
-            // explore: prefer cold (never-measured) chains, else uniform
+            // explore: prefer cold (never-measured) chains, else uniform —
+            // but never explore a chain whose single step is a guaranteed
+            // deadline blow under the current headroom (infinite score)
             self.explorations += 1;
-            let cold: Vec<_> = scored.iter().filter(|s| s.cold).collect();
+            let feasible: Vec<&ScoredChain> = scored.iter()
+                .filter(|s| Self::effective_score(s, headroom).is_finite())
+                .collect();
+            let pool: Vec<&ScoredChain> = if feasible.is_empty() {
+                scored.iter().collect()
+            } else {
+                feasible
+            };
+            let cold: Vec<_> = pool.iter().filter(|s| s.cold).collect();
             if !cold.is_empty() {
                 return cold[self.rng.below(cold.len())].chain.clone();
             }
-            return scored[self.rng.below(scored.len())].chain.clone();
+            return pool[self.rng.below(pool.len())].chain.clone();
+        }
+        if headroom.is_some() {
+            scored.sort_by(|a, b| {
+                Self::effective_score(a, headroom)
+                    .partial_cmp(&Self::effective_score(b, headroom))
+                    .unwrap()
+            });
         }
         if let Some(cur) = current {
             if let Some(cur_scored) = scored.iter()
@@ -273,8 +333,8 @@ impl Scheduler {
                 // 25%: switching re-syncs the incoming models' caches
                 // across every in-flight sequence, which near-tied
                 // predictions never pay back
-                if scored[0].predicted_eff_s
-                    > cur_scored.predicted_eff_s * 0.75 {
+                if Self::effective_score(&scored[0], headroom)
+                    > Self::effective_score(cur_scored, headroom) * 0.75 {
                     return cur.clone();
                 }
             }
@@ -559,6 +619,64 @@ mod tests {
                 let best = s.score_all(&prof, &sim)[0].chain.clone();
                 assert_eq!(picked, best);
             }
+        }
+    }
+
+    #[test]
+    fn tight_headroom_biases_toward_cheap_steps() {
+        let mut c = cfg();
+        c.explore_eps = 0.0;
+        let mut s = Scheduler::new(manifest(), c, 1);
+        let mut prof = Profiler::new(1.0);
+        let mut sim = SimilarityTracker::new(1.0);
+        let k = |m: &str, kind, w| FnKey { model: m.into(), kind,
+                                           batch: 4, window: w };
+        // TMO step: cheap (100ms); speculative step: 8x better per-token
+        // but a 500ms whole-step cost
+        prof.record_call(&k("m2", FnKind::Decode, 0),
+                         Duration::from_millis(100));
+        for w in [4usize, 8] {
+            for m in ["m0", "m1"] {
+                prof.record_call(&k(m, FnKind::Draft, w),
+                                 Duration::from_millis(150));
+                prof.record_call(&k(m, FnKind::Verify, w),
+                                 Duration::from_millis(100));
+            }
+            prof.record_call(&k("m2", FnKind::Verify, w),
+                             Duration::from_millis(250));
+        }
+        sim.observe_acceptance("m0", "m2", 4, 4);
+        sim.observe_acceptance("m1", "m2", 4, 4);
+        sim.observe_acceptance("m0", "m1", 4, 4);
+        // burn the cold-start warm-up so greedy selection applies
+        while s.plans <= 3 * s.candidate_chains().len() as u64 {
+            let _ = s.select(&prof, &sim);
+        }
+        // generous headroom: the speculative chain wins on throughput
+        let roomy = HeadroomSignal { slack_s: 60.0 };
+        let picked = s.select_with_headroom(&prof, &sim, None, Some(&roomy));
+        assert!(picked.is_speculative(),
+                "with 60s slack the speculative chain should win: {picked:?}");
+        // 200ms of slack: budget 50ms — every speculative step (>=500ms)
+        // overshoots by 10x while TMO overshoots by 2x; TMO wins
+        let tight = HeadroomSignal { slack_s: 0.2 };
+        let picked = s.select_with_headroom(&prof, &sim, None, Some(&tight));
+        assert_eq!(picked, Chain::target_only("m2"),
+                   "tight headroom must fall back to cheap steps");
+        // and with no signal at all, behaviour equals select_from
+        let a = s.select_with_headroom(&prof, &sim, None, None);
+        let b = s.select_from(&prof, &sim, None);
+        assert_eq!(a, b);
+        // forced exploration must also respect the feasibility filter:
+        // under tight headroom only TMO's step fits, so even eps=1.0
+        // never picks a guaranteed mid-step deadline blow
+        let mut c2 = cfg();
+        c2.explore_eps = 1.0;
+        let mut s2 = Scheduler::new(manifest(), c2, 3);
+        for _ in 0..20 {
+            let picked = s2.select_with_headroom(&prof, &sim, None,
+                                                 Some(&tight));
+            assert_eq!(picked, Chain::target_only("m2"));
         }
     }
 

@@ -122,6 +122,8 @@ fn run_offline_inner(pool: &Arc<ModelPool>, mode: Mode, batch: usize,
                 prompt: prompt.clone(),
                 max_new: *max_new,
                 arrival: Instant::now(),
+                class: crate::admission::SloClass::Standard,
+                slo_ms: None,
             });
         }
     };

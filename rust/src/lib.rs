@@ -15,6 +15,7 @@
 //!
 //! Python never runs at serving time: after `make artifacts` the binary is
 //! self-contained.
+pub mod admission;
 pub mod config;
 pub mod coordinator;
 pub mod harness;

@@ -17,7 +17,8 @@ use specrouter::config::{AcceptRule, EngineConfig, Mode};
 use specrouter::coordinator::ChainRouter;
 use specrouter::metrics;
 use specrouter::model_pool::ModelPool;
-use specrouter::workload::{open_loop_trace, ArrivalSpec, DatasetGen};
+use specrouter::workload::{open_loop_trace_classed, ArrivalSpec, ClassMix,
+                           DatasetGen};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
@@ -53,6 +54,21 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     }
     if let Some(s) = flags.get("slo-ms") {
         cfg.slo_ms = s.parse().context("--slo-ms")?;
+    }
+    for (flag, target_ms) in [
+        ("slo-interactive-ms", &mut cfg.slo_classes.interactive.target_ms),
+        ("slo-standard-ms", &mut cfg.slo_classes.standard.target_ms),
+        ("slo-batch-ms", &mut cfg.slo_classes.batch.target_ms),
+    ] {
+        if let Some(s) = flags.get(flag) {
+            *target_ms = s.parse().with_context(|| format!("--{flag}"))?;
+        }
+    }
+    if let Some(q) = flags.get("max-queue") {
+        cfg.max_queue = q.parse().context("--max-queue")?;
+    }
+    if flags.contains_key("fifo-admission") {
+        cfg.fifo_admission = true;
     }
     if flags.contains_key("offline-prior") {
         cfg.offline_sim_prior = true;
@@ -183,8 +199,27 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .with_context(|| format!("unknown dataset {dataset}"))?
         .clone();
     let mut gen = DatasetGen::new(spec, seed);
-    let trace = open_loop_trace(
-        &ArrivalSpec { rate, n_requests: n, seed }, &mut gen);
+    let mix = match flags.get("class-mix").map(|s| s.as_str()) {
+        None => None,
+        Some("default") => Some(ClassMix::default_mix()),
+        Some(raw) => {
+            let parts: Vec<f64> = raw.split(',')
+                .map(|p| p.trim().parse().context("--class-mix"))
+                .collect::<Result<_>>()?;
+            if parts.len() != 3 {
+                bail!("--class-mix wants interactive,standard,batch");
+            }
+            if parts.iter().any(|p| !p.is_finite() || *p < 0.0)
+                || parts.iter().sum::<f64>() <= 0.0 {
+                bail!("--class-mix proportions must be non-negative with \
+                       a positive sum (got {raw})");
+            }
+            Some(ClassMix { interactive: parts[0], standard: parts[1],
+                            batch: parts[2] })
+        }
+    };
+    let trace = open_loop_trace_classed(
+        &ArrivalSpec { rate, n_requests: n, seed }, &mut gen, mix.as_ref());
     let start = Instant::now();
     let reqs = specrouter::workload::poisson::requests_from_trace(
         &trace, start);
@@ -207,8 +242,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             }
         }
     }
-    let s = metrics::summarize(&router.finished, slo);
+    let shed = router.take_shed();
+    let s = metrics::summarize_with_shed(&router.finished, slo, &shed);
     println!("{}", metrics::row(&label, &s, None));
+    if !s.per_class.is_empty() {
+        println!("\nper-class SLO (admission view):");
+        for line in metrics::class_rows(&s) {
+            println!("{line}");
+        }
+    }
     println!("\nchain selections:");
     for (chain, cnt) in router.prof.selection_table() {
         println!("  {chain}: {cnt}");
@@ -295,7 +337,17 @@ fn main() -> Result<()> {
                  \x20 --sample-seed S    probabilistic sampling (default \
                  greedy)\n\
                  \x20 --offline-prior    seed scheduler with build-time \
-                 similarity");
+                 similarity\n\
+                 \n\
+                 admission flags (serve / serve-tcp):\n\
+                 \x20 --slo-interactive-ms N  interactive class target\n\
+                 \x20 --slo-standard-ms N     standard class target\n\
+                 \x20 --slo-batch-ms N        batch class target\n\
+                 \x20 --max-queue N           waiting-queue capacity\n\
+                 \x20 --fifo-admission        FIFO baseline (no deadline \
+                 queue)\n\
+                 \x20 --class-mix A,B,C       serve: class proportions \
+                 (or `default`)");
             Ok(())
         }
         other => bail!("unknown command {other:?} (try `specrouter help`)"),

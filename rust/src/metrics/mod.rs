@@ -1,7 +1,11 @@
 //! Serving metrics (paper §5 Metrics): goodput, request throughput, TTFT,
-//! TPOT, EAF (speedup) and SLO attainment over finished-request records.
+//! TPOT, EAF (speedup) and SLO attainment over finished-request records —
+//! plus per-SLO-class attainment, queue-delay percentiles and shed counts
+//! from the admission subsystem (DESIGN.md §7).
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::admission::{ShedRecord, SloClass};
 use crate::coordinator::engine::Finished;
 
 /// Aggregate summary over a set of finished requests.
@@ -22,6 +26,30 @@ pub struct Summary {
     pub latency_ms_p95: f64,
     /// fraction of requests completing within the SLO threshold
     pub slo_attainment: f64,
+    /// admission-queue delay (admitted - arrival) percentiles
+    pub queue_delay_ms_p50: f64,
+    pub queue_delay_ms_p95: f64,
+    /// requests shed by admission (0 unless `summarize_with_shed`)
+    pub shed: usize,
+    /// per-SLO-class breakdown (classes present in the records)
+    pub per_class: Vec<ClassSummary>,
+}
+
+/// Per-class serving outcome. Attainment counts shed requests as misses:
+/// a rejected request did not meet its SLO, and excluding it would let an
+/// aggressive shedder fake perfect attainment.
+#[derive(Debug, Clone)]
+pub struct ClassSummary {
+    pub class: SloClass,
+    /// completed requests in the class
+    pub requests: usize,
+    /// shed (rejected) requests in the class
+    pub shed: usize,
+    /// fraction of (completed + shed) meeting the per-request target
+    pub slo_attainment: f64,
+    pub latency_ms_p95: f64,
+    pub queue_delay_ms_p50: f64,
+    pub queue_delay_ms_p95: f64,
 }
 
 impl Summary {
@@ -32,6 +60,11 @@ impl Summary {
             return 0.0;
         }
         baseline_tpot_ms / self.tpot_ms_mean
+    }
+
+    /// Breakdown row for one class, if present.
+    pub fn class_summary(&self, class: SloClass) -> Option<&ClassSummary> {
+        self.per_class.iter().find(|c| c.class == class)
     }
 }
 
@@ -47,6 +80,11 @@ fn ms(a: Instant, b: Instant) -> f64 {
     b.duration_since(a).as_secs_f64() * 1e3
 }
 
+fn sorted(mut v: Vec<f64>) -> Vec<f64> {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
 /// Per-request TPOT in ms: time after the first token divided by the
 /// remaining tokens (None for single-token outputs).
 pub fn request_tpot_ms(f: &Finished) -> Option<f64> {
@@ -56,36 +94,91 @@ pub fn request_tpot_ms(f: &Finished) -> Option<f64> {
     Some(ms(f.first_token, f.completed) / (f.tokens.len() - 1) as f64)
 }
 
+fn empty_summary() -> Summary {
+    Summary {
+        requests: 0, tokens: 0, makespan_s: 0.0, goodput_tps: 0.0,
+        req_throughput: 0.0, ttft_ms_mean: 0.0, ttft_ms_p50: 0.0,
+        ttft_ms_p95: 0.0, tpot_ms_mean: 0.0, tpot_ms_p50: 0.0,
+        tpot_ms_p95: 0.0, latency_ms_p95: 0.0, slo_attainment: 0.0,
+        queue_delay_ms_p50: 0.0, queue_delay_ms_p95: 0.0, shed: 0,
+        per_class: Vec::new(),
+    }
+}
+
+fn class_breakdown(finished: &[Finished], shed: &[ShedRecord])
+                   -> Vec<ClassSummary> {
+    let mut by_class: BTreeMap<SloClass, (Vec<&Finished>, usize)> =
+        BTreeMap::new();
+    for f in finished {
+        by_class.entry(f.class).or_default().0.push(f);
+    }
+    for s in shed {
+        by_class.entry(s.class).or_default().1 += 1;
+    }
+    by_class.into_iter().map(|(class, (fs, nshed))| {
+        // a served request always commits at least one token, so an
+        // empty-token record is an unservable drop — it must not count
+        // as an SLO hit (its near-zero latency would otherwise let
+        // malformed traffic fake perfect attainment)
+        let hits = fs.iter()
+            .filter(|f| !f.tokens.is_empty()
+                    && ms(f.arrival, f.completed) <= f.slo_ms)
+            .count();
+        let total = fs.len() + nshed;
+        let lats = sorted(fs.iter()
+            .map(|f| ms(f.arrival, f.completed)).collect());
+        let qds = sorted(fs.iter()
+            .map(|f| ms(f.arrival, f.admitted)).collect());
+        ClassSummary {
+            class,
+            requests: fs.len(),
+            shed: nshed,
+            slo_attainment: if total == 0 { 0.0 }
+                else { hits as f64 / total as f64 },
+            latency_ms_p95: percentile(&lats, 0.95),
+            queue_delay_ms_p50: percentile(&qds, 0.50),
+            queue_delay_ms_p95: percentile(&qds, 0.95),
+        }
+    }).collect()
+}
+
 /// Summarize a batch of finished requests against an SLO threshold on
-/// total request latency.
+/// total request latency (legacy single-threshold view; the per-class
+/// breakdown uses each record's own resolved target).
 pub fn summarize(finished: &[Finished], slo_ms: f64) -> Summary {
+    summarize_with_shed(finished, slo_ms, &[])
+}
+
+/// `summarize` folding in admission shed records: shed counts appear per
+/// class and count against that class's attainment.
+pub fn summarize_with_shed(finished: &[Finished], slo_ms: f64,
+                           shed: &[ShedRecord]) -> Summary {
     let n = finished.len();
     if n == 0 {
-        return Summary {
-            requests: 0, tokens: 0, makespan_s: 0.0, goodput_tps: 0.0,
-            req_throughput: 0.0, ttft_ms_mean: 0.0, ttft_ms_p50: 0.0,
-            ttft_ms_p95: 0.0, tpot_ms_mean: 0.0, tpot_ms_p50: 0.0,
-            tpot_ms_p95: 0.0, latency_ms_p95: 0.0, slo_attainment: 0.0,
-        };
+        let mut s = empty_summary();
+        s.shed = shed.len();
+        s.per_class = class_breakdown(finished, shed);
+        return s;
     }
     let tokens: u64 = finished.iter().map(|f| f.tokens.len() as u64).sum();
     let t0 = finished.iter().map(|f| f.arrival).min().unwrap();
     let t1 = finished.iter().map(|f| f.completed).max().unwrap();
     let makespan_s = t1.duration_since(t0).as_secs_f64().max(1e-9);
 
-    let mut ttfts: Vec<f64> = finished.iter()
-        .map(|f| ms(f.arrival, f.first_token))
-        .collect();
-    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mut tpots: Vec<f64> = finished.iter()
-        .filter_map(request_tpot_ms)
-        .collect();
-    tpots.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mut lats: Vec<f64> = finished.iter()
-        .map(|f| ms(f.arrival, f.completed))
-        .collect();
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let slo_ok = lats.iter().filter(|&&l| l <= slo_ms).count();
+    let ttfts = sorted(finished.iter()
+        .map(|f| ms(f.arrival, f.first_token)).collect());
+    let tpots = sorted(finished.iter()
+        .filter_map(request_tpot_ms).collect());
+    let lats = sorted(finished.iter()
+        .map(|f| ms(f.arrival, f.completed)).collect());
+    let qds = sorted(finished.iter()
+        .map(|f| ms(f.arrival, f.admitted)).collect());
+    // unservable drops (empty tokens, near-zero latency) are misses here
+    // too, matching the per-class rule in `class_breakdown`
+    let slo_ok = finished.iter()
+        .filter(|f| !f.tokens.is_empty()
+                && ms(f.arrival, f.completed) <= slo_ms)
+        .count();
 
     Summary {
         requests: n,
@@ -101,7 +194,13 @@ pub fn summarize(finished: &[Finished], slo_ms: f64) -> Summary {
         tpot_ms_p50: percentile(&tpots, 0.50),
         tpot_ms_p95: percentile(&tpots, 0.95),
         latency_ms_p95: percentile(&lats, 0.95),
-        slo_attainment: slo_ok as f64 / n as f64,
+        // shed requests count as misses here too (same anti-gaming rule
+        // as the per-class rows): hits over everything that arrived
+        slo_attainment: slo_ok as f64 / (n + shed.len()) as f64,
+        queue_delay_ms_p50: percentile(&qds, 0.50),
+        queue_delay_ms_p95: percentile(&qds, 0.95),
+        shed: shed.len(),
+        per_class: class_breakdown(finished, shed),
     }
 }
 
@@ -110,30 +209,63 @@ pub fn row(label: &str, s: &Summary, eaf: Option<f64>) -> String {
     format!(
         "{label:<24} req={:<4} tok={:<6} goodput={:>8.2} t/s  \
          req/s={:>6.3}  TTFT(ms) mean={:>8.1} p95={:>8.1}  \
-         TPOT(ms) mean={:>8.1} p95={:>8.1}  SLO={:>5.1}%{}",
+         TPOT(ms) mean={:>8.1} p95={:>8.1}  SLO={:>5.1}%{}{}",
         s.requests, s.tokens, s.goodput_tps, s.req_throughput,
         s.ttft_ms_mean, s.ttft_ms_p95, s.tpot_ms_mean, s.tpot_ms_p95,
         s.slo_attainment * 100.0,
+        if s.shed > 0 { format!("  shed={}", s.shed) }
+        else { String::new() },
         eaf.map(|e| format!("  EAF={e:>5.2}x")).unwrap_or_default())
+}
+
+/// Render the per-class breakdown (one row per class present).
+pub fn class_rows(s: &Summary) -> Vec<String> {
+    s.per_class.iter().map(|c| {
+        format!(
+            "  class={:<12} req={:<4} shed={:<4} SLO={:>5.1}%  \
+             queue-delay(ms) p50={:>8.1} p95={:>8.1}  lat p95={:>8.1}",
+            c.class.name(), c.requests, c.shed, c.slo_attainment * 100.0,
+            c.queue_delay_ms_p50, c.queue_delay_ms_p95, c.latency_ms_p95)
+    }).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::admission::ShedReason;
     use std::time::Duration;
 
     fn fin(arrival: Instant, ttft_ms: u64, total_ms: u64, ntok: usize)
            -> Finished {
+        fin_class(arrival, ttft_ms, total_ms, ntok, SloClass::Standard,
+                  60_000.0)
+    }
+
+    fn fin_class(arrival: Instant, ttft_ms: u64, total_ms: u64, ntok: usize,
+                 class: SloClass, slo_ms: f64) -> Finished {
         Finished {
             id: 0,
             dataset: "d".into(),
             prompt_len: 4,
             tokens: vec![7; ntok],
             arrival,
-            admitted: arrival,
+            admitted: arrival + Duration::from_millis(ttft_ms / 2),
             first_token: arrival + Duration::from_millis(ttft_ms),
             completed: arrival + Duration::from_millis(total_ms),
             finished_by_eos: false,
+            class,
+            slo_ms,
+        }
+    }
+
+    fn shed_rec(arrival: Instant, class: SloClass) -> ShedRecord {
+        ShedRecord {
+            id: 99,
+            dataset: "d".into(),
+            class,
+            reason: ShedReason::Doomed,
+            arrival,
+            shed_at: arrival,
         }
     }
 
@@ -164,6 +296,9 @@ mod tests {
         assert!((s.goodput_tps - 10.0).abs() < 0.5);
         // SLO 950ms: first request took 1000ms (miss), second 800ms (hit)
         assert!((s.slo_attainment - 0.5).abs() < 1e-9);
+        // queue delay = ttft/2 per fixture: {50, 25} -> p50 between them
+        assert!(s.queue_delay_ms_p50 >= 25.0 - 1e-9
+                && s.queue_delay_ms_p50 <= 50.0 + 1e-9);
         // EAF
         assert!((s.eaf_vs(412.5) - 2.0).abs() < 0.01);
     }
@@ -182,5 +317,78 @@ mod tests {
         let s = summarize(&[], 100.0);
         assert_eq!(s.requests, 0);
         assert_eq!(s.goodput_tps, 0.0);
+        assert!(s.per_class.is_empty());
+    }
+
+    #[test]
+    fn per_class_attainment_uses_own_targets() {
+        let t = Instant::now();
+        let fs = vec![
+            // interactive, 1s target: one hit (800ms), one miss (1500ms)
+            fin_class(t, 50, 800, 4, SloClass::Interactive, 1_000.0),
+            fin_class(t, 50, 1500, 4, SloClass::Interactive, 1_000.0),
+            // batch, loose target: hit
+            fin_class(t, 50, 5000, 4, SloClass::Batch, 60_000.0),
+        ];
+        let s = summarize(&fs, 1e9);
+        assert_eq!(s.per_class.len(), 2);
+        let i = s.class_summary(SloClass::Interactive).unwrap();
+        assert_eq!(i.requests, 2);
+        assert!((i.slo_attainment - 0.5).abs() < 1e-9);
+        let b = s.class_summary(SloClass::Batch).unwrap();
+        assert!((b.slo_attainment - 1.0).abs() < 1e-9);
+        // overall attainment still uses the legacy threshold
+        assert!((s.slo_attainment - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shed_requests_count_against_their_class() {
+        let t = Instant::now();
+        let fs = vec![
+            fin_class(t, 50, 800, 4, SloClass::Interactive, 1_000.0),
+        ];
+        let shed = vec![shed_rec(t, SloClass::Interactive),
+                        shed_rec(t, SloClass::Interactive),
+                        shed_rec(t, SloClass::Standard)];
+        let s = summarize_with_shed(&fs, 1e9, &shed);
+        assert_eq!(s.shed, 3);
+        // headline attainment counts sheds as misses: 1 hit / 4 arrived
+        assert!((s.slo_attainment - 0.25).abs() < 1e-9);
+        let i = s.class_summary(SloClass::Interactive).unwrap();
+        assert_eq!((i.requests, i.shed), (1, 2));
+        // 1 hit out of (1 finished + 2 shed)
+        assert!((i.slo_attainment - 1.0 / 3.0).abs() < 1e-9);
+        // a class with only sheds still appears
+        let st = s.class_summary(SloClass::Standard).unwrap();
+        assert_eq!((st.requests, st.shed), (0, 1));
+        assert_eq!(st.slo_attainment, 0.0);
+        // rendering includes every class present
+        assert_eq!(class_rows(&s).len(), 2);
+    }
+
+    #[test]
+    fn unservable_drops_do_not_count_as_class_hits() {
+        let t = Instant::now();
+        let mut dropped = fin_class(t, 0, 0, 0, SloClass::Interactive,
+                                    1_000.0);
+        dropped.tokens.clear();
+        let served = fin_class(t, 50, 800, 4, SloClass::Interactive,
+                               1_000.0);
+        let s = summarize(&[dropped, served], 1e9);
+        let i = s.class_summary(SloClass::Interactive).unwrap();
+        // 1 real hit out of 2 records: the empty drop is a miss
+        assert!((i.slo_attainment - 0.5).abs() < 1e-9);
+        // the headline attainment must agree with the per-class view
+        assert!((s.slo_attainment - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shed_only_summary_reports_counts() {
+        let t = Instant::now();
+        let shed = vec![shed_rec(t, SloClass::Interactive)];
+        let s = summarize_with_shed(&[], 100.0, &shed);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.per_class.len(), 1);
     }
 }

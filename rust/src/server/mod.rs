@@ -2,32 +2,51 @@
 //! JSON-lines TCP server.
 //!
 //! Protocol (one JSON object per line):
-//!   request:  {"prompt": [1, 70, ...], "max_new": 32, "dataset": "gsm8k"}
+//!   request:  {"prompt": [1, 70, ...], "max_new": 32, "dataset": "gsm8k",
+//!              "slo_class": "interactive", "slo_ms": 2000.0}
 //!   response: {"id": 7, "tokens": [...], "ttft_ms": 12.3, "tpot_ms": 4.5,
-//!              "latency_ms": 200.1, "eos": false}
+//!              "latency_ms": 200.1, "eos": false, "class": "interactive"}
+//!   shed:     {"id": 9, "rejected": "doomed", "class": "interactive"}
+//!
+//! `slo_class` and `slo_ms` are optional (default: standard class, class
+//! target). A request the admission controller sheds gets a structured
+//! `rejected` response instead of a hang — clients can retry elsewhere.
 //!
 //! The engine thread multiplexes: it drains the submission channel, runs
-//! `tick()`, and routes finished records back to per-request responders.
-//! Python is nowhere in this path.
+//! `tick()`, and routes finished/shed records back to per-request
+//! responders. Python is nowhere in this path.
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::admission::{ShedRecord, SloClass};
 use crate::config::EngineConfig;
 use crate::coordinator::engine::{Finished, Request};
 use crate::coordinator::ChainRouter;
 use crate::json::{self, Value};
 use crate::metrics::request_tpot_ms;
 
+/// Default cap on concurrent client connections (satellite of the
+/// admission work: one thread per connection must be bounded).
+pub const DEFAULT_MAX_CONNS: usize = 256;
+
 /// Messages into the engine thread.
 pub enum EngineMsg {
-    Submit(Request, mpsc::Sender<Finished>),
+    Submit(Request, mpsc::Sender<EngineReply>),
     Shutdown,
+}
+
+/// Per-request outcome delivered to the submitting client.
+#[derive(Debug, Clone)]
+pub enum EngineReply {
+    Done(Finished),
+    Rejected(ShedRecord),
 }
 
 /// Handle to a running engine thread.
@@ -48,19 +67,31 @@ pub fn spawn_engine(cfg: EngineConfig) -> Result<EngineHandle> {
 fn engine_loop(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>)
                -> Result<()> {
     let mut router = ChainRouter::new(cfg)?;
-    let mut waiters: HashMap<u64, mpsc::Sender<Finished>> = HashMap::new();
-    let mut drained = 0usize;
+    let mut waiters: HashMap<u64, mpsc::Sender<EngineReply>> = HashMap::new();
+    let submit = |router: &mut ChainRouter, req: Request,
+                      reply: mpsc::Sender<EngineReply>,
+                      waiters: &mut HashMap<u64, mpsc::Sender<EngineReply>>| {
+        let (id, outcome) = router.submit_detailed(req);
+        if outcome.is_shed() {
+            // step 3 drains pop-time sheds every iteration, so the only
+            // pending record here is the one this submit just produced —
+            // deliver it to this client directly
+            if let Some(rec) = router.take_shed().into_iter()
+                .find(|r| r.id == id) {
+                let _ = reply.send(EngineReply::Rejected(rec));
+            }
+        } else {
+            waiters.insert(id, reply);
+        }
+    };
     loop {
         // 1. drain submissions (block briefly when idle to avoid spinning)
         let idle = router.batcher.is_idle();
         let mut shutdown = false;
         if idle {
             match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(EngineMsg::Submit(req, reply)) => {
-                    if let Some(id) = router.submit(req) {
-                        waiters.insert(id, reply);
-                    }
-                }
+                Ok(EngineMsg::Submit(req, reply)) =>
+                    submit(&mut router, req, reply, &mut waiters),
                 Ok(EngineMsg::Shutdown) => shutdown = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
@@ -68,11 +99,8 @@ fn engine_loop(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>)
         }
         loop {
             match rx.try_recv() {
-                Ok(EngineMsg::Submit(req, reply)) => {
-                    if let Some(id) = router.submit(req) {
-                        waiters.insert(id, reply);
-                    }
-                }
+                Ok(EngineMsg::Submit(req, reply)) =>
+                    submit(&mut router, req, reply, &mut waiters),
                 Ok(EngineMsg::Shutdown) => {
                     shutdown = true;
                     break;
@@ -86,12 +114,17 @@ fn engine_loop(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>)
         }
         // 2. advance generation
         router.tick()?;
-        // 3. deliver completions
-        while drained < router.finished.len() {
-            let f = router.finished[drained].clone();
-            drained += 1;
+        // 3. deliver completions and sheds — draining (not indexing) so a
+        //    long-running server does not accumulate every record ever
+        //    produced
+        for f in router.drain_finished() {
             if let Some(reply) = waiters.remove(&f.id) {
-                let _ = reply.send(f);
+                let _ = reply.send(EngineReply::Done(f));
+            }
+        }
+        for rec in router.take_shed() {
+            if let Some(reply) = waiters.remove(&rec.id) {
+                let _ = reply.send(EngineReply::Rejected(rec));
             }
         }
         if shutdown && router.batcher.is_idle() {
@@ -100,18 +133,33 @@ fn engine_loop(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>)
     }
 }
 
-/// Submit one request to a running engine and wait for completion.
+/// Submit one request to a running engine and wait for the raw reply
+/// (completion or structured rejection).
+pub fn request_reply(tx: &mpsc::Sender<EngineMsg>, req: Request)
+                     -> Result<EngineReply> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    tx.send(EngineMsg::Submit(req, reply_tx)).ok()
+        .context("engine thread gone")?;
+    reply_rx.recv().context("engine dropped the request")
+}
+
+/// Submit one request and wait for completion; a shed becomes an error.
 pub fn request_sync(tx: &mpsc::Sender<EngineMsg>, dataset: &str,
                     prompt: Vec<i32>, max_new: usize) -> Result<Finished> {
-    let (reply_tx, reply_rx) = mpsc::channel();
-    tx.send(EngineMsg::Submit(Request {
+    let reply = request_reply(tx, Request {
         id: 0,
         dataset: dataset.to_string(),
         prompt,
         max_new,
         arrival: Instant::now(),
-    }, reply_tx)).ok().context("engine thread gone")?;
-    reply_rx.recv().context("engine dropped the request")
+        class: SloClass::Standard,
+        slo_ms: None,
+    })?;
+    match reply {
+        EngineReply::Done(f) => Ok(f),
+        EngineReply::Rejected(rec) =>
+            bail!("request rejected: {}", rec.reason),
+    }
 }
 
 fn finished_to_json(f: &Finished) -> Value {
@@ -125,6 +173,15 @@ fn finished_to_json(f: &Finished) -> Value {
         ("latency_ms", json::num(
             f.completed.duration_since(f.arrival).as_secs_f64() * 1e3)),
         ("eos", json::Value::Bool(f.finished_by_eos)),
+        ("class", json::s(f.class.name())),
+    ])
+}
+
+fn shed_to_json(rec: &ShedRecord) -> Value {
+    json::obj(vec![
+        ("id", json::num(rec.id as f64)),
+        ("rejected", json::s(rec.reason.label())),
+        ("class", json::s(rec.class.name())),
     ])
 }
 
@@ -158,27 +215,82 @@ fn serve_one(tx: &mpsc::Sender<EngineMsg>, line: &str) -> Result<Value> {
     let dataset = v.opt("dataset")
         .map(|d| d.as_str().map(str::to_string)).transpose()?
         .unwrap_or_else(|| "gsm8k".to_string());
-    let f = request_sync(tx, &dataset, prompt, max_new)?;
-    Ok(finished_to_json(&f))
+    let class = v.opt("slo_class")
+        .map(|c| SloClass::parse(c.as_str()?)).transpose()?
+        .unwrap_or(SloClass::Standard);
+    let slo_ms = v.opt("slo_ms").map(|s| s.as_f64()).transpose()?;
+    if let Some(s) = slo_ms {
+        if !s.is_finite() || s < 0.0 {
+            bail!("slo_ms must be a finite non-negative number");
+        }
+    }
+    let reply = request_reply(tx, Request {
+        id: 0,
+        dataset,
+        prompt,
+        max_new,
+        arrival: Instant::now(),
+        class,
+        slo_ms,
+    })?;
+    Ok(match reply {
+        EngineReply::Done(f) => finished_to_json(&f),
+        EngineReply::Rejected(rec) => shed_to_json(&rec),
+    })
+}
+
+/// Decrements the live-connection counter when a handler exits, however
+/// it exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// Run the TCP front-end forever (or until the listener errors). Binds
 /// `addr` (e.g. "127.0.0.1:7450"); `ready` is signalled with the bound
 /// address once listening — tests use an ephemeral port via ":0".
+/// At most [`DEFAULT_MAX_CONNS`] concurrent connections are served.
 pub fn serve_tcp(addr: &str, tx: mpsc::Sender<EngineMsg>,
                  ready: Option<mpsc::Sender<std::net::SocketAddr>>)
                  -> Result<()> {
+    serve_tcp_opts(addr, tx, ready, DEFAULT_MAX_CONNS)
+}
+
+/// `serve_tcp` with an explicit connection cap. A connection over the cap
+/// receives a single structured JSON error line and is closed — bounded
+/// thread count, no silent hang.
+pub fn serve_tcp_opts(addr: &str, tx: mpsc::Sender<EngineMsg>,
+                      ready: Option<mpsc::Sender<std::net::SocketAddr>>,
+                      max_conns: usize)
+                      -> Result<()> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
-    log::info!("listening on {local}");
+    log::info!("listening on {local} (max {max_conns} connections)");
     if let Some(r) = ready {
         let _ = r.send(local);
     }
+    let live = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
-        let stream = stream?;
+        let mut stream = stream?;
+        if live.load(Ordering::SeqCst) >= max_conns {
+            let err = json::obj(vec![
+                ("error", json::s("server saturated")),
+                ("rejected", json::s("saturated")),
+            ]);
+            let _ = writeln!(stream, "{err}");
+            log::warn!("connection rejected: {} live connections",
+                       max_conns);
+            continue;
+        }
+        live.fetch_add(1, Ordering::SeqCst);
+        let guard = ConnGuard(live.clone());
         let tx = tx.clone();
         std::thread::spawn(move || {
+            let _guard = guard;
             if let Err(e) = handle_conn(stream, tx) {
                 log::warn!("connection error: {e:#}");
             }
@@ -190,13 +302,28 @@ pub fn serve_tcp(addr: &str, tx: mpsc::Sender<EngineMsg>,
 /// Minimal client for examples/tests: one request over a fresh connection.
 pub fn client_request(addr: std::net::SocketAddr, dataset: &str,
                       prompt: &[i32], max_new: usize) -> Result<Value> {
+    client_request_opts(addr, dataset, prompt, max_new, None, None)
+}
+
+/// `client_request` with explicit SLO class / target fields.
+pub fn client_request_opts(addr: std::net::SocketAddr, dataset: &str,
+                           prompt: &[i32], max_new: usize,
+                           slo_class: Option<&str>, slo_ms: Option<f64>)
+                           -> Result<Value> {
     let mut stream = TcpStream::connect(addr)?;
-    let req = json::obj(vec![
+    let mut fields = vec![
         ("prompt", json::arr(prompt.iter()
             .map(|&t| json::num(t as f64)).collect())),
         ("max_new", json::num(max_new as f64)),
         ("dataset", json::s(dataset)),
-    ]);
+    ];
+    if let Some(c) = slo_class {
+        fields.push(("slo_class", json::s(c)));
+    }
+    if let Some(s) = slo_ms {
+        fields.push(("slo_ms", json::num(s)));
+    }
+    let req = json::obj(fields);
     writeln!(stream, "{req}")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();

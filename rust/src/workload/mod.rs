@@ -5,5 +5,6 @@ pub mod poisson;
 pub mod trace;
 
 pub use datasets::DatasetGen;
-pub use poisson::{open_loop_trace, ArrivalSpec};
+pub use poisson::{open_loop_trace, open_loop_trace_classed, ArrivalSpec,
+                  ClassMix};
 pub use trace::{load_trace, save_trace, TraceEntry};

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::admission::SloClass;
 use crate::json::{self, Value};
 
 #[derive(Debug, Clone, PartialEq)]
@@ -13,6 +14,8 @@ pub struct TraceEntry {
     pub dataset: String,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// Service class of the request (absent in old traces = standard).
+    pub class: SloClass,
 }
 
 pub fn save_trace(path: &Path, trace: &[TraceEntry]) -> Result<()> {
@@ -23,6 +26,7 @@ pub fn save_trace(path: &Path, trace: &[TraceEntry]) -> Result<()> {
             ("prompt", json::arr(e.prompt.iter()
                 .map(|&t| json::num(t as f64)).collect())),
             ("max_new", json::num(e.max_new as f64)),
+            ("slo_class", json::s(e.class.name())),
         ])
     }).collect();
     std::fs::write(path, json::arr(entries).to_string())
@@ -41,6 +45,10 @@ pub fn load_trace(path: &Path) -> Result<Vec<TraceEntry>> {
                 .map(|t| Ok(t.as_f64()? as i32))
                 .collect::<Result<_>>()?,
             max_new: e.get("max_new")?.as_usize()?,
+            class: match e.opt("slo_class") {
+                Some(c) => SloClass::parse(c.as_str()?)?,
+                None => SloClass::Standard,
+            },
         })
     }).collect()
 }
@@ -54,13 +62,25 @@ mod tests {
         let dir = std::env::temp_dir().join("specrouter_trace_test.json");
         let t = vec![
             TraceEntry { offset_s: 0.0, dataset: "gsm8k".into(),
-                         prompt: vec![1, 70, 71], max_new: 8 },
+                         prompt: vec![1, 70, 71], max_new: 8,
+                         class: SloClass::Interactive },
             TraceEntry { offset_s: 0.25, dataset: "mtbench".into(),
-                         prompt: vec![1, 330], max_new: 4 },
+                         prompt: vec![1, 330], max_new: 4,
+                         class: SloClass::Standard },
         ];
         save_trace(&dir, &t).unwrap();
         let back = load_trace(&dir).unwrap();
         assert_eq!(back, t);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn legacy_traces_without_class_default_to_standard() {
+        let dir = std::env::temp_dir().join("specrouter_trace_legacy.json");
+        std::fs::write(&dir, r#"[{"offset_s":0.5,"dataset":"gsm8k",
+            "prompt":[1,70],"max_new":4}]"#).unwrap();
+        let back = load_trace(&dir).unwrap();
+        assert_eq!(back[0].class, SloClass::Standard);
         std::fs::remove_file(dir).ok();
     }
 

@@ -5,11 +5,13 @@ mod common;
 
 use std::time::Instant;
 
+use specrouter::admission::SloClass;
 use specrouter::config::Mode;
 use specrouter::coordinator::Request;
 
 #[test]
 fn scheduler_warms_up_and_converges() {
+    require_artifacts!();
     let dataset = "humaneval"; // most deterministic => speculation-friendly
     let mut gen = common::dataset_gen(dataset, 4);
     let mut router = common::router(1, Mode::Adaptive);
@@ -21,6 +23,8 @@ fn scheduler_warms_up_and_converges() {
             prompt,
             max_new: 16,
             arrival: Instant::now(),
+            class: SloClass::Standard,
+            slo_ms: None,
         });
     }
     router.run_until_idle(20_000).unwrap();

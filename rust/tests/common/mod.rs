@@ -14,6 +14,24 @@ pub fn art_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// True when `make artifacts` has produced the model pool. Integration
+/// tests that need real models skip (with a note) when it is absent so
+/// the suite stays runnable on a bare checkout / CI box.
+pub fn artifacts_available() -> bool {
+    art_dir().join("manifest.json").exists()
+}
+
+/// Early-return skip used by artifact-dependent tests.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if !common::artifacts_available() {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
 /// The `xla` crate's wrappers use `Rc` internally, so `ModelPool` is not
 /// `Send`/`Sync`. The libtest harness runs tests *sequentially* (one
 /// thread alive at a time, joined in between: RUST_TEST_THREADS defaults

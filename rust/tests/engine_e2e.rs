@@ -5,6 +5,7 @@ mod common;
 
 use std::time::Instant;
 
+use specrouter::admission::SloClass;
 use specrouter::config::{AcceptRule, Mode};
 use specrouter::coordinator::Request;
 use specrouter::metrics;
@@ -12,6 +13,7 @@ use specrouter::workload::{open_loop_trace, ArrivalSpec};
 
 #[test]
 fn continuous_batching_completes_all_requests() {
+    require_artifacts!();
     // 7 requests through 4 slots: forces at least one refill wave
     let dataset = "humaneval";
     let mut gen = common::dataset_gen(dataset, 5);
@@ -26,6 +28,8 @@ fn continuous_batching_completes_all_requests() {
             prompt: prompt.clone(),
             max_new: 10,
             arrival: Instant::now(),
+            class: SloClass::Standard,
+            slo_ms: None,
         }).unwrap();
         want.push((id, prompt.len()));
     }
@@ -48,6 +52,7 @@ fn continuous_batching_completes_all_requests() {
 
 #[test]
 fn poisson_trace_metrics_are_sane() {
+    require_artifacts!();
     let dataset = "gsm8k";
     let mut gen = common::dataset_gen(dataset, 6);
     let trace = open_loop_trace(
@@ -60,6 +65,8 @@ fn poisson_trace_metrics_are_sane() {
             prompt: e.prompt.clone(),
             max_new: e.max_new.min(8),
             arrival: Instant::now(),
+            class: SloClass::Standard,
+            slo_ms: None,
         });
     }
     router.run_until_idle(10_000).unwrap();
@@ -77,6 +84,7 @@ fn poisson_trace_metrics_are_sane() {
 
 #[test]
 fn probabilistic_sampling_is_seeded_and_terminates() {
+    require_artifacts!();
     let dataset = "mtbench";
     let mut gen = common::dataset_gen(dataset, 9);
     let (prompt, _) = gen.sample();
@@ -97,6 +105,7 @@ fn probabilistic_sampling_is_seeded_and_terminates() {
 
 #[test]
 fn rejects_oversized_prompts_gracefully() {
+    require_artifacts!();
     let mut router = common::router(1, Mode::Tmo);
     let too_long = vec![1i32; router.pool.manifest.prefill + 1];
     let id = router.submit(Request {
@@ -105,6 +114,8 @@ fn rejects_oversized_prompts_gracefully() {
         prompt: too_long,
         max_new: 4,
         arrival: Instant::now(),
+        class: SloClass::Standard,
+        slo_ms: None,
     }).unwrap();
     router.run_until_idle(100).unwrap();
     let f = router.finished.iter().find(|f| f.id == id).unwrap();
@@ -113,6 +124,7 @@ fn rejects_oversized_prompts_gracefully() {
 
 #[test]
 fn physical_truncation_counters_advance_under_speculation() {
+    require_artifacts!();
     // speculation with imperfect acceptance leaves stale entries; the
     // periodic fix_caches pass must reclaim some (paper Eq. 9 path)
     let dataset = "mgsm";

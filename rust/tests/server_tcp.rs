@@ -1,14 +1,17 @@
 //! TCP front-end integration: JSON-lines protocol round-trip against a
-//! live engine thread on an ephemeral port.
+//! live engine thread on an ephemeral port, admission shed responses, and
+//! the connection cap.
 mod common;
 
 use std::sync::mpsc;
 
 use specrouter::config::Mode;
-use specrouter::server::{client_request, serve_tcp, spawn_engine, EngineMsg};
+use specrouter::server::{client_request, client_request_opts, serve_tcp,
+                         serve_tcp_opts, spawn_engine, EngineMsg};
 
 #[test]
 fn tcp_roundtrip_and_concurrent_clients() {
+    require_artifacts!();
     let cfg = common::cfg(4, Mode::Fixed {
         chain: vec!["m0".into(), "m2".into()], window: 4 });
     let engine = spawn_engine(cfg).expect("engine");
@@ -47,4 +50,63 @@ fn tcp_roundtrip_and_concurrent_clients() {
 
     engine.tx.send(EngineMsg::Shutdown).ok();
     engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn doomed_request_gets_structured_rejection_not_a_hang() {
+    require_artifacts!();
+    let cfg = common::cfg(1, Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()], window: 4 });
+    let engine = spawn_engine(cfg).expect("engine");
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let tx = engine.tx.clone();
+    std::thread::spawn(move || {
+        serve_tcp("127.0.0.1:0", tx, Some(ready_tx)).ok();
+    });
+    let addr = ready_rx.recv().expect("server ready");
+
+    let mut gen = common::dataset_gen("gsm8k", 2);
+    let (prompt, _) = gen.sample();
+    // an interactive request with a 0ms deadline is doomed by the time the
+    // engine sees it: the admission controller must shed it and the client
+    // must receive a structured rejection
+    let resp = client_request_opts(addr, "gsm8k", &prompt, 8,
+                                   Some("interactive"), Some(0.0))
+        .expect("client");
+    assert_eq!(resp.get("rejected").unwrap().as_str().unwrap(), "doomed",
+               "expected a shed response, got {resp}");
+    assert_eq!(resp.get("class").unwrap().as_str().unwrap(), "interactive");
+    assert!(resp.get("id").unwrap().as_f64().unwrap() > 0.0);
+
+    // a feasible request on the same engine still completes normally
+    let resp = client_request_opts(addr, "gsm8k", &prompt, 8,
+                                   Some("interactive"), None)
+        .expect("client");
+    assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
+    assert!(!resp.get("tokens").unwrap().as_arr().unwrap().is_empty());
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn connection_cap_returns_saturated_error() {
+    // no engine needed: saturation is decided before any request is read
+    let (tx, _rx) = mpsc::channel();
+    let (ready_tx, ready_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        serve_tcp_opts("127.0.0.1:0", tx, Some(ready_tx), 1).ok();
+    });
+    let addr = ready_rx.recv().expect("server ready");
+
+    use std::io::{BufRead, BufReader};
+    // first connection occupies the only slot
+    let _held = std::net::TcpStream::connect(addr).unwrap();
+    // brief pause so the acceptor registers the first connection
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    // second connection must get a structured saturation error, not a hang
+    let s = std::net::TcpStream::connect(addr).unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    assert!(line.contains("saturated"), "{line}");
 }
