@@ -1,0 +1,286 @@
+//! Hot-path bench: spec-step throughput and heap-allocation accounting
+//! on the in-process SimBackend (no artifacts, deterministic).
+//!
+//! A counting global allocator wraps the system allocator; counting is
+//! toggled on only around `run_spec_step` so harness bookkeeping (slot
+//! views, committed-sequence pushes, resets) is excluded — the number
+//! reported is exactly what one engine step allocates.
+//!
+//! Acceptance (ISSUE 2): after a warm-up phase has grown every
+//! `StepScratch` buffer to capacity, a steady-state **greedy** spec step
+//! must perform **zero** heap allocations. The bench prints a table,
+//! writes `BENCH_hotpath.json` at the repo root (schema in DESIGN.md §8)
+//! and exits non-zero if a greedy row allocates.
+//!
+//!   cargo bench --bench bench_hotpath
+//!   SPECROUTER_QUICK=1 shrinks the measured step count (CI smoke runs).
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+
+use std::sync::Arc;
+
+use specrouter::config::{AcceptRule, Mode};
+use specrouter::coordinator::{run_spec_step, Backend, Chain, Profiler,
+                              SimBackend, SimSpec, SimilarityTracker,
+                              SlotSeqs, StepCtx, StepScratch};
+use specrouter::harness::{prompt_set_from, quick, run_offline_backend,
+                          sim_backend, with_dataset, Table};
+use specrouter::rng::Rng;
+use specrouter::state::{KvDims, StateManager};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Relaxed) {
+            ALLOCS.fetch_add(1, Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        if COUNTING.load(Relaxed) {
+            ALLOCS.fetch_add(1, Relaxed);
+            BYTES.fetch_add(new_size as u64, Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn mk_states(backend: &SimBackend, batch: usize, models: &[String])
+             -> StateManager {
+    let man = Backend::manifest(backend).clone();
+    let mut states = StateManager::new();
+    for m in models {
+        let meta = &man.models[m.as_str()];
+        let dims = KvDims {
+            layers: meta.layers,
+            batch,
+            heads: meta.heads,
+            seq: man.seq,
+            head_dim: meta.head_dim,
+        };
+        states.ensure(m, dims, man.state_len(meta, batch));
+    }
+    states
+}
+
+struct Row {
+    label: String,
+    rule: &'static str,
+    batch: usize,
+    steps: u64,
+    steps_per_sec: f64,
+    tokens_per_step: f64,
+    allocs_per_step: f64,
+    bytes_per_step: f64,
+}
+
+/// Drive `measure` steady-state steps of one chain config, counting
+/// allocations inside `run_spec_step` only.
+fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
+              rule_label: &'static str, batch: usize, warmup: u64,
+              measure: u64) -> Row {
+    let man = Backend::manifest(backend).clone();
+    let seq_cap = man.seq;
+    let reset_guard = 2 * (chain.window.max(4) + 1);
+    let fresh_committed = |batch: usize| -> Vec<Vec<i32>> {
+        (0..batch)
+            .map(|b| {
+                let mut c = Vec::with_capacity(seq_cap);
+                c.extend_from_slice(&[1, 100 + b as i32, 101 + b as i32]);
+                c
+            })
+            .collect()
+    };
+    let mut states = mk_states(backend, batch, &chain.models);
+    let mut committed = fresh_committed(batch);
+    let mut prof = Profiler::new(0.2);
+    let mut sim = SimilarityTracker::new(0.2);
+    let mut rng = Rng::new(17);
+    let mut scratch = StepScratch::new();
+
+    let mut steps_done = 0u64;
+    let mut measuring = false;
+    let mut measured_steps = 0u64;
+    let mut measured_tokens = 0u64;
+    let mut alloc0 = 0u64;
+    let mut bytes0 = 0u64;
+    let mut t0 = std::time::Instant::now();
+    let mut elapsed = 0.0f64;
+
+    while measured_steps < measure {
+        // reset the synthetic batch before it hits physical capacity
+        // (outside the counting window — the arena stays warm)
+        if committed.iter().any(|c| c.len() + reset_guard >= seq_cap) {
+            let pause = std::time::Instant::now();
+            states = mk_states(backend, batch, &chain.models);
+            committed = fresh_committed(batch);
+            if measuring {
+                elapsed += pause.duration_since(t0).as_secs_f64();
+                t0 = std::time::Instant::now();
+            }
+            continue;
+        }
+        {
+            let seqs: SlotSeqs = committed.iter()
+                .map(|c| Some(c.as_slice()))
+                .collect();
+            let mut ctx = StepCtx {
+                exec: backend,
+                prof: &mut prof,
+                sim: &mut sim,
+                states: &mut states,
+                batch,
+                vocab: man.vocab,
+                rule,
+                rng: &mut rng,
+                scratch: &mut scratch,
+            };
+            COUNTING.store(true, Relaxed);
+            let r = run_spec_step(&mut ctx, chain, &seqs, 0);
+            COUNTING.store(false, Relaxed);
+            r.expect("spec step failed");
+        }
+        for (b, c) in committed.iter_mut().enumerate() {
+            let app = &scratch.outcome.appended[b];
+            c.extend_from_slice(app);
+            if measuring {
+                measured_tokens += app.len() as u64;
+            }
+        }
+        steps_done += 1;
+        if measuring {
+            measured_steps += 1;
+        } else if steps_done == warmup {
+            // warm-up complete: start the measurement window
+            measuring = true;
+            alloc0 = ALLOCS.load(Relaxed);
+            bytes0 = BYTES.load(Relaxed);
+            t0 = std::time::Instant::now();
+        }
+    }
+    elapsed += t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Relaxed) - alloc0;
+    let bytes = BYTES.load(Relaxed) - bytes0;
+    Row {
+        label: chain.label(),
+        rule: rule_label,
+        batch,
+        steps: measure,
+        steps_per_sec: measure as f64 / elapsed.max(1e-9),
+        tokens_per_step: measured_tokens as f64 / measure as f64,
+        allocs_per_step: allocs as f64 / measure as f64,
+        bytes_per_step: bytes as f64 / measure as f64,
+    }
+}
+
+fn main() {
+    let backend = SimBackend::new(SimSpec::small_pool());
+    let (warmup, measure) = if quick() { (32, 128) } else { (64, 1024) };
+    let batch = 4;
+    let two = Chain {
+        models: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    let three = Chain {
+        models: vec!["m0".into(), "m1".into(), "m2".into()],
+        window: 8,
+    };
+    let configs: Vec<(Chain, AcceptRule, &'static str)> = vec![
+        (two.clone(), AcceptRule::Greedy, "greedy"),
+        (three.clone(), AcceptRule::Greedy, "greedy"),
+        (two, AcceptRule::Probabilistic { seed: 11 }, "prob"),
+    ];
+
+    println!("spec-step hot path on SimBackend \
+              (batch {batch}, {measure} steps after {warmup} warm-up)\n");
+    let mut table = Table::new(&[
+        "chain", "rule", "steps/s", "tok/step", "allocs/step", "B/step",
+    ]);
+    let mut rows = Vec::new();
+    for (chain, rule, label) in configs {
+        let row = run_config(&backend, &chain, rule, label, batch, warmup,
+                             measure);
+        table.row(vec![
+            row.label.clone(),
+            row.rule.to_string(),
+            format!("{:.0}", row.steps_per_sec),
+            format!("{:.2}", row.tokens_per_step),
+            format!("{:.2}", row.allocs_per_step),
+            format!("{:.1}", row.bytes_per_step),
+        ]);
+        rows.push(row);
+    }
+    table.print();
+
+    // Full-engine context row: the same sim pool driven through the real
+    // ChainRouter (admission, chain selection, commit loop, mask sync) —
+    // the end-to-end coordinator goodput for the perf trajectory.
+    let engine_backend: Arc<dyn Backend> = sim_backend();
+    let n_req = if quick() { 16 } else { 48 };
+    let prompts = with_dataset(
+        "gsm8k", prompt_set_from(&engine_backend, "gsm8k", n_req, 7, 16));
+    let (engine_sum, _router, engine_steady) = run_offline_backend(
+        engine_backend,
+        Mode::Fixed { chain: vec!["m0".into(), "m2".into()], window: 4 },
+        batch, &prompts).expect("engine run");
+    println!(
+        "\nfull engine on SimBackend (SSD[m0>m2]w4, batch {batch}, \
+         {n_req} reqs): {:.0} tok/s offline, {:.0} tok/s steady, \
+         {} tokens",
+        engine_sum.goodput_tps, engine_steady.goodput_tps(),
+        engine_sum.tokens);
+
+    // BENCH_hotpath.json (schema documented in DESIGN.md §8)
+    let mut json = String::from(
+        "{\n  \"bench\": \"hotpath\",\n  \"backend\": \"sim\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"chain\": \"{}\", \"rule\": \"{}\", \"batch\": {}, \
+             \"steps\": {}, \"steps_per_sec\": {:.1}, \
+             \"tokens_per_step\": {:.3}, \"allocs_per_step\": {:.3}, \
+             \"bytes_per_step\": {:.1}}}{}\n",
+            r.label, r.rule, r.batch, r.steps, r.steps_per_sec,
+            r.tokens_per_step, r.allocs_per_step, r.bytes_per_step,
+            if i + 1 == rows.len() { "" } else { "," }));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"engine\": {{\"mode\": \"SSD[m0>m2]w4\", \"batch\": {batch}, \
+         \"requests\": {n_req}, \"tokens\": {}, \"goodput_tps\": {:.1}, \
+         \"steady_goodput_tps\": {:.1}}}\n",
+        engine_sum.tokens, engine_sum.goodput_tps,
+        engine_steady.goodput_tps()));
+    json.push_str("}\n");
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    std::fs::write(out, &json).expect("writing BENCH_hotpath.json");
+    println!("\nwrote {out}");
+
+    // acceptance gate: steady-state greedy steps must not allocate
+    let mut failed = false;
+    for r in rows.iter().filter(|r| r.rule == "greedy") {
+        if r.allocs_per_step > 0.0 {
+            eprintln!("FAIL: {} ({}) allocates {:.2}/step after warm-up",
+                      r.label, r.rule, r.allocs_per_step);
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("OK: zero steady-state allocations on the greedy hot path");
+}

@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     let mut cfg = EngineConfig::new("artifacts");
     cfg.batch = 1;
     let mut router = ChainRouter::new(cfg)?;
-    let spec = router.pool.manifest.datasets[&dataset].clone();
+    let spec = router.manifest.datasets[&dataset].clone();
     let mut gen = DatasetGen::new(spec, 3);
 
     snapshot(&router, "(cold start — analytic fallback costs)");

@@ -16,10 +16,10 @@ fn main() -> Result<()> {
     // 2. the router loads the manifest, places models on logical devices
     //    and lazily compiles whatever executables it needs
     let mut router = ChainRouter::new(cfg)?;
-    println!("pool: {:?}", router.pool.manifest.models_by_capability());
+    println!("pool: {:?}", router.manifest.models_by_capability());
 
     // 3. sample a prompt from the synthetic GSM8K analogue and generate
-    let spec = router.pool.manifest.datasets["gsm8k"].clone();
+    let spec = router.manifest.datasets["gsm8k"].clone();
     let mut gen = DatasetGen::new(spec, 42);
     let (prompt, max_new) = gen.sample();
     println!("prompt ({} tokens): {prompt:?}", prompt.len());

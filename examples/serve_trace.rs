@@ -7,10 +7,13 @@
 //!   cargo run --release --example serve_trace -- [n_requests] [rate] [batch]
 use std::time::Instant;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use specrouter::config::EngineConfig;
 use specrouter::coordinator::ChainRouter;
 use specrouter::metrics;
+use specrouter::model_pool::ModelPool;
 use specrouter::workload::poisson::requests_from_trace;
 use specrouter::workload::{open_loop_trace, ArrivalSpec, DatasetGen};
 
@@ -24,10 +27,12 @@ fn main() -> Result<()> {
     cfg.batch = batch;
     cfg.slo_ms = 30_000.0;
     let label = cfg.mode.label();
-    let mut router = ChainRouter::new(cfg)?;
+    // keep a pool handle for the compilation report at the end
+    let pool = Arc::new(ModelPool::open(&cfg.art_dir)?);
+    let mut router = ChainRouter::with_pool(cfg, pool.clone())?;
 
     // mixed trace: round-robin over the four datasets, one Poisson stream
-    let specs: Vec<_> = router.pool.manifest.datasets.values()
+    let specs: Vec<_> = router.manifest.datasets.values()
         .cloned().collect();
     let mut gens: Vec<DatasetGen> = specs.into_iter().enumerate()
         .map(|(i, s)| DatasetGen::new(s, 100 + i as u64))
@@ -91,7 +96,7 @@ fn main() -> Result<()> {
               reclaimed", router.states.physical_truncations,
              router.states.elements_reclaimed);
     println!("XLA compilation: {} executables, {:.1}s total",
-             router.pool.compiled_count(),
-             router.pool.total_compile_time().as_secs_f64());
+             pool.compiled_count(),
+             pool.total_compile_time().as_secs_f64());
     Ok(())
 }

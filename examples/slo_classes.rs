@@ -32,7 +32,7 @@ fn run(fifo: bool, n: usize, rate: f64) -> Result<()> {
     let label = if fifo { "FIFO (seed baseline)" } else { "deadline-aware" };
     let mut router = ChainRouter::new(cfg)?;
 
-    let spec = router.pool.manifest.datasets["gsm8k"].clone();
+    let spec = router.manifest.datasets["gsm8k"].clone();
     let mut gen = DatasetGen::new(spec, 11);
     let trace = open_loop_trace_classed(
         &ArrivalSpec { rate, n_requests: n, seed: 11 }, &mut gen,

@@ -1,0 +1,89 @@
+//! The data-plane contract (DESIGN.md §8): everything the coordinator
+//! needs from "a pool of models" is five calls — prefill, insert, decode,
+//! draft, verify — plus manifest access and registration. Extracting this
+//! trait from the XLA [`Executor`] lets the full engine loop (chain
+//! scheduling, acceptance, rollback, catch-up) run against the in-process
+//! [`SimBackend`] with no compiled artifacts, which is what makes the
+//! hot path testable and benchmarkable at all.
+//!
+//! Hot-path discipline: decode/draft/verify write their outputs into
+//! caller-provided buffers (`out.clear(); out.resize(..)` — no allocation
+//! once the buffer has warmed to capacity). Prefill/insert are admission
+//! path and may allocate freely.
+// the five-call data-plane signatures carry (prof, model, batch, window,
+// tokens, state, lens, out) by design — splitting them into builder
+// structs would put an allocation back on the hot path
+#![allow(clippy::too_many_arguments)]
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::profiler::Profiler;
+use crate::runtime::Manifest;
+use crate::state::StateBuf;
+
+/// Opaque handle to a freshly prefilled B=1 model state, produced by
+/// [`Backend::prefill`] and consumed by [`Backend::insert`]. Each backend
+/// only accepts its own variant.
+pub enum PrefillState {
+    /// Device-resident packed `[kv | tail]` buffer (XLA path).
+    Xla(xla::PjRtBuffer),
+    /// The sim backend is stateless (a table-driven Markov LM); there is
+    /// nothing to carry between prefill and insert.
+    Sim,
+}
+
+/// One model-pool backend: the five processors of paper §4.3.
+///
+/// All methods take `&self`; backends keep interior state behind locks
+/// (XLA) or none at all (sim). Call costs are reported to the
+/// [`Profiler`] by the backend itself — measured wall time for XLA,
+/// configured synthetic costs for the sim — so the scheduler's Eq. 7
+/// inputs work identically on either.
+///
+/// Deliberately NOT `Send + Sync`: the XLA executor wraps `Rc`-based
+/// PJRT handles and can never cross threads, and requiring the bound
+/// would evict it from the trait. `Arc<dyn Backend>` (and therefore
+/// `ChainRouter`) is single-threaded by construction — the server runs
+/// the whole engine inside one owning thread (see `server::spawn_engine`).
+/// Code that needs a threadable router must hold the concrete
+/// `Arc<SimBackend>` (which IS `Send + Sync`) and build per-thread
+/// routers from it.
+pub trait Backend {
+    /// The artifact manifest this backend serves (model dims, vocab,
+    /// windows, datasets). For the sim backend it is synthesized.
+    fn manifest(&self) -> &Arc<Manifest>;
+
+    /// Register (place / load weights for) a model. Idempotent.
+    fn register(&self, model: &str) -> Result<()>;
+
+    /// Process one prompt (B=1): last-position logits `[V]` plus the
+    /// fresh B=1 state handle for [`Backend::insert`].
+    fn prefill(&self, prof: &mut Profiler, model: &str, prompt: &[i32])
+               -> Result<(Vec<f32>, PrefillState)>;
+
+    /// Admission: place a prefilled B=1 state into batch slot `slot`.
+    fn insert(&self, prof: &mut Profiler, model: &str, batch: usize,
+              state: &mut StateBuf, one: &PrefillState, slot: usize)
+              -> Result<()>;
+
+    /// One autoregressive step for the whole batch. Writes logits
+    /// `[B*V]` into `out`.
+    fn decode(&self, prof: &mut Profiler, model: &str, batch: usize,
+              tokens: &[i32], state: &mut StateBuf, lens: &[i32],
+              out: &mut Vec<f32>) -> Result<()>;
+
+    /// Greedy scan of `window` speculative tokens. Writes drafted tokens
+    /// `[B*w]` into `toks` and draft logits `[B*w*V]` into `logits`.
+    fn draft(&self, prof: &mut Profiler, model: &str, batch: usize,
+             window: usize, tokens: &[i32], state: &mut StateBuf,
+             lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
+             -> Result<()>;
+
+    /// One parallel forward over `window+1` positions. `block` is
+    /// row-major `[B, window+1]`. Writes logits `[B*(window+1)*V]` into
+    /// `out`.
+    fn verify(&self, prof: &mut Profiler, model: &str, batch: usize,
+              window: usize, block: &[i32], state: &mut StateBuf,
+              lens: &[i32], out: &mut Vec<f32>) -> Result<()>;
+}

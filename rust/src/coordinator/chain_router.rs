@@ -1,11 +1,14 @@
-//! ChainRouter (paper §4.1): the control plane. Owns the model pool,
-//! scheduler, state manager, batcher and profiler; drives the request
-//! lifecycle end to end:
+//! ChainRouter (paper §4.1): the control plane. Owns the backend (model
+//! pool), scheduler, state manager, batcher and profiler; drives the
+//! request lifecycle end to end:
 //!
 //!   admit (prefill + slot insert) → [select chain → multi-level
 //!   speculative step → commit / rollback → terminate?]* → finish.
 //!
-//! One `tick()` is one generation cycle of Listing 1 in the paper.
+//! One `tick()` is one generation cycle of Listing 1 in the paper. The
+//! data plane is any [`Backend`]: the XLA executor over compiled
+//! artifacts, or the in-process [`crate::coordinator::SimBackend`] for
+//! artifact-free runs (DESIGN.md §8).
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -14,14 +17,16 @@ use anyhow::{bail, Context, Result};
 use crate::admission::{Discipline, HeadroomSignal, QueuedReq, ShedRecord,
                        SubmitOutcome};
 use crate::config::{AcceptRule, EngineConfig, Mode};
+use crate::coordinator::backend::Backend;
 use crate::coordinator::engine::{Batcher, Finished, Request, Slot};
 use crate::coordinator::executor::Executor;
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::scheduler::{Chain, Scheduler};
 use crate::coordinator::similarity::SimilarityTracker;
-use crate::coordinator::spec_step::{run_spec_step, StepCtx};
+use crate::coordinator::spec_step::{run_spec_step, StepCtx, StepScratch};
 use crate::model_pool::ModelPool;
 use crate::rng::{argmax, softmax, Rng};
+use crate::runtime::Manifest;
 use crate::state::{KvDims, StateManager};
 
 /// How often opportunistic physical truncation runs (steps).
@@ -34,8 +39,8 @@ fn signed_ms(a: Instant, b: Instant) -> f64 {
 
 pub struct ChainRouter {
     pub cfg: EngineConfig,
-    pub pool: Arc<ModelPool>,
-    exec: Executor,
+    pub manifest: Arc<Manifest>,
+    backend: Arc<dyn Backend>,
     pub prof: Profiler,
     pub sim: SimilarityTracker,
     pub sched: Scheduler,
@@ -44,6 +49,10 @@ pub struct ChainRouter {
     pub finished: Vec<Finished>,
     rng: Rng,
     cached_chain: Option<Chain>,
+    /// The running chain's formatted label, rebuilt only on chain switch
+    /// so steady-state ticks don't re-format a String per step.
+    label_cache: Option<(Chain, String)>,
+    scratch: StepScratch,
     pub steps: u64,
     next_id: u64,
 }
@@ -57,7 +66,16 @@ impl ChainRouter {
     /// Build on an existing pool (benches share one pool across engines to
     /// amortize XLA compilation).
     pub fn with_pool(cfg: EngineConfig, pool: Arc<ModelPool>) -> Result<Self> {
-        let manifest = pool.manifest.clone();
+        let exec = Executor::with_cost_multipliers(
+            pool, cfg.cost_multipliers.clone());
+        Self::with_backend(cfg, Arc::new(exec))
+    }
+
+    /// Build on any data-plane backend (DESIGN.md §8) — the sim backend
+    /// runs the full engine with no artifacts on disk.
+    pub fn with_backend(cfg: EngineConfig, backend: Arc<dyn Backend>)
+                        -> Result<Self> {
+        let manifest = backend.manifest().clone();
         cfg.validate(&manifest.batches, &manifest.windows)?;
         if !manifest.models.contains_key(&cfg.target) {
             bail!("target model {:?} not in manifest", cfg.target);
@@ -82,8 +100,6 @@ impl ChainRouter {
         }
         let seed = 0xC0FFEE;
         let sched = Scheduler::new(manifest.clone(), cfg.clone(), seed);
-        let exec = Executor::with_cost_multipliers(
-            pool.clone(), cfg.cost_multipliers.clone());
         let batch = cfg.batch;
         let rng_seed = match cfg.rule {
             AcceptRule::Probabilistic { seed } => seed,
@@ -100,7 +116,7 @@ impl ChainRouter {
         let batcher = Batcher::with_admission(
             batch, cfg.max_queue, table, discipline, cfg.ema_alpha);
         let router = ChainRouter {
-            exec,
+            backend,
             prof: Profiler::new(cfg.ema_alpha),
             sim,
             sched,
@@ -109,15 +125,22 @@ impl ChainRouter {
             finished: Vec::new(),
             rng: Rng::new(rng_seed),
             cached_chain: None,
+            label_cache: None,
+            scratch: StepScratch::new(),
             steps: 0,
             next_id: 1,
             cfg,
-            pool,
+            manifest,
         };
         for m in router.prefill_set() {
-            router.pool.register(&m)?;
+            router.backend.register(&m)?;
         }
         Ok(router)
+    }
+
+    /// The data-plane backend this router drives.
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
     }
 
     /// Models prefilled eagerly at admission: the ones this mode can ever
@@ -140,31 +163,30 @@ impl ChainRouter {
                     }
                     return set;
                 }
-                let cap = self.pool.manifest.models[&self.cfg.target]
+                let cap = self.manifest.models[&self.cfg.target]
                     .param_count;
-                self.pool.manifest.models_by_capability()
+                self.manifest.models_by_capability()
                     .into_iter()
-                    .filter(|m| self.pool.manifest.models[m].param_count
-                            <= cap)
+                    .filter(|m| self.manifest.models[m].param_count <= cap)
                     .collect()
             }
         }
     }
 
     fn kv_dims(&self, model: &str) -> KvDims {
-        let m = &self.pool.manifest.models[model];
+        let m = &self.manifest.models[model];
         KvDims {
             layers: m.layers,
             batch: self.cfg.batch,
             heads: m.heads,
-            seq: self.pool.manifest.seq,
+            seq: self.manifest.seq,
             head_dim: m.head_dim,
         }
     }
 
     fn state_len(&self, model: &str) -> usize {
-        let m = &self.pool.manifest.models[model];
-        self.pool.manifest.state_len(m, self.cfg.batch)
+        let m = &self.manifest.models[model];
+        self.manifest.state_len(m, self.cfg.batch)
     }
 
     /// Enqueue a request (assigning its id). Returns the id, or None if
@@ -204,7 +226,7 @@ impl ChainRouter {
             let QueuedReq { req, class, deadline, .. } = entry;
             let slo_ms = signed_ms(deadline, req.arrival);
             if req.prompt.is_empty()
-                || req.prompt.len() > self.pool.manifest.prefill {
+                || req.prompt.len() > self.manifest.prefill {
                 // unservable request: drop with an empty record
                 let now = Instant::now();
                 self.finished.push(Finished {
@@ -230,14 +252,14 @@ impl ChainRouter {
             for m in self.prefill_set() {
                 let dims = self.kv_dims(&m);
                 let state_len = self.state_len(&m);
-                let (logits, state1) = self.exec
+                let (logits, state1) = self.backend
                     .prefill(&mut self.prof, &m, &req.prompt)
                     .with_context(|| format!("prefill {m}"))?;
                 let batch = self.cfg.batch;
                 let st = self.states.ensure(&m, dims, state_len);
                 st.mask.clear_slot(slot_idx);
-                self.exec.insert(&mut self.prof, &m, batch, &mut st.kv,
-                                 &state1, slot_idx)?;
+                self.backend.insert(&mut self.prof, &m, batch, &mut st.kv,
+                                    &state1, slot_idx)?;
                 st.mask.append_valid(slot_idx, plen);
                 if m == target {
                     first_token = match self.cfg.rule {
@@ -255,8 +277,7 @@ impl ChainRouter {
                 committed,
                 admitted: admitted_at,
                 first_token: first_token_at,
-                finished_by_eos: first_token
-                    == self.pool.manifest.special.eos,
+                finished_by_eos: first_token == self.manifest.special.eos,
                 class,
                 deadline,
             };
@@ -305,7 +326,12 @@ impl ChainRouter {
             return Ok(if self.batcher.is_idle() { None } else { Some(0) });
         }
         let chain = self.current_chain();
-        self.prof.record_chain_selected(&chain.label());
+        let stale = !matches!(&self.label_cache, Some((c, _)) if c == &chain);
+        if stale {
+            self.label_cache = Some((chain.clone(), chain.label()));
+        }
+        self.prof.record_chain_selected(
+            &self.label_cache.as_ref().unwrap().1);
         // chain members that skipped admission prefill (lazy adaptive
         // routing) still need state entries; their caches catch up inside
         // the step
@@ -315,24 +341,25 @@ impl ChainRouter {
             self.states.ensure(m, dims, state_len);
         }
 
-        let outcome = {
+        {
             let seqs = self.batcher.slot_seqs();
             let mut ctx = StepCtx {
-                exec: &self.exec,
+                exec: self.backend.as_ref(),
                 prof: &mut self.prof,
                 sim: &mut self.sim,
                 states: &mut self.states,
                 batch: self.cfg.batch,
-                vocab: self.pool.manifest.vocab,
+                vocab: self.manifest.vocab,
                 rule: self.cfg.rule,
                 rng: &mut self.rng,
+                scratch: &mut self.scratch,
             };
             run_spec_step(&mut ctx, &chain, &seqs,
-                          self.pool.manifest.special.pad)?
-        };
+                          self.manifest.special.pad)?;
+        }
 
-        let eos = self.pool.manifest.special.eos;
-        let seq_cap = self.pool.manifest.seq;
+        let eos = self.manifest.special.eos;
+        let seq_cap = self.manifest.seq;
         let guard = self.cfg.window + 2;
         let mut total = 0usize;
         let mut to_complete = Vec::new();
@@ -341,7 +368,7 @@ impl ChainRouter {
                 continue;
             };
             let mut done = false;
-            for &t in &outcome.appended[b] {
+            for &t in &self.scratch.outcome.appended[b] {
                 if slot.remaining() == 0 {
                     done = true;
                     break;
@@ -369,7 +396,8 @@ impl ChainRouter {
         for b in to_complete {
             self.complete(b);
         }
-        self.prof.record_chain_step(&chain.label(), total as u64);
+        self.prof.record_chain_step(&self.label_cache.as_ref().unwrap().1,
+                                    total as u64);
         self.steps += 1;
         if self.steps % FIX_CACHES_EVERY == 0 {
             self.states.fix_caches()?;

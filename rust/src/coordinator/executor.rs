@@ -1,4 +1,4 @@
-//! Executor + Processors (paper §4.3): the data-plane dispatcher.
+//! Executor + Processors (paper §4.3): the XLA-backed [`Backend`].
 //!
 //! Each method is one stateless processor — Prefill, Decode (TMO path),
 //! Draft, Verify — that fetches the right lazily-compiled executable from
@@ -11,14 +11,16 @@
 //! single array output replaces the state in place. A tiny `extract`
 //! computation slices the tail (logits/drafted tokens) out for the host —
 //! the multi-megabyte KV region never crosses the host boundary.
+#![allow(clippy::too_many_arguments)] // Backend signatures, see backend.rs
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::backend::{Backend, PrefillState};
 use crate::coordinator::profiler::Profiler;
 use crate::model_pool::{FnKey, ModelPool};
-use crate::runtime::FnKind;
+use crate::runtime::{FnKind, Manifest};
 use crate::state::StateBuf;
 
 pub struct Executor {
@@ -72,50 +74,6 @@ impl Executor {
         exe.run_b_to_host(&[buf])
     }
 
-    /// PrefillProcessor: process one prompt (B=1), returning the
-    /// last-position logits `[V]` and the fresh packed B=1 state buffer.
-    pub fn prefill(&self, prof: &mut Profiler, model: &str, prompt: &[i32])
-                   -> Result<(Vec<f32>, xla::PjRtBuffer)> {
-        let p = self.pool.manifest.prefill;
-        if prompt.is_empty() || prompt.len() > p {
-            bail!("prompt length {} outside 1..={p}", prompt.len());
-        }
-        let key = Self::key(model, FnKind::Prefill, 1, 0);
-        let exe = self.pool.get(&key)?;
-        let weights = self.pool.weights_buffer(model)?;
-        let rt = &self.pool.runtime;
-        let mut padded = prompt.to_vec();
-        padded.resize(p, self.pool.manifest.special.pad);
-        let tokens = rt.to_device_i32(&padded, &[1, p])?;
-        let plen = rt.to_device_i32(&[prompt.len() as i32], &[1])?;
-        let (state1, d1) = exe.run_b(&[&weights, &tokens, &plen])?;
-
-        let xexe = self.pool.get(&Self::key(model, FnKind::Extract1, 1, 0))?;
-        let (tail, d2) = xexe.run_b_to_host(&[&state1])?;
-        let dur = self.calibrate(model, d1 + d2);
-        prof.record_call(&key, dur);
-        let v = self.pool.manifest.vocab;
-        Ok((tail[..v].to_vec(), state1))
-    }
-
-    /// Admission: place a prefilled B=1 state into batch slot `slot`
-    /// on-device (exported `insert` computation).
-    pub fn insert(&self, prof: &mut Profiler, model: &str, batch: usize,
-                  state: &mut StateBuf, one: &xla::PjRtBuffer, slot: usize)
-                  -> Result<()> {
-        let key = Self::key(model, FnKind::Insert, batch, 0);
-        let exe = self.pool.get(&key)?;
-        let rt = &self.pool.runtime;
-        let slot_b = rt.scalar_i32(slot as i32)?;
-        let (out, dur) = {
-            let buf = state.buffer(rt)?;
-            exe.run_b(&[buf, one, &slot_b])?
-        };
-        state.replace(out)?;
-        prof.record_call(&key, dur);
-        Ok(())
-    }
-
     /// Shared body of decode/draft/verify: dispatch the packed-state fn,
     /// adopt the new state, pull the tail.
     fn step_fn(&self, prof: &mut Profiler, key: &FnKey, tokens: &[i32],
@@ -142,60 +100,6 @@ impl Executor {
         Ok(tail)
     }
 
-    /// DecodeProcessor (the TMO / autoregressive path): one step for the
-    /// whole batch. Returns logits `[B*V]`.
-    pub fn decode(&self, prof: &mut Profiler, model: &str, batch: usize,
-                  tokens: &[i32], state: &mut StateBuf, lens: &[i32])
-                  -> Result<Vec<f32>> {
-        if tokens.len() != batch {
-            bail!("decode tokens != batch {batch}");
-        }
-        let key = Self::key(model, FnKind::Decode, batch, 0);
-        let mut tail = self.step_fn(prof, &key, tokens, &[batch], state,
-                                    lens)?;
-        tail.truncate(batch * self.pool.manifest.vocab);
-        Ok(tail)
-    }
-
-    /// DraftProcessor: greedy scan of `window` speculative tokens.
-    /// Returns (drafted tokens `[B*w]`, draft logits `[B*w*V]`).
-    pub fn draft(&self, prof: &mut Profiler, model: &str, batch: usize,
-                 window: usize, tokens: &[i32], state: &mut StateBuf,
-                 lens: &[i32]) -> Result<(Vec<i32>, Vec<f32>)> {
-        if tokens.len() != batch {
-            bail!("draft tokens != batch {batch}");
-        }
-        let key = Self::key(model, FnKind::Draft, batch, window);
-        let mut tail = self.step_fn(prof, &key, tokens, &[batch], state,
-                                    lens)?;
-        let v = self.pool.manifest.vocab;
-        let nl = batch * window * v;
-        // tail layout: logits[B,w,V] ++ tokens_as_f32[B,w]
-        let toks: Vec<i32> = tail[nl..nl + batch * window]
-            .iter()
-            .map(|&x| x as i32)
-            .collect();
-        tail.truncate(nl);
-        Ok((toks, tail))
-    }
-
-    /// VerifyProcessor: one parallel forward over `window`+1 positions.
-    /// `block` is row-major `[B, window+1]`. Returns logits
-    /// `[B*(window+1)*V]`.
-    pub fn verify(&self, prof: &mut Profiler, model: &str, batch: usize,
-                  window: usize, block: &[i32], state: &mut StateBuf,
-                  lens: &[i32]) -> Result<Vec<f32>> {
-        let w1 = window + 1;
-        if block.len() != batch * w1 {
-            bail!("verify block len mismatch (batch {batch}, w {window})");
-        }
-        let key = Self::key(model, FnKind::Verify, batch, window);
-        let mut tail = self.step_fn(prof, &key, block, &[batch, w1], state,
-                                    lens)?;
-        tail.truncate(batch * w1 * self.pool.manifest.vocab);
-        Ok(tail)
-    }
-
     /// Guard: a chunk of `positions` starting at each slot's length must
     /// fit the physical capacity S (the engine retires sequences well
     /// before this, so a violation is a logic error worth failing loudly).
@@ -212,6 +116,118 @@ impl Executor {
                        capacity {s} ({})", key.label());
             }
         }
+        Ok(())
+    }
+}
+
+impl Backend for Executor {
+    fn manifest(&self) -> &Arc<Manifest> {
+        &self.pool.manifest
+    }
+
+    fn register(&self, model: &str) -> Result<()> {
+        self.pool.register(model)?;
+        Ok(())
+    }
+
+    /// PrefillProcessor: process one prompt (B=1), returning the
+    /// last-position logits `[V]` and the fresh packed B=1 state buffer.
+    fn prefill(&self, prof: &mut Profiler, model: &str, prompt: &[i32])
+               -> Result<(Vec<f32>, PrefillState)> {
+        let p = self.pool.manifest.prefill;
+        if prompt.is_empty() || prompt.len() > p {
+            bail!("prompt length {} outside 1..={p}", prompt.len());
+        }
+        let key = Self::key(model, FnKind::Prefill, 1, 0);
+        let exe = self.pool.get(&key)?;
+        let weights = self.pool.weights_buffer(model)?;
+        let rt = &self.pool.runtime;
+        let mut padded = prompt.to_vec();
+        padded.resize(p, self.pool.manifest.special.pad);
+        let tokens = rt.to_device_i32(&padded, &[1, p])?;
+        let plen = rt.to_device_i32(&[prompt.len() as i32], &[1])?;
+        let (state1, d1) = exe.run_b(&[&weights, &tokens, &plen])?;
+
+        let xexe = self.pool.get(&Self::key(model, FnKind::Extract1, 1, 0))?;
+        let (tail, d2) = xexe.run_b_to_host(&[&state1])?;
+        let dur = self.calibrate(model, d1 + d2);
+        prof.record_call(&key, dur);
+        let v = self.pool.manifest.vocab;
+        Ok((tail[..v].to_vec(), PrefillState::Xla(state1)))
+    }
+
+    /// Admission: place a prefilled B=1 state into batch slot `slot`
+    /// on-device (exported `insert` computation).
+    fn insert(&self, prof: &mut Profiler, model: &str, batch: usize,
+              state: &mut StateBuf, one: &PrefillState, slot: usize)
+              -> Result<()> {
+        let PrefillState::Xla(one) = one else {
+            bail!("xla backend handed a non-xla prefill state");
+        };
+        let key = Self::key(model, FnKind::Insert, batch, 0);
+        let exe = self.pool.get(&key)?;
+        let rt = &self.pool.runtime;
+        let slot_b = rt.scalar_i32(slot as i32)?;
+        let (out, dur) = {
+            let buf = state.buffer(rt)?;
+            exe.run_b(&[buf, one, &slot_b])?
+        };
+        state.replace(out)?;
+        prof.record_call(&key, dur);
+        Ok(())
+    }
+
+    /// DecodeProcessor (the TMO / autoregressive path): one step for the
+    /// whole batch. Writes logits `[B*V]` into `out`.
+    fn decode(&self, prof: &mut Profiler, model: &str, batch: usize,
+              tokens: &[i32], state: &mut StateBuf, lens: &[i32],
+              out: &mut Vec<f32>) -> Result<()> {
+        if tokens.len() != batch {
+            bail!("decode tokens != batch {batch}");
+        }
+        let key = Self::key(model, FnKind::Decode, batch, 0);
+        let tail = self.step_fn(prof, &key, tokens, &[batch], state, lens)?;
+        out.clear();
+        out.extend_from_slice(&tail[..batch * self.pool.manifest.vocab]);
+        Ok(())
+    }
+
+    /// DraftProcessor: greedy scan of `window` speculative tokens. Writes
+    /// drafted tokens `[B*w]` and draft logits `[B*w*V]`.
+    fn draft(&self, prof: &mut Profiler, model: &str, batch: usize,
+             window: usize, tokens: &[i32], state: &mut StateBuf,
+             lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
+             -> Result<()> {
+        if tokens.len() != batch {
+            bail!("draft tokens != batch {batch}");
+        }
+        let key = Self::key(model, FnKind::Draft, batch, window);
+        let tail = self.step_fn(prof, &key, tokens, &[batch], state, lens)?;
+        let v = self.pool.manifest.vocab;
+        let nl = batch * window * v;
+        // tail layout: logits[B,w,V] ++ tokens_as_f32[B,w]
+        toks.clear();
+        toks.extend(tail[nl..nl + batch * window].iter().map(|&x| x as i32));
+        logits.clear();
+        logits.extend_from_slice(&tail[..nl]);
+        Ok(())
+    }
+
+    /// VerifyProcessor: one parallel forward over `window`+1 positions.
+    /// `block` is row-major `[B, window+1]`. Writes logits
+    /// `[B*(window+1)*V]` into `out`.
+    fn verify(&self, prof: &mut Profiler, model: &str, batch: usize,
+              window: usize, block: &[i32], state: &mut StateBuf,
+              lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        let w1 = window + 1;
+        if block.len() != batch * w1 {
+            bail!("verify block len mismatch (batch {batch}, w {window})");
+        }
+        let key = Self::key(model, FnKind::Verify, batch, window);
+        let tail = self.step_fn(prof, &key, block, &[batch, w1], state,
+                                lens)?;
+        out.clear();
+        out.extend_from_slice(&tail[..batch * w1 * self.pool.manifest.vocab]);
         Ok(())
     }
 }

@@ -2,18 +2,27 @@
 //! adaptive chain scheduling (§4.2), collaborative multi-level verification
 //! (§4.3), state synchronization (§4.4), profiling (§4.6), and the control
 //! plane that ties them together (§4.1).
+//!
+//! The data plane is pluggable (DESIGN.md §8): the [`Backend`] trait
+//! abstracts the five model-pool calls, implemented by the XLA-backed
+//! [`Executor`] and the artifact-free deterministic [`SimBackend`].
+pub mod backend;
 pub mod chain_router;
 pub mod engine;
 pub mod executor;
 pub mod profiler;
 pub mod scheduler;
+pub mod sim_backend;
 pub mod similarity;
 pub mod spec_step;
 
+pub use backend::{Backend, PrefillState};
 pub use chain_router::ChainRouter;
 pub use engine::{Batcher, Finished, Request, Slot};
 pub use executor::Executor;
 pub use profiler::Profiler;
 pub use scheduler::{Chain, Scheduler, ScoredChain};
+pub use sim_backend::{SimBackend, SimModel, SimSpec};
 pub use similarity::SimilarityTracker;
-pub use spec_step::{StepCtx, StepOutcome};
+pub use spec_step::{catch_up, run_spec_step, SlotSeqs, StepCtx,
+                    StepOutcome, StepScratch};

@@ -1,15 +1,21 @@
 //! PerformanceProfiler (paper §4.6): low-overhead timing + counter
 //! collection feeding the ModelChainScheduler's adaptive loop.
 //!
-//! Every PJRT call is recorded under its (model, fn kind, batch, window)
-//! key; per-call wall time is folded into an EMA (paper:
+//! Every backend call is recorded under its (model, fn kind, batch,
+//! window) key; per-call wall time is folded into an EMA (paper:
 //! `T_new = α·T_measured + (1-α)·T_old`). The scheduler reads smoothed
 //! *call-level* costs — the natural unit for Eq. 7's cost model under
 //! batched execution — and derived per-token times for diagnostics.
+//!
+//! Hot-path discipline (DESIGN.md §8): recording is keyed by a nested
+//! `model -> (kind, batch, window)` map so the steady-state
+//! `record_call_parts` path is a borrowed-str lookup plus a Copy-key
+//! entry — zero heap allocation once a key has been seen.
 use std::collections::HashMap;
 use std::time::Duration;
 
 use crate::model_pool::FnKey;
+use crate::runtime::FnKind;
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EmaStat {
@@ -30,11 +36,13 @@ impl EmaStat {
     }
 }
 
+type VariantKey = (FnKind, usize, usize);
+
 /// Collected runtime metrics.
 #[derive(Debug)]
 pub struct Profiler {
     alpha: f64,
-    calls: HashMap<FnKey, EmaStat>,
+    calls: HashMap<String, HashMap<VariantKey, EmaStat>>,
     /// per-chain-step acceptance counters: (chain label) -> (steps, tokens)
     chain_outcomes: HashMap<String, (u64, u64)>,
     /// per-chain selection counts (Internal Diagnostics, paper §5)
@@ -55,17 +63,35 @@ impl Profiler {
         }
     }
 
-    /// Record one executed call.
+    /// Record one executed call (key-struct convenience wrapper).
     pub fn record_call(&mut self, key: &FnKey, dur: Duration) {
-        self.calls
-            .entry(key.clone())
-            .or_default()
-            .update(dur.as_secs_f64(), self.alpha);
+        self.record_call_parts(&key.model, key.kind, key.batch, key.window,
+                               dur);
+    }
+
+    /// Record one executed call without materializing a key: allocation
+    /// free once (model, variant) has been seen (the model map entry is
+    /// created on first sight only).
+    pub fn record_call_parts(&mut self, model: &str, kind: FnKind,
+                             batch: usize, window: usize, dur: Duration) {
+        let alpha = self.alpha;
+        let x = dur.as_secs_f64();
+        if let Some(inner) = self.calls.get_mut(model) {
+            inner.entry((kind, batch, window)).or_default().update(x, alpha);
+            return;
+        }
+        let mut inner = HashMap::new();
+        let mut stat = EmaStat::default();
+        stat.update(x, alpha);
+        inner.insert((kind, batch, window), stat);
+        self.calls.insert(model.to_string(), inner);
     }
 
     /// Smoothed call cost for a key, if it has ever been measured.
     pub fn call_cost(&self, key: &FnKey) -> Option<f64> {
-        self.calls.get(key).map(|s| s.ema_s)
+        self.calls.get(key.model.as_str())
+            .and_then(|m| m.get(&(key.kind, key.batch, key.window)))
+            .map(|s| s.ema_s)
     }
 
     /// Smoothed per-token time T_i for a model fn: call cost divided by
@@ -76,16 +102,23 @@ impl Profiler {
     }
 
     pub fn record_chain_step(&mut self, chain_label: &str, committed: u64) {
-        let e = self.chain_outcomes.entry(chain_label.to_string())
-            .or_insert((0, 0));
-        e.0 += 1;
-        e.1 += committed;
+        if let Some(e) = self.chain_outcomes.get_mut(chain_label) {
+            e.0 += 1;
+            e.1 += committed;
+        } else {
+            self.chain_outcomes.insert(chain_label.to_string(),
+                                       (1, committed));
+        }
         self.steps += 1;
         self.committed_tokens += committed;
     }
 
     pub fn record_chain_selected(&mut self, chain_label: &str) {
-        *self.chain_selected.entry(chain_label.to_string()).or_insert(0) += 1;
+        if let Some(c) = self.chain_selected.get_mut(chain_label) {
+            *c += 1;
+        } else {
+            self.chain_selected.insert(chain_label.to_string(), 1);
+        }
     }
 
     /// Mean accepted tokens per step for a chain (diagnostics).
@@ -107,21 +140,28 @@ impl Profiler {
     /// All measured call stats (label, ema seconds, calls) for reports.
     pub fn call_table(&self) -> Vec<(String, f64, u64)> {
         let mut v: Vec<_> = self.calls.iter()
-            .map(|(k, s)| (k.label(), s.ema_s, s.count))
+            .flat_map(|(model, inner)| {
+                inner.iter().map(move |((kind, batch, window), s)| {
+                    (format!("{model}:{}/b{batch}/w{window}", kind.name()),
+                     s.ema_s, s.count)
+                })
+            })
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }
 
     pub fn total_call_time(&self) -> f64 {
-        self.calls.values().map(|s| s.total_s).sum()
+        self.calls.values()
+            .flat_map(|m| m.values())
+            .map(|s| s.total_s)
+            .sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::FnKind;
 
     fn key(model: &str, batch: usize) -> FnKey {
         FnKey { model: model.into(), kind: FnKind::Decode, batch, window: 0 }
@@ -153,6 +193,18 @@ mod tests {
     }
 
     #[test]
+    fn parts_and_key_paths_are_the_same_record() {
+        let mut p = Profiler::new(1.0);
+        let k = key("m0", 2);
+        p.record_call_parts("m0", FnKind::Decode, 2, 0,
+                            Duration::from_millis(40));
+        assert!((p.call_cost(&k).unwrap() - 0.040).abs() < 1e-9);
+        p.record_call(&k, Duration::from_millis(20));
+        assert!((p.call_cost(&k).unwrap() - 0.020).abs() < 1e-9);
+        assert_eq!(p.call_table().len(), 1);
+    }
+
+    #[test]
     fn per_token_normalizes_by_batch_and_positions() {
         let mut p = Profiler::new(1.0);
         let k = key("m0", 8);
@@ -160,6 +212,16 @@ mod tests {
         let t = p.per_token(&k, 1).unwrap();
         assert!((t - 0.010).abs() < 1e-9);
         assert!(p.per_token(&key("nope", 1), 1).is_none());
+    }
+
+    #[test]
+    fn call_table_labels_match_fnkey_labels() {
+        let mut p = Profiler::new(1.0);
+        let k = FnKey { model: "m1".into(), kind: FnKind::Verify,
+                        batch: 4, window: 8 };
+        p.record_call(&k, Duration::from_millis(5));
+        let t = p.call_table();
+        assert_eq!(t[0].0, k.label());
     }
 
     #[test]

@@ -1,0 +1,514 @@
+//! SimBackend: a deterministic, in-process model pool (DESIGN.md §8).
+//!
+//! Each "model" is a tiny table-driven Markov LM over the manifest vocab:
+//! the next-token distribution depends only on the previous token, so
+//! decode/draft/verify are pure functions of their inputs and need no KV
+//! state at all — the coordinator's mask bookkeeping, catch-up and
+//! rollback logic run unchanged on top, which is precisely what makes
+//! them testable without `make artifacts`.
+//!
+//! Agreement structure: a shared *oracle* process defines the consensus
+//! next token for every previous token; each model deviates from it with
+//! its configured `deviation` probability (hashed deterministically from
+//! the (seed, model, prev-token) triple, so runs are bit-reproducible).
+//! A drafter with deviation `d_q` verified by a target with deviation
+//! `d_p` therefore shows a per-token greedy acceptance rate of about
+//! `(1-d_q)(1-d_p)` — the knob the adaptivity tests and the hot-path
+//! bench turn.
+//!
+//! Costs: every call reports a synthetic duration
+//! `cost_per_pos × positions` to the profiler instead of sleeping, so the
+//! scheduler's Eq. 7 sees realistic paper-scale cost ratios while benches
+//! and tests run at full host speed.
+#![allow(clippy::too_many_arguments)] // Backend signatures, see backend.rs
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::backend::{Backend, PrefillState};
+use crate::coordinator::profiler::Profiler;
+use crate::rng::argmax;
+use crate::runtime::{DatasetSpec, FnKind, Manifest, ModelMeta,
+                     SpecialTokens};
+use crate::state::StateBuf;
+
+/// One simulated model: manifest dims (drive the scheduler's analytic
+/// fallback and capability ordering) plus behaviour knobs.
+#[derive(Debug, Clone)]
+pub struct SimModel {
+    pub name: String,
+    /// Probability this model's greedy next token deviates from the
+    /// shared oracle process (0.0 = always the consensus token).
+    pub deviation: f64,
+    /// Synthetic per-position call cost reported to the profiler, secs.
+    pub cost_per_pos: f64,
+    /// Capability proxy (Alg. 1 orders the pool by this).
+    pub param_count: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+}
+
+/// Full configuration of a simulated pool.
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub vocab: usize,
+    pub seq: usize,
+    pub prefill: usize,
+    pub windows: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub models: Vec<SimModel>,
+    /// Probability the oracle emits EOS at any position.
+    pub eos_prob: f64,
+    /// Seeds every hash in the token process.
+    pub seed: u64,
+}
+
+impl SimSpec {
+    /// Mirror of the AOT miniature pool (python/compile/model.py +
+    /// corpus.py): same vocab/seq/prefill/windows, same model names and
+    /// dims, same dataset specs — so the integration suite exercises
+    /// identical shapes whether or not artifacts exist.
+    pub fn small_pool() -> Self {
+        let m = |name: &str, deviation: f64, cost_per_pos: f64,
+                 param_count: usize, d: usize, layers: usize,
+                 heads: usize| SimModel {
+            name: name.to_string(),
+            deviation,
+            cost_per_pos,
+            param_count,
+            d,
+            layers,
+            heads,
+            head_dim: 16,
+        };
+        SimSpec {
+            vocab: 512,
+            seq: 128,
+            prefill: 48,
+            windows: vec![4, 8],
+            batches: vec![1, 2, 4, 8],
+            models: vec![
+                // cost ratios loosely follow the paper's testbed
+                // (68m : 1.1B : 7B ~ 1 : 4 : 12 on the miniature pool)
+                m("m0", 0.25, 2.0e-6, 131_072, 64, 2, 4),
+                m("m1", 0.12, 8.0e-6, 442_368, 96, 4, 6),
+                m("m2", 0.0, 24.0e-6, 1_228_800, 128, 6, 8),
+            ],
+            eos_prob: 0.02,
+            seed: 0xB0A7_10AD,
+        }
+    }
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Uniform in [0, 1) from a hash.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+pub struct SimBackend {
+    manifest: Arc<Manifest>,
+    models: Vec<SimModel>,
+    /// fnv(name) cached per model so the hot path never re-hashes it
+    salts: Vec<u64>,
+    seed: u64,
+    eos_prob: f64,
+}
+
+impl SimBackend {
+    pub fn new(spec: SimSpec) -> Self {
+        let mut models_meta = std::collections::BTreeMap::new();
+        for m in &spec.models {
+            models_meta.insert(m.name.clone(), ModelMeta {
+                name: m.name.clone(),
+                d: m.d,
+                layers: m.layers,
+                heads: m.heads,
+                head_dim: m.head_dim,
+                param_count: m.param_count,
+                weights_file: PathBuf::from(format!("sim://{}", m.name)),
+                artifacts: Vec::new(),
+            });
+        }
+        let mut datasets = std::collections::BTreeMap::new();
+        // mirrors python/compile/corpus.py
+        let ds = |name: &str, range: (usize, usize), p_det: f64,
+                  lengths: (usize, usize, usize, usize), paper: usize| {
+            DatasetSpec {
+                name: name.to_string(),
+                range,
+                p_det,
+                lengths,
+                paper_size: paper,
+            }
+        };
+        for d in [
+            ds("gsm8k", (64, 192), 0.75, (12, 32, 16, 48), 8500),
+            ds("humaneval", (192, 320), 0.90, (8, 24, 24, 64), 164),
+            ds("mtbench", (320, 448), 0.50, (24, 40, 12, 40), 6142),
+            ds("mgsm", (448, 512), 0.70, (12, 28, 16, 48), 250),
+        ] {
+            datasets.insert(d.name.clone(), d);
+        }
+        let manifest = Arc::new(Manifest {
+            root: PathBuf::from("sim://"),
+            vocab: spec.vocab,
+            seq: spec.seq,
+            prefill: spec.prefill,
+            windows: spec.windows.clone(),
+            batches: spec.batches.clone(),
+            special: SpecialTokens { pad: 0, bos: 1, eos: 2, sep: 3 },
+            datasets,
+            similarity: std::collections::BTreeMap::new(),
+            models: models_meta,
+        });
+        let salts = spec.models.iter().map(|m| fnv(&m.name)).collect();
+        SimBackend {
+            manifest,
+            models: spec.models,
+            salts,
+            seed: spec.seed,
+            eos_prob: spec.eos_prob,
+        }
+    }
+
+    fn model_idx(&self, name: &str) -> Result<usize> {
+        self.models.iter().position(|m| m.name == name)
+            .with_context(|| format!("sim backend has no model {name:?}"))
+    }
+
+    /// The consensus next token after `prev` (special-token-free unless
+    /// the EOS coin fires).
+    fn oracle_next(&self, prev: i32) -> i32 {
+        let h = splitmix(self.seed ^ (prev as u64).wrapping_mul(0x9E37_79B9));
+        if unit(splitmix(h ^ 0xE05)) < self.eos_prob {
+            return self.manifest.special.eos;
+        }
+        let nv = self.manifest.vocab as u64 - 4;
+        4 + (h % nv) as i32
+    }
+
+    /// Model `mi`'s greedy next token after `prev`: the oracle token
+    /// unless this model's deviation coin fires.
+    fn model_next(&self, mi: usize, prev: i32) -> i32 {
+        let o = self.oracle_next(prev);
+        let hm = splitmix(
+            self.seed ^ (prev as u64).rotate_left(13) ^ self.salts[mi]);
+        if unit(hm) < self.models[mi].deviation {
+            let nv = self.manifest.vocab as u64 - 4;
+            let alt = 4 + (splitmix(hm) % nv) as i32;
+            if alt == o {
+                4 + ((alt as u64 - 4 + 1) % nv) as i32
+            } else {
+                alt
+            }
+        } else {
+            o
+        }
+    }
+
+    /// Fill one logits row `[V]` for (model, prev): a shared
+    /// model-independent base texture in [0, 2) plus a +6 peak on the
+    /// model's chosen token, so argmax is unambiguous and DTV between two
+    /// models is small iff they agree on the peak.
+    fn write_logits(&self, mi: usize, prev: i32, out: &mut [f32]) {
+        let mut h = splitmix(
+            self.seed ^ (prev as u64).wrapping_mul(0xA24B_AED4));
+        for (tok, o) in out.iter_mut().enumerate() {
+            h = splitmix(h ^ tok as u64);
+            *o = (h >> 40) as f32 * (2.0 / (1u64 << 24) as f32);
+        }
+        let choice = self.model_next(mi, prev);
+        out[choice as usize] += 6.0;
+    }
+
+    fn record(&self, prof: &mut Profiler, model: &str, kind: FnKind,
+              batch: usize, window: usize, positions: usize,
+              cost_per_pos: f64) {
+        let dur = Duration::from_secs_f64(cost_per_pos * positions as f64);
+        prof.record_call_parts(model, kind, batch, window, dur);
+    }
+
+    /// Guard mirroring the XLA executor's capacity check, so logic errors
+    /// in the engine fail identically on either backend.
+    fn check_capacity(&self, model: &str, lens: &[i32], positions: usize)
+                      -> Result<()> {
+        let s = self.manifest.seq;
+        for (b, &l) in lens.iter().enumerate() {
+            if l as usize + positions > s {
+                bail!("slot {b}: chunk of {positions} at len {l} exceeds \
+                       capacity {s} ({model})");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Backend for SimBackend {
+    fn manifest(&self) -> &Arc<Manifest> {
+        &self.manifest
+    }
+
+    fn register(&self, model: &str) -> Result<()> {
+        self.model_idx(model).map(|_| ())
+    }
+
+    fn prefill(&self, prof: &mut Profiler, model: &str, prompt: &[i32])
+               -> Result<(Vec<f32>, PrefillState)> {
+        let p = self.manifest.prefill;
+        if prompt.is_empty() || prompt.len() > p {
+            bail!("prompt length {} outside 1..={p}", prompt.len());
+        }
+        let mi = self.model_idx(model)?;
+        let mut logits = vec![0.0f32; self.manifest.vocab];
+        self.write_logits(mi, *prompt.last().unwrap(), &mut logits);
+        self.record(prof, model, FnKind::Prefill, 1, 0, prompt.len(),
+                    self.models[mi].cost_per_pos);
+        Ok((logits, PrefillState::Sim))
+    }
+
+    fn insert(&self, prof: &mut Profiler, model: &str, batch: usize,
+              _state: &mut StateBuf, one: &PrefillState, slot: usize)
+              -> Result<()> {
+        if !matches!(one, PrefillState::Sim) {
+            bail!("sim backend handed a non-sim prefill state");
+        }
+        if slot >= batch {
+            bail!("insert slot {slot} out of range (batch {batch})");
+        }
+        let mi = self.model_idx(model)?;
+        self.record(prof, model, FnKind::Insert, batch, 0, 1,
+                    self.models[mi].cost_per_pos);
+        Ok(())
+    }
+
+    fn decode(&self, prof: &mut Profiler, model: &str, batch: usize,
+              tokens: &[i32], _state: &mut StateBuf, lens: &[i32],
+              out: &mut Vec<f32>) -> Result<()> {
+        if tokens.len() != batch {
+            bail!("decode tokens != batch {batch}");
+        }
+        if lens.len() != batch {
+            bail!("lens length != batch {batch}");
+        }
+        let mi = self.model_idx(model)?;
+        self.check_capacity(model, lens, 1)?;
+        let v = self.manifest.vocab;
+        out.clear();
+        out.resize(batch * v, 0.0);
+        for b in 0..batch {
+            self.write_logits(mi, tokens[b], &mut out[b * v..(b + 1) * v]);
+        }
+        self.record(prof, model, FnKind::Decode, batch, 0, batch,
+                    self.models[mi].cost_per_pos);
+        Ok(())
+    }
+
+    fn draft(&self, prof: &mut Profiler, model: &str, batch: usize,
+             window: usize, tokens: &[i32], _state: &mut StateBuf,
+             lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
+             -> Result<()> {
+        if tokens.len() != batch {
+            bail!("draft tokens != batch {batch}");
+        }
+        if lens.len() != batch {
+            bail!("lens length != batch {batch}");
+        }
+        let mi = self.model_idx(model)?;
+        self.check_capacity(model, lens, window + 1)?;
+        let v = self.manifest.vocab;
+        toks.clear();
+        toks.resize(batch * window, 0);
+        logits.clear();
+        logits.resize(batch * window * v, 0.0);
+        for b in 0..batch {
+            let mut prev = tokens[b];
+            for i in 0..window {
+                let row = &mut logits[(b * window + i) * v
+                                      ..(b * window + i + 1) * v];
+                self.write_logits(mi, prev, row);
+                let t = argmax(row) as i32;
+                toks[b * window + i] = t;
+                prev = t;
+            }
+        }
+        self.record(prof, model, FnKind::Draft, batch, window,
+                    batch * window, self.models[mi].cost_per_pos);
+        Ok(())
+    }
+
+    fn verify(&self, prof: &mut Profiler, model: &str, batch: usize,
+              window: usize, block: &[i32], _state: &mut StateBuf,
+              lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        let w1 = window + 1;
+        if block.len() != batch * w1 {
+            bail!("verify block len mismatch (batch {batch}, w {window})");
+        }
+        if lens.len() != batch {
+            bail!("lens length != batch {batch}");
+        }
+        let mi = self.model_idx(model)?;
+        self.check_capacity(model, lens, w1)?;
+        let v = self.manifest.vocab;
+        out.clear();
+        out.resize(batch * w1 * v, 0.0);
+        for b in 0..batch {
+            for i in 0..w1 {
+                self.write_logits(mi, block[b * w1 + i],
+                                  &mut out[(b * w1 + i) * v
+                                           ..(b * w1 + i + 1) * v]);
+            }
+        }
+        self.record(prof, model, FnKind::Verify, batch, window, batch * w1,
+                    self.models[mi].cost_per_pos);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::KvDims;
+
+    fn backend() -> SimBackend {
+        SimBackend::new(SimSpec::small_pool())
+    }
+
+    fn dummy_state(b: &SimBackend, model: &str, batch: usize) -> StateBuf {
+        let m = &b.manifest().models[model];
+        let dims = KvDims {
+            layers: m.layers,
+            batch,
+            heads: m.heads,
+            seq: b.manifest().seq,
+            head_dim: m.head_dim,
+        };
+        StateBuf::new(dims, b.manifest().state_len(m, batch))
+    }
+
+    #[test]
+    fn decode_is_deterministic_and_peaked() {
+        let b = backend();
+        let mut prof = Profiler::new(0.2);
+        let mut st = dummy_state(&b, "m2", 2);
+        let mut out1 = Vec::new();
+        let mut out2 = Vec::new();
+        b.decode(&mut prof, "m2", 2, &[70, 71], &mut st, &[5, 6], &mut out1)
+            .unwrap();
+        b.decode(&mut prof, "m2", 2, &[70, 71], &mut st, &[5, 6], &mut out2)
+            .unwrap();
+        assert_eq!(out1, out2, "sim decode must be pure");
+        let v = b.manifest().vocab;
+        assert_eq!(out1.len(), 2 * v);
+        // the peak dominates the base texture by construction
+        for row in out1.chunks(v) {
+            let a = argmax(row);
+            assert!(row[a] >= 6.0, "peak missing: {}", row[a]);
+        }
+    }
+
+    #[test]
+    fn draft_scan_follows_model_next() {
+        let b = backend();
+        let mut prof = Profiler::new(0.2);
+        let mut st = dummy_state(&b, "m0", 1);
+        let mut toks = Vec::new();
+        let mut logits = Vec::new();
+        b.draft(&mut prof, "m0", 1, 4, &[100], &mut st, &[3], &mut toks,
+                &mut logits).unwrap();
+        let mi = b.model_idx("m0").unwrap();
+        let mut prev = 100;
+        for (i, &t) in toks.iter().enumerate() {
+            assert_eq!(t, b.model_next(mi, prev), "draft pos {i}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn deviation_controls_agreement_rate() {
+        let b = backend();
+        let m0 = b.model_idx("m0").unwrap();
+        let m2 = b.model_idx("m2").unwrap();
+        let n = 4000usize;
+        // prev tokens are only hashed (never indexed), so any id works
+        let agree = (0..n)
+            .filter(|&t| {
+                let prev = 4 + t as i32;
+                b.model_next(m0, prev) == b.model_next(m2, prev)
+            })
+            .count() as f64 / n as f64;
+        // m0 deviates 25% of the time, m2 never: ~75% agreement
+        assert!((agree - 0.75).abs() < 0.05, "agreement {agree}");
+    }
+
+    #[test]
+    fn verify_and_decode_agree_on_same_prev_token() {
+        // the Markov property the greedy-parity suite relies on: logits
+        // for a position depend only on the previous token, regardless of
+        // which entry point computed them
+        let b = backend();
+        let mut prof = Profiler::new(0.2);
+        let mut st = dummy_state(&b, "m2", 1);
+        let v = b.manifest().vocab;
+        let mut dec = Vec::new();
+        b.decode(&mut prof, "m2", 1, &[77], &mut st, &[4], &mut dec)
+            .unwrap();
+        let mut ver = Vec::new();
+        b.verify(&mut prof, "m2", 1, 4, &[77, 5, 6, 7, 8], &mut st, &[4],
+                 &mut ver).unwrap();
+        assert_eq!(&dec[..v], &ver[..v]);
+    }
+
+    #[test]
+    fn synthetic_costs_feed_profiler_with_configured_ratios() {
+        let b = backend();
+        let mut prof = Profiler::new(1.0);
+        let mut st0 = dummy_state(&b, "m0", 1);
+        let mut st2 = dummy_state(&b, "m2", 1);
+        let mut out = Vec::new();
+        b.decode(&mut prof, "m0", 1, &[9], &mut st0, &[1], &mut out)
+            .unwrap();
+        b.decode(&mut prof, "m2", 1, &[9], &mut st2, &[1], &mut out)
+            .unwrap();
+        let k = |m: &str| crate::model_pool::FnKey {
+            model: m.into(),
+            kind: FnKind::Decode,
+            batch: 1,
+            window: 0,
+        };
+        let c0 = prof.call_cost(&k("m0")).unwrap();
+        let c2 = prof.call_cost(&k("m2")).unwrap();
+        assert!((c2 / c0 - 12.0).abs() < 1e-6, "ratio {}", c2 / c0);
+    }
+
+    #[test]
+    fn capacity_guard_matches_xla_semantics() {
+        let b = backend();
+        let mut prof = Profiler::new(0.2);
+        let mut st = dummy_state(&b, "m2", 1);
+        let mut out = Vec::new();
+        let seq = b.manifest().seq as i32;
+        let err = b.verify(&mut prof, "m2", 1, 4, &[1, 2, 3, 4, 5], &mut st,
+                           &[seq - 2], &mut out);
+        assert!(err.is_err(), "chunk past capacity must bail");
+    }
+}

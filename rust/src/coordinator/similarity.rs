@@ -12,9 +12,11 @@
 //! α̂_ij = f(SimScore) through a calibrated sigmoid — refined further by a
 //! direct empirical acceptance-rate EMA once real verification outcomes
 //! exist (the empirical signal dominates when present).
+//!
+//! Hot-path discipline (DESIGN.md §8): observations run once per level
+//! per step, so pair state lives in a nested `proposer -> verifier` map —
+//! steady-state lookups are borrowed-str only, no per-call String keys.
 use std::collections::HashMap;
-
-use crate::rng::softmax;
 
 /// DTV between two probability vectors (Eq. 5).
 pub fn dtv(p: &[f32], q: &[f32]) -> f64 {
@@ -24,9 +26,31 @@ pub fn dtv(p: &[f32], q: &[f32]) -> f64 {
         .sum::<f64>()
 }
 
-/// DTV computed from raw logits.
+/// DTV computed from raw logits, single pass over each operand per stage:
+/// maxima, partition sums, then the |p−q| accumulation — no intermediate
+/// probability vectors are materialized (the allocation this replaced was
+/// two V-sized softmax buffers per compared position per step).
 pub fn dtv_logits(pl: &[f32], ql: &[f32]) -> f64 {
-    dtv(&softmax(pl), &softmax(ql))
+    debug_assert_eq!(pl.len(), ql.len());
+    let mut mp = f32::NEG_INFINITY;
+    let mut mq = f32::NEG_INFINITY;
+    for (&a, &b) in pl.iter().zip(ql) {
+        mp = mp.max(a);
+        mq = mq.max(b);
+    }
+    let mut zp = 0.0f32;
+    let mut zq = 0.0f32;
+    for (&a, &b) in pl.iter().zip(ql) {
+        zp += (a - mp).exp();
+        zq += (b - mq).exp();
+    }
+    let mut acc = 0.0f64;
+    for (&a, &b) in pl.iter().zip(ql) {
+        let p = (a - mp).exp() / zp;
+        let q = (b - mq).exp() / zq;
+        acc += (p - q).abs() as f64;
+    }
+    0.5 * acc
 }
 
 /// Calibrated sigmoid mapping SimScore -> acceptance probability
@@ -38,7 +62,7 @@ pub fn accept_from_sim(sim: f64) -> f64 {
     (1.0 / (1.0 + (-a * (sim - b)).exp())).clamp(0.02, 0.98)
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 struct PairStat {
     sim_ema: f64,
     sim_n: u64,
@@ -50,12 +74,12 @@ struct PairStat {
 #[derive(Debug)]
 pub struct SimilarityTracker {
     alpha: f64,
-    pairs: HashMap<(String, String), PairStat>,
+    pairs: HashMap<String, HashMap<String, PairStat>>,
     /// α estimate used before any observation exists. Optimistic by
     /// default so unexplored chains get tried; can be seeded from the
     /// manifest's offline similarity (SSD-Tuned / warm start).
     optimistic_prior: f64,
-    priors: HashMap<(String, String), f64>,
+    priors: HashMap<String, HashMap<String, f64>>,
 }
 
 impl SimilarityTracker {
@@ -71,8 +95,23 @@ impl SimilarityTracker {
     /// Seed a pair's prior acceptance estimate (e.g. from build-time
     /// offline similarity measurements).
     pub fn set_prior(&mut self, proposer: &str, verifier: &str, sim: f64) {
-        self.priors.insert((proposer.into(), verifier.into()),
-                           accept_from_sim(sim));
+        self.priors.entry(proposer.to_string())
+            .or_default()
+            .insert(verifier.to_string(), accept_from_sim(sim));
+    }
+
+    /// The pair's mutable stat, allocating key strings only on first
+    /// sight of the pair (steady state: two borrowed lookups).
+    fn pair_entry(&mut self, proposer: &str, verifier: &str)
+                  -> &mut PairStat {
+        if !self.pairs.contains_key(proposer) {
+            self.pairs.insert(proposer.to_string(), HashMap::new());
+        }
+        let inner = self.pairs.get_mut(proposer).unwrap();
+        if !inner.contains_key(verifier) {
+            inner.insert(verifier.to_string(), PairStat::default());
+        }
+        inner.get_mut(verifier).unwrap()
     }
 
     /// Fold one batch of per-position DTVs into the pair's SimScore EMA.
@@ -83,14 +122,12 @@ impl SimilarityTracker {
         }
         let mean = dtvs.iter().sum::<f64>() / dtvs.len() as f64;
         let sim = 1.0 - mean;
-        let e = self.pairs
-            .entry((proposer.into(), verifier.into()))
-            .or_insert(PairStat { sim_ema: sim, sim_n: 0,
-                                  acc_ema: 0.0, acc_n: 0 });
+        let alpha = self.alpha;
+        let e = self.pair_entry(proposer, verifier);
         e.sim_ema = if e.sim_n == 0 {
             sim
         } else {
-            self.alpha * sim + (1.0 - self.alpha) * e.sim_ema
+            alpha * sim + (1.0 - alpha) * e.sim_ema
         };
         e.sim_n += 1;
     }
@@ -103,21 +140,23 @@ impl SimilarityTracker {
             return;
         }
         let rate = accepted as f64 / window as f64;
-        let e = self.pairs
-            .entry((proposer.into(), verifier.into()))
-            .or_insert(PairStat { sim_ema: 0.0, sim_n: 0,
-                                  acc_ema: rate, acc_n: 0 });
+        let alpha = self.alpha;
+        let e = self.pair_entry(proposer, verifier);
         e.acc_ema = if e.acc_n == 0 {
             rate
         } else {
-            self.alpha * rate + (1.0 - self.alpha) * e.acc_ema
+            alpha * rate + (1.0 - alpha) * e.acc_ema
         };
         e.acc_n += 1;
     }
 
+    fn pair(&self, proposer: &str, verifier: &str) -> Option<&PairStat> {
+        self.pairs.get(proposer).and_then(|m| m.get(verifier))
+    }
+
     /// Current SimScore estimate (Eq. 6), if observed.
     pub fn sim_score(&self, proposer: &str, verifier: &str) -> Option<f64> {
-        self.pairs.get(&(proposer.into(), verifier.into()))
+        self.pair(proposer, verifier)
             .filter(|e| e.sim_n > 0)
             .map(|e| e.sim_ema)
     }
@@ -125,8 +164,7 @@ impl SimilarityTracker {
     /// Acceptance-probability estimate α̂_ij for the scheduler: empirical
     /// EMA when present, else f(SimScore), else prior.
     pub fn accept_estimate(&self, proposer: &str, verifier: &str) -> f64 {
-        let key = (proposer.to_string(), verifier.to_string());
-        if let Some(e) = self.pairs.get(&key) {
+        if let Some(e) = self.pair(proposer, verifier) {
             if e.acc_n > 0 {
                 return e.acc_ema.clamp(0.01, 0.99);
             }
@@ -134,14 +172,21 @@ impl SimilarityTracker {
                 return accept_from_sim(e.sim_ema);
             }
         }
-        self.priors.get(&key).copied().unwrap_or(self.optimistic_prior)
+        self.priors.get(proposer)
+            .and_then(|m| m.get(verifier))
+            .copied()
+            .unwrap_or(self.optimistic_prior)
     }
 
     /// Dump (proposer, verifier, sim, acc, n) rows for diagnostics.
     pub fn table(&self) -> Vec<(String, String, f64, f64, u64)> {
         let mut v: Vec<_> = self.pairs.iter()
-            .map(|((a, b), e)| (a.clone(), b.clone(), e.sim_ema, e.acc_ema,
-                                e.sim_n + e.acc_n))
+            .flat_map(|(a, inner)| {
+                inner.iter().map(move |(b, e)| {
+                    (a.clone(), b.clone(), e.sim_ema, e.acc_ema,
+                     e.sim_n + e.acc_n)
+                })
+            })
             .collect();
         v.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
         v
@@ -151,6 +196,7 @@ impl SimilarityTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::softmax;
 
     #[test]
     fn dtv_basic_properties() {
@@ -169,6 +215,9 @@ mod tests {
         let d = dtv_logits(&pl, &ql);
         assert!(d > 0.0 && d < 1.0);
         assert!(dtv_logits(&pl, &pl) < 1e-9);
+        // the fused path must agree with softmax-then-dtv
+        let want = dtv(&softmax(&pl), &softmax(&ql));
+        assert!((d - want).abs() < 1e-7, "fused {d} vs staged {want}");
     }
 
     #[test]
@@ -222,5 +271,18 @@ mod tests {
         t.observe_dtv("a", "b", &[]);
         t.observe_acceptance("a", "b", 0, 0);
         assert!((t.accept_estimate("a", "b") - 0.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_flattens_nested_pairs_sorted() {
+        let mut t = SimilarityTracker::new(0.5);
+        t.observe_acceptance("b", "c", 1, 2);
+        t.observe_acceptance("a", "c", 1, 2);
+        t.observe_acceptance("a", "b", 1, 2);
+        let rows = t.table();
+        let keys: Vec<_> = rows.iter()
+            .map(|r| (r.0.as_str(), r.1.as_str()))
+            .collect();
+        assert_eq!(keys, vec![("a", "b"), ("a", "c"), ("b", "c")]);
     }
 }

@@ -19,19 +19,39 @@
 //! Along the way the verifier/proposal distributions at the same positions
 //! feed DTV similarity observations (Eq. 5-6) and empirical acceptance
 //! EMAs to the scheduler's tracker.
+//!
+//! ## Zero-allocation hot path (DESIGN.md §8)
+//!
+//! Every per-step buffer lives in the reusable [`StepScratch`] arena the
+//! engine threads through [`run_spec_step`]/[`catch_up`]:
+//!
+//! * the candidate block is ONE flat `[B, w+1]` buffer updated in place
+//!   between levels (no per-slot `Vec<Vec<i32>>`, no re-flattening);
+//! * proposer distributions are *index references* into the previous
+//!   level's verify output (`p_prev`) or the draft logits — the old
+//!   per-candidate `p_row(i).to_vec()` clones are gone entirely;
+//! * greedy acceptance is softmax-free (argmax compare on raw logits) and
+//!   the probabilistic path uses streaming `softmax_prob_at` plus two
+//!   reused distribution buffers;
+//! * verify outputs ping-pong between two reused buffers (`p_cur` /
+//!   `p_prev`), and the backend writes logits into them directly.
+//!
+//! After a warm-up step has grown every buffer to capacity, a steady-state
+//! greedy spec step performs **zero heap allocations** — enforced by
+//! `benches/bench_hotpath.rs` with a counting global allocator.
 use anyhow::{bail, Result};
 
 use crate::config::AcceptRule;
-use crate::coordinator::executor::Executor;
+use crate::coordinator::backend::Backend;
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::scheduler::Chain;
 use crate::coordinator::similarity::{dtv_logits, SimilarityTracker};
-use crate::rng::{argmax, softmax, Rng};
+use crate::rng::{argmax, softmax_into, softmax_prob_at, Rng};
 use crate::state::StateManager;
 
 /// Everything a step needs, borrowed from the engine.
 pub struct StepCtx<'a> {
-    pub exec: &'a Executor,
+    pub exec: &'a dyn Backend,
     pub prof: &'a mut Profiler,
     pub sim: &'a mut SimilarityTracker,
     pub states: &'a mut StateManager,
@@ -39,37 +59,151 @@ pub struct StepCtx<'a> {
     pub vocab: usize,
     pub rule: AcceptRule,
     pub rng: &'a mut Rng,
+    pub scratch: &'a mut StepScratch,
 }
 
-/// Result of one step: tokens committed per slot (empty for idle slots),
-/// and per-level accepted counts for diagnostics.
+/// Result of one step, owned by the scratch arena and reused across
+/// steps: tokens committed per slot (empty for idle slots), and per-level
+/// accepted counts for diagnostics (flat `[levels × batch]`).
 #[derive(Debug, Default)]
 pub struct StepOutcome {
     pub appended: Vec<Vec<i32>>,
-    pub accepted_per_level: Vec<Vec<usize>>,
+    accepted_flat: Vec<usize>,
+    pub levels: usize,
+    pub batch: usize,
+}
+
+impl StepOutcome {
+    /// Candidates accepted at verification level `level` (0-based over
+    /// the chain's verify hops) for `slot`.
+    pub fn accepted(&self, level: usize, slot: usize) -> usize {
+        self.accepted_flat[level * self.batch + slot]
+    }
+
+    /// Diagnostic view matching the old nested layout (allocates).
+    pub fn accepted_per_level(&self) -> Vec<Vec<usize>> {
+        (0..self.levels)
+            .map(|l| (0..self.batch).map(|b| self.accepted(l, b)).collect())
+            .collect()
+    }
+
+    /// `max_append` is the worst-case tokens one slot can commit this
+    /// step (w+1); reserving it here keeps capacity growth deterministic
+    /// — without it, the first full-acceptance step after warm-up would
+    /// reallocate inside the measured hot path.
+    fn reset(&mut self, batch: usize, levels: usize, max_append: usize) {
+        if self.appended.len() < batch {
+            self.appended.resize_with(batch, Vec::new);
+        }
+        // keep the pub field's length authoritative: stale rows from a
+        // previous larger-batch use of the same scratch must not survive
+        self.appended.truncate(batch);
+        for v in self.appended.iter_mut() {
+            v.clear();
+            v.reserve(max_append);
+        }
+        self.accepted_flat.clear();
+        self.accepted_flat.resize(levels * batch, 0);
+        self.levels = levels;
+        self.batch = batch;
+    }
+}
+
+/// Reusable per-step buffers (the arena). Buffers only ever grow; after
+/// the first step at a given (batch, window, vocab, chain depth) shape,
+/// no call allocates.
+#[derive(Debug, Default)]
+pub struct StepScratch {
+    /// last committed token per slot (pad for idle)
+    base: Vec<i32>,
+    /// per-slot valid lengths handed to the backend
+    lens: Vec<i32>,
+    /// the live candidate block, flat row-major `[B, w+1]`
+    block: Vec<i32>,
+    /// number of real candidates per slot in `block`
+    cand_len: Vec<usize>,
+    /// draft outputs (level-1 proposer tokens + logits)
+    d_toks: Vec<i32>,
+    d_logits: Vec<f32>,
+    /// verify-output ping-pong: `p_cur` is the running level's verifier
+    /// logits, `p_prev` the previous level's (= the proposer q-rows)
+    p_cur: Vec<f32>,
+    p_prev: Vec<f32>,
+    /// catch-up scratch (separate so catch-up cannot clobber step state)
+    catch_logits: Vec<f32>,
+    advance: Vec<usize>,
+    /// per-level snapshots of the candidate tokens each model physically
+    /// wrote, flat `[levels × B × w]` + lengths `[levels × B]`
+    written: Vec<i32>,
+    written_len: Vec<usize>,
+    /// probabilistic-path distribution buffers
+    probs: Vec<f32>,
+    resid: Vec<f32>,
+    /// per-level DTV observations folded into the similarity tracker
+    agg_dtvs: Vec<f64>,
+    /// the step's result, reused across steps
+    pub outcome: StepOutcome,
+}
+
+impl StepScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 /// Per-slot view the engine passes in: committed token sequence of every
 /// *active* slot (None = idle slot).
 pub type SlotSeqs<'a> = Vec<Option<&'a [i32]>>;
 
-fn base_tokens(slots: &SlotSeqs, pad: i32) -> Vec<i32> {
-    slots.iter()
-        .map(|s| s.map_or(pad, |c| *c.last().unwrap()))
-        .collect()
+/// Structured guard (replaces the old `c.last().unwrap()` panic): every
+/// active slot must carry at least its base token.
+fn validate_slots(slots: &SlotSeqs) -> Result<()> {
+    for (b, s) in slots.iter().enumerate() {
+        if let Some(c) = s {
+            if c.is_empty() {
+                bail!("slot {b}: empty committed sequence (the engine \
+                       must commit the prefill token before stepping)");
+            }
+        }
+    }
+    Ok(())
 }
 
-fn lens_of(states: &StateManager, model: &str, batch: usize) -> Vec<i32> {
-    let st = states.get(model).unwrap();
-    (0..batch).map(|b| st.mask.valid_len(b) as i32).collect()
+/// Base token per slot into a reused buffer. Errors (rather than
+/// panicking) on an empty active sequence.
+fn base_tokens_into(slots: &SlotSeqs, pad: i32, out: &mut Vec<i32>)
+                    -> Result<()> {
+    out.clear();
+    for (b, s) in slots.iter().enumerate() {
+        match s {
+            None => out.push(pad),
+            Some(c) => match c.last() {
+                Some(&t) => out.push(t),
+                None => bail!("slot {b}: empty committed sequence (no \
+                               base token to speculate from)"),
+            },
+        }
+    }
+    Ok(())
+}
+
+/// Per-slot valid lengths for a model into a reused buffer.
+fn fill_lens(states: &StateManager, model: &str, batch: usize,
+             lens: &mut Vec<i32>) -> Result<()> {
+    let st = states.get(model)?;
+    lens.clear();
+    lens.extend((0..batch).map(|b| st.mask.valid_len(b) as i32));
+    Ok(())
 }
 
 /// Bring `model`'s cache to the committed frontier (valid == C-1) on every
 /// active slot, using chunked verify calls of up to w+1 tokens.
 pub fn catch_up(ctx: &mut StepCtx, model: &str, window: usize,
                 slots: &SlotSeqs) -> Result<usize> {
+    validate_slots(slots)?;
     let w1 = window + 1;
-    let mut calls = 0;
+    let batch = ctx.batch;
+    let mut calls = 0usize;
     loop {
         let mut deficit = 0usize;
         {
@@ -85,51 +219,61 @@ pub fn catch_up(ctx: &mut StepCtx, model: &str, window: usize,
         if deficit == 0 {
             return Ok(calls);
         }
+        if calls >= 64 {
+            bail!("catch-up did not converge for {model} after {calls} \
+                   calls (remaining deficit {deficit})");
+        }
         // Build one batch chunk: each active slot advances by up to w+1 of
         // its own pending tokens; already-caught-up slots harmlessly
         // re-forward their base token (identical K/V rewrite).
-        let mut block = vec![0i32; ctx.batch * w1];
-        let mut advance = vec![0usize; ctx.batch];
-        let lens = lens_of(ctx.states, model, ctx.batch);
-        for (b, s) in slots.iter().enumerate() {
-            if let Some(c) = s {
-                let v = lens[b] as usize;
-                let n = (c.len() - 1 - v).min(w1);
-                for i in 0..w1 {
-                    block[b * w1 + i] = c[(v + i).min(c.len() - 1)];
+        fill_lens(ctx.states, model, batch, &mut ctx.scratch.lens)?;
+        {
+            let s = &mut *ctx.scratch;
+            s.block.clear();
+            s.block.resize(batch * w1, 0);
+            s.advance.clear();
+            s.advance.resize(batch, 0);
+            for (b, sq) in slots.iter().enumerate() {
+                if let Some(c) = sq {
+                    let v = s.lens[b] as usize;
+                    let n = (c.len() - 1 - v).min(w1);
+                    for i in 0..w1 {
+                        s.block[b * w1 + i] = c[(v + i).min(c.len() - 1)];
+                    }
+                    s.advance[b] = n;
                 }
-                advance[b] = n;
             }
         }
         let st = ctx.states.get_mut(model)?;
-        let _logits = ctx.exec.verify(
-            ctx.prof, model, ctx.batch, window, &block, &mut st.kv, &lens)?;
-        for (b, s) in slots.iter().enumerate() {
-            if s.is_some() && advance[b] > 0 {
+        let s = &mut *ctx.scratch;
+        ctx.exec.verify(ctx.prof, model, batch, window, &s.block,
+                        &mut st.kv, &s.lens, &mut s.catch_logits)?;
+        for (b, sq) in slots.iter().enumerate() {
+            if sq.is_some() && s.advance[b] > 0 {
                 st.mask.append_speculative(b, w1);
-                st.mask.promote(b, advance[b]);
+                st.mask.promote(b, s.advance[b]);
             }
         }
         calls += 1;
-        if calls > 64 {
-            bail!("catch-up did not converge for {model}");
-        }
     }
 }
 
 /// Acceptance decision for one candidate under the configured rule.
 /// `p_row` is the verifier's logits; `q_row` the proposer's (None => the
-/// proposer is trusted blindly — not used in practice).
+/// proposer is trusted blindly — not used in practice). Allocation-free:
+/// greedy compares argmax on raw logits; probabilistic streams the two
+/// single-token softmax probabilities.
 fn accept_one(rule: AcceptRule, rng: &mut Rng, cand: i32, p_row: &[f32],
               q_row: Option<&[f32]>) -> bool {
     match rule {
         AcceptRule::Greedy => argmax(p_row) as i32 == cand,
         AcceptRule::Probabilistic { .. } => {
-            let p = softmax(p_row);
-            let q = q_row.map(softmax);
-            let pq = match &q {
-                Some(q) => (p[cand as usize] / q[cand as usize].max(1e-9))
-                    .min(1.0),
+            let p = softmax_prob_at(p_row, cand as usize);
+            let pq = match q_row {
+                Some(q) => {
+                    let qc = softmax_prob_at(q, cand as usize);
+                    (p / qc.max(1e-9)).min(1.0)
+                }
                 None => 1.0,
             };
             (rng.f64() as f32) < pq
@@ -137,210 +281,241 @@ fn accept_one(rule: AcceptRule, rng: &mut Rng, cand: i32, p_row: &[f32],
     }
 }
 
-/// Bonus token at the cut position under the configured rule.
+/// Bonus token at the cut position under the configured rule. The
+/// probabilistic path materializes distributions into the two caller
+/// scratch buffers (reused across steps; no steady-state allocation).
 fn bonus_token(rule: AcceptRule, rng: &mut Rng, p_row: &[f32],
-               q_row: Option<&[f32]>, rejected: bool) -> i32 {
+               q_row: Option<&[f32]>, rejected: bool, probs: &mut Vec<f32>,
+               resid: &mut Vec<f32>) -> i32 {
     match rule {
         AcceptRule::Greedy => argmax(p_row) as i32,
         AcceptRule::Probabilistic { .. } => {
-            let p = softmax(p_row);
+            softmax_into(p_row, probs);
             if rejected {
                 if let Some(ql) = q_row {
                     // residual distribution norm(max(0, p - q))
-                    let q = softmax(ql);
-                    let resid: Vec<f32> = p.iter().zip(&q)
-                        .map(|(a, b)| (a - b).max(0.0))
-                        .collect();
-                    if resid.iter().sum::<f32>() > 1e-9 {
-                        return rng.categorical(&resid) as i32;
+                    softmax_into(ql, resid);
+                    let mut total = 0.0f32;
+                    for (r, &p) in resid.iter_mut().zip(probs.iter()) {
+                        *r = (p - *r).max(0.0);
+                        total += *r;
+                    }
+                    if total > 1e-9 {
+                        return rng.categorical(resid) as i32;
                     }
                 }
             }
-            rng.categorical(&p) as i32
+            rng.categorical(probs) as i32
         }
     }
 }
 
 /// Execute one full chain step. `slots[b] = Some(committed)` for active
-/// slots. Commits via the returned outcome; masks are synchronized here.
+/// slots. The result lands in `ctx.scratch.outcome` (reused buffers);
+/// masks are synchronized here.
 pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
-                     pad: i32) -> Result<StepOutcome> {
+                     pad: i32) -> Result<()> {
+    // the empty-committed-sequence invariant is enforced by catch_up
+    // (always the first call on every path) and by base_tokens_into
     if chain.models.len() == 1 {
         return run_tmo_step(ctx, chain.target(), slots, pad);
     }
     let w = chain.window;
     let w1 = w + 1;
     let v = ctx.vocab;
+    let batch = ctx.batch;
     let n_levels = chain.models.len();
 
     for m in &chain.models {
         catch_up(ctx, m, w, slots)?;
     }
-    let base = base_tokens(slots, pad);
+    base_tokens_into(slots, pad, &mut ctx.scratch.base)?;
 
     // --- Draft (level 1) -------------------------------------------------
-    let drafter = &chain.models[0];
-    let lens1 = lens_of(ctx.states, drafter, ctx.batch);
-    let (d_toks, d_logits) = {
+    let drafter: &str = &chain.models[0];
+    fill_lens(ctx.states, drafter, batch, &mut ctx.scratch.lens)?;
+    {
         let st = ctx.states.get_mut(drafter)?;
-        let out = ctx.exec.draft(ctx.prof, drafter, ctx.batch, w, &base,
-                                 &mut st.kv, &lens1)?;
-        for (b, s) in slots.iter().enumerate() {
-            if s.is_some() {
+        let s = &mut *ctx.scratch;
+        ctx.exec.draft(ctx.prof, drafter, batch, w, &s.base, &mut st.kv,
+                       &s.lens, &mut s.d_toks, &mut s.d_logits)?;
+        for (b, sq) in slots.iter().enumerate() {
+            if sq.is_some() {
                 // base + w-1 drafted K/V rows were written
                 st.mask.append_speculative(b, w);
             }
         }
-        out
-    };
-
-    // Per-slot block state threaded through the levels.
-    // block[b] = [base, candidates...] (w1 long, padded); cand_len[b] =
-    // number of real candidates; q_rows[b][i] = proposer logits for
-    // candidate i; written[b][model] tracked for mask sync.
-    let mut block: Vec<Vec<i32>> = Vec::with_capacity(ctx.batch);
-    let mut cand_len = vec![0usize; ctx.batch];
-    let mut q_rows: Vec<Vec<Vec<f32>>> = vec![Vec::new(); ctx.batch];
-    for (b, s) in slots.iter().enumerate() {
-        let mut row = vec![pad; w1];
-        row[0] = base[b];
-        if s.is_some() {
-            for i in 0..w {
-                row[1 + i] = d_toks[b * w + i];
-            }
-            cand_len[b] = w;
-            q_rows[b] = (0..w)
-                .map(|i| d_logits[(b * w + i) * v..(b * w + i + 1) * v]
-                     .to_vec())
-                .collect();
-        }
-        block.push(row);
     }
-    // tokens each model has physically written past base (for mask sync):
-    // drafter wrote its first w-1 drafts' K/V
-    let mut written: Vec<(String, Vec<Vec<i32>>)> = Vec::new();
-    written.push((drafter.clone(),
-                  (0..ctx.batch).map(|b| {
-                      if slots[b].is_some() {
-                          block[b][1..w.max(1)].to_vec() // w-1 tokens
-                      } else {
-                          Vec::new()
-                      }
-                  }).collect()));
 
-    let mut outcome = StepOutcome {
-        appended: vec![Vec::new(); ctx.batch],
-        accepted_per_level: Vec::new(),
-    };
+    // Block + bookkeeping init. The block is the per-slot candidate row
+    // [base, c_1..c_k, pad...] threaded through the levels in place; the
+    // proposer q-row for candidate i is located purely by index: the
+    // draft logits row i at level 1, the previous verify output row i
+    // afterwards (survivors are always a positional prefix, so the
+    // mapping is the identity — no copies needed).
+    {
+        let s = &mut *ctx.scratch;
+        s.block.clear();
+        s.block.resize(batch * w1, pad);
+        s.cand_len.clear();
+        s.cand_len.resize(batch, 0);
+        s.written.clear();
+        s.written.resize(n_levels * batch * w, pad);
+        s.written_len.clear();
+        s.written_len.resize(n_levels * batch, 0);
+        for (b, sq) in slots.iter().enumerate() {
+            s.block[b * w1] = s.base[b];
+            if sq.is_some() {
+                s.block[b * w1 + 1..(b + 1) * w1]
+                    .copy_from_slice(&s.d_toks[b * w..(b + 1) * w]);
+                s.cand_len[b] = w;
+                // level-0 written tokens: the drafter physically wrote
+                // base + its first w-1 drafts
+                let wl = w.saturating_sub(1);
+                s.written[b * w..b * w + wl]
+                    .copy_from_slice(&s.d_toks[b * w..b * w + wl]);
+                s.written_len[b] = wl;
+            }
+        }
+        s.outcome.reset(batch, n_levels - 1, w1);
+    }
 
     // --- Verification levels 2..N ---------------------------------------
     for j in 1..n_levels {
-        let verifier = chain.models[j].clone();
-        let proposer = chain.models[j - 1].clone();
+        let verifier: &str = &chain.models[j];
+        let proposer: &str = &chain.models[j - 1];
         let is_final = j == n_levels - 1;
-        let lens = lens_of(ctx.states, &verifier, ctx.batch);
-        let flat: Vec<i32> = block.iter().flatten().copied().collect();
-        let p_flat = {
-            let st = ctx.states.get_mut(&verifier)?;
-            let out = ctx.exec.verify(ctx.prof, &verifier, ctx.batch, w,
-                                      &flat, &mut st.kv, &lens)?;
-            for (b, s) in slots.iter().enumerate() {
-                if s.is_some() {
+        fill_lens(ctx.states, verifier, batch, &mut ctx.scratch.lens)?;
+        // rotate: last level's verify output becomes this level's q-rows
+        std::mem::swap(&mut ctx.scratch.p_prev, &mut ctx.scratch.p_cur);
+        {
+            let st = ctx.states.get_mut(verifier)?;
+            let s = &mut *ctx.scratch;
+            ctx.exec.verify(ctx.prof, verifier, batch, w, &s.block,
+                            &mut st.kv, &s.lens, &mut s.p_cur)?;
+            for (b, sq) in slots.iter().enumerate() {
+                if sq.is_some() {
                     st.mask.append_speculative(b, w1);
                 }
             }
-            out
-        };
-        written.push((verifier.clone(),
-                      (0..ctx.batch).map(|b| {
-                          if slots[b].is_some() {
-                              block[b][1..].to_vec()
-                          } else {
-                              Vec::new()
-                          }
-                      }).collect()));
+            // snapshot what this verifier physically wrote past base (for
+            // the rollback prefix-agreement scan)
+            for (b, sq) in slots.iter().enumerate() {
+                if sq.is_some() {
+                    let off = (j * batch + b) * w;
+                    s.written[off..off + w].copy_from_slice(
+                        &s.block[b * w1 + 1..(b + 1) * w1]);
+                    s.written_len[j * batch + b] = w;
+                }
+            }
+        }
 
-        let mut accepted_row = vec![0usize; ctx.batch];
         // similarity observations are aggregated across the batch and
         // folded ONCE per level per step: per-slot updates would give the
         // EMA batch-many twitchy samples per step and destabilize the
         // scheduler at large batch sizes
-        let mut agg_dtvs: Vec<f64> = Vec::new();
+        let s = &mut *ctx.scratch;
+        s.agg_dtvs.clear();
         let mut agg_accepted = 0usize;
         let mut agg_cands = 0usize;
-        for b in 0..ctx.batch {
-            if slots[b].is_none() {
+        for (b, sq) in slots.iter().enumerate() {
+            if sq.is_none() {
                 continue;
             }
-            let p_row = |i: usize| &p_flat[(b * w1 + i) * v
-                                           ..(b * w1 + i + 1) * v];
+            let cl = s.cand_len[b];
             // acceptance scan over the real candidates
-            let mut k = 0;
-            while k < cand_len[b] {
-                let cand = block[b][1 + k];
-                let q = q_rows[b].get(k).map(|r| r.as_slice());
-                if accept_one(ctx.rule, ctx.rng, cand, p_row(k), q) {
+            let mut k = 0usize;
+            while k < cl {
+                let cand = s.block[b * w1 + 1 + k];
+                let p = &s.p_cur[(b * w1 + k) * v..(b * w1 + k + 1) * v];
+                let q = if j == 1 {
+                    &s.d_logits[(b * w + k) * v..(b * w + k + 1) * v]
+                } else {
+                    &s.p_prev[(b * w1 + k) * v..(b * w1 + k + 1) * v]
+                };
+                if accept_one(ctx.rule, ctx.rng, cand, p, Some(q)) {
                     k += 1;
                 } else {
                     break;
                 }
             }
-            accepted_row[b] = k;
             // similarity observations (Eq. 5-6) on compared positions
-            agg_dtvs.extend((0..cand_len[b])
-                .filter_map(|i| q_rows[b].get(i)
-                            .map(|q| dtv_logits(p_row(i), q))));
+            for i in 0..cl {
+                let p = &s.p_cur[(b * w1 + i) * v..(b * w1 + i + 1) * v];
+                let q = if j == 1 {
+                    &s.d_logits[(b * w + i) * v..(b * w + i + 1) * v]
+                } else {
+                    &s.p_prev[(b * w1 + i) * v..(b * w1 + i + 1) * v]
+                };
+                s.agg_dtvs.push(dtv_logits(p, q));
+            }
             agg_accepted += k;
-            agg_cands += cand_len[b];
+            agg_cands += cl;
 
-            let rejected = k < cand_len[b];
-            let q_at_cut = q_rows[b].get(k).map(|r| r.as_slice());
-            let bonus = bonus_token(ctx.rule, ctx.rng, p_row(k), q_at_cut,
-                                    rejected);
+            let rejected = k < cl;
+            let bonus = {
+                let p = &s.p_cur[(b * w1 + k) * v..(b * w1 + k + 1) * v];
+                let q = if k < cl {
+                    Some(if j == 1 {
+                        &s.d_logits[(b * w + k) * v..(b * w + k + 1) * v]
+                    } else {
+                        &s.p_prev[(b * w1 + k) * v..(b * w1 + k + 1) * v]
+                    })
+                } else {
+                    None
+                };
+                bonus_token(ctx.rule, ctx.rng, p, q, rejected,
+                            &mut s.probs, &mut s.resid)
+            };
+            s.outcome.accepted_flat[(j - 1) * batch + b] = k;
             if is_final {
                 // Commit: accepted prefix + the target's bonus token.
-                let mut out: Vec<i32> = block[b][1..1 + k].to_vec();
+                let out = &mut s.outcome.appended[b];
+                out.clear();
+                out.extend_from_slice(
+                    &s.block[b * w1 + 1..b * w1 + 1 + k]);
                 out.push(bonus);
-                outcome.appended[b] = out;
             } else {
-                // Survivors for the next level: accepted prefix (+ bonus
-                // when there is room — a full acceptance already fills w).
-                let mut nc: Vec<i32> = block[b][1..1 + k].to_vec();
-                let mut nq: Vec<Vec<f32>> = (0..k).map(|i| p_row(i).to_vec())
-                    .collect();
-                if nc.len() < w {
-                    nc.push(bonus);
-                    nq.push(p_row(k).to_vec());
+                // Survivors for the next level: the accepted prefix is
+                // already in place (+ bonus when there is room — a full
+                // acceptance already fills w).
+                let mut nc = k;
+                if nc < w {
+                    s.block[b * w1 + 1 + nc] = bonus;
+                    nc += 1;
                 }
-                cand_len[b] = nc.len();
-                q_rows[b] = nq;
-                let mut row = vec![pad; w1];
-                row[0] = base[b];
-                row[1..1 + nc.len()].copy_from_slice(&nc);
-                block[b] = row;
+                for i in nc..w {
+                    s.block[b * w1 + 1 + i] = pad;
+                }
+                s.cand_len[b] = nc;
+                // next level's q-rows are p_cur rows 0..nc by index —
+                // nothing to copy
             }
         }
-        ctx.sim.observe_dtv(&proposer, &verifier, &agg_dtvs);
-        ctx.sim.observe_acceptance(&proposer, &verifier, agg_accepted,
+        ctx.sim.observe_dtv(proposer, verifier, &s.agg_dtvs);
+        ctx.sim.observe_acceptance(proposer, verifier, agg_accepted,
                                    agg_cands);
-        outcome.accepted_per_level.push(accepted_row);
     }
 
     // --- Rollback / mask synchronization (RollbackProcessor) ------------
-    for (model, wt) in &written {
+    for (li, model) in chain.models.iter().enumerate() {
         let st = ctx.states.get_mut(model)?;
-        for (b, s) in slots.iter().enumerate() {
-            if s.is_none() {
+        for (b, sq) in slots.iter().enumerate() {
+            if sq.is_none() {
                 continue;
             }
-            let committed = &outcome.appended[b];
+            let committed = &ctx.scratch.outcome.appended[b];
             let m = committed.len();
+            let off = (li * batch + b) * w;
+            let wl = ctx.scratch.written_len[li * batch + b];
             // prefix agreement between what this model physically wrote
             // and what was finally committed, capped at m-1 (the last
             // committed token is re-forwarded next step by convention)
+            let cap = wl.min(m.saturating_sub(1));
             let mut match_len = 0;
-            while match_len < wt[b].len().min(m.saturating_sub(1))
-                && wt[b][match_len] == committed[match_len] {
+            while match_len < cap
+                && ctx.scratch.written[off + match_len]
+                    == committed[match_len] {
                 match_len += 1;
             }
             // base token (+ agreed prefix) become valid; the rest of the
@@ -349,12 +524,50 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
         }
     }
 
-    Ok(outcome)
+    Ok(())
+}
+
+/// Target-only autoregressive step (TMO baseline; also the [M_t] chain the
+/// adaptive scheduler can fall back to).
+fn run_tmo_step(ctx: &mut StepCtx, target: &str, slots: &SlotSeqs, pad: i32)
+                -> Result<()> {
+    // TMO still needs catch-up (right after admission prefill the cache is
+    // already at C-1, so this is a no-op; after a truncating commit or a
+    // chain switch it may not be).
+    let w0 = ctx.exec.manifest().windows[0];
+    catch_up(ctx, target, w0, slots)?;
+    base_tokens_into(slots, pad, &mut ctx.scratch.base)?;
+    fill_lens(ctx.states, target, ctx.batch, &mut ctx.scratch.lens)?;
+    let v = ctx.vocab;
+    let st = ctx.states.get_mut(target)?;
+    let s = &mut *ctx.scratch;
+    ctx.exec.decode(ctx.prof, target, ctx.batch, &s.base, &mut st.kv,
+                    &s.lens, &mut s.p_cur)?;
+    s.outcome.reset(ctx.batch, 0, 1);
+    for (b, sq) in slots.iter().enumerate() {
+        if sq.is_none() {
+            continue;
+        }
+        let row = &s.p_cur[b * v..(b + 1) * v];
+        let tok = match ctx.rule {
+            AcceptRule::Greedy => argmax(row) as i32,
+            AcceptRule::Probabilistic { .. } => {
+                softmax_into(row, &mut s.probs);
+                ctx.rng.categorical(&s.probs) as i32
+            }
+        };
+        let out = &mut s.outcome.appended[b];
+        out.clear();
+        out.push(tok);
+        st.mask.append_valid(b, 1);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::softmax;
 
     fn logits_peaked(v: usize, at: usize, height: f32) -> Vec<f32> {
         let mut l = vec![0.0f32; v];
@@ -374,10 +587,11 @@ mod tests {
     fn greedy_bonus_is_argmax() {
         let mut rng = Rng::new(1);
         let p = logits_peaked(16, 9, 3.0);
-        assert_eq!(bonus_token(AcceptRule::Greedy, &mut rng, &p, None, true),
-                   9);
+        let (mut probs, mut resid) = (Vec::new(), Vec::new());
+        assert_eq!(bonus_token(AcceptRule::Greedy, &mut rng, &p, None, true,
+                               &mut probs, &mut resid), 9);
         assert_eq!(bonus_token(AcceptRule::Greedy, &mut rng, &p, None,
-                               false), 9);
+                               false, &mut probs, &mut resid), 9);
     }
 
     #[test]
@@ -417,8 +631,10 @@ mod tests {
         let rule = AcceptRule::Probabilistic { seed: 4 };
         let q = logits_peaked(8, 0, 4.0);
         let p = logits_peaked(8, 1, 4.0);
+        let (mut probs, mut resid) = (Vec::new(), Vec::new());
         for _ in 0..500 {
-            let b = bonus_token(rule, &mut rng, &p, Some(&q), true);
+            let b = bonus_token(rule, &mut rng, &p, Some(&q), true,
+                                &mut probs, &mut resid);
             assert_ne!(b, 0, "bonus sampled from residual hit q's peak");
         }
     }
@@ -428,41 +644,19 @@ mod tests {
         let seq0 = [1i32, 5, 9];
         let seq1 = [1i32, 7];
         let slots: SlotSeqs = vec![Some(&seq0), None, Some(&seq1)];
-        assert_eq!(base_tokens(&slots, 0), vec![9, 0, 7]);
+        let mut out = Vec::new();
+        base_tokens_into(&slots, 0, &mut out).unwrap();
+        assert_eq!(out, vec![9, 0, 7]);
     }
-}
 
-/// Target-only autoregressive step (TMO baseline; also the [M_t] chain the
-/// adaptive scheduler can fall back to).
-fn run_tmo_step(ctx: &mut StepCtx, target: &str, slots: &SlotSeqs, pad: i32)
-                -> Result<StepOutcome> {
-    // TMO still needs catch-up (right after admission prefill the cache is
-    // already at C-1, so this is a no-op; after a truncating commit or a
-    // chain switch it may not be).
-    let w0 = ctx.exec.pool.manifest.windows[0];
-    catch_up(ctx, target, w0, slots)?;
-    let base = base_tokens(slots, pad);
-    let lens = lens_of(ctx.states, target, ctx.batch);
-    let st = ctx.states.get_mut(target)?;
-    let logits = ctx.exec.decode(ctx.prof, target, ctx.batch, &base,
-                                 &mut st.kv, &lens)?;
-    let v = ctx.vocab;
-    let mut outcome = StepOutcome {
-        appended: vec![Vec::new(); ctx.batch],
-        accepted_per_level: Vec::new(),
-    };
-    for (b, s) in slots.iter().enumerate() {
-        if s.is_none() {
-            continue;
-        }
-        let row = &logits[b * v..(b + 1) * v];
-        let tok = match ctx.rule {
-            AcceptRule::Greedy => argmax(row) as i32,
-            AcceptRule::Probabilistic { .. } =>
-                ctx.rng.categorical(&softmax(row)) as i32,
-        };
-        outcome.appended[b] = vec![tok];
-        st.mask.append_valid(b, 1);
+    #[test]
+    fn base_tokens_errors_on_empty_committed_sequence() {
+        let empty: [i32; 0] = [];
+        let slots: SlotSeqs = vec![Some(&empty)];
+        let mut out = Vec::new();
+        let err = base_tokens_into(&slots, 0, &mut out).unwrap_err();
+        assert!(err.to_string().contains("empty committed"),
+                "unexpected error: {err}");
+        assert!(validate_slots(&slots).is_err());
     }
-    Ok(outcome)
 }

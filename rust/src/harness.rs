@@ -7,9 +7,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::{EngineConfig, Mode};
-use crate::coordinator::{ChainRouter, Request};
+use crate::coordinator::{Backend, ChainRouter, Request, SimBackend,
+                         SimSpec};
 use crate::metrics::{self, Summary};
 use crate::model_pool::ModelPool;
+use crate::runtime::DatasetSpec;
 use crate::workload::DatasetGen;
 
 /// `SPECROUTER_QUICK=1` shrinks bench workloads (CI smoke runs).
@@ -24,15 +26,36 @@ pub fn bench_pool() -> Result<Arc<ModelPool>> {
     Ok(Arc::new(ModelPool::open(std::path::Path::new(&dir))?))
 }
 
-/// Sample a fixed prompt set from one dataset.
-pub fn prompt_set(pool: &Arc<ModelPool>, dataset: &str, n: usize, seed: u64,
-                  max_new_cap: usize) -> Vec<(Vec<i32>, usize)> {
-    let spec = pool.manifest.datasets[dataset].clone();
+/// The deterministic in-process backend used by artifact-free benches and
+/// tests (DESIGN.md §8).
+pub fn sim_backend() -> Arc<SimBackend> {
+    Arc::new(SimBackend::new(SimSpec::small_pool()))
+}
+
+/// Shared body of the prompt-set samplers: one place owns the sampling
+/// and max_new-cap rule so pool- and sim-driven benches can never drift.
+fn sample_prompt_set(spec: DatasetSpec, n: usize, seed: u64,
+                     max_new_cap: usize) -> Vec<(Vec<i32>, usize)> {
     let mut gen = DatasetGen::new(spec, seed);
     (0..n).map(|_| {
         let (p, g) = gen.sample();
         (p, g.min(max_new_cap))
     }).collect()
+}
+
+/// Sample a fixed prompt set from one dataset of any backend's manifest.
+pub fn prompt_set_from(backend: &Arc<dyn Backend>, dataset: &str, n: usize,
+                       seed: u64, max_new_cap: usize)
+                       -> Vec<(Vec<i32>, usize)> {
+    sample_prompt_set(backend.manifest().datasets[dataset].clone(), n,
+                      seed, max_new_cap)
+}
+
+/// Sample a fixed prompt set from one dataset.
+pub fn prompt_set(pool: &Arc<ModelPool>, dataset: &str, n: usize, seed: u64,
+                  max_new_cap: usize) -> Vec<(Vec<i32>, usize)> {
+    sample_prompt_set(pool.manifest.datasets[dataset].clone(), n, seed,
+                      max_new_cap)
 }
 
 /// Mixed prompt set: round-robin across all four datasets.
@@ -90,7 +113,8 @@ pub fn run_offline(pool: &Arc<ModelPool>, mode: Mode, batch: usize,
 pub fn run_offline_steady(pool: &Arc<ModelPool>, mode: Mode, batch: usize,
                           prompts: &[(String, Vec<i32>, usize)])
                           -> Result<(Summary, ChainRouter, SteadyStats)> {
-    run_offline_inner(pool, mode, batch, prompts, true)
+    run_offline_inner(RouterSource::Pool(pool.clone()), mode, batch,
+                      prompts, true)
 }
 
 /// `run_offline` with explicit warm-up control.
@@ -98,22 +122,55 @@ pub fn run_offline_opts(pool: &Arc<ModelPool>, mode: Mode, batch: usize,
                         prompts: &[(String, Vec<i32>, usize)],
                         warmup: bool)
                         -> Result<(Summary, ChainRouter)> {
-    let (s, r, _) = run_offline_inner(pool, mode, batch, prompts, warmup)?;
+    let (s, r, _) = run_offline_inner(RouterSource::Pool(pool.clone()),
+                                      mode, batch, prompts, warmup)?;
     Ok((s, r))
 }
 
-fn run_offline_inner(pool: &Arc<ModelPool>, mode: Mode, batch: usize,
+/// `run_offline_steady` on an arbitrary backend (sim benches / tests).
+pub fn run_offline_backend(backend: Arc<dyn Backend>, mode: Mode,
+                           batch: usize,
+                           prompts: &[(String, Vec<i32>, usize)])
+                           -> Result<(Summary, ChainRouter, SteadyStats)> {
+    run_offline_inner(RouterSource::Backend(backend), mode, batch, prompts,
+                      true)
+}
+
+/// Where `run_offline_inner` gets its router from.
+enum RouterSource {
+    Pool(Arc<ModelPool>),
+    Backend(Arc<dyn Backend>),
+}
+
+impl RouterSource {
+    fn build(&self, cfg: EngineConfig) -> Result<ChainRouter> {
+        match self {
+            RouterSource::Pool(p) => ChainRouter::with_pool(cfg, p.clone()),
+            RouterSource::Backend(b) =>
+                ChainRouter::with_backend(cfg, b.clone()),
+        }
+    }
+
+    fn root(&self) -> std::path::PathBuf {
+        match self {
+            RouterSource::Pool(p) => p.manifest.root.clone(),
+            RouterSource::Backend(b) => b.manifest().root.clone(),
+        }
+    }
+}
+
+fn run_offline_inner(source: RouterSource, mode: Mode, batch: usize,
                      prompts: &[(String, Vec<i32>, usize)],
                      warmup: bool)
                      -> Result<(Summary, ChainRouter, SteadyStats)> {
-    let mut cfg = EngineConfig::new(pool.manifest.root.clone());
+    let mut cfg = EngineConfig::new(source.root());
     cfg.batch = batch;
     cfg.mode = mode;
     // benches measure steady-state serving: keep a trickle of exploration
     // (the paper's adaptivity) but let the warm-up phase do the heavy
     // discovery so measurements aren't dominated by ε-jitter
     cfg.explore_eps = 0.03;
-    let mut router = ChainRouter::with_pool(cfg, pool.clone())?;
+    let mut router = source.build(cfg)?;
     let submit_all = |router: &mut ChainRouter| {
         for (dataset, prompt, max_new) in prompts {
             router.submit(Request {

@@ -160,7 +160,7 @@ fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
     let seed: u64 = flags.get("seed")
         .map(|s| s.parse()).transpose()?.unwrap_or(0);
     let mut router = ChainRouter::new(cfg)?;
-    let spec = router.pool.manifest.datasets.get(&dataset)
+    let spec = router.manifest.datasets.get(&dataset)
         .with_context(|| format!("unknown dataset {dataset}"))?
         .clone();
     let mut gen = DatasetGen::new(spec, seed);
@@ -195,7 +195,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let slo = cfg.slo_ms;
     let label = cfg.mode.label();
     let mut router = ChainRouter::new(cfg)?;
-    let spec = router.pool.manifest.datasets.get(&dataset)
+    let spec = router.manifest.datasets.get(&dataset)
         .with_context(|| format!("unknown dataset {dataset}"))?
         .clone();
     let mut gen = DatasetGen::new(spec, seed);
@@ -269,7 +269,7 @@ fn cmd_chains(flags: &HashMap<String, String>) -> Result<()> {
     let warmup: usize = flags.get("warmup").map(|s| s.parse()).transpose()?
         .unwrap_or(8);
     let mut router = ChainRouter::new(cfg)?;
-    let spec = router.pool.manifest.datasets.get(&dataset)
+    let spec = router.manifest.datasets.get(&dataset)
         .with_context(|| format!("unknown dataset {dataset}"))?
         .clone();
     let mut gen = DatasetGen::new(spec, 0);

@@ -47,10 +47,28 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n), via Lemire's nearly-divisionless
+    /// rejection method (Lemire 2019, "Fast Random Integer Generation in
+    /// an Interval"). The previous `next_u64() % n` had modulo bias: for
+    /// n not a power of two the low residues are over-represented by up
+    /// to 2^64 mod n extra preimages. Here the widening multiply maps the
+    /// draw into [0, n) and the rare low-fragment draws are rejected, so
+    /// every value is exactly equally likely.
     pub fn below(&mut self, n: usize) -> usize {
         assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        let n = n as u64;
+        let mut m = (self.next_u64() as u128) * (n as u128);
+        let mut low = m as u64;
+        if low < n {
+            // threshold = 2^64 mod n; draws whose low fragment falls
+            // under it belong to the truncated final bucket
+            let t = n.wrapping_neg() % n;
+            while low < t {
+                m = (self.next_u64() as u128) * (n as u128);
+                low = m as u64;
+            }
+        }
+        (m >> 64) as usize
     }
 
     /// Uniform integer in [lo, hi] inclusive.
@@ -89,15 +107,36 @@ impl Rng {
     }
 }
 
-/// Softmax over logits, in place, returning the probability vector.
+/// Softmax over logits, returning a fresh probability vector.
 pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(logits.len());
+    softmax_into(logits, &mut out);
+    out
+}
+
+/// Softmax into a reused buffer: allocation-free once `out` has warmed to
+/// `logits.len()` capacity (the hot-path variant, DESIGN.md §8).
+pub fn softmax_into(logits: &[f32], out: &mut Vec<f32>) {
     let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut out: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    out.clear();
+    out.extend(logits.iter().map(|&x| (x - m).exp()));
     let s: f32 = out.iter().sum();
-    for x in &mut out {
+    for x in out.iter_mut() {
         *x /= s;
     }
-    out
+}
+
+/// The softmax probability of a single index, computed by streaming over
+/// the logits without materializing the distribution (two passes, zero
+/// allocation). Identical arithmetic to `softmax(logits)[idx]`: same max
+/// subtraction and same left-to-right f32 partition sum.
+pub fn softmax_prob_at(logits: &[f32], idx: usize) -> f32 {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut s = 0.0f32;
+    for &x in logits {
+        s += (x - m).exp();
+    }
+    (logits[idx] - m).exp() / s
 }
 
 /// Index of the maximum element (greedy sampling).
@@ -162,6 +201,55 @@ mod tests {
         assert!((p[0] - 0.5).abs() < 1e-6);
         let p = softmax(&[1000.0, 0.0]); // overflow-safe
         assert!(p[0] > 0.999 && p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn below_is_uniform_without_modulo_bias() {
+        // chi-square-style check on a non-power-of-two n: every residue
+        // within 3% of uniform (the old `% n` path skews low residues)
+        let mut r = Rng::new(99);
+        let n = 6usize;
+        let draws = 120_000usize;
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            counts[r.below(n)] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for (v, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.03, "value {v}: {c} vs {expect} ({dev:.3})");
+        }
+    }
+
+    #[test]
+    fn below_large_n_stays_in_range_and_varies() {
+        // n just under 2^63 exercises the rejection branch heavily
+        let mut r = Rng::new(5);
+        let n = (1usize << 62) + 12345;
+        let mut seen_high = false;
+        for _ in 0..1000 {
+            let x = r.below(n);
+            assert!(x < n);
+            seen_high |= x > n / 2;
+        }
+        assert!(seen_high);
+    }
+
+    #[test]
+    fn softmax_into_and_prob_at_match_softmax() {
+        let logits = [0.3f32, -1.0, 2.5, 0.0, 1.1];
+        let full = softmax(&logits);
+        let mut buf = Vec::new();
+        softmax_into(&logits, &mut buf);
+        assert_eq!(full, buf);
+        for (i, &p) in full.iter().enumerate() {
+            assert_eq!(p, softmax_prob_at(&logits, i),
+                       "streaming prob diverged at {i}");
+        }
+        // reuse must not leak previous contents
+        softmax_into(&logits[..3], &mut buf);
+        assert_eq!(buf.len(), 3);
+        assert!((buf.iter().sum::<f32>() - 1.0).abs() < 1e-6);
     }
 
     #[test]

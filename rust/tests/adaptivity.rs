@@ -11,7 +11,6 @@ use specrouter::coordinator::Request;
 
 #[test]
 fn scheduler_warms_up_and_converges() {
-    require_artifacts!();
     let dataset = "humaneval"; // most deterministic => speculation-friendly
     let mut gen = common::dataset_gen(dataset, 4);
     let mut router = common::router(1, Mode::Adaptive);

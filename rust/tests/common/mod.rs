@@ -1,27 +1,35 @@
 #![allow(dead_code)] // each test binary uses a subset of these fixtures
-//! Shared fixtures for the integration suite: one PJRT pool for the whole
-//! test binary (XLA compilation is the dominant cost on this box), plus
-//! small helpers for configs and prompts.
+//! Shared fixtures for the integration suite.
+//!
+//! Backend selection: when `make artifacts` has produced the compiled
+//! model pool, routers run on the real XLA executor; otherwise they fall
+//! back to the deterministic in-process [`SimBackend`] (DESIGN.md §8),
+//! whose synthesized manifest mirrors the miniature pool exactly (same
+//! model names, vocab/seq/prefill, windows, datasets) — so the engine
+//! e2e, adaptivity and greedy-parity suites run either way instead of
+//! self-skipping on a bare checkout / CI box.
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
 use specrouter::config::{EngineConfig, Mode};
-use specrouter::coordinator::ChainRouter;
+use specrouter::coordinator::{ChainRouter, SimBackend};
 use specrouter::model_pool::ModelPool;
+use specrouter::runtime::Manifest;
 use specrouter::workload::DatasetGen;
 
 pub fn art_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// True when `make artifacts` has produced the model pool. Integration
-/// tests that need real models skip (with a note) when it is absent so
-/// the suite stays runnable on a bare checkout / CI box.
+/// True when `make artifacts` has produced the model pool. Tests that
+/// need the *real* XLA path (TCP server, compile-time reports) skip with
+/// a note when it is absent; the engine-level suites run on the sim
+/// backend instead.
 pub fn artifacts_available() -> bool {
     art_dir().join("manifest.json").exists()
 }
 
-/// Early-return skip used by artifact-dependent tests.
+/// Early-return skip used by tests that strictly need compiled artifacts.
 #[macro_export]
 macro_rules! require_artifacts {
     () => {
@@ -51,6 +59,23 @@ pub fn shared_pool() -> Arc<ModelPool> {
     }).0.clone()
 }
 
+/// One sim backend per test binary (it is stateless and cheap, but
+/// sharing keeps manifests pointer-identical). Construction goes through
+/// the harness helper so tests and benches use the same fixture.
+pub fn sim_backend() -> Arc<SimBackend> {
+    static SIM: OnceLock<Arc<SimBackend>> = OnceLock::new();
+    SIM.get_or_init(specrouter::harness::sim_backend).clone()
+}
+
+/// The manifest of whichever backend this run uses.
+pub fn shared_manifest() -> Arc<Manifest> {
+    if artifacts_available() {
+        shared_pool().manifest.clone()
+    } else {
+        specrouter::coordinator::Backend::manifest(&*sim_backend()).clone()
+    }
+}
+
 pub fn cfg(batch: usize, mode: Mode) -> EngineConfig {
     let mut c = EngineConfig::new(art_dir());
     c.batch = batch;
@@ -60,14 +85,25 @@ pub fn cfg(batch: usize, mode: Mode) -> EngineConfig {
     c
 }
 
+/// Router over the available backend (XLA pool when artifacts exist, sim
+/// otherwise).
+pub fn router_with(cfg: EngineConfig) -> ChainRouter {
+    if artifacts_available() {
+        ChainRouter::with_pool(cfg, shared_pool())
+            .expect("router construction (pool)")
+    } else {
+        ChainRouter::with_backend(cfg, sim_backend())
+            .expect("router construction (sim)")
+    }
+}
+
 pub fn router(batch: usize, mode: Mode) -> ChainRouter {
-    ChainRouter::with_pool(cfg(batch, mode), shared_pool())
-        .expect("router construction")
+    router_with(cfg(batch, mode))
 }
 
 pub fn dataset_gen(name: &str, seed: u64) -> DatasetGen {
-    let pool = shared_pool();
-    let spec = pool.manifest.datasets.get(name)
+    let manifest = shared_manifest();
+    let spec = manifest.datasets.get(name)
         .unwrap_or_else(|| panic!("dataset {name} missing"))
         .clone();
     DatasetGen::new(spec, seed)

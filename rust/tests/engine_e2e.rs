@@ -13,7 +13,6 @@ use specrouter::workload::{open_loop_trace, ArrivalSpec};
 
 #[test]
 fn continuous_batching_completes_all_requests() {
-    require_artifacts!();
     // 7 requests through 4 slots: forces at least one refill wave
     let dataset = "humaneval";
     let mut gen = common::dataset_gen(dataset, 5);
@@ -52,7 +51,6 @@ fn continuous_batching_completes_all_requests() {
 
 #[test]
 fn poisson_trace_metrics_are_sane() {
-    require_artifacts!();
     let dataset = "gsm8k";
     let mut gen = common::dataset_gen(dataset, 6);
     let trace = open_loop_trace(
@@ -84,7 +82,6 @@ fn poisson_trace_metrics_are_sane() {
 
 #[test]
 fn probabilistic_sampling_is_seeded_and_terminates() {
-    require_artifacts!();
     let dataset = "mtbench";
     let mut gen = common::dataset_gen(dataset, 9);
     let (prompt, _) = gen.sample();
@@ -93,8 +90,7 @@ fn probabilistic_sampling_is_seeded_and_terminates() {
             1, Mode::Fixed { chain: vec!["m0".into(), "m2".into()],
                              window: 4 });
         cfg.rule = AcceptRule::Probabilistic { seed };
-        let mut router = specrouter::coordinator::ChainRouter::with_pool(
-            cfg, common::shared_pool()).unwrap();
+        let mut router = common::router_with(cfg);
         router.generate(dataset, &prompt, 12).unwrap()
     };
     let a = run(1234);
@@ -105,9 +101,8 @@ fn probabilistic_sampling_is_seeded_and_terminates() {
 
 #[test]
 fn rejects_oversized_prompts_gracefully() {
-    require_artifacts!();
     let mut router = common::router(1, Mode::Tmo);
-    let too_long = vec![1i32; router.pool.manifest.prefill + 1];
+    let too_long = vec![1i32; router.manifest.prefill + 1];
     let id = router.submit(Request {
         id: 0,
         dataset: "gsm8k".into(),
@@ -124,16 +119,15 @@ fn rejects_oversized_prompts_gracefully() {
 
 #[test]
 fn physical_truncation_counters_advance_under_speculation() {
-    require_artifacts!();
     // speculation with imperfect acceptance leaves stale entries; the
     // periodic fix_caches pass must reclaim some (paper Eq. 9 path)
     let dataset = "mgsm";
     let mut gen = common::dataset_gen(dataset, 2);
     let mut router = common::router(
         1, Mode::Fixed { chain: vec!["m0".into(), "m2".into()], window: 8 });
-    for _ in 0..3 {
+    for _ in 0..5 {
         let (prompt, _) = gen.sample();
-        router.generate(dataset, &prompt, 24).unwrap();
+        router.generate(dataset, &prompt, 32).unwrap();
     }
     let m0 = router.states.get("m0").unwrap();
     let m2 = router.states.get("m2").unwrap();
@@ -141,5 +135,5 @@ fn physical_truncation_counters_advance_under_speculation() {
     assert!(m0.mask.logical_rollbacks + m2.mask.logical_rollbacks > 0
             || m0.mask.entries_invalidated + m2.mask.entries_invalidated > 0
             || router.states.physical_truncations > 0,
-            "no rollback activity recorded across 72 speculative tokens");
+            "no rollback activity recorded across 160 speculative tokens");
 }

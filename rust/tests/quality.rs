@@ -32,7 +32,6 @@ fn check_mode_matches_tmo(mode: Mode, dataset: &str, seed: u64, n: usize,
 
 #[test]
 fn ssd_two_level_matches_tmo_greedy() {
-    require_artifacts!();
     check_mode_matches_tmo(
         Mode::Fixed { chain: vec!["m0".into(), "m2".into()], window: 4 },
         "gsm8k", 11, 3, 16);
@@ -40,7 +39,6 @@ fn ssd_two_level_matches_tmo_greedy() {
 
 #[test]
 fn ssd_mid_draft_matches_tmo_greedy() {
-    require_artifacts!();
     check_mode_matches_tmo(
         Mode::Fixed { chain: vec!["m1".into(), "m2".into()], window: 8 },
         "humaneval", 13, 3, 16);
@@ -48,7 +46,6 @@ fn ssd_mid_draft_matches_tmo_greedy() {
 
 #[test]
 fn three_level_matches_tmo_greedy() {
-    require_artifacts!();
     check_mode_matches_tmo(
         Mode::Fixed { chain: vec!["m0".into(), "m1".into(), "m2".into()],
                       window: 4 },
@@ -57,7 +54,6 @@ fn three_level_matches_tmo_greedy() {
 
 #[test]
 fn adaptive_matches_tmo_greedy() {
-    require_artifacts!();
     // the adaptive scheduler may route through any chain, including
     // exploration steps — output must STILL be exactly TMO's
     check_mode_matches_tmo(Mode::Adaptive, "mgsm", 19, 4, 16);
@@ -65,7 +61,6 @@ fn adaptive_matches_tmo_greedy() {
 
 #[test]
 fn batched_spec_matches_tmo_greedy() {
-    require_artifacts!();
     // same property under batch=4 continuous batching: collect outputs by
     // submitting everything at once
     let dataset = "gsm8k";

@@ -1,0 +1,232 @@
+//! Spec-step + catch-up coverage on the in-process SimBackend — the
+//! paths that were untestable without `make artifacts` before the
+//! pluggable-backend refactor (DESIGN.md §8): catch-up convergence from a
+//! deep deficit, the divergence bail, mask promotion accounting, the
+//! empty-committed-sequence guard, and commit/greedy-parity of one full
+//! speculative step.
+use specrouter::config::AcceptRule;
+use specrouter::coordinator::{catch_up, run_spec_step, Backend, Chain,
+                              Profiler, SimBackend, SimSpec,
+                              SimilarityTracker, SlotSeqs, StepCtx,
+                              StepScratch};
+use specrouter::rng::{argmax, Rng};
+use specrouter::state::{KvDims, StateBuf, StateManager};
+
+/// Per-model state entries sized from the sim manifest (what the engine's
+/// `ensure` calls do).
+fn mk_states(backend: &SimBackend, batch: usize, models: &[&str])
+             -> StateManager {
+    let man = Backend::manifest(backend).clone();
+    let mut states = StateManager::new();
+    for m in models {
+        let meta = &man.models[*m];
+        let dims = KvDims {
+            layers: meta.layers,
+            batch,
+            heads: meta.heads,
+            seq: man.seq,
+            head_dim: meta.head_dim,
+        };
+        states.ensure(m, dims, man.state_len(meta, batch));
+    }
+    states
+}
+
+struct Fixture {
+    backend: SimBackend,
+    states: StateManager,
+    prof: Profiler,
+    sim: SimilarityTracker,
+    rng: Rng,
+    scratch: StepScratch,
+    batch: usize,
+    vocab: usize,
+}
+
+impl Fixture {
+    fn new(spec: SimSpec, batch: usize, models: &[&str]) -> Self {
+        let backend = SimBackend::new(spec);
+        let vocab = Backend::manifest(&backend).vocab;
+        let states = mk_states(&backend, batch, models);
+        Fixture {
+            backend,
+            states,
+            prof: Profiler::new(0.2),
+            sim: SimilarityTracker::new(0.2),
+            rng: Rng::new(1),
+            scratch: StepScratch::new(),
+            batch,
+            vocab,
+        }
+    }
+
+    fn ctx(&mut self) -> StepCtx<'_> {
+        StepCtx {
+            exec: &self.backend,
+            prof: &mut self.prof,
+            sim: &mut self.sim,
+            states: &mut self.states,
+            batch: self.batch,
+            vocab: self.vocab,
+            rule: AcceptRule::Greedy,
+            rng: &mut self.rng,
+            scratch: &mut self.scratch,
+        }
+    }
+}
+
+#[test]
+fn catch_up_converges_and_promotes_exactly_to_frontier() {
+    let mut fx = Fixture::new(SimSpec::small_pool(), 2, &["m0"]);
+    let c0: Vec<i32> = (0..40).map(|i| 4 + i).collect();
+    let c1: Vec<i32> = (0..11).map(|i| 4 + i).collect();
+    let slots: SlotSeqs = vec![Some(&c0), Some(&c1)];
+    let calls = {
+        let mut ctx = fx.ctx();
+        catch_up(&mut ctx, "m0", 4, &slots).unwrap()
+    };
+    // worst slot deficit 39, chunks of w+1=5: ceil(39/5) calls
+    assert_eq!(calls, 8);
+    let st = fx.states.get("m0").unwrap();
+    assert_eq!(st.mask.valid_len(0), 39, "slot 0 must reach C-1");
+    assert_eq!(st.mask.valid_len(1), 10, "slot 1 must reach C-1");
+    // already caught up: the next call is free
+    let again = {
+        let mut ctx = fx.ctx();
+        catch_up(&mut ctx, "m0", 4, &slots).unwrap()
+    };
+    assert_eq!(again, 0);
+}
+
+#[test]
+fn catch_up_ignores_idle_slots() {
+    let mut fx = Fixture::new(SimSpec::small_pool(), 2, &["m1"]);
+    let c0: Vec<i32> = (0..9).map(|i| 10 + i).collect();
+    let slots: SlotSeqs = vec![Some(&c0), None];
+    let calls = {
+        let mut ctx = fx.ctx();
+        catch_up(&mut ctx, "m1", 4, &slots).unwrap()
+    };
+    assert_eq!(calls, 2); // ceil(8/5)
+    let st = fx.states.get("m1").unwrap();
+    assert_eq!(st.mask.valid_len(0), 8);
+    assert_eq!(st.mask.valid_len(1), 0, "idle slot must stay untouched");
+}
+
+#[test]
+fn catch_up_bails_structured_after_64_calls() {
+    // a deficit only reachable with >64 chunked calls (needs a deep seq)
+    let mut spec = SimSpec::small_pool();
+    spec.seq = 2048;
+    let mut fx = Fixture::new(spec, 1, &["m0"]);
+    let c: Vec<i32> = (0..400).map(|i| 4 + (i % 500)).collect();
+    let slots: SlotSeqs = vec![Some(&c)];
+    let err = {
+        let mut ctx = fx.ctx();
+        catch_up(&mut ctx, "m0", 4, &slots).unwrap_err()
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("did not converge"), "unexpected error: {msg}");
+    // exactly 64 chunks of 5 were promoted before the bail
+    assert_eq!(fx.states.get("m0").unwrap().mask.valid_len(0), 320);
+}
+
+#[test]
+fn empty_committed_sequence_is_a_structured_error() {
+    let mut fx = Fixture::new(SimSpec::small_pool(), 1, &["m0", "m2"]);
+    let empty: [i32; 0] = [];
+    let slots: SlotSeqs = vec![Some(&empty)];
+    let chain = Chain {
+        models: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    {
+        let mut ctx = fx.ctx();
+        let err = run_spec_step(&mut ctx, &chain, &slots, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("empty committed"),
+                "unexpected error: {err:#}");
+    }
+    {
+        let mut ctx = fx.ctx();
+        let err = catch_up(&mut ctx, "m0", 4, &slots).unwrap_err();
+        assert!(format!("{err:#}").contains("empty committed"),
+                "unexpected error: {err:#}");
+    }
+    // and the TMO path guards identically
+    let tmo = Chain::target_only("m2");
+    let mut ctx = fx.ctx();
+    let err = run_spec_step(&mut ctx, &tmo, &slots, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("empty committed"));
+}
+
+#[test]
+fn spec_step_commits_target_greedy_tokens_and_syncs_masks() {
+    let mut fx = Fixture::new(SimSpec::small_pool(), 1, &["m0", "m2"]);
+    let mut committed = vec![1i32, 100, 101];
+    let chain = Chain {
+        models: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    {
+        let seqs: SlotSeqs = vec![Some(&committed)];
+        let mut ctx = fx.ctx();
+        run_spec_step(&mut ctx, &chain, &seqs, 0).unwrap();
+    }
+    let appended = fx.scratch.outcome.appended[0].clone();
+    assert!(!appended.is_empty() && appended.len() <= 5,
+            "1..=w+1 tokens per step, got {appended:?}");
+    assert_eq!(fx.scratch.outcome.accepted(0, 0), appended.len() - 1);
+
+    // greedy parity: the committed tokens must be exactly the target's
+    // autoregressive argmax continuation (paper Output Quality)
+    let man = Backend::manifest(&fx.backend).clone();
+    let meta = &man.models["m2"];
+    let dims = KvDims {
+        layers: meta.layers,
+        batch: 1,
+        heads: meta.heads,
+        seq: man.seq,
+        head_dim: meta.head_dim,
+    };
+    let mut st = StateBuf::new(dims, man.state_len(meta, 1));
+    let mut prof = Profiler::new(0.2);
+    let mut out = Vec::new();
+    let mut prev = *committed.last().unwrap();
+    let mut expect = Vec::new();
+    for _ in 0..appended.len() {
+        fx.backend.decode(&mut prof, "m2", 1, &[prev], &mut st, &[0],
+                          &mut out).unwrap();
+        let t = argmax(&out[..man.vocab]) as i32;
+        expect.push(t);
+        prev = t;
+    }
+    assert_eq!(appended, expect, "spec output diverged from target greedy");
+
+    // mask synchronization: the target's valid length is exactly the new
+    // committed frontier C-1 (no catch-up needed next step)
+    committed.extend(&appended);
+    assert_eq!(fx.states.get("m2").unwrap().mask.valid_len(0),
+               committed.len() - 1);
+    // the drafter never leads the target's frontier
+    assert!(fx.states.get("m0").unwrap().mask.valid_len(0)
+            <= committed.len() - 1);
+}
+
+#[test]
+fn spec_step_is_deterministic_across_runs() {
+    let run = || {
+        let mut fx = Fixture::new(SimSpec::small_pool(), 2, &["m0", "m2"]);
+        let c0 = vec![1i32, 70, 71, 72];
+        let c1 = vec![1i32, 200, 201];
+        let chain = Chain {
+            models: vec!["m0".into(), "m2".into()],
+            window: 8,
+        };
+        let seqs: SlotSeqs = vec![Some(&c0), Some(&c1)];
+        let mut ctx = fx.ctx();
+        run_spec_step(&mut ctx, &chain, &seqs, 0).unwrap();
+        (fx.scratch.outcome.appended[0].clone(),
+         fx.scratch.outcome.appended[1].clone())
+    };
+    assert_eq!(run(), run());
+}
