@@ -58,6 +58,7 @@ fn main() -> Result<()> {
             arrival: Instant::now(),
             class: specrouter::admission::SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         });
         router.run_until_idle(1_000_000)?;
         let scored = router.sched.score_all(&router.prof, &router.sim);

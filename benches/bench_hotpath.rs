@@ -89,14 +89,27 @@ struct Row {
     bytes_per_step: f64,
 }
 
-/// Drive `measure` steady-state steps of one chain config, counting
-/// allocations inside `run_spec_step` only.
-fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
-              rule_label: &'static str, batch: usize, warmup: u64,
-              measure: u64) -> Row {
-    let man = Backend::manifest(backend).clone();
-    let seq_cap = man.seq;
-    let reset_guard = 2 * (chain.window.max(4) + 1);
+/// What one measurement run produced (input to a [`Row`]).
+struct Measured {
+    tokens: u64,
+    elapsed: f64,
+    allocs: u64,
+    bytes: u64,
+}
+
+/// Shared measurement driver for every row: owns the engine-state setup,
+/// the capacity-reset loop (outside the counting window — arenas stay
+/// warm across resets) and the warm-up/measure/elapsed bookkeeping, so
+/// the single-chain and grouped rows stay comparable by construction.
+/// `step` advances every slot one engine step — toggling COUNTING around
+/// its `run_spec_step` call(s) only — and returns the tokens committed.
+fn drive(backend: &SimBackend, models: &[String], batch: usize,
+         reset_guard: usize, warmup: u64, measure: u64,
+         mut step: impl FnMut(&mut StateManager, &mut Vec<Vec<i32>>,
+                              &mut Profiler, &mut SimilarityTracker,
+                              &mut [Rng]) -> u64)
+         -> Measured {
+    let seq_cap = Backend::manifest(backend).seq;
     let fresh_committed = |batch: usize| -> Vec<Vec<i32>> {
         (0..batch)
             .map(|b| {
@@ -106,12 +119,13 @@ fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
             })
             .collect()
     };
-    let mut states = mk_states(backend, batch, &chain.models);
+    let mut states = mk_states(backend, batch, models);
     let mut committed = fresh_committed(batch);
     let mut prof = Profiler::new(0.2);
     let mut sim = SimilarityTracker::new(0.2);
-    let mut rng = Rng::new(17);
-    let mut scratch = StepScratch::new();
+    let mut rngs: Vec<Rng> = (0..batch)
+        .map(|b| Rng::new(17 ^ b as u64))
+        .collect();
 
     let mut steps_done = 0u64;
     let mut measuring = false;
@@ -124,10 +138,9 @@ fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
 
     while measured_steps < measure {
         // reset the synthetic batch before it hits physical capacity
-        // (outside the counting window — the arena stays warm)
         if committed.iter().any(|c| c.len() + reset_guard >= seq_cap) {
             let pause = std::time::Instant::now();
-            states = mk_states(backend, batch, &chain.models);
+            states = mk_states(backend, batch, models);
             committed = fresh_committed(batch);
             if measuring {
                 elapsed += pause.duration_since(t0).as_secs_f64();
@@ -135,32 +148,10 @@ fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
             }
             continue;
         }
-        {
-            let seqs: SlotSeqs = committed.iter()
-                .map(|c| Some(c.as_slice()))
-                .collect();
-            let mut ctx = StepCtx {
-                exec: backend,
-                prof: &mut prof,
-                sim: &mut sim,
-                states: &mut states,
-                batch,
-                vocab: man.vocab,
-                rule,
-                rng: &mut rng,
-                scratch: &mut scratch,
-            };
-            COUNTING.store(true, Relaxed);
-            let r = run_spec_step(&mut ctx, chain, &seqs, 0);
-            COUNTING.store(false, Relaxed);
-            r.expect("spec step failed");
-        }
-        for (b, c) in committed.iter_mut().enumerate() {
-            let app = &scratch.outcome.appended[b];
-            c.extend_from_slice(app);
-            if measuring {
-                measured_tokens += app.len() as u64;
-            }
+        let toks = step(&mut states, &mut committed, &mut prof, &mut sim,
+                        &mut rngs);
+        if measuring {
+            measured_tokens += toks;
         }
         steps_done += 1;
         if measuring {
@@ -174,18 +165,136 @@ fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
         }
     }
     elapsed += t0.elapsed().as_secs_f64();
-    let allocs = ALLOCS.load(Relaxed) - alloc0;
-    let bytes = BYTES.load(Relaxed) - bytes0;
+    Measured {
+        tokens: measured_tokens,
+        elapsed,
+        allocs: ALLOCS.load(Relaxed) - alloc0,
+        bytes: BYTES.load(Relaxed) - bytes0,
+    }
+}
+
+fn row_from(label: String, rule_label: &'static str, batch: usize,
+            measure: u64, m: Measured) -> Row {
     Row {
-        label: chain.label(),
+        label,
         rule: rule_label,
         batch,
         steps: measure,
-        steps_per_sec: measure as f64 / elapsed.max(1e-9),
-        tokens_per_step: measured_tokens as f64 / measure as f64,
-        allocs_per_step: allocs as f64 / measure as f64,
-        bytes_per_step: bytes as f64 / measure as f64,
+        steps_per_sec: measure as f64 / m.elapsed.max(1e-9),
+        tokens_per_step: m.tokens as f64 / measure as f64,
+        allocs_per_step: m.allocs as f64 / measure as f64,
+        bytes_per_step: m.bytes as f64 / measure as f64,
     }
+}
+
+/// Drive `measure` steady-state steps of one chain config, counting
+/// allocations inside `run_spec_step` only.
+fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
+              rule_label: &'static str, batch: usize, warmup: u64,
+              measure: u64) -> Row {
+    let vocab = Backend::manifest(backend).vocab;
+    let reset_guard = 2 * (chain.window.max(4) + 1);
+    let mut scratch = StepScratch::new();
+    let m = drive(backend, &chain.models, batch, reset_guard, warmup,
+                  measure, |states, committed, prof, sim, rngs| {
+        {
+            let seqs: SlotSeqs = committed.iter()
+                .map(|c| Some(c.as_slice()))
+                .collect();
+            let mut ctx = StepCtx {
+                exec: backend,
+                prof: &mut *prof,
+                sim: &mut *sim,
+                states: &mut *states,
+                batch,
+                vocab,
+                rule,
+                rngs: &mut *rngs,
+                scratch: &mut scratch,
+            };
+            COUNTING.store(true, Relaxed);
+            let r = run_spec_step(&mut ctx, chain, &seqs, 0);
+            COUNTING.store(false, Relaxed);
+            r.expect("spec step failed");
+        }
+        let mut toks = 0u64;
+        for (b, c) in committed.iter_mut().enumerate() {
+            let app = &scratch.outcome.appended[b];
+            c.extend_from_slice(app);
+            toks += app.len() as u64;
+        }
+        toks
+    });
+    row_from(chain.label(), rule_label, batch, measure, m)
+}
+
+/// Grouped steady state (ISSUE 3): the batch is split into chain groups
+/// — the engine's heterogeneous-groups tick shape — each with its own
+/// scratch arena, stepped back-to-back per "step". Membership is a
+/// sub-batch `SlotSeqs` view (non-members are None lanes). Counting is
+/// toggled on around each `run_spec_step` only, same discipline as the
+/// single-group rows: greedy grouped steps must stay at 0 allocs/step.
+fn run_grouped(backend: &SimBackend, configs: &[(Chain, Vec<usize>)],
+               rule: AcceptRule, rule_label: &'static str, batch: usize,
+               warmup: u64, measure: u64) -> Row {
+    let vocab = Backend::manifest(backend).vocab;
+    let max_w = configs.iter().map(|(c, _)| c.window).max().unwrap_or(4);
+    let reset_guard = 2 * (max_w.max(4) + 1);
+    let models: Vec<String> = {
+        let mut v: Vec<String> = Vec::new();
+        for (c, _) in configs {
+            for m in &c.models {
+                if !v.contains(m) {
+                    v.push(m.clone());
+                }
+            }
+        }
+        v
+    };
+    let mut scratches: Vec<StepScratch> =
+        configs.iter().map(|_| StepScratch::new()).collect();
+    let m = drive(backend, &models, batch, reset_guard, warmup, measure,
+                  |states, committed, prof, sim, rngs| {
+        let mut toks = 0u64;
+        for (gi, (chain, members)) in configs.iter().enumerate() {
+            {
+                let seqs: SlotSeqs = (0..batch)
+                    .map(|b| if members.contains(&b) {
+                        Some(committed[b].as_slice())
+                    } else {
+                        None
+                    })
+                    .collect();
+                let mut ctx = StepCtx {
+                    exec: backend,
+                    prof: &mut *prof,
+                    sim: &mut *sim,
+                    states: &mut *states,
+                    batch,
+                    vocab,
+                    rule,
+                    rngs: &mut *rngs,
+                    scratch: &mut scratches[gi],
+                };
+                COUNTING.store(true, Relaxed);
+                let r = run_spec_step(&mut ctx, chain, &seqs, 0);
+                COUNTING.store(false, Relaxed);
+                r.expect("grouped spec step failed");
+            }
+            for &b in members {
+                let app = &scratches[gi].outcome.appended[b];
+                committed[b].extend_from_slice(app);
+                toks += app.len() as u64;
+            }
+        }
+        toks
+    });
+    let label = format!(
+        "{}grp:{}",
+        configs.len(),
+        configs.iter().map(|(c, _)| c.label()).collect::<Vec<_>>()
+            .join("|"));
+    row_from(label, rule_label, batch, measure, m)
 }
 
 fn main() {
@@ -225,6 +334,26 @@ fn main() {
         ]);
         rows.push(row);
     }
+    // heterogeneous chain groups (ISSUE 3): slots {0,1} on a 2-level w4
+    // chain, slots {2,3} on a 3-level w8 chain, per-group scratch arenas
+    let grouped_cfg = vec![
+        (Chain { models: vec!["m0".into(), "m2".into()], window: 4 },
+         vec![0usize, 1]),
+        (Chain { models: vec!["m0".into(), "m1".into(), "m2".into()],
+                 window: 8 },
+         vec![2usize, 3]),
+    ];
+    let row = run_grouped(&backend, &grouped_cfg, AcceptRule::Greedy,
+                          "greedy", batch, warmup, measure);
+    table.row(vec![
+        row.label.clone(),
+        row.rule.to_string(),
+        format!("{:.0}", row.steps_per_sec),
+        format!("{:.2}", row.tokens_per_step),
+        format!("{:.2}", row.allocs_per_step),
+        format!("{:.1}", row.bytes_per_step),
+    ]);
+    rows.push(row);
     table.print();
 
     // Full-engine context row: the same sim pool driven through the real

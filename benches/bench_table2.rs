@@ -93,7 +93,8 @@ fn main() -> Result<()> {
                         max_new: *m,
                         arrival: std::time::Instant::now(),
                         class: specrouter::admission::SloClass::Standard,
-                        slo_ms: None });
+                        slo_ms: None,
+                        sample_seed: None });
                 }
                 router.run_until_idle(10_000_000)?;
                 Ok(metrics::summarize(&router.finished, 60_000.0)

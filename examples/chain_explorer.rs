@@ -46,6 +46,7 @@ fn main() -> Result<()> {
             arrival: Instant::now(),
             class: specrouter::admission::SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         });
         router.run_until_idle(100_000)?;
         if i == 0 || i == n / 2 || i == n - 1 {

@@ -33,6 +33,7 @@ fn run_mode(pool: &Arc<ModelPool>, mode: Mode, batch: usize,
             arrival: Instant::now(),
             class: specrouter::admission::SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         });
     }
     router.run_until_idle(1_000_000)?;

@@ -84,12 +84,23 @@ fn main() -> Result<()> {
         }
     }
 
+    println!("\nper-class chain assignment (DESIGN.md §9):");
+    for line in metrics::class_rows_with_chains(&s,
+                                                &router.class_chain_rows()) {
+        println!("{line}");
+    }
+
     println!("\nchain selection frequencies (Internal Diagnostics):");
     for (chain, cnt) in router.prof.selection_table() {
         let acc = router.prof.mean_accept(&chain)
             .map(|a| format!("  tokens/step={a:.2}"))
             .unwrap_or_default();
         println!("  {chain:<22} {cnt:>5} steps{acc}");
+    }
+    println!("\nper-(group, chain) step attribution:");
+    for (group, chain, steps, tokens) in router.prof.group_table() {
+        println!("  {group:<20} {chain:<22} {steps:>5} steps  \
+                  {tokens:>6} tok");
     }
 
     println!("\nstate manager: {} physical truncations, {} elements \

@@ -59,7 +59,11 @@ fn run(fifo: bool, n: usize, rate: f64) -> Result<()> {
     let s = metrics::summarize_with_shed(&router.finished, 60_000.0, &shed);
     println!("\n=== {label} ===");
     println!("{}", metrics::row(label, &s, None));
-    for line in metrics::class_rows(&s) {
+    // per-class rows including each class's dominant chain assignment
+    // (DESIGN.md §9: under ByClass grouping each class runs its own
+    // chain; the FIFO baseline runs the single whole-batch group)
+    for line in metrics::class_rows_with_chains(&s,
+                                                &router.class_chain_rows()) {
         println!("{line}");
     }
     let int_att = s.class_summary(SloClass::Interactive)

@@ -331,6 +331,7 @@ mod tests {
             arrival,
             class,
             slo_ms: None,
+            sample_seed: None,
         }
     }
 

@@ -173,6 +173,7 @@ mod tests {
             arrival,
             class: SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         }
     }
 

@@ -119,6 +119,7 @@ pub fn run_sim(spec: &SimSpec) -> SimResult {
                 arrival: at(t_a),
                 class,
                 slo_ms: None,
+                sample_seed: None,
             };
             ctrl.submit(req, at(t_a), active);
             continue;

@@ -41,6 +41,32 @@ impl Mode {
     }
 }
 
+/// How `tick()` partitions the occupied slots into *chain groups*
+/// (DESIGN.md §9). Each group is stepped independently with its own
+/// scheduler-selected chain, so an interactive request with tens of
+/// milliseconds of slack and a batch request with minutes of it are no
+/// longer forced through the same draft/verifier sequence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GroupPolicy {
+    /// One group spanning every occupied slot — the pre-grouping engine.
+    /// Also forced whenever `fifo_admission` is set, so the seed baseline
+    /// stays reproducible end to end.
+    Single,
+    /// One group per SLO class present in the batch: interactive,
+    /// standard and batch traffic each get a chain fitted to their own
+    /// group-local headroom.
+    ByClass,
+    /// `ByClass`, additionally splitting out slots whose headroom slack
+    /// has dropped below `urgent_s` seconds into a per-class urgent
+    /// group, which replans with its own (tighter) slack.
+    ByClassUrgency { urgent_s: f64 },
+    /// Every occupied slot is its own group: maximal heterogeneity,
+    /// maximal per-tick overhead. This is the configuration the
+    /// differential parity harness uses to compare grouped execution
+    /// against isolated batch=1 runs.
+    PerSlot,
+}
+
 /// Full engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -70,6 +96,10 @@ pub struct EngineConfig {
     /// Use plain FIFO admission instead of the deadline-aware queue
     /// (baseline for A/B comparison; the seed's behaviour).
     pub fifo_admission: bool,
+    /// Chain-group partitioning of the batch (DESIGN.md §9). The default
+    /// `ByClass` behaves exactly like `Single` whenever only one class is
+    /// present, so single-tenant workloads are unaffected.
+    pub group_policy: GroupPolicy,
     /// Seed the scheduler's α estimates with the manifest's offline
     /// (build-time) similarity instead of the optimistic prior.
     pub offline_sim_prior: bool,
@@ -102,6 +132,7 @@ impl EngineConfig {
             slo_classes: SloTable::default(),
             max_queue: 4096,
             fifo_admission: false,
+            group_policy: GroupPolicy::ByClass,
             offline_sim_prior: false,
             n_devices: 4,
             device_bytes: 2 << 30,
@@ -147,6 +178,12 @@ impl EngineConfig {
         if self.max_queue < 1 {
             bail!("max_queue must be >= 1");
         }
+        if let GroupPolicy::ByClassUrgency { urgent_s } = self.group_policy {
+            if !urgent_s.is_finite() || urgent_s <= 0.0 {
+                bail!("group_policy urgent_s must be a positive finite \
+                       number of seconds");
+            }
+        }
         self.slo_classes.validate()?;
         Ok(())
     }
@@ -189,6 +226,23 @@ mod tests {
         c.max_queue = 16;
         c.slo_classes.interactive.target_ms = -5.0;
         assert!(c.validate(&batches, &windows).is_err());
+    }
+
+    #[test]
+    fn validation_covers_group_policy() {
+        let batches = [1, 4, 8];
+        let windows = [4, 8];
+        let mut c = EngineConfig::new("/tmp/a");
+        for p in [GroupPolicy::Single, GroupPolicy::ByClass,
+                  GroupPolicy::PerSlot,
+                  GroupPolicy::ByClassUrgency { urgent_s: 0.5 }] {
+            c.group_policy = p;
+            assert!(c.validate(&batches, &windows).is_ok(), "{p:?}");
+        }
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            c.group_policy = GroupPolicy::ByClassUrgency { urgent_s: bad };
+            assert!(c.validate(&batches, &windows).is_err(), "{bad}");
+        }
     }
 
     #[test]

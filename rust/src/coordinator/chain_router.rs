@@ -2,30 +2,46 @@
 //! pool), scheduler, state manager, batcher and profiler; drives the
 //! request lifecycle end to end:
 //!
-//!   admit (prefill + slot insert) → [select chain → multi-level
-//!   speculative step → commit / rollback → terminate?]* → finish.
+//!   admit (prefill + slot insert) → [partition slots into chain groups
+//!   → select a chain per group → one multi-level speculative step per
+//!   group → commit / rollback → terminate?]* → finish.
 //!
-//! One `tick()` is one generation cycle of Listing 1 in the paper. The
-//! data plane is any [`Backend`]: the XLA executor over compiled
+//! One `tick()` is one generation cycle of Listing 1 in the paper,
+//! generalized to *heterogeneous chain groups* (DESIGN.md §9): the
+//! occupied slots are partitioned by [`crate::config::GroupPolicy`]
+//! (SLO class / per-slot headroom), each group gets its own
+//! scheduler-selected chain driven by group-local slack, and
+//! `run_spec_step` runs once per group over a sub-batch view (lanes of
+//! other groups are `None`, exactly like idle slots). Per-group scratch
+//! arenas and pre-formatted labels keep `run_spec_step` itself on the
+//! zero-allocation hot path of DESIGN.md §8 (the engine loop's only
+//! per-group cost is the borrowed sub-batch view Vec).
+//!
+//! The data plane is any [`Backend`]: the XLA executor over compiled
 //! artifacts, or the in-process [`crate::coordinator::SimBackend`] for
 //! artifact-free runs (DESIGN.md §8).
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::admission::{Discipline, HeadroomSignal, QueuedReq, ShedRecord,
+use crate::admission::{Discipline, QueuedReq, ShedRecord, SloClass,
                        SubmitOutcome};
-use crate::config::{AcceptRule, EngineConfig, Mode};
+use crate::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
 use crate::coordinator::backend::Backend;
-use crate::coordinator::engine::{Batcher, Finished, Request, Slot};
+use crate::coordinator::engine::{committed_frontier, Batcher, Finished,
+                                 Request, Slot};
 use crate::coordinator::executor::Executor;
+use crate::coordinator::groups::{gid_for, gid_labels, gid_space};
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::scheduler::{Chain, Scheduler};
 use crate::coordinator::similarity::SimilarityTracker;
-use crate::coordinator::spec_step::{run_spec_step, StepCtx, StepScratch};
+use crate::coordinator::spec_step::{run_spec_step, SlotSeqs, StepCtx,
+                                    StepScratch};
+use crate::metrics::ClassChainRow;
 use crate::model_pool::ModelPool;
-use crate::rng::{argmax, softmax, Rng};
+use crate::rng::{argmax, softmax, splitmix, Rng};
 use crate::runtime::Manifest;
 use crate::state::{KvDims, StateManager};
 
@@ -47,12 +63,32 @@ pub struct ChainRouter {
     pub states: StateManager,
     pub batcher: Batcher,
     pub finished: Vec<Finished>,
-    rng: Rng,
-    cached_chain: Option<Chain>,
-    /// The running chain's formatted label, rebuilt only on chain switch
-    /// so steady-state ticks don't re-format a String per step.
-    label_cache: Option<(Chain, String)>,
-    scratch: StepScratch,
+    /// Base seed for derived per-request sampling streams.
+    rng_base: u64,
+    /// One sampling RNG per slot, re-seeded at admission from the
+    /// request's `sample_seed` (or derived from `rng_base` + id) — a
+    /// slot's probabilistic stream never depends on batch composition or
+    /// group partitioning.
+    slot_rngs: Vec<Rng>,
+    /// Cached chain per group id (adaptive mode's replan cadence).
+    group_chains: Vec<Option<Chain>>,
+    /// Each group's running chain label, rebuilt only on chain switch so
+    /// steady-state ticks don't re-format a String per step.
+    group_label_cache: Vec<Option<(Chain, String)>>,
+    /// Pre-formatted group labels (gid → label), built once.
+    group_labels: Vec<String>,
+    /// Reused partition buffers: gid → member slot ids this tick.
+    group_slots: Vec<Vec<usize>>,
+    /// Group-local headroom: gid → min slack over members, this tick.
+    group_slack: Vec<Option<f64>>,
+    /// Reused membership mask for building sub-batch slot views.
+    member_mask: Vec<bool>,
+    /// Reused completion buffer.
+    done_buf: Vec<usize>,
+    /// One scratch arena per group id: each group's buffers warm to its
+    /// own chain shape, preserving the §8 zero-alloc guarantee under
+    /// heterogeneous groups.
+    scratches: Vec<StepScratch>,
     pub steps: u64,
     next_id: u64,
 }
@@ -101,10 +137,11 @@ impl ChainRouter {
         let seed = 0xC0FFEE;
         let sched = Scheduler::new(manifest.clone(), cfg.clone(), seed);
         let batch = cfg.batch;
-        let rng_seed = match cfg.rule {
+        let rng_base = match cfg.rule {
             AcceptRule::Probabilistic { seed } => seed,
             AcceptRule::Greedy => 7,
         };
+        let n_gids = gid_space(batch);
         // fifo_admission reproduces the seed end to end: arrival-order
         // queueing AND no shedding/downgrading, so A/B runs compare the
         // whole admission subsystem against the true baseline
@@ -123,10 +160,20 @@ impl ChainRouter {
             states: StateManager::new(),
             batcher,
             finished: Vec::new(),
-            rng: Rng::new(rng_seed),
-            cached_chain: None,
-            label_cache: None,
-            scratch: StepScratch::new(),
+            rng_base,
+            slot_rngs: (0..batch)
+                .map(|b| Rng::new(rng_base ^ splitmix(b as u64)))
+                .collect(),
+            group_chains: vec![None; n_gids],
+            group_label_cache: vec![None; n_gids],
+            group_labels: gid_labels(batch),
+            group_slots: (0..n_gids)
+                .map(|_| Vec::with_capacity(batch))
+                .collect(),
+            group_slack: vec![None; n_gids],
+            member_mask: vec![false; batch],
+            done_buf: Vec::with_capacity(batch),
+            scratches: (0..n_gids).map(|_| StepScratch::new()).collect(),
             steps: 0,
             next_id: 1,
             cfg,
@@ -151,13 +198,22 @@ impl ChainRouter {
             Mode::Tmo => vec![self.cfg.target.clone()],
             Mode::Fixed { chain, .. } => chain.clone(),
             Mode::Adaptive => {
-                // once a chain is cached, only its members (plus the
+                // once chains are cached, only their members (plus the
                 // target) are prefilled at admission — other pool models
                 // catch up lazily if the scheduler routes to them later.
-                // Before the first plan, warm everything ≤ target so the
-                // exploration phase starts from consistent states.
-                if let Some(chain) = &self.cached_chain {
-                    let mut set = chain.models.clone();
+                // With grouped ticks this is the union over every
+                // group's cached chain. Before the first plan, warm
+                // everything ≤ target so the exploration phase starts
+                // from consistent states.
+                let mut set: Vec<String> = Vec::new();
+                for chain in self.group_chains.iter().flatten() {
+                    for m in &chain.models {
+                        if !set.contains(m) {
+                            set.push(m.clone());
+                        }
+                    }
+                }
+                if !set.is_empty() {
                     if !set.contains(&self.cfg.target) {
                         set.push(self.cfg.target.clone());
                     }
@@ -246,6 +302,13 @@ impl ChainRouter {
             }
             let admitted_at = Instant::now();
             let plen = req.prompt.len();
+            // per-request sampling stream: seeded here so a request's
+            // sampled output is reproducible regardless of which slots
+            // share the batch or how groups partition it (group_parity)
+            let mut slot_rng = Rng::new(match req.sample_seed {
+                Some(s) => s,
+                None => self.rng_base ^ splitmix(req.id),
+            });
             // target prefill: produces the first committed token
             let target = self.cfg.target.clone();
             let mut first_token = 0i32;
@@ -265,10 +328,11 @@ impl ChainRouter {
                     first_token = match self.cfg.rule {
                         AcceptRule::Greedy => argmax(&logits) as i32,
                         AcceptRule::Probabilistic { .. } =>
-                            self.rng.categorical(&softmax(&logits)) as i32,
+                            slot_rng.categorical(&softmax(&logits)) as i32,
                     };
                 }
             }
+            self.slot_rngs[slot_idx] = slot_rng;
             let first_token_at = Instant::now();
             let mut committed = req.prompt.clone();
             committed.push(first_token);
@@ -291,9 +355,55 @@ impl ChainRouter {
         Ok(admitted)
     }
 
-    /// The chain for the next step, per mode (adaptive: Algorithm 1 with
-    /// replan cadence).
-    pub fn current_chain(&mut self) -> Chain {
+    /// The TPOT estimate headroom math runs on — None under the FIFO
+    /// baseline, which reproduces the seed end to end (no part of the
+    /// admission subsystem may leak into chain selection), or until a
+    /// TPOT has been observed.
+    fn tpot_for_headroom(&self) -> Option<f64> {
+        if self.cfg.fifo_admission {
+            return None;
+        }
+        self.batcher.admission.tpot_estimate()
+    }
+
+    /// Partition the occupied slots into chain groups for this tick
+    /// (DESIGN.md §9), filling the reused `group_slots` buffers and each
+    /// group's minimum headroom slack. The FIFO baseline forces the
+    /// single whole-batch group.
+    fn build_groups(&mut self) {
+        for g in &mut self.group_slots {
+            g.clear();
+        }
+        for s in &mut self.group_slack {
+            *s = None;
+        }
+        let policy = if self.cfg.fifo_admission {
+            GroupPolicy::Single
+        } else {
+            self.cfg.group_policy
+        };
+        let now = Instant::now();
+        let tpot = self.tpot_for_headroom();
+        for (b, slot) in self.batcher.slots.iter().enumerate() {
+            let Some(slot) = slot else { continue };
+            let slack = tpot.map(|t| {
+                crate::admission::signed_since(slot.deadline, now)
+                    - slot.remaining() as f64 * t
+            });
+            let gid = gid_for(policy, b, slot.class, slack);
+            self.group_slots[gid].push(b);
+            if let Some(s) = slack {
+                self.group_slack[gid] = Some(match self.group_slack[gid] {
+                    Some(cur) => cur.min(s),
+                    None => s,
+                });
+            }
+        }
+    }
+
+    /// The chain group `gid` runs next, per mode (adaptive: Algorithm 1
+    /// with replan cadence, headroom-biased by the group's own slack).
+    fn chain_for_gid(&mut self, gid: usize) -> Chain {
         match &self.cfg.mode {
             Mode::Tmo => Chain::target_only(&self.cfg.target),
             Mode::Fixed { chain, window } => {
@@ -304,100 +414,161 @@ impl ChainRouter {
                 }
             }
             Mode::Adaptive => {
-                let replan = self.cached_chain.is_none()
+                let replan = self.group_chains[gid].is_none()
                     || self.steps % self.cfg.replan_every as u64 == 0;
                 if replan {
-                    let headroom = self.headroom_signal();
-                    let c = self.sched.select_with_headroom(
-                        &self.prof, &self.sim, self.cached_chain.as_ref(),
-                        headroom.as_ref());
-                    self.cached_chain = Some(c);
+                    let c = self.sched.select_for_group(
+                        &self.prof, &self.sim,
+                        self.group_chains[gid].as_ref(),
+                        self.group_slack[gid]);
+                    self.group_chains[gid] = Some(c);
                 }
-                self.cached_chain.clone().unwrap()
+                self.group_chains[gid].clone().unwrap()
             }
         }
     }
 
-    /// One generation cycle (paper Listing 1 steps 2a-2d). Returns the
-    /// number of tokens committed, or None when the engine is idle.
+    /// Worst-case draft window any tick of this mode can run — sizes the
+    /// completion guard AND bounds what a non-member lane must tolerate
+    /// in another group's capacity check. Fixed/TMO replicate the seed's
+    /// truncation behaviour exactly (fixed window resp. the catch-up
+    /// chunk window); only Adaptive — where any exported window is
+    /// selectable per group — needs the manifest-wide maximum.
+    fn worst_case_window(&self) -> usize {
+        let w0 = self.manifest.windows.first().copied().unwrap_or(0);
+        match &self.cfg.mode {
+            Mode::Tmo => w0,
+            Mode::Fixed { chain, window } => {
+                if chain.len() == 1 { w0 } else { *window }
+            }
+            Mode::Adaptive => self.manifest.windows.iter().copied().max()
+                .unwrap_or(self.cfg.window),
+        }
+    }
+
+    /// One generation cycle (paper Listing 1 steps 2a-2d, grouped):
+    /// partition the occupied slots, then per group select a chain and
+    /// run one speculative step over that group's sub-batch view.
+    /// Returns the number of tokens committed across every group, or
+    /// None when the engine is idle.
     pub fn tick(&mut self) -> Result<Option<usize>> {
         self.admit_pending()?;
         if self.batcher.active() == 0 {
             return Ok(if self.batcher.is_idle() { None } else { Some(0) });
         }
-        let chain = self.current_chain();
-        let stale = !matches!(&self.label_cache, Some((c, _)) if c == &chain);
-        if stale {
-            self.label_cache = Some((chain.clone(), chain.label()));
-        }
-        self.prof.record_chain_selected(
-            &self.label_cache.as_ref().unwrap().1);
-        // chain members that skipped admission prefill (lazy adaptive
-        // routing) still need state entries; their caches catch up inside
-        // the step
-        for m in &chain.models {
-            let dims = self.kv_dims(m);
-            let state_len = self.state_len(m);
-            self.states.ensure(m, dims, state_len);
-        }
-
-        {
-            let seqs = self.batcher.slot_seqs();
-            let mut ctx = StepCtx {
-                exec: self.backend.as_ref(),
-                prof: &mut self.prof,
-                sim: &mut self.sim,
-                states: &mut self.states,
-                batch: self.cfg.batch,
-                vocab: self.manifest.vocab,
-                rule: self.cfg.rule,
-                rng: &mut self.rng,
-                scratch: &mut self.scratch,
-            };
-            run_spec_step(&mut ctx, &chain, &seqs,
-                          self.manifest.special.pad)?;
-        }
-
+        self.build_groups();
         let eos = self.manifest.special.eos;
         let seq_cap = self.manifest.seq;
-        let guard = self.cfg.window + 2;
+        // completion guard: a slot kept alive must survive the deepest
+        // step ANY group could run next tick (it sits in other groups'
+        // batched calls as a capacity-checked non-member lane)
+        let guard = self.worst_case_window() + 2;
         let mut total = 0usize;
-        let mut to_complete = Vec::new();
-        for b in 0..self.batcher.batch() {
-            let Some(slot) = self.batcher.slots[b].as_mut() else {
+        self.done_buf.clear();
+        for gid in 0..self.group_slots.len() {
+            if self.group_slots[gid].is_empty() {
                 continue;
-            };
-            let mut done = false;
-            for &t in &self.scratch.outcome.appended[b] {
-                if slot.remaining() == 0 {
-                    done = true;
-                    break;
+            }
+            // move the member list out so `self` stays borrowable
+            let slots = std::mem::take(&mut self.group_slots[gid]);
+            let chain = self.chain_for_gid(gid);
+            let stale = !matches!(&self.group_label_cache[gid],
+                                  Some((c, _)) if c == &chain);
+            if stale {
+                self.group_label_cache[gid] =
+                    Some((chain.clone(), chain.label()));
+            }
+            self.prof.record_chain_selected(
+                &self.group_label_cache[gid].as_ref().unwrap().1);
+            // chain members that skipped admission prefill (lazy adaptive
+            // routing) still need state entries; their caches catch up
+            // inside the step
+            for m in &chain.models {
+                let dims = self.kv_dims(m);
+                let state_len = self.state_len(m);
+                self.states.ensure(m, dims, state_len);
+            }
+            {
+                // sub-batch view: members carry their committed
+                // sequences, every other lane (idle or other-group) is
+                // None and stays untouched. The view Vec itself is the
+                // one engine-level allocation per group-step (it borrows
+                // the batcher, so it cannot live in `self`); the §8
+                // zero-alloc guarantee covers `run_spec_step`, which the
+                // per-group arenas preserve.
+                self.member_mask.fill(false);
+                for &b in &slots {
+                    self.member_mask[b] = true;
                 }
-                slot.committed.push(t);
-                total += 1;
-                if t == eos {
-                    slot.finished_by_eos = true;
+                let member = &self.member_mask;
+                let seqs: SlotSeqs = self.batcher.slots.iter().enumerate()
+                    .map(|(b, s)| if member[b] {
+                        s.as_ref().map(|s| s.committed.as_slice())
+                    } else {
+                        None
+                    })
+                    .collect();
+                let mut ctx = StepCtx {
+                    exec: self.backend.as_ref(),
+                    prof: &mut self.prof,
+                    sim: &mut self.sim,
+                    states: &mut self.states,
+                    batch: self.cfg.batch,
+                    vocab: self.manifest.vocab,
+                    rule: self.cfg.rule,
+                    rngs: &mut self.slot_rngs,
+                    scratch: &mut self.scratches[gid],
+                };
+                run_spec_step(&mut ctx, &chain, &seqs,
+                              self.manifest.special.pad)?;
+            }
+            // commit this group's slots from its scratch outcome
+            let mut group_total = 0usize;
+            let outcome = &self.scratches[gid].outcome;
+            for &b in &slots {
+                let Some(slot) = self.batcher.slots[b].as_mut() else {
+                    continue;
+                };
+                let mut done = false;
+                for &t in &outcome.appended[b] {
+                    if slot.remaining() == 0 {
+                        done = true;
+                        break;
+                    }
+                    slot.committed.push(t);
+                    group_total += 1;
+                    if t == eos {
+                        slot.finished_by_eos = true;
+                        done = true;
+                        break;
+                    }
+                }
+                if slot.remaining() == 0
+                    || slot.committed.len() + guard > seq_cap {
                     done = true;
-                    break;
+                }
+                // commits may have been truncated: clamp every model's
+                // mask to the authoritative frontier (structured error
+                // instead of a usize underflow on a corrupt slot)
+                let frontier = committed_frontier(&slot.committed)?;
+                self.states.clamp_slot(b, frontier);
+                if done {
+                    self.done_buf.push(b);
                 }
             }
-            if slot.remaining() == 0
-                || slot.committed.len() + guard > seq_cap {
-                done = true;
-            }
-            // commits may have been truncated: clamp every model's mask to
-            // the authoritative frontier
-            let frontier = slot.committed.len() - 1;
-            self.states.clamp_slot(b, frontier);
-            if done {
-                to_complete.push(b);
-            }
+            total += group_total;
+            let chain_label =
+                &self.group_label_cache[gid].as_ref().unwrap().1;
+            self.prof.record_chain_step(chain_label, group_total as u64);
+            self.prof.record_group_step(&self.group_labels[gid],
+                                        chain_label, group_total as u64);
+            self.group_slots[gid] = slots; // return the reused buffer
         }
-        for b in to_complete {
+        let done = std::mem::take(&mut self.done_buf);
+        for &b in &done {
             self.complete(b);
         }
-        self.prof.record_chain_step(&self.label_cache.as_ref().unwrap().1,
-                                    total as u64);
+        self.done_buf = done;
         self.steps += 1;
         if self.steps % FIX_CACHES_EVERY == 0 {
             self.states.fix_caches()?;
@@ -405,25 +576,28 @@ impl ChainRouter {
         Ok(Some(total))
     }
 
-    /// SLO headroom over the in-flight requests: minimum slack (deadline
-    /// minus now minus estimated remaining work) across occupied slots.
-    /// None until a TPOT has been observed or when no slot is occupied —
-    /// the scheduler then runs unbiased.
-    fn headroom_signal(&self) -> Option<HeadroomSignal> {
-        if self.cfg.fifo_admission {
-            // the FIFO baseline reproduces the seed end to end: no part
-            // of the admission subsystem may leak into chain selection
-            return None;
+    /// Per-class chain assignment aggregated from the profiler's
+    /// (group, chain) attribution (DESIGN.md §9): urgency subgroups fold
+    /// into their class; the `all`/`slotN` groups carry no class and are
+    /// skipped. Feed to [`crate::metrics::class_rows_with_chains`].
+    pub fn class_chain_rows(&self) -> Vec<ClassChainRow> {
+        let mut agg: BTreeMap<(SloClass, String), (u64, u64)> =
+            BTreeMap::new();
+        for (group, chain, steps, tokens) in self.prof.group_table() {
+            let prefix = group.split('!').next().unwrap_or("");
+            let Ok(class) = SloClass::parse(prefix) else { continue };
+            let e = agg.entry((class, chain)).or_insert((0, 0));
+            e.0 += steps;
+            e.1 += tokens;
         }
-        let tpot = self.batcher.admission.tpot_estimate()?;
-        let now = Instant::now();
-        let slack = self.batcher.slots.iter().flatten()
-            .map(|s| {
-                crate::admission::signed_since(s.deadline, now)
-                    - s.remaining() as f64 * tpot
+        agg.into_iter()
+            .map(|((class, chain), (steps, tokens))| ClassChainRow {
+                class,
+                chain,
+                steps,
+                tokens,
             })
-            .min_by(|a, b| a.partial_cmp(b).unwrap())?;
-        Some(HeadroomSignal { slack_s: slack })
+            .collect()
     }
 
     fn complete(&mut self, slot_idx: usize) {
@@ -478,8 +652,9 @@ impl ChainRouter {
             prompt: prompt.to_vec(),
             max_new,
             arrival: Instant::now(),
-            class: crate::admission::SloClass::Standard,
+            class: SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         }).context("request shed at admission")?;
         self.run_until_idle(100_000)?;
         let rec = self.finished.iter().rev().find(|f| f.id == id)

@@ -14,6 +14,8 @@
 //! or downgraded instead of occupying slots they cannot use.
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
 use crate::admission::{AdmissionController, Discipline, QueuedReq,
                        ShedRecord, SloClass, SloTable, SubmitOutcome};
 
@@ -29,6 +31,28 @@ pub struct Request {
     pub class: SloClass,
     /// Optional explicit latency target overriding the class default.
     pub slo_ms: Option<f64>,
+    /// Optional per-request sampling seed. The probabilistic
+    /// accept/bonus stream is drawn from a per-slot RNG seeded here, so
+    /// a sampled output is reproducible regardless of batch composition
+    /// or chain-group partitioning (the differential parity harness
+    /// depends on this). None derives a seed from the engine seed and
+    /// the assigned request id.
+    pub sample_seed: Option<u64>,
+}
+
+/// Authoritative mask frontier of a committed sequence: C-1, because the
+/// last committed token is re-forwarded on the next step by convention.
+/// Structured error instead of a usize underflow on an empty sequence —
+/// unreachable through the normal lifecycle (admission always commits the
+/// prefill token), but `tick()`'s clamp path must not be one refactor
+/// away from a wrapping panic.
+pub fn committed_frontier(committed: &[i32]) -> Result<usize> {
+    match committed.len().checked_sub(1) {
+        Some(f) => Ok(f),
+        None => bail!("empty committed sequence has no frontier (the \
+                       engine must commit the prefill token before \
+                       clamping)"),
+    }
 }
 
 /// A finished request with its full timing record (metrics input).
@@ -65,7 +89,9 @@ pub struct Slot {
 
 impl Slot {
     pub fn generated(&self) -> &[i32] {
-        &self.committed[self.req.prompt.len()..]
+        // tolerate a committed sequence shorter than the prompt (possible
+        // only mid-error-path) rather than panicking on the slice
+        self.committed.get(self.req.prompt.len()..).unwrap_or(&[])
     }
 
     pub fn remaining(&self) -> usize {
@@ -170,6 +196,7 @@ mod tests {
             arrival: Instant::now(),
             class: SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         }
     }
 
@@ -249,6 +276,15 @@ mod tests {
         let slot = b.free(i).unwrap();
         assert_eq!(slot.generated(), &[99]);
         assert_eq!(slot.remaining(), 3);
+    }
+
+    #[test]
+    fn committed_frontier_is_c_minus_one_and_guards_empty() {
+        assert_eq!(committed_frontier(&[1, 2, 3]).unwrap(), 2);
+        assert_eq!(committed_frontier(&[9]).unwrap(), 0);
+        let err = committed_frontier(&[]).unwrap_err();
+        assert!(err.to_string().contains("no frontier"),
+                "unexpected error: {err}");
     }
 
     #[test]

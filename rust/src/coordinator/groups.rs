@@ -1,0 +1,162 @@
+//! Chain-group partitioning of the slot batch (DESIGN.md §9).
+//!
+//! The paper's adaptive routing picks one optimal chain; applying that
+//! single chain to *every* occupied slot wastes the per-class headroom
+//! signal the admission layer computes — an interactive request with
+//! 80 ms of slack and a batch request with minutes of it should not be
+//! forced through the same draft/verifier sequence. Each tick the router
+//! partitions the occupied slots into groups under the configured
+//! [`GroupPolicy`], selects a chain *per group* (group-local slack feeds
+//! `Scheduler::select_for_group`) and runs one spec step per group over a
+//! sub-batch view (non-members are `None` lanes, exactly like idle
+//! slots).
+//!
+//! Group identities are stable small integers so the router can keep one
+//! scratch arena, one cached chain and one pre-formatted label per group
+//! — steady-state ticks allocate nothing for group bookkeeping:
+//!
+//! ```text
+//! gid 0..5   (class, urgent) pairs — ByClass / ByClassUrgency
+//! gid 6      the whole batch       — Single
+//! gid 7+b    slot b                — PerSlot
+//! ```
+use crate::admission::SloClass;
+use crate::config::GroupPolicy;
+
+/// Identity of one class-keyed chain group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupKey {
+    pub class: SloClass,
+    /// Slack below the policy's urgency threshold (ByClassUrgency only).
+    pub urgent: bool,
+}
+
+/// gid of the whole-batch group (`GroupPolicy::Single`).
+pub const GID_ALL: usize = GroupKey::COUNT;
+
+/// gid of slot 0's group under `GroupPolicy::PerSlot`; slot b maps to
+/// `GID_SLOT0 + b`.
+pub const GID_SLOT0: usize = GID_ALL + 1;
+
+impl GroupKey {
+    /// Number of distinct class-keyed group ids.
+    pub const COUNT: usize = SloClass::ALL.len() * 2;
+
+    /// Stable dense index in `0..COUNT`.
+    pub fn index(self) -> usize {
+        let c = match self.class {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        };
+        c * 2 + self.urgent as usize
+    }
+
+    /// Group label for profiler attribution; the class name, with an
+    /// `!urgent` suffix for urgency subgroups — `ChainRouter::
+    /// class_chain_rows` folds the suffix back into the class.
+    pub fn label(self) -> &'static str {
+        match (self.class, self.urgent) {
+            (SloClass::Interactive, false) => "interactive",
+            (SloClass::Interactive, true) => "interactive!urgent",
+            (SloClass::Standard, false) => "standard",
+            (SloClass::Standard, true) => "standard!urgent",
+            (SloClass::Batch, false) => "batch",
+            (SloClass::Batch, true) => "batch!urgent",
+        }
+    }
+}
+
+/// Total gid space for a router with `batch` slots (every policy's ids
+/// coexist so the policy can change between runs without re-indexing).
+pub fn gid_space(batch: usize) -> usize {
+    GID_SLOT0 + batch
+}
+
+/// The gid a slot belongs to under `policy`. `slack_s` is the slot's
+/// headroom slack (None when no TPOT estimate exists yet — urgency then
+/// never triggers, matching the scheduler's unbiased cold start).
+pub fn gid_for(policy: GroupPolicy, slot: usize, class: SloClass,
+               slack_s: Option<f64>) -> usize {
+    match policy {
+        GroupPolicy::Single => GID_ALL,
+        GroupPolicy::PerSlot => GID_SLOT0 + slot,
+        GroupPolicy::ByClass => GroupKey { class, urgent: false }.index(),
+        GroupPolicy::ByClassUrgency { urgent_s } => {
+            let urgent = slack_s.is_some_and(|s| s < urgent_s);
+            GroupKey { class, urgent }.index()
+        }
+    }
+}
+
+/// Pre-formatted label for every gid in the space (built once at router
+/// construction; ticks borrow from it).
+pub fn gid_labels(batch: usize) -> Vec<String> {
+    let mut labels: Vec<String> = (0..GroupKey::COUNT)
+        .map(|i| {
+            let class = SloClass::ALL[i / 2];
+            GroupKey { class, urgent: i % 2 == 1 }.label().to_string()
+        })
+        .collect();
+    labels.push("all".to_string());
+    labels.extend((0..batch).map(|b| format!("slot{b}")));
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_dense_and_stable() {
+        let mut seen = vec![false; GroupKey::COUNT];
+        for class in SloClass::ALL {
+            for urgent in [false, true] {
+                let k = GroupKey { class, urgent };
+                assert!(k.index() < GroupKey::COUNT);
+                assert!(!seen[k.index()], "index collision at {k:?}");
+                seen[k.index()] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(GID_ALL, 6);
+        assert_eq!(GID_SLOT0, 7);
+        assert_eq!(gid_space(4), 11);
+    }
+
+    #[test]
+    fn labels_cover_the_space_and_match_keys() {
+        let labels = gid_labels(2);
+        assert_eq!(labels.len(), gid_space(2));
+        assert_eq!(labels[GroupKey { class: SloClass::Interactive,
+                                     urgent: false }.index()],
+                   "interactive");
+        assert_eq!(labels[GroupKey { class: SloClass::Batch,
+                                     urgent: true }.index()],
+                   "batch!urgent");
+        assert_eq!(labels[GID_ALL], "all");
+        assert_eq!(labels[GID_SLOT0 + 1], "slot1");
+        // the class prefix (up to '!') round-trips through SloClass::parse
+        for i in 0..GroupKey::COUNT {
+            let prefix = labels[i].split('!').next().unwrap();
+            assert!(SloClass::parse(prefix).is_ok(), "bad prefix {prefix}");
+        }
+    }
+
+    #[test]
+    fn gid_for_follows_policy() {
+        let std = SloClass::Standard;
+        assert_eq!(gid_for(GroupPolicy::Single, 3, std, Some(-1.0)), GID_ALL);
+        assert_eq!(gid_for(GroupPolicy::PerSlot, 3, std, None), GID_SLOT0 + 3);
+        assert_eq!(gid_for(GroupPolicy::ByClass, 3, std, Some(-1.0)),
+                   GroupKey { class: std, urgent: false }.index());
+        let pol = GroupPolicy::ByClassUrgency { urgent_s: 0.5 };
+        assert_eq!(gid_for(pol, 0, std, Some(0.1)),
+                   GroupKey { class: std, urgent: true }.index());
+        assert_eq!(gid_for(pol, 0, std, Some(2.0)),
+                   GroupKey { class: std, urgent: false }.index());
+        // no TPOT estimate yet: urgency cannot trigger
+        assert_eq!(gid_for(pol, 0, std, None),
+                   GroupKey { class: std, urgent: false }.index());
+    }
+}

@@ -10,6 +10,7 @@ pub mod backend;
 pub mod chain_router;
 pub mod engine;
 pub mod executor;
+pub mod groups;
 pub mod profiler;
 pub mod scheduler;
 pub mod sim_backend;
@@ -18,8 +19,9 @@ pub mod spec_step;
 
 pub use backend::{Backend, PrefillState};
 pub use chain_router::ChainRouter;
-pub use engine::{Batcher, Finished, Request, Slot};
+pub use engine::{committed_frontier, Batcher, Finished, Request, Slot};
 pub use executor::Executor;
+pub use groups::GroupKey;
 pub use profiler::Profiler;
 pub use scheduler::{Chain, Scheduler, ScoredChain};
 pub use sim_backend::{SimBackend, SimModel, SimSpec};

@@ -47,6 +47,12 @@ pub struct Profiler {
     chain_outcomes: HashMap<String, (u64, u64)>,
     /// per-chain selection counts (Internal Diagnostics, paper §5)
     chain_selected: HashMap<String, u64>,
+    /// per-(group, chain) step attribution (DESIGN.md §9):
+    /// group label -> chain label -> (group-steps, committed tokens).
+    /// Keeps the cost model and diagnostics unbiased under heterogeneous
+    /// chain groups — a chain serving one interactive slot is not mixed
+    /// into the same row as the same chain serving four batch slots.
+    group_outcomes: HashMap<String, HashMap<String, (u64, u64)>>,
     pub steps: u64,
     pub committed_tokens: u64,
 }
@@ -58,6 +64,7 @@ impl Profiler {
             calls: HashMap::new(),
             chain_outcomes: HashMap::new(),
             chain_selected: HashMap::new(),
+            group_outcomes: HashMap::new(),
             steps: 0,
             committed_tokens: 0,
         }
@@ -119,6 +126,40 @@ impl Profiler {
         } else {
             self.chain_selected.insert(chain_label.to_string(), 1);
         }
+    }
+
+    /// Record one group-step outcome under its (group, chain) pair.
+    /// Nested borrowed-str maps like `record_call_parts`: allocation-free
+    /// once the pair has been seen (hot-path discipline, DESIGN.md §8).
+    pub fn record_group_step(&mut self, group: &str, chain: &str,
+                             committed: u64) {
+        if let Some(inner) = self.group_outcomes.get_mut(group) {
+            if let Some(e) = inner.get_mut(chain) {
+                e.0 += 1;
+                e.1 += committed;
+                return;
+            }
+            inner.insert(chain.to_string(), (1, committed));
+            return;
+        }
+        let mut inner = HashMap::new();
+        inner.insert(chain.to_string(), (1, committed));
+        self.group_outcomes.insert(group.to_string(), inner);
+    }
+
+    /// (group, chain, group-steps, tokens) rows, sorted by group then by
+    /// descending step count — the per-class chain-assignment view.
+    pub fn group_table(&self) -> Vec<(String, String, u64, u64)> {
+        let mut v: Vec<_> = self.group_outcomes.iter()
+            .flat_map(|(g, inner)| {
+                inner.iter().map(move |(c, &(steps, toks))| {
+                    (g.clone(), c.clone(), steps, toks)
+                })
+            })
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0).then(b.2.cmp(&a.2))
+                  .then(a.1.cmp(&b.1)));
+        v
     }
 
     /// Mean accepted tokens per step for a chain (diagnostics).
@@ -237,5 +278,20 @@ mod tests {
         assert_eq!(p.selection_table()[0], ("A".to_string(), 2));
         assert_eq!(p.steps, 2);
         assert_eq!(p.committed_tokens, 8);
+    }
+
+    #[test]
+    fn group_attribution_accumulates_per_pair() {
+        let mut p = Profiler::new(0.2);
+        p.record_group_step("interactive", "[m2]", 1);
+        p.record_group_step("interactive", "[m2]", 2);
+        p.record_group_step("interactive", "[m0>m2]w4", 4);
+        p.record_group_step("batch", "[m0>m2]w4", 5);
+        let t = p.group_table();
+        assert_eq!(t.len(), 3);
+        // sorted by group, then descending steps
+        assert_eq!(t[0], ("batch".into(), "[m0>m2]w4".into(), 1, 5));
+        assert_eq!(t[1], ("interactive".into(), "[m2]".into(), 2, 3));
+        assert_eq!(t[2], ("interactive".into(), "[m0>m2]w4".into(), 1, 4));
     }
 }

@@ -284,6 +284,19 @@ impl Scheduler {
         }
     }
 
+    /// Chain for one slot group (DESIGN.md §9): `select_with_headroom`
+    /// driven by the group's own minimum slack instead of the batch-wide
+    /// minimum. An interactive group under pressure falls back to cheap
+    /// steps while a batch group sharing the same tick keeps the
+    /// throughput-optimal chain — the per-request heterogeneity of
+    /// AdaSpec/SPIN at group granularity.
+    pub fn select_for_group(&mut self, profiler: &Profiler,
+                            sim: &SimilarityTracker, current: Option<&Chain>,
+                            group_slack_s: Option<f64>) -> Chain {
+        let h = group_slack_s.map(|slack_s| HeadroomSignal { slack_s });
+        self.select_with_headroom(profiler, sim, current, h.as_ref())
+    }
+
     /// `select_from` with SLO feedback (DESIGN.md §7): the admission
     /// layer's headroom signal biases the choice toward chains with
     /// cheaper worst-case steps when in-flight deadlines are tight.
@@ -678,6 +691,49 @@ mod tests {
                                                  Some(&tight));
             assert_eq!(picked, Chain::target_only("m2"));
         }
+    }
+
+    #[test]
+    fn per_group_selection_diverges_with_group_slack() {
+        // same profiler state, two groups with different slack: the tight
+        // group must get a cheaper chain than the roomy one in the SAME
+        // planning state — the per-group heterogeneity the grouped tick
+        // loop exists for
+        let mut c = cfg();
+        c.explore_eps = 0.0;
+        let mut s = Scheduler::new(manifest(), c, 1);
+        let mut prof = Profiler::new(1.0);
+        let mut sim = SimilarityTracker::new(1.0);
+        let k = |m: &str, kind, w| FnKey { model: m.into(), kind,
+                                           batch: 4, window: w };
+        prof.record_call(&k("m2", FnKind::Decode, 0),
+                         Duration::from_millis(100));
+        for w in [4usize, 8] {
+            for m in ["m0", "m1"] {
+                prof.record_call(&k(m, FnKind::Draft, w),
+                                 Duration::from_millis(150));
+                prof.record_call(&k(m, FnKind::Verify, w),
+                                 Duration::from_millis(100));
+            }
+            prof.record_call(&k("m2", FnKind::Verify, w),
+                             Duration::from_millis(250));
+        }
+        sim.observe_acceptance("m0", "m2", 4, 4);
+        sim.observe_acceptance("m1", "m2", 4, 4);
+        sim.observe_acceptance("m0", "m1", 4, 4);
+        while s.plans <= 3 * s.candidate_chains().len() as u64 {
+            let _ = s.select(&prof, &sim);
+        }
+        let roomy = s.select_for_group(&prof, &sim, None, Some(60.0));
+        assert!(roomy.is_speculative(),
+                "roomy group should keep the speculative chain: {roomy:?}");
+        let tight = s.select_for_group(&prof, &sim, None, Some(0.2));
+        assert_eq!(tight, Chain::target_only("m2"),
+                   "tight group must fall back to cheap steps");
+        // no slack signal at all == plain select_from
+        let a = s.select_for_group(&prof, &sim, None, None);
+        let b = s.select_from(&prof, &sim, None);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::backend::{Backend, PrefillState};
 use crate::coordinator::profiler::Profiler;
-use crate::rng::argmax;
+use crate::rng::{argmax, splitmix};
 use crate::runtime::{DatasetSpec, FnKind, Manifest, ModelMeta,
                      SpecialTokens};
 use crate::state::StateBuf;
@@ -102,13 +102,19 @@ impl SimSpec {
             seed: 0xB0A7_10AD,
         }
     }
-}
 
-fn splitmix(mut z: u64) -> u64 {
-    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
+    /// `small_pool` re-seeded, with per-model deviation overrides (extra
+    /// entries ignored, missing ones keep the default). The randomized
+    /// differential/fuzz suites sweep these to vary the pool's acceptance
+    /// structure while keeping dims and cost ratios fixed.
+    pub fn small_pool_seeded(seed: u64, deviations: &[f64]) -> Self {
+        let mut s = Self::small_pool();
+        s.seed = seed;
+        for (m, &d) in s.models.iter_mut().zip(deviations) {
+            m.deviation = d;
+        }
+        s
+    }
 }
 
 fn fnv(s: &str) -> u64 {
@@ -498,6 +504,24 @@ mod tests {
         let c0 = prof.call_cost(&k("m0")).unwrap();
         let c2 = prof.call_cost(&k("m2")).unwrap();
         assert!((c2 / c0 - 12.0).abs() < 1e-6, "ratio {}", c2 / c0);
+    }
+
+    #[test]
+    fn seeded_pool_overrides_deviations_and_token_process() {
+        let a = SimSpec::small_pool_seeded(7, &[0.4, 0.1]);
+        assert_eq!(a.seed, 7);
+        assert!((a.models[0].deviation - 0.4).abs() < 1e-12);
+        assert!((a.models[1].deviation - 0.1).abs() < 1e-12);
+        // third model keeps the small_pool default
+        assert_eq!(a.models[2].deviation,
+                   SimSpec::small_pool().models[2].deviation);
+        // a different seed changes the oracle process
+        let b1 = SimBackend::new(SimSpec::small_pool_seeded(7, &[]));
+        let b2 = SimBackend::new(SimSpec::small_pool_seeded(8, &[]));
+        let diverges = (0..64).any(|t| {
+            b1.oracle_next(4 + t) != b2.oracle_next(4 + t)
+        });
+        assert!(diverges, "seed must drive the oracle process");
     }
 
     #[test]

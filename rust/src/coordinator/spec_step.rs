@@ -50,6 +50,14 @@ use crate::rng::{argmax, softmax_into, softmax_prob_at, Rng};
 use crate::state::StateManager;
 
 /// Everything a step needs, borrowed from the engine.
+///
+/// `rngs` is one RNG **per slot** (length >= batch): probabilistic
+/// accept/bonus draws for slot `b` come exclusively from `rngs[b]`, so a
+/// slot's sampling stream depends only on its own seed and its own
+/// committed prefix — never on which other slots share the batch or how
+/// the tick's chain groups are partitioned. This is what makes grouped
+/// execution token-identical to isolated batch=1 runs (the
+/// `group_parity` differential harness).
 pub struct StepCtx<'a> {
     pub exec: &'a dyn Backend,
     pub prof: &'a mut Profiler,
@@ -58,7 +66,7 @@ pub struct StepCtx<'a> {
     pub batch: usize,
     pub vocab: usize,
     pub rule: AcceptRule,
-    pub rng: &'a mut Rng,
+    pub rngs: &'a mut [Rng],
     pub scratch: &'a mut StepScratch,
 }
 
@@ -152,7 +160,9 @@ impl StepScratch {
 }
 
 /// Per-slot view the engine passes in: committed token sequence of every
-/// *active* slot (None = idle slot).
+/// slot the step should process (None = idle slot, or a slot belonging
+/// to a different chain group this tick — either way the step leaves its
+/// masks and sampling streams untouched).
 pub type SlotSeqs<'a> = Vec<Option<&'a [i32]>>;
 
 /// Structured guard (replaces the old `c.last().unwrap()` panic): every
@@ -433,7 +443,7 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
                 } else {
                     &s.p_prev[(b * w1 + k) * v..(b * w1 + k + 1) * v]
                 };
-                if accept_one(ctx.rule, ctx.rng, cand, p, Some(q)) {
+                if accept_one(ctx.rule, &mut ctx.rngs[b], cand, p, Some(q)) {
                     k += 1;
                 } else {
                     break;
@@ -464,7 +474,7 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
                 } else {
                     None
                 };
-                bonus_token(ctx.rule, ctx.rng, p, q, rejected,
+                bonus_token(ctx.rule, &mut ctx.rngs[b], p, q, rejected,
                             &mut s.probs, &mut s.resid)
             };
             s.outcome.accepted_flat[(j - 1) * batch + b] = k;
@@ -553,7 +563,7 @@ fn run_tmo_step(ctx: &mut StepCtx, target: &str, slots: &SlotSeqs, pad: i32)
             AcceptRule::Greedy => argmax(row) as i32,
             AcceptRule::Probabilistic { .. } => {
                 softmax_into(row, &mut s.probs);
-                ctx.rng.categorical(&s.probs) as i32
+                ctx.rngs[b].categorical(&s.probs) as i32
             }
         };
         let out = &mut s.outcome.appended[b];

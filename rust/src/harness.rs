@@ -181,6 +181,7 @@ fn run_offline_inner(source: RouterSource, mode: Mode, batch: usize,
                 arrival: Instant::now(),
                 class: crate::admission::SloClass::Standard,
                 slo_ms: None,
+                sample_seed: None,
             });
         }
     };

@@ -220,12 +220,45 @@ pub fn row(label: &str, s: &Summary, eaf: Option<f64>) -> String {
 
 /// Render the per-class breakdown (one row per class present).
 pub fn class_rows(s: &Summary) -> Vec<String> {
+    class_rows_with_chains(s, &[])
+}
+
+/// Engine-side per-class chain assignment (DESIGN.md §9): which chain the
+/// grouped tick loop ran for a class's group, and for how many
+/// group-steps. Built by `ChainRouter::class_chain_rows` from the
+/// profiler's (group, chain) attribution — not derivable from finished
+/// records, which is why it rides alongside the `Summary` instead of
+/// inside it.
+#[derive(Debug, Clone)]
+pub struct ClassChainRow {
+    pub class: SloClass,
+    /// Chain label (`Chain::label()` format).
+    pub chain: String,
+    /// Group-steps this (class, chain) pair executed.
+    pub steps: u64,
+    /// Tokens the pair committed.
+    pub tokens: u64,
+}
+
+/// `class_rows` with the per-class chain assignment appended: each class
+/// row gains a `chain=<label>` column showing the *dominant* chain (most
+/// group-steps) that served it. Classes without an assignment (e.g. a
+/// class that only ever shed) render unchanged.
+pub fn class_rows_with_chains(s: &Summary, chains: &[ClassChainRow])
+                              -> Vec<String> {
     s.per_class.iter().map(|c| {
-        format!(
+        let mut row = format!(
             "  class={:<12} req={:<4} shed={:<4} SLO={:>5.1}%  \
              queue-delay(ms) p50={:>8.1} p95={:>8.1}  lat p95={:>8.1}",
             c.class.name(), c.requests, c.shed, c.slo_attainment * 100.0,
-            c.queue_delay_ms_p50, c.queue_delay_ms_p95, c.latency_ms_p95)
+            c.queue_delay_ms_p50, c.queue_delay_ms_p95, c.latency_ms_p95);
+        if let Some(dom) = chains.iter()
+            .filter(|r| r.class == c.class)
+            .max_by_key(|r| r.steps) {
+            row.push_str(&format!("  chain={} ({} steps)",
+                                  dom.chain, dom.steps));
+        }
+        row
     }).collect()
 }
 
@@ -380,6 +413,33 @@ mod tests {
         assert!((i.slo_attainment - 0.5).abs() < 1e-9);
         // the headline attainment must agree with the per-class view
         assert!((s.slo_attainment - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_rows_append_dominant_chain_assignment() {
+        let t = Instant::now();
+        let fs = vec![
+            fin_class(t, 50, 800, 4, SloClass::Interactive, 1_000.0),
+            fin_class(t, 50, 5000, 4, SloClass::Batch, 60_000.0),
+        ];
+        let s = summarize(&fs, 1e9);
+        let chains = vec![
+            ClassChainRow { class: SloClass::Interactive,
+                            chain: "[m2]".into(), steps: 7, tokens: 7 },
+            ClassChainRow { class: SloClass::Interactive,
+                            chain: "[m0>m2]w4".into(), steps: 3, tokens: 9 },
+        ];
+        let rows = class_rows_with_chains(&s, &chains);
+        assert_eq!(rows.len(), 2);
+        let interactive = rows.iter()
+            .find(|r| r.contains("interactive")).unwrap();
+        assert!(interactive.contains("chain=[m2] (7 steps)"),
+                "dominant chain missing: {interactive}");
+        // batch has no assignment: row renders without the column
+        let batch = rows.iter().find(|r| r.contains("batch")).unwrap();
+        assert!(!batch.contains("chain="), "{batch}");
+        // the plain renderer is the empty-assignment case
+        assert_eq!(class_rows(&s), class_rows_with_chains(&s, &[]));
     }
 
     #[test]

@@ -107,6 +107,17 @@ impl Rng {
     }
 }
 
+/// SplitMix64 finalizer: a cheap, well-mixed 64→64 hash. Used wherever a
+/// derived seed is needed (per-request sampling streams, the sim models'
+/// deterministic token process) so correlated inputs (sequential ids,
+/// neighbouring tokens) still produce decorrelated streams.
+pub fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Softmax over logits, returning a fresh probability vector.
 pub fn softmax(logits: &[f32]) -> Vec<f32> {
     let mut out = Vec::with_capacity(logits.len());
@@ -250,6 +261,17 @@ mod tests {
         softmax_into(&logits[..3], &mut buf);
         assert_eq!(buf.len(), 3);
         assert!((buf.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn splitmix_decorrelates_sequential_inputs() {
+        // sequential ids must not map to nearby hashes: every pair of
+        // consecutive outputs differs in many bits
+        for z in 0..100u64 {
+            let d = (splitmix(z) ^ splitmix(z + 1)).count_ones();
+            assert!(d >= 10, "weak mixing at {z}: {d} differing bits");
+        }
+        assert_eq!(splitmix(42), splitmix(42));
     }
 
     #[test]

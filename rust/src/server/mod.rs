@@ -3,14 +3,16 @@
 //!
 //! Protocol (one JSON object per line):
 //!   request:  {"prompt": [1, 70, ...], "max_new": 32, "dataset": "gsm8k",
-//!              "slo_class": "interactive", "slo_ms": 2000.0}
+//!              "slo_class": "interactive", "slo_ms": 2000.0,
+//!              "sample_seed": 7}
 //!   response: {"id": 7, "tokens": [...], "ttft_ms": 12.3, "tpot_ms": 4.5,
 //!              "latency_ms": 200.1, "eos": false, "class": "interactive"}
 //!   shed:     {"id": 9, "rejected": "doomed", "class": "interactive"}
 //!
-//! `slo_class` and `slo_ms` are optional (default: standard class, class
-//! target). A request the admission controller sheds gets a structured
-//! `rejected` response instead of a hang — clients can retry elsewhere.
+//! `slo_class`, `slo_ms` and `sample_seed` are optional (default:
+//! standard class, class target, engine-derived sampling stream). A
+//! request the admission controller sheds gets a structured `rejected`
+//! response instead of a hang — clients can retry elsewhere.
 //!
 //! The engine thread multiplexes: it drains the submission channel, runs
 //! `tick()`, and routes finished/shed records back to per-request
@@ -154,6 +156,7 @@ pub fn request_sync(tx: &mpsc::Sender<EngineMsg>, dataset: &str,
         arrival: Instant::now(),
         class: SloClass::Standard,
         slo_ms: None,
+        sample_seed: None,
     })?;
     match reply {
         EngineReply::Done(f) => Ok(f),
@@ -224,6 +227,22 @@ fn serve_one(tx: &mpsc::Sender<EngineMsg>, line: &str) -> Result<Value> {
             bail!("slo_ms must be a finite non-negative number");
         }
     }
+    let sample_seed = v.opt("sample_seed")
+        .map(|s| s.as_f64()).transpose()?
+        .map(|s| {
+            // the wire carries f64: only integers below 2^53 round-trip
+            // exactly. 2^53 itself is excluded because 2^53+1 rounds TO
+            // it during parsing — accepting it would let a silently
+            // rounded seed through, breaking the very reproducibility
+            // contract this field exists for.
+            if !s.is_finite() || s < 0.0 || s.fract() != 0.0
+                || s > 9_007_199_254_740_991.0 {
+                bail!("sample_seed must be a non-negative integer \
+                       < 2^53");
+            }
+            Ok(s as u64)
+        })
+        .transpose()?;
     let reply = request_reply(tx, Request {
         id: 0,
         dataset,
@@ -232,6 +251,7 @@ fn serve_one(tx: &mpsc::Sender<EngineMsg>, line: &str) -> Result<Value> {
         arrival: Instant::now(),
         class,
         slo_ms,
+        sample_seed,
     })?;
     Ok(match reply {
         EngineReply::Done(f) => finished_to_json(&f),

@@ -15,7 +15,7 @@
 //!      whole batch agrees (Eq. 9), performed opportunistically.
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::state::kv_cache::{KvDims, StateBuf};
 use crate::state::mask::CacheMask;
@@ -135,6 +135,30 @@ impl StateManager {
         Ok(total)
     }
 
+    /// Invariant check for the randomized suites (and any caller that
+    /// wants a cheap end-of-tick audit): for every model, an occupied
+    /// slot's valid frontier must not exceed the committed frontier
+    /// (`frontiers[b] = Some(C-1)`), and a free slot (`None`) must be
+    /// fully cleared. A violation means a rollback/clamp leak — a model
+    /// attending to tokens the engine never committed.
+    pub fn check_frontiers(&self, frontiers: &[Option<usize>]) -> Result<()> {
+        for st in self.states.values() {
+            for (b, f) in frontiers.iter().enumerate() {
+                let v = st.mask.valid_len(b);
+                match f {
+                    Some(f) if v > *f => bail!(
+                        "{}: slot {b} valid frontier {v} exceeds committed \
+                         frontier {f} (rollback leak)", st.model),
+                    None if v != 0 => bail!(
+                        "{}: freed slot {b} retains valid length {v}",
+                        st.model),
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Diagnostics: (model, per-slot valid, per-slot stale).
     pub fn report(&self) -> Vec<(String, Vec<usize>, Vec<usize>)> {
         self.states.values().map(|st| {
@@ -202,6 +226,22 @@ mod tests {
         let mut sm2 = sm;
         let again = sm2.fix_caches().unwrap();
         assert_eq!(again, 0);
+    }
+
+    #[test]
+    fn check_frontiers_catches_leaks_and_stale_free_slots() {
+        let mut sm = StateManager::new();
+        sm.ensure("m0", dims(), SLEN).mask.append_valid(0, 5);
+        // valid 5 against committed frontier 5: fine
+        sm.check_frontiers(&[Some(5), None]).unwrap();
+        // committed frontier rolled under the model's valid: leak
+        let err = sm.check_frontiers(&[Some(4), None]).unwrap_err();
+        assert!(err.to_string().contains("rollback leak"), "{err}");
+        // slot reported free while the model still holds state
+        let err = sm.check_frontiers(&[None, None]).unwrap_err();
+        assert!(err.to_string().contains("retains valid"), "{err}");
+        sm.clear_slot(0);
+        sm.check_frontiers(&[None, None]).unwrap();
     }
 
     #[test]

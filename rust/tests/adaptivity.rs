@@ -24,6 +24,7 @@ fn scheduler_warms_up_and_converges() {
             arrival: Instant::now(),
             class: SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         });
     }
     router.run_until_idle(20_000).unwrap();

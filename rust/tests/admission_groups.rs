@@ -1,0 +1,158 @@
+//! Admission ↔ chain-group interaction (ISSUE 3 satellite): the
+//! downgrade/shed decisions made at submit time must be reflected in the
+//! grouped tick loop's attribution — a downgraded request lands in its
+//! *new* class's group on the next tick, sheds never generate group
+//! steps, and `metrics::class_rows` / `class_chain_rows` attribute both
+//! correctly.
+use std::sync::Arc;
+use std::time::Instant;
+
+use specrouter::admission::{SloClass, SubmitOutcome};
+use specrouter::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
+use specrouter::coordinator::{ChainRouter, Request, SimBackend, SimSpec};
+use specrouter::metrics;
+use specrouter::workload::DatasetGen;
+
+fn router(batch: usize) -> ChainRouter {
+    // eos_prob 0: every request runs to max_new, so group-step presence
+    // is deterministic (no request can die on its admission token)
+    let mut spec = SimSpec::small_pool();
+    spec.eos_prob = 0.0;
+    let backend = Arc::new(SimBackend::new(spec));
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = batch;
+    cfg.window = 4;
+    cfg.target = "m2".into();
+    // fixed chain: the test pins group→chain attribution, not selection
+    cfg.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    cfg.rule = AcceptRule::Greedy;
+    cfg.group_policy = GroupPolicy::ByClass;
+    ChainRouter::with_backend(cfg, backend).expect("router")
+}
+
+fn req(class: SloClass, max_new: usize, seed: u64) -> Request {
+    use specrouter::coordinator::Backend;
+    let backend = SimBackend::new(SimSpec::small_pool());
+    let spec = backend.manifest().datasets["gsm8k"].clone();
+    let mut gen = DatasetGen::new(spec, seed);
+    let (prompt, _) = gen.sample();
+    Request {
+        id: 0,
+        dataset: "gsm8k".into(),
+        prompt,
+        max_new,
+        arrival: Instant::now(),
+        class,
+        slo_ms: None,
+        sample_seed: None,
+    }
+}
+
+#[test]
+fn downgraded_request_lands_in_its_new_class_group() {
+    let mut router = router(2);
+    // 1 s/token estimate: a 40-token standard request (~40s) blows the
+    // 30s standard target but fits batch's 120s → Downgrade(Batch)
+    router.batcher.admission.observe_tpot(1.0);
+    let (id, outcome) = router.submit_detailed(req(SloClass::Standard,
+                                                   40, 5));
+    assert_eq!(outcome, SubmitOutcome::Downgraded {
+        from: SloClass::Standard,
+        to: SloClass::Batch,
+    });
+    router.run_until_idle(10_000).expect("run");
+    let f = router.finished.iter().find(|f| f.id == id).expect("finished");
+    assert_eq!(f.class, SloClass::Batch,
+               "finished record must carry the downgraded class");
+    // group attribution: every step ran under the BATCH group
+    let table = router.prof.group_table();
+    assert!(table.iter().any(|(g, _, steps, _)| g == "batch" && *steps > 0),
+            "no batch-group steps recorded: {table:?}");
+    assert!(!table.iter().any(|(g, _, _, _)| g == "standard"),
+            "downgraded request stepped under its OLD class: {table:?}");
+    // and class_rows render it under batch, with the chain assignment
+    let s = metrics::summarize(&router.finished, 1e9);
+    let rows = metrics::class_rows_with_chains(&s,
+                                               &router.class_chain_rows());
+    assert_eq!(rows.len(), 1);
+    assert!(rows[0].contains("batch") && rows[0].contains("chain=[m0>m2]w4"),
+            "bad class row: {}", rows[0]);
+}
+
+#[test]
+fn shed_requests_generate_no_group_steps_and_count_in_class_rows() {
+    let mut router = router(2);
+    router.batcher.admission.observe_tpot(1.0);
+    // interactive policy is Reject: a 40-token request against the 8s
+    // target is doomed at submit
+    let (_, outcome) = router.submit_detailed(req(SloClass::Interactive,
+                                                  40, 7));
+    assert_eq!(outcome,
+               SubmitOutcome::Shed(
+                   specrouter::admission::ShedReason::Doomed));
+    // a feasible standard request keeps the engine honest alongside
+    let (id, outcome) = router.submit_detailed(req(SloClass::Standard,
+                                                   6, 9));
+    assert!(!outcome.is_shed());
+    router.run_until_idle(10_000).expect("run");
+    assert!(router.finished.iter().any(|f| f.id == id));
+    let shed = router.take_shed();
+    assert_eq!(shed.len(), 1);
+    assert_eq!(shed[0].class, SloClass::Interactive);
+    // the shed request never reached a slot: no interactive group steps
+    let table = router.prof.group_table();
+    assert!(!table.iter().any(|(g, _, _, _)| g.starts_with("interactive")),
+            "shed request produced group steps: {table:?}");
+    // class rows: interactive appears only through its shed count
+    let s = metrics::summarize_with_shed(&router.finished, 1e9, &shed);
+    let i = s.class_summary(SloClass::Interactive).expect("interactive row");
+    assert_eq!((i.requests, i.shed), (0, 1));
+    assert_eq!(i.slo_attainment, 0.0);
+    let rows = metrics::class_rows_with_chains(&s,
+                                               &router.class_chain_rows());
+    let irow = rows.iter().find(|r| r.contains("interactive")).unwrap();
+    assert!(!irow.contains("chain="),
+            "shed-only class must have no chain assignment: {irow}");
+}
+
+#[test]
+fn mixed_classes_step_in_separate_groups_with_complete_attribution() {
+    let mut router = router(4);
+    let mut ids = Vec::new();
+    for (class, seed) in [(SloClass::Interactive, 11),
+                          (SloClass::Interactive, 12),
+                          (SloClass::Standard, 13),
+                          (SloClass::Batch, 14)] {
+        let (id, outcome) = router.submit_detailed(req(class, 8, seed));
+        assert!(!outcome.is_shed());
+        ids.push((id, class));
+    }
+    router.run_until_idle(10_000).expect("run");
+    for (id, class) in &ids {
+        let f = router.finished.iter().find(|f| f.id == *id)
+            .expect("finished");
+        assert_eq!(f.class, *class);
+        assert!(!f.tokens.is_empty());
+    }
+    let table = router.prof.group_table();
+    for g in ["interactive", "standard", "batch"] {
+        assert!(table.iter().any(|(gr, _, steps, _)| gr == g && *steps > 0),
+                "class {g} never stepped as its own group: {table:?}");
+    }
+    // attribution is complete: per-group tokens sum to the profiler's
+    // committed-token total (nothing double- or un-attributed)
+    let group_tokens: u64 = table.iter().map(|(_, _, _, t)| *t).sum();
+    assert_eq!(group_tokens, router.prof.committed_tokens);
+    // per-class chain rows cover all three classes under the fixed chain
+    let rows = router.class_chain_rows();
+    for class in [SloClass::Interactive, SloClass::Standard,
+                  SloClass::Batch] {
+        let r = rows.iter().find(|r| r.class == class)
+            .unwrap_or_else(|| panic!("no chain row for {class}"));
+        assert_eq!(r.chain, "[m0>m2]w4");
+        assert!(r.steps > 0);
+    }
+}

@@ -29,6 +29,7 @@ fn continuous_batching_completes_all_requests() {
             arrival: Instant::now(),
             class: SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         }).unwrap();
         want.push((id, prompt.len()));
     }
@@ -65,6 +66,7 @@ fn poisson_trace_metrics_are_sane() {
             arrival: Instant::now(),
             class: SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         });
     }
     router.run_until_idle(10_000).unwrap();
@@ -111,6 +113,7 @@ fn rejects_oversized_prompts_gracefully() {
         arrival: Instant::now(),
         class: SloClass::Standard,
         slo_ms: None,
+        sample_seed: None,
     }).unwrap();
     router.run_until_idle(100).unwrap();
     let f = router.finished.iter().find(|f| f.id == id).unwrap();

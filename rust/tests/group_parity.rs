@@ -1,0 +1,191 @@
+//! ISSUE 3 headline test: randomized differential parity of grouped
+//! execution.
+//!
+//! On the deterministic SimBackend, a router running with every slot in
+//! its own chain group (`GroupPolicy::PerSlot`) must commit *exactly*
+//! the same token sequences as running each request alone at batch=1 —
+//! across random pool seeds/deviations and under both the greedy and the
+//! probabilistic acceptance rule. Two properties make this hold, and
+//! this suite is their regression net:
+//!
+//! * slot isolation: a group's step touches only its members' masks,
+//!   caches and commits (other lanes are `None`, like idle slots);
+//! * per-request sampling streams: probabilistic accept/bonus draws come
+//!   from a per-slot RNG seeded by `Request::sample_seed`, never from a
+//!   batch-shared stream whose interleaving depends on co-tenants.
+use std::sync::Arc;
+use std::time::Instant;
+
+use specrouter::admission::SloClass;
+use specrouter::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
+use specrouter::coordinator::{ChainRouter, Request, SimBackend, SimSpec};
+use specrouter::rng::Rng;
+use specrouter::workload::DatasetGen;
+
+/// Seed count: `SPEC_SIM_SEEDS` overrides (CI matrix); the default meets
+/// the ISSUE's >= 20 seeds acceptance bar across the two rules.
+fn seed_count(default: usize) -> usize {
+    std::env::var("SPEC_SIM_SEEDS").ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn backend_for(seed: u64) -> Arc<SimBackend> {
+    let mut rng = Rng::new(0xD1FF ^ seed.wrapping_mul(7919));
+    let dev = [0.05 + rng.f64() * 0.40, 0.02 + rng.f64() * 0.25,
+               rng.f64() * 0.15];
+    Arc::new(SimBackend::new(SimSpec::small_pool_seeded(
+        0x9A11 ^ seed.wrapping_mul(31), &dev)))
+}
+
+fn chain_for(seed: u64) -> Mode {
+    if seed % 2 == 0 {
+        Mode::Fixed { chain: vec!["m0".into(), "m2".into()], window: 4 }
+    } else {
+        Mode::Fixed { chain: vec!["m0".into(), "m1".into(), "m2".into()],
+                      window: 8 }
+    }
+}
+
+fn cfg_for(batch: usize, mode: Mode, rule: AcceptRule,
+           policy: GroupPolicy) -> EngineConfig {
+    let mut c = EngineConfig::new("sim://");
+    c.batch = batch;
+    c.window = 4;
+    c.target = "m2".into();
+    c.mode = mode;
+    c.rule = rule;
+    c.group_policy = policy;
+    c.explore_eps = 0.0;
+    c
+}
+
+fn req(i: usize, dataset: &str, prompt: Vec<i32>, max_new: usize,
+       class: SloClass) -> Request {
+    Request {
+        id: 0,
+        dataset: dataset.into(),
+        prompt,
+        max_new,
+        arrival: Instant::now(),
+        class,
+        slo_ms: None,
+        // explicit per-request seed: both runs must draw the same stream
+        sample_seed: Some(0xABCD + i as u64),
+    }
+}
+
+fn prompts_for(backend: &SimBackend, seed: u64, n: usize)
+               -> Vec<(Vec<i32>, usize)> {
+    use specrouter::coordinator::Backend;
+    let spec = backend.manifest().datasets["gsm8k"].clone();
+    let mut gen = DatasetGen::new(spec, 1000 + seed);
+    let mut rng = Rng::new(2000 + seed);
+    (0..n).map(|_| {
+        let (p, _) = gen.sample();
+        (p, rng.range(4, 14))
+    }).collect()
+}
+
+/// Grouped run: batch 4, every slot its own group; returns tokens in
+/// submission order.
+fn run_grouped(backend: Arc<SimBackend>, mode: Mode, rule: AcceptRule,
+               prompts: &[(Vec<i32>, usize)]) -> Vec<Vec<i32>> {
+    let cfg = cfg_for(4, mode, rule, GroupPolicy::PerSlot);
+    let mut router = ChainRouter::with_backend(cfg, backend)
+        .expect("grouped router");
+    let mut ids = Vec::new();
+    for (i, (p, m)) in prompts.iter().enumerate() {
+        let id = router.submit(req(i, "gsm8k", p.clone(), *m,
+                                   SloClass::Standard))
+            .expect("submit");
+        ids.push(id);
+    }
+    router.run_until_idle(100_000).expect("grouped run");
+    ids.iter().map(|id| {
+        router.finished.iter().find(|f| f.id == *id)
+            .expect("finished").tokens.clone()
+    }).collect()
+}
+
+/// Isolated reference: each request alone in a fresh batch=1 router.
+fn run_isolated(backend: &Arc<SimBackend>, mode: Mode, rule: AcceptRule,
+                prompts: &[(Vec<i32>, usize)]) -> Vec<Vec<i32>> {
+    prompts.iter().enumerate().map(|(i, (p, m))| {
+        let cfg = cfg_for(1, mode.clone(), rule, GroupPolicy::PerSlot);
+        let mut router = ChainRouter::with_backend(cfg, backend.clone())
+            .expect("isolated router");
+        let id = router.submit(req(i, "gsm8k", p.clone(), *m,
+                                   SloClass::Standard))
+            .expect("submit");
+        router.run_until_idle(100_000).expect("isolated run");
+        router.finished.iter().find(|f| f.id == id)
+            .expect("finished").tokens.clone()
+    }).collect()
+}
+
+fn check_parity(rule_of: impl Fn(u64) -> AcceptRule) {
+    for seed in 0..seed_count(20) as u64 {
+        let backend = backend_for(seed);
+        let mode = chain_for(seed);
+        let rule = rule_of(seed);
+        let prompts = prompts_for(&backend, seed, 5);
+        let grouped = run_grouped(backend.clone(), mode.clone(), rule,
+                                  &prompts);
+        let isolated = run_isolated(&backend, mode, rule, &prompts);
+        for (i, (g, iso)) in grouped.iter().zip(&isolated).enumerate() {
+            assert_eq!(g, iso,
+                       "seed {seed}, request {i}: grouped execution \
+                        diverged from isolated batch=1 ({rule:?})");
+        }
+    }
+}
+
+#[test]
+fn grouped_matches_isolated_greedy() {
+    check_parity(|_| AcceptRule::Greedy);
+}
+
+#[test]
+fn grouped_matches_isolated_probabilistic() {
+    check_parity(|seed| AcceptRule::Probabilistic { seed: 77 ^ seed });
+}
+
+#[test]
+fn grouped_adaptive_by_class_matches_isolated_tmo_greedy() {
+    // mixed SLO classes under ByClass grouping: the adaptive scheduler
+    // may route each class's group through a different chain, but greedy
+    // output must still be exactly the target's autoregressive
+    // continuation — i.e. identical to an isolated batch=1 TMO run
+    for seed in 0..seed_count(6) as u64 {
+        let backend = backend_for(seed);
+        let prompts = prompts_for(&backend, 50 + seed, 6);
+        let classes = [SloClass::Interactive, SloClass::Standard,
+                       SloClass::Batch];
+
+        let cfg = cfg_for(4, Mode::Adaptive, AcceptRule::Greedy,
+                          GroupPolicy::ByClass);
+        let mut router = ChainRouter::with_backend(cfg, backend.clone())
+            .expect("grouped router");
+        let mut ids = Vec::new();
+        for (i, (p, m)) in prompts.iter().enumerate() {
+            let id = router.submit(req(i, "gsm8k", p.clone(), *m,
+                                       classes[i % classes.len()]))
+                .expect("submit");
+            ids.push(id);
+        }
+        router.run_until_idle(100_000).expect("grouped adaptive run");
+        let grouped: Vec<Vec<i32>> = ids.iter().map(|id| {
+            router.finished.iter().find(|f| f.id == *id)
+                .expect("finished").tokens.clone()
+        }).collect();
+
+        let isolated = run_isolated(&backend, Mode::Tmo,
+                                    AcceptRule::Greedy, &prompts);
+        for (i, (g, iso)) in grouped.iter().zip(&isolated).enumerate() {
+            assert_eq!(g, iso,
+                       "seed {seed}, request {i}: grouped adaptive \
+                        greedy output diverged from TMO");
+        }
+    }
+}

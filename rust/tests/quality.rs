@@ -81,6 +81,7 @@ fn batched_spec_matches_tmo_greedy() {
             arrival: std::time::Instant::now(),
             class: specrouter::admission::SloClass::Standard,
             slo_ms: None,
+            sample_seed: None,
         }).unwrap();
         ids.push(id);
     }

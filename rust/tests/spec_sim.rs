@@ -37,7 +37,7 @@ struct Fixture {
     states: StateManager,
     prof: Profiler,
     sim: SimilarityTracker,
-    rng: Rng,
+    rngs: Vec<Rng>,
     scratch: StepScratch,
     batch: usize,
     vocab: usize,
@@ -53,7 +53,7 @@ impl Fixture {
             states,
             prof: Profiler::new(0.2),
             sim: SimilarityTracker::new(0.2),
-            rng: Rng::new(1),
+            rngs: (0..batch).map(|b| Rng::new(1 + b as u64)).collect(),
             scratch: StepScratch::new(),
             batch,
             vocab,
@@ -69,10 +69,18 @@ impl Fixture {
             batch: self.batch,
             vocab: self.vocab,
             rule: AcceptRule::Greedy,
-            rng: &mut self.rng,
+            rngs: &mut self.rngs,
             scratch: &mut self.scratch,
         }
     }
+}
+
+/// Seed count for the randomized sweeps: `SPEC_SIM_SEEDS` overrides the
+/// default (the CI matrix job sets it).
+fn seed_count(default: usize) -> usize {
+    std::env::var("SPEC_SIM_SEEDS").ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
 }
 
 #[test]
@@ -210,6 +218,60 @@ fn spec_step_commits_target_greedy_tokens_and_syncs_masks() {
     // the drafter never leads the target's frontier
     assert!(fx.states.get("m0").unwrap().mask.valid_len(0)
             <= committed.len() - 1);
+}
+
+#[test]
+fn randomized_steps_commit_target_greedy_across_seeds() {
+    // SPEC_SIM_SEEDS-scaled sweep: random pool deviations and committed
+    // prefixes; every step's commit must be the target's own greedy
+    // continuation (the Output Quality invariant, randomized)
+    for seed in 0..seed_count(4) as u64 {
+        let mut rng = Rng::new(0x51EE * (seed + 1));
+        let dev = [rng.f64() * 0.5, rng.f64() * 0.3, 0.0];
+        let spec = SimSpec::small_pool_seeded(0xACE ^ seed, &dev);
+        let mut fx = Fixture::new(spec, 1, &["m0", "m2"]);
+        let chain = Chain {
+            models: vec!["m0".into(), "m2".into()],
+            window: if seed % 2 == 0 { 4 } else { 8 },
+        };
+        let mut committed = vec![1i32, 4 + rng.below(500) as i32];
+        for _ in 0..6 {
+            {
+                let seqs: SlotSeqs = vec![Some(&committed)];
+                let mut ctx = fx.ctx();
+                run_spec_step(&mut ctx, &chain, &seqs, 0).unwrap();
+            }
+            let appended = fx.scratch.outcome.appended[0].clone();
+            assert!(!appended.is_empty());
+            // target-greedy reference from the Markov property: logits
+            // depend only on the previous token
+            let man = Backend::manifest(&fx.backend).clone();
+            let mut prev = *committed.last().unwrap();
+            for (i, &t) in appended.iter().enumerate() {
+                let meta = &man.models["m2"];
+                let dims = KvDims {
+                    layers: meta.layers,
+                    batch: 1,
+                    heads: meta.heads,
+                    seq: man.seq,
+                    head_dim: meta.head_dim,
+                };
+                let mut st = StateBuf::new(dims, man.state_len(meta, 1));
+                let mut prof = Profiler::new(0.2);
+                let mut out = Vec::new();
+                fx.backend.decode(&mut prof, "m2", 1, &[prev], &mut st,
+                                  &[0], &mut out).unwrap();
+                let want = argmax(&out[..man.vocab]) as i32;
+                assert_eq!(t, want,
+                           "seed {seed}: diverged at step token {i}");
+                prev = t;
+            }
+            committed.extend(&appended);
+            if committed.len() > 80 {
+                break;
+            }
+        }
+    }
 }
 
 #[test]

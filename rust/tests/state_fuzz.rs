@@ -1,0 +1,174 @@
+//! Randomized state-invariant fuzz (ISSUE 3): after EVERY tick — under
+//! random pool deviation rates, adaptive chain churn, mixed SLO classes,
+//! heterogeneous group policies and mid-stream completions — the
+//! engine's KV bookkeeping must satisfy:
+//!
+//! * every model's valid (mask) frontier on an occupied slot is <= the
+//!   slot's committed frontier C-1, and freed slots are fully cleared
+//!   (`StateManager::check_frontiers` — a violation is a rollback leak
+//!   the unit tests cannot reach);
+//! * every mask holds the prefix invariant (`debug_validate`);
+//! * physical reclamation converges: calling `fix_caches()` twice in a
+//!   row leaves nothing to reclaim the second time.
+//!
+//! Plus the regression for the `tick()` frontier-underflow guard: a slot
+//! with an empty committed sequence must produce a structured error, not
+//! a usize wrap / slice panic.
+use std::sync::Arc;
+use std::time::Instant;
+
+use specrouter::admission::SloClass;
+use specrouter::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
+use specrouter::coordinator::{ChainRouter, Request, SimBackend, SimSpec};
+use specrouter::rng::Rng;
+use specrouter::workload::DatasetGen;
+
+fn seed_count(default: usize) -> usize {
+    std::env::var("SPEC_SIM_SEEDS").ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn policy_for(seed: u64) -> GroupPolicy {
+    match seed % 4 {
+        0 => GroupPolicy::ByClass,
+        1 => GroupPolicy::ByClassUrgency { urgent_s: 0.25 },
+        2 => GroupPolicy::PerSlot,
+        _ => GroupPolicy::Single,
+    }
+}
+
+fn check_invariants(router: &ChainRouter, seed: u64, tick: usize) {
+    // committed frontiers per slot (None = free)
+    let frontiers: Vec<Option<usize>> = router.batcher.slots.iter()
+        .map(|s| s.as_ref().map(|s| s.committed.len().saturating_sub(1)))
+        .collect();
+    router.states.check_frontiers(&frontiers).unwrap_or_else(|e| {
+        panic!("seed {seed} tick {tick}: {e:#}");
+    });
+    let models: Vec<String> = router.states.models()
+        .map(str::to_string).collect();
+    for m in &models {
+        router.states.get(m).unwrap().mask.debug_validate();
+    }
+}
+
+#[test]
+fn random_traffic_preserves_state_invariants_every_tick() {
+    for seed in 0..seed_count(6) as u64 {
+        let mut rng = Rng::new(0xF022 + seed);
+        let dev = [rng.f64() * 0.5, rng.f64() * 0.35, rng.f64() * 0.2];
+        let backend = Arc::new(SimBackend::new(
+            SimSpec::small_pool_seeded(0xBEEF ^ seed.wrapping_mul(131),
+                                       &dev)));
+        let mut cfg = EngineConfig::new("sim://");
+        cfg.batch = 4;
+        cfg.window = 4;
+        cfg.target = "m2".into();
+        cfg.mode = Mode::Adaptive;
+        // aggressive churn: replan every step, explore half the time
+        cfg.replan_every = 1;
+        cfg.explore_eps = 0.5;
+        cfg.group_policy = policy_for(seed);
+        cfg.rule = if seed % 2 == 0 {
+            AcceptRule::Greedy
+        } else {
+            AcceptRule::Probabilistic { seed: 3 + seed }
+        };
+        let mut router = ChainRouter::with_backend(cfg, backend.clone())
+            .expect("router");
+
+        use specrouter::coordinator::Backend;
+        let datasets: Vec<String> = backend.manifest().datasets.keys()
+            .cloned().collect();
+        let mut gens: Vec<DatasetGen> = datasets.iter().enumerate()
+            .map(|(i, d)| DatasetGen::new(
+                backend.manifest().datasets[d].clone(),
+                seed * 17 + i as u64))
+            .collect();
+        let n_total = 12usize;
+        let mut submitted = 0usize;
+        let classes = [SloClass::Interactive, SloClass::Standard,
+                       SloClass::Batch];
+        let mut submit_one = |router: &mut ChainRouter, rng: &mut Rng,
+                              i: usize| {
+            let di = rng.below(datasets.len());
+            let (prompt, _) = gens[di].sample();
+            // tiny max_new forces mid-stream completions + slot churn
+            router.submit(Request {
+                id: 0,
+                dataset: datasets[di].clone(),
+                prompt,
+                max_new: rng.range(2, 10),
+                arrival: Instant::now(),
+                class: classes[rng.below(3)],
+                slo_ms: None,
+                sample_seed: Some(seed * 1000 + i as u64),
+            });
+        };
+        for i in 0..4 {
+            submit_one(&mut router, &mut rng, i);
+            submitted += 1;
+        }
+        let mut ticks = 0usize;
+        loop {
+            if submitted < n_total && ticks % 3 == 0 {
+                submit_one(&mut router, &mut rng, submitted);
+                submitted += 1;
+            }
+            let stepped = router.tick().unwrap_or_else(|e| {
+                panic!("seed {seed} tick {ticks}: {e:#}");
+            });
+            ticks += 1;
+            assert!(ticks < 5000, "seed {seed}: engine did not drain");
+            check_invariants(&router, seed, ticks);
+            // physical reclamation must converge immediately
+            router.states.fix_caches().unwrap();
+            assert_eq!(router.states.fix_caches().unwrap(), 0,
+                       "seed {seed} tick {ticks}: fix_caches left \
+                        reclaimable stale tail behind");
+            if stepped.is_none() && submitted == n_total {
+                break;
+            }
+        }
+        let shed = router.take_shed().len();
+        assert_eq!(router.finished.len() + shed, n_total,
+                   "seed {seed}: requests lost");
+    }
+}
+
+#[test]
+fn tick_reports_structured_error_on_empty_committed_slot() {
+    let backend = Arc::new(SimBackend::new(SimSpec::small_pool()));
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = 1;
+    cfg.window = 4;
+    cfg.target = "m2".into();
+    cfg.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    let mut router = ChainRouter::with_backend(cfg, backend).unwrap();
+    let spec = router.manifest.datasets["gsm8k"].clone();
+    let mut gen = DatasetGen::new(spec, 5);
+    let (prompt, _) = gen.sample();
+    router.submit(Request {
+        id: 0,
+        dataset: "gsm8k".into(),
+        prompt,
+        max_new: 40, // long enough that the request survives the corruption point
+        arrival: Instant::now(),
+        class: SloClass::Standard,
+        slo_ms: None,
+        sample_seed: None,
+    }).unwrap();
+    // admit + one clean step
+    router.tick().unwrap();
+    // corrupt the slot the way a future refactor bug would: an active
+    // slot with an empty committed sequence
+    router.batcher.slots[0].as_mut().unwrap().committed.clear();
+    let err = router.tick().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("empty committed") || msg.contains("no frontier"),
+            "expected the structured empty-committed guard, got: {msg}");
+}
