@@ -81,6 +81,30 @@ fn main() {
     for line in metrics::class_rows(&s) {
         println!("{line}");
     }
+
+    // BENCH_admission.json — the perf-trajectory snapshot of the 2x
+    // point. The sim runs in virtual time, so every number here is
+    // machine-independent and deterministic per seed: exactly what
+    // scripts the CI perf gate (rust/src/bin/perf_gate.rs) wants to
+    // compare against benches/baselines.json.
+    // gated metric: a missing interactive summary must be a hard error,
+    // not a silent 0.0 — the lower-is-better perf gate would read a
+    // vacuous snapshot as a perfect pass
+    let iqd = s.class_summary(SloClass::Interactive)
+        .expect("no interactive requests completed in the 2x snapshot — \
+                 the gated queue-delay metric would be meaningless");
+    let json = format!(
+        "{{\n  \"bench\": \"admission\",\n  \"overload\": 2.0,\n  \
+         \"policy\": \"deadline\",\n  \
+         \"interactive_slo_attainment\": {:.4},\n  \
+         \"fifo_interactive_slo_attainment\": {:.4},\n  \
+         \"queue_delay_p50_ms\": {:.3},\n  \
+         \"queue_delay_p95_ms\": {:.3},\n  \"shed\": {}\n}}\n",
+        esf_att, fifo_att,
+        iqd.queue_delay_ms_p50, iqd.queue_delay_ms_p95, s.shed);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_admission.json");
+    std::fs::write(out, &json).expect("writing BENCH_admission.json");
+    println!("\nwrote {out}");
     assert!(esf_att > fifo_att,
             "ACCEPTANCE FAILED: deadline-aware interactive attainment \
              {esf_att:.3} must exceed FIFO {fifo_att:.3} at 2x overload");

@@ -6,11 +6,14 @@
 //! views, committed-sequence pushes, resets) is excluded — the number
 //! reported is exactly what one engine step allocates.
 //!
-//! Acceptance (ISSUE 2): after a warm-up phase has grown every
-//! `StepScratch` buffer to capacity, a steady-state **greedy** spec step
-//! must perform **zero** heap allocations. The bench prints a table,
-//! writes `BENCH_hotpath.json` at the repo root (schema in DESIGN.md §8)
-//! and exits non-zero if a greedy row allocates.
+//! Acceptance (ISSUE 2, extended by ISSUE 4): after a warm-up phase has
+//! grown every `StepScratch` buffer to capacity, a steady-state **greedy**
+//! spec step must perform **zero** heap allocations — and so must the
+//! **whole engine tick** (`full-tick` row: counting wraps
+//! `ChainRouter::tick` in admission-idle steady state, covering the
+//! recycled slot-seq views, cached chains, commit loop and mask clamps).
+//! The bench prints a table, writes `BENCH_hotpath.json` at the repo root
+//! (schema in DESIGN.md §8) and exits non-zero if a greedy row allocates.
 //!
 //!   cargo bench --bench bench_hotpath
 //!   SPECROUTER_QUICK=1 shrinks the measured step count (CI smoke runs).
@@ -19,10 +22,14 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 
 use std::sync::Arc;
 
-use specrouter::config::{AcceptRule, Mode};
-use specrouter::coordinator::{run_spec_step, Backend, Chain, Profiler,
-                              SimBackend, SimSpec, SimilarityTracker,
-                              SlotSeqs, StepCtx, StepScratch};
+use std::time::Instant;
+
+use specrouter::admission::SloClass;
+use specrouter::config::{AcceptRule, EngineConfig, Mode};
+use specrouter::coordinator::{run_spec_step, Backend, Chain, ChainRouter,
+                              Profiler, Request, SimBackend, SimSpec,
+                              SimilarityTracker, SlotSeqs, StepCtx,
+                              StepScratch};
 use specrouter::harness::{prompt_set_from, quick, run_offline_backend,
                           sim_backend, with_dataset, Table};
 use specrouter::rng::Rng;
@@ -297,6 +304,103 @@ fn run_grouped(backend: &SimBackend, configs: &[(Chain, Vec<usize>)],
     row_from(label, rule_label, batch, measure, m)
 }
 
+/// Full-engine tick steady state (ISSUE 4 satellite): the REAL
+/// `ChainRouter::tick` — admission check, group partitioning, cached
+/// chain lookup, spec step over the recycled slot-seq view, commit into
+/// capacity-reserved buffers, mask clamp, profiler attribution — with
+/// counting wrapped around the *whole* `tick()` call, not just
+/// `run_spec_step`. Measured admission-idle (every slot occupied, queue
+/// empty): a steady-state greedy tick must allocate nothing at all.
+///
+/// Requests run in waves: submit `batch` long requests, settle, measure a
+/// block of ticks sized so no request can complete inside it (completion
+/// and the refill admission allocate by design), then drain with
+/// counting off and start the next wave.
+fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
+                 warmup: u64, measure: u64) -> Row {
+    let mut spec = SimSpec::small_pool();
+    // eos_prob 0: nothing finishes early, so the per-wave measured block
+    // is deterministically completion-free
+    spec.eos_prob = 0.0;
+    let seq_cap = spec.seq;
+    let backend = std::sync::Arc::new(SimBackend::new(spec));
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = batch;
+    cfg.window = window;
+    cfg.target = "m2".into();
+    cfg.mode = Mode::Fixed { chain, window };
+    cfg.rule = AcceptRule::Greedy;
+    let label = format!("full-tick:{}", cfg.mode.label());
+    let mut router = ChainRouter::with_backend(cfg, backend)
+        .expect("sim router");
+
+    // prompt 3 + max_new generated stays under seq (guard included)
+    let max_new = seq_cap - 3 - 2 * (window + 2);
+    let submit_wave = |router: &mut ChainRouter| {
+        for b in 0..batch {
+            router.submit(Request {
+                id: 0,
+                dataset: "gsm8k".into(),
+                prompt: vec![1, 100 + b as i32, 7],
+                max_new,
+                arrival: Instant::now(),
+                class: SloClass::Standard,
+                slo_ms: None,
+                sample_seed: Some(17 ^ b as u64),
+            });
+        }
+    };
+    let drain = |router: &mut ChainRouter| {
+        router.run_until_idle(1_000_000).expect("drain");
+        router.drain_finished();
+        router.take_shed();
+    };
+
+    // warm cycles: grow every arena/profiler map/scratch to capacity
+    let mut warm_ticks = 0u64;
+    while warm_ticks < warmup {
+        submit_wave(&mut router);
+        while !router.batcher.is_idle() {
+            router.tick().expect("warm tick");
+            warm_ticks += 1;
+        }
+        router.drain_finished();
+    }
+
+    // a wave can commit at most w+1 tokens per tick per slot; keep
+    // settle + measured ticks safely under max_new / (w+1)
+    let settle = 2u64;
+    let per_wave = (max_new as u64 / (window as u64 + 1))
+        .saturating_sub(settle + 2)
+        .max(1);
+    let (a0, b0) = (ALLOCS.load(Relaxed), BYTES.load(Relaxed));
+    let mut measured = 0u64;
+    let mut tokens = 0u64;
+    let mut elapsed = 0.0f64;
+    while measured < measure {
+        submit_wave(&mut router);
+        for _ in 0..settle {
+            router.tick().expect("settle tick");
+        }
+        for _ in 0..per_wave.min(measure - measured) {
+            let t0 = Instant::now();
+            COUNTING.store(true, Relaxed);
+            let c = router.tick().expect("measured tick");
+            COUNTING.store(false, Relaxed);
+            elapsed += t0.elapsed().as_secs_f64();
+            tokens += c.unwrap_or(0) as u64;
+            measured += 1;
+        }
+        drain(&mut router);
+    }
+    row_from(label, "greedy", batch, measured, Measured {
+        tokens,
+        elapsed,
+        allocs: ALLOCS.load(Relaxed) - a0,
+        bytes: BYTES.load(Relaxed) - b0,
+    })
+}
+
 fn main() {
     let backend = SimBackend::new(SimSpec::small_pool());
     let (warmup, measure) = if quick() { (32, 128) } else { (64, 1024) };
@@ -345,6 +449,20 @@ fn main() {
     ];
     let row = run_grouped(&backend, &grouped_cfg, AcceptRule::Greedy,
                           "greedy", batch, warmup, measure);
+    table.row(vec![
+        row.label.clone(),
+        row.rule.to_string(),
+        format!("{:.0}", row.steps_per_sec),
+        format!("{:.2}", row.tokens_per_step),
+        format!("{:.2}", row.allocs_per_step),
+        format!("{:.1}", row.bytes_per_step),
+    ]);
+    rows.push(row);
+    // full engine tick (ISSUE 4): counting wraps ChainRouter::tick
+    // itself — recycled slot-seq views, cached chains and reserved
+    // commit buffers must keep the whole admission-idle tick at zero
+    let row = run_full_tick(vec!["m0".into(), "m2".into()], 4, batch,
+                            warmup, measure);
     table.row(vec![
         row.label.clone(),
         row.rule.to_string(),
@@ -411,5 +529,6 @@ fn main() {
     if failed {
         std::process::exit(1);
     }
-    println!("OK: zero steady-state allocations on the greedy hot path");
+    println!("OK: zero steady-state allocations on the greedy hot path \
+              (spec step, grouped step, and the full engine tick)");
 }

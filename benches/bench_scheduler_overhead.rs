@@ -2,17 +2,25 @@
 //! be negligible next to model execution (DESIGN.md §7 target: scheduler
 //! decision < 50 µs). Measures Algorithm-1 selection, Eq.-7 prediction,
 //! DTV similarity updates, and acceptance scanning.
+//!
+//! Runs on the compiled-artifact manifest when `make artifacts` has been
+//! run, and falls back to the SimBackend's synthesized manifest (same
+//! model names and dims) otherwise — so the bench-trajectory CI job can
+//! track scheduler overhead on a bare checkout. Writes
+//! `BENCH_scheduler_overhead.json` for the perf gate
+//! (rust/src/bin/perf_gate.rs).
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use specrouter::config::EngineConfig;
-use specrouter::coordinator::{Profiler, Scheduler, SimilarityTracker};
+use specrouter::coordinator::similarity::dtv_logits;
+use specrouter::coordinator::{Backend, Profiler, Scheduler, SimBackend,
+                              SimSpec, SimilarityTracker};
 use specrouter::harness::{bench_pool, Table};
 use specrouter::model_pool::FnKey;
 use specrouter::rng::{argmax, Rng};
-use specrouter::runtime::FnKind;
-use specrouter::coordinator::similarity::dtv_logits;
+use specrouter::runtime::{FnKind, Manifest};
 
 fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     let t0 = Instant::now();
@@ -22,22 +30,34 @@ fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
+/// The manifest this run schedules over: XLA artifacts when available,
+/// the sim pool's mirror otherwise (identical model set and dims).
+fn manifest() -> (Arc<Manifest>, &'static str) {
+    match bench_pool() {
+        Ok(pool) => (pool.manifest.clone(), "artifacts"),
+        Err(_) => {
+            let sim = SimBackend::new(SimSpec::small_pool());
+            (Backend::manifest(&sim).clone(), "sim")
+        }
+    }
+}
+
 fn main() -> Result<()> {
-    let pool = bench_pool()?;
-    let mut cfg = EngineConfig::new(pool.manifest.root.clone());
+    let (manifest, backend) = manifest();
+    let mut cfg = EngineConfig::new(manifest.root.clone());
     cfg.batch = 8;
     cfg.max_chain_len = 3;
-    let mut sched = Scheduler::new(pool.manifest.clone(), cfg, 3);
+    let mut sched = Scheduler::new(manifest.clone(), cfg, 3);
 
     // warm profiler: plausible measured costs for every fn the candidates
     // reference
     let mut prof = Profiler::new(0.2);
     let mut sim = SimilarityTracker::new(0.2);
-    for m in pool.manifest.models.keys() {
+    for m in manifest.models.keys() {
         prof.record_call(&FnKey { model: m.clone(), kind: FnKind::Decode,
                                   batch: 8, window: 0 },
                          Duration::from_millis(20));
-        for &w in &pool.manifest.windows {
+        for &w in &manifest.windows {
             prof.record_call(&FnKey { model: m.clone(), kind: FnKind::Draft,
                                       batch: 8, window: w },
                              Duration::from_millis(10));
@@ -47,8 +67,8 @@ fn main() -> Result<()> {
                              Duration::from_millis(25));
         }
     }
-    for a in pool.manifest.models.keys() {
-        for b in pool.manifest.models.keys() {
+    for a in manifest.models.keys() {
+        for b in manifest.models.keys() {
             sim.observe_acceptance(a, b, 3, 4);
         }
     }
@@ -81,7 +101,7 @@ fn main() -> Result<()> {
 
     // DTV over the vocab (per verified position)
     let mut rng = Rng::new(4);
-    let v = pool.manifest.vocab;
+    let v = manifest.vocab;
     let p: Vec<f32> = (0..v).map(|_| rng.f64() as f32).collect();
     let q: Vec<f32> = (0..v).map(|_| rng.f64() as f32).collect();
     let t_dtv = bench(20_000, || {
@@ -126,11 +146,26 @@ fn main() -> Result<()> {
         String::new(),
     ]);
 
-    println!("=== L3 scheduler / coordinator hot-path costs ===\n");
+    println!("=== L3 scheduler / coordinator hot-path costs \
+              ({backend} manifest) ===\n");
     table.print();
     println!("\nmodel-execution calls cost O(10 ms) on this substrate; the \
               coordinator's per-step overhead is {}x smaller.",
              (20e-3 / t_select) as u64);
-    let _ = Arc::strong_count(&pool);
+
+    // BENCH_scheduler_overhead.json for the perf trajectory: the gate
+    // compares select_ns against the checked-in budget.
+    let json = format!(
+        "{{\n  \"bench\": \"scheduler_overhead\",\n  \
+         \"backend\": \"{backend}\",\n  \"candidates\": {n_cand},\n  \
+         \"select_ns\": {:.1},\n  \"predict_ns\": {:.1},\n  \
+         \"dtv_ns\": {:.1},\n  \"accept_scan_ns\": {:.1},\n  \
+         \"ema_ns\": {:.1}\n}}\n",
+        t_select * 1e9, t_pred * 1e9, t_dtv * 1e9, t_accept * 1e9,
+        t_ema * 1e9);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"),
+                      "/../BENCH_scheduler_overhead.json");
+    std::fs::write(out, &json).expect("writing bench json");
+    println!("\nwrote {out}");
     Ok(())
 }

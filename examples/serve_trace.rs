@@ -106,6 +106,10 @@ fn main() -> Result<()> {
     println!("\nstate manager: {} physical truncations, {} elements \
               reclaimed", router.states.physical_truncations,
              router.states.elements_reclaimed);
+    println!("(TTFT/TPOT above are engine-side emission times; for the \
+              client-observed streaming view — per-token frames over \
+              TCP, trace entries marked stream:true — see \
+              examples/stream_client.rs and DESIGN.md §10)");
     println!("XLA compilation: {} executables, {:.1}s total",
              pool.compiled_count(),
              pool.total_compile_time().as_secs_f64());

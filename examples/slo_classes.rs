@@ -69,6 +69,14 @@ fn run(fifo: bool, n: usize, rate: f64) -> Result<()> {
     let int_att = s.class_summary(SloClass::Interactive)
         .map(|c| c.slo_attainment * 100.0);
     println!("interactive attainment: {:?}%", int_att);
+    // ISSUE 4: the TPOT feeding attainment (and the admission
+    // controller's doom estimates) is measured at token-emission time —
+    // first committed token to completion over the emitted count — and
+    // the streaming protocol now delivers those same tokens
+    // incrementally (see examples/stream_client.rs for the
+    // client-observed emission-time view).
+    println!("(attainment uses emission-time TPOT; streamed clients \
+              observe the same tokens incrementally — DESIGN.md §10)");
     Ok(())
 }
 

@@ -107,7 +107,12 @@ pub struct AdmissionController {
     pub admitted_total: u64,
     pub shed_total: u64,
     pub downgraded_total: u64,
+    /// Requests withdrawn by their client (streaming disconnect) — a
+    /// distinct outcome from shedding: the engine did nothing wrong, so
+    /// cancels never count against SLO attainment the way sheds do.
+    pub cancelled_total: u64,
     shed_by_class: HashMap<SloClass, u64>,
+    cancelled_by_class: HashMap<SloClass, u64>,
     /// Pop-time sheds awaiting delivery to their clients.
     pending_shed: Vec<ShedRecord>,
 }
@@ -125,7 +130,9 @@ impl AdmissionController {
             admitted_total: 0,
             shed_total: 0,
             downgraded_total: 0,
+            cancelled_total: 0,
             shed_by_class: HashMap::new(),
+            cancelled_by_class: HashMap::new(),
             pending_shed: Vec::new(),
         }
     }
@@ -140,6 +147,29 @@ impl AdmissionController {
 
     pub fn shed_by_class(&self, class: SloClass) -> u64 {
         self.shed_by_class.get(&class).copied().unwrap_or(0)
+    }
+
+    pub fn cancelled_by_class(&self, class: SloClass) -> u64 {
+        self.cancelled_by_class.get(&class).copied().unwrap_or(0)
+    }
+
+    /// Account one client-side cancellation (request already out of the
+    /// queue — in a slot, or removed via [`Self::cancel_queued`]).
+    pub fn record_cancel(&mut self, class: SloClass) {
+        self.cancelled_total += 1;
+        *self.cancelled_by_class.entry(class).or_insert(0) += 1;
+    }
+
+    /// Withdraw a *waiting* request by id (client disconnected before it
+    /// reached a slot). Returns the removed entry; the cancel is
+    /// accounted under the entry's effective (post-downgrade) class. Not
+    /// a shed: no `ShedRecord` is produced and `shed_total` is untouched,
+    /// so attainment metrics never blame the engine for a client that
+    /// walked away.
+    pub fn cancel_queued(&mut self, id: u64) -> Option<QueuedReq> {
+        let entry = self.queue.remove_by_id(id)?;
+        self.record_cancel(entry.class);
+        Some(entry)
     }
 
     /// Observed seconds-per-token, if any request has completed yet.
@@ -511,6 +541,41 @@ mod tests {
                              | SubmitOutcome::Downgraded { .. }));
         }
         while c.pop(now).is_some() {}
+    }
+
+    #[test]
+    fn cancel_queued_removes_without_shedding() {
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        c.submit(req(1, SloClass::Standard, 8, now), now, 0);
+        c.submit(req(2, SloClass::Interactive, 8, now), now, 0);
+        let gone = c.cancel_queued(1).expect("queued entry");
+        assert_eq!(gone.req.id, 1);
+        assert_eq!(c.queued(), 1);
+        assert_eq!(c.cancelled_total, 1);
+        assert_eq!(c.cancelled_by_class(SloClass::Standard), 1);
+        // not a shed: no record, no shed counters
+        assert_eq!(c.shed_total, 0);
+        assert!(c.take_shed().is_empty());
+        // unknown / already-removed ids are a no-op
+        assert!(c.cancel_queued(1).is_none());
+        assert!(c.cancel_queued(99).is_none());
+        assert_eq!(c.cancelled_total, 1);
+        // the survivor still pops normally
+        assert_eq!(c.pop(now).unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn cancel_accounts_under_effective_class_after_downgrade() {
+        let now = Instant::now();
+        let mut c = ctrl(8);
+        c.observe_tpot(1.0);
+        // standard 40-token request downgrades to batch at submit
+        let out = c.submit(req(1, SloClass::Standard, 40, now), now, 0);
+        assert!(matches!(out, SubmitOutcome::Downgraded { .. }));
+        c.cancel_queued(1).expect("queued entry");
+        assert_eq!(c.cancelled_by_class(SloClass::Batch), 1);
+        assert_eq!(c.cancelled_by_class(SloClass::Standard), 0);
     }
 
     #[test]

@@ -157,6 +157,16 @@ impl DeadlineQueue {
     pub fn iter(&self) -> impl Iterator<Item = &QueuedReq> {
         self.items.iter()
     }
+
+    /// Remove a waiting entry by request id (client cancellation).
+    /// Order-preserving `remove` rather than a swap: the FIFO discipline
+    /// pops the untouched front, so a cancelled entry must not reorder
+    /// the survivors behind it. Returns the entry so the controller can
+    /// account the cancel under its class.
+    pub fn remove_by_id(&mut self, id: u64) -> Option<QueuedReq> {
+        let i = self.items.iter().position(|e| e.req.id == id)?;
+        self.items.remove(i)
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +257,24 @@ mod tests {
         q.push(entry(1, SloClass::Batch, 120.0, 1.0, now));
         q.push(entry(2, SloClass::Interactive, 4.0, 4.0, now));
         assert_eq!(q.pop(now).unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn remove_by_id_preserves_fifo_order() {
+        let now = Instant::now();
+        let mut q = DeadlineQueue::new(16, Discipline::Fifo, 0.0);
+        for id in 1..=4 {
+            q.push(entry(id, SloClass::Standard, 9.0, 1.0, now));
+        }
+        let gone = q.remove_by_id(2).unwrap();
+        assert_eq!(gone.req.id, 2);
+        assert!(q.remove_by_id(2).is_none());
+        assert!(q.remove_by_id(99).is_none());
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop(now))
+            .map(|e| e.req.id)
+            .collect();
+        assert_eq!(order, vec![1, 3, 4],
+                   "cancellation must not reorder FIFO survivors");
     }
 
     #[test]

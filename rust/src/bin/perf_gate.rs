@@ -1,0 +1,264 @@
+//! CI perf-regression gate (ISSUE 4): compares the BENCH_*.json
+//! artifacts produced by the bench-trajectory job against the checked-in
+//! baselines in `benches/baselines.json` and fails (exit 1) when a gated
+//! metric regresses more than the configured tolerance (default 15%).
+//!
+//! Gated metrics (all lower-is-better):
+//!   * `hotpath_greedy_allocs_per_step` — max allocs/step over the greedy
+//!     rows of BENCH_hotpath.json (spec step, grouped step, full tick).
+//!     A baseline of 0 means exactly zero: any allocation fails.
+//!   * `scheduler_select_ns` — Algorithm-1 selection time from
+//!     BENCH_scheduler_overhead.json (DESIGN.md §7 budget).
+//!   * `admission_queue_delay_p50_ms` — interactive p50 queue delay at 2x
+//!     overload from BENCH_admission.json (virtual-time sim:
+//!     deterministic per seed, machine-independent).
+//!
+//! Usage: perf_gate [baselines.json] [bench-artifact-dir]
+//! (defaults: benches/baselines.json and the current directory — matching
+//! `cargo run --release --bin perf_gate` from the repo root after the
+//! SPECROUTER_QUICK=1 bench runs.)
+//!
+//! Re-baselining: run the benches, then copy the printed `measured`
+//! column into baselines.json. When a measured value lands well *below*
+//! its baseline the table says so — tighten the baseline to bank the
+//! win, otherwise the headroom masks future regressions.
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use specrouter::harness::Table;
+use specrouter::json::{self, Value};
+
+/// One gated metric: measured value vs checked-in baseline ceiling.
+#[derive(Debug, Clone)]
+struct Check {
+    name: &'static str,
+    measured: f64,
+    baseline: f64,
+}
+
+/// Gate rule (lower-is-better): pass while
+/// `measured <= baseline * (1 + tol_pct/100)`, with a hair of relative
+/// epsilon so the exact boundary passes despite binary rounding of the
+/// percentage (100 × 1.15 is 114.999… in f64). A zero baseline is exact
+/// — zero tolerance of any measured value above zero (the allocs/step
+/// contract), since a percentage of nothing gates nothing.
+fn passes(c: &Check, tol_pct: f64) -> bool {
+    if c.baseline == 0.0 {
+        c.measured <= 1e-9
+    } else {
+        c.measured
+            <= c.baseline * (1.0 + tol_pct / 100.0) * (1.0 + 1e-12)
+    }
+}
+
+/// Human verdict for the table.
+fn verdict(c: &Check, tol_pct: f64) -> String {
+    if !passes(c, tol_pct) {
+        format!("FAIL (> {:.1}% over baseline)", tol_pct)
+    } else if c.baseline > 0.0
+        && c.measured < c.baseline / (1.0 + tol_pct / 100.0) {
+        "ok (below baseline — consider tightening)".into()
+    } else {
+        "ok".into()
+    }
+}
+
+fn load(dir: &Path, file: &str) -> Result<Value> {
+    let path = dir.join(file);
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!("reading {path:?} — run the SPECROUTER_QUICK=1 benches \
+                 first (bench_hotpath, bench_admission, \
+                 bench_scheduler_overhead)")
+    })?;
+    json::parse(&text).with_context(|| format!("parsing {path:?}"))
+}
+
+/// Max allocs/step over the greedy rows (spec step, grouped, full tick).
+fn hotpath_greedy_allocs(v: &Value) -> Result<f64> {
+    let rows = v.get("rows")?.as_arr()?;
+    let mut max = 0.0f64;
+    let mut greedy = 0usize;
+    for r in rows {
+        if r.get("rule")?.as_str()? == "greedy" {
+            greedy += 1;
+            max = max.max(r.get("allocs_per_step")?.as_f64()?);
+        }
+    }
+    if greedy == 0 {
+        bail!("BENCH_hotpath.json has no greedy rows");
+    }
+    Ok(max)
+}
+
+fn gather(dir: &Path) -> Result<Vec<Check>> {
+    let hotpath = load(dir, "BENCH_hotpath.json")?;
+    let sched = load(dir, "BENCH_scheduler_overhead.json")?;
+    let adm = load(dir, "BENCH_admission.json")?;
+    Ok(vec![
+        Check {
+            name: "hotpath_greedy_allocs_per_step",
+            measured: hotpath_greedy_allocs(&hotpath)?,
+            baseline: f64::NAN, // filled from baselines.json
+        },
+        Check {
+            name: "scheduler_select_ns",
+            measured: sched.get("select_ns")?.as_f64()?,
+            baseline: f64::NAN,
+        },
+        Check {
+            name: "admission_queue_delay_p50_ms",
+            measured: adm.get("queue_delay_p50_ms")?.as_f64()?,
+            baseline: f64::NAN,
+        },
+    ])
+}
+
+fn apply_baselines(checks: &mut [Check], baselines: &Value)
+                   -> Result<f64> {
+    let tol = baselines.get("tolerance_pct")?.as_f64()?;
+    if !tol.is_finite() || tol < 0.0 {
+        bail!("tolerance_pct must be a finite non-negative percentage");
+    }
+    let metrics = baselines.get("metrics")?;
+    for c in checks.iter_mut() {
+        c.baseline = metrics.get(c.name)?.as_f64()?;
+        if !c.baseline.is_finite() || c.baseline < 0.0 {
+            bail!("baseline for {} must be finite and non-negative",
+                  c.name);
+        }
+    }
+    Ok(tol)
+}
+
+/// Run every check; returns false when any metric regressed.
+fn gate(checks: &[Check], tol_pct: f64) -> bool {
+    let mut table = Table::new(&["metric", "measured", "baseline",
+                                 "limit", "verdict"]);
+    let mut ok = true;
+    for c in checks {
+        let limit = if c.baseline == 0.0 {
+            0.0
+        } else {
+            c.baseline * (1.0 + tol_pct / 100.0)
+        };
+        table.row(vec![
+            c.name.to_string(),
+            format!("{:.3}", c.measured),
+            format!("{:.3}", c.baseline),
+            format!("{limit:.3}"),
+            verdict(c, tol_pct),
+        ]);
+        ok &= passes(c, tol_pct);
+    }
+    println!("perf gate (tolerance {tol_pct:.1}%):\n");
+    table.print();
+    ok
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let baselines_path = args.first().map(String::as_str)
+        .unwrap_or("benches/baselines.json");
+    let bench_dir = Path::new(args.get(1).map(String::as_str)
+        .unwrap_or("."));
+    let run = || -> Result<bool> {
+        let baselines = {
+            let text = std::fs::read_to_string(baselines_path)
+                .with_context(|| format!("reading {baselines_path}"))?;
+            json::parse(&text)
+                .with_context(|| format!("parsing {baselines_path}"))?
+        };
+        let mut checks = gather(bench_dir)?;
+        let tol = apply_baselines(&mut checks, &baselines)?;
+        Ok(gate(&checks, tol))
+    };
+    match run() {
+        Ok(true) => {
+            println!("\nperf gate: no regression beyond tolerance");
+        }
+        Ok(false) => {
+            eprintln!("\nperf gate: REGRESSION — a gated metric exceeds \
+                       its baseline ceiling (see table). If the change \
+                       is intentional, update benches/baselines.json in \
+                       the same PR and justify it.");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("perf gate error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(baseline: f64, measured: f64) -> Check {
+        Check { name: "m", measured, baseline }
+    }
+
+    #[test]
+    fn tolerance_band_separates_pass_from_regression() {
+        // 10% over a 100-unit baseline passes at 15% tolerance...
+        assert!(passes(&c(100.0, 110.0), 15.0));
+        // ...an injected 20% regression fails
+        assert!(!passes(&c(100.0, 120.0), 15.0));
+        // the boundary itself passes (<=)
+        assert!(passes(&c(100.0, 115.0), 15.0));
+        assert!(!passes(&c(100.0, 115.001), 15.0));
+        // improvements always pass
+        assert!(passes(&c(100.0, 1.0), 15.0));
+    }
+
+    #[test]
+    fn zero_baseline_is_exact() {
+        assert!(passes(&c(0.0, 0.0), 15.0));
+        // the allocs/step contract: ANY allocation is a regression, a
+        // percentage band over zero would never catch it
+        assert!(!passes(&c(0.0, 0.5), 15.0));
+        assert!(!passes(&c(0.0, 1e-3), 15.0));
+    }
+
+    #[test]
+    fn gate_fails_on_injected_regression_and_reports_all_rows() {
+        let checks = vec![c(0.0, 0.0), c(50_000.0, 48_000.0)];
+        assert!(gate(&checks, 15.0));
+        // inject a 1.2x regression into one metric: the gate must flip
+        let injected = vec![c(0.0, 0.0), c(50_000.0, 60_000.0)];
+        assert!(!gate(&injected, 15.0));
+        assert!(verdict(&injected[1], 15.0).contains("FAIL"));
+    }
+
+    #[test]
+    fn extraction_reads_bench_schemas() {
+        let hot = json::parse(
+            r#"{"bench":"hotpath","rows":[
+                {"rule":"greedy","allocs_per_step":0.0},
+                {"rule":"prob","allocs_per_step":9.5},
+                {"rule":"greedy","allocs_per_step":0.25}]}"#).unwrap();
+        // max over greedy rows only: the probabilistic row may allocate
+        assert!((hotpath_greedy_allocs(&hot).unwrap() - 0.25).abs()
+                < 1e-12);
+        let none = json::parse(r#"{"rows":[]}"#).unwrap();
+        assert!(hotpath_greedy_allocs(&none).is_err());
+    }
+
+    #[test]
+    fn baselines_file_binds_metrics_and_tolerance() {
+        let mut checks = vec![
+            Check { name: "scheduler_select_ns", measured: 10.0,
+                    baseline: f64::NAN },
+        ];
+        let b = json::parse(
+            r#"{"tolerance_pct":15.0,
+                "metrics":{"scheduler_select_ns":50000.0}}"#).unwrap();
+        let tol = apply_baselines(&mut checks, &b).unwrap();
+        assert_eq!(tol, 15.0);
+        assert_eq!(checks[0].baseline, 50_000.0);
+        // a missing metric key is a hard error, not a silent skip
+        let b = json::parse(
+            r#"{"tolerance_pct":15.0,"metrics":{}}"#).unwrap();
+        assert!(apply_baselines(&mut checks, &b).is_err());
+    }
+}

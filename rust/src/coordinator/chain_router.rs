@@ -31,7 +31,7 @@ use crate::admission::{Discipline, QueuedReq, ShedRecord, SloClass,
 use crate::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::engine::{committed_frontier, Batcher, Finished,
-                                 Request, Slot};
+                                 Request, SeqScratch, Slot};
 use crate::coordinator::executor::Executor;
 use crate::coordinator::groups::{gid_for, gid_labels, gid_space};
 use crate::coordinator::profiler::Profiler;
@@ -83,6 +83,10 @@ pub struct ChainRouter {
     group_slack: Vec<Option<f64>>,
     /// Reused membership mask for building sub-batch slot views.
     member_mask: Vec<bool>,
+    /// Recycled allocation for the per-group sub-batch views — the old
+    /// per-group `collect()` was the last steady-state allocation in the
+    /// engine tick (DESIGN.md §8; the full-tick bench row gates this).
+    seq_scratch: SeqScratch,
     /// Reused completion buffer.
     done_buf: Vec<usize>,
     /// One scratch arena per group id: each group's buffers warm to its
@@ -172,6 +176,7 @@ impl ChainRouter {
                 .collect(),
             group_slack: vec![None; n_gids],
             member_mask: vec![false; batch],
+            seq_scratch: SeqScratch::new(),
             done_buf: Vec::with_capacity(batch),
             scratches: (0..n_gids).map(|_| StepScratch::new()).collect(),
             steps: 0,
@@ -267,6 +272,28 @@ impl ChainRouter {
         self.batcher.take_shed()
     }
 
+    /// Withdraw request `id` (client disconnected mid-stream). A slotted
+    /// request frees its slot through the same machinery as completion —
+    /// `StateManager::clear_slot` wipes every model's mask, the stale KV
+    /// region is excluded from attention and reclaimed by the periodic
+    /// `fix_caches` pass, and the next `admit_pending` refills the slot.
+    /// A still-queued request is removed from the admission queue. Either
+    /// way the admission controller records a `Cancelled` outcome under
+    /// the request's effective class — distinct from shedding, so SLO
+    /// attainment never blames the engine for a client that walked away,
+    /// and no `Finished` record is produced. Returns false for an unknown
+    /// id (already finished, shed, or never submitted).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(b) = self.batcher.slot_of(id) {
+            if let Some(slot) = self.batcher.free(b) {
+                self.states.clear_slot(b);
+                self.batcher.admission.record_cancel(slot.class);
+                return true;
+            }
+        }
+        self.batcher.admission.cancel_queued(id).is_some()
+    }
+
     /// Drain finished records. The serving loop uses this instead of
     /// indexing `finished` so a long-running server does not accumulate
     /// every record it ever produced.
@@ -334,7 +361,12 @@ impl ChainRouter {
             }
             self.slot_rngs[slot_idx] = slot_rng;
             let first_token_at = Instant::now();
-            let mut committed = req.prompt.clone();
+            // reserve the sequence's final length up front: the commit
+            // loop pushes at most max_new generated tokens, so steady-
+            // state ticks never reallocate a committed buffer (§8 gate)
+            let mut committed =
+                Vec::with_capacity(plen + req.max_new.max(1));
+            committed.extend_from_slice(&req.prompt);
             committed.push(first_token);
             let slot = Slot {
                 req,
@@ -401,16 +433,27 @@ impl ChainRouter {
         }
     }
 
-    /// The chain group `gid` runs next, per mode (adaptive: Algorithm 1
-    /// with replan cadence, headroom-biased by the group's own slack).
-    fn chain_for_gid(&mut self, gid: usize) -> Chain {
+    /// Make `group_chains[gid]` the chain this group runs next, per mode
+    /// (adaptive: Algorithm 1 with replan cadence, headroom-biased by the
+    /// group's own slack). The tick loop *borrows* the cached chain
+    /// instead of cloning it — Tmo/Fixed build theirs exactly once and
+    /// Adaptive only on replan, keeping steady-state ticks off the
+    /// allocator entirely (DESIGN.md §8).
+    fn ensure_group_chain(&mut self, gid: usize) {
         match &self.cfg.mode {
-            Mode::Tmo => Chain::target_only(&self.cfg.target),
+            Mode::Tmo => {
+                if self.group_chains[gid].is_none() {
+                    self.group_chains[gid] =
+                        Some(Chain::target_only(&self.cfg.target));
+                }
+            }
             Mode::Fixed { chain, window } => {
-                if chain.len() == 1 {
-                    Chain::target_only(&chain[0])
-                } else {
-                    Chain { models: chain.clone(), window: *window }
+                if self.group_chains[gid].is_none() {
+                    self.group_chains[gid] = Some(if chain.len() == 1 {
+                        Chain::target_only(&chain[0])
+                    } else {
+                        Chain { models: chain.clone(), window: *window }
+                    });
                 }
             }
             Mode::Adaptive => {
@@ -423,7 +466,6 @@ impl ChainRouter {
                         self.group_slack[gid]);
                     self.group_chains[gid] = Some(c);
                 }
-                self.group_chains[gid].clone().unwrap()
             }
         }
     }
@@ -471,9 +513,13 @@ impl ChainRouter {
             }
             // move the member list out so `self` stays borrowable
             let slots = std::mem::take(&mut self.group_slots[gid]);
-            let chain = self.chain_for_gid(gid);
+            self.ensure_group_chain(gid);
+            // borrow, don't clone: the cached chain lives in
+            // `group_chains` precisely so steady-state ticks never copy
+            // its model names
+            let chain = self.group_chains[gid].as_ref().unwrap();
             let stale = !matches!(&self.group_label_cache[gid],
-                                  Some((c, _)) if c == &chain);
+                                  Some((c, _)) if c == chain);
             if stale {
                 self.group_label_cache[gid] =
                     Some((chain.clone(), chain.label()));
@@ -488,26 +534,21 @@ impl ChainRouter {
                 let state_len = self.state_len(m);
                 self.states.ensure(m, dims, state_len);
             }
-            {
-                // sub-batch view: members carry their committed
-                // sequences, every other lane (idle or other-group) is
-                // None and stays untouched. The view Vec itself is the
-                // one engine-level allocation per group-step (it borrows
-                // the batcher, so it cannot live in `self`); the §8
-                // zero-alloc guarantee covers `run_spec_step`, which the
-                // per-group arenas preserve.
-                self.member_mask.fill(false);
-                for &b in &slots {
-                    self.member_mask[b] = true;
-                }
-                let member = &self.member_mask;
-                let seqs: SlotSeqs = self.batcher.slots.iter().enumerate()
-                    .map(|(b, s)| if member[b] {
-                        s.as_ref().map(|s| s.committed.as_slice())
-                    } else {
-                        None
-                    })
-                    .collect();
+            // sub-batch view: members carry their committed sequences,
+            // every other lane (idle or other-group) is None and stays
+            // untouched. The view borrows the batcher, so only its
+            // *allocation* can persist in `self` — `seq_scratch` recycles
+            // it, making the whole steady-state tick allocation-free,
+            // not just `run_spec_step` (§8; the full-tick bench row
+            // gates this).
+            self.member_mask.fill(false);
+            for &b in &slots {
+                self.member_mask[b] = true;
+            }
+            let mut seqs: SlotSeqs = self.seq_scratch.take();
+            self.batcher.fill_slot_seqs(Some(&self.member_mask),
+                                        &mut seqs);
+            let step = {
                 let mut ctx = StepCtx {
                     exec: self.backend.as_ref(),
                     prof: &mut self.prof,
@@ -519,9 +560,13 @@ impl ChainRouter {
                     rngs: &mut self.slot_rngs,
                     scratch: &mut self.scratches[gid],
                 };
-                run_spec_step(&mut ctx, &chain, &seqs,
-                              self.manifest.special.pad)?;
-            }
+                run_spec_step(&mut ctx, chain, &seqs,
+                              self.manifest.special.pad)
+            };
+            // park the view's allocation before propagating any error so
+            // the capacity survives either way
+            self.seq_scratch.put(seqs);
+            step?;
             // commit this group's slots from its scratch outcome
             let mut group_total = 0usize;
             let outcome = &self.scratches[gid].outcome;

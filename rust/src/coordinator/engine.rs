@@ -175,10 +175,83 @@ impl Batcher {
     }
 
     /// Committed sequences per slot for the spec step (None = idle).
+    /// Allocates a fresh view; the tick loop uses
+    /// [`Batcher::fill_slot_seqs`] with a [`SeqScratch`]-recycled buffer
+    /// instead so steady-state ticks stay allocation-free.
     pub fn slot_seqs(&self) -> Vec<Option<&[i32]>> {
-        self.slots.iter()
-            .map(|s| s.as_ref().map(|s| s.committed.as_slice()))
-            .collect()
+        let mut out = Vec::new();
+        self.fill_slot_seqs(None, &mut out);
+        out
+    }
+
+    /// Fill a caller-provided buffer with the per-slot committed views.
+    /// `member`, when given, masks the view to one chain group: non-member
+    /// lanes become `None` exactly like idle slots (DESIGN.md §9).
+    pub fn fill_slot_seqs<'a>(&'a self, member: Option<&[bool]>,
+                              out: &mut Vec<Option<&'a [i32]>>) {
+        out.clear();
+        out.extend(self.slots.iter().enumerate().map(|(b, s)| {
+            let included = match member {
+                None => true,
+                Some(m) => m[b],
+            };
+            if included {
+                s.as_ref().map(|s| s.committed.as_slice())
+            } else {
+                None
+            }
+        }));
+    }
+
+    /// Slot index currently occupied by request `id`, if any.
+    pub fn slot_of(&self, id: u64) -> Option<usize> {
+        self.slots.iter().position(
+            |s| s.as_ref().is_some_and(|s| s.req.id == id))
+    }
+}
+
+/// Recycled allocation for the per-group slot-seq views (`Vec<Option<&'a
+/// [i32]>>`). The view borrows the batcher, so it cannot live across
+/// ticks inside the router; what CAN persist is its *allocation*. The
+/// buffer is stored with an unreachable placeholder lifetime and is
+/// always empty while parked, so handing it out at a caller-chosen
+/// lifetime moves zero elements — only the capacity survives. This is
+/// what keeps the full engine tick on the §8 zero-allocation path (the
+/// old per-group `collect()` was the last steady-state allocation).
+#[derive(Default)]
+pub struct SeqScratch {
+    parked: Vec<Option<&'static [i32]>>,
+}
+
+impl SeqScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take the parked allocation as an empty buffer at any lifetime.
+    pub fn take<'a>(&mut self) -> Vec<Option<&'a [i32]>> {
+        let mut v = std::mem::take(&mut self.parked);
+        v.clear();
+        let (ptr, cap) = (v.as_mut_ptr(), v.capacity());
+        std::mem::forget(v);
+        // SAFETY: `Option<&'a [i32]>` and `Option<&'static [i32]>` differ
+        // only in lifetime — identical size, alignment and allocation
+        // layout — and the vec is empty, so no value is transmuted.
+        unsafe {
+            Vec::from_raw_parts(ptr as *mut Option<&'a [i32]>, 0, cap)
+        }
+    }
+
+    /// Park the buffer's allocation for reuse (contents are dropped —
+    /// `Option<&[i32]>` is `Copy`, nothing runs).
+    pub fn put(&mut self, mut v: Vec<Option<&[i32]>>) {
+        v.clear();
+        let (ptr, cap) = (v.as_mut_ptr(), v.capacity());
+        std::mem::forget(v);
+        // SAFETY: same layout argument as `take`, empty again.
+        self.parked = unsafe {
+            Vec::from_raw_parts(ptr as *mut Option<&'static [i32]>, 0, cap)
+        };
     }
 }
 
@@ -276,6 +349,37 @@ mod tests {
         let slot = b.free(i).unwrap();
         assert_eq!(slot.generated(), &[99]);
         assert_eq!(slot.remaining(), 3);
+    }
+
+    #[test]
+    fn fill_slot_seqs_masks_non_members_and_reuses_capacity() {
+        let mut b = Batcher::new(3, 8);
+        for id in [1, 2] {
+            b.submit(req(id));
+            let (i, e) = b.next_admission().unwrap();
+            b.occupy(i, slot_for(e));
+        }
+        assert_eq!(b.slot_of(1), Some(0));
+        assert_eq!(b.slot_of(2), Some(1));
+        assert_eq!(b.slot_of(9), None);
+
+        let mut scratch = SeqScratch::new();
+        let mut view = scratch.take();
+        b.fill_slot_seqs(None, &mut view);
+        assert_eq!(view.len(), 3);
+        assert!(view[0].is_some() && view[1].is_some());
+        assert!(view[2].is_none()); // idle slot
+        // group mask: slot 1 is the only member
+        b.fill_slot_seqs(Some(&[false, true, false]), &mut view);
+        assert_eq!(view[1].unwrap(), &[1, 10, 11]);
+        assert!(view[0].is_none() && view[2].is_none());
+        // the parked allocation round-trips: same capacity, no realloc
+        let cap = view.capacity();
+        scratch.put(view);
+        let view2: Vec<Option<&[i32]>> = scratch.take();
+        assert_eq!(view2.capacity(), cap);
+        assert!(view2.is_empty());
+        scratch.put(view2);
     }
 
     #[test]

@@ -19,7 +19,8 @@ pub mod spec_step;
 
 pub use backend::{Backend, PrefillState};
 pub use chain_router::ChainRouter;
-pub use engine::{committed_frontier, Batcher, Finished, Request, Slot};
+pub use engine::{committed_frontier, Batcher, Finished, Request,
+                 SeqScratch, Slot};
 pub use executor::Executor;
 pub use groups::GroupKey;
 pub use profiler::Profiler;

@@ -262,6 +262,76 @@ pub fn class_rows_with_chains(s: &Summary, chains: &[ClassChainRow])
     }).collect()
 }
 
+/// Client-observed record of one *streamed* request: every timestamp is
+/// taken at frame-arrival (token-emission) time, not reconstructed from
+/// the engine's completion record. This is the "true" TTFT/TPOT a
+/// streaming user experiences — it includes queueing, the wire, and any
+/// engine-side batching delay between commit and delivery — and is what
+/// StreamServe-style serving papers report.
+#[derive(Debug, Clone)]
+pub struct StreamRecord {
+    pub id: u64,
+    pub class: SloClass,
+    /// When the client sent the request.
+    pub sent: Instant,
+    /// Token frames received.
+    pub frames: usize,
+    /// Arrival time of the first token frame.
+    pub first_frame: Instant,
+    /// Arrival time of the last token frame.
+    pub last_frame: Instant,
+}
+
+/// Emission-time TTFT in ms (first token frame observed by the client).
+pub fn stream_ttft_ms(r: &StreamRecord) -> Option<f64> {
+    (r.frames > 0).then(|| ms(r.sent, r.first_frame))
+}
+
+/// Emission-time TPOT in ms: inter-frame time averaged over the frames
+/// after the first (None for 0/1-frame streams, mirroring
+/// [`request_tpot_ms`]).
+pub fn stream_tpot_ms(r: &StreamRecord) -> Option<f64> {
+    if r.frames < 2 {
+        return None;
+    }
+    Some(ms(r.first_frame, r.last_frame) / (r.frames - 1) as f64)
+}
+
+/// Per-class rows over streamed requests: emission-time TTFT and TPOT
+/// percentiles plus frame counts. Rendered alongside the engine-side
+/// `class_rows` — the deltas between the two views are the delivery
+/// overhead the buffered protocol used to hide.
+pub fn stream_class_rows(records: &[StreamRecord]) -> Vec<String> {
+    let mut by_class: BTreeMap<SloClass, Vec<&StreamRecord>> =
+        BTreeMap::new();
+    for r in records {
+        by_class.entry(r.class).or_default().push(r);
+    }
+    // an empty percentile set renders n/a, not 0.0 — a class whose
+    // streams all had <2 frames has no TPOT, which must not read as a
+    // perfect one
+    let cell = |xs: &[f64], p: f64| -> String {
+        if xs.is_empty() {
+            format!("{:>8}", "n/a")
+        } else {
+            format!("{:>8.1}", percentile(xs, p))
+        }
+    };
+    by_class.into_iter().map(|(class, rs)| {
+        let ttfts = sorted(rs.iter().copied().filter_map(stream_ttft_ms)
+            .collect());
+        let tpots = sorted(rs.iter().copied().filter_map(stream_tpot_ms)
+            .collect());
+        let frames: usize = rs.iter().map(|r| r.frames).sum();
+        format!(
+            "  class={:<12} streams={:<4} frames={:<6} \
+             TTFT(ms) p50={} p95={}  TPOT(ms) p50={} p95={}",
+            class.name(), rs.len(), frames,
+            cell(&ttfts, 0.50), cell(&ttfts, 0.95),
+            cell(&tpots, 0.50), cell(&tpots, 0.95))
+    }).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -440,6 +510,43 @@ mod tests {
         assert!(!batch.contains("chain="), "{batch}");
         // the plain renderer is the empty-assignment case
         assert_eq!(class_rows(&s), class_rows_with_chains(&s, &[]));
+    }
+
+    #[test]
+    fn stream_records_measure_emission_time() {
+        let t = Instant::now();
+        let rec = StreamRecord {
+            id: 1,
+            class: SloClass::Interactive,
+            sent: t,
+            frames: 5,
+            first_frame: t + Duration::from_millis(40),
+            last_frame: t + Duration::from_millis(240),
+        };
+        assert!((stream_ttft_ms(&rec).unwrap() - 40.0).abs() < 1.0);
+        // 200ms over 4 inter-frame gaps
+        assert!((stream_tpot_ms(&rec).unwrap() - 50.0).abs() < 1.0);
+        // degenerate streams have no TPOT; empty ones no TTFT either
+        let one = StreamRecord { frames: 1, ..rec.clone() };
+        assert!(stream_tpot_ms(&one).is_none());
+        assert!(stream_ttft_ms(&one).is_some());
+        let zero = StreamRecord { frames: 0, ..rec.clone() };
+        assert!(stream_ttft_ms(&zero).is_none());
+
+        let mut batch = rec.clone();
+        batch.class = SloClass::Batch;
+        // a class with only degenerate streams (<2 frames): no TPOT data
+        let mut short = one.clone();
+        short.class = SloClass::Standard;
+        let rows = stream_class_rows(&[rec, one, zero, batch, short]);
+        assert_eq!(rows.len(), 3, "one row per class present: {rows:?}");
+        let irow = rows.iter().find(|r| r.contains("interactive")).unwrap();
+        assert!(irow.contains("streams=3"), "{irow}");
+        assert!(irow.contains("frames=6"), "{irow}");
+        // no-data percentiles render n/a, never a too-good-to-be-true 0.0
+        let srow = rows.iter().find(|r| r.contains("standard")).unwrap();
+        assert!(srow.contains("TPOT(ms) p50=     n/a"), "{srow}");
+        assert!(!srow.contains("TPOT(ms) p50=     0.0"), "{srow}");
     }
 
     #[test]

@@ -1,13 +1,27 @@
 //! Serving front-end: an engine thread owning the ChainRouter plus a
-//! JSON-lines TCP server.
+//! JSON-lines TCP server with optional per-token streaming.
 //!
-//! Protocol (one JSON object per line):
+//! Protocol (one JSON object per line; DESIGN.md §10):
 //!   request:  {"prompt": [1, 70, ...], "max_new": 32, "dataset": "gsm8k",
 //!              "slo_class": "interactive", "slo_ms": 2000.0,
-//!              "sample_seed": 7}
+//!              "sample_seed": 7, "stream": false}
 //!   response: {"id": 7, "tokens": [...], "ttft_ms": 12.3, "tpot_ms": 4.5,
 //!              "latency_ms": 200.1, "eos": false, "class": "interactive"}
 //!   shed:     {"id": 9, "rejected": "doomed", "class": "interactive"}
+//!
+//! With `"stream": true` the reply is a frame sequence instead of a
+//! single object: zero or more
+//!   {"event":"token","id":7,"index":0,"token":413}
+//! frames — one per committed token, in order, pushed as the engine
+//! commits them — terminated by exactly one
+//!   {"event":"done", ...response fields..., "frames": K}
+//! or one {"event":"shed", ...shed fields...}. Non-streaming requests
+//! (the default) get byte-identical responses to the pre-streaming
+//! protocol. A client that disconnects cancels its request — via the
+//! failed frame/response write, or an abortive-close probe while the
+//! handler waits — and the engine frees the slot and admits the next
+//! queued arrival (DESIGN.md §10 has the full frame grammar and cancel
+//! semantics; clean half-close clients keep being served).
 //!
 //! `slo_class`, `slo_ms` and `sample_seed` are optional (default:
 //! standard class, class target, engine-derived sampling stream). A
@@ -15,8 +29,9 @@
 //! response instead of a hang — clients can retry elsewhere.
 //!
 //! The engine thread multiplexes: it drains the submission channel, runs
-//! `tick()`, and routes finished/shed records back to per-request
-//! responders. Python is nowhere in this path.
+//! `tick()`, pushes newly committed tokens to per-request stream sinks,
+//! and routes finished/shed records back to per-request responders.
+//! Python is nowhere in this path.
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -40,15 +55,57 @@ pub const DEFAULT_MAX_CONNS: usize = 256;
 
 /// Messages into the engine thread.
 pub enum EngineMsg {
+    /// Buffered request: one [`EngineReply`] when it completes.
     Submit(Request, mpsc::Sender<EngineReply>),
+    /// Streaming request: incremental [`StreamEvent`]s as tokens commit.
+    SubmitStream(Request, mpsc::Sender<StreamEvent>),
+    /// Client withdrew request `id` (disconnect): free its slot / dequeue
+    /// it and record a Cancelled admission outcome.
+    Cancel(u64),
     Shutdown,
 }
 
-/// Per-request outcome delivered to the submitting client.
+/// Per-request outcome delivered to the submitting client. `Accepted`
+/// arrives first (the assigned id — what a connection handler needs to
+/// cancel on disconnect); `Done`/`Rejected` are terminal.
+/// [`request_reply`] filters `Accepted` out for callers that only want
+/// the terminal reply.
 #[derive(Debug, Clone)]
 pub enum EngineReply {
+    /// The request was queued under this engine-assigned id.
+    Accepted(u64),
     Done(Finished),
     Rejected(ShedRecord),
+}
+
+/// Incremental events of one streaming request, in order: one
+/// `Accepted` (engine-internal, never serialized to the wire), zero or
+/// more `Token`s, then exactly one `Done` — or a single `Shed` if
+/// admission rejected the request before it produced anything.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// The request was queued under this engine-assigned id (lets the
+    /// handler cancel on disconnect before any token exists). Not a wire
+    /// frame.
+    Accepted { id: u64 },
+    /// One newly committed token; `index` is its 0-based position in the
+    /// generated sequence (prompt excluded).
+    Token { id: u64, index: usize, token: i32 },
+    /// Terminal: the full timing record (tokens repeat the streamed ones).
+    Done(Finished),
+    /// Terminal: admission shed the request.
+    Shed(ShedRecord),
+}
+
+/// What the engine loop holds per in-flight request.
+enum Waiter {
+    Sync(mpsc::Sender<EngineReply>),
+    Stream {
+        sink: mpsc::Sender<StreamEvent>,
+        /// Generated tokens already delivered (the per-slot token-sink
+        /// watermark; `Finished.tokens[emitted..]` drains the tail).
+        emitted: usize,
+    },
 }
 
 /// Handle to a running engine thread.
@@ -57,55 +114,114 @@ pub struct EngineHandle {
     pub join: JoinHandle<Result<()>>,
 }
 
-/// Spawn the engine loop on its own thread.
+/// Spawn the engine loop on its own thread, over the XLA pool at
+/// `cfg.art_dir`.
 pub fn spawn_engine(cfg: EngineConfig) -> Result<EngineHandle> {
+    spawn_engine_with(move || ChainRouter::new(cfg))
+}
+
+/// Spawn the engine loop over a router built *inside* the engine thread
+/// by `factory`. The factory crosses the thread boundary, the router
+/// never does — `Backend` is deliberately not `Send` (see
+/// `coordinator::backend`), so this is how sim-backed servers (tests,
+/// artifact-free demos) come up.
+pub fn spawn_engine_with<F>(factory: F) -> Result<EngineHandle>
+where
+    F: FnOnce() -> Result<ChainRouter> + Send + 'static,
+{
     let (tx, rx) = mpsc::channel::<EngineMsg>();
     let join = std::thread::Builder::new()
         .name("specrouter-engine".into())
-        .spawn(move || engine_loop(cfg, rx))?;
+        .spawn(move || engine_loop(factory()?, rx))?;
     Ok(EngineHandle { tx, join })
 }
 
-fn engine_loop(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>)
-               -> Result<()> {
-    let mut router = ChainRouter::new(cfg)?;
-    let mut waiters: HashMap<u64, mpsc::Sender<EngineReply>> = HashMap::new();
-    let submit = |router: &mut ChainRouter, req: Request,
-                      reply: mpsc::Sender<EngineReply>,
-                      waiters: &mut HashMap<u64, mpsc::Sender<EngineReply>>| {
-        let (id, outcome) = router.submit_detailed(req);
-        if outcome.is_shed() {
-            // step 3 drains pop-time sheds every iteration, so the only
-            // pending record here is the one this submit just produced —
-            // deliver it to this client directly
-            if let Some(rec) = router.take_shed().into_iter()
-                .find(|r| r.id == id) {
-                let _ = reply.send(EngineReply::Rejected(rec));
+/// Submit a request, routing the shed record (if any) straight back to
+/// this waiter; step 3 of the loop drains pop-time sheds every iteration,
+/// so the only pending record here is the one this submit just produced.
+fn submit(router: &mut ChainRouter,
+          waiters: &mut HashMap<u64, Waiter>, req: Request,
+          waiter: Waiter) {
+    let (id, outcome) = router.submit_detailed(req);
+    if outcome.is_shed() {
+        if let Some(rec) = router.take_shed().into_iter()
+            .find(|r| r.id == id) {
+            match waiter {
+                Waiter::Sync(tx) => {
+                    let _ = tx.send(EngineReply::Rejected(rec));
+                }
+                Waiter::Stream { sink, .. } => {
+                    let _ = sink.send(StreamEvent::Shed(rec));
+                }
             }
-        } else {
-            waiters.insert(id, reply);
         }
-    };
+    } else {
+        // tell the handler its id up front: that is what makes a
+        // disconnect cancellable before any token has been produced. A
+        // failed send means the handler already gave up (client aborted
+        // between submission and this ack) — withdraw the request now,
+        // before it ever occupies a slot, instead of generating into a
+        // dead channel. This closes the pre-Accepted abort race for
+        // sync waiters too, which have no emission-time dead-sink check.
+        let delivered = match &waiter {
+            Waiter::Sync(tx) =>
+                tx.send(EngineReply::Accepted(id)).is_ok(),
+            Waiter::Stream { sink, .. } =>
+                sink.send(StreamEvent::Accepted { id }).is_ok(),
+        };
+        if delivered {
+            waiters.insert(id, waiter);
+        } else {
+            router.cancel(id);
+        }
+    }
+}
+
+/// Apply one message; returns true on shutdown.
+fn handle_msg(router: &mut ChainRouter,
+              waiters: &mut HashMap<u64, Waiter>, msg: EngineMsg) -> bool {
+    match msg {
+        EngineMsg::Submit(req, reply) => {
+            submit(router, waiters, req, Waiter::Sync(reply));
+            false
+        }
+        EngineMsg::SubmitStream(req, sink) => {
+            submit(router, waiters, req,
+                   Waiter::Stream { sink, emitted: 0 });
+            false
+        }
+        EngineMsg::Cancel(id) => {
+            router.cancel(id);
+            waiters.remove(&id);
+            false
+        }
+        EngineMsg::Shutdown => true,
+    }
+}
+
+fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
+               -> Result<()> {
+    let mut waiters: HashMap<u64, Waiter> = HashMap::new();
+    let mut cancels: Vec<u64> = Vec::new();
     loop {
         // 1. drain submissions (block briefly when idle to avoid spinning)
         let idle = router.batcher.is_idle();
         let mut shutdown = false;
         if idle {
             match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(EngineMsg::Submit(req, reply)) =>
-                    submit(&mut router, req, reply, &mut waiters),
-                Ok(EngineMsg::Shutdown) => shutdown = true,
+                Ok(msg) =>
+                    shutdown = handle_msg(&mut router, &mut waiters, msg),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(EngineMsg::Submit(req, reply)) =>
-                    submit(&mut router, req, reply, &mut waiters),
-                Ok(EngineMsg::Shutdown) => {
-                    shutdown = true;
-                    break;
+                Ok(msg) => {
+                    if handle_msg(&mut router, &mut waiters, msg) {
+                        shutdown = true;
+                        break;
+                    }
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -116,17 +232,73 @@ fn engine_loop(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>)
         }
         // 2. advance generation
         router.tick()?;
-        // 3. deliver completions and sheds — draining (not indexing) so a
-        //    long-running server does not accumulate every record ever
-        //    produced
+        // 3a. per-slot token sink: push tokens committed since the last
+        //     tick to their stream sinks. A dead sink means the client
+        //     hung up — withdraw the request so its slot frees for the
+        //     next queued arrival (can't mutate the router inside the
+        //     slot iteration, hence the two-phase cancel buffer).
+        cancels.clear();
+        for slot in router.batcher.slots.iter().flatten() {
+            let id = slot.req.id;
+            if let Some(Waiter::Stream { sink, emitted }) =
+                waiters.get_mut(&id) {
+                let gen = slot.generated();
+                while *emitted < gen.len() {
+                    let ev = StreamEvent::Token {
+                        id,
+                        index: *emitted,
+                        token: gen[*emitted],
+                    };
+                    if sink.send(ev).is_err() {
+                        cancels.push(id);
+                        break;
+                    }
+                    *emitted += 1;
+                }
+            }
+        }
+        for id in cancels.drain(..) {
+            router.cancel(id);
+            waiters.remove(&id);
+        }
+        // 3b. deliver completions and sheds — draining (not indexing) so
+        //     a long-running server does not accumulate every record ever
+        //     produced
         for f in router.drain_finished() {
-            if let Some(reply) = waiters.remove(&f.id) {
-                let _ = reply.send(EngineReply::Done(f));
+            match waiters.remove(&f.id) {
+                Some(Waiter::Sync(reply)) => {
+                    let _ = reply.send(EngineReply::Done(f));
+                }
+                Some(Waiter::Stream { sink, emitted }) => {
+                    // tokens committed on the finishing tick were freed
+                    // with the slot before 3a saw them: drain the tail
+                    // past the watermark, then the terminal record
+                    let id = f.id;
+                    let mut live = true;
+                    for (i, &t) in f.tokens.iter().enumerate()
+                        .skip(emitted) {
+                        if sink.send(StreamEvent::Token {
+                            id, index: i, token: t }).is_err() {
+                            live = false;
+                            break;
+                        }
+                    }
+                    if live {
+                        let _ = sink.send(StreamEvent::Done(f));
+                    }
+                }
+                None => {}
             }
         }
         for rec in router.take_shed() {
-            if let Some(reply) = waiters.remove(&rec.id) {
-                let _ = reply.send(EngineReply::Rejected(rec));
+            match waiters.remove(&rec.id) {
+                Some(Waiter::Sync(reply)) => {
+                    let _ = reply.send(EngineReply::Rejected(rec));
+                }
+                Some(Waiter::Stream { sink, .. }) => {
+                    let _ = sink.send(StreamEvent::Shed(rec));
+                }
+                None => {}
             }
         }
         if shutdown && router.batcher.is_idle() {
@@ -135,14 +307,20 @@ fn engine_loop(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>)
     }
 }
 
-/// Submit one request to a running engine and wait for the raw reply
-/// (completion or structured rejection).
+/// Submit one request to a running engine and wait for the *terminal*
+/// reply (completion or structured rejection); the initial
+/// [`EngineReply::Accepted`] acknowledgement is filtered out.
 pub fn request_reply(tx: &mpsc::Sender<EngineMsg>, req: Request)
                      -> Result<EngineReply> {
     let (reply_tx, reply_rx) = mpsc::channel();
     tx.send(EngineMsg::Submit(req, reply_tx)).ok()
         .context("engine thread gone")?;
-    reply_rx.recv().context("engine dropped the request")
+    loop {
+        match reply_rx.recv().context("engine dropped the request")? {
+            EngineReply::Accepted(_) => continue,
+            terminal => return Ok(terminal),
+        }
+    }
 }
 
 /// Submit one request and wait for completion; a shed becomes an error.
@@ -162,6 +340,8 @@ pub fn request_sync(tx: &mpsc::Sender<EngineMsg>, dataset: &str,
         EngineReply::Done(f) => Ok(f),
         EngineReply::Rejected(rec) =>
             bail!("request rejected: {}", rec.reason),
+        EngineReply::Accepted(_) =>
+            bail!("non-terminal reply leaked through request_reply"),
     }
 }
 
@@ -188,6 +368,10 @@ fn shed_to_json(rec: &ShedRecord) -> Value {
     ])
 }
 
+fn error_to_json(e: &anyhow::Error) -> Value {
+    json::obj(vec![("error", json::s(&format!("{e:#}")))])
+}
+
 fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -197,17 +381,169 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match serve_one(&tx, &line) {
-            Ok(v) => v,
-            Err(e) => json::obj(vec![("error", json::s(&format!("{e:#}")))]),
-        };
-        writeln!(writer, "{resp}")?;
+        match parse_request(&line) {
+            // a malformed request — including a malformed `stream:true`
+            // one — gets a single structured error line; the connection
+            // stays usable for the next request
+            Err(e) => writeln!(writer, "{}", error_to_json(&e))?,
+            Ok((req, false)) => buffered_reply(&tx, req, &mut writer)?,
+            Ok((req, true)) => stream_reply(&tx, req, &mut writer)?,
+        }
     }
     log::debug!("connection {peer:?} closed");
     Ok(())
 }
 
-fn serve_one(tx: &mpsc::Sender<EngineMsg>, line: &str) -> Result<Value> {
+/// True when the peer connection has been torn down *abortively*
+/// (reset). A clean EOF (`Ok(0)`) is deliberately NOT a disconnect: a
+/// one-shot JSON-lines client may legally half-close its write side and
+/// keep reading (`printf '…' | nc`), and the pre-streaming server served
+/// such clients — only an error on peek (connection reset and friends)
+/// proves nobody is reading. A fully-`close()`d client that merely sent
+/// FIN is caught later instead, when a frame/response write hits the
+/// resulting RST.
+fn socket_aborted(s: &TcpStream) -> bool {
+    if s.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut buf = [0u8; 1];
+    let aborted = match s.peek(&mut buf) {
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = s.set_nonblocking(false);
+    aborted
+}
+
+/// Drive one buffered request over the sync reply channel. The initial
+/// `Accepted` event carries the id, so an aborted client connection —
+/// probed every 100 ms, since a buffered connection writes nothing until
+/// completion — cancels the request engine-side instead of burning its
+/// slot. The response on the wire is the pre-streaming single object,
+/// byte-identical, and completion costs no per-token events.
+fn buffered_reply(tx: &mpsc::Sender<EngineMsg>, req: Request,
+                  writer: &mut TcpStream) -> Result<()> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    if tx.send(EngineMsg::Submit(req, reply_tx)).is_err() {
+        // the client is still alive: tell it the backend died instead
+        // of silently closing the connection
+        let e = anyhow::anyhow!("engine thread gone");
+        let _ = writeln!(writer, "{}", error_to_json(&e));
+        return Err(e);
+    }
+    let mut id = None;
+    loop {
+        match reply_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(EngineReply::Accepted(rid)) => id = Some(rid),
+            Ok(EngineReply::Done(f)) => {
+                writeln!(writer, "{}", finished_to_json(&f))?;
+                return Ok(());
+            }
+            Ok(EngineReply::Rejected(rec)) => {
+                writeln!(writer, "{}", shed_to_json(&rec))?;
+                return Ok(());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if socket_aborted(writer) {
+                    // client torn down mid-wait: withdraw the request
+                    // so its slot frees for the next queued arrival
+                    if let Some(id) = id {
+                        let _ = tx.send(EngineMsg::Cancel(id));
+                    }
+                    bail!("client connection aborted before completion");
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                let e = anyhow::anyhow!("engine dropped the request");
+                let _ = writeln!(writer, "{}", error_to_json(&e));
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Drive one streaming request: submit, relay frames as they arrive,
+/// translate a broken client connection into an engine-side cancel.
+fn stream_reply(tx: &mpsc::Sender<EngineMsg>, req: Request,
+                writer: &mut TcpStream) -> Result<()> {
+    let (ev_tx, ev_rx) = mpsc::channel();
+    if tx.send(EngineMsg::SubmitStream(req, ev_tx)).is_err() {
+        let e = anyhow::anyhow!("engine thread gone");
+        let _ = writeln!(writer, "{}", error_to_json(&e));
+        return Err(e);
+    }
+    let mut frames = 0usize;
+    let mut req_id = None;
+    loop {
+        let ev = match ev_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(ev) => ev,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // no frame yet (queued, or a slow tick): probe for an
+                // aborted client so a dead stream doesn't pin a
+                // connection slot — and its request — for the whole
+                // queue wait
+                if socket_aborted(writer) {
+                    if let Some(id) = req_id {
+                        let _ = tx.send(EngineMsg::Cancel(id));
+                    }
+                    bail!("client connection aborted before completion");
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // terminal error frame so a live client is not left
+                // parsing silence (the error object is a documented
+                // stream terminator)
+                let e = anyhow::anyhow!("engine dropped the stream");
+                let _ = writeln!(writer, "{}", error_to_json(&e));
+                return Err(e);
+            }
+        };
+        match ev {
+            StreamEvent::Accepted { id } => req_id = Some(id),
+            StreamEvent::Token { id, index, token } => {
+                req_id = Some(id);
+                let frame = json::obj(vec![
+                    ("event", json::s("token")),
+                    ("id", json::num(id as f64)),
+                    ("index", json::num(index as f64)),
+                    ("token", json::num(token as f64)),
+                ]);
+                if let Err(e) = writeln!(writer, "{frame}") {
+                    // the client went away mid-stream: withdraw the
+                    // request so its slot frees for the next queued
+                    // arrival. Returning also drops ev_rx, so the engine
+                    // notices on its next emission even if this Cancel
+                    // races the request's completion.
+                    let _ = tx.send(EngineMsg::Cancel(id));
+                    return Err(e.into());
+                }
+                frames += 1;
+            }
+            StreamEvent::Done(f) => {
+                let mut done = finished_to_json(&f);
+                if let Value::Obj(m) = &mut done {
+                    m.insert("event".into(), json::s("done"));
+                    m.insert("frames".into(), json::num(frames as f64));
+                }
+                writeln!(writer, "{done}")?;
+                return Ok(());
+            }
+            StreamEvent::Shed(rec) => {
+                let mut shed = shed_to_json(&rec);
+                if let Value::Obj(m) = &mut shed {
+                    m.insert("event".into(), json::s("shed"));
+                }
+                writeln!(writer, "{shed}")?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Parse one request line into a [`Request`] plus its `stream` flag.
+fn parse_request(line: &str) -> Result<(Request, bool)> {
     let v = json::parse(line).context("bad request JSON")?;
     let prompt: Vec<i32> = v.get("prompt")?.as_arr()?
         .iter()
@@ -243,7 +579,12 @@ fn serve_one(tx: &mpsc::Sender<EngineMsg>, line: &str) -> Result<Value> {
             Ok(s as u64)
         })
         .transpose()?;
-    let reply = request_reply(tx, Request {
+    let stream = match v.opt("stream") {
+        None => false,
+        Some(Value::Bool(b)) => *b,
+        Some(other) => bail!("stream must be a boolean, got {other}"),
+    };
+    Ok((Request {
         id: 0,
         dataset,
         prompt,
@@ -252,11 +593,7 @@ fn serve_one(tx: &mpsc::Sender<EngineMsg>, line: &str) -> Result<Value> {
         class,
         slo_ms,
         sample_seed,
-    })?;
-    Ok(match reply {
-        EngineReply::Done(f) => finished_to_json(&f),
-        EngineReply::Rejected(rec) => shed_to_json(&rec),
-    })
+    }, stream))
 }
 
 /// Decrements the live-connection counter when a handler exits, however
@@ -325,12 +662,9 @@ pub fn client_request(addr: std::net::SocketAddr, dataset: &str,
     client_request_opts(addr, dataset, prompt, max_new, None, None)
 }
 
-/// `client_request` with explicit SLO class / target fields.
-pub fn client_request_opts(addr: std::net::SocketAddr, dataset: &str,
-                           prompt: &[i32], max_new: usize,
-                           slo_class: Option<&str>, slo_ms: Option<f64>)
-                           -> Result<Value> {
-    let mut stream = TcpStream::connect(addr)?;
+fn request_fields(dataset: &str, prompt: &[i32], max_new: usize,
+                  slo_class: Option<&str>, slo_ms: Option<f64>)
+                  -> Vec<(&'static str, Value)> {
     let mut fields = vec![
         ("prompt", json::arr(prompt.iter()
             .map(|&t| json::num(t as f64)).collect())),
@@ -343,10 +677,52 @@ pub fn client_request_opts(addr: std::net::SocketAddr, dataset: &str,
     if let Some(s) = slo_ms {
         fields.push(("slo_ms", json::num(s)));
     }
-    let req = json::obj(fields);
+    fields
+}
+
+/// `client_request` with explicit SLO class / target fields.
+pub fn client_request_opts(addr: std::net::SocketAddr, dataset: &str,
+                           prompt: &[i32], max_new: usize,
+                           slo_class: Option<&str>, slo_ms: Option<f64>)
+                           -> Result<Value> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = json::obj(request_fields(dataset, prompt, max_new, slo_class,
+                                       slo_ms));
     writeln!(stream, "{req}")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;
     json::parse(line.trim())
+}
+
+/// Streaming client: sends one `stream:true` request and collects every
+/// frame — token frames plus the terminal `done`/`shed` frame (or a
+/// single `error` object) — in arrival order.
+pub fn client_request_stream(addr: std::net::SocketAddr, dataset: &str,
+                             prompt: &[i32], max_new: usize,
+                             slo_class: Option<&str>, slo_ms: Option<f64>)
+                             -> Result<Vec<Value>> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut fields = request_fields(dataset, prompt, max_new, slo_class,
+                                    slo_ms);
+    fields.push(("stream", Value::Bool(true)));
+    let req = json::obj(fields);
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream);
+    let mut frames = Vec::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("connection closed mid-stream after {} frames",
+                  frames.len());
+        }
+        let v = json::parse(line.trim())?;
+        let terminal = v.opt("error").is_some()
+            || v.opt("event").and_then(|e| e.as_str().ok())
+                .is_some_and(|e| e == "done" || e == "shed");
+        frames.push(v);
+        if terminal {
+            return Ok(frames);
+        }
+    }
 }

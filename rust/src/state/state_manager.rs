@@ -57,12 +57,18 @@ impl StateManager {
         }
     }
 
-    /// Get-or-create the state for a model.
+    /// Get-or-create the state for a model. Runs every tick for every
+    /// chain member, so the hit path must not allocate: probe with the
+    /// borrowed key first and only materialize the owned `String` on
+    /// first insertion (the `entry` API would allocate the key on every
+    /// call — DESIGN.md §8/§10 full-tick zero-alloc gate).
     pub fn ensure(&mut self, model: &str, dims: KvDims, state_len: usize)
                   -> &mut ModelState {
-        self.states
-            .entry(model.to_string())
-            .or_insert_with(|| ModelState::new(model, dims, state_len))
+        if !self.states.contains_key(model) {
+            self.states.insert(model.to_string(),
+                               ModelState::new(model, dims, state_len));
+        }
+        self.states.get_mut(model).unwrap()
     }
 
     pub fn get(&self, model: &str) -> Result<&ModelState> {

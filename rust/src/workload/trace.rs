@@ -16,6 +16,10 @@ pub struct TraceEntry {
     pub max_new: usize,
     /// Service class of the request (absent in old traces = standard).
     pub class: SloClass,
+    /// Replay this entry through the streaming protocol (`stream:true`
+    /// on the wire, per-token frames; DESIGN.md §10). Absent in old
+    /// traces = buffered, so recorded workloads replay unchanged.
+    pub stream: bool,
 }
 
 pub fn save_trace(path: &Path, trace: &[TraceEntry]) -> Result<()> {
@@ -27,6 +31,7 @@ pub fn save_trace(path: &Path, trace: &[TraceEntry]) -> Result<()> {
                 .map(|&t| json::num(t as f64)).collect())),
             ("max_new", json::num(e.max_new as f64)),
             ("slo_class", json::s(e.class.name())),
+            ("stream", Value::Bool(e.stream)),
         ])
     }).collect();
     std::fs::write(path, json::arr(entries).to_string())
@@ -49,6 +54,13 @@ pub fn load_trace(path: &Path) -> Result<Vec<TraceEntry>> {
                 Some(c) => SloClass::parse(c.as_str()?)?,
                 None => SloClass::Standard,
             },
+            stream: match e.opt("stream") {
+                Some(Value::Bool(b)) => *b,
+                Some(other) => {
+                    anyhow::bail!("stream must be a boolean, got {other}")
+                }
+                None => false,
+            },
         })
     }).collect()
 }
@@ -63,10 +75,10 @@ mod tests {
         let t = vec![
             TraceEntry { offset_s: 0.0, dataset: "gsm8k".into(),
                          prompt: vec![1, 70, 71], max_new: 8,
-                         class: SloClass::Interactive },
+                         class: SloClass::Interactive, stream: true },
             TraceEntry { offset_s: 0.25, dataset: "mtbench".into(),
                          prompt: vec![1, 330], max_new: 4,
-                         class: SloClass::Standard },
+                         class: SloClass::Standard, stream: false },
         ];
         save_trace(&dir, &t).unwrap();
         let back = load_trace(&dir).unwrap();
@@ -81,6 +93,8 @@ mod tests {
             "prompt":[1,70],"max_new":4}]"#).unwrap();
         let back = load_trace(&dir).unwrap();
         assert_eq!(back[0].class, SloClass::Standard);
+        assert!(!back[0].stream,
+                "legacy traces must replay as buffered requests");
         std::fs::remove_file(dir).ok();
     }
 

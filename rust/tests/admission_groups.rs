@@ -156,3 +156,46 @@ fn mixed_classes_step_in_separate_groups_with_complete_attribution() {
         assert!(r.steps > 0);
     }
 }
+
+#[test]
+fn cancelled_requests_are_not_sheds_and_attribution_stays_complete() {
+    // ISSUE 4: a mid-flight cancel (streaming client disconnect) must
+    // keep the admission/group invariants intact — it is accounted as a
+    // Cancelled outcome, NOT a shed, and the per-group token attribution
+    // still sums to the profiler's committed total (the tokens the
+    // cancelled request committed before withdrawing included).
+    let mut router = router(2);
+    let (a, out) = router.submit_detailed(req(SloClass::Interactive, 40, 31));
+    assert!(!out.is_shed());
+    for _ in 0..3 {
+        router.tick().expect("tick");
+    }
+    assert!(router.cancel(a));
+    let adm = &router.batcher.admission;
+    assert_eq!(adm.cancelled_total, 1);
+    assert_eq!(adm.cancelled_by_class(SloClass::Interactive), 1);
+    assert_eq!(adm.shed_total, 0, "a cancel must not count as a shed");
+    assert!(router.take_shed().is_empty());
+
+    // the freed slot serves a new request of another class
+    let (b, out) = router.submit_detailed(req(SloClass::Standard, 6, 32));
+    assert!(!out.is_shed());
+    router.run_until_idle(10_000).expect("run");
+    assert!(router.finished.iter().any(|f| f.id == b));
+    assert!(!router.finished.iter().any(|f| f.id == a),
+            "cancelled request must not finish");
+
+    // attribution invariant: group tokens == profiler committed total,
+    // even though A's tokens never reached a Finished record
+    let table = router.prof.group_table();
+    let group_tokens: u64 = table.iter().map(|(_, _, _, t)| *t).sum();
+    assert_eq!(group_tokens, router.prof.committed_tokens);
+    assert!(table.iter().any(|(g, _, steps, _)|
+        g == "interactive" && *steps > 0),
+        "the cancelled request ran before withdrawing: {table:?}");
+
+    // metrics: interactive appears in no class summary (nothing finished
+    // or shed there) — cancels are invisible to SLO attainment
+    let s = metrics::summarize_with_shed(&router.finished, 1e9, &[]);
+    assert!(s.class_summary(SloClass::Interactive).is_none());
+}

@@ -140,3 +140,89 @@ fn physical_truncation_counters_advance_under_speculation() {
             || router.states.physical_truncations > 0,
             "no rollback activity recorded across 160 speculative tokens");
 }
+
+/// Deterministic sim router for the cancellation tests: eos_prob 0 means
+/// a long request cannot finish on its own mid-test.
+fn cancel_router(batch: usize) -> specrouter::coordinator::ChainRouter {
+    use specrouter::config::EngineConfig;
+    use specrouter::coordinator::{ChainRouter, SimBackend, SimSpec};
+    let mut spec = SimSpec::small_pool();
+    spec.eos_prob = 0.0;
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = batch;
+    cfg.window = 4;
+    cfg.target = "m2".into();
+    cfg.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    ChainRouter::with_backend(
+        cfg, std::sync::Arc::new(SimBackend::new(spec)))
+        .expect("sim router")
+}
+
+fn cancel_req(prompt: Vec<i32>, max_new: usize) -> Request {
+    Request {
+        id: 0,
+        dataset: "gsm8k".into(),
+        prompt,
+        max_new,
+        arrival: Instant::now(),
+        class: SloClass::Standard,
+        slo_ms: None,
+        sample_seed: None,
+    }
+}
+
+#[test]
+fn cancel_frees_slot_and_admits_queued_request() {
+    let mut router = cancel_router(1);
+    let a = router.submit(cancel_req(vec![1, 70, 71], 80)).unwrap();
+    // admit + a few generation ticks: A owns the only slot
+    for _ in 0..4 {
+        router.tick().unwrap();
+    }
+    assert_eq!(router.batcher.active(), 1);
+    let b = router.submit(cancel_req(vec![1, 80, 81], 6)).unwrap();
+    assert_eq!(router.batcher.queued(), 1, "B must wait behind A");
+
+    assert!(router.cancel(a), "known in-flight id must cancel");
+    assert_eq!(router.batcher.active(), 0, "slot freed immediately");
+    assert_eq!(router.batcher.admission.cancelled_total, 1);
+    assert_eq!(router.batcher.admission.cancelled_by_class(
+        SloClass::Standard), 1);
+    // a cancel is not a shed
+    assert_eq!(router.batcher.admission.shed_total, 0);
+    assert!(router.take_shed().is_empty());
+    // the freed slot's model states are fully cleared
+    router.states.check_frontiers(&[None]).unwrap();
+
+    // B is admitted into the freed slot and runs to completion
+    router.run_until_idle(10_000).unwrap();
+    let fin = std::mem::take(&mut router.finished);
+    assert!(fin.iter().any(|f| f.id == b && f.tokens.len() == 6),
+            "queued request must complete after the cancel: {fin:?}");
+    assert!(!fin.iter().any(|f| f.id == a),
+            "a cancelled request must not produce a Finished record");
+    // cancelling an already-gone id is a no-op
+    assert!(!router.cancel(a));
+    assert!(!router.cancel(999));
+    assert_eq!(router.batcher.admission.cancelled_total, 1);
+}
+
+#[test]
+fn cancel_queued_request_never_occupies_a_slot() {
+    let mut router = cancel_router(1);
+    let a = router.submit(cancel_req(vec![1, 70, 71], 40)).unwrap();
+    router.tick().unwrap(); // A admitted
+    let b = router.submit(cancel_req(vec![1, 80, 81], 4)).unwrap();
+    assert_eq!(router.batcher.queued(), 1);
+    assert!(router.cancel(b), "queued id must cancel");
+    assert_eq!(router.batcher.queued(), 0);
+    assert_eq!(router.batcher.admission.cancelled_total, 1);
+    router.run_until_idle(10_000).unwrap();
+    let fin = std::mem::take(&mut router.finished);
+    assert!(fin.iter().any(|f| f.id == a && f.tokens.len() == 40));
+    assert!(!fin.iter().any(|f| f.id == b),
+            "cancelled queued request must never be served");
+}

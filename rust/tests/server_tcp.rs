@@ -1,13 +1,194 @@
 //! TCP front-end integration: JSON-lines protocol round-trip against a
-//! live engine thread on an ephemeral port, admission shed responses, and
-//! the connection cap.
+//! live engine thread on an ephemeral port, admission shed responses, the
+//! connection cap, and the streaming protocol (DESIGN.md §10) on the
+//! SimBackend — incremental token frames, mid-stream disconnect, and
+//! malformed-request rejection.
 mod common;
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
-use specrouter::config::Mode;
-use specrouter::server::{client_request, client_request_opts, serve_tcp,
-                         serve_tcp_opts, spawn_engine, EngineMsg};
+use specrouter::config::{EngineConfig, Mode};
+use specrouter::coordinator::{ChainRouter, SimBackend, SimSpec};
+use specrouter::server::{client_request, client_request_opts,
+                         client_request_stream, serve_tcp, serve_tcp_opts,
+                         spawn_engine, spawn_engine_with, EngineHandle,
+                         EngineMsg};
+
+/// Engine + TCP front-end over the deterministic SimBackend (eos_prob 0
+/// so long requests cannot end early), on an ephemeral port. The router
+/// is built inside the engine thread — `Backend` is not `Send`.
+fn sim_server(batch: usize) -> (EngineHandle, std::net::SocketAddr) {
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = batch;
+    cfg.window = 4;
+    cfg.target = "m2".into();
+    cfg.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    let mut spec = SimSpec::small_pool();
+    spec.eos_prob = 0.0;
+    let engine = spawn_engine_with(move || {
+        ChainRouter::with_backend(cfg, Arc::new(SimBackend::new(spec)))
+    }).expect("sim engine");
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let tx = engine.tx.clone();
+    std::thread::spawn(move || {
+        serve_tcp("127.0.0.1:0", tx, Some(ready_tx)).ok();
+    });
+    let addr = ready_rx.recv().expect("server ready");
+    (engine, addr)
+}
+
+/// A fixed prompt inside the sim manifest's vocab/prefill limits.
+fn sim_prompt() -> Vec<i32> {
+    vec![1, 70, 71, 72]
+}
+
+#[test]
+fn streaming_e2e_incremental_frames_match_committed_tokens() {
+    let (engine, addr) = sim_server(4);
+    let frames = client_request_stream(addr, "gsm8k", &sim_prompt(), 8,
+                                       None, None).expect("stream");
+    // first `token` frame observed before `done`, and exactly one
+    // terminal frame
+    assert!(frames.len() >= 2, "expected token + done, got {frames:?}");
+    assert_eq!(frames[0].get("event").unwrap().as_str().unwrap(), "token",
+               "first frame must be a token: {:?}", frames[0]);
+    let done = frames.last().unwrap();
+    assert_eq!(done.get("event").unwrap().as_str().unwrap(), "done");
+    let tokens: Vec<i64> = done.get("tokens").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_f64().unwrap() as i64).collect();
+    assert!(!tokens.is_empty() && tokens.len() <= 8);
+    // frame count equals committed length, indices are in order, and
+    // every streamed token matches the final record
+    let token_frames = &frames[..frames.len() - 1];
+    assert_eq!(token_frames.len(), tokens.len());
+    assert_eq!(done.get("frames").unwrap().as_usize().unwrap(),
+               tokens.len());
+    let id = done.get("id").unwrap().as_f64().unwrap();
+    for (i, f) in token_frames.iter().enumerate() {
+        assert_eq!(f.get("event").unwrap().as_str().unwrap(), "token");
+        assert_eq!(f.get("index").unwrap().as_usize().unwrap(), i);
+        assert_eq!(f.get("token").unwrap().as_f64().unwrap() as i64,
+                   tokens[i], "frame {i} token mismatch");
+        assert_eq!(f.get("id").unwrap().as_f64().unwrap(), id);
+    }
+    assert!(done.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+    // a non-streaming request on the same server keeps the pre-streaming
+    // response shape exactly: one object, same keys, no `event`
+    let resp = client_request(addr, "gsm8k", &sim_prompt(), 6)
+        .expect("buffered client");
+    assert!(resp.opt("event").is_none(), "buffered reply grew: {resp}");
+    let keys: Vec<&str> = resp.as_obj().unwrap().keys()
+        .map(String::as_str).collect();
+    assert_eq!(keys, vec!["class", "eos", "id", "latency_ms", "tokens",
+                          "tpot_ms", "ttft_ms"],
+               "buffered response keys changed");
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn stream_disconnect_mid_generation_keeps_engine_serving() {
+    use std::io::{BufRead, BufReader, Write};
+    // batch 1: the disconnected stream must release the only slot or the
+    // follow-up request could never be admitted before it finishes
+    let (engine, addr) = sim_server(1);
+    {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        // long request (eos_prob 0: cannot finish early on its own)
+        writeln!(s, "{}",
+                 r#"{"prompt":[1,70,71],"max_new":80,"stream":true}"#)
+            .unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"event\":\"token\""),
+                "expected a first token frame, got {line}");
+        // drop both halves: the server's next frame write fails, which
+        // cancels the request engine-side and frees the slot
+    }
+    // a queued request is admitted into the freed slot and completes
+    let resp = client_request(addr, "gsm8k", &sim_prompt(), 4)
+        .expect("post-disconnect client");
+    assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
+    assert!(!resp.get("tokens").unwrap().as_arr().unwrap().is_empty());
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn buffered_disconnect_mid_wait_keeps_engine_serving() {
+    use std::io::Write;
+    // batch 1: a buffered client that vanishes while waiting must not
+    // wedge the engine. A clean close() is deliberately NOT treated as
+    // a disconnect while waiting (half-close clients are legal); the
+    // dead client surfaces at the response write instead, and an
+    // abortively-reset one at the 100ms probe — either way the slot
+    // frees and the next client is served
+    let (engine, addr) = sim_server(1);
+    {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(s, "{}", r#"{"prompt":[1,70,71],"max_new":80}"#).unwrap();
+        // close without ever reading the response
+    }
+    let resp = client_request(addr, "gsm8k", &sim_prompt(), 4)
+        .expect("post-disconnect client");
+    assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
+    assert!(!resp.get("tokens").unwrap().as_arr().unwrap().is_empty());
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_stream_requests_get_structured_errors() {
+    use std::io::{BufRead, BufReader, Write};
+    let (engine, addr) = sim_server(1);
+    let s = std::net::TcpStream::connect(addr).unwrap();
+    let mut writer = s.try_clone().unwrap();
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+
+    // stream:true with no prompt: one error line, no frames
+    writeln!(writer, "{}", r#"{"stream":true}"#).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    assert!(!line.contains("\"event\""), "{line}");
+
+    // stream must be a boolean — a truthy string is rejected, not coerced
+    line.clear();
+    writeln!(writer, "{}",
+             r#"{"prompt":[1,70],"max_new":4,"stream":"yes"}"#).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error") && line.contains("boolean"), "{line}");
+
+    // the connection survives malformed requests: a well-formed streaming
+    // request on the same socket completes normally
+    line.clear();
+    writeln!(writer, "{}",
+             r#"{"prompt":[1,70,71],"max_new":3,"stream":true}"#).unwrap();
+    let mut events = Vec::new();
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = specrouter::json::parse(line.trim()).unwrap();
+        let ev = v.get("event").unwrap().as_str().unwrap().to_string();
+        events.push(ev.clone());
+        if ev == "done" {
+            break;
+        }
+    }
+    assert!(events.iter().all(|e| e == "token" || e == "done"),
+            "{events:?}");
+    assert!(events.len() >= 2, "{events:?}");
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
 
 #[test]
 fn tcp_roundtrip_and_concurrent_clients() {
