@@ -6,14 +6,21 @@
 //! views, committed-sequence pushes, resets) is excluded — the number
 //! reported is exactly what one engine step allocates.
 //!
-//! Acceptance (ISSUE 2, extended by ISSUE 4): after a warm-up phase has
-//! grown every `StepScratch` buffer to capacity, a steady-state **greedy**
-//! spec step must perform **zero** heap allocations — and so must the
-//! **whole engine tick** (`full-tick` row: counting wraps
-//! `ChainRouter::tick` in admission-idle steady state, covering the
-//! recycled slot-seq views, cached chains, commit loop and mask clamps).
+//! Acceptance (ISSUE 2, extended by ISSUEs 4 and 5): after a warm-up
+//! phase has grown every `StepScratch` arena to capacity, a steady-state
+//! **greedy** spec step must perform **zero** heap allocations — and so
+//! must the **whole engine tick** (`full-tick` row: counting wraps
+//! `ChainRouter::tick` in admission-idle steady state) at **every worker
+//! count** (`parallel-tick:wN` rows: the scatter/gather tick over the
+//! fixed worker pool, DESIGN.md §11 — task lists, sub-batch views, RNG
+//! snapshots and per-group recorders are all recycled, and the pool's
+//! rendezvous allocates nothing). The parallel rows also report the
+//! wall-clock speedup of the heterogeneous 2-group scenario and assert
+//! the groups commit token-identical totals at every worker count.
 //! The bench prints a table, writes `BENCH_hotpath.json` at the repo root
-//! (schema in DESIGN.md §8) and exits non-zero if a greedy row allocates.
+//! (schema in DESIGN.md §8; the `parallel` object feeds the perf gate's
+//! `parallel_tick_w4_time_ratio` check) and exits non-zero if a greedy
+//! row allocates.
 //!
 //!   cargo bench --bench bench_hotpath
 //!   SPECROUTER_QUICK=1 shrinks the measured step count (CI smoke runs).
@@ -25,11 +32,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use specrouter::admission::SloClass;
-use specrouter::config::{AcceptRule, EngineConfig, Mode};
+use specrouter::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
 use specrouter::coordinator::{run_spec_step, Backend, Chain, ChainRouter,
-                              Profiler, Request, SimBackend, SimSpec,
-                              SimilarityTracker, SlotSeqs, StepCtx,
-                              StepScratch};
+                              ProfSimSink, Request, SimBackend, SimSpec,
+                              SlotSeqs, StepCtx, StepScratch};
 use specrouter::harness::{prompt_set_from, quick, run_offline_backend,
                           sim_backend, with_dataset, Table};
 use specrouter::rng::Rng;
@@ -104,17 +110,17 @@ struct Measured {
     bytes: u64,
 }
 
-/// Shared measurement driver for every row: owns the engine-state setup,
-/// the capacity-reset loop (outside the counting window — arenas stay
-/// warm across resets) and the warm-up/measure/elapsed bookkeeping, so
-/// the single-chain and grouped rows stay comparable by construction.
-/// `step` advances every slot one engine step — toggling COUNTING around
-/// its `run_spec_step` call(s) only — and returns the tokens committed.
+/// Shared measurement driver for every spec-step row: owns the
+/// engine-state setup, the capacity-reset loop (outside the counting
+/// window — arenas stay warm across resets) and the warm-up/measure/
+/// elapsed bookkeeping, so the single-chain and grouped rows stay
+/// comparable by construction. `step` advances every slot one engine
+/// step — toggling COUNTING around its `run_spec_step` call(s) only —
+/// and returns the tokens committed.
 fn drive(backend: &SimBackend, models: &[String], batch: usize,
          reset_guard: usize, warmup: u64, measure: u64,
          mut step: impl FnMut(&mut StateManager, &mut Vec<Vec<i32>>,
-                              &mut Profiler, &mut SimilarityTracker,
-                              &mut [Rng]) -> u64)
+                              &mut ProfSimSink, &mut [Rng]) -> u64)
          -> Measured {
     let seq_cap = Backend::manifest(backend).seq;
     let fresh_committed = |batch: usize| -> Vec<Vec<i32>> {
@@ -128,8 +134,7 @@ fn drive(backend: &SimBackend, models: &[String], batch: usize,
     };
     let mut states = mk_states(backend, batch, models);
     let mut committed = fresh_committed(batch);
-    let mut prof = Profiler::new(0.2);
-    let mut sim = SimilarityTracker::new(0.2);
+    let mut sink = ProfSimSink::new(0.2);
     let mut rngs: Vec<Rng> = (0..batch)
         .map(|b| Rng::new(17 ^ b as u64))
         .collect();
@@ -155,8 +160,7 @@ fn drive(backend: &SimBackend, models: &[String], batch: usize,
             }
             continue;
         }
-        let toks = step(&mut states, &mut committed, &mut prof, &mut sim,
-                        &mut rngs);
+        let toks = step(&mut states, &mut committed, &mut sink, &mut rngs);
         if measuring {
             measured_tokens += toks;
         }
@@ -203,16 +207,15 @@ fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
     let reset_guard = 2 * (chain.window.max(4) + 1);
     let mut scratch = StepScratch::new();
     let m = drive(backend, &chain.models, batch, reset_guard, warmup,
-                  measure, |states, committed, prof, sim, rngs| {
+                  measure, |states, committed, sink, rngs| {
         {
             let seqs: SlotSeqs = committed.iter()
                 .map(|c| Some(c.as_slice()))
                 .collect();
             let mut ctx = StepCtx {
                 exec: backend,
-                prof: &mut *prof,
-                sim: &mut *sim,
-                states: &mut *states,
+                rec: &mut *sink,
+                states: states.shard(),
                 batch,
                 vocab,
                 rule,
@@ -261,7 +264,7 @@ fn run_grouped(backend: &SimBackend, configs: &[(Chain, Vec<usize>)],
     let mut scratches: Vec<StepScratch> =
         configs.iter().map(|_| StepScratch::new()).collect();
     let m = drive(backend, &models, batch, reset_guard, warmup, measure,
-                  |states, committed, prof, sim, rngs| {
+                  |states, committed, sink, rngs| {
         let mut toks = 0u64;
         for (gi, (chain, members)) in configs.iter().enumerate() {
             {
@@ -274,9 +277,8 @@ fn run_grouped(backend: &SimBackend, configs: &[(Chain, Vec<usize>)],
                     .collect();
                 let mut ctx = StepCtx {
                     exec: backend,
-                    prof: &mut *prof,
-                    sim: &mut *sim,
-                    states: &mut *states,
+                    rec: &mut *sink,
+                    states: states.shard_for(members),
                     batch,
                     vocab,
                     rule,
@@ -304,6 +306,89 @@ fn run_grouped(backend: &SimBackend, configs: &[(Chain, Vec<usize>)],
     row_from(label, rule_label, batch, measure, m)
 }
 
+/// Measured block of real `ChainRouter::tick` calls, in waves sized so
+/// no request completes inside the counting window (completion and the
+/// refill admission allocate by design). Shared by the full-tick and
+/// parallel-tick rows.
+struct TickRun {
+    measured: u64,
+    tokens: u64,
+    elapsed: f64,
+    allocs: u64,
+    bytes: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drive_ticks(router: &mut ChainRouter, batch: usize, window: usize,
+               max_new: usize, warmup: u64, measure: u64,
+               classes: &[SloClass]) -> TickRun {
+    let submit_wave = |router: &mut ChainRouter| {
+        for b in 0..batch {
+            let id = router.submit(Request {
+                id: 0,
+                dataset: "gsm8k".into(),
+                prompt: vec![1, 100 + b as i32, 7],
+                max_new,
+                arrival: Instant::now(),
+                class: classes[b % classes.len()],
+                slo_ms: None,
+                sample_seed: Some(17 ^ b as u64),
+            });
+            assert!(id.is_some(), "wave submission shed");
+        }
+    };
+    let drain = |router: &mut ChainRouter| {
+        router.run_until_idle(1_000_000).expect("drain");
+        router.drain_finished();
+        router.take_shed();
+    };
+
+    // warm cycles: grow every arena/profiler map/scratch to capacity
+    let mut warm_ticks = 0u64;
+    while warm_ticks < warmup {
+        submit_wave(router);
+        while !router.batcher.is_idle() {
+            router.tick().expect("warm tick");
+            warm_ticks += 1;
+        }
+        router.drain_finished();
+    }
+
+    // a wave can commit at most w+1 tokens per tick per slot; keep
+    // settle + measured ticks safely under max_new / (w+1)
+    let settle = 2u64;
+    let per_wave = (max_new as u64 / (window as u64 + 1))
+        .saturating_sub(settle + 2)
+        .max(1);
+    let (a0, b0) = (ALLOCS.load(Relaxed), BYTES.load(Relaxed));
+    let mut measured = 0u64;
+    let mut tokens = 0u64;
+    let mut elapsed = 0.0f64;
+    while measured < measure {
+        submit_wave(router);
+        for _ in 0..settle {
+            router.tick().expect("settle tick");
+        }
+        for _ in 0..per_wave.min(measure - measured) {
+            let t0 = Instant::now();
+            COUNTING.store(true, Relaxed);
+            let c = router.tick().expect("measured tick");
+            COUNTING.store(false, Relaxed);
+            elapsed += t0.elapsed().as_secs_f64();
+            tokens += c.unwrap_or(0) as u64;
+            measured += 1;
+        }
+        drain(router);
+    }
+    TickRun {
+        measured,
+        tokens,
+        elapsed,
+        allocs: ALLOCS.load(Relaxed) - a0,
+        bytes: BYTES.load(Relaxed) - b0,
+    }
+}
+
 /// Full-engine tick steady state (ISSUE 4 satellite): the REAL
 /// `ChainRouter::tick` — admission check, group partitioning, cached
 /// chain lookup, spec step over the recycled slot-seq view, commit into
@@ -311,11 +396,6 @@ fn run_grouped(backend: &SimBackend, configs: &[(Chain, Vec<usize>)],
 /// counting wrapped around the *whole* `tick()` call, not just
 /// `run_spec_step`. Measured admission-idle (every slot occupied, queue
 /// empty): a steady-state greedy tick must allocate nothing at all.
-///
-/// Requests run in waves: submit `batch` long requests, settle, measure a
-/// block of ticks sized so no request can complete inside it (completion
-/// and the refill admission allocate by design), then drain with
-/// counting off and start the next wave.
 fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
                  warmup: u64, measure: u64) -> Row {
     let mut spec = SimSpec::small_pool();
@@ -336,69 +416,77 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
 
     // prompt 3 + max_new generated stays under seq (guard included)
     let max_new = seq_cap - 3 - 2 * (window + 2);
-    let submit_wave = |router: &mut ChainRouter| {
-        for b in 0..batch {
-            router.submit(Request {
-                id: 0,
-                dataset: "gsm8k".into(),
-                prompt: vec![1, 100 + b as i32, 7],
-                max_new,
-                arrival: Instant::now(),
-                class: SloClass::Standard,
-                slo_ms: None,
-                sample_seed: Some(17 ^ b as u64),
-            });
-        }
-    };
-    let drain = |router: &mut ChainRouter| {
-        router.run_until_idle(1_000_000).expect("drain");
-        router.drain_finished();
-        router.take_shed();
-    };
-
-    // warm cycles: grow every arena/profiler map/scratch to capacity
-    let mut warm_ticks = 0u64;
-    while warm_ticks < warmup {
-        submit_wave(&mut router);
-        while !router.batcher.is_idle() {
-            router.tick().expect("warm tick");
-            warm_ticks += 1;
-        }
-        router.drain_finished();
-    }
-
-    // a wave can commit at most w+1 tokens per tick per slot; keep
-    // settle + measured ticks safely under max_new / (w+1)
-    let settle = 2u64;
-    let per_wave = (max_new as u64 / (window as u64 + 1))
-        .saturating_sub(settle + 2)
-        .max(1);
-    let (a0, b0) = (ALLOCS.load(Relaxed), BYTES.load(Relaxed));
-    let mut measured = 0u64;
-    let mut tokens = 0u64;
-    let mut elapsed = 0.0f64;
-    while measured < measure {
-        submit_wave(&mut router);
-        for _ in 0..settle {
-            router.tick().expect("settle tick");
-        }
-        for _ in 0..per_wave.min(measure - measured) {
-            let t0 = Instant::now();
-            COUNTING.store(true, Relaxed);
-            let c = router.tick().expect("measured tick");
-            COUNTING.store(false, Relaxed);
-            elapsed += t0.elapsed().as_secs_f64();
-            tokens += c.unwrap_or(0) as u64;
-            measured += 1;
-        }
-        drain(&mut router);
-    }
-    row_from(label, "greedy", batch, measured, Measured {
-        tokens,
-        elapsed,
-        allocs: ALLOCS.load(Relaxed) - a0,
-        bytes: BYTES.load(Relaxed) - b0,
+    let run = drive_ticks(&mut router, batch, window, max_new, warmup,
+                          measure, &[SloClass::Standard]);
+    row_from(label, "greedy", batch, run.measured, Measured {
+        tokens: run.tokens,
+        elapsed: run.elapsed,
+        allocs: run.allocs,
+        bytes: run.bytes,
     })
+}
+
+/// ISSUE 5 headline rows: the heterogeneous 2-group scenario — 4
+/// interactive + 4 batch slots under `ByClass`, a 3-level w8 chain, a
+/// vocab large enough that per-group compute dominates scheduling — run
+/// through the REAL scatter/gather tick at workers 1/2/4. Reports
+/// wall-clock speedup over the sequential lane and gates:
+///   * 0 allocs/step at EVERY worker count (the rows join the greedy
+///     max-allocs gate; the fixed pool's rendezvous allocates nothing);
+///   * identical committed token totals across worker counts (the full
+///     token-identity matrix lives in rust/tests/group_parity.rs).
+fn run_parallel_ticks(warmup: u64, measure: u64)
+                      -> (Vec<Row>, Vec<(usize, f64)>) {
+    let batch = 8usize;
+    let window = 8usize;
+    let mut spec = SimSpec::small_pool();
+    spec.eos_prob = 0.0;
+    // heavier logits rows: per-group step cost ~ms, so the parallel rows
+    // measure compute overlap, not rendezvous overhead
+    spec.vocab = 2048;
+    let seq_cap = spec.seq;
+    let backend = Arc::new(SimBackend::new(spec));
+    let classes = [SloClass::Interactive, SloClass::Batch];
+    let max_new = seq_cap - 3 - 2 * (window + 2);
+
+    let mut rows = Vec::new();
+    let mut times: Vec<(usize, f64)> = Vec::new();
+    let mut token_ref: Option<u64> = None;
+    for workers in [1usize, 2, 4] {
+        let mut cfg = EngineConfig::new("sim://");
+        cfg.batch = batch;
+        cfg.window = 4;
+        cfg.target = "m2".into();
+        cfg.mode = Mode::Fixed {
+            chain: vec!["m0".into(), "m1".into(), "m2".into()],
+            window,
+        };
+        cfg.rule = AcceptRule::Greedy;
+        cfg.group_policy = GroupPolicy::ByClass;
+        cfg.workers = workers;
+        let mut router = ChainRouter::with_backend(cfg, backend.clone())
+            .expect("parallel sim router");
+        let run = drive_ticks(&mut router, batch, window, max_new, warmup,
+                              measure, &classes);
+        // token identity: the scatter/gather tick must commit exactly
+        // the sequential engine's totals, whatever the worker count
+        match token_ref {
+            None => token_ref = Some(run.tokens),
+            Some(t) => assert_eq!(
+                t, run.tokens,
+                "workers={workers} committed a different token total \
+                 than the sequential engine"),
+        }
+        times.push((workers, run.elapsed / run.measured.max(1) as f64));
+        rows.push(row_from(format!("parallel-tick:w{workers}"), "greedy",
+                           batch, run.measured, Measured {
+            tokens: run.tokens,
+            elapsed: run.elapsed,
+            allocs: run.allocs,
+            bytes: run.bytes,
+        }));
+    }
+    (rows, times)
 }
 
 fn main() {
@@ -424,10 +512,7 @@ fn main() {
     let mut table = Table::new(&[
         "chain", "rule", "steps/s", "tok/step", "allocs/step", "B/step",
     ]);
-    let mut rows = Vec::new();
-    for (chain, rule, label) in configs {
-        let row = run_config(&backend, &chain, rule, label, batch, warmup,
-                             measure);
+    let push_row = |table: &mut Table, row: &Row| {
         table.row(vec![
             row.label.clone(),
             row.rule.to_string(),
@@ -436,6 +521,12 @@ fn main() {
             format!("{:.2}", row.allocs_per_step),
             format!("{:.1}", row.bytes_per_step),
         ]);
+    };
+    let mut rows = Vec::new();
+    for (chain, rule, label) in configs {
+        let row = run_config(&backend, &chain, rule, label, batch, warmup,
+                             measure);
+        push_row(&mut table, &row);
         rows.push(row);
     }
     // heterogeneous chain groups (ISSUE 3): slots {0,1} on a 2-level w4
@@ -449,30 +540,48 @@ fn main() {
     ];
     let row = run_grouped(&backend, &grouped_cfg, AcceptRule::Greedy,
                           "greedy", batch, warmup, measure);
-    table.row(vec![
-        row.label.clone(),
-        row.rule.to_string(),
-        format!("{:.0}", row.steps_per_sec),
-        format!("{:.2}", row.tokens_per_step),
-        format!("{:.2}", row.allocs_per_step),
-        format!("{:.1}", row.bytes_per_step),
-    ]);
+    push_row(&mut table, &row);
     rows.push(row);
     // full engine tick (ISSUE 4): counting wraps ChainRouter::tick
     // itself — recycled slot-seq views, cached chains and reserved
     // commit buffers must keep the whole admission-idle tick at zero
     let row = run_full_tick(vec!["m0".into(), "m2".into()], 4, batch,
                             warmup, measure);
-    table.row(vec![
-        row.label.clone(),
-        row.rule.to_string(),
-        format!("{:.0}", row.steps_per_sec),
-        format!("{:.2}", row.tokens_per_step),
-        format!("{:.2}", row.allocs_per_step),
-        format!("{:.1}", row.bytes_per_step),
-    ]);
+    push_row(&mut table, &row);
     rows.push(row);
+    // parallel scatter/gather tick (ISSUE 5): workers 1/2/4 over the
+    // 2-group heterogeneous scenario — 0 allocs/step at every count,
+    // wall-clock speedup reported below and gated by perf_gate
+    let par_measure = measure.min(256);
+    let (par_rows, par_times) = run_parallel_ticks(warmup, par_measure);
+    for row in par_rows {
+        push_row(&mut table, &row);
+        rows.push(row);
+    }
     table.print();
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let t1 = par_times.iter().find(|(w, _)| *w == 1).unwrap().1;
+    let mut ratios: Vec<(usize, f64)> = Vec::new();
+    println!("\nparallel tick (2-group ByClass, 3-level w8, batch 8, \
+              {cores} cores):");
+    for &(w, t) in &par_times {
+        let ratio = t / t1.max(1e-12);
+        ratios.push((w, ratio));
+        println!("  workers={w}: {:.3} ms/tick  speedup {:.2}x",
+                 t * 1e3, 1.0 / ratio.max(1e-12));
+    }
+    let w4_ratio = ratios.iter().find(|(w, _)| *w == 4).unwrap().1;
+    // local (non-QUICK) runs on adequate hardware enforce the ISSUE 5
+    // acceptance bar directly; CI gates the same number via perf_gate,
+    // which skips it on starved runners (parallel.cores < 4)
+    if !quick() && cores >= 4 {
+        assert!(w4_ratio <= 1.0 / 1.5,
+                "parallel tick at workers=4 must be >= 1.5x the \
+                 sequential tick (got {:.2}x)", 1.0 / w4_ratio);
+    }
 
     // Full-engine context row: the same sim pool driven through the real
     // ChainRouter (admission, chain selection, commit loop, mask sync) —
@@ -492,7 +601,7 @@ fn main() {
         engine_sum.goodput_tps, engine_steady.goodput_tps(),
         engine_sum.tokens);
 
-    // BENCH_hotpath.json (schema documented in DESIGN.md §8)
+    // BENCH_hotpath.json (schema documented in DESIGN.md §8/§11)
     let mut json = String::from(
         "{\n  \"bench\": \"hotpath\",\n  \"backend\": \"sim\",\n  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -506,6 +615,15 @@ fn main() {
             if i + 1 == rows.len() { "" } else { "," }));
     }
     json.push_str("  ],\n");
+    let ratio_of = |w: usize| {
+        ratios.iter().find(|(rw, _)| *rw == w).map(|(_, r)| *r)
+            .unwrap_or(f64::NAN)
+    };
+    json.push_str(&format!(
+        "  \"parallel\": {{\"cores\": {cores}, \"scenario\": \
+         \"2grp-byclass-3level-w8-b8\", \"w2_time_ratio\": {:.4}, \
+         \"w4_time_ratio\": {:.4}}},\n",
+        ratio_of(2), ratio_of(4)));
     json.push_str(&format!(
         "  \"engine\": {{\"mode\": \"SSD[m0>m2]w4\", \"batch\": {batch}, \
          \"requests\": {n_req}, \"tokens\": {}, \"goodput_tps\": {:.1}, \
@@ -517,7 +635,8 @@ fn main() {
     std::fs::write(out, &json).expect("writing BENCH_hotpath.json");
     println!("\nwrote {out}");
 
-    // acceptance gate: steady-state greedy steps must not allocate
+    // acceptance gate: steady-state greedy steps must not allocate —
+    // including the parallel-tick rows at workers 2 and 4
     let mut failed = false;
     for r in rows.iter().filter(|r| r.rule == "greedy") {
         if r.allocs_per_step > 0.0 {
@@ -530,5 +649,6 @@ fn main() {
         std::process::exit(1);
     }
     println!("OK: zero steady-state allocations on the greedy hot path \
-              (spec step, grouped step, and the full engine tick)");
+              (spec step, grouped step, full tick, and the parallel \
+              scatter/gather tick at workers 1/2/4)");
 }

@@ -7,6 +7,7 @@ use std::time::Instant;
 use specrouter::harness::Table;
 use specrouter::rng::Rng;
 use specrouter::state::kv_cache::{extract_slot_flat, insert_slot_flat,
+                                  truncate_tail_bounded,
                                   truncate_tail_flat, KvDims};
 use specrouter::state::CacheMask;
 
@@ -25,7 +26,7 @@ fn main() {
 
     // -- logical rollback: O(1) regardless of rollback depth -------------
     for (slots, cap) in [(8usize, 128usize), (64, 128)] {
-        let mut mask = CacheMask::new(slots, cap);
+        let mask = CacheMask::new(slots, cap);
         for s in 0..slots {
             mask.append_valid(s, cap - 16);
         }
@@ -62,6 +63,29 @@ fn main() {
             format!("{:.2} ms", t * 1e3),
             format!("{:.1} GiB/s touched",
                     bytes as f64 / t / 1073741824.0 / 16.0),
+        ]);
+    }
+
+    // -- bounded truncation (ISSUE 5 satellite): only the dirty span ----
+    // typical steady state: one slot speculated a window past the
+    // frontier, the rest never wrote there — the high-water-bounded pass
+    // touches w rows on one slot instead of (seq-frontier) rows on all
+    for batch in [8usize, 64] {
+        let d = KvDims { layers: 6, batch, heads: 8, seq: 128,
+                         head_dim: 16 };
+        let mut buf = vec![1.0f32; d.elements()];
+        let mut hw = vec![120usize; batch]; // at the frontier: clean
+        hw[0] = 128; // one slot dirty to capacity
+        let t = bench(200, || {
+            truncate_tail_bounded(&mut buf, d, 120, &hw);
+            buf[0] = 1.0;
+        });
+        let bytes = d.elements() * 4;
+        table.row(vec![
+            "bounded truncate (dirty HW)".into(),
+            format!("m2 B={batch} ({:.0} MiB)", bytes as f64 / 1048576.0),
+            format!("{:.3} ms", t * 1e3),
+            format!("1/{} of the slots touched", batch),
         ]);
     }
 
@@ -106,7 +130,7 @@ fn main() {
               movement.");
 
     // correctness spot-check under the bench's own churn
-    let mut mask = CacheMask::new(4, 64);
+    let mask = CacheMask::new(4, 64);
     mask.append_valid(0, 10);
     mask.append_speculative(0, 5);
     mask.rollback_to(0, 8);

@@ -77,6 +77,20 @@ fn main() -> Result<()> {
                                  "verdict"]);
     let n_cand = sched.candidate_chains().len();
 
+    // ISSUE 5 satellite: the candidate set is built once per (manifest,
+    // config) and served as a borrowed slice — fetching it per decision
+    // is now pointer-cheap instead of re-materializing a Vec<Chain> full
+    // of model-name Strings on every score_all/select
+    let t_cand = bench(1_000_000, || {
+        std::hint::black_box(sched.candidate_chains().len());
+    });
+    table.row(vec![
+        format!("candidate_chains (cached, {n_cand} candidates)"),
+        format!("{:.1} ns", t_cand * 1e9),
+        String::new(),
+        String::new(),
+    ]);
+
     let t_select = bench(10_000, || {
         let _ = sched.select(&prof, &sim);
     });
@@ -158,11 +172,12 @@ fn main() -> Result<()> {
     let json = format!(
         "{{\n  \"bench\": \"scheduler_overhead\",\n  \
          \"backend\": \"{backend}\",\n  \"candidates\": {n_cand},\n  \
+         \"candidates_ns\": {:.1},\n  \
          \"select_ns\": {:.1},\n  \"predict_ns\": {:.1},\n  \
          \"dtv_ns\": {:.1},\n  \"accept_scan_ns\": {:.1},\n  \
          \"ema_ns\": {:.1}\n}}\n",
-        t_select * 1e9, t_pred * 1e9, t_dtv * 1e9, t_accept * 1e9,
-        t_ema * 1e9);
+        t_cand * 1e9, t_select * 1e9, t_pred * 1e9, t_dtv * 1e9,
+        t_accept * 1e9, t_ema * 1e9);
     let out = concat!(env!("CARGO_MANIFEST_DIR"),
                       "/../BENCH_scheduler_overhead.json");
     std::fs::write(out, &json).expect("writing bench json");

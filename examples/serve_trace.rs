@@ -102,6 +102,12 @@ fn main() -> Result<()> {
         println!("  {group:<20} {chain:<22} {steps:>5} steps  \
                   {tokens:>6} tok");
     }
+    println!("\nper-group step wall-clock (EMA; measured inside whichever \
+              worker lane ran the group — DESIGN.md §11):");
+    for (group, ema_s, steps) in router.prof.group_wall_table() {
+        println!("  {group:<20} {:>8.3} ms/step over {steps} steps",
+                 ema_s * 1e3);
+    }
 
     println!("\nstate manager: {} physical truncations, {} elements \
               reclaimed", router.states.physical_truncations,

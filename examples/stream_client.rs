@@ -83,7 +83,8 @@ fn main() -> Result<()> {
     let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8.0);
 
     // engine over the sim backend, built inside its own thread (the
-    // Backend trait is deliberately !Send — see coordinator::backend)
+    // engine loop owns the router for its whole life; see server::
+    // spawn_engine_with)
     let mut cfg = EngineConfig::new("sim://");
     cfg.batch = 4;
     cfg.window = 4;

@@ -5,8 +5,14 @@
 //!
 //! Gated metrics (all lower-is-better):
 //!   * `hotpath_greedy_allocs_per_step` — max allocs/step over the greedy
-//!     rows of BENCH_hotpath.json (spec step, grouped step, full tick).
-//!     A baseline of 0 means exactly zero: any allocation fails.
+//!     rows of BENCH_hotpath.json (spec step, grouped step, full tick,
+//!     and the parallel-tick rows at workers 1/2/4). A baseline of 0
+//!     means exactly zero: any allocation fails.
+//!   * `parallel_tick_w4_time_ratio` — wall-clock per tick at workers=4
+//!     divided by workers=1 on the heterogeneous 2-group sim scenario
+//!     (DESIGN.md §11; a baseline of 0.67 demands >= 1.5x speedup).
+//!     Skipped with a note when the runner reports fewer than 4 cores —
+//!     a starved CI box cannot exhibit parallel speedup.
 //!   * `scheduler_select_ns` — Algorithm-1 selection time from
 //!     BENCH_scheduler_overhead.json (DESIGN.md §7 budget).
 //!   * `admission_queue_delay_p50_ms` — interactive p50 queue delay at 2x
@@ -90,11 +96,29 @@ fn hotpath_greedy_allocs(v: &Value) -> Result<f64> {
     Ok(max)
 }
 
+/// Workers=4 / workers=1 tick-time ratio from the hotpath artifact's
+/// `parallel` object, or None (with a printed note) when the runner has
+/// fewer than 4 cores — the scenario cannot speed up on hardware that
+/// cannot run its groups concurrently, and gating it there would make CI
+/// placement, not the code, decide the verdict.
+fn parallel_ratio(v: &Value) -> Result<Option<f64>> {
+    let p = v.get("parallel")?;
+    let cores = p.get("cores")?.as_f64()?;
+    let ratio = p.get("w4_time_ratio")?.as_f64()?;
+    if cores < 4.0 {
+        println!("note: parallel_tick_w4_time_ratio skipped — bench ran \
+                  on {cores:.0} core(s); need >= 4 for a meaningful \
+                  parallel-speedup gate");
+        return Ok(None);
+    }
+    Ok(Some(ratio))
+}
+
 fn gather(dir: &Path) -> Result<Vec<Check>> {
     let hotpath = load(dir, "BENCH_hotpath.json")?;
     let sched = load(dir, "BENCH_scheduler_overhead.json")?;
     let adm = load(dir, "BENCH_admission.json")?;
-    Ok(vec![
+    let mut checks = vec![
         Check {
             name: "hotpath_greedy_allocs_per_step",
             measured: hotpath_greedy_allocs(&hotpath)?,
@@ -110,7 +134,15 @@ fn gather(dir: &Path) -> Result<Vec<Check>> {
             measured: adm.get("queue_delay_p50_ms")?.as_f64()?,
             baseline: f64::NAN,
         },
-    ])
+    ];
+    if let Some(ratio) = parallel_ratio(&hotpath)? {
+        checks.push(Check {
+            name: "parallel_tick_w4_time_ratio",
+            measured: ratio,
+            baseline: f64::NAN,
+        });
+    }
+    Ok(checks)
 }
 
 fn apply_baselines(checks: &mut [Check], baselines: &Value)
@@ -242,6 +274,26 @@ mod tests {
                 < 1e-12);
         let none = json::parse(r#"{"rows":[]}"#).unwrap();
         assert!(hotpath_greedy_allocs(&none).is_err());
+    }
+
+    #[test]
+    fn parallel_ratio_reads_and_skips_on_starved_runners() {
+        let hot = json::parse(
+            r#"{"parallel":{"cores":4,"scenario":"s",
+                "w2_time_ratio":0.62,"w4_time_ratio":0.55}}"#).unwrap();
+        assert!((parallel_ratio(&hot).unwrap().unwrap() - 0.55).abs()
+                < 1e-12);
+        // fewer than 4 cores: skipped, not failed
+        let starved = json::parse(
+            r#"{"parallel":{"cores":2,"w4_time_ratio":0.99}}"#).unwrap();
+        assert!(parallel_ratio(&starved).unwrap().is_none());
+        // a missing parallel object is a hard error (stale artifact)
+        let stale = json::parse(r#"{"rows":[]}"#).unwrap();
+        assert!(parallel_ratio(&stale).is_err());
+        // the ratio gates like any lower-is-better metric: 0.67 baseline
+        // (>= 1.5x) at 15% tolerance passes 0.75, fails 0.80
+        assert!(passes(&c(0.67, 0.75), 15.0));
+        assert!(!passes(&c(0.67, 0.80), 15.0));
     }
 
     #[test]

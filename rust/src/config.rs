@@ -100,6 +100,17 @@ pub struct EngineConfig {
     /// `ByClass` behaves exactly like `Single` whenever only one class is
     /// present, so single-tenant workloads are unaffected.
     pub group_policy: GroupPolicy,
+    /// Parallel lanes executing chain groups per tick (DESIGN.md §11),
+    /// including the engine thread itself. `1` (the default) is the
+    /// sequential engine — no pool threads are spawned and every
+    /// baseline, including FIFO, is untouched. Values above `batch` are
+    /// clamped (a group holds at least one slot, so more lanes than
+    /// slots can never run); `0` is rejected at validation. Committed
+    /// output is token-identical for every worker count (the
+    /// `group_parity` worker matrix enforces it); backends must declare
+    /// concurrent group steps safe (`Backend::parallel_groups_safe`) or
+    /// router construction fails with a structured error.
+    pub workers: usize,
     /// Seed the scheduler's α estimates with the manifest's offline
     /// (build-time) similarity instead of the optimistic prior.
     pub offline_sim_prior: bool,
@@ -133,11 +144,35 @@ impl EngineConfig {
             max_queue: 4096,
             fifo_admission: false,
             group_policy: GroupPolicy::ByClass,
+            workers: 1,
             offline_sim_prior: false,
             n_devices: 4,
             device_bytes: 2 << 30,
             replan_every: 1,
             cost_multipliers: Vec::new(),
+        }
+    }
+
+    /// The worker-lane count the engine actually runs: `workers` clamped
+    /// to the batch size (a chain group holds >= 1 slot, so extra lanes
+    /// could never be utilized) with a floor of 1. `validate` rejects
+    /// `workers == 0` outright — this clamp is for the over-provisioned
+    /// side only.
+    pub fn effective_workers(&self) -> usize {
+        self.workers.min(self.batch).max(1)
+    }
+
+    /// Override `workers` from `SPECROUTER_WORKERS` when set to a valid
+    /// positive integer (the CI parity matrix re-runs whole suites under
+    /// a parallel tick this way). Invalid or absent values leave the
+    /// config untouched.
+    pub fn apply_env_workers(&mut self) {
+        if let Ok(v) = std::env::var("SPECROUTER_WORKERS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n >= 1 {
+                    self.workers = n;
+                }
+            }
         }
     }
 
@@ -177,6 +212,11 @@ impl EngineConfig {
         }
         if self.max_queue < 1 {
             bail!("max_queue must be >= 1");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1 (0 lanes would leave the \
+                   scatter/gather tick with no executor; use 1 for the \
+                   sequential engine)");
         }
         if let GroupPolicy::ByClassUrgency { urgent_s } = self.group_policy {
             if !urgent_s.is_finite() || urgent_s <= 0.0 {
@@ -243,6 +283,25 @@ mod tests {
             c.group_policy = GroupPolicy::ByClassUrgency { urgent_s: bad };
             assert!(c.validate(&batches, &windows).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn workers_zero_rejected_and_overprovision_clamped() {
+        let batches = [1, 4, 8];
+        let windows = [4, 8];
+        let mut c = EngineConfig::new("/tmp/a");
+        assert_eq!(c.workers, 1, "sequential engine by default");
+        assert_eq!(c.effective_workers(), 1);
+        // 0 lanes: structured validation error, not a runtime hang
+        c.workers = 0;
+        let err = c.validate(&batches, &windows).unwrap_err();
+        assert!(err.to_string().contains("workers must be >= 1"), "{err}");
+        // more lanes than slots: clamped to batch, validation passes
+        c.workers = 64;
+        assert!(c.validate(&batches, &windows).is_ok());
+        assert_eq!(c.effective_workers(), c.batch);
+        c.workers = 2;
+        assert_eq!(c.effective_workers(), 2);
     }
 
     #[test]

@@ -1,16 +1,34 @@
 //! The data-plane contract (DESIGN.md §8): everything the coordinator
 //! needs from "a pool of models" is five calls — prefill, insert, decode,
 //! draft, verify — plus manifest access and registration. Extracting this
-//! trait from the XLA [`Executor`] lets the full engine loop (chain
-//! scheduling, acceptance, rollback, catch-up) run against the in-process
-//! [`SimBackend`] with no compiled artifacts, which is what makes the
-//! hot path testable and benchmarkable at all.
+//! trait from the XLA [`crate::coordinator::Executor`] lets the full
+//! engine loop (chain scheduling, acceptance, rollback, catch-up) run
+//! against the in-process [`crate::coordinator::SimBackend`] with no
+//! compiled artifacts, which is what makes the hot path testable and
+//! benchmarkable at all.
 //!
 //! Hot-path discipline: decode/draft/verify write their outputs into
 //! caller-provided buffers (`out.clear(); out.resize(..)` — no allocation
 //! once the buffer has warmed to capacity). Prefill/insert are admission
-//! path and may allocate freely.
-// the five-call data-plane signatures carry (prof, model, batch, window,
+//! path and may allocate freely. Call costs are reported to the
+//! [`StepSink`] — the shared [`crate::coordinator::Profiler`] on the
+//! admission path, a per-group [`crate::coordinator::GroupRecorder`]
+//! inside a step — so concurrent groups never contend on one tracker.
+//!
+//! ## Threading (DESIGN.md §11)
+//!
+//! `Backend` requires `Send + Sync`: the parallel tick shares one
+//! `&dyn Backend` across its worker pool. The sim backend is a pure
+//! table-driven function and satisfies the bound structurally; the XLA
+//! executor wraps `Rc`-based PJRT handles and is adapted through the
+//! [`crate::coordinator::SerialXla`] mutex shim. Whether *concurrent
+//! group steps* are semantically safe is a separate, per-backend promise
+//! ([`Backend::parallel_groups_safe`]): a backend whose batched calls
+//! write per-lane state at snapshot lengths (the XLA packed-state ABI
+//! writes K/V rows for every lane, members or not) would corrupt other
+//! groups' lanes under concurrency, so the router refuses `workers > 1`
+//! on it rather than racing.
+// the five-call data-plane signatures carry (sink, model, batch, window,
 // tokens, state, lens, out) by design — splitting them into builder
 // structs would put an allocation back on the hot path
 #![allow(clippy::too_many_arguments)]
@@ -18,7 +36,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::profiler::Profiler;
+use crate::coordinator::recorder::StepSink;
 use crate::runtime::Manifest;
 use crate::state::StateBuf;
 
@@ -36,20 +54,11 @@ pub enum PrefillState {
 /// One model-pool backend: the five processors of paper §4.3.
 ///
 /// All methods take `&self`; backends keep interior state behind locks
-/// (XLA) or none at all (sim). Call costs are reported to the
-/// [`Profiler`] by the backend itself — measured wall time for XLA,
-/// configured synthetic costs for the sim — so the scheduler's Eq. 7
-/// inputs work identically on either.
-///
-/// Deliberately NOT `Send + Sync`: the XLA executor wraps `Rc`-based
-/// PJRT handles and can never cross threads, and requiring the bound
-/// would evict it from the trait. `Arc<dyn Backend>` (and therefore
-/// `ChainRouter`) is single-threaded by construction — the server runs
-/// the whole engine inside one owning thread (see `server::spawn_engine`).
-/// Code that needs a threadable router must hold the concrete
-/// `Arc<SimBackend>` (which IS `Send + Sync`) and build per-thread
-/// routers from it.
-pub trait Backend {
+/// ([`crate::coordinator::SerialXla`]) or none at all (sim). Call costs
+/// are reported to the [`StepSink`] by the backend itself — measured wall
+/// time for XLA, configured synthetic costs for the sim — so the
+/// scheduler's Eq. 7 inputs work identically on either.
+pub trait Backend: Send + Sync {
     /// The artifact manifest this backend serves (model dims, vocab,
     /// windows, datasets). For the sim backend it is synthesized.
     fn manifest(&self) -> &Arc<Manifest>;
@@ -57,25 +66,45 @@ pub trait Backend {
     /// Register (place / load weights for) a model. Idempotent.
     fn register(&self, model: &str) -> Result<()>;
 
+    /// True when the `state` argument of decode/draft/verify is ignored
+    /// (the sim backend's Markov LM needs no KV). The engine then hands
+    /// concurrent group steps a per-group dummy buffer instead of locking
+    /// the model's real state across the call — which would serialize
+    /// exactly the compute that parallel groups exist to overlap.
+    fn state_is_inert(&self) -> bool {
+        false
+    }
+
+    /// True when concurrent speculative steps over *disjoint slot sets*
+    /// of the same model are safe. Requires per-lane independence: a call
+    /// must not write state for lanes outside its member set at lengths
+    /// snapshotted before the call (the XLA packed-state kernels do — a
+    /// stale-lens write from group A would clobber rows group B committed
+    /// meanwhile — so the executor answers `false` and the router rejects
+    /// `workers > 1` on it with a structured error).
+    fn parallel_groups_safe(&self) -> bool {
+        false
+    }
+
     /// Process one prompt (B=1): last-position logits `[V]` plus the
     /// fresh B=1 state handle for [`Backend::insert`].
-    fn prefill(&self, prof: &mut Profiler, model: &str, prompt: &[i32])
+    fn prefill(&self, sink: &mut dyn StepSink, model: &str, prompt: &[i32])
                -> Result<(Vec<f32>, PrefillState)>;
 
     /// Admission: place a prefilled B=1 state into batch slot `slot`.
-    fn insert(&self, prof: &mut Profiler, model: &str, batch: usize,
+    fn insert(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
               state: &mut StateBuf, one: &PrefillState, slot: usize)
               -> Result<()>;
 
     /// One autoregressive step for the whole batch. Writes logits
     /// `[B*V]` into `out`.
-    fn decode(&self, prof: &mut Profiler, model: &str, batch: usize,
+    fn decode(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
               tokens: &[i32], state: &mut StateBuf, lens: &[i32],
               out: &mut Vec<f32>) -> Result<()>;
 
     /// Greedy scan of `window` speculative tokens. Writes drafted tokens
     /// `[B*w]` into `toks` and draft logits `[B*w*V]` into `logits`.
-    fn draft(&self, prof: &mut Profiler, model: &str, batch: usize,
+    fn draft(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
              window: usize, tokens: &[i32], state: &mut StateBuf,
              lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
              -> Result<()>;
@@ -83,7 +112,7 @@ pub trait Backend {
     /// One parallel forward over `window+1` positions. `block` is
     /// row-major `[B, window+1]`. Writes logits `[B*(window+1)*V]` into
     /// `out`.
-    fn verify(&self, prof: &mut Profiler, model: &str, batch: usize,
+    fn verify(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
               window: usize, block: &[i32], state: &mut StateBuf,
               lens: &[i32], out: &mut Vec<f32>) -> Result<()>;
 }

@@ -7,19 +7,36 @@
 //!   group → commit / rollback → terminate?]* → finish.
 //!
 //! One `tick()` is one generation cycle of Listing 1 in the paper,
-//! generalized to *heterogeneous chain groups* (DESIGN.md §9): the
-//! occupied slots are partitioned by [`crate::config::GroupPolicy`]
-//! (SLO class / per-slot headroom), each group gets its own
-//! scheduler-selected chain driven by group-local slack, and
-//! `run_spec_step` runs once per group over a sub-batch view (lanes of
-//! other groups are `None`, exactly like idle slots). Per-group scratch
-//! arenas and pre-formatted labels keep `run_spec_step` itself on the
-//! zero-allocation hot path of DESIGN.md §8 (the engine loop's only
-//! per-group cost is the borrowed sub-batch view Vec).
+//! generalized to *heterogeneous chain groups* (DESIGN.md §9) executed
+//! **in parallel on a fixed worker pool** (DESIGN.md §11). The tick is
+//! three phases:
+//!
+//!   1. **plan** — partition the occupied slots by
+//!      [`crate::config::GroupPolicy`], select a chain per group from the
+//!      tick-start profiler/similarity state (group-local slack drives
+//!      `select_for_group`), ensure state entries exist;
+//!   2. **execute** — one [`run_spec_step`] per group over a sub-batch
+//!      view (non-member lanes are `None`, exactly like idle slots),
+//!      scattered over `EngineConfig::workers` lanes. Each group carries
+//!      its own scratch arena, RNG snapshot, [`GroupRecorder`] and a
+//!      disjoint [`StateShard`] (the split-borrow guard rejects overlap
+//!      up front), so workers share nothing mutable;
+//!   3. **gather** — recorders fold into the profiler/similarity
+//!      trackers and commits apply **in ascending gid order**, making
+//!      commit order, attribution, metrics and streaming emission
+//!      deterministic regardless of which worker finished first — and
+//!      committed output token-identical for every worker count.
+//!
+//! `workers = 1` (the default) spawns no threads and runs the same task
+//! code inline, preserving the sequential engine and every baseline.
+//! Per-group scratch arenas, recycled task/view buffers and pre-formatted
+//! labels keep the whole steady-state tick on the zero-allocation path of
+//! DESIGN.md §8 at every worker count.
 //!
 //! The data plane is any [`Backend`]: the XLA executor over compiled
-//! artifacts, or the in-process [`crate::coordinator::SimBackend`] for
-//! artifact-free runs (DESIGN.md §8).
+//! artifacts (via the [`crate::coordinator::SerialXla`] shim, workers=1
+//! only — see `Backend::parallel_groups_safe`), or the in-process
+//! [`crate::coordinator::SimBackend`] for artifact-free runs (§8).
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -30,20 +47,23 @@ use crate::admission::{Discipline, QueuedReq, ShedRecord, SloClass,
                        SubmitOutcome};
 use crate::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
 use crate::coordinator::backend::Backend;
-use crate::coordinator::engine::{committed_frontier, Batcher, Finished,
-                                 Request, SeqScratch, Slot};
-use crate::coordinator::executor::Executor;
+use crate::coordinator::engine::{committed_frontier, retype_empty,
+                                 Batcher, Finished, Request, SeqScratch,
+                                 Slot};
+use crate::coordinator::executor::{Executor, SerialXla};
 use crate::coordinator::groups::{gid_for, gid_labels, gid_space};
 use crate::coordinator::profiler::Profiler;
+use crate::coordinator::recorder::GroupRecorder;
 use crate::coordinator::scheduler::{Chain, Scheduler};
 use crate::coordinator::similarity::SimilarityTracker;
 use crate::coordinator::spec_step::{run_spec_step, SlotSeqs, StepCtx,
                                     StepScratch};
+use crate::coordinator::worker_pool::WorkerPool;
 use crate::metrics::ClassChainRow;
 use crate::model_pool::ModelPool;
 use crate::rng::{argmax, softmax, splitmix, Rng};
 use crate::runtime::Manifest;
-use crate::state::{KvDims, StateManager};
+use crate::state::{KvDims, StateManager, StateShard};
 
 /// How often opportunistic physical truncation runs (steps).
 const FIX_CACHES_EVERY: u64 = 32;
@@ -51,6 +71,55 @@ const FIX_CACHES_EVERY: u64 = 32;
 /// Signed milliseconds of `a - b`.
 fn signed_ms(a: Instant, b: Instant) -> f64 {
     crate::admission::signed_since(a, b) * 1e3
+}
+
+/// One scattered unit of tick work: everything one worker lane needs to
+/// run a single chain group's speculative step. All references carry the
+/// tick lifetime; the pool's `run` blocks until every task completed, so
+/// they never outlive their sources (the worker-pool module documents the
+/// protocol). Mutable state is per-task (scratch, recorder, RNG snapshot)
+/// or slot-disjoint (the shard) — tasks share nothing writable.
+struct GroupTask<'t> {
+    gid: usize,
+    chain: &'t Chain,
+    /// Sub-batch view: members carry committed sequences, all other
+    /// lanes are `None`.
+    seqs: SlotSeqs<'t>,
+    scratch: &'t mut StepScratch,
+    recorder: &'t mut GroupRecorder,
+    /// Batch-length RNG buffer; only member lanes are refreshed from the
+    /// router's per-slot streams at scatter (non-member entries are stale
+    /// and never drawn from) and only member lanes write back at gather.
+    rngs: &'t mut [Rng],
+    shard: StateShard<'t>,
+    err: Option<anyhow::Error>,
+}
+
+/// Recycled allocation for the per-tick task list — the same
+/// lifetime-erasure pattern as [`SeqScratch`]: the buffer is parked empty
+/// under an unreachable placeholder lifetime, so taking it back at the
+/// tick's lifetime moves zero elements and only the capacity survives.
+/// This keeps the scatter path allocation-free in steady state at every
+/// worker count (§8 full-tick gate).
+#[derive(Default)]
+struct TaskScratch {
+    parked: Vec<GroupTask<'static>>,
+}
+
+impl TaskScratch {
+    fn take<'t>(&mut self) -> Vec<GroupTask<'t>> {
+        // SAFETY: `GroupTask<'t>` and `GroupTask<'static>` differ only in
+        // lifetime parameters (retype_empty's contract); parked buffers
+        // are always empty.
+        unsafe { retype_empty(std::mem::take(&mut self.parked)) }
+    }
+
+    fn put(&mut self, v: Vec<GroupTask<'_>>) {
+        // SAFETY: same layout argument as `take`; the retype clears the
+        // vec, dropping the tasks (references and a `None` error slot —
+        // their seq views must already be parked by the caller).
+        self.parked = unsafe { retype_empty(v) };
+    }
 }
 
 pub struct ChainRouter {
@@ -83,16 +152,28 @@ pub struct ChainRouter {
     group_slack: Vec<Option<f64>>,
     /// Reused membership mask for building sub-batch slot views.
     member_mask: Vec<bool>,
-    /// Recycled allocation for the per-group sub-batch views — the old
-    /// per-group `collect()` was the last steady-state allocation in the
-    /// engine tick (DESIGN.md §8; the full-tick bench row gates this).
-    seq_scratch: SeqScratch,
+    /// Recycled allocations for the per-group sub-batch views (one per
+    /// gid: the parallel tick needs every group's view alive at once).
+    seq_scratches: Vec<SeqScratch>,
+    /// Recycled allocation for the scatter task list.
+    task_scratch: TaskScratch,
+    /// Reused buffer for the shard disjointness guard.
+    overlap_marks: Vec<usize>,
     /// Reused completion buffer.
     done_buf: Vec<usize>,
     /// One scratch arena per group id: each group's buffers warm to its
     /// own chain shape, preserving the §8 zero-alloc guarantee under
     /// heterogeneous groups.
     scratches: Vec<StepScratch>,
+    /// One observation recorder per group id (DESIGN.md §11): workers
+    /// record here, the gather phase folds in ascending gid order.
+    recorders: Vec<GroupRecorder>,
+    /// Per-gid full-batch RNG snapshots handed to scattered tasks.
+    rng_scratch: Vec<Vec<Rng>>,
+    /// Effective worker lanes (cfg.workers clamped to batch).
+    workers: usize,
+    /// The fixed pool (spawned once, `None` at workers = 1).
+    pool: Option<WorkerPool>,
     pub steps: u64,
     next_id: u64,
 }
@@ -104,11 +185,13 @@ impl ChainRouter {
     }
 
     /// Build on an existing pool (benches share one pool across engines to
-    /// amortize XLA compilation).
+    /// amortize XLA compilation). The executor goes behind the
+    /// [`SerialXla`] shim to satisfy `Backend: Send + Sync`; it still
+    /// requires `workers = 1` (see `Backend::parallel_groups_safe`).
     pub fn with_pool(cfg: EngineConfig, pool: Arc<ModelPool>) -> Result<Self> {
         let exec = Executor::with_cost_multipliers(
             pool, cfg.cost_multipliers.clone());
-        Self::with_backend(cfg, Arc::new(exec))
+        Self::with_backend(cfg, Arc::new(SerialXla::new(exec)))
     }
 
     /// Build on any data-plane backend (DESIGN.md §8) — the sim backend
@@ -127,6 +210,16 @@ impl ChainRouter {
             if chain.last() != Some(&cfg.target) {
                 bail!("fixed chain must end at the target model");
             }
+        }
+        let workers = cfg.effective_workers();
+        if workers > 1 && !backend.parallel_groups_safe() {
+            bail!("workers = {} requires a backend whose group steps can \
+                   run concurrently, but this backend reports \
+                   parallel_groups_safe() = false (the XLA executor \
+                   serializes device access and writes whole-batch packed \
+                   state per call, so concurrent groups would clobber \
+                   each other's lanes) — run it with workers = 1",
+                  cfg.workers);
         }
         let mut sim = SimilarityTracker::new(cfg.ema_alpha);
         if cfg.offline_sim_prior {
@@ -156,6 +249,10 @@ impl ChainRouter {
         };
         let batcher = Batcher::with_admission(
             batch, cfg.max_queue, table, discipline, cfg.ema_alpha);
+        // intern table shared by every per-group recorder: the manifest's
+        // model set is the universe of names a step can ever report
+        let model_names: Arc<Vec<String>> =
+            Arc::new(manifest.models.keys().cloned().collect());
         let router = ChainRouter {
             backend,
             prof: Profiler::new(cfg.ema_alpha),
@@ -176,9 +273,19 @@ impl ChainRouter {
                 .collect(),
             group_slack: vec![None; n_gids],
             member_mask: vec![false; batch],
-            seq_scratch: SeqScratch::new(),
+            seq_scratches: (0..n_gids).map(|_| SeqScratch::new()).collect(),
+            task_scratch: TaskScratch::default(),
+            overlap_marks: Vec::new(),
             done_buf: Vec::with_capacity(batch),
             scratches: (0..n_gids).map(|_| StepScratch::new()).collect(),
+            recorders: (0..n_gids)
+                .map(|_| GroupRecorder::new(model_names.clone()))
+                .collect(),
+            rng_scratch: (0..n_gids)
+                .map(|_| (0..batch).map(|_| Rng::new(0)).collect())
+                .collect(),
+            workers,
+            pool: (workers > 1).then(|| WorkerPool::new(workers)),
             steps: 0,
             next_id: 1,
             cfg,
@@ -193,6 +300,11 @@ impl ChainRouter {
     /// The data-plane backend this router drives.
     pub fn backend(&self) -> &Arc<dyn Backend> {
         &self.backend
+    }
+
+    /// Worker lanes the tick scatters groups over (1 = sequential).
+    pub fn worker_lanes(&self) -> usize {
+        self.workers
     }
 
     /// Models prefilled eagerly at admission: the ones this mode can ever
@@ -348,8 +460,8 @@ impl ChainRouter {
                 let batch = self.cfg.batch;
                 let st = self.states.ensure(&m, dims, state_len);
                 st.mask.clear_slot(slot_idx);
-                self.backend.insert(&mut self.prof, &m, batch, &mut st.kv,
-                                    &state1, slot_idx)?;
+                self.backend.insert(&mut self.prof, &m, batch,
+                                    &mut st.kv(), &state1, slot_idx)?;
                 st.mask.append_valid(slot_idx, plen);
                 if m == target {
                     first_token = match self.cfg.rule {
@@ -438,7 +550,10 @@ impl ChainRouter {
     /// group's own slack). The tick loop *borrows* the cached chain
     /// instead of cloning it — Tmo/Fixed build theirs exactly once and
     /// Adaptive only on replan, keeping steady-state ticks off the
-    /// allocator entirely (DESIGN.md §8).
+    /// allocator entirely (DESIGN.md §8). Selection for every group runs
+    /// in the plan phase, before any step executes, so it reads the same
+    /// tick-start profiler/similarity state at every worker count
+    /// (DESIGN.md §11 determinism).
     fn ensure_group_chain(&mut self, gid: usize) {
         match &self.cfg.mode {
             Mode::Tmo => {
@@ -488,11 +603,11 @@ impl ChainRouter {
         }
     }
 
-    /// One generation cycle (paper Listing 1 steps 2a-2d, grouped):
-    /// partition the occupied slots, then per group select a chain and
-    /// run one speculative step over that group's sub-batch view.
-    /// Returns the number of tokens committed across every group, or
-    /// None when the engine is idle.
+    /// One generation cycle (paper Listing 1 steps 2a-2d, grouped and
+    /// scattered): plan chains per group, execute every group's
+    /// speculative step across the worker lanes, gather + commit in
+    /// ascending gid order. Returns the number of tokens committed across
+    /// every group, or None when the engine is idle.
     pub fn tick(&mut self) -> Result<Option<usize>> {
         self.admit_pending()?;
         if self.batcher.active() == 0 {
@@ -505,14 +620,12 @@ impl ChainRouter {
         // step ANY group could run next tick (it sits in other groups'
         // batched calls as a capacity-checked non-member lane)
         let guard = self.worst_case_window() + 2;
-        let mut total = 0usize;
-        self.done_buf.clear();
+
+        // --- plan: select a chain + warm state entries per group --------
         for gid in 0..self.group_slots.len() {
             if self.group_slots[gid].is_empty() {
                 continue;
             }
-            // move the member list out so `self` stays borrowable
-            let slots = std::mem::take(&mut self.group_slots[gid]);
             self.ensure_group_chain(gid);
             // borrow, don't clone: the cached chain lives in
             // `group_chains` precisely so steady-state ticks never copy
@@ -534,43 +647,148 @@ impl ChainRouter {
                 let state_len = self.state_len(m);
                 self.states.ensure(m, dims, state_len);
             }
-            // sub-batch view: members carry their committed sequences,
-            // every other lane (idle or other-group) is None and stays
-            // untouched. The view borrows the batcher, so only its
-            // *allocation* can persist in `self` — `seq_scratch` recycles
-            // it, making the whole steady-state tick allocation-free,
-            // not just `run_spec_step` (§8; the full-tick bench row
-            // gates this).
-            self.member_mask.fill(false);
-            for &b in &slots {
-                self.member_mask[b] = true;
+        }
+
+        // --- split-borrow guard: groups must partition the batch --------
+        // (disjoint by construction of gid_for; this is the structured
+        // backstop that turns a future partitioning bug into an error
+        // instead of two workers aliasing a slot)
+        StateManager::check_disjoint(
+            self.cfg.batch,
+            self.group_slots.iter().map(|g| g.as_slice()),
+            &mut self.overlap_marks)?;
+
+        // --- execute: scatter one task per active group ------------------
+        {
+            let backend = self.backend.as_ref();
+            let batcher = &self.batcher;
+            let states = &self.states;
+            let group_slots = &self.group_slots;
+            let group_chains = &self.group_chains;
+            let member_mask = &mut self.member_mask;
+            let slot_rngs = &mut self.slot_rngs;
+            let batch = self.cfg.batch;
+            let vocab = self.manifest.vocab;
+            let rule = self.cfg.rule;
+            let pad = self.manifest.special.pad;
+
+            let mut tasks: Vec<GroupTask<'_>> = self.task_scratch.take();
+            {
+                let mut rec_it = self.recorders.iter_mut();
+                let mut sc_it = self.scratches.iter_mut();
+                let mut rng_it = self.rng_scratch.iter_mut();
+                let mut seq_it = self.seq_scratches.iter_mut();
+                for (gid, slots) in group_slots.iter().enumerate() {
+                    let recorder = rec_it.next().unwrap();
+                    let scratch = sc_it.next().unwrap();
+                    let rng_buf = rng_it.next().unwrap();
+                    let seq_sc = seq_it.next().unwrap();
+                    if slots.is_empty() {
+                        continue;
+                    }
+                    // sub-batch view: members carry their committed
+                    // sequences, every other lane (idle or other-group)
+                    // is None and stays untouched; the recycled
+                    // allocation keeps this off the allocator (§8)
+                    member_mask.fill(false);
+                    for &b in slots.iter() {
+                        member_mask[b] = true;
+                    }
+                    let mut seqs: SlotSeqs<'_> = seq_sc.take();
+                    batcher.fill_slot_seqs(Some(member_mask.as_slice()),
+                                           &mut seqs);
+                    // RNG snapshot, member lanes only: the step draws
+                    // exclusively from member slots' streams and gather
+                    // writes exactly those back — semantically identical
+                    // to drawing from `slot_rngs` directly (slots are
+                    // disjoint across groups), and copying members
+                    // instead of the whole batch keeps PerSlot ticks at
+                    // O(batch) instead of O(batch^2) Rng copies
+                    for &b in slots.iter() {
+                        rng_buf[b] = slot_rngs[b].clone();
+                    }
+                    tasks.push(GroupTask {
+                        gid,
+                        chain: group_chains[gid].as_ref().unwrap(),
+                        seqs,
+                        scratch,
+                        recorder,
+                        rngs: &mut rng_buf[..],
+                        shard: states.shard_for(slots),
+                        err: None,
+                    });
+                }
             }
-            let mut seqs: SlotSeqs = self.seq_scratch.take();
-            self.batcher.fill_slot_seqs(Some(&self.member_mask),
-                                        &mut seqs);
-            let step = {
-                let mut ctx = StepCtx {
-                    exec: self.backend.as_ref(),
-                    prof: &mut self.prof,
-                    sim: &mut self.sim,
-                    states: &mut self.states,
-                    batch: self.cfg.batch,
-                    vocab: self.manifest.vocab,
-                    rule: self.cfg.rule,
-                    rngs: &mut self.slot_rngs,
-                    scratch: &mut self.scratches[gid],
+
+            let f = |t: &mut GroupTask| {
+                let t0 = Instant::now();
+                let result = {
+                    let mut ctx = StepCtx {
+                        exec: backend,
+                        rec: &mut *t.recorder,
+                        states: t.shard,
+                        batch,
+                        vocab,
+                        rule,
+                        rngs: &mut *t.rngs,
+                        scratch: &mut *t.scratch,
+                    };
+                    run_spec_step(&mut ctx, t.chain, &t.seqs, pad)
                 };
-                run_spec_step(&mut ctx, chain, &seqs,
-                              self.manifest.special.pad)
+                t.recorder.wall = t0.elapsed();
+                t.err = result.err();
             };
-            // park the view's allocation before propagating any error so
-            // the capacity survives either way
-            self.seq_scratch.put(seqs);
-            step?;
+            match self.pool.as_ref() {
+                Some(pool) if tasks.len() > 1 => pool.run(&mut tasks, &f),
+                _ => {
+                    // sequential lane: same task code, ascending gid
+                    for t in tasks.iter_mut() {
+                        f(t);
+                    }
+                }
+            }
+
+            // park the views/tasks and surface the first error in gid
+            // order (no group committed yet — an error aborts the whole
+            // tick atomically)
+            let mut first_err: Option<anyhow::Error> = None;
+            for t in tasks.iter_mut() {
+                let seqs = std::mem::take(&mut t.seqs);
+                self.seq_scratches[t.gid].put(seqs);
+                for &b in &group_slots[t.gid] {
+                    slot_rngs[b] = t.rngs[b].clone();
+                }
+                if first_err.is_none() {
+                    first_err = t.err.take();
+                }
+            }
+            self.task_scratch.put(tasks);
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+
+        // --- gather: deterministic ascending-gid merge + commit ---------
+        let mut total = 0usize;
+        self.done_buf.clear();
+        for gid in 0..self.group_slots.len() {
+            if self.group_slots[gid].is_empty() {
+                continue;
+            }
+            // fold this group's recorded calls + similarity observations
+            // into the shared trackers; the replay order is the recording
+            // order, and groups fold in gid order — identical final state
+            // for every worker count
+            {
+                let rec = &mut self.recorders[gid];
+                rec.drain_into(&mut self.prof, &mut self.sim);
+                self.prof.record_group_wall(&self.group_labels[gid],
+                                            rec.wall);
+            }
             // commit this group's slots from its scratch outcome
             let mut group_total = 0usize;
             let outcome = &self.scratches[gid].outcome;
-            for &b in &slots {
+            for &b in &self.group_slots[gid] {
                 let Some(slot) = self.batcher.slots[b].as_mut() else {
                     continue;
                 };
@@ -607,7 +825,6 @@ impl ChainRouter {
             self.prof.record_chain_step(chain_label, group_total as u64);
             self.prof.record_group_step(&self.group_labels[gid],
                                         chain_label, group_total as u64);
-            self.group_slots[gid] = slots; // return the reused buffer
         }
         let done = std::mem::take(&mut self.done_buf);
         for &b in &done {

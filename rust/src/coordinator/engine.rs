@@ -210,14 +210,38 @@ impl Batcher {
     }
 }
 
+/// Reinterpret an **empty** `Vec<T>`'s allocation as a `Vec<U>` — THE
+/// single home of the lifetime-erasure parking trick used by
+/// [`SeqScratch`] and the tick's task scratch (chain_router.rs). The vec
+/// is cleared first, so no value is ever transmuted; only the raw
+/// allocation (pointer + capacity) survives the retype.
+///
+/// # Safety
+///
+/// `T` and `U` must be the *same type up to lifetime parameters* (e.g.
+/// `Option<&'a [i32]>` vs `Option<&'static [i32]>`): lifetimes are
+/// erased at codegen, so such pairs have identical size, alignment and
+/// allocator layout — the `debug_assert`s below pin the cheap half of
+/// that contract. Callers must not use the retype to change any
+/// non-lifetime parameter.
+pub(crate) unsafe fn retype_empty<T, U>(mut v: Vec<T>) -> Vec<U> {
+    debug_assert_eq!(std::mem::size_of::<T>(), std::mem::size_of::<U>());
+    debug_assert_eq!(std::mem::align_of::<T>(), std::mem::align_of::<U>());
+    v.clear();
+    let (ptr, cap) = (v.as_mut_ptr(), v.capacity());
+    std::mem::forget(v);
+    Vec::from_raw_parts(ptr as *mut U, 0, cap)
+}
+
 /// Recycled allocation for the per-group slot-seq views (`Vec<Option<&'a
 /// [i32]>>`). The view borrows the batcher, so it cannot live across
 /// ticks inside the router; what CAN persist is its *allocation*. The
 /// buffer is stored with an unreachable placeholder lifetime and is
 /// always empty while parked, so handing it out at a caller-chosen
-/// lifetime moves zero elements — only the capacity survives. This is
-/// what keeps the full engine tick on the §8 zero-allocation path (the
-/// old per-group `collect()` was the last steady-state allocation).
+/// lifetime moves zero elements — only the capacity survives (see
+/// [`retype_empty`]). This is what keeps the full engine tick on the §8
+/// zero-allocation path (the old per-group `collect()` was the last
+/// steady-state allocation).
 #[derive(Default)]
 pub struct SeqScratch {
     parked: Vec<Option<&'static [i32]>>,
@@ -230,28 +254,16 @@ impl SeqScratch {
 
     /// Take the parked allocation as an empty buffer at any lifetime.
     pub fn take<'a>(&mut self) -> Vec<Option<&'a [i32]>> {
-        let mut v = std::mem::take(&mut self.parked);
-        v.clear();
-        let (ptr, cap) = (v.as_mut_ptr(), v.capacity());
-        std::mem::forget(v);
-        // SAFETY: `Option<&'a [i32]>` and `Option<&'static [i32]>` differ
-        // only in lifetime — identical size, alignment and allocation
-        // layout — and the vec is empty, so no value is transmuted.
-        unsafe {
-            Vec::from_raw_parts(ptr as *mut Option<&'a [i32]>, 0, cap)
-        }
+        // SAFETY: same type up to the slice lifetime (retype_empty's
+        // contract); parked buffers are always empty.
+        unsafe { retype_empty(std::mem::take(&mut self.parked)) }
     }
 
     /// Park the buffer's allocation for reuse (contents are dropped —
     /// `Option<&[i32]>` is `Copy`, nothing runs).
-    pub fn put(&mut self, mut v: Vec<Option<&[i32]>>) {
-        v.clear();
-        let (ptr, cap) = (v.as_mut_ptr(), v.capacity());
-        std::mem::forget(v);
-        // SAFETY: same layout argument as `take`, empty again.
-        self.parked = unsafe {
-            Vec::from_raw_parts(ptr as *mut Option<&'static [i32]>, 0, cap)
-        };
+    pub fn put(&mut self, v: Vec<Option<&[i32]>>) {
+        // SAFETY: same layout argument as `take`, emptied by the retype.
+        self.parked = unsafe { retype_empty(v) };
     }
 }
 

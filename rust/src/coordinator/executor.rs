@@ -12,13 +12,13 @@
 //! computation slices the tail (logits/drafted tokens) out for the host —
 //! the multi-megabyte KV region never crosses the host boundary.
 #![allow(clippy::too_many_arguments)] // Backend signatures, see backend.rs
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::backend::{Backend, PrefillState};
-use crate::coordinator::profiler::Profiler;
+use crate::coordinator::recorder::StepSink;
 use crate::model_pool::{FnKey, ModelPool};
 use crate::runtime::{FnKind, Manifest};
 use crate::state::StateBuf;
@@ -76,7 +76,7 @@ impl Executor {
 
     /// Shared body of decode/draft/verify: dispatch the packed-state fn,
     /// adopt the new state, pull the tail.
-    fn step_fn(&self, prof: &mut Profiler, key: &FnKey, tokens: &[i32],
+    fn step_fn(&self, sink: &mut dyn StepSink, key: &FnKey, tokens: &[i32],
                token_dims: &[usize], state: &mut StateBuf, lens: &[i32])
                -> Result<Vec<f32>> {
         let batch = key.batch;
@@ -96,7 +96,8 @@ impl Executor {
         state.replace(out)?;
         let (tail, d2) = self.extract_tail(&key.model, batch, state)?;
         let dur = self.calibrate(&key.model, d1 + d2);
-        prof.record_call(key, dur);
+        sink.record_call_parts(&key.model, key.kind, key.batch, key.window,
+                               dur);
         Ok(tail)
     }
 
@@ -120,20 +121,24 @@ impl Executor {
     }
 }
 
-impl Backend for Executor {
-    fn manifest(&self) -> &Arc<Manifest> {
+/// The five data-plane processors as inherent methods. `Executor` cannot
+/// implement [`Backend`] itself — the trait requires `Send + Sync` and
+/// the PJRT handles are `Rc`-based — so the [`SerialXla`] shim wraps it
+/// behind a mutex and delegates here.
+impl Executor {
+    pub fn manifest(&self) -> &Arc<Manifest> {
         &self.pool.manifest
     }
 
-    fn register(&self, model: &str) -> Result<()> {
+    pub fn register(&self, model: &str) -> Result<()> {
         self.pool.register(model)?;
         Ok(())
     }
 
     /// PrefillProcessor: process one prompt (B=1), returning the
     /// last-position logits `[V]` and the fresh packed B=1 state buffer.
-    fn prefill(&self, prof: &mut Profiler, model: &str, prompt: &[i32])
-               -> Result<(Vec<f32>, PrefillState)> {
+    pub fn prefill(&self, sink: &mut dyn StepSink, model: &str,
+                   prompt: &[i32]) -> Result<(Vec<f32>, PrefillState)> {
         let p = self.pool.manifest.prefill;
         if prompt.is_empty() || prompt.len() > p {
             bail!("prompt length {} outside 1..={p}", prompt.len());
@@ -151,16 +156,17 @@ impl Backend for Executor {
         let xexe = self.pool.get(&Self::key(model, FnKind::Extract1, 1, 0))?;
         let (tail, d2) = xexe.run_b_to_host(&[&state1])?;
         let dur = self.calibrate(model, d1 + d2);
-        prof.record_call(&key, dur);
+        sink.record_call_parts(&key.model, key.kind, key.batch, key.window,
+                               dur);
         let v = self.pool.manifest.vocab;
         Ok((tail[..v].to_vec(), PrefillState::Xla(state1)))
     }
 
     /// Admission: place a prefilled B=1 state into batch slot `slot`
     /// on-device (exported `insert` computation).
-    fn insert(&self, prof: &mut Profiler, model: &str, batch: usize,
-              state: &mut StateBuf, one: &PrefillState, slot: usize)
-              -> Result<()> {
+    pub fn insert(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+                  state: &mut StateBuf, one: &PrefillState, slot: usize)
+                  -> Result<()> {
         let PrefillState::Xla(one) = one else {
             bail!("xla backend handed a non-xla prefill state");
         };
@@ -173,20 +179,21 @@ impl Backend for Executor {
             exe.run_b(&[buf, one, &slot_b])?
         };
         state.replace(out)?;
-        prof.record_call(&key, dur);
+        sink.record_call_parts(&key.model, key.kind, key.batch, key.window,
+                               dur);
         Ok(())
     }
 
     /// DecodeProcessor (the TMO / autoregressive path): one step for the
     /// whole batch. Writes logits `[B*V]` into `out`.
-    fn decode(&self, prof: &mut Profiler, model: &str, batch: usize,
-              tokens: &[i32], state: &mut StateBuf, lens: &[i32],
-              out: &mut Vec<f32>) -> Result<()> {
+    pub fn decode(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+                  tokens: &[i32], state: &mut StateBuf, lens: &[i32],
+                  out: &mut Vec<f32>) -> Result<()> {
         if tokens.len() != batch {
             bail!("decode tokens != batch {batch}");
         }
         let key = Self::key(model, FnKind::Decode, batch, 0);
-        let tail = self.step_fn(prof, &key, tokens, &[batch], state, lens)?;
+        let tail = self.step_fn(sink, &key, tokens, &[batch], state, lens)?;
         out.clear();
         out.extend_from_slice(&tail[..batch * self.pool.manifest.vocab]);
         Ok(())
@@ -194,15 +201,15 @@ impl Backend for Executor {
 
     /// DraftProcessor: greedy scan of `window` speculative tokens. Writes
     /// drafted tokens `[B*w]` and draft logits `[B*w*V]`.
-    fn draft(&self, prof: &mut Profiler, model: &str, batch: usize,
-             window: usize, tokens: &[i32], state: &mut StateBuf,
-             lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
-             -> Result<()> {
+    pub fn draft(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+                 window: usize, tokens: &[i32], state: &mut StateBuf,
+                 lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
+                 -> Result<()> {
         if tokens.len() != batch {
             bail!("draft tokens != batch {batch}");
         }
         let key = Self::key(model, FnKind::Draft, batch, window);
-        let tail = self.step_fn(prof, &key, tokens, &[batch], state, lens)?;
+        let tail = self.step_fn(sink, &key, tokens, &[batch], state, lens)?;
         let v = self.pool.manifest.vocab;
         let nl = batch * window * v;
         // tail layout: logits[B,w,V] ++ tokens_as_f32[B,w]
@@ -216,18 +223,127 @@ impl Backend for Executor {
     /// VerifyProcessor: one parallel forward over `window`+1 positions.
     /// `block` is row-major `[B, window+1]`. Writes logits
     /// `[B*(window+1)*V]` into `out`.
-    fn verify(&self, prof: &mut Profiler, model: &str, batch: usize,
-              window: usize, block: &[i32], state: &mut StateBuf,
-              lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
+    pub fn verify(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+                  window: usize, block: &[i32], state: &mut StateBuf,
+                  lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
         let w1 = window + 1;
         if block.len() != batch * w1 {
             bail!("verify block len mismatch (batch {batch}, w {window})");
         }
         let key = Self::key(model, FnKind::Verify, batch, window);
-        let tail = self.step_fn(prof, &key, block, &[batch, w1], state,
+        let tail = self.step_fn(sink, &key, block, &[batch, w1], state,
                                 lens)?;
         out.clear();
         out.extend_from_slice(&tail[..batch * w1 * self.pool.manifest.vocab]);
         Ok(())
+    }
+}
+
+/// The XLA executor behind the [`Backend`] trait's `Send + Sync` bound
+/// (DESIGN.md §11): every call is serialized on the **pool-wide**
+/// `ModelPool::call_lock`, so the `Rc`-based PJRT handles are only ever
+/// touched by one thread at a time — even when several shims were built
+/// over one shared pool (`ChainRouter::with_pool` shares pools across
+/// engines to amortize compilation; a per-shim mutex would let two such
+/// routers race on the shared `Rc` graph).
+///
+/// This makes the shim *type-safe to share*, not *parallel*: concurrent
+/// group steps on the XLA path would still interleave stale-lens
+/// packed-state writes between groups (see
+/// [`Backend::parallel_groups_safe`]), so the shim answers `false` there
+/// and the router rejects `workers > 1` on it. One worker lane +
+/// serialized calls ≡ the pre-shim single-threaded executor, byte for
+/// byte.
+pub struct SerialXla {
+    exec: Executor,
+    /// The owning pool's `call_lock`, cloned out so the guard type does
+    /// not borrow through `exec`.
+    call_lock: Arc<Mutex<()>>,
+    /// Cached so `manifest()` can hand out a reference without taking
+    /// the call lock.
+    manifest: Arc<Manifest>,
+}
+
+// SAFETY: the only non-Send/Sync content is the PJRT object graph inside
+// `Executor` (Rc-based wrappers over the PJRT C API), reached only
+// through the shared `Arc<ModelPool>`. Every dereference of that graph
+// by ANY shim goes through the pool-wide `call_lock` acquired in
+// `SerialXla::lock`, so (1) no two threads ever touch an `Rc` refcount
+// concurrently — including two shims built over the same pool — and
+// (2) the mutex's acquire/release edges order every access that hands
+// the graph from one thread to the next. No `Rc` clone escapes the
+// locked calls: `PrefillState::Xla` buffers are produced and consumed on
+// the single engine thread (admission path), `StateBuf` device handles
+// only round-trip through these serialized calls (see the matching impl
+// on `StateBuf`), and the `Arc<ModelPool>` handles themselves are
+// atomically counted — the inner `Rc` graph is dropped only by the last
+// holder, at which point access is exclusive by definition. Direct
+// `ModelPool` use outside a shim remains single-threaded by type
+// (`Arc<ModelPool>` is itself `!Send`).
+unsafe impl Send for SerialXla {}
+unsafe impl Sync for SerialXla {}
+
+impl SerialXla {
+    pub fn new(exec: Executor) -> Self {
+        let manifest = exec.pool.manifest.clone();
+        let call_lock = exec.pool.call_lock.clone();
+        SerialXla { exec, call_lock, manifest }
+    }
+
+    /// Acquire the pool-wide PJRT serialization lock and expose the
+    /// executor for one call.
+    fn lock(&self) -> (MutexGuard<'_, ()>, &Executor) {
+        let g = self.call_lock.lock().unwrap_or_else(|e| e.into_inner());
+        (g, &self.exec)
+    }
+}
+
+impl Backend for SerialXla {
+    fn manifest(&self) -> &Arc<Manifest> {
+        &self.manifest
+    }
+
+    fn register(&self, model: &str) -> Result<()> {
+        let (_g, exec) = self.lock();
+        exec.register(model)
+    }
+
+    // state_is_inert / parallel_groups_safe: default `false` — the packed
+    // state is real and per-lane writes are not isolated.
+
+    fn prefill(&self, sink: &mut dyn StepSink, model: &str, prompt: &[i32])
+               -> Result<(Vec<f32>, PrefillState)> {
+        let (_g, exec) = self.lock();
+        exec.prefill(sink, model, prompt)
+    }
+
+    fn insert(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              state: &mut StateBuf, one: &PrefillState, slot: usize)
+              -> Result<()> {
+        let (_g, exec) = self.lock();
+        exec.insert(sink, model, batch, state, one, slot)
+    }
+
+    fn decode(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              tokens: &[i32], state: &mut StateBuf, lens: &[i32],
+              out: &mut Vec<f32>) -> Result<()> {
+        let (_g, exec) = self.lock();
+        exec.decode(sink, model, batch, tokens, state, lens, out)
+    }
+
+    fn draft(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+             window: usize, tokens: &[i32], state: &mut StateBuf,
+             lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
+             -> Result<()> {
+        let (_g, exec) = self.lock();
+        exec.draft(sink, model, batch, window, tokens, state, lens, toks,
+                   logits)
+    }
+
+    fn verify(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              window: usize, block: &[i32], state: &mut StateBuf,
+              lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        let (_g, exec) = self.lock();
+        exec.verify(sink, model, batch, window, block, state, lens, out)
     }
 }

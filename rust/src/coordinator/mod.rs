@@ -4,28 +4,34 @@
 //! plane that ties them together (§4.1).
 //!
 //! The data plane is pluggable (DESIGN.md §8): the [`Backend`] trait
-//! abstracts the five model-pool calls, implemented by the XLA-backed
-//! [`Executor`] and the artifact-free deterministic [`SimBackend`].
+//! (`Send + Sync` since the §11 parallel tick) abstracts the five
+//! model-pool calls, implemented by the artifact-free deterministic
+//! [`SimBackend`] and — through the [`SerialXla`] mutex shim — the
+//! XLA-backed [`Executor`].
 pub mod backend;
 pub mod chain_router;
 pub mod engine;
 pub mod executor;
 pub mod groups;
 pub mod profiler;
+pub mod recorder;
 pub mod scheduler;
 pub mod sim_backend;
 pub mod similarity;
 pub mod spec_step;
+pub mod worker_pool;
 
 pub use backend::{Backend, PrefillState};
 pub use chain_router::ChainRouter;
 pub use engine::{committed_frontier, Batcher, Finished, Request,
                  SeqScratch, Slot};
-pub use executor::Executor;
+pub use executor::{Executor, SerialXla};
 pub use groups::GroupKey;
 pub use profiler::Profiler;
+pub use recorder::{GroupRecorder, ProfSimSink, StepSink};
 pub use scheduler::{Chain, Scheduler, ScoredChain};
 pub use sim_backend::{SimBackend, SimModel, SimSpec};
 pub use similarity::SimilarityTracker;
 pub use spec_step::{catch_up, run_spec_step, SlotSeqs, StepCtx,
                     StepOutcome, StepScratch};
+pub use worker_pool::WorkerPool;

@@ -53,6 +53,11 @@ pub struct Profiler {
     /// chain groups — a chain serving one interactive slot is not mixed
     /// into the same row as the same chain serving four batch slots.
     group_outcomes: HashMap<String, HashMap<String, (u64, u64)>>,
+    /// per-group step wall-clock EMA (DESIGN.md §11): measured inside the
+    /// worker that ran the group, folded here at the gather barrier in
+    /// ascending-gid order — thread-safe attribution via sharded
+    /// recorders, not a mutex on the hot path.
+    group_wall: HashMap<String, EmaStat>,
     pub steps: u64,
     pub committed_tokens: u64,
 }
@@ -65,6 +70,7 @@ impl Profiler {
             chain_outcomes: HashMap::new(),
             chain_selected: HashMap::new(),
             group_outcomes: HashMap::new(),
+            group_wall: HashMap::new(),
             steps: 0,
             committed_tokens: 0,
         }
@@ -145,6 +151,31 @@ impl Profiler {
         let mut inner = HashMap::new();
         inner.insert(chain.to_string(), (1, committed));
         self.group_outcomes.insert(group.to_string(), inner);
+    }
+
+    /// Fold one group-step's wall-clock into the group's EMA
+    /// (borrowed-str steady state, allocation-free once seen). With
+    /// workers > 1 the durations of concurrently executed groups overlap
+    /// — each is the group's own step latency, not a share of the tick.
+    pub fn record_group_wall(&mut self, group: &str, dur: Duration) {
+        let alpha = self.alpha;
+        let x = dur.as_secs_f64();
+        if let Some(stat) = self.group_wall.get_mut(group) {
+            stat.update(x, alpha);
+            return;
+        }
+        let mut stat = EmaStat::default();
+        stat.update(x, alpha);
+        self.group_wall.insert(group.to_string(), stat);
+    }
+
+    /// (group, ema seconds, steps) wall-clock rows, sorted by group.
+    pub fn group_wall_table(&self) -> Vec<(String, f64, u64)> {
+        let mut v: Vec<_> = self.group_wall.iter()
+            .map(|(g, s)| (g.clone(), s.ema_s, s.count))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     /// (group, chain, group-steps, tokens) rows, sorted by group then by
@@ -278,6 +309,22 @@ mod tests {
         assert_eq!(p.selection_table()[0], ("A".to_string(), 2));
         assert_eq!(p.steps, 2);
         assert_eq!(p.committed_tokens, 8);
+    }
+
+    #[test]
+    fn group_wall_ema_accumulates_per_group() {
+        let mut p = Profiler::new(0.5);
+        p.record_group_wall("interactive", Duration::from_millis(10));
+        p.record_group_wall("interactive", Duration::from_millis(30));
+        p.record_group_wall("batch", Duration::from_millis(5));
+        let t = p.group_wall_table();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, "batch");
+        assert_eq!(t[0].2, 1);
+        assert_eq!(t[1].0, "interactive");
+        assert_eq!(t[1].2, 2);
+        // EMA: 0.5*0.030 + 0.5*0.010
+        assert!((t[1].1 - 0.020).abs() < 1e-9, "{}", t[1].1);
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Per-group step recorders (DESIGN.md §11): the sharded sink that makes
+//! parallel chain-group execution *observationally deterministic*.
+//!
+//! A speculative step reports three kinds of observations: backend call
+//! costs (profiler EMAs), DTV similarity samples and empirical acceptance
+//! rates (scheduler inputs). Folding them into the shared `Profiler` /
+//! `SimilarityTracker` from concurrent workers would make the EMA fold
+//! order depend on thread scheduling — and with it every subsequent
+//! adaptive chain selection. Instead each chain group records into its
+//! own [`GroupRecorder`] (a flat, reusable event log keyed by interned
+//! model ids — zero heap allocation once warmed), and the engine thread
+//! replays the logs into the real trackers at the gather barrier in
+//! ascending-gid order. The folded state is therefore bit-identical for
+//! any worker count, which is what lets the parity suites demand
+//! token-identical output at `workers ∈ {1, 2, 4}`.
+//!
+//! [`StepSink`] is the write interface a step sees; the data-plane
+//! backends only use its call-recording half ([`Profiler`] alone
+//! implements that, for the admission path), while [`ProfSimSink`] is the
+//! owned profiler+tracker pair benches and unit tests thread through a
+//! `StepCtx` directly.
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::profiler::Profiler;
+use crate::coordinator::similarity::SimilarityTracker;
+use crate::runtime::FnKind;
+
+/// Everything one speculative step reports, behind one mutable borrow.
+pub trait StepSink {
+    /// One executed backend call (see `Profiler::record_call_parts`).
+    fn record_call_parts(&mut self, model: &str, kind: FnKind, batch: usize,
+                         window: usize, dur: Duration);
+
+    /// One batch of per-position DTV observations for a (proposer,
+    /// verifier) pair (see `SimilarityTracker::observe_dtv`).
+    fn observe_dtv(&mut self, proposer: &str, verifier: &str, dtvs: &[f64]);
+
+    /// One empirical verification outcome (see
+    /// `SimilarityTracker::observe_acceptance`).
+    fn observe_acceptance(&mut self, proposer: &str, verifier: &str,
+                          accepted: usize, window: usize);
+}
+
+/// The admission path (prefill/insert) records call costs straight into
+/// the profiler; no similarity observations exist there, so those are
+/// no-ops. Do NOT use a bare `Profiler` as the sink of a full spec step —
+/// its DTV/acceptance signal would be dropped; use [`ProfSimSink`] or a
+/// [`GroupRecorder`].
+impl StepSink for Profiler {
+    fn record_call_parts(&mut self, model: &str, kind: FnKind, batch: usize,
+                         window: usize, dur: Duration) {
+        Profiler::record_call_parts(self, model, kind, batch, window, dur);
+    }
+
+    fn observe_dtv(&mut self, _p: &str, _v: &str, _dtvs: &[f64]) {}
+
+    fn observe_acceptance(&mut self, _p: &str, _v: &str, _a: usize,
+                          _w: usize) {}
+}
+
+/// Owned profiler + similarity tracker as one sink — the direct-fold
+/// fixture for benches and unit tests that drive `run_spec_step` without
+/// a router.
+#[derive(Debug)]
+pub struct ProfSimSink {
+    pub prof: Profiler,
+    pub sim: SimilarityTracker,
+}
+
+impl ProfSimSink {
+    pub fn new(alpha: f64) -> Self {
+        ProfSimSink {
+            prof: Profiler::new(alpha),
+            sim: SimilarityTracker::new(alpha),
+        }
+    }
+}
+
+impl StepSink for ProfSimSink {
+    fn record_call_parts(&mut self, model: &str, kind: FnKind, batch: usize,
+                         window: usize, dur: Duration) {
+        self.prof.record_call_parts(model, kind, batch, window, dur);
+    }
+
+    fn observe_dtv(&mut self, proposer: &str, verifier: &str, dtvs: &[f64]) {
+        self.sim.observe_dtv(proposer, verifier, dtvs);
+    }
+
+    fn observe_acceptance(&mut self, proposer: &str, verifier: &str,
+                          accepted: usize, window: usize) {
+        self.sim.observe_acceptance(proposer, verifier, accepted, window);
+    }
+}
+
+/// One recorded event. Model names are interned against the router's
+/// manifest-derived name table so events are `Copy` — clearing the log
+/// between ticks frees nothing and the steady state allocates nothing.
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    Call {
+        model: u16,
+        kind: FnKind,
+        batch: u32,
+        window: u32,
+        dur: Duration,
+    },
+    Dtv {
+        proposer: u16,
+        verifier: u16,
+        /// span into the recorder's flat `dtvs` buffer
+        off: u32,
+        len: u32,
+    },
+    Acceptance {
+        proposer: u16,
+        verifier: u16,
+        accepted: u32,
+        window: u32,
+    },
+}
+
+/// The per-group event log. One per gid, owned by the router, handed
+/// `&mut` to whichever worker runs the group this tick, drained on the
+/// engine thread at gather.
+#[derive(Debug)]
+pub struct GroupRecorder {
+    /// Interning table: every model name this engine can ever observe
+    /// (the manifest's model set), shared across all recorders.
+    names: Arc<Vec<String>>,
+    events: Vec<Event>,
+    dtvs: Vec<f64>,
+    /// Wall-clock of the group's last step, measured inside the worker.
+    pub wall: Duration,
+}
+
+impl GroupRecorder {
+    pub fn new(names: Arc<Vec<String>>) -> Self {
+        GroupRecorder {
+            names,
+            events: Vec::new(),
+            dtvs: Vec::new(),
+            wall: Duration::ZERO,
+        }
+    }
+
+    fn intern(&self, name: &str) -> u16 {
+        self.names.iter().position(|n| n == name)
+            .unwrap_or_else(|| panic!(
+                "model {name:?} missing from the recorder intern table \
+                 (built from the manifest at router construction)"))
+            as u16
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Replay the log into the shared trackers, preserving the original
+    /// event order, then reset for the next tick (buffers keep their
+    /// capacity — the clear frees nothing, events are `Copy`).
+    pub fn drain_into(&mut self, prof: &mut Profiler,
+                      sim: &mut SimilarityTracker) {
+        for ev in &self.events {
+            match *ev {
+                Event::Call { model, kind, batch, window, dur } => {
+                    prof.record_call_parts(
+                        &self.names[model as usize], kind, batch as usize,
+                        window as usize, dur);
+                }
+                Event::Dtv { proposer, verifier, off, len } => {
+                    sim.observe_dtv(
+                        &self.names[proposer as usize],
+                        &self.names[verifier as usize],
+                        &self.dtvs[off as usize..(off + len) as usize]);
+                }
+                Event::Acceptance { proposer, verifier, accepted, window } => {
+                    sim.observe_acceptance(
+                        &self.names[proposer as usize],
+                        &self.names[verifier as usize],
+                        accepted as usize, window as usize);
+                }
+            }
+        }
+        self.events.clear();
+        self.dtvs.clear();
+    }
+}
+
+impl StepSink for GroupRecorder {
+    fn record_call_parts(&mut self, model: &str, kind: FnKind, batch: usize,
+                         window: usize, dur: Duration) {
+        let model = self.intern(model);
+        self.events.push(Event::Call {
+            model,
+            kind,
+            batch: batch as u32,
+            window: window as u32,
+            dur,
+        });
+    }
+
+    fn observe_dtv(&mut self, proposer: &str, verifier: &str, dtvs: &[f64]) {
+        if dtvs.is_empty() {
+            return; // mirror SimilarityTracker::observe_dtv
+        }
+        let (proposer, verifier) = (self.intern(proposer),
+                                    self.intern(verifier));
+        let off = self.dtvs.len() as u32;
+        self.dtvs.extend_from_slice(dtvs);
+        self.events.push(Event::Dtv {
+            proposer,
+            verifier,
+            off,
+            len: dtvs.len() as u32,
+        });
+    }
+
+    fn observe_acceptance(&mut self, proposer: &str, verifier: &str,
+                          accepted: usize, window: usize) {
+        let (proposer, verifier) = (self.intern(proposer),
+                                    self.intern(verifier));
+        self.events.push(Event::Acceptance {
+            proposer,
+            verifier,
+            accepted: accepted as u32,
+            window: window as u32,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_pool::FnKey;
+
+    fn names() -> Arc<Vec<String>> {
+        Arc::new(vec!["m0".into(), "m1".into(), "m2".into()])
+    }
+
+    #[test]
+    fn replay_matches_direct_fold_exactly() {
+        // the determinism contract: recorder -> drain must produce the
+        // same tracker state as recording directly, in the same order
+        let mut rec = GroupRecorder::new(names());
+        let mut direct = ProfSimSink::new(0.3);
+        let script: Vec<(&str, Duration)> = vec![
+            ("m0", Duration::from_millis(3)),
+            ("m2", Duration::from_millis(11)),
+            ("m0", Duration::from_millis(5)),
+        ];
+        for (m, d) in &script {
+            rec.record_call_parts(m, FnKind::Verify, 4, 8, *d);
+            direct.record_call_parts(m, FnKind::Verify, 4, 8, *d);
+        }
+        rec.observe_dtv("m0", "m2", &[0.1, 0.3]);
+        direct.observe_dtv("m0", "m2", &[0.1, 0.3]);
+        rec.observe_acceptance("m0", "m2", 3, 4);
+        direct.observe_acceptance("m0", "m2", 3, 4);
+        rec.observe_dtv("m0", "m2", &[0.2]);
+        direct.observe_dtv("m0", "m2", &[0.2]);
+
+        let mut prof = Profiler::new(0.3);
+        let mut sim = SimilarityTracker::new(0.3);
+        rec.drain_into(&mut prof, &mut sim);
+        let key = FnKey { model: "m0".into(), kind: FnKind::Verify,
+                          batch: 4, window: 8 };
+        assert_eq!(prof.call_cost(&key), direct.prof.call_cost(&key));
+        assert_eq!(sim.sim_score("m0", "m2"),
+                   direct.sim.sim_score("m0", "m2"));
+        assert_eq!(sim.accept_estimate("m0", "m2"),
+                   direct.sim.accept_estimate("m0", "m2"));
+        // drained: a second replay adds nothing
+        assert!(rec.is_empty());
+        let before = prof.call_cost(&key);
+        rec.drain_into(&mut prof, &mut sim);
+        assert_eq!(prof.call_cost(&key), before);
+    }
+
+    #[test]
+    fn buffers_are_reused_across_ticks() {
+        let mut rec = GroupRecorder::new(names());
+        let mut prof = Profiler::new(0.2);
+        let mut sim = SimilarityTracker::new(0.2);
+        for _ in 0..3 {
+            for _ in 0..8 {
+                rec.record_call_parts("m1", FnKind::Draft, 4, 4,
+                                      Duration::from_millis(1));
+                rec.observe_dtv("m1", "m2", &[0.5; 4]);
+            }
+            rec.drain_into(&mut prof, &mut sim);
+        }
+        // cleared but capacity retained
+        assert!(rec.is_empty());
+        assert!(rec.events.capacity() >= 16);
+        assert!(rec.dtvs.capacity() >= 32);
+    }
+
+    #[test]
+    fn empty_dtv_batches_are_dropped_like_the_tracker_drops_them() {
+        let mut rec = GroupRecorder::new(names());
+        rec.observe_dtv("m0", "m2", &[]);
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "intern table")]
+    fn unknown_model_is_a_programming_error() {
+        let mut rec = GroupRecorder::new(names());
+        rec.record_call_parts("nope", FnKind::Decode, 1, 0,
+                              Duration::from_millis(1));
+    }
+
+    #[test]
+    fn profiler_alone_drops_similarity_observations() {
+        let mut p = Profiler::new(0.5);
+        StepSink::observe_dtv(&mut p, "a", "b", &[0.5]);
+        StepSink::observe_acceptance(&mut p, "a", "b", 1, 2);
+        StepSink::record_call_parts(&mut p, "m", FnKind::Decode, 1, 0,
+                                    Duration::from_millis(2));
+        let key = FnKey { model: "m".into(), kind: FnKind::Decode,
+                          batch: 1, window: 0 };
+        assert!(p.call_cost(&key).is_some());
+    }
+}

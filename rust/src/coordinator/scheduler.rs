@@ -78,48 +78,62 @@ pub struct ScoredChain {
 /// infinity.
 const MIN_STEP_BUDGET_S: f64 = 5e-3;
 
+/// Algorithm 1 step 1: capability-increasing subsequences ending at the
+/// target, up to max_chain_len. Pure function of (manifest, config) —
+/// the scheduler builds it exactly once at construction and serves a
+/// borrowed slice, so per-decision scoring never re-materializes the
+/// candidate `Vec<Chain>` (and its model-name `String`s) again.
+fn build_candidates(manifest: &Manifest, cfg: &EngineConfig) -> Vec<Chain> {
+    let order = manifest.models_by_capability();
+    let tpos = match order.iter().position(|m| m == &cfg.target) {
+        Some(p) => p,
+        None => return vec![Chain::target_only(&cfg.target)],
+    };
+    let smaller = &order[..tpos];
+    let mut chains = vec![Chain::target_only(&cfg.target)];
+    // enumerate non-empty increasing subsequences of `smaller` with
+    // length <= max_chain_len - 1 (bitmask enumeration: pools are small)
+    let n = smaller.len();
+    for mask in 1u32..(1 << n) {
+        let picked: Vec<String> = (0..n)
+            .filter(|i| mask & (1 << i) != 0)
+            .map(|i| smaller[i].clone())
+            .collect();
+        if picked.len() + 1 > cfg.max_chain_len {
+            continue;
+        }
+        for &w in &manifest.windows {
+            let mut models = picked.clone();
+            models.push(cfg.target.clone());
+            chains.push(Chain { models, window: w });
+        }
+    }
+    chains
+}
+
 pub struct Scheduler {
     pub manifest: Arc<Manifest>,
     cfg: EngineConfig,
     rng: Rng,
+    /// Candidate set cached per (manifest, config) — see
+    /// `build_candidates`. `bench_scheduler_overhead` tracks the
+    /// ns/decision this buys.
+    candidates: Vec<Chain>,
     pub plans: u64,
     pub explorations: u64,
 }
 
 impl Scheduler {
     pub fn new(manifest: Arc<Manifest>, cfg: EngineConfig, seed: u64) -> Self {
-        Scheduler { manifest, cfg, rng: Rng::new(seed), plans: 0,
-                    explorations: 0 }
+        let candidates = build_candidates(&manifest, &cfg);
+        Scheduler { manifest, cfg, rng: Rng::new(seed), candidates,
+                    plans: 0, explorations: 0 }
     }
 
-    /// Algorithm 1 step 1: capability-increasing subsequences ending at
-    /// the target, up to max_chain_len.
-    pub fn candidate_chains(&self) -> Vec<Chain> {
-        let order = self.manifest.models_by_capability();
-        let tpos = match order.iter().position(|m| m == &self.cfg.target) {
-            Some(p) => p,
-            None => return vec![Chain::target_only(&self.cfg.target)],
-        };
-        let smaller = &order[..tpos];
-        let mut chains = vec![Chain::target_only(&self.cfg.target)];
-        // enumerate non-empty increasing subsequences of `smaller` with
-        // length <= max_chain_len - 1 (bitmask enumeration: pools are small)
-        let n = smaller.len();
-        for mask in 1u32..(1 << n) {
-            let picked: Vec<String> = (0..n)
-                .filter(|i| mask & (1 << i) != 0)
-                .map(|i| smaller[i].clone())
-                .collect();
-            if picked.len() + 1 > self.cfg.max_chain_len {
-                continue;
-            }
-            for &w in &self.manifest.windows {
-                let mut models = picked.clone();
-                models.push(self.cfg.target.clone());
-                chains.push(Chain { models, window: w });
-            }
-        }
-        chains
+    /// The cached Algorithm-1 candidate set (borrowed — built once at
+    /// construction, never rebuilt per decision).
+    pub fn candidate_chains(&self) -> &[Chain] {
+        &self.candidates
     }
 
     /// Analytic per-call FLOP estimate used as cold-start fallback:
@@ -226,7 +240,7 @@ impl Scheduler {
     /// Score every candidate (the Figure-2 view).
     pub fn score_all(&self, profiler: &Profiler, sim: &SimilarityTracker)
                      -> Vec<ScoredChain> {
-        let mut scored: Vec<_> = self.candidate_chains()
+        let mut scored: Vec<_> = self.candidates
             .iter()
             .map(|c| self.predict_effective_time(c, profiler, sim))
             .collect();
@@ -400,7 +414,9 @@ mod tests {
         let cands = s.candidate_chains();
         // [m2], and per window: [m0,m2], [m1,m2], [m0,m1,m2]
         assert_eq!(cands.len(), 1 + 3 * 2);
-        for c in &cands {
+        // cached: repeated calls serve the same slice, no rebuild
+        assert_eq!(cands.as_ptr(), s.candidate_chains().as_ptr());
+        for c in cands {
             assert_eq!(c.target(), "m2");
             assert!(c.models.len() <= 3);
             // capability-increasing

@@ -28,7 +28,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::backend::{Backend, PrefillState};
-use crate::coordinator::profiler::Profiler;
+use crate::coordinator::recorder::StepSink;
 use crate::rng::{argmax, splitmix};
 use crate::runtime::{DatasetSpec, FnKind, Manifest, ModelMeta,
                      SpecialTokens};
@@ -247,11 +247,11 @@ impl SimBackend {
         out[choice as usize] += 6.0;
     }
 
-    fn record(&self, prof: &mut Profiler, model: &str, kind: FnKind,
+    fn record(&self, sink: &mut dyn StepSink, model: &str, kind: FnKind,
               batch: usize, window: usize, positions: usize,
               cost_per_pos: f64) {
         let dur = Duration::from_secs_f64(cost_per_pos * positions as f64);
-        prof.record_call_parts(model, kind, batch, window, dur);
+        sink.record_call_parts(model, kind, batch, window, dur);
     }
 
     /// Guard mirroring the XLA executor's capacity check, so logic errors
@@ -278,7 +278,21 @@ impl Backend for SimBackend {
         self.model_idx(model).map(|_| ())
     }
 
-    fn prefill(&self, prof: &mut Profiler, model: &str, prompt: &[i32])
+    /// The Markov LM keeps no KV state: every `state` argument below is
+    /// ignored, so concurrent group steps may be handed dummy buffers
+    /// (no per-model lock serializing the logits compute).
+    fn state_is_inert(&self) -> bool {
+        true
+    }
+
+    /// Pure function of (model, prev token): lanes are fully independent
+    /// and there is no shared mutable state, so disjoint-slot group steps
+    /// can run concurrently with bit-identical results (DESIGN.md §11).
+    fn parallel_groups_safe(&self) -> bool {
+        true
+    }
+
+    fn prefill(&self, sink: &mut dyn StepSink, model: &str, prompt: &[i32])
                -> Result<(Vec<f32>, PrefillState)> {
         let p = self.manifest.prefill;
         if prompt.is_empty() || prompt.len() > p {
@@ -287,12 +301,12 @@ impl Backend for SimBackend {
         let mi = self.model_idx(model)?;
         let mut logits = vec![0.0f32; self.manifest.vocab];
         self.write_logits(mi, *prompt.last().unwrap(), &mut logits);
-        self.record(prof, model, FnKind::Prefill, 1, 0, prompt.len(),
+        self.record(sink, model, FnKind::Prefill, 1, 0, prompt.len(),
                     self.models[mi].cost_per_pos);
         Ok((logits, PrefillState::Sim))
     }
 
-    fn insert(&self, prof: &mut Profiler, model: &str, batch: usize,
+    fn insert(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
               _state: &mut StateBuf, one: &PrefillState, slot: usize)
               -> Result<()> {
         if !matches!(one, PrefillState::Sim) {
@@ -302,12 +316,12 @@ impl Backend for SimBackend {
             bail!("insert slot {slot} out of range (batch {batch})");
         }
         let mi = self.model_idx(model)?;
-        self.record(prof, model, FnKind::Insert, batch, 0, 1,
+        self.record(sink, model, FnKind::Insert, batch, 0, 1,
                     self.models[mi].cost_per_pos);
         Ok(())
     }
 
-    fn decode(&self, prof: &mut Profiler, model: &str, batch: usize,
+    fn decode(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
               tokens: &[i32], _state: &mut StateBuf, lens: &[i32],
               out: &mut Vec<f32>) -> Result<()> {
         if tokens.len() != batch {
@@ -324,12 +338,12 @@ impl Backend for SimBackend {
         for b in 0..batch {
             self.write_logits(mi, tokens[b], &mut out[b * v..(b + 1) * v]);
         }
-        self.record(prof, model, FnKind::Decode, batch, 0, batch,
+        self.record(sink, model, FnKind::Decode, batch, 0, batch,
                     self.models[mi].cost_per_pos);
         Ok(())
     }
 
-    fn draft(&self, prof: &mut Profiler, model: &str, batch: usize,
+    fn draft(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
              window: usize, tokens: &[i32], _state: &mut StateBuf,
              lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
              -> Result<()> {
@@ -357,12 +371,12 @@ impl Backend for SimBackend {
                 prev = t;
             }
         }
-        self.record(prof, model, FnKind::Draft, batch, window,
+        self.record(sink, model, FnKind::Draft, batch, window,
                     batch * window, self.models[mi].cost_per_pos);
         Ok(())
     }
 
-    fn verify(&self, prof: &mut Profiler, model: &str, batch: usize,
+    fn verify(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
               window: usize, block: &[i32], _state: &mut StateBuf,
               lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
         let w1 = window + 1;
@@ -384,7 +398,7 @@ impl Backend for SimBackend {
                                            ..(b * w1 + i + 1) * v]);
             }
         }
-        self.record(prof, model, FnKind::Verify, batch, window, batch * w1,
+        self.record(sink, model, FnKind::Verify, batch, window, batch * w1,
                     self.models[mi].cost_per_pos);
         Ok(())
     }
@@ -393,6 +407,7 @@ impl Backend for SimBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::profiler::Profiler;
     use crate::state::KvDims;
 
     fn backend() -> SimBackend {

@@ -43,11 +43,11 @@ use anyhow::{bail, Result};
 
 use crate::config::AcceptRule;
 use crate::coordinator::backend::Backend;
-use crate::coordinator::profiler::Profiler;
+use crate::coordinator::recorder::StepSink;
 use crate::coordinator::scheduler::Chain;
-use crate::coordinator::similarity::{dtv_logits, SimilarityTracker};
+use crate::coordinator::similarity::dtv_logits;
 use crate::rng::{argmax, softmax_into, softmax_prob_at, Rng};
-use crate::state::StateManager;
+use crate::state::{ModelState, StateBuf, StateShard};
 
 /// Everything a step needs, borrowed from the engine.
 ///
@@ -58,16 +58,63 @@ use crate::state::StateManager;
 /// the tick's chain groups are partitioned. This is what makes grouped
 /// execution token-identical to isolated batch=1 runs (the
 /// `group_parity` differential harness).
+///
+/// `states` is a [`StateShard`]: the step's view of every model's state,
+/// restricted to its group's member slots (disjoint across concurrently
+/// running groups — DESIGN.md §11). `rec` is the step's observation sink
+/// — a per-group [`crate::coordinator::GroupRecorder`] inside the engine
+/// tick (merged deterministically at gather), or a
+/// [`crate::coordinator::ProfSimSink`] when driven directly by benches
+/// and tests.
 pub struct StepCtx<'a> {
     pub exec: &'a dyn Backend,
-    pub prof: &'a mut Profiler,
-    pub sim: &'a mut SimilarityTracker,
-    pub states: &'a mut StateManager,
+    pub rec: &'a mut dyn StepSink,
+    pub states: StateShard<'a>,
     pub batch: usize,
     pub vocab: usize,
     pub rule: AcceptRule,
     pub rngs: &'a mut [Rng],
     pub scratch: &'a mut StepScratch,
+}
+
+/// Exclusive access to the state buffer a backend call should receive:
+/// the model's real packed state behind its mutex (stateful backends —
+/// restricted to `workers = 1`, so the lock is uncontended), or the
+/// scratch-owned dummy when the backend ignores state entirely
+/// (`Backend::state_is_inert`) — which is what lets concurrent groups
+/// verify against the *same* model without serializing on its lock.
+enum KvHandle<'a> {
+    Locked(std::sync::MutexGuard<'a, StateBuf>),
+    Inert(&'a mut StateBuf),
+}
+
+impl std::ops::Deref for KvHandle<'_> {
+    type Target = StateBuf;
+
+    fn deref(&self) -> &StateBuf {
+        match self {
+            KvHandle::Locked(g) => g,
+            KvHandle::Inert(b) => b,
+        }
+    }
+}
+
+impl std::ops::DerefMut for KvHandle<'_> {
+    fn deref_mut(&mut self) -> &mut StateBuf {
+        match self {
+            KvHandle::Locked(g) => g,
+            KvHandle::Inert(b) => b,
+        }
+    }
+}
+
+fn kv_handle<'a>(exec: &dyn Backend, st: &'a ModelState,
+                 dummy: &'a mut StateBuf) -> KvHandle<'a> {
+    if exec.state_is_inert() {
+        KvHandle::Inert(dummy)
+    } else {
+        KvHandle::Locked(st.kv())
+    }
 }
 
 /// Result of one step, owned by the scratch arena and reused across
@@ -149,6 +196,9 @@ pub struct StepScratch {
     resid: Vec<f32>,
     /// per-level DTV observations folded into the similarity tracker
     agg_dtvs: Vec<f64>,
+    /// zero-capacity stand-in state handed to backends that ignore their
+    /// `state` argument (`Backend::state_is_inert`); see `KvHandle`
+    dummy_kv: StateBuf,
     /// the step's result, reused across steps
     pub outcome: StepOutcome,
 }
@@ -197,8 +247,13 @@ fn base_tokens_into(slots: &SlotSeqs, pad: i32, out: &mut Vec<i32>)
     Ok(())
 }
 
-/// Per-slot valid lengths for a model into a reused buffer.
-fn fill_lens(states: &StateManager, model: &str, batch: usize,
+/// Per-slot valid lengths for a model into a reused buffer. Lengths of
+/// non-member lanes may be concurrently advanced by their own group's
+/// step; each read is atomic, the value only feeds the backend's
+/// capacity check for those lanes, and the completion guard keeps every
+/// lane's frontier far enough from capacity that any snapshot passes
+/// (DESIGN.md §11).
+fn fill_lens(states: StateShard, model: &str, batch: usize,
              lens: &mut Vec<i32>) -> Result<()> {
     let st = states.get(model)?;
     lens.clear();
@@ -254,12 +309,16 @@ pub fn catch_up(ctx: &mut StepCtx, model: &str, window: usize,
                 }
             }
         }
-        let st = ctx.states.get_mut(model)?;
+        let st = ctx.states.get(model)?;
         let s = &mut *ctx.scratch;
-        ctx.exec.verify(ctx.prof, model, batch, window, &s.block,
-                        &mut st.kv, &s.lens, &mut s.catch_logits)?;
+        {
+            let mut kv = kv_handle(ctx.exec, st, &mut s.dummy_kv);
+            ctx.exec.verify(&mut *ctx.rec, model, batch, window, &s.block,
+                            &mut kv, &s.lens, &mut s.catch_logits)?;
+        }
         for (b, sq) in slots.iter().enumerate() {
             if sq.is_some() && s.advance[b] > 0 {
+                ctx.states.debug_check(b);
                 st.mask.append_speculative(b, w1);
                 st.mask.promote(b, s.advance[b]);
             }
@@ -345,12 +404,17 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
     let drafter: &str = &chain.models[0];
     fill_lens(ctx.states, drafter, batch, &mut ctx.scratch.lens)?;
     {
-        let st = ctx.states.get_mut(drafter)?;
+        let st = ctx.states.get(drafter)?;
         let s = &mut *ctx.scratch;
-        ctx.exec.draft(ctx.prof, drafter, batch, w, &s.base, &mut st.kv,
-                       &s.lens, &mut s.d_toks, &mut s.d_logits)?;
+        {
+            let mut kv = kv_handle(ctx.exec, st, &mut s.dummy_kv);
+            ctx.exec.draft(&mut *ctx.rec, drafter, batch, w, &s.base,
+                           &mut kv, &s.lens, &mut s.d_toks,
+                           &mut s.d_logits)?;
+        }
         for (b, sq) in slots.iter().enumerate() {
             if sq.is_some() {
+                ctx.states.debug_check(b);
                 // base + w-1 drafted K/V rows were written
                 st.mask.append_speculative(b, w);
             }
@@ -399,12 +463,16 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
         // rotate: last level's verify output becomes this level's q-rows
         std::mem::swap(&mut ctx.scratch.p_prev, &mut ctx.scratch.p_cur);
         {
-            let st = ctx.states.get_mut(verifier)?;
+            let st = ctx.states.get(verifier)?;
             let s = &mut *ctx.scratch;
-            ctx.exec.verify(ctx.prof, verifier, batch, w, &s.block,
-                            &mut st.kv, &s.lens, &mut s.p_cur)?;
+            {
+                let mut kv = kv_handle(ctx.exec, st, &mut s.dummy_kv);
+                ctx.exec.verify(&mut *ctx.rec, verifier, batch, w, &s.block,
+                                &mut kv, &s.lens, &mut s.p_cur)?;
+            }
             for (b, sq) in slots.iter().enumerate() {
                 if sq.is_some() {
+                    ctx.states.debug_check(b);
                     st.mask.append_speculative(b, w1);
                 }
             }
@@ -502,18 +570,19 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
                 // nothing to copy
             }
         }
-        ctx.sim.observe_dtv(proposer, verifier, &s.agg_dtvs);
-        ctx.sim.observe_acceptance(proposer, verifier, agg_accepted,
+        ctx.rec.observe_dtv(proposer, verifier, &s.agg_dtvs);
+        ctx.rec.observe_acceptance(proposer, verifier, agg_accepted,
                                    agg_cands);
     }
 
     // --- Rollback / mask synchronization (RollbackProcessor) ------------
     for (li, model) in chain.models.iter().enumerate() {
-        let st = ctx.states.get_mut(model)?;
+        let st = ctx.states.get(model)?;
         for (b, sq) in slots.iter().enumerate() {
             if sq.is_none() {
                 continue;
             }
+            ctx.states.debug_check(b);
             let committed = &ctx.scratch.outcome.appended[b];
             let m = committed.len();
             let off = (li * batch + b) * w;
@@ -549,15 +618,19 @@ fn run_tmo_step(ctx: &mut StepCtx, target: &str, slots: &SlotSeqs, pad: i32)
     base_tokens_into(slots, pad, &mut ctx.scratch.base)?;
     fill_lens(ctx.states, target, ctx.batch, &mut ctx.scratch.lens)?;
     let v = ctx.vocab;
-    let st = ctx.states.get_mut(target)?;
+    let st = ctx.states.get(target)?;
     let s = &mut *ctx.scratch;
-    ctx.exec.decode(ctx.prof, target, ctx.batch, &s.base, &mut st.kv,
-                    &s.lens, &mut s.p_cur)?;
+    {
+        let mut kv = kv_handle(ctx.exec, st, &mut s.dummy_kv);
+        ctx.exec.decode(&mut *ctx.rec, target, ctx.batch, &s.base, &mut kv,
+                        &s.lens, &mut s.p_cur)?;
+    }
     s.outcome.reset(ctx.batch, 0, 1);
     for (b, sq) in slots.iter().enumerate() {
         if sq.is_none() {
             continue;
         }
+        ctx.states.debug_check(b);
         let row = &s.p_cur[b * v..(b + 1) * v];
         let tok = match ctx.rule {
             AcceptRule::Greedy => argmax(row) as i32,

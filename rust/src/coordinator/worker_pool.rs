@@ -1,0 +1,321 @@
+//! Fixed worker pool for the parallel engine tick (DESIGN.md §11).
+//!
+//! `std::thread::scope` would give the same borrow-safety, but it spawns
+//! and joins OS threads on every call — tens of microseconds plus heap
+//! traffic per tick, which both erodes the speedup parallel groups exist
+//! to deliver and breaks the §8/§10 zero-allocation tick gates. This
+//! pool spawns its threads once at router construction and hands them
+//! *borrowed* task batches per tick through a generation-counted
+//! rendezvous:
+//!
+//! 1. `run(tasks, f)` publishes a type-erased view of `&mut [T]` under
+//!    the pool mutex, bumps the generation and wakes the workers;
+//! 2. every thread (workers AND the caller) pulls task indices from one
+//!    atomic counter and runs `f(&mut tasks[i])` — each index is claimed
+//!    exactly once, so the `&mut` handed to `f` is exclusive;
+//! 3. `run` returns only after every worker has reported completion of
+//!    this generation, so the borrowed batch provably outlives all
+//!    worker access — the same guarantee a scope join provides, without
+//!    the spawns.
+//!
+//! Task panics are caught on the executing thread and re-raised from
+//! `run`, keeping the pool (and its generation protocol) usable
+//! afterwards. The steady-state `run` path performs no heap allocation.
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// Type-erased view of one active batch: a pointer to the caller's
+/// `RunCtx<T, F>` plus the monomorphized trampoline that runs task `i`.
+#[derive(Clone, Copy)]
+struct Batch {
+    ctx: *const (),
+    call: unsafe fn(*const (), usize),
+    len: usize,
+}
+
+// SAFETY: the raw pointer targets a `RunCtx` on the `run()` caller's
+// stack. `run()` blocks until every worker has reported `done` for the
+// generation that published this batch, so no worker dereferences it
+// after `run()` returns; `T: Send` / `F: Sync` bounds on `run()` make
+// the pointed-to data legal to touch from the workers.
+unsafe impl Send for Batch {}
+
+struct State {
+    batch: Option<Batch>,
+    /// Bumped once per published batch; workers run each generation
+    /// exactly once (and report `done` even when they claim no task).
+    generation: u64,
+    /// Workers finished with the current generation.
+    done: usize,
+    /// A task panicked on a worker thread this generation.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new generation (or shutdown).
+    work_cv: Condvar,
+    /// The `run()` caller waits here for `done == workers`.
+    done_cv: Condvar,
+    /// Next unclaimed task index of the current batch.
+    next: AtomicUsize,
+}
+
+fn lock(shared: &Shared) -> MutexGuard<'_, State> {
+    // a panicked task never poisons the protocol: panics are caught in
+    // run_tasks, and if one ever escapes we still want shutdown to work
+    shared.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Claim-and-run loop shared by workers and the `run()` caller. Returns
+/// Err when a task panicked (payload captured for re-raise).
+fn run_tasks(batch: &Batch, next: &AtomicUsize)
+             -> std::thread::Result<()> {
+    catch_unwind(AssertUnwindSafe(|| loop {
+        let i = next.fetch_add(1, Ordering::SeqCst);
+        if i >= batch.len {
+            break;
+        }
+        // SAFETY: index i was claimed by exactly this thread (fetch_add
+        // is unique per claim) and the batch outlives the generation —
+        // see the `Batch` Send justification.
+        unsafe { (batch.call)(batch.ctx, i) };
+    }))
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let batch = {
+            let mut st = lock(shared);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen {
+                    seen = st.generation;
+                    break st.batch;
+                }
+                st = shared.work_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let panicked = match batch {
+            Some(b) => run_tasks(&b, &shared.next).is_err(),
+            None => false,
+        };
+        let mut st = lock(shared);
+        if panicked {
+            st.panicked = true;
+        }
+        st.done += 1;
+        shared.done_cv.notify_all();
+    }
+}
+
+/// The fixed pool. `workers` counts total parallel lanes *including the
+/// calling thread*, matching `EngineConfig::workers`: `new(4)` spawns 3
+/// threads and the engine thread runs tasks alongside them.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        let spawned = workers.saturating_sub(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                batch: None,
+                generation: 0,
+                done: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let handles = (0..spawned)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("specrouter-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Total parallel lanes (spawned workers + the caller).
+    pub fn lanes(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Execute `f` once per task, distributing tasks over every lane.
+    /// Blocks until all tasks completed; re-raises any task panic.
+    /// Steady state allocates nothing.
+    pub fn run<T: Send, F: Fn(&mut T) + Sync>(&self, tasks: &mut [T],
+                                              f: &F) {
+        if tasks.is_empty() {
+            return;
+        }
+        struct RunCtx<'f, T, F> {
+            tasks: *mut T,
+            len: usize,
+            f: &'f F,
+        }
+        // SAFETY contract: ctx points at a live RunCtx<T, F>, i < len,
+        // and each index is claimed exactly once — so the &mut handed to
+        // f aliases nothing (disjoint elements of one slice).
+        unsafe fn call_one<T, F: Fn(&mut T)>(ctx: *const (), i: usize) {
+            let ctx = &*(ctx as *const RunCtx<'_, T, F>);
+            debug_assert!(i < ctx.len);
+            (ctx.f)(&mut *ctx.tasks.add(i));
+        }
+        let ctx = RunCtx::<'_, T, F> {
+            tasks: tasks.as_mut_ptr(),
+            len: tasks.len(),
+            f,
+        };
+        let batch = Batch {
+            ctx: &ctx as *const RunCtx<'_, T, F> as *const (),
+            call: call_one::<T, F>,
+            len: tasks.len(),
+        };
+        let spawned = self.handles.len();
+        {
+            let mut st = lock(&self.shared);
+            debug_assert!(st.batch.is_none(), "run() is not reentrant");
+            // next is reset under the lock, before the generation bump
+            // the workers key on — the mutex orders both
+            self.shared.next.store(0, Ordering::SeqCst);
+            st.batch = Some(batch);
+            st.done = 0;
+            st.panicked = false;
+            st.generation = st.generation.wrapping_add(1);
+            self.shared.work_cv.notify_all();
+        }
+        // the caller is a lane too
+        let caller_result = run_tasks(&batch, &self.shared.next);
+        let worker_panicked = {
+            let mut st = lock(&self.shared);
+            while st.done < spawned {
+                st = self.shared.done_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            st.batch = None;
+            st.panicked
+        };
+        if let Err(p) = caller_result {
+            resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("a pool worker panicked while executing a task batch");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared);
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.lanes(), 4);
+        let mut tasks: Vec<(usize, u64)> = (0..97).map(|i| (i, 0)).collect();
+        pool.run(&mut tasks, &|t: &mut (usize, u64)| {
+            t.1 += 1 + t.0 as u64;
+        });
+        for (i, (idx, v)) in tasks.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(*v, 1 + i as u64, "task {i} ran {} times?", v);
+        }
+    }
+
+    #[test]
+    fn reuse_across_many_generations() {
+        let pool = WorkerPool::new(3);
+        let hits = AtomicU64::new(0);
+        for round in 0..500usize {
+            let n = 1 + round % 7;
+            let mut tasks = vec![0u64; n];
+            pool.run(&mut tasks, &|t: &mut u64| {
+                *t += 1;
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(tasks.iter().all(|&t| t == 1), "round {round}");
+        }
+        let expect: u64 = (0..500usize).map(|r| (1 + r % 7) as u64).sum();
+        assert_eq!(hits.load(Ordering::SeqCst), expect);
+    }
+
+    #[test]
+    fn tasks_borrow_caller_state_mutably() {
+        // the scoped-borrow property: tasks carry &mut into stack data
+        let pool = WorkerPool::new(2);
+        let mut acc = vec![0u64; 8];
+        {
+            let mut tasks: Vec<&mut u64> = acc.iter_mut().collect();
+            pool.run(&mut tasks, &|t: &mut &mut u64| {
+                **t = 7;
+            });
+        }
+        assert!(acc.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.lanes(), 1);
+        let mut tasks = vec![1u32, 2, 3];
+        pool.run(&mut tasks, &|t: &mut u32| *t *= 10);
+        assert_eq!(tasks, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = WorkerPool::new(4);
+        let mut tasks: Vec<u32> = Vec::new();
+        pool.run(&mut tasks, &|_t: &mut u32| unreachable!());
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let mut tasks: Vec<usize> = (0..16).collect();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut tasks, &|t: &mut usize| {
+                if *t == 11 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate out of run()");
+        // the pool keeps working after a panicked generation
+        let mut again = vec![0u8; 32];
+        pool.run(&mut again, &|t: &mut u8| *t = 1);
+        assert!(again.iter().all(|&x| x == 1));
+    }
+}

@@ -67,6 +67,12 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     if let Some(q) = flags.get("max-queue") {
         cfg.max_queue = q.parse().context("--max-queue")?;
     }
+    // parallel tick lanes (DESIGN.md §11): flag wins over the
+    // SPECROUTER_WORKERS env override; validation rejects 0
+    cfg.apply_env_workers();
+    if let Some(w) = flags.get("workers") {
+        cfg.workers = w.parse().context("--workers")?;
+    }
     if flags.contains_key("fifo-admission") {
         cfg.fifo_admission = true;
     }

@@ -36,6 +36,14 @@ impl FnKey {
 pub struct ModelPool {
     pub runtime: Arc<Runtime>,
     pub manifest: Arc<Manifest>,
+    /// Pool-wide serialization point for the `Rc`-based PJRT object graph
+    /// (DESIGN.md §11): every `SerialXla` shim built on this pool — there
+    /// may be several, `ChainRouter::with_pool` shares pools across
+    /// engines — acquires THIS lock around each data-plane call, so no
+    /// two threads ever touch the graph concurrently no matter how many
+    /// shims exist. `Arc` so the lock identity survives pool cloning
+    /// into shims.
+    pub call_lock: Arc<Mutex<()>>,
     weights: Mutex<HashMap<String, Arc<xla::Literal>>>,
     weight_bufs: Mutex<HashMap<String, Arc<xla::PjRtBuffer>>>,
     fns: Mutex<HashMap<FnKey, Arc<CompiledFn>>>,
@@ -48,6 +56,7 @@ impl ModelPool {
         ModelPool {
             runtime,
             manifest,
+            call_lock: Arc::new(Mutex::new(())),
             weights: Mutex::new(HashMap::new()),
             weight_bufs: Mutex::new(HashMap::new()),
             fns: Mutex::new(HashMap::new()),

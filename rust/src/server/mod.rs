@@ -122,9 +122,10 @@ pub fn spawn_engine(cfg: EngineConfig) -> Result<EngineHandle> {
 
 /// Spawn the engine loop over a router built *inside* the engine thread
 /// by `factory`. The factory crosses the thread boundary, the router
-/// never does — `Backend` is deliberately not `Send` (see
-/// `coordinator::backend`), so this is how sim-backed servers (tests,
-/// artifact-free demos) come up.
+/// stays owned by the engine thread for its whole life (its worker pool,
+/// if `workers > 1`, is an internal detail of `tick()` — see DESIGN.md
+/// §11). This is how sim-backed servers (tests, artifact-free demos)
+/// come up.
 pub fn spawn_engine_with<F>(factory: F) -> Result<EngineHandle>
 where
     F: FnOnce() -> Result<ChainRouter> + Send + 'static,

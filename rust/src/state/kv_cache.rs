@@ -97,6 +97,39 @@ pub fn truncate_tail_flat(buf: &mut [f32], d: KvDims, frontier: usize)
     zeroed
 }
 
+/// Per-slot bounded physical truncation: zero `[frontier, high_water[b])`
+/// along the sequence axis for each slot `b`. The high-water marks come
+/// from `CacheMask::written_len` — positions a slot never wrote are
+/// already zero (or will be overwritten before becoming visible), so the
+/// unbounded `truncate_tail_flat` re-zeroed `[frontier, seq)` for every
+/// slot on every pass and over-counted the reclaimed volume by the same
+/// margin. Returns the number of elements actually zeroed.
+pub fn truncate_tail_bounded(buf: &mut [f32], d: KvDims, frontier: usize,
+                             high_water: &[usize]) -> usize {
+    assert_eq!(high_water.len(), d.batch, "one high-water mark per slot");
+    let mut zeroed = 0;
+    let row = d.row();
+    for l in 0..d.layers {
+        for c in 0..2 {
+            for b in 0..d.batch {
+                let hw = high_water[b].min(d.seq);
+                if hw <= frontier {
+                    continue;
+                }
+                let plane = d.plane_offset(l, c, b);
+                for h in 0..d.heads {
+                    let head = plane + h * d.seq * row;
+                    let start = head + frontier * row;
+                    let end = head + hw * row;
+                    buf[start..end].fill(0.0);
+                    zeroed += end - start;
+                }
+            }
+        }
+    }
+    zeroed
+}
+
 /// Extract one slot into a fresh B=1 flat buffer (eviction staging, tests).
 pub fn extract_slot_flat(src: &[f32], sd: KvDims, slot: usize) -> Vec<f32> {
     let od = KvDims { batch: 1, ..sd };
@@ -124,6 +157,39 @@ pub struct StateBuf {
     /// total packed length (kv + tail)
     pub state_len: usize,
     buf: Option<xla::PjRtBuffer>,
+}
+
+// SAFETY (DESIGN.md §11): the wrapped `xla::PjRtBuffer` is `Rc`-based and
+// not `Send` by type, but every access to it is totally ordered: the sim
+// backend never materializes it (`buf` stays `None` on any path worker
+// threads can take — backends whose state is inert get a per-group dummy
+// instead, see spec_step::KvHandle), and the XLA path only runs with
+// `workers = 1` (enforced at router construction via
+// `Backend::parallel_groups_safe`), behind `SerialXla`'s mutex. The bound
+// exists so `Mutex<StateBuf>` is `Sync` and the scatter/gather tick's
+// scoped borrows typecheck; no materialized device buffer ever crosses a
+// thread with another clone of its `Rc` alive elsewhere.
+unsafe impl Send for StateBuf {}
+
+impl Default for StateBuf {
+    /// A zero-capacity placeholder (the spec-step scratch's dummy state
+    /// for backends that ignore their `state` argument). Never holds a
+    /// device buffer.
+    fn default() -> Self {
+        let dims = KvDims { layers: 0, batch: 0, heads: 0, seq: 0,
+                            head_dim: 0 };
+        StateBuf { dims, state_len: 0, buf: None }
+    }
+}
+
+impl std::fmt::Debug for StateBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StateBuf")
+            .field("dims", &self.dims)
+            .field("state_len", &self.state_len)
+            .field("materialized", &self.buf.is_some())
+            .finish()
+    }
 }
 
 impl StateBuf {
@@ -258,6 +324,55 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn truncate_bounded_touches_only_the_dirty_span() {
+        let d = dims(2);
+        // slot 0 dirty to 7, slot 1 never written past the frontier
+        let mut buf = pattern(d, 1.0);
+        let zeroed = truncate_tail_bounded(&mut buf, d, 5, &[7, 5]);
+        // slot 0: rows [5, 7) over every (l, c, h); slot 1: nothing
+        assert_eq!(zeroed, 2 * 2 * 3 * 2 * 4);
+        for l in 0..d.layers {
+            for c in 0..2 {
+                for (b, hw) in [(0usize, 7usize), (1, 5)] {
+                    for h in 0..d.heads {
+                        let head =
+                            d.plane_offset(l, c, b) + h * d.seq * d.row();
+                        for s in 0..d.seq {
+                            let row = &buf[head + s * d.row()
+                                           ..head + (s + 1) * d.row()];
+                            let zero = s >= 5 && s < hw;
+                            assert_eq!(row.iter().all(|&x| x == 0.0), zero,
+                                       "slot {b} pos {s}");
+                        }
+                    }
+                }
+            }
+        }
+        // high-water at/below the frontier (or past capacity) is safe
+        assert_eq!(truncate_tail_bounded(&mut buf, d, 5, &[5, 3]), 0);
+        let mut buf2 = pattern(d, 1.0);
+        let all = truncate_tail_bounded(&mut buf2, d, 5, &[999, 999]);
+        assert_eq!(all, truncate_tail_flat(&mut pattern(d, 1.0), d, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "one high-water mark per slot")]
+    fn truncate_bounded_rejects_wrong_arity() {
+        let d = dims(2);
+        let mut buf = pattern(d, 1.0);
+        truncate_tail_bounded(&mut buf, d, 5, &[7]);
+    }
+
+    #[test]
+    fn default_statebuf_is_an_inert_placeholder() {
+        let st = StateBuf::default();
+        assert_eq!(st.state_len, 0);
+        assert_eq!(st.kv_len(), 0);
+        assert!(!st.is_materialized());
+        assert!(format!("{st:?}").contains("materialized"));
     }
 
     #[test]

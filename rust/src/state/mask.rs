@@ -11,27 +11,58 @@
 //! Invariant maintained throughout: validity is always a *prefix* — a
 //! rollback removes a suffix, never punches holes. `debug_validate`
 //! asserts it.
+//!
+//! ## Threading (DESIGN.md §11)
+//!
+//! Per-slot state lives in atomics so a `&CacheMask` can be shared across
+//! the parallel tick's worker threads: each chain group mutates only its
+//! own (disjoint) slots, so every slot has exactly one writer per tick and
+//! `Relaxed` ordering suffices — cross-thread visibility is established by
+//! the scatter/gather join, not by the individual operations. Methods
+//! therefore take `&self`; the `StateShard` borrow guard (state_manager.rs)
+//! is what enforces the one-writer-per-slot discipline at the API level.
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
 
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct CacheMask {
-    /// valid_len[b] = number of leading valid positions for slot b.
-    valid: Vec<usize>,
-    /// written[b] = high-water mark of physically written positions.
-    written: Vec<usize>,
+    /// valid[b] = number of leading valid positions for slot b.
+    valid: Vec<AtomicUsize>,
+    /// written[b] = high-water mark of physically written positions —
+    /// also the per-slot *dirty* high-water mark physical truncation is
+    /// bounded by (only `[frontier, written)` can hold stale data).
+    written: Vec<AtomicUsize>,
     capacity: usize,
     /// cumulative counters for diagnostics / the rollback bench
-    pub logical_rollbacks: u64,
-    pub entries_invalidated: u64,
+    pub logical_rollbacks: AtomicU64,
+    pub entries_invalidated: AtomicU64,
+}
+
+impl Clone for CacheMask {
+    fn clone(&self) -> Self {
+        CacheMask {
+            valid: self.valid.iter()
+                .map(|v| AtomicUsize::new(v.load(Relaxed)))
+                .collect(),
+            written: self.written.iter()
+                .map(|w| AtomicUsize::new(w.load(Relaxed)))
+                .collect(),
+            capacity: self.capacity,
+            logical_rollbacks:
+                AtomicU64::new(self.logical_rollbacks.load(Relaxed)),
+            entries_invalidated:
+                AtomicU64::new(self.entries_invalidated.load(Relaxed)),
+        }
+    }
 }
 
 impl CacheMask {
     pub fn new(slots: usize, capacity: usize) -> Self {
         CacheMask {
-            valid: vec![0; slots],
-            written: vec![0; slots],
+            valid: (0..slots).map(|_| AtomicUsize::new(0)).collect(),
+            written: (0..slots).map(|_| AtomicUsize::new(0)).collect(),
             capacity,
-            logical_rollbacks: 0,
-            entries_invalidated: 0,
+            logical_rollbacks: AtomicU64::new(0),
+            entries_invalidated: AtomicU64::new(0),
         }
     }
 
@@ -44,47 +75,48 @@ impl CacheMask {
     }
 
     pub fn valid_len(&self, slot: usize) -> usize {
-        self.valid[slot]
+        self.valid[slot].load(Relaxed)
     }
 
     pub fn written_len(&self, slot: usize) -> usize {
-        self.written[slot]
+        self.written[slot].load(Relaxed)
     }
 
     /// Record that `n` new positions were written AND are valid (a
     /// committed append).
-    pub fn append_valid(&mut self, slot: usize, n: usize) {
-        assert!(self.valid[slot] + n <= self.capacity,
-                "slot {slot} overflow: {} + {n} > {}", self.valid[slot],
-                self.capacity);
-        self.valid[slot] += n;
-        self.written[slot] = self.written[slot].max(self.valid[slot]);
+    pub fn append_valid(&self, slot: usize, n: usize) {
+        let v = self.valid[slot].load(Relaxed);
+        assert!(v + n <= self.capacity,
+                "slot {slot} overflow: {v} + {n} > {}", self.capacity);
+        self.valid[slot].store(v + n, Relaxed);
+        self.written[slot].fetch_max(v + n, Relaxed);
     }
 
     /// Record that `n` positions past the valid frontier were written
     /// speculatively (candidate K/V rows, not yet valid).
-    pub fn append_speculative(&mut self, slot: usize, n: usize) {
-        let end = (self.valid[slot] + n).min(self.capacity);
-        self.written[slot] = self.written[slot].max(end);
+    pub fn append_speculative(&self, slot: usize, n: usize) {
+        let end = (self.valid[slot].load(Relaxed) + n).min(self.capacity);
+        self.written[slot].fetch_max(end, Relaxed);
     }
 
     /// Promote `n` speculative positions to valid (accepted candidates).
-    pub fn promote(&mut self, slot: usize, n: usize) {
-        assert!(self.valid[slot] + n <= self.written[slot],
+    pub fn promote(&self, slot: usize, n: usize) {
+        let v = self.valid[slot].load(Relaxed);
+        assert!(v + n <= self.written[slot].load(Relaxed),
                 "promoting unwritten entries");
-        self.valid[slot] += n;
+        self.valid[slot].store(v + n, Relaxed);
     }
 
     /// Logical rollback (paper Eq. 8 path): truncate slot validity to
     /// `new_len`. O(1): no data movement. Returns entries invalidated.
-    pub fn rollback_to(&mut self, slot: usize, new_len: usize) -> usize {
-        assert!(new_len <= self.valid[slot],
-                "rollback_to({new_len}) beyond valid {}", self.valid[slot]);
-        let dropped = self.valid[slot] - new_len;
-        self.valid[slot] = new_len;
+    pub fn rollback_to(&self, slot: usize, new_len: usize) -> usize {
+        let v = self.valid[slot].load(Relaxed);
+        assert!(new_len <= v, "rollback_to({new_len}) beyond valid {v}");
+        let dropped = v - new_len;
+        self.valid[slot].store(new_len, Relaxed);
         if dropped > 0 {
-            self.logical_rollbacks += 1;
-            self.entries_invalidated += dropped as u64;
+            self.logical_rollbacks.fetch_add(1, Relaxed);
+            self.entries_invalidated.fetch_add(dropped as u64, Relaxed);
         }
         dropped
     }
@@ -92,46 +124,53 @@ impl CacheMask {
     /// Stale suffix length per slot: written but no longer valid. These
     /// are the Mask=0 entries of paper Fig. 3.
     pub fn stale(&self, slot: usize) -> usize {
-        self.written[slot] - self.valid[slot]
+        self.written[slot].load(Relaxed) - self.valid[slot].load(Relaxed)
     }
 
     /// The minimum rollback across the batch: positions >= this high-water
     /// mark are stale in EVERY slot, so physical truncation can reclaim
     /// them batch-wide (paper Eq. 9's r_min condition).
     pub fn common_physical_frontier(&self) -> usize {
-        self.written.iter().zip(&self.valid)
-            .map(|(_, &v)| v)
-            .max()
-            .unwrap_or(0)
+        self.valid.iter().map(|v| v.load(Relaxed)).max().unwrap_or(0)
+    }
+
+    /// Positions actually dirty past `frontier` for `slot`: the span
+    /// `[frontier, written)` physical truncation must touch — nothing
+    /// beyond the per-slot high-water mark was ever written, so re-zeroing
+    /// `[frontier, seq)` (and accounting it as reclaimed) over-counts.
+    pub fn dirty_past(&self, slot: usize, frontier: usize) -> usize {
+        self.written[slot].load(Relaxed).saturating_sub(frontier)
     }
 
     /// Record a physical truncation at `frontier`: written marks clamp.
-    pub fn physical_truncate(&mut self, frontier: usize) {
-        for w in &mut self.written {
-            *w = (*w).min(frontier);
+    pub fn physical_truncate(&self, frontier: usize) {
+        for w in &self.written {
+            w.fetch_min(frontier, Relaxed);
         }
         debug_assert!(self.valid.iter().zip(&self.written)
-                      .all(|(v, w)| v <= w || v == w),
+                      .all(|(v, w)| v.load(Relaxed) <= w.load(Relaxed)
+                           || v.load(Relaxed) == w.load(Relaxed)),
                       "truncated below valid data");
     }
 
     /// Reset one slot entirely (request completed, slot reused).
-    pub fn clear_slot(&mut self, slot: usize) {
-        self.valid[slot] = 0;
-        self.written[slot] = 0;
+    pub fn clear_slot(&self, slot: usize) {
+        self.valid[slot].store(0, Relaxed);
+        self.written[slot].store(0, Relaxed);
     }
 
     /// Expand the full boolean mask for one slot (the cache_mask row of
     /// paper Fig. 3) — used by tests and diagnostics, not the hot path.
     pub fn mask_row(&self, slot: usize) -> Vec<bool> {
-        (0..self.capacity).map(|i| i < self.valid[slot]).collect()
+        let v = self.valid[slot].load(Relaxed);
+        (0..self.capacity).map(|i| i < v).collect()
     }
 
     /// Check the prefix invariant.
     pub fn debug_validate(&self) {
         for s in 0..self.slots() {
-            assert!(self.valid[s] <= self.written[s]);
-            assert!(self.written[s] <= self.capacity);
+            assert!(self.valid_len(s) <= self.written_len(s));
+            assert!(self.written_len(s) <= self.capacity);
             let row = self.mask_row(s);
             // prefix property: no valid entry after the first invalid one
             let first_invalid = row.iter().position(|&b| !b)
@@ -148,7 +187,7 @@ mod tests {
 
     #[test]
     fn append_and_rollback() {
-        let mut m = CacheMask::new(2, 16);
+        let m = CacheMask::new(2, 16);
         m.append_valid(0, 5);
         m.append_speculative(0, 4);
         assert_eq!(m.valid_len(0), 5);
@@ -164,7 +203,7 @@ mod tests {
 
     #[test]
     fn mask_row_matches_fig3_semantics() {
-        let mut m = CacheMask::new(1, 8);
+        let m = CacheMask::new(1, 8);
         m.append_valid(0, 3);
         m.append_speculative(0, 2);
         let row = m.mask_row(0);
@@ -174,7 +213,7 @@ mod tests {
 
     #[test]
     fn clear_slot_resets() {
-        let mut m = CacheMask::new(2, 8);
+        let m = CacheMask::new(2, 8);
         m.append_valid(1, 7);
         m.clear_slot(1);
         assert_eq!(m.valid_len(1), 0);
@@ -184,19 +223,45 @@ mod tests {
     #[test]
     #[should_panic(expected = "overflow")]
     fn overflow_is_caught() {
-        let mut m = CacheMask::new(1, 4);
+        let m = CacheMask::new(1, 4);
         m.append_valid(0, 5);
     }
 
     #[test]
     fn rollback_counters_accumulate() {
-        let mut m = CacheMask::new(1, 32);
+        let m = CacheMask::new(1, 32);
         m.append_valid(0, 10);
         m.rollback_to(0, 8);
         m.rollback_to(0, 8); // no-op: not counted
         m.rollback_to(0, 5);
-        assert_eq!(m.logical_rollbacks, 2);
-        assert_eq!(m.entries_invalidated, 5);
+        assert_eq!(m.logical_rollbacks.load(Relaxed), 2);
+        assert_eq!(m.entries_invalidated.load(Relaxed), 5);
+    }
+
+    #[test]
+    fn dirty_past_tracks_the_per_slot_high_water() {
+        let m = CacheMask::new(2, 32);
+        m.append_valid(0, 4);
+        m.append_speculative(0, 6); // written to 10
+        m.append_valid(1, 7);
+        assert_eq!(m.dirty_past(0, 7), 3);
+        assert_eq!(m.dirty_past(1, 7), 0, "never written past 7");
+        assert_eq!(m.dirty_past(0, 12), 0, "frontier beyond high-water");
+        m.physical_truncate(7);
+        assert_eq!(m.dirty_past(0, 7), 0, "clamped after truncation");
+    }
+
+    #[test]
+    fn clone_snapshots_atomics() {
+        let m = CacheMask::new(2, 16);
+        m.append_valid(0, 5);
+        m.rollback_to(0, 3);
+        let c = m.clone();
+        assert_eq!(c.valid_len(0), 3);
+        assert_eq!(c.logical_rollbacks.load(Relaxed), 1);
+        // independent after the snapshot
+        m.append_valid(0, 2);
+        assert_eq!(c.valid_len(0), 3);
     }
 
     /// Property: under arbitrary interleavings of append/speculate/promote/
@@ -206,7 +271,7 @@ mod tests {
         let mut rng = Rng::new(2024);
         for _case in 0..200 {
             let cap = rng.range(4, 64);
-            let mut m = CacheMask::new(rng.range(1, 4), cap);
+            let m = CacheMask::new(rng.range(1, 4), cap);
             for _ in 0..50 {
                 let s = rng.below(m.slots());
                 match rng.below(4) {

@@ -6,4 +6,4 @@ pub mod state_manager;
 
 pub use kv_cache::{KvDims, StateBuf};
 pub use mask::CacheMask;
-pub use state_manager::{ModelState, StateManager};
+pub use state_manager::{ModelState, StateManager, StateShard};

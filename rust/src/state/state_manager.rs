@@ -13,7 +13,21 @@
 //!      verification (`rollback_to`);
 //!   2. physical — batched truncation of storage (`fix_kv_cache`) when the
 //!      whole batch agrees (Eq. 9), performed opportunistically.
+//!
+//! ## Shard borrows (DESIGN.md §11)
+//!
+//! The parallel tick runs one speculative step per chain group
+//! concurrently. Groups partition the *slots*, but they share *models*
+//! (every chain ends at the target), so state cannot be split by handing
+//! out `&mut ModelState` per group. Instead each group receives a
+//! [`StateShard`]: a shared view of every model's state restricted to the
+//! group's member slots. Masks are slot-indexed atomics (one writer per
+//! slot — see mask.rs), the KV buffer sits behind a per-model mutex, and
+//! [`StateManager::try_shards`] is the split-borrow guard: overlapping
+//! slot sets are rejected with a structured error before any step runs,
+//! instead of silently aliasing a slot between two groups.
 use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, Context, Result};
 
@@ -22,7 +36,10 @@ use crate::state::mask::CacheMask;
 
 pub struct ModelState {
     pub model: String,
-    pub kv: StateBuf,
+    /// Geometry of the KV region (duplicated out of the buffer so
+    /// metadata reads never take the KV lock).
+    pub dims: KvDims,
+    kv: Mutex<StateBuf>,
     pub mask: CacheMask,
 }
 
@@ -30,14 +47,60 @@ impl ModelState {
     pub fn new(model: &str, dims: KvDims, state_len: usize) -> Self {
         ModelState {
             model: model.to_string(),
-            kv: StateBuf::new(dims, state_len),
+            dims,
+            kv: Mutex::new(StateBuf::new(dims, state_len)),
             mask: CacheMask::new(dims.batch, dims.seq),
         }
+    }
+
+    /// Exclusive access to the packed KV/state buffer. Uncontended on the
+    /// single-threaded paths (admission, workers = 1); under the parallel
+    /// tick only stateful backends ever lock it — and those are restricted
+    /// to workers = 1 (`Backend::parallel_groups_safe`), so the guard is
+    /// held across a backend call only when no other worker exists.
+    pub fn kv(&self) -> MutexGuard<'_, StateBuf> {
+        self.kv.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Tokens of the committed sequence this model has forwarded (slot).
     pub fn forwarded(&self, slot: usize) -> usize {
         self.mask.valid_len(slot)
+    }
+}
+
+/// A borrow of every model's state restricted to a disjoint slot set: the
+/// per-group view the parallel tick hands each worker. `slots = None` is
+/// the unrestricted whole-batch view (single-threaded callers). The view
+/// is `Copy` — it is two pointers — and mutation goes through the masks'
+/// atomic per-slot cells, so restriction is a *discipline*: enforced
+/// up-front by [`StateManager::try_shards`]/[`StateManager::check_disjoint`]
+/// (structured error on overlap) and per-operation in debug builds via
+/// [`StateShard::debug_check`].
+#[derive(Clone, Copy)]
+pub struct StateShard<'a> {
+    mgr: &'a StateManager,
+    slots: Option<&'a [usize]>,
+}
+
+impl<'a> StateShard<'a> {
+    pub fn get(self, model: &str) -> Result<&'a ModelState> {
+        self.mgr.get(model)
+    }
+
+    /// May this shard mutate `slot`'s per-slot state?
+    pub fn owns(self, slot: usize) -> bool {
+        match self.slots {
+            None => true,
+            Some(s) => s.contains(&slot),
+        }
+    }
+
+    /// Debug-build assertion that a mutation stays inside the shard's
+    /// slot set (release builds: no cost).
+    #[inline]
+    pub fn debug_check(self, slot: usize) {
+        debug_assert!(self.owns(slot),
+                      "slot {slot} mutated outside its shard's slot set");
     }
 }
 
@@ -85,17 +148,68 @@ impl StateManager {
         self.states.keys().map(|s| s.as_str())
     }
 
+    /// The unrestricted whole-batch view (single-threaded callers:
+    /// benches, tests, the sequential tick at workers = 1 still pass a
+    /// per-group restricted view for uniformity — this one is for code
+    /// that owns the whole batch).
+    pub fn shard(&self) -> StateShard<'_> {
+        StateShard { mgr: self, slots: None }
+    }
+
+    /// A view restricted to `slots`. The *caller* is responsible for
+    /// disjointness across concurrently used shards — use
+    /// [`StateManager::try_shards`] or [`StateManager::check_disjoint`]
+    /// to get the structured guarantee.
+    pub fn shard_for<'a>(&'a self, slots: &'a [usize]) -> StateShard<'a> {
+        StateShard { mgr: self, slots: Some(slots) }
+    }
+
+    /// Allocation-free split-borrow guard: verify the slot sets are
+    /// pairwise disjoint and in range, reusing `marks` (one entry per
+    /// slot, caller-owned so steady-state ticks stay off the allocator).
+    /// Returns a structured error naming the doubly-claimed slot.
+    pub fn check_disjoint<'s>(batch: usize,
+                              sets: impl Iterator<Item = &'s [usize]>,
+                              marks: &mut Vec<usize>) -> Result<()> {
+        marks.clear();
+        marks.resize(batch, usize::MAX);
+        for (i, set) in sets.enumerate() {
+            for &b in set {
+                if b >= batch {
+                    bail!("shard slot {b} out of range (batch {batch})");
+                }
+                if marks[b] != usize::MAX {
+                    bail!("shard-borrow overlap: slot {b} claimed by both \
+                           slot set {} and slot set {i} — groups must \
+                           partition the batch", marks[b]);
+                }
+                marks[b] = i;
+            }
+        }
+        Ok(())
+    }
+
+    /// Split-borrow API: one [`StateShard`] per slot set, or a structured
+    /// error if any two sets overlap (aliasing a slot between concurrent
+    /// groups) or index out of range.
+    pub fn try_shards<'a>(&'a self, sets: &[&'a [usize]], batch: usize)
+                          -> Result<Vec<StateShard<'a>>> {
+        let mut marks = Vec::new();
+        Self::check_disjoint(batch, sets.iter().copied(), &mut marks)?;
+        Ok(sets.iter().map(|s| self.shard_for(s)).collect())
+    }
+
     /// Logical rollback for one model/slot (paper Eq. 8 path).
-    pub fn rollback(&mut self, model: &str, slot: usize, new_len: usize)
+    pub fn rollback(&self, model: &str, slot: usize, new_len: usize)
                     -> Result<usize> {
-        Ok(self.get_mut(model)?.mask.rollback_to(slot, new_len))
+        Ok(self.get(model)?.mask.rollback_to(slot, new_len))
     }
 
     /// Clamp every model's validity for a slot to `max_valid` (used after
     /// a truncating commit: EOS / max_new cut the committed sequence below
     /// what verification accepted).
-    pub fn clamp_slot(&mut self, slot: usize, max_valid: usize) {
-        for st in self.states.values_mut() {
+    pub fn clamp_slot(&self, slot: usize, max_valid: usize) {
+        for st in self.states.values() {
             if st.mask.valid_len(slot) > max_valid {
                 st.mask.rollback_to(slot, max_valid);
             }
@@ -103,8 +217,8 @@ impl StateManager {
     }
 
     /// Request completed: wipe the slot across every model state.
-    pub fn clear_slot(&mut self, slot: usize) {
-        for st in self.states.values_mut() {
+    pub fn clear_slot(&self, slot: usize) {
+        for st in self.states.values() {
             st.mask.clear_slot(slot);
         }
     }
@@ -119,20 +233,23 @@ impl StateManager {
     /// common stale tail is bookkeeping — the region is excluded from
     /// attention by the mask and will be overwritten in place — so this
     /// clamps the written high-water marks and accounts the reclaimed
-    /// volume. (Host-staged caches — eviction, benches — use the real
-    /// zeroing path in kv_cache::truncate_tail_flat.)
+    /// volume *per slot*: only `[frontier, written[b])` was ever dirty,
+    /// so that is all that counts (the old accounting charged the whole
+    /// batch for the worst slot's tail, double-counting slots that never
+    /// wrote past the frontier). Host-staged caches (eviction, benches)
+    /// use the matching bounded zeroing in
+    /// `kv_cache::truncate_tail_bounded`.
     pub fn fix_caches(&mut self) -> Result<usize> {
         let mut total = 0usize;
         for st in self.states.values_mut() {
             let frontier = st.mask.common_physical_frontier();
-            let max_written = (0..st.mask.slots())
-                .map(|s| st.mask.written_len(s))
-                .max()
-                .unwrap_or(0);
-            if max_written > frontier {
-                let d = st.kv.dims;
-                total += d.layers * 2 * d.batch * d.heads
-                    * (max_written - frontier) * d.head_dim;
+            let d = st.dims;
+            let per_pos = d.layers * 2 * d.heads * d.head_dim;
+            let dirty: usize = (0..st.mask.slots())
+                .map(|s| st.mask.dirty_past(s, frontier))
+                .sum();
+            if dirty > 0 {
+                total += per_pos * dirty;
                 st.mask.physical_truncate(frontier);
                 self.physical_truncations += 1;
             }
@@ -214,7 +331,7 @@ mod tests {
     }
 
     #[test]
-    fn fix_caches_reclaims_common_stale_tail() {
+    fn fix_caches_reclaims_the_per_slot_dirty_tail_only() {
         let mut sm = StateManager::new();
         {
             let st = sm.ensure("m0", dims(), SLEN);
@@ -223,9 +340,12 @@ mod tests {
             st.mask.append_valid(1, 7);
         }
         let reclaimed = sm.fix_caches().unwrap();
-        assert!(reclaimed > 0);
+        // frontier = max valid = 7; only slot 0 is dirty past it (10-7=3
+        // positions) — slot 1 never wrote past 7 and must not be charged
+        let d = dims();
+        assert_eq!(reclaimed, d.layers * 2 * d.heads * d.head_dim * 3);
         assert_eq!(sm.physical_truncations, 1);
-        // frontier = max valid = 7: slot 0's written clamps to 7
+        // slot 0's written clamps to the frontier
         let st = sm.get("m0").unwrap();
         assert_eq!(st.mask.written_len(0), 7);
         // second call is a no-op
@@ -256,5 +376,51 @@ mod tests {
         sm.ensure("m0", dims(), SLEN);
         sm.drop_model("m0");
         assert!(sm.get("m0").is_err());
+    }
+
+    #[test]
+    fn shards_split_disjoint_sets_and_reject_overlap() {
+        let mut sm = StateManager::new();
+        sm.ensure("m0", dims(), SLEN);
+        let a = [0usize];
+        let b = [1usize];
+        let shards = sm.try_shards(&[&a, &b], 2).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert!(shards[0].owns(0) && !shards[0].owns(1));
+        assert!(shards[1].owns(1) && !shards[1].owns(0));
+        shards[0].get("m0").unwrap();
+        // overlap: slot 0 claimed twice -> structured error, no views
+        let both = [0usize, 1];
+        let err = sm.try_shards(&[&a, &both], 2).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("overlap") && msg.contains("slot 0"),
+                "unexpected error: {msg}");
+        // out-of-range slot is its own structured error
+        let oob = [5usize];
+        let err = sm.try_shards(&[&oob], 2).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // the whole-batch view owns everything
+        assert!(sm.shard().owns(0) && sm.shard().owns(1));
+    }
+
+    #[test]
+    fn check_disjoint_reuses_the_marks_buffer() {
+        let mut marks = Vec::new();
+        let a = [0usize, 2];
+        let b = [1usize, 3];
+        StateManager::check_disjoint(
+            4, [a.as_slice(), b.as_slice()].into_iter(), &mut marks)
+            .unwrap();
+        let cap = marks.capacity();
+        // second pass with the same buffer: no growth needed
+        StateManager::check_disjoint(
+            4, [a.as_slice(), b.as_slice()].into_iter(), &mut marks)
+            .unwrap();
+        assert_eq!(marks.capacity(), cap);
+        let c = [2usize];
+        let err = StateManager::check_disjoint(
+            4, [a.as_slice(), c.as_slice()].into_iter(), &mut marks)
+            .unwrap_err();
+        assert!(err.to_string().contains("slot 2"), "{err}");
     }
 }

@@ -82,6 +82,13 @@ pub fn cfg(batch: usize, mode: Mode) -> EngineConfig {
     c.window = 4;
     c.target = "m2".into();
     c.mode = mode;
+    // CI parity matrix: SPECROUTER_WORKERS re-runs the whole suite under
+    // the parallel tick (DESIGN.md §11). Only the sim backend declares
+    // concurrent group steps safe, so the override applies on the
+    // artifact-free path only — XLA routers keep workers = 1.
+    if !artifacts_available() {
+        c.apply_env_workers();
+    }
     c
 }
 

@@ -57,6 +57,10 @@ fn cfg_for(batch: usize, mode: Mode, rule: AcceptRule,
     c.rule = rule;
     c.group_policy = policy;
     c.explore_eps = 0.0;
+    // the CI seeded-sim job re-runs this whole suite with
+    // SPECROUTER_WORKERS=4: every parity property must survive the
+    // parallel tick unchanged (batch=1 routers clamp back to 1 lane)
+    c.apply_env_workers();
     c
 }
 
@@ -149,6 +153,62 @@ fn grouped_matches_isolated_greedy() {
 #[test]
 fn grouped_matches_isolated_probabilistic() {
     check_parity(|seed| AcceptRule::Probabilistic { seed: 77 ^ seed });
+}
+
+/// ISSUE 5 worker matrix: the parallel tick must be *token-identical* to
+/// the sequential engine. For PerSlot and ByClass partitions, under both
+/// acceptance rules, a router at `workers ∈ {1, 2, 4}` must commit
+/// exactly the same per-request token sequences AND report identical
+/// per-(group, chain) profiler step/token attribution — the gather
+/// phase's ascending-gid merge is what makes both invariants hold no
+/// matter which worker finishes first.
+#[test]
+fn worker_matrix_commits_identical_tokens_and_attribution() {
+    for seed in 0..seed_count(4) as u64 {
+        let backend = backend_for(seed);
+        let mode = chain_for(seed);
+        let prompts = prompts_for(&backend, 90 + seed, 5);
+        for policy in [GroupPolicy::PerSlot, GroupPolicy::ByClass] {
+            for rule in [AcceptRule::Greedy,
+                         AcceptRule::Probabilistic { seed: 5 ^ seed }] {
+                let classes = [SloClass::Interactive, SloClass::Standard,
+                               SloClass::Batch];
+                let run = |workers: usize| {
+                    let mut cfg = cfg_for(4, mode.clone(), rule, policy);
+                    cfg.workers = workers;
+                    let mut router =
+                        ChainRouter::with_backend(cfg, backend.clone())
+                            .expect("router");
+                    let mut ids = Vec::new();
+                    for (i, (p, m)) in prompts.iter().enumerate() {
+                        let id = router
+                            .submit(req(i, "gsm8k", p.clone(), *m,
+                                        classes[i % classes.len()]))
+                            .expect("submit");
+                        ids.push(id);
+                    }
+                    router.run_until_idle(100_000).expect("run");
+                    let tokens: Vec<Vec<i32>> = ids.iter().map(|id| {
+                        router.finished.iter().find(|f| f.id == *id)
+                            .expect("finished").tokens.clone()
+                    }).collect();
+                    (tokens, router.prof.group_table())
+                };
+                let (tok1, attr1) = run(1);
+                for workers in [2usize, 4] {
+                    let (tok_w, attr_w) = run(workers);
+                    assert_eq!(tok1, tok_w,
+                               "seed {seed} {policy:?} {rule:?}: \
+                                workers={workers} diverged from the \
+                                sequential engine");
+                    assert_eq!(attr1, attr_w,
+                               "seed {seed} {policy:?} {rule:?}: \
+                                per-(group, chain) attribution differs \
+                                at workers={workers}");
+                }
+            }
+        }
+    }
 }
 
 #[test]

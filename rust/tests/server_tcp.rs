@@ -16,7 +16,7 @@ use specrouter::server::{client_request, client_request_opts,
 
 /// Engine + TCP front-end over the deterministic SimBackend (eos_prob 0
 /// so long requests cannot end early), on an ephemeral port. The router
-/// is built inside the engine thread — `Backend` is not `Send`.
+/// is built inside the engine thread, which owns it for its whole life.
 fn sim_server(batch: usize) -> (EngineHandle, std::net::SocketAddr) {
     let mut cfg = EngineConfig::new("sim://");
     cfg.batch = batch;

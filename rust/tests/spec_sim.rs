@@ -6,9 +6,8 @@
 //! speculative step.
 use specrouter::config::AcceptRule;
 use specrouter::coordinator::{catch_up, run_spec_step, Backend, Chain,
-                              Profiler, SimBackend, SimSpec,
-                              SimilarityTracker, SlotSeqs, StepCtx,
-                              StepScratch};
+                              ProfSimSink, Profiler, SimBackend, SimSpec,
+                              SlotSeqs, StepCtx, StepScratch};
 use specrouter::rng::{argmax, Rng};
 use specrouter::state::{KvDims, StateBuf, StateManager};
 
@@ -35,8 +34,7 @@ fn mk_states(backend: &SimBackend, batch: usize, models: &[&str])
 struct Fixture {
     backend: SimBackend,
     states: StateManager,
-    prof: Profiler,
-    sim: SimilarityTracker,
+    sink: ProfSimSink,
     rngs: Vec<Rng>,
     scratch: StepScratch,
     batch: usize,
@@ -51,8 +49,7 @@ impl Fixture {
         Fixture {
             backend,
             states,
-            prof: Profiler::new(0.2),
-            sim: SimilarityTracker::new(0.2),
+            sink: ProfSimSink::new(0.2),
             rngs: (0..batch).map(|b| Rng::new(1 + b as u64)).collect(),
             scratch: StepScratch::new(),
             batch,
@@ -63,9 +60,8 @@ impl Fixture {
     fn ctx(&mut self) -> StepCtx<'_> {
         StepCtx {
             exec: &self.backend,
-            prof: &mut self.prof,
-            sim: &mut self.sim,
-            states: &mut self.states,
+            rec: &mut self.sink,
+            states: self.states.shard(),
             batch: self.batch,
             vocab: self.vocab,
             rule: AcceptRule::Greedy,

@@ -75,6 +75,10 @@ fn random_traffic_preserves_state_invariants_every_tick() {
         } else {
             AcceptRule::Probabilistic { seed: 3 + seed }
         };
+        // CI re-runs the fuzz under the parallel tick
+        // (SPECROUTER_WORKERS=4): every per-tick invariant must hold for
+        // any worker count
+        cfg.apply_env_workers();
         let mut router = ChainRouter::with_backend(cfg, backend.clone())
             .expect("router");
 
@@ -135,6 +139,45 @@ fn random_traffic_preserves_state_invariants_every_tick() {
         assert_eq!(router.finished.len() + shed, n_total,
                    "seed {seed}: requests lost");
     }
+}
+
+/// ISSUE 5: the shard-borrow guard. Slot sets that overlap — two chain
+/// groups claiming the same slot — must be rejected with a structured
+/// error before any view is handed out, never silently aliased; disjoint
+/// sets split cleanly into per-group views with the right ownership.
+#[test]
+fn shard_borrow_guard_rejects_overlapping_slot_sets() {
+    use specrouter::state::{KvDims, StateManager};
+    let mut sm = StateManager::new();
+    let dims = KvDims { layers: 2, batch: 4, heads: 2, seq: 32,
+                        head_dim: 4 };
+    sm.ensure("m2", dims, dims.elements());
+    let a = [0usize, 2];
+    let b = [1usize, 3];
+    let shards = sm.try_shards(&[&a, &b], 4).expect("disjoint sets split");
+    assert!(shards[0].owns(2) && !shards[0].owns(3));
+    assert!(shards[1].owns(3) && !shards[1].owns(0));
+    shards[1].get("m2").expect("shards see every model");
+
+    // overlap: slot 2 claimed by both sets
+    let c = [2usize, 3];
+    let err = sm.try_shards(&[&a, &c], 4).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("overlap") && msg.contains("slot 2"),
+            "expected a structured overlap error, got: {msg}");
+
+    // out-of-range slots are also structured errors
+    let oob = [9usize];
+    let err = sm.try_shards(&[&oob], 4).unwrap_err();
+    assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+
+    // the allocation-free tick-path variant agrees
+    let mut marks = Vec::new();
+    StateManager::check_disjoint(
+        4, [a.as_slice(), b.as_slice()].into_iter(), &mut marks)
+        .expect("disjoint");
+    assert!(StateManager::check_disjoint(
+        4, [a.as_slice(), c.as_slice()].into_iter(), &mut marks).is_err());
 }
 
 #[test]
