@@ -45,7 +45,7 @@ fn main() {
             let r = run_sim(&spec);
             let s = metrics::summarize_with_shed(&r.finished, 1e9, &r.shed);
             let qd = s.class_summary(SloClass::Interactive)
-                .map(|c| c.queue_delay_ms_p95)
+                .and_then(|c| c.queue_delay_ms_p95)
                 .unwrap_or(0.0);
             table.row(vec![
                 format!("{overload:.1}x"),
@@ -93,6 +93,12 @@ fn main() {
     let iqd = s.class_summary(SloClass::Interactive)
         .expect("no interactive requests completed in the 2x snapshot — \
                  the gated queue-delay metric would be meaningless");
+    let (iqd50, iqd95) = (
+        iqd.queue_delay_ms_p50
+            .expect("interactive queue-delay p50 missing"),
+        iqd.queue_delay_ms_p95
+            .expect("interactive queue-delay p95 missing"),
+    );
     let json = format!(
         "{{\n  \"bench\": \"admission\",\n  \"overload\": 2.0,\n  \
          \"policy\": \"deadline\",\n  \
@@ -100,8 +106,7 @@ fn main() {
          \"fifo_interactive_slo_attainment\": {:.4},\n  \
          \"queue_delay_p50_ms\": {:.3},\n  \
          \"queue_delay_p95_ms\": {:.3},\n  \"shed\": {}\n}}\n",
-        esf_att, fifo_att,
-        iqd.queue_delay_ms_p50, iqd.queue_delay_ms_p95, s.shed);
+        esf_att, fifo_att, iqd50, iqd95, s.shed);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_admission.json");
     std::fs::write(out, &json).expect("writing BENCH_admission.json");
     println!("\nwrote {out}");

@@ -4,7 +4,8 @@
 //! request throughput, TTFT, TPOT and SLO attainment, with the adaptive
 //! router's diagnostics.
 //!
-//!   cargo run --release --example serve_trace -- [n_requests] [rate] [batch]
+//!   cargo run --release --example serve_trace -- [n_requests] [rate] \
+//!       [batch] [--perfetto out.json]
 use std::time::Instant;
 
 use std::sync::Arc;
@@ -17,8 +18,22 @@ use specrouter::model_pool::ModelPool;
 use specrouter::workload::poisson::requests_from_trace;
 use specrouter::workload::{open_loop_trace, ArrivalSpec, DatasetGen};
 
+/// Extract `--flag value` from the arg list, leaving the positional
+/// arguments in place.
+fn take_flag_value(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == flag)?;
+    if i + 1 >= args.len() {
+        eprintln!("{flag} requires a value");
+        std::process::exit(2);
+    }
+    let v = args.remove(i + 1);
+    args.remove(i);
+    Some(v)
+}
+
 fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let perfetto = take_flag_value(&mut args, "--perfetto");
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
     let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1.0);
     let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
@@ -26,6 +41,7 @@ fn main() -> Result<()> {
     let mut cfg = EngineConfig::new("artifacts");
     cfg.batch = batch;
     cfg.slo_ms = 30_000.0;
+    cfg.apply_env_workers();
     let label = cfg.mode.label();
     // keep a pool handle for the compilation report at the end
     let pool = Arc::new(ModelPool::open(&cfg.art_dir)?);
@@ -70,7 +86,8 @@ fn main() -> Result<()> {
     }
     let wall = start.elapsed().as_secs_f64();
 
-    let s = metrics::summarize(&router.finished, 30_000.0);
+    let mut s = metrics::summarize(&router.finished, 30_000.0);
+    s.apply_cancels(&router.cancel_counts());
     println!("\n=== end-to-end summary ({wall:.1}s wall) ===");
     println!("{}", metrics::row(&label, &s, None));
 
@@ -119,5 +136,10 @@ fn main() -> Result<()> {
     println!("XLA compilation: {} executables, {:.1}s total",
              pool.compiled_count(),
              pool.total_compile_time().as_secs_f64());
+    if let Some(path) = perfetto {
+        std::fs::write(&path, router.trace_json())?;
+        println!("wrote Perfetto trace to {path} \
+                  (open in ui.perfetto.dev)");
+    }
     Ok(())
 }

@@ -5,7 +5,13 @@
 //! batching delay and the wire, not just the engine's own bookkeeping.
 //! Runs entirely on the in-process SimBackend: no artifacts needed.
 //!
-//!   cargo run --release --example stream_client -- [n_requests] [rate]
+//!   cargo run --release --example stream_client -- [n_requests] [rate] \
+//!       [--perfetto out.json] [--stats-out stats.json]
+//!
+//! `--perfetto` fetches the engine's Chrome trace-event JSON over the
+//! TCP control protocol after the replay; `--stats-out` snapshots the
+//! `{"stats": true}` reply the same way (CI's telemetry-smoke step
+//! validates both). `SPECROUTER_WORKERS` sets the parallel tick lanes.
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::{mpsc, Arc};
@@ -77,8 +83,23 @@ fn stream_one(addr: SocketAddr, e: &TraceEntry)
     }
 }
 
+/// Extract `--flag value` from the arg list, leaving the positional
+/// arguments in place.
+fn take_flag_value(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == flag)?;
+    if i + 1 >= args.len() {
+        eprintln!("{flag} requires a value");
+        std::process::exit(2);
+    }
+    let v = args.remove(i + 1);
+    args.remove(i);
+    Some(v)
+}
+
 fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let perfetto = take_flag_value(&mut args, "--perfetto");
+    let stats_out = take_flag_value(&mut args, "--stats-out");
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(12);
     let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8.0);
 
@@ -93,6 +114,7 @@ fn main() -> Result<()> {
         chain: vec!["m0".into(), "m2".into()],
         window: 4,
     };
+    cfg.apply_env_workers();
     let label = cfg.mode.label();
     let engine = spawn_engine_with(move || {
         ChainRouter::with_backend(
@@ -187,6 +209,19 @@ fn main() -> Result<()> {
     println!("\nmean TTFT: engine-side {:.1} ms vs emission-time {:.1} ms \
               (the delta is delivery overhead the buffered protocol hid)",
              mean(&engine_ttft), mean(&client_ttft));
+
+    // control-protocol exports, scraped before the engine shuts down
+    if let Some(path) = stats_out {
+        let stats = specrouter::server::client_stats(addr)?;
+        std::fs::write(&path, format!("{stats}\n"))?;
+        println!("wrote stats snapshot to {path}");
+    }
+    if let Some(path) = perfetto {
+        let trace = specrouter::server::client_trace(addr)?;
+        std::fs::write(&path, format!("{trace}\n"))?;
+        println!("wrote Perfetto trace to {path} \
+                  (open in ui.perfetto.dev)");
+    }
 
     engine.tx.send(EngineMsg::Shutdown).ok();
     engine.join.join().unwrap()?;

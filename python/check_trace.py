@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Schema checker for the engine's observability exports (DESIGN.md §12).
+
+CI's telemetry-smoke step replays a short sim trace through
+examples/stream_client.rs with `--perfetto trace.json --stats-out
+stats.json`, then runs
+
+    python3 python/check_trace.py trace.json --stats stats.json
+
+The trace file must be valid Chrome trace-event JSON (the subset
+ui.perfetto.dev ingests): a `traceEvents` array whose "X" (complete)
+events carry ph/name/cat/ts/dur/pid/tid, whose instants are scoped
+("s"), and where every tid referenced by an event owns a `thread_name`
+metadata record — one track per worker lane, with the plan/execute/
+gather phase spans present so the lane view reconstructs the parallel
+tick. The stats snapshot must expose the keys the dashboards scrape.
+
+Stdlib only; exits non-zero with one line per violation.
+"""
+import argparse
+import json
+import sys
+
+# tick phases that must appear as complete spans for the lane view
+REQUIRED_SPANS = ("plan", "execute", "gather")
+
+# snapshot keys the dashboards (and the server_tcp tests) rely on
+REQUIRED_STATS_KEYS = (
+    "queued",
+    "active",
+    "ticks",
+    "admitted_total",
+    "shed_total",
+    "downgraded_total",
+    "cancelled_total",
+    "telemetry_dropped_events",
+    "telemetry_enabled",
+    "hist",
+    "per_class",
+    "class_counters",
+    "groups",
+)
+
+REQUIRED_HIST_KEYS = ("ttft_ms", "tpot_ms", "queue_delay_ms",
+                      "accept_len", "rollback_depth", "tick_ms")
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_trace(path):
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["top level must be an object with a traceEvents array"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents must be an array"]
+
+    named_tids = set()     # tids with a thread_name metadata record
+    used_tids = set()      # tids referenced by non-metadata events
+    span_names = set()     # names of "X" complete events
+    for i, e in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if not isinstance(ph, str) or not ph:
+            errors.append(f"{where}: missing ph")
+            continue
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            errors.append(f"{where}: missing name")
+            continue
+        if not is_num(e.get("pid")) or not is_num(e.get("tid")):
+            errors.append(f"{where}: pid/tid must be numbers")
+            continue
+        if ph == "M":
+            if e["name"] == "thread_name":
+                name = (e.get("args") or {}).get("name")
+                if not isinstance(name, str) or not name:
+                    errors.append(f"{where}: thread_name without "
+                                  "args.name")
+                else:
+                    named_tids.add(e["tid"])
+            continue
+        used_tids.add(e["tid"])
+        if not is_num(e.get("ts")) or e["ts"] < 0:
+            errors.append(f"{where}: ph={ph} needs a non-negative ts")
+        if ph == "X":
+            if not is_num(e.get("dur")) or e["dur"] < 0:
+                errors.append(f"{where}: complete event needs dur >= 0")
+            if not isinstance(e.get("cat"), str):
+                errors.append(f"{where}: complete event needs cat")
+            span_names.add(e["name"])
+        elif ph == "i":
+            if e.get("s") not in ("t", "p", "g"):
+                errors.append(f"{where}: instant needs a scope s")
+        else:
+            errors.append(f"{where}: unexpected ph {ph!r}")
+
+    for name in REQUIRED_SPANS:
+        if name not in span_names:
+            errors.append(f"no {name!r} span — the lane view cannot "
+                          "reconstruct the tick phases")
+    orphans = sorted(used_tids - named_tids)
+    if orphans:
+        errors.append(f"tids {orphans} have events but no thread_name "
+                      "metadata (each worker lane must be a named track)")
+    if not used_tids:
+        errors.append("trace has metadata only — no recorded events")
+    return errors
+
+
+def check_stats(path):
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        return ["stats snapshot must be a JSON object"]
+    for key in REQUIRED_STATS_KEYS:
+        if key not in doc:
+            errors.append(f"stats missing key {key!r}")
+    hist = doc.get("hist")
+    if isinstance(hist, dict):
+        for key in REQUIRED_HIST_KEYS:
+            h = hist.get(key)
+            if not isinstance(h, dict) or "count" not in h:
+                errors.append(f"stats hist.{key} missing or lacks count")
+    elif "hist" in doc:
+        errors.append("stats hist must be an object")
+    # a smoke run admits work, so the lifecycle counters must have moved
+    if is_num(doc.get("admitted_total")) and doc["admitted_total"] <= 0:
+        errors.append("admitted_total is 0 — the smoke replay recorded "
+                      "nothing")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Perfetto/Chrome trace-event JSON file")
+    ap.add_argument("--stats", help="stats snapshot JSON to validate too")
+    args = ap.parse_args()
+
+    errors = [f"trace: {e}" for e in check_trace(args.trace)]
+    if args.stats:
+        errors += [f"stats: {e}" for e in check_stats(args.stats)]
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    extra = " and stats snapshot" if args.stats else ""
+    print(f"OK: trace-event schema{extra} valid")
+
+
+if __name__ == "__main__":
+    main()

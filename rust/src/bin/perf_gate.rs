@@ -1,7 +1,9 @@
 //! CI perf-regression gate (ISSUE 4): compares the BENCH_*.json
 //! artifacts produced by the bench-trajectory job against the checked-in
 //! baselines in `benches/baselines.json` and fails (exit 1) when a gated
-//! metric regresses more than the configured tolerance (default 15%).
+//! metric regresses more than the configured tolerance (default 15%; an
+//! optional `tolerances_pct` map in baselines.json overrides the band
+//! per metric — the telemetry-overhead check runs at 2%).
 //!
 //! Gated metrics (all lower-is-better):
 //!   * `hotpath_greedy_allocs_per_step` — max allocs/step over the greedy
@@ -13,6 +15,10 @@
 //!     (DESIGN.md §11; a baseline of 0.67 demands >= 1.5x speedup).
 //!     Skipped with a note when the runner reports fewer than 4 cores —
 //!     a starved CI box cannot exhibit parallel speedup.
+//!   * `telemetry_overhead_ratio` — full-tick time with telemetry
+//!     recording divided by the disabled registry, min-of-3 interleaved
+//!     pairs (ISSUE 6 / DESIGN.md §12). Baseline 1.0 at 2% per-metric
+//!     tolerance enforces the <= 1.02 policy.
 //!   * `scheduler_select_ns` — Algorithm-1 selection time from
 //!     BENCH_scheduler_overhead.json (DESIGN.md §7 budget).
 //!   * `admission_queue_delay_p50_ms` — interactive p50 queue delay at 2x
@@ -35,11 +41,14 @@ use specrouter::harness::Table;
 use specrouter::json::{self, Value};
 
 /// One gated metric: measured value vs checked-in baseline ceiling.
+/// `tol_pct` is the metric's own tolerance band — the baselines file's
+/// global `tolerance_pct` unless its `tolerances_pct` map overrides it.
 #[derive(Debug, Clone)]
 struct Check {
     name: &'static str,
     measured: f64,
     baseline: f64,
+    tol_pct: f64,
 }
 
 /// Gate rule (lower-is-better): pass while
@@ -48,21 +57,21 @@ struct Check {
 /// percentage (100 × 1.15 is 114.999… in f64). A zero baseline is exact
 /// — zero tolerance of any measured value above zero (the allocs/step
 /// contract), since a percentage of nothing gates nothing.
-fn passes(c: &Check, tol_pct: f64) -> bool {
+fn passes(c: &Check) -> bool {
     if c.baseline == 0.0 {
         c.measured <= 1e-9
     } else {
         c.measured
-            <= c.baseline * (1.0 + tol_pct / 100.0) * (1.0 + 1e-12)
+            <= c.baseline * (1.0 + c.tol_pct / 100.0) * (1.0 + 1e-12)
     }
 }
 
 /// Human verdict for the table.
-fn verdict(c: &Check, tol_pct: f64) -> String {
-    if !passes(c, tol_pct) {
-        format!("FAIL (> {:.1}% over baseline)", tol_pct)
+fn verdict(c: &Check) -> String {
+    if !passes(c) {
+        format!("FAIL (> {:.1}% over baseline)", c.tol_pct)
     } else if c.baseline > 0.0
-        && c.measured < c.baseline / (1.0 + tol_pct / 100.0) {
+        && c.measured < c.baseline / (1.0 + c.tol_pct / 100.0) {
         "ok (below baseline — consider tightening)".into()
     } else {
         "ok".into()
@@ -96,6 +105,14 @@ fn hotpath_greedy_allocs(v: &Value) -> Result<f64> {
     Ok(max)
 }
 
+/// Telemetry-on / telemetry-off full-tick time ratio from the hotpath
+/// artifact's `telemetry` object. A missing object is a hard error
+/// (stale artifact) — both sides of the pair run on the same box, so
+/// unlike the parallel ratio there is no hardware condition to skip on.
+fn telemetry_ratio(v: &Value) -> Result<f64> {
+    v.get("telemetry")?.get("overhead_ratio")?.as_f64()
+}
+
 /// Workers=4 / workers=1 tick-time ratio from the hotpath artifact's
 /// `parallel` object, or None (with a printed note) when the runner has
 /// fewer than 4 cores — the scenario cannot speed up on hardware that
@@ -118,21 +135,31 @@ fn gather(dir: &Path) -> Result<Vec<Check>> {
     let hotpath = load(dir, "BENCH_hotpath.json")?;
     let sched = load(dir, "BENCH_scheduler_overhead.json")?;
     let adm = load(dir, "BENCH_admission.json")?;
+    // baseline and tol_pct are filled from baselines.json
     let mut checks = vec![
         Check {
             name: "hotpath_greedy_allocs_per_step",
             measured: hotpath_greedy_allocs(&hotpath)?,
-            baseline: f64::NAN, // filled from baselines.json
+            baseline: f64::NAN,
+            tol_pct: f64::NAN,
+        },
+        Check {
+            name: "telemetry_overhead_ratio",
+            measured: telemetry_ratio(&hotpath)?,
+            baseline: f64::NAN,
+            tol_pct: f64::NAN,
         },
         Check {
             name: "scheduler_select_ns",
             measured: sched.get("select_ns")?.as_f64()?,
             baseline: f64::NAN,
+            tol_pct: f64::NAN,
         },
         Check {
             name: "admission_queue_delay_p50_ms",
             measured: adm.get("queue_delay_p50_ms")?.as_f64()?,
             baseline: f64::NAN,
+            tol_pct: f64::NAN,
         },
     ];
     if let Some(ratio) = parallel_ratio(&hotpath)? {
@@ -140,6 +167,7 @@ fn gather(dir: &Path) -> Result<Vec<Check>> {
             name: "parallel_tick_w4_time_ratio",
             measured: ratio,
             baseline: f64::NAN,
+            tol_pct: f64::NAN,
         });
     }
     Ok(checks)
@@ -152,10 +180,19 @@ fn apply_baselines(checks: &mut [Check], baselines: &Value)
         bail!("tolerance_pct must be a finite non-negative percentage");
     }
     let metrics = baselines.get("metrics")?;
+    let overrides = baselines.opt("tolerances_pct");
     for c in checks.iter_mut() {
         c.baseline = metrics.get(c.name)?.as_f64()?;
         if !c.baseline.is_finite() || c.baseline < 0.0 {
             bail!("baseline for {} must be finite and non-negative",
+                  c.name);
+        }
+        c.tol_pct = match overrides.and_then(|o| o.opt(c.name)) {
+            Some(v) => v.as_f64()?,
+            None => tol,
+        };
+        if !c.tol_pct.is_finite() || c.tol_pct < 0.0 {
+            bail!("tolerance for {} must be finite and non-negative",
                   c.name);
         }
     }
@@ -163,26 +200,27 @@ fn apply_baselines(checks: &mut [Check], baselines: &Value)
 }
 
 /// Run every check; returns false when any metric regressed.
-fn gate(checks: &[Check], tol_pct: f64) -> bool {
+fn gate(checks: &[Check], default_tol_pct: f64) -> bool {
     let mut table = Table::new(&["metric", "measured", "baseline",
-                                 "limit", "verdict"]);
+                                 "tol%", "limit", "verdict"]);
     let mut ok = true;
     for c in checks {
         let limit = if c.baseline == 0.0 {
             0.0
         } else {
-            c.baseline * (1.0 + tol_pct / 100.0)
+            c.baseline * (1.0 + c.tol_pct / 100.0)
         };
         table.row(vec![
             c.name.to_string(),
             format!("{:.3}", c.measured),
             format!("{:.3}", c.baseline),
+            format!("{:.1}", c.tol_pct),
             format!("{limit:.3}"),
-            verdict(c, tol_pct),
+            verdict(c),
         ]);
-        ok &= passes(c, tol_pct);
+        ok &= passes(c);
     }
-    println!("perf gate (tolerance {tol_pct:.1}%):\n");
+    println!("perf gate (default tolerance {default_tol_pct:.1}%):\n");
     table.print();
     ok
 }
@@ -227,29 +265,44 @@ mod tests {
     use super::*;
 
     fn c(baseline: f64, measured: f64) -> Check {
-        Check { name: "m", measured, baseline }
+        Check { name: "m", measured, baseline, tol_pct: 15.0 }
+    }
+
+    fn ct(baseline: f64, measured: f64, tol_pct: f64) -> Check {
+        Check { name: "m", measured, baseline, tol_pct }
     }
 
     #[test]
     fn tolerance_band_separates_pass_from_regression() {
         // 10% over a 100-unit baseline passes at 15% tolerance...
-        assert!(passes(&c(100.0, 110.0), 15.0));
+        assert!(passes(&c(100.0, 110.0)));
         // ...an injected 20% regression fails
-        assert!(!passes(&c(100.0, 120.0), 15.0));
+        assert!(!passes(&c(100.0, 120.0)));
         // the boundary itself passes (<=)
-        assert!(passes(&c(100.0, 115.0), 15.0));
-        assert!(!passes(&c(100.0, 115.001), 15.0));
+        assert!(passes(&c(100.0, 115.0)));
+        assert!(!passes(&c(100.0, 115.001)));
         // improvements always pass
-        assert!(passes(&c(100.0, 1.0), 15.0));
+        assert!(passes(&c(100.0, 1.0)));
     }
 
     #[test]
     fn zero_baseline_is_exact() {
-        assert!(passes(&c(0.0, 0.0), 15.0));
+        assert!(passes(&c(0.0, 0.0)));
         // the allocs/step contract: ANY allocation is a regression, a
         // percentage band over zero would never catch it
-        assert!(!passes(&c(0.0, 0.5), 15.0));
-        assert!(!passes(&c(0.0, 1e-3), 15.0));
+        assert!(!passes(&c(0.0, 0.5)));
+        assert!(!passes(&c(0.0, 1e-3)));
+    }
+
+    #[test]
+    fn per_metric_tolerance_narrows_the_band() {
+        // the telemetry-overhead policy: baseline 1.0 at 2% — 1.02 is
+        // the last passing value, 1.03 regresses even though the global
+        // 15% band would wave it through
+        assert!(passes(&ct(1.0, 1.019, 2.0)));
+        assert!(passes(&ct(1.0, 1.02, 2.0)));
+        assert!(!passes(&ct(1.0, 1.03, 2.0)));
+        assert!(passes(&c(1.0, 1.03)));
     }
 
     #[test]
@@ -259,7 +312,7 @@ mod tests {
         // inject a 1.2x regression into one metric: the gate must flip
         let injected = vec![c(0.0, 0.0), c(50_000.0, 60_000.0)];
         assert!(!gate(&injected, 15.0));
-        assert!(verdict(&injected[1], 15.0).contains("FAIL"));
+        assert!(verdict(&injected[1]).contains("FAIL"));
     }
 
     #[test]
@@ -274,6 +327,11 @@ mod tests {
                 < 1e-12);
         let none = json::parse(r#"{"rows":[]}"#).unwrap();
         assert!(hotpath_greedy_allocs(&none).is_err());
+        // the telemetry object: present reads, absent is a stale artifact
+        let tel = json::parse(
+            r#"{"telemetry":{"overhead_ratio":1.013}}"#).unwrap();
+        assert!((telemetry_ratio(&tel).unwrap() - 1.013).abs() < 1e-12);
+        assert!(telemetry_ratio(&none).is_err());
     }
 
     #[test]
@@ -292,22 +350,31 @@ mod tests {
         assert!(parallel_ratio(&stale).is_err());
         // the ratio gates like any lower-is-better metric: 0.67 baseline
         // (>= 1.5x) at 15% tolerance passes 0.75, fails 0.80
-        assert!(passes(&c(0.67, 0.75), 15.0));
-        assert!(!passes(&c(0.67, 0.80), 15.0));
+        assert!(passes(&c(0.67, 0.75)));
+        assert!(!passes(&c(0.67, 0.80)));
     }
 
     #[test]
     fn baselines_file_binds_metrics_and_tolerance() {
         let mut checks = vec![
             Check { name: "scheduler_select_ns", measured: 10.0,
-                    baseline: f64::NAN },
+                    baseline: f64::NAN, tol_pct: f64::NAN },
+            Check { name: "telemetry_overhead_ratio", measured: 1.01,
+                    baseline: f64::NAN, tol_pct: f64::NAN },
         ];
         let b = json::parse(
             r#"{"tolerance_pct":15.0,
-                "metrics":{"scheduler_select_ns":50000.0}}"#).unwrap();
+                "metrics":{"scheduler_select_ns":50000.0,
+                           "telemetry_overhead_ratio":1.0},
+                "tolerances_pct":{"telemetry_overhead_ratio":2.0}}"#)
+            .unwrap();
         let tol = apply_baselines(&mut checks, &b).unwrap();
         assert_eq!(tol, 15.0);
         assert_eq!(checks[0].baseline, 50_000.0);
+        // no override: the global band; overridden: the per-metric band
+        assert_eq!(checks[0].tol_pct, 15.0);
+        assert_eq!(checks[1].baseline, 1.0);
+        assert_eq!(checks[1].tol_pct, 2.0);
         // a missing metric key is a hard error, not a silent skip
         let b = json::parse(
             r#"{"tolerance_pct":15.0,"metrics":{}}"#).unwrap();

@@ -119,6 +119,12 @@ pub struct EngineConfig {
     pub device_bytes: usize,
     /// Scheduler re-plans every `replan_every` steps (1 = every step).
     pub replan_every: usize,
+    /// Record telemetry (span rings + histograms, DESIGN.md §12). On by
+    /// default: recording is alloc-free and gated to ≤2% of tick time
+    /// (`telemetry_overhead_ratio` in `benches/baselines.json`). Off
+    /// skips every hook and shrinks the registry to a stub — the
+    /// telemetry-off arm of the `bench_hotpath` overhead measurement.
+    pub telemetry: bool,
     /// Calibrated-cost mode (DESIGN.md §2): per-model execution-cost
     /// multipliers, emulated by spin-waiting after each call. Lets benches
     /// explore paper-scale cost ratios (a 7B target is ~100× a 68m draft
@@ -149,6 +155,7 @@ impl EngineConfig {
             n_devices: 4,
             device_bytes: 2 << 30,
             replan_every: 1,
+            telemetry: true,
             cost_multipliers: Vec::new(),
         }
     }

@@ -43,8 +43,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::admission::{Discipline, QueuedReq, ShedRecord, SloClass,
-                       SubmitOutcome};
+use crate::admission::{Discipline, QueuedReq, ShedReason, ShedRecord,
+                       SloClass, SubmitOutcome};
 use crate::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::engine::{committed_frontier, retype_empty,
@@ -58,12 +58,15 @@ use crate::coordinator::scheduler::{Chain, Scheduler};
 use crate::coordinator::similarity::SimilarityTracker;
 use crate::coordinator::spec_step::{run_spec_step, SlotSeqs, StepCtx,
                                     StepScratch};
-use crate::coordinator::worker_pool::WorkerPool;
+use crate::coordinator::worker_pool::{current_lane, WorkerPool};
+use crate::json::{self, Value};
 use crate::metrics::ClassChainRow;
 use crate::model_pool::ModelPool;
 use crate::rng::{argmax, softmax, splitmix, Rng};
 use crate::runtime::Manifest;
 use crate::state::{KvDims, StateManager, StateShard};
+use crate::telemetry::{AdmitOutcome, EventKind, Telemetry, TickPhase,
+                       NO_GID, NO_REQ};
 
 /// How often opportunistic physical truncation runs (steps).
 const FIX_CACHES_EVERY: u64 = 32;
@@ -174,6 +177,10 @@ pub struct ChainRouter {
     workers: usize,
     /// The fixed pool (spawned once, `None` at workers = 1).
     pool: Option<WorkerPool>,
+    /// Tracing + metrics registry (DESIGN.md §12): per-lane span rings
+    /// written only by this (engine) thread, plus the atomic histogram
+    /// set. A stub when `cfg.telemetry` is off.
+    pub tel: Telemetry,
     pub steps: u64,
     next_id: u64,
 }
@@ -253,6 +260,12 @@ impl ChainRouter {
         // model set is the universe of names a step can ever report
         let model_names: Arc<Vec<String>> =
             Arc::new(manifest.models.keys().cloned().collect());
+        let tel = if cfg.telemetry {
+            Telemetry::new(true, workers, crate::telemetry::DEFAULT_RING_CAP,
+                           model_names.clone())
+        } else {
+            Telemetry::disabled()
+        };
         let router = ChainRouter {
             backend,
             prof: Profiler::new(cfg.ema_alpha),
@@ -286,6 +299,7 @@ impl ChainRouter {
                 .collect(),
             workers,
             pool: (workers > 1).then(|| WorkerPool::new(workers)),
+            tel,
             steps: 0,
             next_id: 1,
             cfg,
@@ -376,7 +390,20 @@ impl ChainRouter {
         req.id = self.next_id;
         self.next_id += 1;
         let id = req.id;
-        (id, self.batcher.submit(req))
+        let outcome = self.batcher.submit(req);
+        if self.tel.enabled() {
+            let o = match &outcome {
+                SubmitOutcome::Queued(_) => AdmitOutcome::Queued,
+                SubmitOutcome::Downgraded { .. } => AdmitOutcome::Downgraded,
+                SubmitOutcome::Shed(ShedReason::QueueFull) =>
+                    AdmitOutcome::ShedQueueFull,
+                SubmitOutcome::Shed(ShedReason::Doomed) =>
+                    AdmitOutcome::ShedDoomed,
+            };
+            let tick = self.steps;
+            self.tel.push(0, tick, id, EventKind::Admit { outcome: o });
+        }
+        (id, outcome)
     }
 
     /// Drain shed records (rejected requests) for delivery to clients.
@@ -396,14 +423,24 @@ impl ChainRouter {
     /// and no `Finished` record is produced. Returns false for an unknown
     /// id (already finished, shed, or never submitted).
     pub fn cancel(&mut self, id: u64) -> bool {
+        let mut ok = false;
         if let Some(b) = self.batcher.slot_of(id) {
             if let Some(slot) = self.batcher.free(b) {
                 self.states.clear_slot(b);
                 self.batcher.admission.record_cancel(slot.class);
-                return true;
+                ok = true;
             }
         }
-        self.batcher.admission.cancel_queued(id).is_some()
+        if !ok {
+            ok = self.batcher.admission.cancel_queued(id).is_some();
+        }
+        if ok && self.tel.enabled() {
+            let tick = self.steps;
+            self.tel.push(0, tick, id, EventKind::Admit {
+                outcome: AdmitOutcome::Cancelled,
+            });
+        }
+        ok
     }
 
     /// Drain finished records. The serving loop uses this instead of
@@ -440,6 +477,16 @@ impl ChainRouter {
                 continue;
             }
             let admitted_at = Instant::now();
+            if self.tel.enabled() {
+                let us = admitted_at
+                    .saturating_duration_since(req.arrival)
+                    .as_micros() as u64;
+                self.tel.queue_delay_us.record(us);
+                self.tel.class_hists(class).queue_delay_us.record(us);
+                let tick = self.steps;
+                self.tel.push(0, tick, req.id,
+                              EventKind::QueueDwell { us });
+            }
             let plen = req.prompt.len();
             // per-request sampling stream: seeded here so a request's
             // sampled output is reproducible regardless of which slots
@@ -473,6 +520,13 @@ impl ChainRouter {
             }
             self.slot_rngs[slot_idx] = slot_rng;
             let first_token_at = Instant::now();
+            if self.tel.enabled() {
+                let us = first_token_at
+                    .saturating_duration_since(req.arrival)
+                    .as_micros() as u64;
+                self.tel.ttft_us.record(us);
+                self.tel.class_hists(class).ttft_us.record(us);
+            }
             // reserve the sequence's final length up front: the commit
             // loop pushes at most max_new generated tokens, so steady-
             // state ticks never reallocate a committed buffer (§8 gate)
@@ -536,6 +590,12 @@ impl ChainRouter {
             });
             let gid = gid_for(policy, b, slot.class, slack);
             self.group_slots[gid].push(b);
+            if self.tel.enabled() {
+                let tick = self.steps;
+                self.tel.push(0, tick, slot.req.id, EventKind::GroupAssign {
+                    gid: gid.min(u16::MAX as usize) as u16,
+                });
+            }
             if let Some(s) = slack {
                 self.group_slack[gid] = Some(match self.group_slack[gid] {
                     Some(cur) => cur.min(s),
@@ -609,10 +669,13 @@ impl ChainRouter {
     /// ascending gid order. Returns the number of tokens committed across
     /// every group, or None when the engine is idle.
     pub fn tick(&mut self) -> Result<Option<usize>> {
+        let tel_on = self.tel.enabled();
+        let t_tick = Instant::now();
         self.admit_pending()?;
         if self.batcher.active() == 0 {
             return Ok(if self.batcher.is_idle() { None } else { Some(0) });
         }
+        let tick_no = self.steps;
         self.build_groups();
         let eos = self.manifest.special.eos;
         let seq_cap = self.manifest.seq;
@@ -659,6 +722,7 @@ impl ChainRouter {
             &mut self.overlap_marks)?;
 
         // --- execute: scatter one task per active group ------------------
+        let t_exec = Instant::now();
         {
             let backend = self.backend.as_ref();
             let batcher = &self.batcher;
@@ -720,6 +784,7 @@ impl ChainRouter {
                 }
             }
 
+            let epoch = self.tel.epoch();
             let f = |t: &mut GroupTask| {
                 let t0 = Instant::now();
                 let result = {
@@ -736,6 +801,14 @@ impl ChainRouter {
                     run_spec_step(&mut ctx, t.chain, &t.seqs, pad)
                 };
                 t.recorder.wall = t0.elapsed();
+                if tel_on {
+                    // stamp lane + start for the gather-side span export;
+                    // workers never touch the rings themselves (§11)
+                    t.recorder.lane = current_lane();
+                    t.recorder.start_us = t0
+                        .saturating_duration_since(epoch)
+                        .as_micros() as u64;
+                }
                 t.err = result.err();
             };
             match self.pool.as_ref() {
@@ -767,6 +840,7 @@ impl ChainRouter {
                 return Err(e);
             }
         }
+        let t_exec_end = Instant::now();
 
         // --- gather: deterministic ascending-gid merge + commit ---------
         let mut total = 0usize;
@@ -774,6 +848,59 @@ impl ChainRouter {
         for gid in 0..self.group_slots.len() {
             if self.group_slots[gid].is_empty() {
                 continue;
+            }
+            // export this group's spans to the telemetry rings before the
+            // drain clears the log. Runs on the engine thread, so rings
+            // stay single-writer; backend calls are serial within a
+            // group, so their start offsets are reconstructed by
+            // accumulating durations from the group's execute start.
+            if tel_on {
+                let rec = &self.recorders[gid];
+                let lane = rec.lane;
+                let start = rec.start_us;
+                let end = start + rec.wall.as_micros() as u64;
+                self.tel.push(lane, tick_no, NO_REQ, EventKind::Phase {
+                    phase: TickPhase::Execute,
+                    gid: gid.min(u16::MAX as usize) as u16,
+                    start_us: start,
+                    end_us: end,
+                });
+                let mut off = start;
+                rec.for_each_call(|model, kind, cb, cw, dur| {
+                    let dur_us = dur.as_micros() as u64;
+                    self.tel.push(lane, tick_no, NO_REQ, EventKind::Call {
+                        model,
+                        kind,
+                        batch: cb.min(u16::MAX as u32) as u16,
+                        window: cw.min(u16::MAX as u32) as u16,
+                        start_us: off,
+                        dur_us,
+                    });
+                    off += dur_us;
+                });
+                let mut level = 0u8;
+                rec.for_each_acceptance(|_, _, acc, cands| {
+                    self.tel.push(lane, tick_no, NO_REQ, EventKind::Level {
+                        level,
+                        accepted: acc.min(u16::MAX as u32) as u16,
+                        rejected: cands
+                            .saturating_sub(acc)
+                            .min(u16::MAX as u32) as u16,
+                    });
+                    level = level.saturating_add(1);
+                });
+                rec.for_each_rollback(|slot, lvl, depth| {
+                    self.tel.rollback_depth.record(depth as u64);
+                    let req = self.batcher.slots[slot as usize]
+                        .as_ref()
+                        .map(|s| s.req.id)
+                        .unwrap_or(NO_REQ);
+                    self.tel.push(lane, tick_no, req, EventKind::Rollback {
+                        level: lvl.min(u8::MAX as u16) as u8,
+                        slot: slot.min(u8::MAX as u16) as u8,
+                        depth: depth.min(u16::MAX as u32) as u16,
+                    });
+                });
             }
             // fold this group's recorded calls + similarity observations
             // into the shared trackers; the replay order is the recording
@@ -792,6 +919,15 @@ impl ChainRouter {
                 let Some(slot) = self.batcher.slots[b].as_mut() else {
                     continue;
                 };
+                if tel_on && outcome.levels > 0 {
+                    let n = outcome.accepted(outcome.levels - 1, b) as u64;
+                    self.tel.record_accept(
+                        &self.group_labels[gid],
+                        &self.group_label_cache[gid].as_ref().unwrap().1,
+                        n,
+                    );
+                }
+                let before = group_total;
                 let mut done = false;
                 for &t in &outcome.appended[b] {
                     if slot.remaining() == 0 {
@@ -809,6 +945,13 @@ impl ChainRouter {
                 if slot.remaining() == 0
                     || slot.committed.len() + guard > seq_cap {
                     done = true;
+                }
+                if tel_on && group_total > before {
+                    self.tel.push(0, tick_no, slot.req.id,
+                                  EventKind::Commit {
+                        tokens: (group_total - before)
+                            .min(u16::MAX as usize) as u16,
+                    });
                 }
                 // commits may have been truncated: clamp every model's
                 // mask to the authoritative frontier (structured error
@@ -833,7 +976,44 @@ impl ChainRouter {
         self.done_buf = done;
         self.steps += 1;
         if self.steps % FIX_CACHES_EVERY == 0 {
-            self.states.fix_caches()?;
+            let t0 = Instant::now();
+            let fixed = self.states.fix_caches()?;
+            if tel_on {
+                let start_us = self.tel.us_since_epoch(t0);
+                self.tel.push(0, tick_no, NO_REQ, EventKind::CacheFix {
+                    fixed: fixed.min(u32::MAX as usize) as u32,
+                    start_us,
+                    dur_us: t0.elapsed().as_micros() as u64,
+                });
+            }
+        }
+        if tel_on {
+            // whole-tick phase spans on the engine lane (lane 0): plan
+            // covers admission + grouping + chain selection, gather
+            // covers fold/commit/completions including fix_caches
+            let plan_s = self.tel.us_since_epoch(t_tick);
+            let exec_s = self.tel.us_since_epoch(t_exec);
+            let exec_e = self.tel.us_since_epoch(t_exec_end);
+            self.tel.push(0, tick_no, NO_REQ, EventKind::Phase {
+                phase: TickPhase::Plan,
+                gid: NO_GID,
+                start_us: plan_s,
+                end_us: exec_s,
+            });
+            self.tel.push(0, tick_no, NO_REQ, EventKind::Phase {
+                phase: TickPhase::Execute,
+                gid: NO_GID,
+                start_us: exec_s,
+                end_us: exec_e,
+            });
+            let now_us = self.tel.now_us();
+            self.tel.push(0, tick_no, NO_REQ, EventKind::Phase {
+                phase: TickPhase::Gather,
+                gid: NO_GID,
+                start_us: exec_e,
+                end_us: now_us,
+            });
+            self.tel.tick_us.record(t_tick.elapsed().as_micros() as u64);
         }
         Ok(Some(total))
     }
@@ -862,6 +1042,100 @@ impl ChainRouter {
             .collect()
     }
 
+    /// Record a stream emission (tokens pushed to a client sink) against
+    /// request `id`. Called by the serving loop after each flush.
+    pub fn record_emit(&mut self, id: u64, tokens: usize) {
+        if self.tel.enabled() {
+            let tick = self.steps;
+            self.tel.push(0, tick, id, EventKind::Emit {
+                tokens: tokens.min(u16::MAX as usize) as u16,
+            });
+        }
+    }
+
+    /// Per-class cancel counts (client walk-aways), for
+    /// [`crate::metrics::Summary::apply_cancels`].
+    pub fn cancel_counts(&self) -> Vec<(SloClass, u64)> {
+        SloClass::ALL
+            .iter()
+            .map(|&c| (c, self.batcher.admission.cancelled_by_class(c)))
+            .collect()
+    }
+
+    /// The server `stats` reply: the telemetry snapshot (histograms +
+    /// dropped-events counter) merged with the router's queue/admission
+    /// counters. CI's telemetry-smoke step asserts the top-level keys.
+    pub fn stats_json(&self) -> Value {
+        let adm = &self.batcher.admission;
+        let Value::Obj(mut m) = self.tel.snapshot() else {
+            unreachable!("telemetry snapshot is an object");
+        };
+        let counters = [
+            ("queued", self.batcher.queued() as f64),
+            ("active", self.batcher.active() as f64),
+            ("ticks", self.steps as f64),
+            ("admitted_total", adm.admitted_total as f64),
+            ("shed_total", adm.shed_total as f64),
+            ("downgraded_total", adm.downgraded_total as f64),
+            ("cancelled_total", adm.cancelled_total as f64),
+        ];
+        for (k, v) in counters {
+            m.insert(k.to_string(), json::num(v));
+        }
+        let class_counters: Vec<Value> = SloClass::ALL
+            .iter()
+            .map(|&class| {
+                json::obj(vec![
+                    ("class", json::s(class.name())),
+                    ("shed", json::num(adm.shed_by_class(class) as f64)),
+                    ("cancelled",
+                     json::num(adm.cancelled_by_class(class) as f64)),
+                ])
+            })
+            .collect();
+        m.insert("class_counters".to_string(), Value::Arr(class_counters));
+        Value::Obj(m)
+    }
+
+    /// Prometheus text exposition of the same registry + counters.
+    pub fn prom_text(&self) -> String {
+        use crate::telemetry::prom::{render, Counter};
+        let adm = &self.batcher.admission;
+        let class_labels: Vec<[(&str, &str); 1]> = SloClass::ALL
+            .iter()
+            .map(|c| [("class", c.name())])
+            .collect();
+        let mut counters = vec![
+            Counter { name: "specrouter_admitted_total", labels: &[],
+                      value: adm.admitted_total as f64 },
+            Counter { name: "specrouter_shed_total", labels: &[],
+                      value: adm.shed_total as f64 },
+            Counter { name: "specrouter_downgraded_total", labels: &[],
+                      value: adm.downgraded_total as f64 },
+            Counter { name: "specrouter_cancelled_total", labels: &[],
+                      value: adm.cancelled_total as f64 },
+        ];
+        for (i, &class) in SloClass::ALL.iter().enumerate() {
+            counters.push(Counter {
+                name: "specrouter_shed_total",
+                labels: &class_labels[i],
+                value: adm.shed_by_class(class) as f64,
+            });
+            counters.push(Counter {
+                name: "specrouter_cancelled_total",
+                labels: &class_labels[i],
+                value: adm.cancelled_by_class(class) as f64,
+            });
+        }
+        render(&self.tel, &counters)
+    }
+
+    /// Chrome trace-event / Perfetto JSON of the span rings (one track
+    /// per worker lane; compact single-line output).
+    pub fn trace_json(&self) -> String {
+        crate::telemetry::perfetto::render(&self.tel)
+    }
+
     fn complete(&mut self, slot_idx: usize) {
         let Some(slot) = self.batcher.free(slot_idx) else { return };
         self.states.clear_slot(slot_idx);
@@ -873,6 +1147,17 @@ impl ChainRouter {
             let tpot_s = completed.duration_since(slot.first_token)
                 .as_secs_f64() / (ntok - 1) as f64;
             self.batcher.admission.observe_tpot(tpot_s);
+            if self.tel.enabled() {
+                let us = (tpot_s * 1e6) as u64;
+                self.tel.tpot_us.record(us);
+                self.tel.class_hists(slot.class).tpot_us.record(us);
+            }
+        }
+        if self.tel.enabled() {
+            let tick = self.steps;
+            self.tel.push(0, tick, slot.req.id, EventKind::Finish {
+                eos: slot.finished_by_eos,
+            });
         }
         self.finished.push(Finished {
             id: slot.req.id,

@@ -40,6 +40,13 @@ pub trait StepSink {
     /// `SimilarityTracker::observe_acceptance`).
     fn observe_acceptance(&mut self, proposer: &str, verifier: &str,
                           accepted: usize, window: usize);
+
+    /// Speculative writes discarded for one slot at one chain level
+    /// after verification (`depth` = drafted-but-uncommitted tokens).
+    /// Telemetry-only; sinks that don't trace may ignore it.
+    fn observe_rollback(&mut self, _slot: usize, _level: usize,
+                        _depth: usize) {
+    }
 }
 
 /// The admission path (prefill/insert) records call costs straight into
@@ -118,6 +125,11 @@ enum Event {
         accepted: u32,
         window: u32,
     },
+    Rollback {
+        slot: u16,
+        level: u16,
+        depth: u32,
+    },
 }
 
 /// The per-group event log. One per gid, owned by the router, handed
@@ -132,6 +144,12 @@ pub struct GroupRecorder {
     dtvs: Vec<f64>,
     /// Wall-clock of the group's last step, measured inside the worker.
     pub wall: Duration,
+    /// Worker lane that ran the group's last step (telemetry track id),
+    /// stamped by the execute closure alongside `wall`.
+    pub lane: usize,
+    /// Execute start of the group's last step, µs since the telemetry
+    /// epoch, stamped by the execute closure alongside `wall`.
+    pub start_us: u64,
 }
 
 impl GroupRecorder {
@@ -141,6 +159,8 @@ impl GroupRecorder {
             events: Vec::new(),
             dtvs: Vec::new(),
             wall: Duration::ZERO,
+            lane: 0,
+            start_us: 0,
         }
     }
 
@@ -180,10 +200,50 @@ impl GroupRecorder {
                         &self.names[verifier as usize],
                         accepted as usize, window as usize);
                 }
+                // telemetry-only: exported via for_each_rollback before
+                // the drain, nothing to fold into the trackers
+                Event::Rollback { .. } => {}
             }
         }
         self.events.clear();
         self.dtvs.clear();
+    }
+
+    /// Visit recorded backend calls in log order. Telemetry span export:
+    /// called on the engine thread at gather, *before* `drain_into`
+    /// clears the log. Model ids are interned indices into the shared
+    /// name table (`Telemetry::model_name` resolves them).
+    pub fn for_each_call(
+        &self,
+        mut f: impl FnMut(u16, FnKind, u32, u32, Duration),
+    ) {
+        for ev in &self.events {
+            if let Event::Call { model, kind, batch, window, dur } = *ev {
+                f(model, kind, batch, window, dur);
+            }
+        }
+    }
+
+    /// Visit per-level acceptance outcomes `(proposer, verifier,
+    /// accepted, candidates)` in log order (pre-drain, engine thread).
+    pub fn for_each_acceptance(&self, mut f: impl FnMut(u16, u16, u32, u32)) {
+        for ev in &self.events {
+            if let Event::Acceptance { proposer, verifier, accepted, window } =
+                *ev
+            {
+                f(proposer, verifier, accepted, window);
+            }
+        }
+    }
+
+    /// Visit rollback observations `(slot, level, depth)` in log order
+    /// (pre-drain, engine thread).
+    pub fn for_each_rollback(&self, mut f: impl FnMut(u16, u16, u32)) {
+        for ev in &self.events {
+            if let Event::Rollback { slot, level, depth } = *ev {
+                f(slot, level, depth);
+            }
+        }
     }
 }
 
@@ -225,6 +285,17 @@ impl StepSink for GroupRecorder {
             verifier,
             accepted: accepted as u32,
             window: window as u32,
+        });
+    }
+
+    fn observe_rollback(&mut self, slot: usize, level: usize, depth: usize) {
+        if depth == 0 {
+            return; // nothing was discarded; keep the log small
+        }
+        self.events.push(Event::Rollback {
+            slot: slot as u16,
+            level: level as u16,
+            depth: depth as u32,
         });
     }
 }
@@ -309,6 +380,33 @@ mod tests {
         let mut rec = GroupRecorder::new(names());
         rec.record_call_parts("nope", FnKind::Decode, 1, 0,
                               Duration::from_millis(1));
+    }
+
+    #[test]
+    fn rollbacks_feed_telemetry_but_not_the_trackers() {
+        let mut rec = GroupRecorder::new(names());
+        rec.record_call_parts("m0", FnKind::Draft, 2, 4,
+                              Duration::from_millis(3));
+        rec.observe_rollback(1, 0, 3);
+        rec.observe_rollback(0, 1, 0); // depth 0 is elided
+        rec.observe_acceptance("m0", "m2", 2, 4);
+
+        let mut calls = Vec::new();
+        rec.for_each_call(|m, k, b, w, d| calls.push((m, k, b, w, d)));
+        assert_eq!(calls, vec![(0, FnKind::Draft, 2, 4,
+                                Duration::from_millis(3))]);
+        let mut rolls = Vec::new();
+        rec.for_each_rollback(|s, l, d| rolls.push((s, l, d)));
+        assert_eq!(rolls, vec![(1, 0, 3)]);
+        let mut accs = Vec::new();
+        rec.for_each_acceptance(|p, v, a, w| accs.push((p, v, a, w)));
+        assert_eq!(accs, vec![(0, 2, 2, 4)]);
+
+        // draining folds calls/acceptances and clears rollbacks too
+        let mut prof = Profiler::new(0.2);
+        let mut sim = SimilarityTracker::new(0.2);
+        rec.drain_into(&mut prof, &mut sim);
+        assert!(rec.is_empty());
     }
 
     #[test]

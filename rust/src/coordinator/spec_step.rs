@@ -600,6 +600,9 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
             // base token (+ agreed prefix) become valid; the rest of the
             // speculative writes stay stale (mask=0, paper Fig. 3)
             st.mask.promote(b, 1 + match_len);
+            // telemetry: speculative writes this model discards for the
+            // slot (depth 0 is elided by the recorder)
+            ctx.rec.observe_rollback(b, li, wl - match_len);
         }
     }
 

@@ -21,10 +21,25 @@
 //! Task panics are caught on the executing thread and re-raised from
 //! `run`, keeping the pool (and its generation protocol) usable
 //! afterwards. The steady-state `run` path performs no heap allocation.
+use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+
+thread_local! {
+    /// Lane index of the current thread within its pool: spawned worker
+    /// `i` is lane `i + 1`; any thread that never joined a pool (the
+    /// `run()` caller / engine thread) is lane 0. Set once at worker
+    /// spawn, read by telemetry to attribute execute spans to tracks.
+    static LANE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Lane index of the current thread (0 = engine/caller thread).
+#[inline]
+pub fn current_lane() -> usize {
+    LANE.with(|l| l.get())
+}
 
 /// Type-erased view of one active batch: a pointer to the caller's
 /// `RunCtx<T, F>` plus the monomorphized trampoline that runs task `i`.
@@ -145,7 +160,10 @@ impl WorkerPool {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("specrouter-worker-{i}"))
-                    .spawn(move || worker_loop(&sh))
+                    .spawn(move || {
+                        LANE.with(|l| l.set(i + 1));
+                        worker_loop(&sh)
+                    })
                     .expect("spawning pool worker thread")
             })
             .collect();
@@ -292,6 +310,18 @@ mod tests {
         let mut tasks = vec![1u32, 2, 3];
         pool.run(&mut tasks, &|t: &mut u32| *t *= 10);
         assert_eq!(tasks, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn lane_ids_stay_in_range() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(current_lane(), 0, "caller thread is lane 0");
+        let mut tasks: Vec<usize> = vec![usize::MAX; 64];
+        pool.run(&mut tasks, &|t: &mut usize| {
+            *t = current_lane();
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        assert!(tasks.iter().all(|&l| l < pool.lanes()));
     }
 
     #[test]

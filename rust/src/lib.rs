@@ -26,6 +26,7 @@ pub mod rng;
 pub mod runtime;
 pub mod server;
 pub mod state;
+pub mod telemetry;
 pub mod workload;
 
 pub use config::EngineConfig;

@@ -18,17 +18,17 @@ pub struct Summary {
     pub goodput_tps: f64,
     pub req_throughput: f64,
     pub ttft_ms_mean: f64,
-    pub ttft_ms_p50: f64,
-    pub ttft_ms_p95: f64,
+    pub ttft_ms_p50: Option<f64>,
+    pub ttft_ms_p95: Option<f64>,
     pub tpot_ms_mean: f64,
-    pub tpot_ms_p50: f64,
-    pub tpot_ms_p95: f64,
-    pub latency_ms_p95: f64,
+    pub tpot_ms_p50: Option<f64>,
+    pub tpot_ms_p95: Option<f64>,
+    pub latency_ms_p95: Option<f64>,
     /// fraction of requests completing within the SLO threshold
     pub slo_attainment: f64,
     /// admission-queue delay (admitted - arrival) percentiles
-    pub queue_delay_ms_p50: f64,
-    pub queue_delay_ms_p95: f64,
+    pub queue_delay_ms_p50: Option<f64>,
+    pub queue_delay_ms_p95: Option<f64>,
     /// requests shed by admission (0 unless `summarize_with_shed`)
     pub shed: usize,
     /// per-SLO-class breakdown (classes present in the records)
@@ -45,11 +45,14 @@ pub struct ClassSummary {
     pub requests: usize,
     /// shed (rejected) requests in the class
     pub shed: usize,
+    /// requests cancelled mid-flight (engine-side count folded in via
+    /// [`Summary::apply_cancels`]; 0 otherwise)
+    pub cancelled: u64,
     /// fraction of (completed + shed) meeting the per-request target
     pub slo_attainment: f64,
-    pub latency_ms_p95: f64,
-    pub queue_delay_ms_p50: f64,
-    pub queue_delay_ms_p95: f64,
+    pub latency_ms_p95: Option<f64>,
+    pub queue_delay_ms_p50: Option<f64>,
+    pub queue_delay_ms_p95: Option<f64>,
 }
 
 impl Summary {
@@ -66,14 +69,54 @@ impl Summary {
     pub fn class_summary(&self, class: SloClass) -> Option<&ClassSummary> {
         self.per_class.iter().find(|c| c.class == class)
     }
+
+    /// Fold engine-side cancellation counts into the per-class rows.
+    /// Cancels produce neither a `Finished` nor a `ShedRecord`, so the
+    /// breakdown cannot see them on its own; a class with only cancels
+    /// gains a zeroed row so the count is never silently dropped.
+    pub fn apply_cancels(&mut self, counts: &[(SloClass, u64)]) {
+        for &(class, n) in counts {
+            if n == 0 {
+                continue;
+            }
+            if let Some(c) =
+                self.per_class.iter_mut().find(|c| c.class == class)
+            {
+                c.cancelled = n;
+            } else {
+                self.per_class.push(ClassSummary {
+                    class,
+                    requests: 0,
+                    shed: 0,
+                    cancelled: n,
+                    slo_attainment: 0.0,
+                    latency_ms_p95: None,
+                    queue_delay_ms_p50: None,
+                    queue_delay_ms_p95: None,
+                });
+                self.per_class.sort_by_key(|c| c.class);
+            }
+        }
+    }
 }
 
-pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+/// Nearest-rank percentile of a sorted sample; `None` when the sample is
+/// empty — an absent measurement must render as `n/a` downstream, never
+/// as a too-good-to-be-true 0.0.
+pub fn percentile(sorted: &[f64], p: f64) -> Option<f64> {
     if sorted.is_empty() {
-        return 0.0;
+        return None;
     }
     let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    Some(sorted[idx.min(sorted.len() - 1)])
+}
+
+/// 8-wide table cell for an optional metric: the value or `n/a`.
+fn cell(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:>8.1}"),
+        None => format!("{:>8}", "n/a"),
+    }
 }
 
 fn ms(a: Instant, b: Instant) -> f64 {
@@ -97,10 +140,10 @@ pub fn request_tpot_ms(f: &Finished) -> Option<f64> {
 fn empty_summary() -> Summary {
     Summary {
         requests: 0, tokens: 0, makespan_s: 0.0, goodput_tps: 0.0,
-        req_throughput: 0.0, ttft_ms_mean: 0.0, ttft_ms_p50: 0.0,
-        ttft_ms_p95: 0.0, tpot_ms_mean: 0.0, tpot_ms_p50: 0.0,
-        tpot_ms_p95: 0.0, latency_ms_p95: 0.0, slo_attainment: 0.0,
-        queue_delay_ms_p50: 0.0, queue_delay_ms_p95: 0.0, shed: 0,
+        req_throughput: 0.0, ttft_ms_mean: 0.0, ttft_ms_p50: None,
+        ttft_ms_p95: None, tpot_ms_mean: 0.0, tpot_ms_p50: None,
+        tpot_ms_p95: None, latency_ms_p95: None, slo_attainment: 0.0,
+        queue_delay_ms_p50: None, queue_delay_ms_p95: None, shed: 0,
         per_class: Vec::new(),
     }
 }
@@ -133,6 +176,7 @@ fn class_breakdown(finished: &[Finished], shed: &[ShedRecord])
             class,
             requests: fs.len(),
             shed: nshed,
+            cancelled: 0,
             slo_attainment: if total == 0 { 0.0 }
                 else { hits as f64 / total as f64 },
             latency_ms_p95: percentile(&lats, 0.95),
@@ -208,11 +252,11 @@ pub fn summarize_with_shed(finished: &[Finished], slo_ms: f64,
 pub fn row(label: &str, s: &Summary, eaf: Option<f64>) -> String {
     format!(
         "{label:<24} req={:<4} tok={:<6} goodput={:>8.2} t/s  \
-         req/s={:>6.3}  TTFT(ms) mean={:>8.1} p95={:>8.1}  \
-         TPOT(ms) mean={:>8.1} p95={:>8.1}  SLO={:>5.1}%{}{}",
+         req/s={:>6.3}  TTFT(ms) mean={:>8.1} p95={}  \
+         TPOT(ms) mean={:>8.1} p95={}  SLO={:>5.1}%{}{}",
         s.requests, s.tokens, s.goodput_tps, s.req_throughput,
-        s.ttft_ms_mean, s.ttft_ms_p95, s.tpot_ms_mean, s.tpot_ms_p95,
-        s.slo_attainment * 100.0,
+        s.ttft_ms_mean, cell(s.ttft_ms_p95), s.tpot_ms_mean,
+        cell(s.tpot_ms_p95), s.slo_attainment * 100.0,
         if s.shed > 0 { format!("  shed={}", s.shed) }
         else { String::new() },
         eaf.map(|e| format!("  EAF={e:>5.2}x")).unwrap_or_default())
@@ -248,10 +292,13 @@ pub fn class_rows_with_chains(s: &Summary, chains: &[ClassChainRow])
                               -> Vec<String> {
     s.per_class.iter().map(|c| {
         let mut row = format!(
-            "  class={:<12} req={:<4} shed={:<4} SLO={:>5.1}%  \
-             queue-delay(ms) p50={:>8.1} p95={:>8.1}  lat p95={:>8.1}",
-            c.class.name(), c.requests, c.shed, c.slo_attainment * 100.0,
-            c.queue_delay_ms_p50, c.queue_delay_ms_p95, c.latency_ms_p95);
+            "  class={:<12} req={:<4} shed={:<4} cancel={:<4} \
+             SLO={:>5.1}%  \
+             queue-delay(ms) p50={} p95={}  lat p95={}",
+            c.class.name(), c.requests, c.shed, c.cancelled,
+            c.slo_attainment * 100.0,
+            cell(c.queue_delay_ms_p50), cell(c.queue_delay_ms_p95),
+            cell(c.latency_ms_p95));
         if let Some(dom) = chains.iter()
             .filter(|r| r.class == c.class)
             .max_by_key(|r| r.steps) {
@@ -310,13 +357,7 @@ pub fn stream_class_rows(records: &[StreamRecord]) -> Vec<String> {
     // an empty percentile set renders n/a, not 0.0 — a class whose
     // streams all had <2 frames has no TPOT, which must not read as a
     // perfect one
-    let cell = |xs: &[f64], p: f64| -> String {
-        if xs.is_empty() {
-            format!("{:>8}", "n/a")
-        } else {
-            format!("{:>8.1}", percentile(xs, p))
-        }
-    };
+    let pcell = |xs: &[f64], p: f64| -> String { cell(percentile(xs, p)) };
     by_class.into_iter().map(|(class, rs)| {
         let ttfts = sorted(rs.iter().copied().filter_map(stream_ttft_ms)
             .collect());
@@ -327,8 +368,8 @@ pub fn stream_class_rows(records: &[StreamRecord]) -> Vec<String> {
             "  class={:<12} streams={:<4} frames={:<6} \
              TTFT(ms) p50={} p95={}  TPOT(ms) p50={} p95={}",
             class.name(), rs.len(), frames,
-            cell(&ttfts, 0.50), cell(&ttfts, 0.95),
-            cell(&tpots, 0.50), cell(&tpots, 0.95))
+            pcell(&ttfts, 0.50), pcell(&ttfts, 0.95),
+            pcell(&tpots, 0.50), pcell(&tpots, 0.95))
     }).collect()
 }
 
@@ -375,10 +416,12 @@ mod tests {
     #[test]
     fn percentile_basics() {
         let v = [1.0, 2.0, 3.0, 4.0, 5.0];
-        assert_eq!(percentile(&v, 0.0), 1.0);
-        assert_eq!(percentile(&v, 0.5), 3.0);
-        assert_eq!(percentile(&v, 1.0), 5.0);
-        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&v, 0.0), Some(1.0));
+        assert_eq!(percentile(&v, 0.5), Some(3.0));
+        assert_eq!(percentile(&v, 1.0), Some(5.0));
+        // an empty sample has no percentile, not a fake 0.0
+        assert_eq!(percentile(&[], 0.5), None);
+        assert_eq!(cell(None), "     n/a");
     }
 
     #[test]
@@ -400,8 +443,8 @@ mod tests {
         // SLO 950ms: first request took 1000ms (miss), second 800ms (hit)
         assert!((s.slo_attainment - 0.5).abs() < 1e-9);
         // queue delay = ttft/2 per fixture: {50, 25} -> p50 between them
-        assert!(s.queue_delay_ms_p50 >= 25.0 - 1e-9
-                && s.queue_delay_ms_p50 <= 50.0 + 1e-9);
+        let qd50 = s.queue_delay_ms_p50.unwrap();
+        assert!((25.0 - 1e-9..=50.0 + 1e-9).contains(&qd50));
         // EAF
         assert!((s.eaf_vs(412.5) - 2.0).abs() < 0.01);
     }
@@ -412,6 +455,9 @@ mod tests {
         let fs = vec![fin(t, 10, 10, 1)];
         let s = summarize(&fs, 1e9);
         assert_eq!(s.tpot_ms_mean, 0.0);
+        // no TPOT samples at all: the percentiles are absent, not 0.0
+        assert!(s.tpot_ms_p50.is_none());
+        assert!(s.tpot_ms_p95.is_none());
         assert!(request_tpot_ms(&fs[0]).is_none());
     }
 
@@ -420,7 +466,36 @@ mod tests {
         let s = summarize(&[], 100.0);
         assert_eq!(s.requests, 0);
         assert_eq!(s.goodput_tps, 0.0);
+        assert!(s.ttft_ms_p95.is_none());
         assert!(s.per_class.is_empty());
+        // and renders without panicking, with n/a cells
+        assert!(row("empty", &s, None).contains("n/a"));
+    }
+
+    #[test]
+    fn cancels_fold_into_class_rows() {
+        let t = Instant::now();
+        let fs = vec![
+            fin_class(t, 50, 800, 4, SloClass::Interactive, 1_000.0),
+        ];
+        let mut s = summarize(&fs, 1e9);
+        s.apply_cancels(&[
+            (SloClass::Interactive, 2),
+            (SloClass::Batch, 1),
+            (SloClass::Standard, 0), // zero counts add no row
+        ]);
+        let i = s.class_summary(SloClass::Interactive).unwrap();
+        assert_eq!(i.cancelled, 2);
+        // a class with only cancels gains a zeroed row...
+        let b = s.class_summary(SloClass::Batch).unwrap();
+        assert_eq!((b.requests, b.shed, b.cancelled), (0, 0, 1));
+        assert!(b.latency_ms_p95.is_none());
+        // ...a zero count does not
+        assert!(s.class_summary(SloClass::Standard).is_none());
+        let rows = class_rows(&s);
+        assert!(rows.iter().any(|r| r.contains("cancel=2")), "{rows:?}");
+        assert!(rows.iter().any(|r| r.contains("lat p95=     n/a")),
+                "{rows:?}");
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //! request the admission controller sheds gets a structured `rejected`
 //! response instead of a hang — clients can retry elsewhere.
 //!
+//! Control queries share the same wire (DESIGN.md §12):
+//!   {"stats": true}          -> one-line JSON telemetry/counter snapshot
+//!   {"stats": "prometheus"}  -> {"prom": "<exposition text>"}
+//!   {"trace": true}          -> Chrome trace-event JSON of the span rings
+//! The engine answers between ticks, so a scrape never interleaves with
+//! a partially applied tick.
+//!
 //! The engine thread multiplexes: it drains the submission channel, runs
 //! `tick()`, pushes newly committed tokens to per-request stream sinks,
 //! and routes finished/shed records back to per-request responders.
@@ -62,6 +69,14 @@ pub enum EngineMsg {
     /// Client withdrew request `id` (disconnect): free its slot / dequeue
     /// it and record a Cancelled admission outcome.
     Cancel(u64),
+    /// Control query: telemetry/counter snapshot, as one pre-serialized
+    /// JSON line (`prom` wraps the Prometheus text in `{"prom": ...}`).
+    Stats {
+        prom: bool,
+        reply: mpsc::Sender<String>,
+    },
+    /// Control query: Chrome trace-event JSON of the span rings.
+    Trace(mpsc::Sender<String>),
     Shutdown,
 }
 
@@ -196,6 +211,22 @@ fn handle_msg(router: &mut ChainRouter,
             waiters.remove(&id);
             false
         }
+        EngineMsg::Stats { prom, reply } => {
+            let body = if prom {
+                // the exposition text is multi-line; wrap it so it stays
+                // one JSON-lines frame on the wire
+                json::obj(vec![("prom", json::s(&router.prom_text()))])
+                    .to_string()
+            } else {
+                router.stats_json().to_string()
+            };
+            let _ = reply.send(body);
+            false
+        }
+        EngineMsg::Trace(reply) => {
+            let _ = reply.send(router.trace_json());
+            false
+        }
         EngineMsg::Shutdown => true,
     }
 }
@@ -204,6 +235,7 @@ fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
                -> Result<()> {
     let mut waiters: HashMap<u64, Waiter> = HashMap::new();
     let mut cancels: Vec<u64> = Vec::new();
+    let mut emits: Vec<(u64, usize)> = Vec::new();
     loop {
         // 1. drain submissions (block briefly when idle to avoid spinning)
         let idle = router.batcher.is_idle();
@@ -239,11 +271,13 @@ fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
         //     next queued arrival (can't mutate the router inside the
         //     slot iteration, hence the two-phase cancel buffer).
         cancels.clear();
+        emits.clear();
         for slot in router.batcher.slots.iter().flatten() {
             let id = slot.req.id;
             if let Some(Waiter::Stream { sink, emitted }) =
                 waiters.get_mut(&id) {
                 let gen = slot.generated();
+                let before = *emitted;
                 while *emitted < gen.len() {
                     let ev = StreamEvent::Token {
                         id,
@@ -256,11 +290,19 @@ fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
                     }
                     *emitted += 1;
                 }
+                if *emitted > before {
+                    emits.push((id, *emitted - before));
+                }
             }
         }
         for id in cancels.drain(..) {
             router.cancel(id);
             waiters.remove(&id);
+        }
+        // emission spans land in the telemetry ring after the slot
+        // iteration (can't mutate the router while borrowing its slots)
+        for (id, n) in emits.drain(..) {
+            router.record_emit(id, n);
         }
         // 3b. deliver completions and sheds — draining (not indexing) so
         //     a long-running server does not accumulate every record ever
@@ -276,6 +318,7 @@ fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
                     // past the watermark, then the terminal record
                     let id = f.id;
                     let mut live = true;
+                    let mut sent = 0usize;
                     for (i, &t) in f.tokens.iter().enumerate()
                         .skip(emitted) {
                         if sink.send(StreamEvent::Token {
@@ -283,6 +326,10 @@ fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
                             live = false;
                             break;
                         }
+                        sent += 1;
+                    }
+                    if sent > 0 {
+                        router.record_emit(id, sent);
                     }
                     if live {
                         let _ = sink.send(StreamEvent::Done(f));
@@ -382,13 +429,20 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request(&line) {
+        match parse_line(&line) {
             // a malformed request — including a malformed `stream:true`
             // one — gets a single structured error line; the connection
             // stays usable for the next request
             Err(e) => writeln!(writer, "{}", error_to_json(&e))?,
-            Ok((req, false)) => buffered_reply(&tx, req, &mut writer)?,
-            Ok((req, true)) => stream_reply(&tx, req, &mut writer)?,
+            Ok(ParsedLine::Generate(req, false)) =>
+                buffered_reply(&tx, req, &mut writer)?,
+            Ok(ParsedLine::Generate(req, true)) =>
+                stream_reply(&tx, req, &mut writer)?,
+            Ok(ParsedLine::Stats { prom }) => control_reply(
+                &tx, &mut writer,
+                |reply| EngineMsg::Stats { prom, reply })?,
+            Ok(ParsedLine::Trace) =>
+                control_reply(&tx, &mut writer, EngineMsg::Trace)?,
         }
     }
     log::debug!("connection {peer:?} closed");
@@ -543,9 +597,68 @@ fn stream_reply(tx: &mpsc::Sender<EngineMsg>, req: Request,
     }
 }
 
-/// Parse one request line into a [`Request`] plus its `stream` flag.
-fn parse_request(line: &str) -> Result<(Request, bool)> {
+/// Drive one control query (stats/trace): the engine answers between
+/// ticks with a single pre-serialized JSON line.
+fn control_reply(tx: &mpsc::Sender<EngineMsg>, writer: &mut TcpStream,
+                 make: impl FnOnce(mpsc::Sender<String>) -> EngineMsg)
+                 -> Result<()> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    if tx.send(make(reply_tx)).is_err() {
+        let e = anyhow::anyhow!("engine thread gone");
+        let _ = writeln!(writer, "{}", error_to_json(&e));
+        return Err(e);
+    }
+    match reply_rx.recv() {
+        Ok(body) => {
+            writeln!(writer, "{body}")?;
+            Ok(())
+        }
+        Err(_) => {
+            let e = anyhow::anyhow!("engine dropped the query");
+            let _ = writeln!(writer, "{}", error_to_json(&e));
+            Err(e)
+        }
+    }
+}
+
+/// One parsed protocol line: a generation request or a control query.
+enum ParsedLine {
+    /// A generation request plus its `stream` flag.
+    Generate(Request, bool),
+    /// `{"stats": true}` / `{"stats": "prometheus"}`.
+    Stats { prom: bool },
+    /// `{"trace": true}`.
+    Trace,
+}
+
+/// Dispatch one protocol line: control queries are keyed by their
+/// `stats`/`trace` field (they carry no `prompt`); everything else is
+/// parsed as a generation request.
+fn parse_line(line: &str) -> Result<ParsedLine> {
     let v = json::parse(line).context("bad request JSON")?;
+    if let Some(s) = v.opt("stats") {
+        let prom = match s {
+            Value::Bool(true) => false,
+            Value::Str(f) if f == "json" => false,
+            Value::Str(f) if f == "prometheus" => true,
+            other => bail!(
+                "stats must be true, \"json\" or \"prometheus\", \
+                 got {other}"),
+        };
+        return Ok(ParsedLine::Stats { prom });
+    }
+    if let Some(t) = v.opt("trace") {
+        if !matches!(t, Value::Bool(true)) {
+            bail!("trace must be true, got {t}");
+        }
+        return Ok(ParsedLine::Trace);
+    }
+    let (req, stream) = parse_request(&v)?;
+    Ok(ParsedLine::Generate(req, stream))
+}
+
+/// Parse one request object into a [`Request`] plus its `stream` flag.
+fn parse_request(v: &Value) -> Result<(Request, bool)> {
     let prompt: Vec<i32> = v.get("prompt")?.as_arr()?
         .iter()
         .map(|t| Ok(t.as_f64()? as i32))
@@ -726,4 +839,32 @@ pub fn client_request_stream(addr: std::net::SocketAddr, dataset: &str,
             return Ok(frames);
         }
     }
+}
+
+/// One control query over a fresh connection: send `line`, parse the
+/// single JSON reply.
+fn control_query(addr: std::net::SocketAddr, line: &str) -> Result<Value> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{line}")?;
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    json::parse(reply.trim())
+}
+
+/// Fetch the engine's telemetry/counter snapshot (`{"stats": true}`).
+pub fn client_stats(addr: std::net::SocketAddr) -> Result<Value> {
+    control_query(addr, "{\"stats\": true}")
+}
+
+/// Fetch the Prometheus exposition text (`{"stats": "prometheus"}`);
+/// the multi-line text rides the JSON-lines wire inside `{"prom": ...}`.
+pub fn client_stats_prom(addr: std::net::SocketAddr) -> Result<String> {
+    let v = control_query(addr, "{\"stats\": \"prometheus\"}")?;
+    Ok(v.get("prom")?.as_str()?.to_string())
+}
+
+/// Fetch the Chrome trace-event JSON of the span rings (`{"trace": true}`).
+pub fn client_trace(addr: std::net::SocketAddr) -> Result<Value> {
+    control_query(addr, "{\"trace\": true}")
 }

@@ -1,0 +1,226 @@
+//! Fixed-bucket log-linear histogram (HDR-style).
+//!
+//! The bucket layout is constant: values below [`SUB`] land in unit-wide
+//! buckets (exact), and every octave above that is split into [`SUB`]
+//! equal sub-buckets, so the relative quantization error is bounded by
+//! `1/SUB` (~3.1%). With 1024 buckets total the top bucket starts at
+//! `63 << 30` (~6.8e10), which comfortably covers microsecond-scale
+//! latencies up to ~19 hours; larger values clamp into the last bucket.
+//!
+//! All mutation goes through [`Hist::record`], which takes `&self` and
+//! uses relaxed atomic increments, so worker lanes can record without
+//! locks and without allocating (DESIGN.md §12). Reads snapshot the
+//! bucket array first so quantiles are computed against a consistent
+//! total even while writers are active.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the sub-bucket count per octave.
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave; also the linear-region width.
+const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count: linear region + 31 octaves of `SUB` each.
+const N_BUCKETS: usize = 1024;
+/// Largest right-shift used by the index function; values whose
+/// magnitude would demand more clamp into the final octave.
+const MAX_SHIFT: u32 = (N_BUCKETS / SUB) as u32 - 2;
+
+/// Log-linear atomic histogram over `u64` samples (typically µs or
+/// token counts). Construction preallocates everything; recording is
+/// alloc-free and lock-free.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a sample. Exact below `SUB`; log-linear above.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        // v >= SUB, so the most significant bit is at least SUB_BITS.
+        let msb = 63 - v.leading_zeros();
+        let shift = (msb - SUB_BITS).min(MAX_SHIFT);
+        let sub = ((v >> shift) as usize).min(2 * SUB - 1) - SUB;
+        (shift as usize + 1) * SUB + sub
+    }
+
+    /// Smallest sample value that maps into bucket `idx`.
+    #[inline]
+    pub fn bucket_lower_bound(idx: usize) -> u64 {
+        if idx < SUB {
+            idx as u64
+        } else {
+            ((SUB + idx % SUB) as u64) << (idx / SUB - 1)
+        }
+    }
+
+    /// Largest sample value that maps into bucket `idx` (inclusive).
+    #[inline]
+    pub fn bucket_upper_bound(idx: usize) -> u64 {
+        if idx >= N_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            Self::bucket_lower_bound(idx + 1) - 1
+        }
+    }
+
+    /// Record one sample. `&self`, relaxed atomics, no allocation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Observed maximum (exact, not quantized). 0 when empty.
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        let n = self.count();
+        (n > 0).then(|| self.sum() as f64 / n as f64)
+    }
+
+    /// Lower bound of the bucket holding the sample at nearest-rank
+    /// `round((n-1) * q)` — the same convention as
+    /// [`crate::metrics::percentile`], so a sorted-Vec oracle and this
+    /// histogram always agree up to bucket width. `None` when empty.
+    pub fn value_at_quantile(&self, q: f64) -> Option<u64> {
+        let mut counts = [0u64; N_BUCKETS];
+        let mut total = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            counts[i] = c;
+            total += c;
+        }
+        if total == 0 {
+            return None;
+        }
+        let rank = ((total - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Some(Self::bucket_lower_bound(i));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..SUB as u64 {
+            let idx = Hist::bucket_index(v);
+            assert_eq!(idx as u64, v);
+            assert_eq!(Hist::bucket_lower_bound(idx), v);
+            assert_eq!(Hist::bucket_upper_bound(idx), v);
+        }
+    }
+
+    #[test]
+    fn bounds_bracket_every_value() {
+        let probes: Vec<u64> = (0..60)
+            .flat_map(|e| {
+                let base = 1u64 << e.min(63);
+                [base.saturating_sub(1), base, base + 1, base * 3 / 2]
+            })
+            .chain([u64::MAX, u64::MAX / 2, 12345, 999_999_999])
+            .collect();
+        for &v in &probes {
+            let idx = Hist::bucket_index(v);
+            assert!(idx < N_BUCKETS, "idx {idx} out of range for {v}");
+            let lb = Hist::bucket_lower_bound(idx);
+            let ub = Hist::bucket_upper_bound(idx);
+            assert!(lb <= v && v <= ub, "v={v} not in [{lb},{ub}] (idx {idx})");
+        }
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_contiguous() {
+        for idx in 0..N_BUCKETS - 1 {
+            let ub = Hist::bucket_upper_bound(idx);
+            let next_lb = Hist::bucket_lower_bound(idx + 1);
+            assert_eq!(ub + 1, next_lb, "gap after bucket {idx}");
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // Above the linear region each bucket spans lb/SUB values.
+        for idx in SUB..N_BUCKETS - 1 {
+            let lb = Hist::bucket_lower_bound(idx);
+            let width = Hist::bucket_upper_bound(idx) - lb + 1;
+            assert!(
+                width as f64 / lb as f64 <= 1.0 / SUB as f64 + 1e-12,
+                "bucket {idx} too wide: lb={lb} width={width}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_and_stats() {
+        let h = Hist::new();
+        assert_eq!(h.value_at_quantile(0.5), None);
+        assert_eq!(h.mean(), None);
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 5050);
+        assert_eq!(h.max(), 100);
+        // Values <= 100 sit within one bucket width of the exact answer.
+        let p50 = h.value_at_quantile(0.5).unwrap();
+        assert!((48..=52).contains(&p50), "p50={p50}");
+        assert_eq!(h.value_at_quantile(0.0), Some(1));
+        let p100 = h.value_at_quantile(1.0).unwrap();
+        assert!(Hist::bucket_upper_bound(Hist::bucket_index(p100)) >= 100);
+    }
+
+    #[test]
+    fn giant_values_clamp_to_last_bucket() {
+        assert_eq!(Hist::bucket_index(u64::MAX), N_BUCKETS - 1);
+        let h = Hist::new();
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(
+            h.value_at_quantile(0.5),
+            Some(Hist::bucket_lower_bound(N_BUCKETS - 1))
+        );
+    }
+}

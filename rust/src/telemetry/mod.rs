@@ -1,0 +1,322 @@
+//! Dependency-free tracing + metrics subsystem (DESIGN.md §12).
+//!
+//! Three pieces, all preallocated at engine start and alloc-free in the
+//! steady state:
+//!
+//! * [`span::SpanRing`] — per-lane ring buffers of typed
+//!   [`span::SpanEvent`]s keyed by request id and tick (admission,
+//!   queue dwell, group assignment, draft/verify calls, rollbacks,
+//!   cache fixes, commits, stream emissions, tick phases).
+//! * [`hist::Hist`] — log-linear atomic histograms replacing the
+//!   sort-the-Vec percentile path for the *live* serving metrics
+//!   (TTFT/TPOT/queue-delay/acceptance-length/rollback-depth); the
+//!   offline `metrics::Summary` keeps exact sorted percentiles.
+//! * Exposition — a JSON snapshot ([`Telemetry::snapshot`]), Prometheus
+//!   text ([`prom::render`]) and a Chrome trace-event / Perfetto JSON
+//!   exporter ([`perfetto::render`]) that reconstructs the
+//!   plan/execute/gather tick as one track per worker lane.
+//!
+//! Policy: telemetry must stay zero-alloc per tick and cost ≤ 2% of
+//! tick time (gated by `bench_hotpath` + `perf_gate` via the
+//! `telemetry_overhead_ratio` baseline).
+pub mod hist;
+pub mod perfetto;
+pub mod prom;
+pub mod span;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::admission::SloClass;
+use crate::json::{self, Value};
+
+pub use hist::Hist;
+pub use span::{AdmitOutcome, EventKind, SpanEvent, SpanRing, TickPhase,
+               NO_GID, NO_REQ};
+
+/// Default per-lane ring capacity (events).
+pub const DEFAULT_RING_CAP: usize = 4096;
+
+/// TTFT/TPOT/queue-delay histograms for one SLO class (µs samples).
+#[derive(Debug)]
+pub struct ClassHists {
+    pub ttft_us: Hist,
+    pub tpot_us: Hist,
+    pub queue_delay_us: Hist,
+}
+
+impl ClassHists {
+    fn new() -> Self {
+        ClassHists {
+            ttft_us: Hist::new(),
+            tpot_us: Hist::new(),
+            queue_delay_us: Hist::new(),
+        }
+    }
+}
+
+/// The telemetry registry owned by `ChainRouter`: one ring per worker
+/// lane plus the fixed histogram set. Rings are written only by the
+/// engine thread; histograms are `&self`-atomic and may be recorded
+/// from any lane.
+#[derive(Debug)]
+pub struct Telemetry {
+    enabled: bool,
+    epoch: Instant,
+    model_names: Arc<Vec<String>>,
+    rings: Vec<SpanRing>,
+    pub ttft_us: Hist,
+    pub tpot_us: Hist,
+    pub queue_delay_us: Hist,
+    pub accept_len: Hist,
+    pub rollback_depth: Hist,
+    pub tick_us: Hist,
+    per_class: [ClassHists; SloClass::ALL.len()],
+    /// Per-(group,chain) acceptance-length histograms. Labels reuse the
+    /// interned strings from the router's group/chain label caches; an
+    /// entry is allocated once per label pair, never per tick.
+    group_accept: Vec<(String, String, Hist)>,
+}
+
+impl Telemetry {
+    pub fn new(
+        enabled: bool,
+        lanes: usize,
+        ring_cap: usize,
+        model_names: Arc<Vec<String>>,
+    ) -> Self {
+        let lanes = lanes.max(1);
+        Telemetry {
+            enabled,
+            epoch: Instant::now(),
+            model_names,
+            rings: (0..lanes).map(|_| SpanRing::new(ring_cap)).collect(),
+            ttft_us: Hist::new(),
+            tpot_us: Hist::new(),
+            queue_delay_us: Hist::new(),
+            accept_len: Hist::new(),
+            rollback_depth: Hist::new(),
+            tick_us: Hist::new(),
+            per_class: std::array::from_fn(|_| ClassHists::new()),
+            group_accept: Vec::new(),
+        }
+    }
+
+    /// A disabled registry with minimal footprint.
+    pub fn disabled() -> Self {
+        Self::new(false, 1, 1, Arc::new(Vec::new()))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// µs since the registry epoch.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// µs between the epoch and an `Instant` taken after construction.
+    #[inline]
+    pub fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Append an event to a lane's ring, stamped with the current
+    /// engine timestamp. No-op when disabled; never allocates.
+    #[inline]
+    pub fn push(&mut self, lane: usize, tick: u64, req: u64, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let ts_us = self.now_us();
+        let lane = lane.min(self.rings.len() - 1);
+        self.rings[lane].push(SpanEvent { ts_us, tick, req, kind });
+    }
+
+    pub fn rings(&self) -> &[SpanRing] {
+        &self.rings
+    }
+
+    /// Total events overwritten across all lane rings (exact).
+    pub fn dropped_events(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Total events currently retained across all lane rings.
+    pub fn ring_events(&self) -> usize {
+        self.rings.iter().map(|r| r.len()).sum()
+    }
+
+    /// Resolve an interned model index from `GroupRecorder` to a name.
+    pub fn model_name(&self, idx: u16) -> &str {
+        self.model_names
+            .get(idx as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("?")
+    }
+
+    pub fn class_hists(&self, class: SloClass) -> &ClassHists {
+        let i = SloClass::ALL.iter().position(|c| *c == class).unwrap_or(0);
+        &self.per_class[i]
+    }
+
+    /// Record an acceptance length against the global histogram and the
+    /// per-(group,chain) labeled one. Allocates only on the first
+    /// sighting of a label pair.
+    pub fn record_accept(&mut self, group: &str, chain: &str, n: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.accept_len.record(n);
+        if let Some((_, _, h)) = self
+            .group_accept
+            .iter()
+            .find(|(g, c, _)| g == group && c == chain)
+        {
+            h.record(n);
+            return;
+        }
+        let h = Hist::new();
+        h.record(n);
+        self.group_accept.push((group.to_string(), chain.to_string(), h));
+    }
+
+    /// Visit the per-(group,chain) acceptance histograms.
+    pub fn group_accept_hists(
+        &self,
+    ) -> impl Iterator<Item = (&str, &str, &Hist)> {
+        self.group_accept
+            .iter()
+            .map(|(g, c, h)| (g.as_str(), c.as_str(), h))
+    }
+
+    /// JSON snapshot of every histogram plus the drop counter. The
+    /// router merges its own admission/queue counters on top of this to
+    /// form the server `stats` reply.
+    pub fn snapshot(&self) -> Value {
+        let per_class: Vec<Value> = SloClass::ALL
+            .iter()
+            .map(|&class| {
+                let ch = self.class_hists(class);
+                json::obj(vec![
+                    ("class", json::s(class.name())),
+                    ("ttft_ms", hist_json(&ch.ttft_us, 1000.0)),
+                    ("tpot_ms", hist_json(&ch.tpot_us, 1000.0)),
+                    ("queue_delay_ms", hist_json(&ch.queue_delay_us, 1000.0)),
+                ])
+            })
+            .collect();
+        let groups: Vec<Value> = self
+            .group_accept_hists()
+            .map(|(g, c, h)| {
+                json::obj(vec![
+                    ("group", json::s(g)),
+                    ("chain", json::s(c)),
+                    ("accept_len", hist_json(h, 1.0)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("telemetry_enabled", Value::Bool(self.enabled)),
+            ("telemetry_dropped_events",
+             json::num(self.dropped_events() as f64)),
+            ("ring_events", json::num(self.ring_events() as f64)),
+            ("hist", json::obj(vec![
+                ("ttft_ms", hist_json(&self.ttft_us, 1000.0)),
+                ("tpot_ms", hist_json(&self.tpot_us, 1000.0)),
+                ("queue_delay_ms", hist_json(&self.queue_delay_us, 1000.0)),
+                ("accept_len", hist_json(&self.accept_len, 1.0)),
+                ("rollback_depth", hist_json(&self.rollback_depth, 1.0)),
+                ("tick_ms", hist_json(&self.tick_us, 1000.0)),
+            ])),
+            ("per_class", Value::Arr(per_class)),
+            ("groups", Value::Arr(groups)),
+        ])
+    }
+}
+
+/// Render one histogram as `{count, mean, p50, p95, p99, max}`,
+/// dividing values by `div` (1000.0 turns µs samples into ms).
+/// Quantile fields are `null` when the histogram is empty.
+pub fn hist_json(h: &Hist, div: f64) -> Value {
+    let q = |p: f64| match h.value_at_quantile(p) {
+        Some(v) => json::num(v as f64 / div),
+        None => Value::Null,
+    };
+    json::obj(vec![
+        ("count", json::num(h.count() as f64)),
+        ("mean", match h.mean() {
+            Some(m) => json::num(m / div),
+            None => Value::Null,
+        }),
+        ("p50", q(0.5)),
+        ("p95", q(0.95)),
+        ("p99", q(0.99)),
+        ("max", if h.count() == 0 {
+            Value::Null
+        } else {
+            json::num(h.max() as f64 / div)
+        }),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_ignores_events() {
+        let mut t = Telemetry::disabled();
+        t.push(0, 1, 2, EventKind::Commit { tokens: 3 });
+        assert_eq!(t.ring_events(), 0);
+        t.record_accept("g", "c", 4);
+        assert_eq!(t.accept_len.count(), 0);
+    }
+
+    #[test]
+    fn labeled_accept_hists_dedupe() {
+        let mut t =
+            Telemetry::new(true, 2, 8, Arc::new(vec!["m0".to_string()]));
+        t.record_accept("g0", "c0", 3);
+        t.record_accept("g0", "c0", 5);
+        t.record_accept("g1", "c0", 7);
+        assert_eq!(t.accept_len.count(), 3);
+        let labels: Vec<(String, String, u64)> = t
+            .group_accept_hists()
+            .map(|(g, c, h)| (g.to_string(), c.to_string(), h.count()))
+            .collect();
+        assert_eq!(labels.len(), 2);
+        assert_eq!(labels[0], ("g0".to_string(), "c0".to_string(), 2));
+        assert_eq!(labels[1], ("g1".to_string(), "c0".to_string(), 1));
+    }
+
+    #[test]
+    fn snapshot_has_required_keys() {
+        let mut t =
+            Telemetry::new(true, 2, 8, Arc::new(vec!["m0".to_string()]));
+        t.ttft_us.record(1500);
+        t.push(1, 0, 7, EventKind::Finish { eos: true });
+        let v = t.snapshot();
+        assert_eq!(
+            v.get("telemetry_dropped_events").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        assert_eq!(v.get("ring_events").unwrap().as_f64().unwrap(), 1.0);
+        let h = v.get("hist").unwrap();
+        let ttft = h.get("ttft_ms").unwrap();
+        assert_eq!(ttft.get("count").unwrap().as_f64().unwrap(), 1.0);
+        assert!(ttft.get("p50").unwrap().as_f64().is_ok());
+        let tpot = h.get("tpot_ms").unwrap();
+        assert_eq!(*tpot.get("p50").unwrap(), Value::Null);
+        assert_eq!(
+            v.get("per_class").unwrap().as_arr().unwrap().len(),
+            SloClass::ALL.len()
+        );
+    }
+}

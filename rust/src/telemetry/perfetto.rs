@@ -1,0 +1,217 @@
+//! Chrome trace-event / Perfetto JSON exporter.
+//!
+//! Reconstructs the plan/execute/gather tick (DESIGN.md §11) from the
+//! per-lane span rings as one track per worker lane: lane 0 (the engine
+//! thread) carries the whole-tick plan/execute/gather phase spans plus
+//! request-level instant events; lanes 1..N carry the per-group execute
+//! spans and the draft/verify backend calls that ran on that worker.
+//! The output opens directly in `ui.perfetto.dev` or `chrome://tracing`
+//! and makes lane imbalance — the thing the w4 time-ratio gate bounds —
+//! visually debuggable.
+use crate::json::{self, Value};
+
+use super::span::{EventKind, SpanEvent, NO_GID, NO_REQ};
+use super::Telemetry;
+
+const PID: f64 = 1.0;
+
+fn meta(name: &str, tid: usize, value: &str) -> Value {
+    json::obj(vec![
+        ("ph", json::s("M")),
+        ("name", json::s(name)),
+        ("pid", json::num(PID)),
+        ("tid", json::num(tid as f64)),
+        ("args", json::obj(vec![("name", json::s(value))])),
+    ])
+}
+
+fn complete(
+    name: &str,
+    cat: &str,
+    tid: usize,
+    ts_us: u64,
+    dur_us: u64,
+    args: Vec<(&str, Value)>,
+) -> Value {
+    json::obj(vec![
+        ("ph", json::s("X")),
+        ("name", json::s(name)),
+        ("cat", json::s(cat)),
+        ("pid", json::num(PID)),
+        ("tid", json::num(tid as f64)),
+        ("ts", json::num(ts_us as f64)),
+        ("dur", json::num(dur_us as f64)),
+        ("args", json::obj(args)),
+    ])
+}
+
+fn instant(
+    name: &str,
+    cat: &str,
+    tid: usize,
+    ts_us: u64,
+    args: Vec<(&str, Value)>,
+) -> Value {
+    json::obj(vec![
+        ("ph", json::s("i")),
+        ("s", json::s("t")),
+        ("name", json::s(name)),
+        ("cat", json::s(cat)),
+        ("pid", json::num(PID)),
+        ("tid", json::num(tid as f64)),
+        ("ts", json::num(ts_us as f64)),
+        ("args", json::obj(args)),
+    ])
+}
+
+fn common_args(ev: &SpanEvent) -> Vec<(&'static str, Value)> {
+    let mut args = vec![("tick", json::num(ev.tick as f64))];
+    if ev.req != NO_REQ {
+        args.push(("req", json::num(ev.req as f64)));
+    }
+    args
+}
+
+fn event_json(tel: &Telemetry, lane: usize, ev: &SpanEvent) -> Value {
+    let mut args = common_args(ev);
+    match ev.kind {
+        EventKind::Phase { phase, gid, start_us, end_us } => {
+            if gid != NO_GID {
+                args.push(("gid", json::num(gid as f64)));
+            }
+            complete(
+                phase.label(),
+                "tick",
+                lane,
+                start_us,
+                end_us.saturating_sub(start_us),
+                args,
+            )
+        }
+        EventKind::Call { model, kind, batch, window, start_us, dur_us } => {
+            args.push(("model", json::s(tel.model_name(model))));
+            args.push(("batch", json::num(batch as f64)));
+            args.push(("window", json::num(window as f64)));
+            complete(kind.name(), "call", lane, start_us, dur_us, args)
+        }
+        EventKind::CacheFix { fixed, start_us, dur_us } => {
+            args.push(("fixed", json::num(fixed as f64)));
+            complete("fix_caches", "maintenance", lane, start_us, dur_us,
+                     args)
+        }
+        EventKind::Admit { outcome } => {
+            args.push(("outcome", json::s(outcome.label())));
+            instant("admit", "request", lane, ev.ts_us, args)
+        }
+        EventKind::QueueDwell { us } => {
+            args.push(("dwell_us", json::num(us as f64)));
+            instant("queue_dwell", "request", lane, ev.ts_us, args)
+        }
+        EventKind::GroupAssign { gid } => {
+            args.push(("gid", json::num(gid as f64)));
+            instant("group_assign", "request", lane, ev.ts_us, args)
+        }
+        EventKind::Level { level, accepted, rejected } => {
+            args.push(("level", json::num(level as f64)));
+            args.push(("accepted", json::num(accepted as f64)));
+            args.push(("rejected", json::num(rejected as f64)));
+            instant("level", "spec", lane, ev.ts_us, args)
+        }
+        EventKind::Rollback { level, slot, depth } => {
+            args.push(("level", json::num(level as f64)));
+            args.push(("slot", json::num(slot as f64)));
+            args.push(("depth", json::num(depth as f64)));
+            instant("rollback", "spec", lane, ev.ts_us, args)
+        }
+        EventKind::Commit { tokens } => {
+            args.push(("tokens", json::num(tokens as f64)));
+            instant("commit", "request", lane, ev.ts_us, args)
+        }
+        EventKind::Emit { tokens } => {
+            args.push(("tokens", json::num(tokens as f64)));
+            instant("emit", "stream", lane, ev.ts_us, args)
+        }
+        EventKind::Finish { eos } => {
+            args.push(("eos", Value::Bool(eos)));
+            instant("finish", "request", lane, ev.ts_us, args)
+        }
+    }
+}
+
+/// Render the rings as a complete Chrome trace-event JSON document
+/// (object form, `traceEvents` array). Compact single-line output, so
+/// it can also travel over the JSON-lines TCP protocol.
+pub fn render(tel: &Telemetry) -> String {
+    let mut events: Vec<Value> = Vec::new();
+    events.push(meta("process_name", 0, "specrouter"));
+    for (lane, ring) in tel.rings().iter().enumerate() {
+        let name = if lane == 0 {
+            "engine (lane 0)".to_string()
+        } else {
+            format!("worker (lane {lane})")
+        };
+        events.push(meta("thread_name", lane, &name));
+        for ev in ring.iter() {
+            events.push(event_json(tel, lane, ev));
+        }
+    }
+    json::obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::span::TickPhase;
+    use super::*;
+
+    #[test]
+    fn render_is_valid_trace_json() {
+        let mut tel =
+            Telemetry::new(true, 2, 16, Arc::new(vec!["m0".to_string()]));
+        tel.push(0, 3, NO_REQ, EventKind::Phase {
+            phase: TickPhase::Plan,
+            gid: NO_GID,
+            start_us: 10,
+            end_us: 40,
+        });
+        tel.push(1, 3, NO_REQ, EventKind::Call {
+            model: 0,
+            kind: crate::runtime::FnKind::Draft,
+            batch: 4,
+            window: 4,
+            start_us: 45,
+            dur_us: 100,
+        });
+        tel.push(0, 3, 7, EventKind::Finish { eos: true });
+        let text = render(&tel);
+        let v = json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 2 thread_name + 3 events
+        assert_eq!(evs.len(), 6);
+        let phases: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(phases.contains(&"plan"));
+        assert!(phases.contains(&"draft"));
+        let call = evs
+            .iter()
+            .find(|e| {
+                e.opt("name").and_then(|n| n.as_str().ok()) == Some("draft")
+            })
+            .unwrap();
+        assert_eq!(call.get("tid").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(call.get("dur").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(
+            call.get("args").unwrap().get("model").unwrap()
+                .as_str().unwrap(),
+            "m0"
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! Prometheus text exposition of the telemetry registry.
+//!
+//! Histograms are rendered in summary style (`quantile` labels) because
+//! the log-linear buckets are an internal layout, not a useful scrape
+//! surface; counters supplied by the caller (admission/shed/cancel
+//! totals) are rendered verbatim. Time histograms are converted from µs
+//! samples to seconds per Prometheus base-unit conventions.
+use std::fmt::Write as _;
+
+use super::{Hist, Telemetry};
+
+/// One counter sample supplied by the caller (e.g. the router's
+/// admission totals), rendered as `name{labels} value`.
+pub struct Counter<'a> {
+    pub name: &'a str,
+    pub labels: &'a [(&'a str, &'a str)],
+    pub value: f64,
+}
+
+const QUANTILES: [f64; 3] = [0.5, 0.95, 0.99];
+
+fn fmt_labels(out: &mut String, labels: &[(&str, &str)]) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{}\"", v.replace('"', "\\\""));
+    }
+    out.push('}');
+}
+
+fn summary(
+    out: &mut String,
+    name: &str,
+    labels: &[(&str, &str)],
+    h: &Hist,
+    div: f64,
+) {
+    for &q in &QUANTILES {
+        if let Some(v) = h.value_at_quantile(q) {
+            out.push_str(name);
+            let qs = format!("{q}");
+            let mut pairs: Vec<(&str, &str)> = labels.to_vec();
+            pairs.push(("quantile", qs.as_str()));
+            fmt_labels(out, &pairs);
+            let _ = writeln!(out, " {}", v as f64 / div);
+        }
+    }
+    let _ = write!(out, "{name}_sum");
+    fmt_labels(out, labels);
+    let _ = writeln!(out, " {}", h.sum() as f64 / div);
+    let _ = write!(out, "{name}_count");
+    fmt_labels(out, labels);
+    let _ = writeln!(out, " {}", h.count());
+}
+
+fn typed(out: &mut String, name: &str, kind: &str) {
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render the full registry plus caller-supplied counters.
+pub fn render(tel: &Telemetry, counters: &[Counter]) -> String {
+    let mut out = String::new();
+
+    // Time summaries: global + per-class, µs → seconds.
+    let time_metrics: [(&str, &Hist); 4] = [
+        ("specrouter_ttft_seconds", &tel.ttft_us),
+        ("specrouter_tpot_seconds", &tel.tpot_us),
+        ("specrouter_queue_delay_seconds", &tel.queue_delay_us),
+        ("specrouter_tick_seconds", &tel.tick_us),
+    ];
+    for (name, h) in time_metrics {
+        typed(&mut out, name, "summary");
+        summary(&mut out, name, &[], h, 1e6);
+    }
+    for &class in &crate::admission::SloClass::ALL {
+        let ch = tel.class_hists(class);
+        let labels = [("class", class.name())];
+        for (name, h) in [
+            ("specrouter_ttft_seconds", &ch.ttft_us),
+            ("specrouter_tpot_seconds", &ch.tpot_us),
+            ("specrouter_queue_delay_seconds", &ch.queue_delay_us),
+        ] {
+            summary(&mut out, name, &labels, h, 1e6);
+        }
+    }
+
+    // Count-valued summaries.
+    typed(&mut out, "specrouter_accept_len", "summary");
+    summary(&mut out, "specrouter_accept_len", &[], &tel.accept_len, 1.0);
+    for (group, chain, h) in tel.group_accept_hists() {
+        summary(
+            &mut out,
+            "specrouter_accept_len",
+            &[("group", group), ("chain", chain)],
+            h,
+            1.0,
+        );
+    }
+    typed(&mut out, "specrouter_rollback_depth", "summary");
+    summary(&mut out, "specrouter_rollback_depth", &[],
+            &tel.rollback_depth, 1.0);
+
+    // Trace-overflow visibility.
+    typed(&mut out, "specrouter_telemetry_dropped_events_total", "counter");
+    let _ = writeln!(
+        out,
+        "specrouter_telemetry_dropped_events_total {}",
+        tel.dropped_events()
+    );
+
+    let mut seen: Vec<&str> = Vec::new();
+    for c in counters {
+        if !seen.contains(&c.name) {
+            typed(&mut out, c.name, "counter");
+            seen.push(c.name);
+        }
+        out.push_str(c.name);
+        fmt_labels(&mut out, c.labels);
+        let _ = writeln!(&mut out, " {}", c.value);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+
+    #[test]
+    fn renders_summaries_and_counters() {
+        let mut tel = Telemetry::new(true, 1, 8, Arc::new(Vec::new()));
+        for v in [1000u64, 2000, 4000] {
+            tel.ttft_us.record(v);
+        }
+        tel.record_accept("batch!g0", "SSD[m0>m2]w4", 3);
+        let text = render(
+            &tel,
+            &[Counter {
+                name: "specrouter_shed_total",
+                labels: &[("class", "interactive")],
+                value: 2.0,
+            }],
+        );
+        assert!(text.contains("# TYPE specrouter_ttft_seconds summary"));
+        assert!(text.contains("specrouter_ttft_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("specrouter_ttft_seconds_count 3"));
+        assert!(text.contains(
+            "specrouter_accept_len{group=\"batch!g0\",chain=\"SSD[m0>m2]w4\",quantile=\"0.5\"}"
+        ));
+        assert!(text
+            .contains("specrouter_shed_total{class=\"interactive\"} 2"));
+        assert!(text
+            .contains("specrouter_telemetry_dropped_events_total 0"));
+        // Empty histograms render counts but no quantile samples.
+        assert!(text.contains("specrouter_rollback_depth_count 0"));
+        assert!(!text.contains("specrouter_rollback_depth{"));
+    }
+}

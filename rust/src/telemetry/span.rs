@@ -1,0 +1,236 @@
+//! Typed span events and the fixed-capacity per-lane ring buffer.
+//!
+//! One [`SpanRing`] exists per worker lane (plus lane 0 for the engine
+//! thread). Rings are preallocated at engine start and overwrite the
+//! oldest event when full, incrementing an exact dropped-events counter,
+//! so steady-state recording never allocates (DESIGN.md §12). Only the
+//! engine thread writes to rings — worker-side observations travel
+//! through `GroupRecorder` and are copied in at gather, which keeps the
+//! ring single-writer and the tick deterministic (§11).
+use crate::runtime::FnKind;
+
+/// Phase of the parallel tick (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TickPhase {
+    Plan,
+    Execute,
+    Gather,
+}
+
+impl TickPhase {
+    pub fn label(self) -> &'static str {
+        match self {
+            TickPhase::Plan => "plan",
+            TickPhase::Execute => "execute",
+            TickPhase::Gather => "gather",
+        }
+    }
+}
+
+/// Outcome of an admission decision, flattened for Copy storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitOutcome {
+    Queued,
+    Downgraded,
+    ShedQueueFull,
+    ShedDoomed,
+    Cancelled,
+}
+
+impl AdmitOutcome {
+    pub fn label(self) -> &'static str {
+        match self {
+            AdmitOutcome::Queued => "queued",
+            AdmitOutcome::Downgraded => "downgraded",
+            AdmitOutcome::ShedQueueFull => "shed_queue_full",
+            AdmitOutcome::ShedDoomed => "shed_doomed",
+            AdmitOutcome::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One typed event. All variants are `Copy` and reference models by the
+/// interned index from `GroupRecorder` (resolved to names only at
+/// exposition time). Durations and timestamps are µs since the
+/// [`super::Telemetry`] epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Admission decision for a request.
+    Admit { outcome: AdmitOutcome },
+    /// Queue dwell time, recorded when a request leaves the queue.
+    QueueDwell { us: u64 },
+    /// Slot → group assignment made by the plan phase.
+    GroupAssign { gid: u16 },
+    /// One backend call inside a group's spec step (draft/verify/...).
+    Call {
+        model: u16,
+        kind: FnKind,
+        batch: u16,
+        window: u16,
+        start_us: u64,
+        dur_us: u64,
+    },
+    /// Per-level verification outcome, aggregated over the group's
+    /// slots (accepted + rejected = candidate tokens at that level).
+    Level {
+        level: u8,
+        accepted: u16,
+        rejected: u16,
+    },
+    /// Speculative writes discarded for (level, slot) after verification.
+    Rollback { level: u8, slot: u8, depth: u16 },
+    /// Physical cache truncation pass (`StateManager::fix_caches`).
+    CacheFix {
+        fixed: u32,
+        start_us: u64,
+        dur_us: u64,
+    },
+    /// Tokens committed to a slot this tick.
+    Commit { tokens: u16 },
+    /// Tokens pushed to a streaming client.
+    Emit { tokens: u16 },
+    /// Request completed.
+    Finish { eos: bool },
+    /// Tick phase span on this lane (gid = `NO_GID` for whole-tick
+    /// phases, a group id for per-group execute spans).
+    Phase {
+        phase: TickPhase,
+        gid: u16,
+        start_us: u64,
+        end_us: u64,
+    },
+}
+
+/// Sentinel gid for phase spans not tied to one group.
+pub const NO_GID: u16 = u16::MAX;
+/// Sentinel request id for events not tied to one request.
+pub const NO_REQ: u64 = u64::MAX;
+
+/// One ring entry: the event plus its request/tick key and the engine
+/// timestamp at which it was recorded (µs since epoch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    pub ts_us: u64,
+    pub tick: u64,
+    pub req: u64,
+    pub kind: EventKind,
+}
+
+/// Fixed-capacity overwrite-oldest ring of [`SpanEvent`]s.
+///
+/// The backing `Vec` is allocated once at construction; `push` never
+/// allocates. When full, each push overwrites the oldest event and
+/// increments `dropped` by exactly one, so the newest `capacity` events
+/// are always retained and `dropped == total_pushed - capacity`.
+#[derive(Debug)]
+pub struct SpanRing {
+    buf: Vec<SpanEvent>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        SpanRing {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: SpanEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events overwritten so far (exact).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &SpanEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> SpanEvent {
+        SpanEvent {
+            ts_us: i,
+            tick: i,
+            req: i,
+            kind: EventKind::Commit { tokens: i as u16 },
+        }
+    }
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let mut r = SpanRing::new(4);
+        for i in 0..3 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 0);
+        let seen: Vec<u64> = r.iter().map(|e| e.tick).collect();
+        assert_eq!(seen, vec![0, 1, 2]);
+
+        for i in 3..10 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6); // 10 pushed, capacity 4
+        let seen: Vec<u64> = r.iter().map(|e| e.tick).collect();
+        assert_eq!(seen, vec![6, 7, 8, 9]); // newest N retained, in order
+    }
+
+    #[test]
+    fn drop_counter_is_exact_across_wraps() {
+        let cap = 7;
+        let mut r = SpanRing::new(cap);
+        let total = 1000u64;
+        for i in 0..total {
+            r.push(ev(i));
+            let expect = i.saturating_add(1).saturating_sub(cap as u64);
+            assert_eq!(r.dropped(), expect, "after push {i}");
+        }
+        let seen: Vec<u64> = r.iter().map(|e| e.tick).collect();
+        let want: Vec<u64> = (total - cap as u64..total).collect();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn capacity_floor_is_one() {
+        let mut r = SpanRing::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.push(ev(1));
+        r.push(ev(2));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.iter().next().unwrap().tick, 2);
+    }
+}

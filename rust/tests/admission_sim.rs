@@ -47,7 +47,8 @@ fn overload_comparison_end_to_end() {
     assert_eq!(esf.finished.len() + esf.shed.len(), 600);
 
     // queue-delay percentiles are populated and ordered
-    assert!(sum_esf.queue_delay_ms_p95 >= sum_esf.queue_delay_ms_p50);
+    assert!(sum_esf.queue_delay_ms_p95.unwrap()
+            >= sum_esf.queue_delay_ms_p50.unwrap());
 }
 
 #[test]
@@ -59,7 +60,7 @@ fn interactive_queue_delay_is_lower_with_deadline_queue() {
     let p95 = |r: &specrouter::admission::SimResult| {
         metrics::summarize_with_shed(&r.finished, 1e9, &r.shed)
             .class_summary(SloClass::Interactive).unwrap()
-            .queue_delay_ms_p95
+            .queue_delay_ms_p95.unwrap()
     };
     assert!(p95(&esf) < p95(&fifo),
             "interactive p95 queue delay: esf {} vs fifo {}",

@@ -10,9 +10,10 @@ use std::sync::{mpsc, Arc};
 use specrouter::config::{EngineConfig, Mode};
 use specrouter::coordinator::{ChainRouter, SimBackend, SimSpec};
 use specrouter::server::{client_request, client_request_opts,
-                         client_request_stream, serve_tcp, serve_tcp_opts,
-                         spawn_engine, spawn_engine_with, EngineHandle,
-                         EngineMsg};
+                         client_request_stream, client_stats,
+                         client_stats_prom, client_trace, serve_tcp,
+                         serve_tcp_opts, spawn_engine, spawn_engine_with,
+                         EngineHandle, EngineMsg};
 
 /// Engine + TCP front-end over the deterministic SimBackend (eos_prob 0
 /// so long requests cannot end early), on an ephemeral port. The router
@@ -265,6 +266,53 @@ fn doomed_request_gets_structured_rejection_not_a_hang() {
         .expect("client");
     assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
     assert!(!resp.get("tokens").unwrap().as_arr().unwrap().is_empty());
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn stats_and_trace_queries_answer_over_tcp() {
+    let (engine, addr) = sim_server(2);
+    // generate something first so the registry has data to expose
+    let resp = client_request(addr, "gsm8k", &sim_prompt(), 6)
+        .expect("warm-up request");
+    assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
+
+    let stats = client_stats(addr).expect("stats query");
+    for key in ["queued", "active", "ticks", "admitted_total",
+                "shed_total", "downgraded_total", "cancelled_total",
+                "telemetry_dropped_events", "telemetry_enabled", "hist",
+                "per_class", "class_counters", "groups", "ring_events"] {
+        assert!(stats.opt(key).is_some(),
+                "stats reply missing {key:?}: {stats}");
+    }
+    assert!(stats.get("admitted_total").unwrap().as_f64().unwrap() >= 1.0);
+    let hist = stats.get("hist").unwrap();
+    assert!(hist.get("ttft_ms").unwrap().get("count").unwrap()
+                .as_f64().unwrap() >= 1.0,
+            "TTFT histogram empty after a completed request: {stats}");
+
+    let prom = client_stats_prom(addr).expect("prometheus query");
+    assert!(prom.contains("# TYPE specrouter_ttft_seconds summary"),
+            "{prom}");
+    assert!(prom.contains("specrouter_admitted_total"), "{prom}");
+
+    let trace = client_trace(addr).expect("trace query");
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    let names: Vec<&str> = events.iter()
+        .filter_map(|e| e.opt("name").and_then(|n| n.as_str().ok()))
+        .collect();
+    for phase in ["plan", "execute", "gather"] {
+        assert!(names.contains(&phase),
+                "trace missing {phase:?} span: {names:?}");
+    }
+    assert!(names.contains(&"commit"), "no commit events: {names:?}");
+
+    // control queries don't consume request ids or wedge the engine
+    let resp = client_request(addr, "gsm8k", &sim_prompt(), 4)
+        .expect("post-stats request");
+    assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
 
     engine.tx.send(EngineMsg::Shutdown).ok();
     engine.join.join().unwrap().unwrap();

@@ -1,0 +1,268 @@
+//! Telemetry subsystem properties (DESIGN.md §12): the log-linear
+//! histogram against a naive sorted-Vec oracle on random samples, exact
+//! span-ring overwrite semantics, and an end-to-end smoke over a
+//! sim-backed router — stats snapshot keys, Perfetto trace structure,
+//! and the disabled-registry zero-event guarantee.
+use std::sync::Arc;
+use std::time::Instant;
+
+use specrouter::admission::SloClass;
+use specrouter::config::{EngineConfig, GroupPolicy, Mode};
+use specrouter::coordinator::{ChainRouter, Request, SimBackend, SimSpec};
+use specrouter::json;
+use specrouter::rng::Rng;
+use specrouter::telemetry::{EventKind, Hist, SpanEvent, SpanRing};
+
+const QUANTILES: [f64; 7] = [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0];
+
+/// The oracle: nearest-rank over the sorted sample, the same convention
+/// as `metrics::percentile` and `Hist::value_at_quantile`.
+fn oracle(sorted: &[u64], q: f64) -> u64 {
+    let rank = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+fn check_against_oracle(samples: &[u64], label: &str) {
+    let h = Hist::new();
+    for &v in samples {
+        h.record(v);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    assert_eq!(h.count(), samples.len() as u64, "{label}");
+    assert_eq!(h.sum(), samples.iter().sum::<u64>(), "{label}");
+    assert_eq!(h.max(), *sorted.last().unwrap(), "{label}");
+    for q in QUANTILES {
+        let want = oracle(&sorted, q);
+        let got = h.value_at_quantile(q)
+            .unwrap_or_else(|| panic!("{label}: empty at q={q}"));
+        // the histogram walks its counts with the same rank convention,
+        // so it must land in *exactly* the bucket holding the oracle
+        // value (bucket order preserves value order)
+        assert_eq!(Hist::bucket_index(got), Hist::bucket_index(want),
+                   "{label}: q={q} hist bucket {got} vs oracle {want}");
+        // and the reported lower bound is within the layout's relative
+        // error of the true value — except inside the clamped top
+        // bucket (values > 63<<30, ~19h in µs), which only promises
+        // containment
+        assert!(got <= want, "{label}: q={q} {got} > {want}");
+        if Hist::bucket_upper_bound(Hist::bucket_index(want)) < u64::MAX {
+            assert!(want - got <= want / 32 + 1,
+                    "{label}: q={q} error {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn histogram_quantiles_match_sorted_oracle_on_random_samples() {
+    let mut rng = Rng::new(0x7E1E);
+    for round in 0..40u64 {
+        // vary both the sample size and the value distribution: exact
+        // small values, one octave, wide uniform, and heavy-tailed
+        // products that cross many octaves
+        let n = 1 + rng.range(0, 400);
+        let dist = round % 4;
+        let samples: Vec<u64> = (0..n).map(|_| match dist {
+            0 => rng.range(0, 32) as u64,
+            1 => rng.range(100, 1000) as u64,
+            2 => (rng.f64() * 1e9) as u64,
+            _ => {
+                let a = rng.range(1, 4000) as u64;
+                let b = rng.range(1, 4000) as u64;
+                a * b
+            }
+        }).collect();
+        check_against_oracle(&samples, &format!("round {round}"));
+    }
+}
+
+#[test]
+fn histogram_handles_degenerate_and_extreme_samples() {
+    check_against_oracle(&[0], "single zero");
+    check_against_oracle(&[u64::MAX], "single max");
+    check_against_oracle(&[7; 100], "constant");
+    check_against_oracle(&[0, u64::MAX], "both ends");
+    assert!(Hist::new().value_at_quantile(0.5).is_none());
+}
+
+fn ev(i: u64) -> SpanEvent {
+    SpanEvent {
+        ts_us: i,
+        tick: i,
+        req: i,
+        kind: EventKind::Commit { tokens: (i % 1000) as u16 },
+    }
+}
+
+#[test]
+fn span_ring_overwrite_property_random_cap_and_volume() {
+    let mut rng = Rng::new(0x51A6);
+    for _ in 0..50 {
+        let cap = 1 + rng.range(0, 16);
+        let total = rng.range(0, 100) as u64;
+        let mut r = SpanRing::new(cap);
+        for i in 0..total {
+            r.push(ev(i));
+        }
+        // drop counter exact, newest `cap` events retained in order
+        assert_eq!(r.dropped(), total.saturating_sub(cap as u64),
+                   "cap={cap} total={total}");
+        let want: Vec<u64> =
+            (total.saturating_sub(cap as u64)..total).collect();
+        let got: Vec<u64> = r.iter().map(|e| e.tick).collect();
+        assert_eq!(got, want, "cap={cap} total={total}");
+    }
+}
+
+fn sim_cfg(telemetry: bool) -> EngineConfig {
+    let mut c = EngineConfig::new("sim://");
+    c.batch = 4;
+    c.window = 4;
+    c.target = "m2".into();
+    c.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    c.group_policy = GroupPolicy::ByClass;
+    c.telemetry = telemetry;
+    c.apply_env_workers();
+    c
+}
+
+fn run_mixed_requests(telemetry: bool) -> ChainRouter {
+    let mut spec = SimSpec::small_pool();
+    spec.eos_prob = 0.0;
+    let mut router = ChainRouter::with_backend(
+        sim_cfg(telemetry), Arc::new(SimBackend::new(spec)))
+        .expect("sim router");
+    let classes = [SloClass::Interactive, SloClass::Batch];
+    for i in 0..6usize {
+        router.submit(Request {
+            id: 0,
+            dataset: "gsm8k".into(),
+            prompt: vec![1, 70, 71, 72],
+            max_new: 6,
+            arrival: Instant::now(),
+            class: classes[i % classes.len()],
+            slo_ms: None,
+            sample_seed: Some(77 + i as u64),
+        }).expect("submit");
+    }
+    router.run_until_idle(100_000).expect("run");
+    router
+}
+
+#[test]
+fn router_stats_and_trace_cover_the_request_lifecycle() {
+    let router = run_mixed_requests(true);
+    assert_eq!(router.finished.len(), 6);
+
+    let stats = router.stats_json();
+    assert_eq!(stats.get("admitted_total").unwrap()
+                   .as_usize().unwrap(), 6);
+    let hist = stats.get("hist").unwrap();
+    for key in ["ttft_ms", "tpot_ms", "queue_delay_ms", "accept_len",
+                "tick_ms"] {
+        let count = hist.get(key).unwrap().get("count").unwrap()
+            .as_usize().unwrap();
+        assert!(count > 0, "hist {key} empty: {stats}");
+    }
+    // per-(group, chain) acceptance labels exist for both class groups
+    let groups = stats.get("groups").unwrap().as_arr().unwrap();
+    assert!(groups.len() >= 2, "expected >=2 labeled groups: {stats}");
+
+    let trace = json::parse(&router.trace_json()).expect("trace parses");
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    let names: Vec<&str> = events.iter()
+        .filter_map(|e| e.opt("name").and_then(|n| n.as_str().ok()))
+        .collect();
+    for name in ["plan", "execute", "gather", "admit", "queue_dwell",
+                 "group_assign", "level", "commit", "finish"] {
+        assert!(names.contains(&name), "trace missing {name:?}");
+    }
+    // every call span resolves its model to a manifest name, never "?"
+    for e in events.iter().filter(|e| {
+        e.opt("cat").and_then(|c| c.as_str().ok()) == Some("call")
+    }) {
+        let model = e.get("args").unwrap().get("model").unwrap()
+            .as_str().unwrap();
+        assert_ne!(model, "?", "unresolved model in {e}");
+    }
+
+    let prom = router.prom_text();
+    assert!(prom.contains("specrouter_ttft_seconds_count"), "{prom}");
+    assert!(prom.contains("specrouter_admitted_total 6"), "{prom}");
+}
+
+#[test]
+fn disabled_telemetry_records_no_events_but_stats_still_render() {
+    let router = run_mixed_requests(false);
+    assert_eq!(router.finished.len(), 6);
+    let stats = router.stats_json();
+    assert_eq!(stats.get("telemetry_enabled").unwrap(),
+               &json::Value::Bool(false));
+    assert_eq!(stats.get("ring_events").unwrap().as_usize().unwrap(), 0);
+    // counters stay live even with spans/histograms off
+    assert_eq!(stats.get("admitted_total").unwrap()
+                   .as_usize().unwrap(), 6);
+    let empty = json::parse(&router.trace_json()).expect("trace parses");
+    let events = empty.get("traceEvents").unwrap().as_arr().unwrap();
+    // only process/thread metadata, no recorded spans
+    assert!(events.iter().all(|e| {
+        e.opt("ph").and_then(|p| p.as_str().ok()) == Some("M")
+    }), "disabled registry leaked events: {empty}");
+}
+
+#[test]
+fn telemetry_output_is_identical_across_worker_counts() {
+    // the rings are engine-side and the gather order is deterministic,
+    // so the *event structure* (names per category, counts of request
+    // lifecycle events) must not depend on the worker count — only
+    // timings and lane attribution may differ
+    let count_names = |router: &ChainRouter| -> Vec<(String, usize)> {
+        let trace = json::parse(&router.trace_json()).unwrap();
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut names: Vec<String> = events.iter()
+            .filter(|e| e.opt("ph").and_then(|p| p.as_str().ok())
+                    == Some("i"))
+            .filter_map(|e| e.opt("name").and_then(|n| n.as_str().ok()))
+            .map(str::to_string)
+            .collect();
+        names.sort();
+        let mut out: Vec<(String, usize)> = Vec::new();
+        for n in names {
+            match out.last_mut() {
+                Some((last, c)) if *last == n => *c += 1,
+                _ => out.push((n, 1)),
+            }
+        }
+        out
+    };
+    let run = |workers: usize| -> Vec<(String, usize)> {
+        let mut spec = SimSpec::small_pool();
+        spec.eos_prob = 0.0;
+        let mut cfg = sim_cfg(true);
+        cfg.workers = workers;
+        let mut router = ChainRouter::with_backend(
+            cfg, Arc::new(SimBackend::new(spec))).expect("router");
+        let classes = [SloClass::Interactive, SloClass::Batch];
+        for i in 0..6usize {
+            router.submit(Request {
+                id: 0,
+                dataset: "gsm8k".into(),
+                prompt: vec![1, 70, 71, 72],
+                max_new: 6,
+                arrival: Instant::now(),
+                class: classes[i % classes.len()],
+                slo_ms: None,
+                sample_seed: Some(77 + i as u64),
+            }).expect("submit");
+        }
+        router.run_until_idle(100_000).expect("run");
+        count_names(&router)
+    };
+    let w1 = run(1);
+    let w4 = run(4);
+    assert_eq!(w1, w4,
+               "instant-event structure diverged across worker counts");
+}
