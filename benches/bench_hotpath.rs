@@ -228,6 +228,7 @@ fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
                 rule,
                 rngs: &mut *rngs,
                 scratch: &mut scratch,
+                check_logits: false,
             };
             COUNTING.store(true, Relaxed);
             let r = run_spec_step(&mut ctx, chain, &seqs, 0);
@@ -291,6 +292,7 @@ fn run_grouped(backend: &SimBackend, configs: &[(Chain, Vec<usize>)],
                     rule,
                     rngs: &mut *rngs,
                     scratch: &mut scratches[gi],
+                    check_logits: false,
                 };
                 COUNTING.store(true, Relaxed);
                 let r = run_spec_step(&mut ctx, chain, &seqs, 0);
@@ -404,7 +406,7 @@ fn drive_ticks(router: &mut ChainRouter, batch: usize, window: usize,
 /// `run_spec_step`. Measured admission-idle (every slot occupied, queue
 /// empty): a steady-state greedy tick must allocate nothing at all.
 fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
-                 warmup: u64, measure: u64) -> Row {
+                 warmup: u64, measure: u64, armed: bool) -> Row {
     let mut spec = SimSpec::small_pool();
     // eos_prob 0: nothing finishes early, so the per-wave measured block
     // is deterministically completion-free
@@ -420,7 +422,20 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
     // telemetry on (the default), stated explicitly: the zero-alloc
     // contract must hold with span rings and histograms recording
     cfg.telemetry = true;
-    let label = format!("full-tick:{}", cfg.mode.label());
+    if armed {
+        // health-check row (ISSUE 7): arm the whole fault machinery —
+        // injector wrapper on every call, logits corruption scans,
+        // per-call breaker feeding at gather, the quarantine branch in
+        // chain selection — but aim it at a model that does not exist,
+        // so zero faults ever fire. This armed-but-quiet steady state
+        // must still tick at 0 allocs (DESIGN.md §8/§13); the deadline
+        // stays 0 because a live budget buys a capture sink per call.
+        cfg.fault_rate = 1.0;
+        cfg.fault_models = vec!["no-such-model".into()];
+    }
+    let label = format!("{}:{}",
+                        if armed { "health-check" } else { "full-tick" },
+                        cfg.mode.label());
     let mut router = ChainRouter::with_backend(cfg, backend)
         .expect("sim router");
 
@@ -428,6 +443,10 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
     let max_new = seq_cap - 3 - 2 * (window + 2);
     let run = drive_ticks(&mut router, batch, window, max_new, warmup,
                           measure, &[SloClass::Standard]);
+    if armed {
+        assert_eq!(router.faults_injected(), 0,
+                   "health-check row must measure the quiet armed path");
+    }
     row_from(label, "greedy", batch, run.measured, Measured {
         tokens: run.tokens,
         elapsed: run.elapsed,
@@ -598,7 +617,14 @@ fn main() {
     // itself — recycled slot-seq views, cached chains and reserved
     // commit buffers must keep the whole admission-idle tick at zero
     let row = run_full_tick(vec!["m0".into(), "m2".into()], 4, batch,
-                            warmup, measure);
+                            warmup, measure, false);
+    push_row(&mut table, &row);
+    rows.push(row);
+    // fault machinery armed but quiet (ISSUE 7): injector wrapping every
+    // call, logits scans and breaker feeding live — still zero allocs,
+    // and perf_gate pins the row via health_check_allocs_per_step
+    let row = run_full_tick(vec!["m0".into(), "m2".into()], 4, batch,
+                            warmup, measure, true);
     push_row(&mut table, &row);
     rows.push(row);
     // parallel scatter/gather tick (ISSUE 5): workers 1/2/4 over the

@@ -2,6 +2,14 @@
 //! adaptive router, and inspect what the scheduler did.
 //!
 //!   make artifacts && cargo run --release --example quickstart
+//!
+//! Fault drills: the same binary runs under injected backend faults
+//! (DESIGN.md §13) — e.g. `SPECROUTER_FAULT_RATE=0.2
+//! SPECROUTER_FAULT_MODELS=m0,m1 SPECROUTER_FAULT_KINDS=transient,spike
+//! cargo run --release --example quickstart` degrades draft chains
+//! without failing the request. See also `SPECROUTER_FAULT_SEED`,
+//! `SPECROUTER_FAULT_MAX`, `SPECROUTER_FAULT_SPIKE_MS` and
+//! `SPECROUTER_CALL_DEADLINE_MS`.
 use anyhow::Result;
 use specrouter::config::EngineConfig;
 use specrouter::coordinator::ChainRouter;

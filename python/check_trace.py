@@ -39,7 +39,18 @@ REQUIRED_STATS_KEYS = (
     "per_class",
     "class_counters",
     "groups",
+    # fault-containment telemetry (DESIGN.md §13): injector tallies,
+    # observed-fault counters, breaker totals and per-model states
+    "faults_injected",
+    "fault_overruns",
+    "faults",
+    "breakers",
+    "health",
 )
+
+REQUIRED_FAULT_KEYS = ("observed", "degraded_steps", "failed_groups",
+                       "failed_requests")
+REQUIRED_BREAKER_KEYS = ("trips", "probes", "recoveries")
 
 REQUIRED_HIST_KEYS = ("ttft_ms", "tpot_ms", "queue_delay_ms",
                       "accept_len", "rollback_depth", "tick_ms")
@@ -131,6 +142,29 @@ def check_stats(path):
                 errors.append(f"stats hist.{key} missing or lacks count")
     elif "hist" in doc:
         errors.append("stats hist must be an object")
+    for name, keys in (("faults", REQUIRED_FAULT_KEYS),
+                       ("breakers", REQUIRED_BREAKER_KEYS)):
+        obj = doc.get(name)
+        if isinstance(obj, dict):
+            for key in keys:
+                if not is_num(obj.get(key)):
+                    errors.append(f"stats {name}.{key} missing or "
+                                  "non-numeric")
+        elif name in doc:
+            errors.append(f"stats {name} must be an object")
+    # `health` is one entry per manifest model (a fault-free run still
+    # reports every breaker as closed)
+    health = doc.get("health")
+    if isinstance(health, list):
+        for i, h in enumerate(health):
+            if not isinstance(h, dict) or "model" not in h \
+                    or "state" not in h:
+                errors.append(f"stats health[{i}] needs model + state")
+        if not health:
+            errors.append("stats health is empty — breakers must cover "
+                          "the model pool")
+    elif "health" in doc:
+        errors.append("stats health must be an array")
     # a smoke run admits work, so the lifecycle counters must have moved
     if is_num(doc.get("admitted_total")) and doc["admitted_total"] <= 0:
         errors.append("admitted_total is 0 — the smoke replay recorded "

@@ -146,6 +146,7 @@ pub fn run_sim(spec: &SimSpec) -> SimResult {
             finished_by_eos: false,
             class: entry.class,
             slo_ms: signed_since(entry.deadline, arrival) * 1e3,
+            error: None,
         });
     }
     SimResult {

@@ -10,6 +10,10 @@
 //!     rows of BENCH_hotpath.json (spec step, grouped step, full tick,
 //!     and the parallel-tick rows at workers 1/2/4). A baseline of 0
 //!     means exactly zero: any allocation fails.
+//!   * `health_check_allocs_per_step` — allocs/step of the hotpath
+//!     `health-check:` row: the fault-injection machinery armed (wrapper,
+//!     logits scans, breaker feeding) with zero faults firing (ISSUE 7 /
+//!     DESIGN.md §13). Baseline 0, exact.
 //!   * `parallel_tick_w4_time_ratio` — wall-clock per tick at workers=4
 //!     divided by workers=1 on the heterogeneous 2-group sim scenario
 //!     (DESIGN.md §11; a baseline of 0.67 demands >= 1.5x speedup).
@@ -105,6 +109,21 @@ fn hotpath_greedy_allocs(v: &Value) -> Result<f64> {
     Ok(max)
 }
 
+/// Allocs/step of the armed-but-quiet fault-machinery row (ISSUE 7):
+/// the fault injector wrapping every backend call, logits corruption
+/// scans and per-call breaker feeding all live, zero faults firing. A
+/// missing row is a stale artifact — hard error, same policy as a
+/// missing baseline key.
+fn health_check_allocs(v: &Value) -> Result<f64> {
+    let rows = v.get("rows")?.as_arr()?;
+    for r in rows {
+        if r.get("chain")?.as_str()?.starts_with("health-check:") {
+            return r.get("allocs_per_step")?.as_f64();
+        }
+    }
+    bail!("BENCH_hotpath.json has no health-check row — stale artifact?")
+}
+
 /// Telemetry-on / telemetry-off full-tick time ratio from the hotpath
 /// artifact's `telemetry` object. A missing object is a hard error
 /// (stale artifact) — both sides of the pair run on the same box, so
@@ -140,6 +159,12 @@ fn gather(dir: &Path) -> Result<Vec<Check>> {
         Check {
             name: "hotpath_greedy_allocs_per_step",
             measured: hotpath_greedy_allocs(&hotpath)?,
+            baseline: f64::NAN,
+            tol_pct: f64::NAN,
+        },
+        Check {
+            name: "health_check_allocs_per_step",
+            measured: health_check_allocs(&hotpath)?,
             baseline: f64::NAN,
             tol_pct: f64::NAN,
         },
@@ -327,6 +352,17 @@ mod tests {
                 < 1e-12);
         let none = json::parse(r#"{"rows":[]}"#).unwrap();
         assert!(hotpath_greedy_allocs(&none).is_err());
+        // the health-check row binds by chain-label prefix; a missing
+        // row is a stale artifact, not a silent pass
+        let armed = json::parse(
+            r#"{"rows":[
+                {"chain":"full-tick:x","rule":"greedy",
+                 "allocs_per_step":0.0},
+                {"chain":"health-check:x","rule":"greedy",
+                 "allocs_per_step":0.125}]}"#).unwrap();
+        assert!((health_check_allocs(&armed).unwrap() - 0.125).abs()
+                < 1e-12);
+        assert!(health_check_allocs(&hot).is_err());
         // the telemetry object: present reads, absent is a stale artifact
         let tel = json::parse(
             r#"{"telemetry":{"overhead_ratio":1.013}}"#).unwrap();

@@ -131,6 +131,38 @@ pub struct EngineConfig {
     /// on GPUs; the miniature pool's real CPU ratio is ~12×). Empty =
     /// honest measured costs.
     pub cost_multipliers: Vec<(String, f64)>,
+    /// Per-call fault-injection probability in `[0, 1]` (DESIGN.md §13).
+    /// `0` (the default) disables the injector entirely: the backend is
+    /// never wrapped and the fault-free path is byte-identical to a
+    /// build without the fault layer.
+    pub fault_rate: f64,
+    /// Seed for the deterministic `FaultPlan` schedule.
+    pub fault_seed: u64,
+    /// Models eligible for injection; empty = every model.
+    pub fault_models: Vec<String>,
+    /// Fault kinds to draw from (`"transient"`, `"spike"`, `"stuck"`,
+    /// `"corrupt"`, `"panic"`); empty = all but `"panic"`.
+    pub fault_kinds: Vec<String>,
+    /// Stop injecting after this many faults (`0` = unlimited) — models
+    /// a fault burst that ends, so breaker recovery is observable.
+    pub fault_max: u64,
+    /// Wall time an injected latency spike burns, in milliseconds.
+    pub fault_spike_ms: u64,
+    /// Per-backend-call deadline budget in milliseconds (`0` =
+    /// unbounded). Nonzero values wrap the backend even at
+    /// `fault_rate = 0`, so genuinely wedged calls surface as structured
+    /// deadline errors.
+    pub call_deadline_ms: u64,
+    /// Circuit breaker: consecutive failures that quarantine a model.
+    pub breaker_trip_after: u32,
+    /// Circuit breaker: hold ticks for the first quarantine period.
+    pub breaker_backoff_ticks: u64,
+    /// Circuit breaker: backoff multiplier per successive re-open.
+    pub breaker_backoff_mult: f64,
+    /// Circuit breaker: backoff cap in ticks.
+    pub breaker_backoff_max_ticks: u64,
+    /// Circuit breaker: successful half-open probes needed to re-close.
+    pub breaker_probe_successes: u32,
 }
 
 impl EngineConfig {
@@ -157,6 +189,18 @@ impl EngineConfig {
             replan_every: 1,
             telemetry: true,
             cost_multipliers: Vec::new(),
+            fault_rate: 0.0,
+            fault_seed: 0xFA17,
+            fault_models: Vec::new(),
+            fault_kinds: Vec::new(),
+            fault_max: 0,
+            fault_spike_ms: 20,
+            call_deadline_ms: 0,
+            breaker_trip_after: 3,
+            breaker_backoff_ticks: 8,
+            breaker_backoff_mult: 2.0,
+            breaker_backoff_max_ticks: 512,
+            breaker_probe_successes: 2,
         }
     }
 
@@ -179,6 +223,57 @@ impl EngineConfig {
                 if n >= 1 {
                     self.workers = n;
                 }
+            }
+        }
+    }
+
+    /// Override the fault-injection knobs from the environment, in the
+    /// same spirit as [`EngineConfig::apply_env_workers`] (the chaos CI
+    /// job drives whole suites through a seeded fault matrix this way):
+    /// `SPECROUTER_FAULT_RATE`, `SPECROUTER_FAULT_SEED`,
+    /// `SPECROUTER_FAULT_MODELS` (comma-separated),
+    /// `SPECROUTER_FAULT_KINDS` (comma-separated),
+    /// `SPECROUTER_FAULT_MAX`, `SPECROUTER_FAULT_SPIKE_MS` and
+    /// `SPECROUTER_CALL_DEADLINE_MS`. Invalid or absent values leave the
+    /// config untouched.
+    pub fn apply_env_faults(&mut self) {
+        if let Ok(v) = std::env::var("SPECROUTER_FAULT_RATE") {
+            if let Ok(r) = v.parse::<f64>() {
+                if (0.0..=1.0).contains(&r) {
+                    self.fault_rate = r;
+                }
+            }
+        }
+        if let Ok(v) = std::env::var("SPECROUTER_FAULT_SEED") {
+            if let Ok(s) = v.parse::<u64>() {
+                self.fault_seed = s;
+            }
+        }
+        if let Ok(v) = std::env::var("SPECROUTER_FAULT_MODELS") {
+            self.fault_models = v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+        }
+        if let Ok(v) = std::env::var("SPECROUTER_FAULT_KINDS") {
+            self.fault_kinds = v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+        }
+        if let Ok(v) = std::env::var("SPECROUTER_FAULT_MAX") {
+            if let Ok(n) = v.parse::<u64>() {
+                self.fault_max = n;
+            }
+        }
+        if let Ok(v) = std::env::var("SPECROUTER_FAULT_SPIKE_MS") {
+            if let Ok(n) = v.parse::<u64>() {
+                self.fault_spike_ms = n;
+            }
+        }
+        if let Ok(v) = std::env::var("SPECROUTER_CALL_DEADLINE_MS") {
+            if let Ok(n) = v.parse::<u64>() {
+                self.call_deadline_ms = n;
             }
         }
     }
@@ -230,6 +325,37 @@ impl EngineConfig {
                 bail!("group_policy urgent_s must be a positive finite \
                        number of seconds");
             }
+        }
+        if !(0.0..=1.0).contains(&self.fault_rate)
+            || !self.fault_rate.is_finite()
+        {
+            bail!("fault_rate must be in [0, 1]");
+        }
+        for k in &self.fault_kinds {
+            if !matches!(k.as_str(),
+                         "transient" | "spike" | "stuck" | "corrupt"
+                         | "panic")
+            {
+                bail!("unknown fault kind {k:?} (expected transient, \
+                       spike, stuck, corrupt or panic)");
+            }
+        }
+        if self.breaker_trip_after < 1 {
+            bail!("breaker_trip_after must be >= 1");
+        }
+        if self.breaker_probe_successes < 1 {
+            bail!("breaker_probe_successes must be >= 1");
+        }
+        if !self.breaker_backoff_mult.is_finite()
+            || self.breaker_backoff_mult < 1.0
+        {
+            bail!("breaker_backoff_mult must be >= 1");
+        }
+        if self.breaker_backoff_ticks < 1
+            || self.breaker_backoff_max_ticks < self.breaker_backoff_ticks
+        {
+            bail!("breaker backoff ticks must satisfy \
+                   1 <= backoff_ticks <= backoff_max_ticks");
         }
         self.slo_classes.validate()?;
         Ok(())
@@ -309,6 +435,32 @@ mod tests {
         assert_eq!(c.effective_workers(), c.batch);
         c.workers = 2;
         assert_eq!(c.effective_workers(), 2);
+    }
+
+    #[test]
+    fn validation_covers_fault_and_breaker_knobs() {
+        let batches = [1, 4, 8];
+        let windows = [4, 8];
+        let mut c = EngineConfig::new("/tmp/a");
+        assert_eq!(c.fault_rate, 0.0, "faults off by default");
+        assert_eq!(c.call_deadline_ms, 0, "no deadline by default");
+        assert!(c.validate(&batches, &windows).is_ok());
+        c.fault_rate = 1.5;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fault_rate = 0.1;
+        c.fault_kinds = vec!["transient".into(), "corrupt".into()];
+        assert!(c.validate(&batches, &windows).is_ok());
+        c.fault_kinds = vec!["gremlins".into()];
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fault_kinds.clear();
+        c.breaker_trip_after = 0;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.breaker_trip_after = 3;
+        c.breaker_backoff_mult = 0.5;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.breaker_backoff_mult = 2.0;
+        c.breaker_backoff_max_ticks = 1; // below backoff_ticks (8)
+        assert!(c.validate(&batches, &windows).is_err());
     }
 
     #[test]

@@ -37,11 +37,22 @@
 //! artifacts (via the [`crate::coordinator::SerialXla`] shim, workers=1
 //! only — see `Backend::parallel_groups_safe`), or the in-process
 //! [`crate::coordinator::SimBackend`] for artifact-free runs (§8).
+//!
+//! Failures are *contained*, not fatal (DESIGN.md §13): a failing draft
+//! or intermediate call truncates that group's chain to a target-only
+//! step; a failing target call (or a panicking step) fails that group's
+//! member requests with structured errors while every other group
+//! commits normally; recorded call outcomes drive per-model circuit
+//! breakers ([`HealthRegistry`]) that quarantine failing models out of
+//! chain selection until their tick-based backoff expires. `tick()`
+//! returning `Err` is reserved for genuinely engine-fatal states
+//! (aliased shards, corrupt frontiers, uncontained panics).
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::admission::{Discipline, QueuedReq, ShedReason, ShedRecord,
                        SloClass, SubmitOutcome};
@@ -51,7 +62,9 @@ use crate::coordinator::engine::{committed_frontier, retype_empty,
                                  Batcher, Finished, Request, SeqScratch,
                                  Slot};
 use crate::coordinator::executor::{Executor, SerialXla};
+use crate::coordinator::faults::{FaultInjector, FaultSpec};
 use crate::coordinator::groups::{gid_for, gid_labels, gid_space};
+use crate::coordinator::health::{BreakerConfig, HealthRegistry};
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::recorder::GroupRecorder;
 use crate::coordinator::scheduler::{Chain, Scheduler};
@@ -63,7 +76,7 @@ use crate::json::{self, Value};
 use crate::metrics::ClassChainRow;
 use crate::model_pool::ModelPool;
 use crate::rng::{argmax, softmax, splitmix, Rng};
-use crate::runtime::Manifest;
+use crate::runtime::{FnKind, Manifest};
 use crate::state::{KvDims, StateManager, StateShard};
 use crate::telemetry::{AdmitOutcome, EventKind, Telemetry, TickPhase,
                        NO_GID, NO_REQ};
@@ -74,6 +87,15 @@ const FIX_CACHES_EVERY: u64 = 32;
 /// Signed milliseconds of `a - b`.
 fn signed_ms(a: Instant, b: Instant) -> f64 {
     crate::admission::signed_since(a, b) * 1e3
+}
+
+/// Best-effort text of a caught panic payload (the two shapes `panic!`
+/// produces, plus a fallback for exotic payloads).
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
 }
 
 /// One scattered unit of tick work: everything one worker lane needs to
@@ -129,6 +151,21 @@ pub struct ChainRouter {
     pub cfg: EngineConfig,
     pub manifest: Arc<Manifest>,
     backend: Arc<dyn Backend>,
+    /// The fault injector, kept alongside the type-erased backend so its
+    /// counters stay pollable. `None` whenever `FaultSpec::active()` is
+    /// false — the fault-free hot path never constructs the wrapper
+    /// (DESIGN.md §13).
+    faults: Option<Arc<FaultInjector>>,
+    /// Per-model circuit breakers driven by the gather phase's recorded
+    /// call outcomes; consulted at chain selection (DESIGN.md §13).
+    pub health: HealthRegistry,
+    /// Per-gid contained step errors, collected at gather. Reused
+    /// allocation; always all-`None` between ticks.
+    group_errs: Vec<Option<anyhow::Error>>,
+    /// Scan output logits for non-finite values inside the step — set
+    /// only when fault injection or a call deadline is configured, so the
+    /// fault-free path never pays the scan.
+    check_logits: bool,
     pub prof: Profiler,
     pub sim: SimilarityTracker,
     pub sched: Scheduler,
@@ -228,6 +265,18 @@ impl ChainRouter {
                    each other's lanes) — run it with workers = 1",
                   cfg.workers);
         }
+        // fault injection (DESIGN.md §13): only an *active* spec wraps
+        // the backend — the default config keeps the raw backend and the
+        // fault-free hot path byte-identical to a build without faults
+        let fault_spec = FaultSpec::from_config(&cfg);
+        let mut backend = backend;
+        let mut faults = None;
+        if fault_spec.active() {
+            let inj: Arc<FaultInjector> =
+                Arc::new(FaultInjector::new(backend, &fault_spec));
+            faults = Some(inj.clone());
+            backend = inj;
+        }
         let mut sim = SimilarityTracker::new(cfg.ema_alpha);
         if cfg.offline_sim_prior {
             for a in manifest.models.keys() {
@@ -268,6 +317,11 @@ impl ChainRouter {
         };
         let router = ChainRouter {
             backend,
+            faults,
+            health: HealthRegistry::new(model_names.clone(),
+                                        BreakerConfig::from_config(&cfg)),
+            group_errs: (0..n_gids).map(|_| None).collect(),
+            check_logits: fault_spec.active(),
             prof: Profiler::new(cfg.ema_alpha),
             sim,
             sched,
@@ -450,6 +504,12 @@ impl ChainRouter {
         std::mem::take(&mut self.finished)
     }
 
+    /// Total faults the injector has produced so far (0 whenever fault
+    /// injection is disabled — the wrapper is not even constructed).
+    pub fn faults_injected(&self) -> u64 {
+        self.faults.as_ref().map_or(0, |f| f.injected())
+    }
+
     /// Admit as many waiting requests as there are free slots: prefill on
     /// the prefill set, commit the first token (TTFT), insert KV.
     pub fn admit_pending(&mut self) -> Result<usize> {
@@ -473,6 +533,9 @@ impl ChainRouter {
                     finished_by_eos: false,
                     class,
                     slo_ms,
+                    error: Some(format!(
+                        "unservable prompt: {} tokens (prefill budget {})",
+                        req.prompt.len(), self.manifest.prefill)),
                 });
                 continue;
             }
@@ -498,18 +561,76 @@ impl ChainRouter {
             // target prefill: produces the first committed token
             let target = self.cfg.target.clone();
             let mut first_token = 0i32;
+            // contained admission (DESIGN.md §13): a *target* failure
+            // fails THIS request with a structured record; a drafter
+            // failure only degrades it (the request admits on the
+            // healthy models and the sick drafter's mask stays empty —
+            // catch-up rebuilds it if the model recovers and re-enters
+            // the chain). Either way the model's breaker is fed and
+            // admission continues for the rest of the queue. Backend
+            // panics are contained exactly like errors.
+            let mut admit_err: Option<(String, FnKind, anyhow::Error)> =
+                None;
             for m in self.prefill_set() {
                 let dims = self.kv_dims(&m);
                 let state_len = self.state_len(&m);
-                let (logits, state1) = self.backend
-                    .prefill(&mut self.prof, &m, &req.prompt)
-                    .with_context(|| format!("prefill {m}"))?;
+                let called = catch_unwind(AssertUnwindSafe(|| {
+                    self.backend
+                        .prefill(&mut self.prof, &m, &req.prompt)
+                        .with_context(|| format!("prefill {m}"))
+                }));
+                let mut r = match called {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!("prefill {m} panicked: {}",
+                                          panic_msg(p.as_ref()))),
+                };
+                if self.check_logits {
+                    if let Ok((logits, _)) = &r {
+                        if !logits.iter().all(|x| x.is_finite()) {
+                            r = Err(anyhow!(
+                                "prefill {m} produced non-finite logits"));
+                        }
+                    }
+                }
+                let (logits, state1) = match r {
+                    Ok(v) => v,
+                    Err(e) => {
+                        if m == target {
+                            admit_err = Some((m, FnKind::Prefill, e));
+                            break;
+                        }
+                        self.note_model_fault(&m, FnKind::Prefill, req.id);
+                        self.states.ensure(&m, dims, state_len)
+                            .mask.clear_slot(slot_idx);
+                        continue;
+                    }
+                };
                 let batch = self.cfg.batch;
                 let st = self.states.ensure(&m, dims, state_len);
                 st.mask.clear_slot(slot_idx);
-                self.backend.insert(&mut self.prof, &m, batch,
-                                    &mut st.kv(), &state1, slot_idx)?;
+                let ins = catch_unwind(AssertUnwindSafe(|| {
+                    self.backend
+                        .insert(&mut self.prof, &m, batch, &mut st.kv(),
+                                &state1, slot_idx)
+                        .with_context(|| format!("insert {m}"))
+                }));
+                let ins = match ins {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!("insert {m} panicked: {}",
+                                          panic_msg(p.as_ref()))),
+                };
+                if let Err(e) = ins {
+                    if m == target {
+                        admit_err = Some((m, FnKind::Insert, e));
+                        break;
+                    }
+                    // mask was cleared before the insert, so any torn
+                    // write the failure left behind is invisible
+                    self.note_model_fault(&m, FnKind::Insert, req.id);
+                    continue;
+                }
                 st.mask.append_valid(slot_idx, plen);
+                self.health.on_success(&m);
                 if m == target {
                     first_token = match self.cfg.rule {
                         AcceptRule::Greedy => argmax(&logits) as i32,
@@ -517,6 +638,31 @@ impl ChainRouter {
                             slot_rng.categorical(&softmax(&logits)) as i32,
                     };
                 }
+            }
+            if let Some((m, kind, e)) = admit_err {
+                self.note_model_fault(&m, kind, req.id);
+                self.states.clear_slot(slot_idx);
+                self.tel.failed_requests += 1;
+                if self.tel.enabled() {
+                    self.tel.push(0, tick, req.id,
+                                  EventKind::Finish { eos: false });
+                }
+                let now = Instant::now();
+                self.finished.push(Finished {
+                    id: req.id,
+                    dataset: req.dataset.clone(),
+                    prompt_len: plen,
+                    tokens: vec![],
+                    arrival: req.arrival,
+                    admitted: admitted_at,
+                    first_token: now,
+                    completed: now,
+                    finished_by_eos: false,
+                    class,
+                    slo_ms,
+                    error: Some(format!("{e:#}")),
+                });
+                continue;
             }
             self.slot_rngs[slot_idx] = slot_rng;
             let first_token_at = Instant::now();
@@ -632,13 +778,34 @@ impl ChainRouter {
                 }
             }
             Mode::Adaptive => {
-                let replan = self.group_chains[gid].is_none()
+                // a cached chain through a freshly-quarantined model is
+                // replanned immediately, not at the next cadence tick —
+                // the breaker's whole point is to stop routing through
+                // the failing model *now* (DESIGN.md §13)
+                let quarantined = self.health.any_quarantined();
+                let cached_ok = match self.group_chains[gid].as_ref() {
+                    Some(c) => !quarantined || self.health.chain_allowed(c),
+                    None => false,
+                };
+                let replan = !cached_ok
                     || self.steps % self.cfg.replan_every as u64 == 0;
                 if replan {
-                    let c = self.sched.select_for_group(
-                        &self.prof, &self.sim,
-                        self.group_chains[gid].as_ref(),
-                        self.group_slack[gid]);
+                    let c = if quarantined {
+                        let health = &self.health;
+                        self.sched.select_for_group_gated(
+                            &self.prof, &self.sim,
+                            self.group_chains[gid].as_ref(),
+                            self.group_slack[gid],
+                            &|ch| health.chain_allowed(ch))
+                    } else {
+                        // breaker-free path: the ungated call, so the
+                        // selection RNG stream stays bit-identical to
+                        // the pre-breaker engine
+                        self.sched.select_for_group(
+                            &self.prof, &self.sim,
+                            self.group_chains[gid].as_ref(),
+                            self.group_slack[gid])
+                    };
                     self.group_chains[gid] = Some(c);
                 }
             }
@@ -676,6 +843,10 @@ impl ChainRouter {
             return Ok(if self.batcher.is_idle() { None } else { Some(0) });
         }
         let tick_no = self.steps;
+        // advance the breaker clock (engine ticks are the deterministic
+        // time base): quarantined models whose backoff expired move to
+        // half-open here, before this tick's chain selection
+        self.health.begin_tick();
         self.build_groups();
         let eos = self.manifest.special.eos;
         let seq_cap = self.manifest.seq;
@@ -735,6 +906,7 @@ impl ChainRouter {
             let vocab = self.manifest.vocab;
             let rule = self.cfg.rule;
             let pad = self.manifest.special.pad;
+            let check_logits = self.check_logits;
 
             let mut tasks: Vec<GroupTask<'_>> = self.task_scratch.take();
             {
@@ -787,7 +959,13 @@ impl ChainRouter {
             let epoch = self.tel.epoch();
             let f = |t: &mut GroupTask| {
                 let t0 = Instant::now();
-                let result = {
+                // panic containment (DESIGN.md §13): a panicking step —
+                // injected or genuine — is caught here and converted to
+                // the same contained per-group error a failing call
+                // produces, so one poisoned group never takes down the
+                // tick (the pool's own per-task catch is the backstop
+                // for panics outside this wrapper)
+                let result = catch_unwind(AssertUnwindSafe(|| {
                     let mut ctx = StepCtx {
                         exec: backend,
                         rec: &mut *t.recorder,
@@ -797,9 +975,10 @@ impl ChainRouter {
                         rule,
                         rngs: &mut *t.rngs,
                         scratch: &mut *t.scratch,
+                        check_logits,
                     };
                     run_spec_step(&mut ctx, t.chain, &t.seqs, pad)
-                };
+                }));
                 t.recorder.wall = t0.elapsed();
                 if tel_on {
                     // stamp lane + start for the gather-side span export;
@@ -809,41 +988,50 @@ impl ChainRouter {
                         .saturating_duration_since(epoch)
                         .as_micros() as u64;
                 }
-                t.err = result.err();
+                t.err = match result {
+                    Ok(r) => r.err(),
+                    Err(p) => Some(anyhow!("group step panicked: {}",
+                                           panic_msg(p.as_ref()))),
+                };
             };
-            match self.pool.as_ref() {
+            let clean = match self.pool.as_ref() {
                 Some(pool) if tasks.len() > 1 => pool.run(&mut tasks, &f),
                 _ => {
                     // sequential lane: same task code, ascending gid
                     for t in tasks.iter_mut() {
                         f(t);
                     }
+                    true
                 }
-            }
+            };
 
-            // park the views/tasks and surface the first error in gid
-            // order (no group committed yet — an error aborts the whole
-            // tick atomically)
-            let mut first_err: Option<anyhow::Error> = None;
+            // park the views/tasks and collect contained errors per gid
+            // (resolved at gather: the group's member requests fail with
+            // a structured error, every other group commits normally)
             for t in tasks.iter_mut() {
                 let seqs = std::mem::take(&mut t.seqs);
                 self.seq_scratches[t.gid].put(seqs);
                 for &b in &group_slots[t.gid] {
                     slot_rngs[b] = t.rngs[b].clone();
                 }
-                if first_err.is_none() {
-                    first_err = t.err.take();
+                if let Some(e) = t.err.take() {
+                    self.group_errs[t.gid] = Some(e);
                 }
             }
             self.task_scratch.put(tasks);
-            if let Some(e) = first_err {
-                return Err(e);
+            if !clean {
+                // a panic escaped the containment wrapper above (e.g.
+                // while dropping a task) — state can no longer be
+                // trusted, so this IS engine-fatal
+                bail!("a tick task panicked outside the step containment \
+                       wrapper; aborting the engine");
             }
         }
         let t_exec_end = Instant::now();
 
         // --- gather: deterministic ascending-gid merge + commit ---------
         let mut total = 0usize;
+        let mut tick_degraded = 0u64;
         self.done_buf.clear();
         for gid in 0..self.group_slots.len() {
             if self.group_slots[gid].is_empty() {
@@ -902,15 +1090,63 @@ impl ChainRouter {
                     });
                 });
             }
+            // fault + breaker accounting (DESIGN.md §13): the group's
+            // recorded call outcomes drive the per-model breakers in
+            // ascending gid order — successes first, then faults (a
+            // failed call never records a Call, so the two streams are
+            // disjoint). Runs on the engine thread at every worker count,
+            // so breaker state is deterministic given the call outcomes.
+            let g_err = self.group_errs[gid].take();
+            let mut n_faults = 0u64;
+            {
+                let rec = &self.recorders[gid];
+                let health = &mut self.health;
+                rec.for_each_call(|model, _, _, _, _| {
+                    health.on_success_idx(model as usize);
+                });
+                let tel = &mut self.tel;
+                let lane = rec.lane;
+                rec.for_each_fault(|model, kind| {
+                    n_faults += 1;
+                    health.on_failure_idx(model as usize);
+                    tel.push(lane, tick_no, NO_REQ,
+                             EventKind::Fault { model, kind });
+                });
+            }
+            self.tel.faults_observed += n_faults;
             // fold this group's recorded calls + similarity observations
             // into the shared trackers; the replay order is the recording
             // order, and groups fold in gid order — identical final state
-            // for every worker count
+            // for every worker count. Errored groups fold too: their
+            // successful-prefix calls are real observations.
             {
                 let rec = &mut self.recorders[gid];
                 rec.drain_into(&mut self.prof, &mut self.sim);
                 self.prof.record_group_wall(&self.group_labels[gid],
                                             rec.wall);
+            }
+            if let Some(e) = g_err {
+                // contained group failure (target call failed or the step
+                // panicked): every member request terminates with a
+                // structured error; other groups and the engine itself
+                // are untouched. The group's scratch outcome is stale
+                // from an earlier tick and must never be committed.
+                let msg = format!("{e:#}");
+                self.tel.failed_groups += 1;
+                for i in 0..self.group_slots[gid].len() {
+                    let b = self.group_slots[gid][i];
+                    self.fail_slot(b, &msg);
+                }
+                continue;
+            }
+            if n_faults > 0 {
+                // the step degraded (chain truncated to target-only) but
+                // still committed — count it and mark the trace
+                self.tel.degraded_steps += 1;
+                tick_degraded += 1;
+                self.tel.push(0, tick_no, NO_REQ, EventKind::Degraded {
+                    gid: gid.min(u16::MAX as usize) as u16,
+                });
             }
             // commit this group's slots from its scratch outcome
             let mut group_total = 0usize;
@@ -969,12 +1205,32 @@ impl ChainRouter {
             self.prof.record_group_step(&self.group_labels[gid],
                                         chain_label, group_total as u64);
         }
+        if tick_degraded > 0 {
+            self.tel.degraded_groups.record(tick_degraded);
+        }
         let done = std::mem::take(&mut self.done_buf);
         for &b in &done {
             self.complete(b);
         }
         self.done_buf = done;
         self.steps += 1;
+        // breaker bookkeeping: mirror the registry totals into the
+        // telemetry counters and export this tick's state transitions as
+        // trace instants (the registry records them; the engine thread
+        // owns the rings)
+        let (trips, probes, recoveries) = self.health.totals();
+        self.tel.breaker_trips = trips;
+        self.tel.breaker_probes = probes;
+        self.tel.breaker_recoveries = recoveries;
+        {
+            let tel = &mut self.tel;
+            self.health.drain_changes(|model, state| {
+                tel.push(0, tick_no, NO_REQ, EventKind::Breaker {
+                    model,
+                    state: state.code(),
+                });
+            });
+        }
         if self.steps % FIX_CACHES_EVERY == 0 {
             let t0 = Instant::now();
             let fixed = self.states.fix_caches()?;
@@ -1078,10 +1334,26 @@ impl ChainRouter {
             ("shed_total", adm.shed_total as f64),
             ("downgraded_total", adm.downgraded_total as f64),
             ("cancelled_total", adm.cancelled_total as f64),
+            // injector-side tallies (0 when injection is off; the
+            // observed-fault counters live in the telemetry snapshot's
+            // "faults" object)
+            ("faults_injected",
+             self.faults.as_ref().map_or(0.0, |f| f.injected() as f64)),
+            ("fault_overruns",
+             self.faults.as_ref().map_or(0.0, |f| f.overruns() as f64)),
         ];
         for (k, v) in counters {
             m.insert(k.to_string(), json::num(v));
         }
+        // per-model breaker states, for operators watching a degraded pool
+        let health: Vec<Value> = self.health.report()
+            .map(|(model, state, ema)| json::obj(vec![
+                ("model", json::s(model)),
+                ("state", json::s(state.label())),
+                ("error_ema", json::num(ema)),
+            ]))
+            .collect();
+        m.insert("health".to_string(), Value::Arr(health));
         let class_counters: Vec<Value> = SloClass::ALL
             .iter()
             .map(|&class| {
@@ -1114,6 +1386,14 @@ impl ChainRouter {
                       value: adm.downgraded_total as f64 },
             Counter { name: "specrouter_cancelled_total", labels: &[],
                       value: adm.cancelled_total as f64 },
+            Counter { name: "specrouter_faults_observed_total", labels: &[],
+                      value: self.tel.faults_observed as f64 },
+            Counter { name: "specrouter_degraded_steps_total", labels: &[],
+                      value: self.tel.degraded_steps as f64 },
+            Counter { name: "specrouter_failed_requests_total", labels: &[],
+                      value: self.tel.failed_requests as f64 },
+            Counter { name: "specrouter_breaker_trips_total", labels: &[],
+                      value: self.tel.breaker_trips as f64 },
         ];
         for (i, &class) in SloClass::ALL.iter().enumerate() {
             counters.push(Counter {
@@ -1171,6 +1451,52 @@ impl ChainRouter {
             finished_by_eos: slot.finished_by_eos,
             class: slot.class,
             slo_ms: signed_ms(slot.deadline, slot.req.arrival),
+            error: None,
+        });
+    }
+
+    /// Feed one contained model fault observed on the admission path
+    /// into the breaker + telemetry streams (step-path faults flow
+    /// through the recorder instead and are drained at gather).
+    fn note_model_fault(&mut self, m: &str, kind: FnKind, req_id: u64) {
+        self.health.on_failure(m);
+        self.tel.faults_observed += 1;
+        let tick = self.steps;
+        if let Some(mi) = self.health.idx(m) {
+            self.tel.push(0, tick, req_id, EventKind::Fault {
+                model: mi.min(u16::MAX as usize) as u16,
+                kind,
+            });
+        }
+    }
+
+    /// Terminate the request in `slot_idx` with a structured error
+    /// (contained backend failure, DESIGN.md §13): frees the slot and
+    /// clears its masks exactly like completion, but the `Finished`
+    /// record carries the error, whatever tokens were committed before
+    /// the failure, and no TPOT feeds back into admission.
+    fn fail_slot(&mut self, slot_idx: usize, msg: &str) {
+        let Some(slot) = self.batcher.free(slot_idx) else { return };
+        self.states.clear_slot(slot_idx);
+        self.tel.failed_requests += 1;
+        if self.tel.enabled() {
+            let tick = self.steps;
+            self.tel.push(0, tick, slot.req.id,
+                          EventKind::Finish { eos: false });
+        }
+        self.finished.push(Finished {
+            id: slot.req.id,
+            dataset: slot.req.dataset.clone(),
+            prompt_len: slot.req.prompt.len(),
+            tokens: slot.generated().to_vec(),
+            arrival: slot.req.arrival,
+            admitted: slot.admitted,
+            first_token: slot.first_token,
+            completed: Instant::now(),
+            finished_by_eos: false,
+            class: slot.class,
+            slo_ms: signed_ms(slot.deadline, slot.req.arrival),
+            error: Some(msg.to_string()),
         });
     }
 

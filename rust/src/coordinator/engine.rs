@@ -71,6 +71,10 @@ pub struct Finished {
     pub class: SloClass,
     /// Resolved latency target the request was served under, ms.
     pub slo_ms: f64,
+    /// Structured failure message when the request was terminated by a
+    /// contained backend fault instead of finishing normally (DESIGN.md
+    /// §13). `None` = clean completion (EOS or token budget).
+    pub error: Option<String>,
 }
 
 /// One occupied batch slot.

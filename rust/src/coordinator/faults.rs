@@ -1,0 +1,613 @@
+//! Deterministic fault injection over any [`Backend`] (DESIGN.md §13).
+//!
+//! SpecRouter's routing loop is driven by real-time feedback, and failure
+//! is a feedback signal like latency or similarity: a draft model that
+//! times out or returns garbage logits must *degrade* the chain, not wedge
+//! the tick. To make that path testable without flaky hardware, the
+//! [`FaultInjector`] wraps a real backend and injects faults on a
+//! reproducible, seed-driven schedule (a [`FaultPlan`] keyed by
+//! `splitmix(seed, model, call-index)` — same seed, same faults, every
+//! run on a given call order; with `workers = 1` the call order itself is
+//! deterministic, so the whole schedule is).
+//!
+//! ## Fault taxonomy
+//!
+//! - [`FaultKind::Transient`] — the call fails immediately with a
+//!   structured error and *no* side effects (nothing delegated, nothing
+//!   recorded to the sink).
+//! - [`FaultKind::LatencySpike`] — the call burns `spike` wall time and
+//!   then fails. Because the sink is never invoked, a spike on a failed
+//!   call must not move any profiler EMA (the profiler-hygiene
+//!   regression).
+//! - [`FaultKind::Stuck`] — the call overruns its deadline budget and
+//!   returns the same structured deadline error the budget enforcement
+//!   produces for genuinely wedged backends.
+//! - [`FaultKind::CorruptLogits`] — the call *succeeds* but every output
+//!   logit is NaN. Detection is downstream (`run_spec_step`'s gated
+//!   validity scan), exactly like a real numerically-poisoned model. The
+//!   delegated call records to a null sink so a corrupt call can never
+//!   feed the profiler.
+//! - [`FaultKind::Panic`] — the call panics, exercising the worker-pool
+//!   containment path (`catch_unwind` in the execute closure). Never in
+//!   the default kind set; chaos tests opt in.
+//!
+//! ## Deadline budget
+//!
+//! Independent of injection, a non-zero `deadline` bounds every backend
+//! call: the call runs against a capture sink, and only if it returns
+//! within budget are its recorded costs flushed to the real sink — an
+//! overrun yields a structured error and records nothing (profiler
+//! hygiene again). Synchronous calls cannot be preempted, so this is
+//! detection-on-return, not cancellation; the engine's containment layer
+//! (chain truncation / per-group failure) is what bounds the damage.
+//!
+//! With `rate = 0` and no deadline the injector is never constructed at
+//! all ([`FaultSpec::active`]); the fault-free hot path is byte-identical
+//! to a build without this module.
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::backend::{Backend, PrefillState};
+use crate::coordinator::recorder::StepSink;
+use crate::rng::splitmix;
+use crate::runtime::{FnKind, Manifest};
+use crate::state::StateBuf;
+
+/// One injectable failure mode (see module docs for semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Transient,
+    LatencySpike,
+    Stuck,
+    CorruptLogits,
+    Panic,
+}
+
+impl FaultKind {
+    /// Parse a config/env name ("transient", "spike", "stuck",
+    /// "corrupt", "panic").
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "transient" => Some(FaultKind::Transient),
+            "spike" => Some(FaultKind::LatencySpike),
+            "stuck" => Some(FaultKind::Stuck),
+            "corrupt" => Some(FaultKind::CorruptLogits),
+            "panic" => Some(FaultKind::Panic),
+            _ => None,
+        }
+    }
+
+    /// The default injectable set: everything except `Panic` (panics are
+    /// opt-in — they test pool containment, not routing).
+    pub fn default_set() -> Vec<FaultKind> {
+        vec![FaultKind::Transient, FaultKind::LatencySpike,
+             FaultKind::Stuck, FaultKind::CorruptLogits]
+    }
+}
+
+/// Everything the injector needs, distilled from `EngineConfig` (see
+/// `EngineConfig::fault_spec`).
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Schedule seed (`splitmix`-mixed per model and call index).
+    pub seed: u64,
+    /// Per-call fault probability in `[0, 1]`. `0` disables injection.
+    pub rate: f64,
+    /// Models eligible for injection; empty = every model.
+    pub models: Vec<String>,
+    /// Kinds to draw from; empty = [`FaultKind::default_set`].
+    pub kinds: Vec<FaultKind>,
+    /// Per-call deadline budget; `ZERO` = unbounded.
+    pub deadline: Duration,
+    /// Wall time a `LatencySpike`/unbounded `Stuck` fault burns.
+    pub spike: Duration,
+    /// Stop injecting after this many faults (`0` = unlimited). Chaos
+    /// tests use this to model a fault burst that *ends*, so breakers
+    /// can be observed recovering.
+    pub max_faults: u64,
+}
+
+impl FaultSpec {
+    /// Distill the engine config's fault knobs (`validate` has already
+    /// checked ranges and kind names; unknown names here are skipped).
+    pub fn from_config(cfg: &crate::config::EngineConfig) -> Self {
+        FaultSpec {
+            seed: cfg.fault_seed,
+            rate: cfg.fault_rate,
+            models: cfg.fault_models.clone(),
+            kinds: cfg.fault_kinds.iter()
+                .filter_map(|k| FaultKind::parse(k))
+                .collect(),
+            deadline: Duration::from_millis(cfg.call_deadline_ms),
+            spike: Duration::from_millis(cfg.fault_spike_ms),
+            max_faults: cfg.fault_max,
+        }
+    }
+
+    /// Does this spec require wrapping the backend at all? When false the
+    /// router uses the raw backend and the fault-free path is untouched.
+    pub fn active(&self) -> bool {
+        self.rate > 0.0 || !self.deadline.is_zero()
+    }
+}
+
+/// The reproducible schedule: a pure function from (model index, per-model
+/// call index) to an optional fault, derived entirely from the seed.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    /// `rate` mapped onto the u64 range (draw < threshold → fault).
+    threshold: u64,
+    kinds: Vec<FaultKind>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, rate: f64, kinds: Vec<FaultKind>) -> Self {
+        let kinds = if kinds.is_empty() {
+            FaultKind::default_set()
+        } else {
+            kinds
+        };
+        let threshold = (rate.clamp(0.0, 1.0) * u64::MAX as f64) as u64;
+        FaultPlan { seed, threshold, kinds }
+    }
+
+    /// Decide the fate of the `n`-th call ever made on model `mi`.
+    /// Deterministic and stateless: replaying the same call sequence
+    /// replays the same faults.
+    pub fn decide(&self, mi: usize, n: u64) -> Option<FaultKind> {
+        if self.threshold == 0 {
+            return None;
+        }
+        let h = splitmix(splitmix(self.seed ^ ((mi as u64) << 32)) ^ n);
+        if h >= self.threshold {
+            return None;
+        }
+        Some(self.kinds[(splitmix(h) % self.kinds.len() as u64) as usize])
+    }
+}
+
+/// Sink that swallows everything: used under a `CorruptLogits` fault so
+/// the delegated (and about-to-be-poisoned) call can never feed the
+/// profiler.
+struct NullSink;
+
+impl StepSink for NullSink {
+    fn record_call_parts(&mut self, _m: &str, _k: FnKind, _b: usize,
+                         _w: usize, _d: Duration) {
+    }
+    fn observe_dtv(&mut self, _p: &str, _v: &str, _d: &[f64]) {}
+    fn observe_acceptance(&mut self, _p: &str, _v: &str, _a: usize,
+                          _w: usize) {
+    }
+}
+
+/// Buffers `record_call_parts` until the wrapped call is known to have
+/// met its deadline, then flushes to the real sink — an overrun call
+/// records nothing (profiler hygiene). Only lives on the deadline path,
+/// which is opt-in config; the fault-free default never constructs one.
+struct CaptureSink {
+    parts: Vec<(String, FnKind, usize, usize, Duration)>,
+}
+
+impl CaptureSink {
+    fn flush(self, sink: &mut dyn StepSink) {
+        for (m, k, b, w, d) in self.parts {
+            sink.record_call_parts(&m, k, b, w, d);
+        }
+    }
+}
+
+impl StepSink for CaptureSink {
+    fn record_call_parts(&mut self, model: &str, kind: FnKind, batch: usize,
+                         window: usize, dur: Duration) {
+        self.parts.push((model.to_string(), kind, batch, window, dur));
+    }
+    fn observe_dtv(&mut self, _p: &str, _v: &str, _d: &[f64]) {}
+    fn observe_acceptance(&mut self, _p: &str, _v: &str, _a: usize,
+                          _w: usize) {
+    }
+}
+
+/// Overwrite a logits buffer with NaN (the `CorruptLogits` payload).
+fn poison(out: &mut [f32]) {
+    for x in out.iter_mut() {
+        *x = f32::NAN;
+    }
+}
+
+/// Deterministic fault-injecting wrapper over any backend. All methods
+/// take `&self` (the [`Backend`] contract), so the per-model call
+/// counters and fault tallies are atomics.
+pub struct FaultInjector {
+    inner: Arc<dyn Backend>,
+    plan: FaultPlan,
+    deadline: Duration,
+    spike: Duration,
+    max_faults: u64,
+    /// Manifest model set (indexes the counters; mirrors the router's
+    /// recorder intern table).
+    names: Vec<String>,
+    eligible: Vec<bool>,
+    calls: Vec<AtomicU64>,
+    injected: AtomicU64,
+    overruns: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Arc<dyn Backend>, spec: &FaultSpec) -> Self {
+        let names: Vec<String> =
+            inner.manifest().models.keys().cloned().collect();
+        let eligible = names.iter()
+            .map(|n| spec.models.is_empty() || spec.models.contains(n))
+            .collect();
+        let calls = names.iter().map(|_| AtomicU64::new(0)).collect();
+        FaultInjector {
+            inner,
+            plan: FaultPlan::new(spec.seed, spec.rate, spec.kinds.clone()),
+            deadline: spec.deadline,
+            spike: spec.spike,
+            max_faults: spec.max_faults,
+            names,
+            eligible,
+            calls,
+            injected: AtomicU64::new(0),
+            overruns: AtomicU64::new(0),
+        }
+    }
+
+    /// Faults injected so far (telemetry counter).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Deadline overruns detected so far (injected `Stuck` plus genuine).
+    pub fn overruns(&self) -> u64 {
+        self.overruns.load(Ordering::Relaxed)
+    }
+
+    /// The scheduled fault (if any) for this call, advancing the model's
+    /// call counter. Respects eligibility and the `max_faults` budget.
+    fn fault_for(&self, model: &str) -> Option<FaultKind> {
+        let mi = self.names.iter().position(|n| n == model)?;
+        let n = self.calls[mi].fetch_add(1, Ordering::Relaxed);
+        if !self.eligible[mi] {
+            return None;
+        }
+        let kind = self.plan.decide(mi, n)?;
+        // claim a slot in the fault budget; losing the race (budget
+        // exhausted) converts the scheduled fault into a clean call
+        let prev = self.injected.fetch_add(1, Ordering::Relaxed);
+        if self.max_faults > 0 && prev >= self.max_faults {
+            self.injected.fetch_sub(1, Ordering::Relaxed);
+            return None;
+        }
+        Some(kind)
+    }
+
+    /// Fail the call according to `kind` (never delegates, never records).
+    /// `CorruptLogits` is handled by the callers, which must delegate.
+    fn fail(&self, kind: FaultKind, model: &str, call: FnKind) -> Result<()> {
+        match kind {
+            FaultKind::Transient => {
+                bail!("injected transient failure: {model} {call:?}")
+            }
+            FaultKind::LatencySpike => {
+                std::thread::sleep(self.spike);
+                bail!("injected latency spike ({:?}) then failure: {model} \
+                       {call:?}", self.spike)
+            }
+            FaultKind::Stuck => {
+                // overrun the budget for real, then report it exactly as
+                // the enforcement path would
+                let wait = if self.deadline.is_zero() {
+                    self.spike
+                } else {
+                    (self.deadline + Duration::from_millis(1))
+                        .min(Duration::from_millis(250))
+                };
+                std::thread::sleep(wait);
+                self.overruns.fetch_add(1, Ordering::Relaxed);
+                bail!("call deadline exceeded (stuck): {model} {call:?} ran \
+                       {wait:?} against a budget of {:?}", self.deadline)
+            }
+            FaultKind::Panic => {
+                panic!("injected panic: {model} {call:?}")
+            }
+            FaultKind::CorruptLogits => unreachable!("handled by caller"),
+        }
+    }
+
+    /// Run `f` under the deadline budget: record into a capture sink,
+    /// flush only if the call returned within budget.
+    fn with_deadline<T>(
+        &self, sink: &mut dyn StepSink, model: &str, call: FnKind,
+        f: impl FnOnce(&mut dyn StepSink) -> Result<T>,
+    ) -> Result<T> {
+        if self.deadline.is_zero() {
+            return f(sink);
+        }
+        let mut cap = CaptureSink { parts: Vec::new() };
+        let t0 = Instant::now();
+        let out = f(&mut cap)?;
+        let elapsed = t0.elapsed();
+        if elapsed > self.deadline {
+            self.overruns.fetch_add(1, Ordering::Relaxed);
+            bail!("call deadline exceeded: {model} {call:?} ran {elapsed:?} \
+                   against a budget of {:?}", self.deadline);
+        }
+        cap.flush(sink);
+        Ok(out)
+    }
+}
+
+impl Backend for FaultInjector {
+    fn manifest(&self) -> &Arc<Manifest> {
+        self.inner.manifest()
+    }
+
+    fn register(&self, model: &str) -> Result<()> {
+        self.inner.register(model)
+    }
+
+    fn state_is_inert(&self) -> bool {
+        self.inner.state_is_inert()
+    }
+
+    fn parallel_groups_safe(&self) -> bool {
+        self.inner.parallel_groups_safe()
+    }
+
+    fn prefill(&self, sink: &mut dyn StepSink, model: &str, prompt: &[i32])
+               -> Result<(Vec<f32>, PrefillState)> {
+        match self.fault_for(model) {
+            Some(FaultKind::CorruptLogits) => {
+                let (mut logits, st) =
+                    self.inner.prefill(&mut NullSink, model, prompt)?;
+                poison(&mut logits);
+                Ok((logits, st))
+            }
+            Some(k) => {
+                self.fail(k, model, FnKind::Prefill)?;
+                unreachable!("fail always errors or panics")
+            }
+            None => self.with_deadline(sink, model, FnKind::Prefill, |s| {
+                self.inner.prefill(s, model, prompt)
+            }),
+        }
+    }
+
+    fn insert(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              state: &mut StateBuf, one: &PrefillState, slot: usize)
+              -> Result<()> {
+        match self.fault_for(model) {
+            // no logits to corrupt on the insert path: degrade to a
+            // transient failure so the schedule stays exhaustive
+            Some(FaultKind::CorruptLogits) => {
+                bail!("injected transient failure: {model} Insert")
+            }
+            Some(k) => self.fail(k, model, FnKind::Insert),
+            None => self.with_deadline(sink, model, FnKind::Insert, |s| {
+                self.inner.insert(s, model, batch, state, one, slot)
+            }),
+        }
+    }
+
+    fn decode(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              tokens: &[i32], state: &mut StateBuf, lens: &[i32],
+              out: &mut Vec<f32>) -> Result<()> {
+        match self.fault_for(model) {
+            Some(FaultKind::CorruptLogits) => {
+                self.inner.decode(&mut NullSink, model, batch, tokens,
+                                  state, lens, out)?;
+                poison(out);
+                Ok(())
+            }
+            Some(k) => self.fail(k, model, FnKind::Decode),
+            None => self.with_deadline(sink, model, FnKind::Decode, |s| {
+                self.inner.decode(s, model, batch, tokens, state, lens, out)
+            }),
+        }
+    }
+
+    fn draft(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+             window: usize, tokens: &[i32], state: &mut StateBuf,
+             lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
+             -> Result<()> {
+        match self.fault_for(model) {
+            Some(FaultKind::CorruptLogits) => {
+                self.inner.draft(&mut NullSink, model, batch, window,
+                                 tokens, state, lens, toks, logits)?;
+                poison(logits);
+                Ok(())
+            }
+            Some(k) => self.fail(k, model, FnKind::Draft),
+            None => self.with_deadline(sink, model, FnKind::Draft, |s| {
+                self.inner.draft(s, model, batch, window, tokens, state,
+                                 lens, toks, logits)
+            }),
+        }
+    }
+
+    fn verify(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              window: usize, block: &[i32], state: &mut StateBuf,
+              lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        match self.fault_for(model) {
+            Some(FaultKind::CorruptLogits) => {
+                self.inner.verify(&mut NullSink, model, batch, window,
+                                  block, state, lens, out)?;
+                poison(out);
+                Ok(())
+            }
+            Some(k) => self.fail(k, model, FnKind::Verify),
+            None => self.with_deadline(sink, model, FnKind::Verify, |s| {
+                self.inner.verify(s, model, batch, window, block, state,
+                                  lens, out)
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::recorder::ProfSimSink;
+    use crate::coordinator::sim_backend::{SimBackend, SimSpec};
+    use crate::model_pool::FnKey;
+    use crate::state::KvDims;
+
+    fn spec(rate: f64, kinds: Vec<FaultKind>) -> FaultSpec {
+        FaultSpec {
+            seed: 0xFA17,
+            rate,
+            models: vec![],
+            kinds,
+            deadline: Duration::ZERO,
+            spike: Duration::from_millis(1),
+            max_faults: 0,
+        }
+    }
+
+    fn sim() -> Arc<dyn Backend> {
+        Arc::new(SimBackend::new(SimSpec::small_pool()))
+    }
+
+    fn state_for(b: &dyn Backend, model: &str, batch: usize) -> StateBuf {
+        let man = b.manifest();
+        let m = &man.models[model];
+        let dims = KvDims {
+            layers: m.layers,
+            batch,
+            heads: m.heads,
+            seq: man.seq,
+            head_dim: m.head_dim,
+        };
+        StateBuf::new(dims, man.state_len(m, batch))
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_rate_faithful() {
+        let plan = FaultPlan::new(9, 0.25, vec![]);
+        let again = FaultPlan::new(9, 0.25, vec![]);
+        let mut hits = 0usize;
+        let n = 20_000u64;
+        for i in 0..n {
+            let d = plan.decide(1, i);
+            assert_eq!(d, again.decide(1, i));
+            hits += d.is_some() as usize;
+        }
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "rate {frac}");
+        // rate 0 never faults; rate 1 always does
+        assert!(FaultPlan::new(9, 0.0, vec![]).decide(0, 0).is_none());
+        assert!(FaultPlan::new(9, 1.0, vec![]).decide(0, 0).is_some());
+        // different models see decorrelated schedules
+        let a: Vec<_> = (0..64).map(|i| plan.decide(0, i).is_some()).collect();
+        let b: Vec<_> = (0..64).map(|i| plan.decide(2, i).is_some()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn failed_calls_never_reach_the_sink() {
+        // profiler hygiene: a transient failure and a (100x-scale) spike
+        // on a failed call leave the sink byte-identical to never having
+        // made the call at all
+        let inj = FaultInjector::new(
+            sim(),
+            &spec(1.0, vec![FaultKind::LatencySpike]));
+        let mut sink = ProfSimSink::new(0.3);
+        let mut out = Vec::new();
+        let mut st = state_for(&inj, "m2", 1);
+        let err = inj.decode(&mut sink, "m2", 1, &[1], &mut st, &[1],
+                             &mut out)
+            .unwrap_err();
+        assert!(err.to_string().contains("latency spike"), "{err}");
+        let key = FnKey { model: "m2".into(), kind: FnKind::Decode,
+                          batch: 1, window: 0 };
+        assert!(sink.prof.call_cost(&key).is_none(),
+                "failed call polluted the profiler EMA");
+    }
+
+    #[test]
+    fn corrupt_logits_succeed_with_nan_output_and_a_null_sink() {
+        let inj = FaultInjector::new(
+            sim(), &spec(1.0, vec![FaultKind::CorruptLogits]));
+        let mut sink = ProfSimSink::new(0.3);
+        let mut out = Vec::new();
+        let mut st = state_for(&inj, "m2", 1);
+        inj.decode(&mut sink, "m2", 1, &[1], &mut st, &[1], &mut out)
+            .unwrap();
+        assert!(!out.is_empty());
+        assert!(out.iter().all(|x| x.is_nan()));
+        let key = FnKey { model: "m2".into(), kind: FnKind::Decode,
+                          batch: 1, window: 0 };
+        assert!(sink.prof.call_cost(&key).is_none(),
+                "corrupt call fed the profiler");
+    }
+
+    #[test]
+    fn clean_calls_pass_through_and_record() {
+        let inj = FaultInjector::new(sim(), &spec(0.0, vec![]));
+        let mut sink = ProfSimSink::new(0.3);
+        let mut out = Vec::new();
+        let mut st = state_for(&inj, "m2", 1);
+        inj.decode(&mut sink, "m2", 1, &[1], &mut st, &[1], &mut out)
+            .unwrap();
+        assert!(out.iter().all(|x| x.is_finite()));
+        let key = FnKey { model: "m2".into(), kind: FnKind::Decode,
+                          batch: 1, window: 0 };
+        assert!(sink.prof.call_cost(&key).is_some());
+    }
+
+    #[test]
+    fn ineligible_models_are_never_faulted() {
+        let mut s = spec(1.0, vec![FaultKind::Transient]);
+        s.models = vec!["m0".into()];
+        let inj = FaultInjector::new(sim(), &s);
+        let mut sink = ProfSimSink::new(0.3);
+        let mut out = Vec::new();
+        let mut st = state_for(&inj, "m2", 1);
+        // m2 not in the eligible set: clean
+        inj.decode(&mut sink, "m2", 1, &[1], &mut st, &[1], &mut out)
+            .unwrap();
+        // m0 is: faulted
+        let mut st0 = state_for(&inj, "m0", 1);
+        assert!(inj.decode(&mut sink, "m0", 1, &[1], &mut st0, &[1],
+                           &mut out).is_err());
+        assert_eq!(inj.injected(), 1);
+    }
+
+    #[test]
+    fn max_faults_bounds_the_burst() {
+        let mut s = spec(1.0, vec![FaultKind::Transient]);
+        s.max_faults = 3;
+        let inj = FaultInjector::new(sim(), &s);
+        let mut sink = ProfSimSink::new(0.3);
+        let mut out = Vec::new();
+        let mut st = state_for(&inj, "m2", 1);
+        let mut errs = 0;
+        for _ in 0..10 {
+            errs += inj.decode(&mut sink, "m2", 1, &[1], &mut st, &[1],
+                               &mut out).is_err() as usize;
+        }
+        assert_eq!(errs, 3, "burst must stop at max_faults");
+        assert_eq!(inj.injected(), 3);
+    }
+
+    #[test]
+    fn stuck_calls_overrun_the_deadline_with_a_structured_error() {
+        let mut s = spec(1.0, vec![FaultKind::Stuck]);
+        s.deadline = Duration::from_millis(2);
+        let inj = FaultInjector::new(sim(), &s);
+        let mut sink = ProfSimSink::new(0.3);
+        let mut out = Vec::new();
+        let mut st = state_for(&inj, "m2", 1);
+        let err = inj.decode(&mut sink, "m2", 1, &[1], &mut st, &[1],
+                             &mut out).unwrap_err();
+        assert!(err.to_string().contains("deadline exceeded"), "{err}");
+        assert_eq!(inj.overruns(), 1);
+    }
+}

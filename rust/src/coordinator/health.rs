@@ -1,0 +1,520 @@
+//! Per-model circuit breakers (DESIGN.md §13): adaptive recovery for the
+//! fault-tolerant execution path.
+//!
+//! Every model in the pool gets a [`Breaker`] with the classic
+//! three-state machine:
+//!
+//! ```text
+//!            trip_after consecutive failures
+//!   Closed ─────────────────────────────────────▶ Open
+//!     ▲                                            │ backoff expires
+//!     │  probe_successes successful probes         ▼
+//!     └──────────────────────────────────────── HalfOpen
+//!                (any probe failure re-opens with doubled backoff)
+//! ```
+//!
+//! While `Open`, the model is *quarantined*: the scheduler drops every
+//! chain containing it (`Scheduler::select_for_group_gated`), so the
+//! router degrades around the failure instead of hammering it. After an
+//! exponentially backed-off hold the breaker enters `HalfOpen` and the
+//! model re-enters candidate chains — those steps *are* the probes; a
+//! few successes re-close the breaker, any failure re-opens it with a
+//! longer hold. An error-rate EMA rides along as a smoothed health
+//! signal for diagnostics (`stats_json`).
+//!
+//! Time is measured in engine *ticks*, not wall clock, so breaker
+//! behavior is deterministic under the seeded chaos suites and free of
+//! `Instant` reads on the hot path. All bookkeeping is plain integer
+//! state: feeding an outcome or consulting quarantine allocates nothing
+//! (the `health-check` bench row gates this at 0 allocs/step). When no
+//! breaker has ever tripped, [`HealthRegistry::any_quarantined`] is a
+//! single bool read and chain selection is byte-identical to a build
+//! without this module — the fault-free-identity requirement.
+use std::sync::Arc;
+
+use crate::coordinator::scheduler::Chain;
+
+/// Breaker tuning (see `EngineConfig::breaker_spec`).
+#[derive(Debug, Clone)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip `Closed -> Open`.
+    pub trip_after: u32,
+    /// Hold ticks for the first `Open` period.
+    pub backoff_ticks: u64,
+    /// Multiplier applied to the hold for each successive re-open.
+    pub backoff_mult: f64,
+    /// Hold cap, in ticks.
+    pub backoff_max_ticks: u64,
+    /// Successful half-open probes required to re-close.
+    pub probe_successes: u32,
+    /// Error-rate EMA smoothing factor in `(0, 1]`.
+    pub ema_alpha: f64,
+}
+
+impl BreakerConfig {
+    /// Distill the engine config's breaker knobs (already validated).
+    pub fn from_config(cfg: &crate::config::EngineConfig) -> Self {
+        BreakerConfig {
+            trip_after: cfg.breaker_trip_after,
+            backoff_ticks: cfg.breaker_backoff_ticks,
+            backoff_mult: cfg.breaker_backoff_mult,
+            backoff_max_ticks: cfg.breaker_backoff_max_ticks,
+            probe_successes: cfg.breaker_probe_successes,
+            ema_alpha: cfg.ema_alpha,
+        }
+    }
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            trip_after: 3,
+            backoff_ticks: 8,
+            backoff_mult: 2.0,
+            backoff_max_ticks: 512,
+            probe_successes: 2,
+            ema_alpha: 0.2,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable numeric encoding for telemetry spans / JSON.
+    pub fn code(self) -> u8 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// One model's breaker. Driven by [`HealthRegistry`]; exposed for the
+/// unit suite.
+#[derive(Debug)]
+pub struct Breaker {
+    state: BreakerState,
+    /// Consecutive failures while `Closed`.
+    consecutive: u32,
+    /// Successful probes while `HalfOpen`.
+    probes_ok: u32,
+    /// Re-open count since the last close (drives backoff growth).
+    backoff_level: u32,
+    /// Tick at which an `Open` breaker transitions to `HalfOpen`.
+    open_until: u64,
+    /// Smoothed error rate in [0, 1].
+    pub error_ema: f64,
+    pub trips: u64,
+    pub probes: u64,
+    pub recoveries: u64,
+}
+
+impl Breaker {
+    pub fn new() -> Self {
+        Breaker {
+            state: BreakerState::Closed,
+            consecutive: 0,
+            probes_ok: 0,
+            backoff_level: 0,
+            open_until: 0,
+            error_ema: 0.0,
+            trips: 0,
+            probes: 0,
+            recoveries: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Quarantined = dropped from every candidate chain.
+    pub fn quarantined(&self) -> bool {
+        self.state == BreakerState::Open
+    }
+
+    /// The hold applied by the next trip, in ticks (exponential with a
+    /// cap; integer arithmetic so repeated runs agree bit-for-bit).
+    fn hold(&self, cfg: &BreakerConfig) -> u64 {
+        let mut h = cfg.backoff_ticks.max(1) as f64;
+        for _ in 0..self.backoff_level {
+            h *= cfg.backoff_mult.max(1.0);
+            if h >= cfg.backoff_max_ticks as f64 {
+                return cfg.backoff_max_ticks.max(1);
+            }
+        }
+        (h as u64).clamp(1, cfg.backoff_max_ticks.max(1))
+    }
+
+    fn trip(&mut self, cfg: &BreakerConfig, now: u64) {
+        self.open_until = now + self.hold(cfg);
+        self.backoff_level = self.backoff_level.saturating_add(1);
+        self.state = BreakerState::Open;
+        self.consecutive = 0;
+        self.probes_ok = 0;
+        self.trips += 1;
+    }
+
+    /// Advance tick time: an `Open` breaker whose hold expired becomes
+    /// `HalfOpen` (the model re-enters chains as a probe). Returns true
+    /// on a state change.
+    pub fn advance(&mut self, now: u64) -> bool {
+        if self.state == BreakerState::Open && now >= self.open_until {
+            self.state = BreakerState::HalfOpen;
+            self.probes_ok = 0;
+            self.probes += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Feed one successful call. Returns true on a state change.
+    pub fn on_success(&mut self, cfg: &BreakerConfig) -> bool {
+        self.error_ema *= 1.0 - cfg.ema_alpha;
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive = 0;
+                false
+            }
+            BreakerState::HalfOpen => {
+                self.probes_ok += 1;
+                if self.probes_ok >= cfg.probe_successes {
+                    self.state = BreakerState::Closed;
+                    self.backoff_level = 0;
+                    self.consecutive = 0;
+                    self.recoveries += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            // stray success while open (in-flight call from before the
+            // trip): welcome news, but state waits for the hold
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Feed one failed call. Returns true on a state change.
+    pub fn on_failure(&mut self, cfg: &BreakerConfig, now: u64) -> bool {
+        self.error_ema =
+            self.error_ema * (1.0 - cfg.ema_alpha) + cfg.ema_alpha;
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive += 1;
+                if self.consecutive >= cfg.trip_after {
+                    self.trip(cfg, now);
+                    true
+                } else {
+                    false
+                }
+            }
+            // a failed probe re-opens immediately with a longer hold
+            BreakerState::HalfOpen => {
+                self.trip(cfg, now);
+                true
+            }
+            BreakerState::Open => false,
+        }
+    }
+}
+
+impl Default for Breaker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// All breakers for a router, indexed like the recorder intern table
+/// (the manifest's sorted model set).
+pub struct HealthRegistry {
+    cfg: BreakerConfig,
+    names: Arc<Vec<String>>,
+    breakers: Vec<Breaker>,
+    /// Engine tick counter (the breaker time base).
+    now: u64,
+    /// Count of `Open` breakers — the steady-state fast path: zero means
+    /// every quarantine check is one comparison.
+    open_count: usize,
+    /// State changes since the last drain: `(model idx, new state)`,
+    /// exported as telemetry spans. Empty (and untouched) unless faults
+    /// actually occur.
+    changes: Vec<(u16, BreakerState)>,
+}
+
+impl HealthRegistry {
+    pub fn new(names: Arc<Vec<String>>, cfg: BreakerConfig) -> Self {
+        let breakers = names.iter().map(|_| Breaker::new()).collect();
+        HealthRegistry {
+            cfg,
+            names,
+            breakers,
+            now: 0,
+            open_count: 0,
+            changes: Vec::new(),
+        }
+    }
+
+    /// Advance one engine tick: expire `Open` holds into `HalfOpen`.
+    pub fn begin_tick(&mut self) {
+        self.now += 1;
+        if self.open_count == 0 {
+            return;
+        }
+        for (i, b) in self.breakers.iter_mut().enumerate() {
+            if b.advance(self.now) {
+                self.open_count -= 1;
+                self.changes.push((i as u16, b.state()));
+            }
+        }
+    }
+
+    /// Interned index of a model name (the recorder table order).
+    pub fn idx(&self, model: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == model)
+    }
+
+    pub fn on_success_idx(&mut self, i: usize) {
+        if self.breakers[i].on_success(&self.cfg) {
+            self.changes.push((i as u16, self.breakers[i].state()));
+        }
+    }
+
+    pub fn on_failure_idx(&mut self, i: usize) {
+        let was_open = self.breakers[i].quarantined();
+        if self.breakers[i].on_failure(&self.cfg, self.now) {
+            if !was_open && self.breakers[i].quarantined() {
+                self.open_count += 1;
+            }
+            self.changes.push((i as u16, self.breakers[i].state()));
+        }
+    }
+
+    pub fn on_success(&mut self, model: &str) {
+        if let Some(i) = self.idx(model) {
+            self.on_success_idx(i);
+        }
+    }
+
+    pub fn on_failure(&mut self, model: &str) {
+        if let Some(i) = self.idx(model) {
+            self.on_failure_idx(i);
+        }
+    }
+
+    /// Is any model currently quarantined? One bool read — the
+    /// steady-state guard in front of every other check.
+    pub fn any_quarantined(&self) -> bool {
+        self.open_count > 0
+    }
+
+    /// May this chain run (no member quarantined)? Allocation-free:
+    /// borrowed name lookups against the intern table.
+    pub fn chain_allowed(&self, chain: &Chain) -> bool {
+        if self.open_count == 0 {
+            return true;
+        }
+        chain.models.iter().all(|m| match self.idx(m) {
+            Some(i) => !self.breakers[i].quarantined(),
+            None => true,
+        })
+    }
+
+    pub fn state_of(&self, model: &str) -> Option<BreakerState> {
+        self.idx(model).map(|i| self.breakers[i].state())
+    }
+
+    pub fn breaker(&self, model: &str) -> Option<&Breaker> {
+        self.idx(model).map(|i| &self.breakers[i])
+    }
+
+    /// Totals across all breakers: `(trips, probes, recoveries)`.
+    pub fn totals(&self) -> (u64, u64, u64) {
+        self.breakers.iter().fold((0, 0, 0), |(t, p, r), b| {
+            (t + b.trips, p + b.probes, r + b.recoveries)
+        })
+    }
+
+    /// Drain state changes accumulated since the last call (telemetry
+    /// export on the engine thread). The buffer keeps its capacity.
+    pub fn drain_changes(&mut self, mut f: impl FnMut(u16, BreakerState)) {
+        for &(i, s) in &self.changes {
+            f(i, s);
+        }
+        self.changes.clear();
+    }
+
+    /// Per-model `(name, state, error_ema)` for the stats snapshot.
+    pub fn report(&self) -> impl Iterator<Item = (&str, BreakerState, f64)> {
+        self.names.iter().zip(&self.breakers)
+            .map(|(n, b)| (n.as_str(), b.state(), b.error_ema))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BreakerConfig {
+        BreakerConfig {
+            trip_after: 3,
+            backoff_ticks: 4,
+            backoff_mult: 2.0,
+            backoff_max_ticks: 32,
+            probe_successes: 2,
+            ema_alpha: 0.5,
+        }
+    }
+
+    fn names() -> Arc<Vec<String>> {
+        Arc::new(vec!["m0".into(), "m1".into(), "m2".into()])
+    }
+
+    #[test]
+    fn trips_only_after_consecutive_failures() {
+        let c = cfg();
+        let mut b = Breaker::new();
+        b.on_failure(&c, 1);
+        b.on_failure(&c, 1);
+        // an interleaved success resets the consecutive count
+        b.on_success(&c);
+        b.on_failure(&c, 2);
+        b.on_failure(&c, 2);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.on_failure(&c, 3), "third consecutive failure trips");
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(b.quarantined());
+        assert_eq!(b.trips, 1);
+    }
+
+    #[test]
+    fn half_open_probe_cadence_follows_the_backoff() {
+        let c = cfg();
+        let mut b = Breaker::new();
+        for _ in 0..3 {
+            b.on_failure(&c, 10);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        // hold = backoff_ticks = 4: not half-open until tick 14
+        for t in 11..14 {
+            assert!(!b.advance(t), "released early at tick {t}");
+        }
+        assert!(b.advance(14));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.probes, 1);
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let c = cfg();
+        let mut b = Breaker::new();
+        for _ in 0..3 {
+            b.on_failure(&c, 0);
+        }
+        assert_eq!(b.open_until, 4); // level 0: 4 ticks
+        b.advance(4);
+        b.on_failure(&c, 4); // failed probe
+        assert_eq!(b.open_until, 4 + 8); // level 1: 8 ticks
+        b.advance(12);
+        b.on_failure(&c, 12);
+        assert_eq!(b.open_until, 12 + 16); // level 2: 16 ticks
+        b.advance(28);
+        b.on_failure(&c, 28);
+        assert_eq!(b.open_until, 28 + 32); // level 3: capped at 32
+        b.advance(60);
+        b.on_failure(&c, 60);
+        assert_eq!(b.open_until, 60 + 32, "hold must stay capped");
+    }
+
+    #[test]
+    fn recloses_after_enough_probe_successes_and_resets_backoff() {
+        let c = cfg();
+        let mut b = Breaker::new();
+        for _ in 0..3 {
+            b.on_failure(&c, 0);
+        }
+        b.advance(4);
+        assert!(!b.on_success(&c), "one probe is not enough");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.on_success(&c), "second probe closes");
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.recoveries, 1);
+        // backoff reset: the next trip holds for the base 4 ticks again
+        for _ in 0..3 {
+            b.on_failure(&c, 100);
+        }
+        assert_eq!(b.open_until, 104);
+    }
+
+    #[test]
+    fn error_ema_tracks_failure_rate() {
+        let c = cfg();
+        let mut b = Breaker::new();
+        b.on_failure(&c, 0);
+        assert!((b.error_ema - 0.5).abs() < 1e-12);
+        b.on_success(&c);
+        assert!((b.error_ema - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_quarantines_chains_and_recovers() {
+        let mut h = HealthRegistry::new(names(), cfg());
+        let spec_chain = Chain { models: vec!["m0".into(), "m2".into()],
+                                 window: 4 };
+        let tmo = Chain { models: vec!["m2".into()], window: 0 };
+        assert!(h.chain_allowed(&spec_chain) && h.chain_allowed(&tmo));
+        assert!(!h.any_quarantined());
+
+        for _ in 0..3 {
+            h.on_failure("m0");
+        }
+        assert!(h.any_quarantined());
+        assert!(!h.chain_allowed(&spec_chain), "m0 chains must drop");
+        assert!(h.chain_allowed(&tmo), "target-only stays available");
+        assert_eq!(h.state_of("m0"), Some(BreakerState::Open));
+
+        // hold expires -> half-open -> probes close it
+        for _ in 0..cfg().backoff_ticks + 1 {
+            h.begin_tick();
+        }
+        assert_eq!(h.state_of("m0"), Some(BreakerState::HalfOpen));
+        assert!(!h.any_quarantined(), "half-open re-enters chains");
+        assert!(h.chain_allowed(&spec_chain));
+        h.on_success("m0");
+        h.on_success("m0");
+        assert_eq!(h.state_of("m0"), Some(BreakerState::Closed));
+        let (trips, probes, recoveries) = h.totals();
+        assert_eq!((trips, probes, recoveries), (1, 1, 1));
+
+        // the transition log saw open -> half-open -> closed
+        let mut seen = Vec::new();
+        h.drain_changes(|i, s| seen.push((i, s)));
+        assert_eq!(seen, vec![(0, BreakerState::Open),
+                              (0, BreakerState::HalfOpen),
+                              (0, BreakerState::Closed)]);
+        h.drain_changes(|_, _| panic!("drained twice"));
+    }
+
+    #[test]
+    fn unknown_models_are_ignored() {
+        let mut h = HealthRegistry::new(names(), cfg());
+        h.on_failure("nope");
+        h.on_success("nope");
+        assert!(h.state_of("nope").is_none());
+        assert!(!h.any_quarantined());
+    }
+}

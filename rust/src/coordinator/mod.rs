@@ -12,7 +12,9 @@ pub mod backend;
 pub mod chain_router;
 pub mod engine;
 pub mod executor;
+pub mod faults;
 pub mod groups;
+pub mod health;
 pub mod profiler;
 pub mod recorder;
 pub mod scheduler;
@@ -26,7 +28,9 @@ pub use chain_router::ChainRouter;
 pub use engine::{committed_frontier, Batcher, Finished, Request,
                  SeqScratch, Slot};
 pub use executor::{Executor, SerialXla};
+pub use faults::{FaultInjector, FaultKind, FaultPlan, FaultSpec};
 pub use groups::GroupKey;
+pub use health::{Breaker, BreakerConfig, BreakerState, HealthRegistry};
 pub use profiler::Profiler;
 pub use recorder::{GroupRecorder, ProfSimSink, StepSink};
 pub use scheduler::{Chain, Scheduler, ScoredChain};

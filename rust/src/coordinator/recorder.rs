@@ -47,6 +47,15 @@ pub trait StepSink {
     fn observe_rollback(&mut self, _slot: usize, _level: usize,
                         _depth: usize) {
     }
+
+    /// One *failed* backend call (call error, deadline overrun or
+    /// corrupt logits detected downstream), observed at the containment
+    /// point in `run_spec_step` (DESIGN.md §13). Never folded into
+    /// profiler EMAs or similarity state — failed calls carry no cost
+    /// signal, only a health signal — so the default is a no-op and only
+    /// tracing sinks ([`GroupRecorder`]) keep it for the gather-side
+    /// circuit breakers and telemetry.
+    fn observe_fault(&mut self, _model: &str, _kind: FnKind) {}
 }
 
 /// The admission path (prefill/insert) records call costs straight into
@@ -130,6 +139,10 @@ enum Event {
         level: u16,
         depth: u32,
     },
+    Fault {
+        model: u16,
+        kind: FnKind,
+    },
 }
 
 /// The per-group event log. One per gid, owned by the router, handed
@@ -200,9 +213,11 @@ impl GroupRecorder {
                         &self.names[verifier as usize],
                         accepted as usize, window as usize);
                 }
-                // telemetry-only: exported via for_each_rollback before
-                // the drain, nothing to fold into the trackers
-                Event::Rollback { .. } => {}
+                // telemetry/health-only: exported via for_each_rollback /
+                // for_each_fault before the drain, nothing to fold into
+                // the trackers (profiler hygiene: a failed call must
+                // never move an EMA)
+                Event::Rollback { .. } | Event::Fault { .. } => {}
             }
         }
         self.events.clear();
@@ -242,6 +257,17 @@ impl GroupRecorder {
         for ev in &self.events {
             if let Event::Rollback { slot, level, depth } = *ev {
                 f(slot, level, depth);
+            }
+        }
+    }
+
+    /// Visit fault observations `(model, kind)` in log order (pre-drain,
+    /// engine thread): the gather-side feed for the per-model circuit
+    /// breakers and the fault telemetry counters.
+    pub fn for_each_fault(&self, mut f: impl FnMut(u16, FnKind)) {
+        for ev in &self.events {
+            if let Event::Fault { model, kind } = *ev {
+                f(model, kind);
             }
         }
     }
@@ -297,6 +323,11 @@ impl StepSink for GroupRecorder {
             level: level as u16,
             depth: depth as u32,
         });
+    }
+
+    fn observe_fault(&mut self, model: &str, kind: FnKind) {
+        let model = self.intern(model);
+        self.events.push(Event::Fault { model, kind });
     }
 }
 
@@ -407,6 +438,33 @@ mod tests {
         let mut sim = SimilarityTracker::new(0.2);
         rec.drain_into(&mut prof, &mut sim);
         assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn faults_feed_health_but_never_the_trackers() {
+        let mut rec = GroupRecorder::new(names());
+        rec.observe_fault("m0", FnKind::Draft);
+        rec.record_call_parts("m2", FnKind::Decode, 1, 0,
+                              Duration::from_millis(2));
+        rec.observe_fault("m1", FnKind::Verify);
+
+        let mut faults = Vec::new();
+        rec.for_each_fault(|m, k| faults.push((m, k)));
+        assert_eq!(faults,
+                   vec![(0, FnKind::Draft), (1, FnKind::Verify)]);
+
+        // draining folds only the successful call; the faulted models'
+        // profiler entries stay empty (hygiene) and the log clears
+        let mut prof = Profiler::new(0.2);
+        let mut sim = SimilarityTracker::new(0.2);
+        rec.drain_into(&mut prof, &mut sim);
+        assert!(rec.is_empty());
+        let faulted = FnKey { model: "m0".into(), kind: FnKind::Draft,
+                              batch: 1, window: 0 };
+        assert!(prof.call_cost(&faulted).is_none());
+        let clean = FnKey { model: "m2".into(), kind: FnKind::Decode,
+                            batch: 1, window: 0 };
+        assert!(prof.call_cost(&clean).is_some());
     }
 
     #[test]

@@ -311,6 +311,20 @@ impl Scheduler {
         self.select_with_headroom(profiler, sim, current, h.as_ref())
     }
 
+    /// [`Scheduler::select_for_group`] with a chain-admissibility gate
+    /// (DESIGN.md §13) — the router's planning entry point while any
+    /// circuit breaker is open. Chains for which `allow` returns false
+    /// (e.g. containing a quarantined model) are excluded from warm-up,
+    /// exploration and greedy selection alike.
+    pub fn select_for_group_gated(&mut self, profiler: &Profiler,
+                                  sim: &SimilarityTracker,
+                                  current: Option<&Chain>,
+                                  group_slack_s: Option<f64>,
+                                  allow: &dyn Fn(&Chain) -> bool) -> Chain {
+        let h = group_slack_s.map(|slack_s| HeadroomSignal { slack_s });
+        self.select_gated(profiler, sim, current, h.as_ref(), allow)
+    }
+
     /// `select_from` with SLO feedback (DESIGN.md §7): the admission
     /// layer's headroom signal biases the choice toward chains with
     /// cheaper worst-case steps when in-flight deadlines are tight.
@@ -319,11 +333,28 @@ impl Scheduler {
                                 current: Option<&Chain>,
                                 headroom: Option<&HeadroomSignal>)
                                 -> Chain {
+        self.select_gated(profiler, sim, current, headroom, &|_| true)
+    }
+
+    /// `select_with_headroom` with a chain-admissibility gate. With the
+    /// always-true gate the decision (and the RNG stream it consumes) is
+    /// identical to the ungated path — the fault-free engine never
+    /// behaves differently for having this parameter. If the gate
+    /// rejects every candidate, the target-only chain is returned as the
+    /// fallback of last resort (the engine can always decode on the
+    /// target alone, and a quarantined *target* has nothing to hide
+    /// behind anyway).
+    pub fn select_gated(&mut self, profiler: &Profiler,
+                        sim: &SimilarityTracker,
+                        current: Option<&Chain>,
+                        headroom: Option<&HeadroomSignal>,
+                        allow: &dyn Fn(&Chain) -> bool) -> Chain {
         self.plans += 1;
         let mut scored = self.score_all(profiler, sim);
         let warmup_budget = 3 * scored.len() as u64;
         if self.plans <= warmup_budget {
-            if let Some(c) = scored.iter().find(|s| s.cold) {
+            if let Some(c) = scored.iter()
+                .find(|s| s.cold && allow(&s.chain)) {
                 self.explorations += 1;
                 return c.chain.clone();
             }
@@ -331,21 +362,27 @@ impl Scheduler {
         if scored.len() > 1 && self.rng.f64() < self.cfg.explore_eps {
             // explore: prefer cold (never-measured) chains, else uniform —
             // but never explore a chain whose single step is a guaranteed
-            // deadline blow under the current headroom (infinite score)
+            // deadline blow under the current headroom (infinite score),
+            // and never a gated-out chain
             self.explorations += 1;
             let feasible: Vec<&ScoredChain> = scored.iter()
-                .filter(|s| Self::effective_score(s, headroom).is_finite())
+                .filter(|s| allow(&s.chain)
+                        && Self::effective_score(s, headroom).is_finite())
                 .collect();
             let pool: Vec<&ScoredChain> = if feasible.is_empty() {
-                scored.iter().collect()
+                scored.iter().filter(|s| allow(&s.chain)).collect()
             } else {
                 feasible
             };
-            let cold: Vec<_> = pool.iter().filter(|s| s.cold).collect();
-            if !cold.is_empty() {
-                return cold[self.rng.below(cold.len())].chain.clone();
+            if !pool.is_empty() {
+                let cold: Vec<_> = pool.iter().filter(|s| s.cold).collect();
+                if !cold.is_empty() {
+                    return cold[self.rng.below(cold.len())].chain.clone();
+                }
+                return pool[self.rng.below(pool.len())].chain.clone();
             }
-            return pool[self.rng.below(pool.len())].chain.clone();
+            // nothing admissible to explore — fall through to the
+            // last-resort fallback below
         }
         if headroom.is_some() {
             scored.sort_by(|a, b| {
@@ -355,18 +392,29 @@ impl Scheduler {
             });
         }
         if let Some(cur) = current {
-            if let Some(cur_scored) = scored.iter()
-                .find(|s| &s.chain == cur) {
-                // 25%: switching re-syncs the incoming models' caches
-                // across every in-flight sequence, which near-tied
-                // predictions never pay back
-                if Self::effective_score(&scored[0], headroom)
-                    > Self::effective_score(cur_scored, headroom) * 0.75 {
-                    return cur.clone();
+            // a gated-out current chain gets no hysteresis: the switch
+            // away from a quarantined model is exactly the point
+            if allow(cur) {
+                if let Some(cur_scored) = scored.iter()
+                    .find(|s| &s.chain == cur) {
+                    if let Some(best) = scored.iter()
+                        .find(|s| allow(&s.chain)) {
+                        // 25%: switching re-syncs the incoming models'
+                        // caches across every in-flight sequence, which
+                        // near-tied predictions never pay back
+                        if Self::effective_score(best, headroom)
+                            > Self::effective_score(cur_scored, headroom)
+                                * 0.75 {
+                            return cur.clone();
+                        }
+                    }
                 }
             }
         }
-        scored[0].chain.clone()
+        match scored.iter().find(|s| allow(&s.chain)) {
+            Some(best) => best.chain.clone(),
+            None => Chain::target_only(&self.cfg.target),
+        }
     }
 }
 
@@ -750,6 +798,44 @@ mod tests {
         let a = s.select_for_group(&prof, &sim, None, None);
         let b = s.select_from(&prof, &sim, None);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gated_selection_excludes_quarantined_models() {
+        let mut c = cfg();
+        c.explore_eps = 0.0;
+        let mut s = Scheduler::new(manifest(), c, 1);
+        let (prof, mut sim) = warm_profiler(&s);
+        sim.observe_acceptance("m0", "m2", 4, 4);
+        sim.observe_acceptance("m1", "m2", 4, 4);
+        sim.observe_acceptance("m0", "m1", 4, 4);
+        // burn the cold-start warm-up so greedy selection applies
+        while s.plans <= 3 * s.candidate_chains().len() as u64 {
+            let _ = s.select(&prof, &sim);
+        }
+        let best = s.select_for_group_gated(&prof, &sim, None, None,
+                                            &|_| true);
+        // with cheap warm drafts + near-1 acceptance, a speculative
+        // chain must win unassisted
+        assert!(best.is_speculative(), "got {best:?}");
+        // the always-true gate is the ungated decision
+        assert_eq!(best, s.select_for_group(&prof, &sim, None, None));
+        // quarantine the winning drafter: nothing selected may use it
+        let bad = best.models[0].clone();
+        let gate = |ch: &Chain| !ch.models.contains(&bad);
+        let gated =
+            s.select_for_group_gated(&prof, &sim, None, None, &gate);
+        assert!(!gated.models.contains(&bad),
+                "quarantined {bad} still selected: {gated:?}");
+        // a quarantined current chain gets no hysteresis — the switch
+        // away is forced even within the 25% band
+        let forced = s.select_for_group_gated(&prof, &sim, Some(&best),
+                                              None, &gate);
+        assert!(!forced.models.contains(&bad), "hysteresis kept {forced:?}");
+        // everything quarantined: target-only is the last resort
+        let none =
+            s.select_for_group_gated(&prof, &sim, None, None, &|_| false);
+        assert_eq!(none, Chain::target_only("m2"));
     }
 
     #[test]

@@ -20,6 +20,22 @@
 //! feed DTV similarity observations (Eq. 5-6) and empirical acceptance
 //! EMAs to the scheduler's tracker.
 //!
+//! ## Fault containment (DESIGN.md §13)
+//!
+//! Backend calls can fail. A failed call — or, when
+//! [`StepCtx::check_logits`] is set, a non-finite logit row — on a
+//! *draft or intermediate* model **degrades** the step: the chain is
+//! truncated to target-only for this step and every active slot still
+//! commits exactly one target token. The abandoned speculative appends
+//! are ordinary unpromoted mask entries (they never advanced
+//! `valid_len`), reclaimed by the engine's `fix_caches` pass like any
+//! post-rollback stale state. A failure on the *target* model aborts
+//! the step with the error: there is no fallback that preserves output
+//! quality. Either way the failure is reported to the sink via
+//! [`StepSink::observe_fault`] — and never to the profiler/similarity
+//! trackers, because a failed call carries no usable timing or
+//! distribution signal.
+//!
 //! ## Zero-allocation hot path (DESIGN.md §8)
 //!
 //! Every per-step buffer lives in the reusable [`StepScratch`] arena the
@@ -47,6 +63,7 @@ use crate::coordinator::recorder::StepSink;
 use crate::coordinator::scheduler::Chain;
 use crate::coordinator::similarity::dtv_logits;
 use crate::rng::{argmax, softmax_into, softmax_prob_at, Rng};
+use crate::runtime::FnKind;
 use crate::state::{ModelState, StateBuf, StateShard};
 
 /// Everything a step needs, borrowed from the engine.
@@ -75,6 +92,11 @@ pub struct StepCtx<'a> {
     pub rule: AcceptRule,
     pub rngs: &'a mut [Rng],
     pub scratch: &'a mut StepScratch,
+    /// Scan logit outputs for non-finite values and treat a poisoned row
+    /// as a call failure (module doc: fault containment). Off by default
+    /// — the engine sets it only when fault injection or a call deadline
+    /// is configured, so the fault-free hot path never pays the scan.
+    pub check_logits: bool,
 }
 
 /// Exclusive access to the state buffer a backend call should receive:
@@ -261,6 +283,14 @@ fn fill_lens(states: StateShard, model: &str, batch: usize,
     Ok(())
 }
 
+/// Corrupt-output guard (gated behind [`StepCtx::check_logits`]): a
+/// single NaN/Inf anywhere in a logit buffer poisons argmax, softmax and
+/// every downstream acceptance decision, so the whole call is treated as
+/// failed.
+fn logits_ok(logits: &[f32]) -> bool {
+    logits.iter().all(|x| x.is_finite())
+}
+
 /// Bring `model`'s cache to the committed frontier (valid == C-1) on every
 /// active slot, using chunked verify calls of up to w+1 tokens.
 pub fn catch_up(ctx: &mut StepCtx, model: &str, window: usize,
@@ -382,6 +412,9 @@ fn bonus_token(rule: AcceptRule, rng: &mut Rng, p_row: &[f32],
 /// Execute one full chain step. `slots[b] = Some(committed)` for active
 /// slots. The result lands in `ctx.scratch.outcome` (reused buffers);
 /// masks are synchronized here.
+///
+/// A failed draft/intermediate call degrades the step to target-only
+/// (module doc: fault containment); a failed target call returns `Err`.
 pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
                      pad: i32) -> Result<()> {
     // the empty-committed-sequence invariant is enforced by catch_up
@@ -389,6 +422,24 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
     if chain.models.len() == 1 {
         return run_tmo_step(ctx, chain.target(), slots, pad);
     }
+    match run_chain_levels(ctx, chain, slots, pad)? {
+        ChainRun::Completed => Ok(()),
+        // chain truncation: finish the step target-only, so every
+        // active slot still commits exactly one target token this tick
+        ChainRun::Degraded => run_tmo_step(ctx, chain.target(), slots, pad),
+    }
+}
+
+/// `Degraded` = a non-target call failed and the caller must finish the
+/// step target-only. Target failures (and engine-invariant violations)
+/// surface as `Err` instead — nothing can be committed.
+enum ChainRun {
+    Completed,
+    Degraded,
+}
+
+fn run_chain_levels(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
+                    pad: i32) -> Result<ChainRun> {
     let w = chain.window;
     let w1 = w + 1;
     let v = ctx.vocab;
@@ -396,7 +447,15 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
     let n_levels = chain.models.len();
 
     for m in &chain.models {
-        catch_up(ctx, m, w, slots)?;
+        if let Err(e) = catch_up(ctx, m, w, slots) {
+            // catch-up is chunked verify traffic, so attribute the fault
+            // to the verify entry point
+            ctx.rec.observe_fault(m, FnKind::Verify);
+            if m.as_str() == chain.target() {
+                return Err(e);
+            }
+            return Ok(ChainRun::Degraded);
+        }
     }
     base_tokens_into(slots, pad, &mut ctx.scratch.base)?;
 
@@ -406,11 +465,18 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
     {
         let st = ctx.states.get(drafter)?;
         let s = &mut *ctx.scratch;
-        {
+        let call = {
             let mut kv = kv_handle(ctx.exec, st, &mut s.dummy_kv);
             ctx.exec.draft(&mut *ctx.rec, drafter, batch, w, &s.base,
                            &mut kv, &s.lens, &mut s.d_toks,
-                           &mut s.d_logits)?;
+                           &mut s.d_logits)
+        };
+        if call.is_err() {
+            // nothing usable was drafted; truncate the chain (any K/V
+            // rows a backend wrote before failing sit past valid_len and
+            // are overwritten or reclaimed like any stale entry)
+            ctx.rec.observe_fault(drafter, FnKind::Draft);
+            return Ok(ChainRun::Degraded);
         }
         for (b, sq) in slots.iter().enumerate() {
             if sq.is_some() {
@@ -418,6 +484,10 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
                 // base + w-1 drafted K/V rows were written
                 st.mask.append_speculative(b, w);
             }
+        }
+        if ctx.check_logits && !logits_ok(&s.d_logits) {
+            ctx.rec.observe_fault(drafter, FnKind::Draft);
+            return Ok(ChainRun::Degraded);
         }
     }
 
@@ -465,10 +535,19 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
         {
             let st = ctx.states.get(verifier)?;
             let s = &mut *ctx.scratch;
-            {
+            let call = {
                 let mut kv = kv_handle(ctx.exec, st, &mut s.dummy_kv);
                 ctx.exec.verify(&mut *ctx.rec, verifier, batch, w, &s.block,
-                                &mut kv, &s.lens, &mut s.p_cur)?;
+                                &mut kv, &s.lens, &mut s.p_cur)
+            };
+            if let Err(e) = call {
+                ctx.rec.observe_fault(verifier, FnKind::Verify);
+                if is_final {
+                    // the target failed: no fallback preserves output
+                    // quality, so the whole group's step fails
+                    return Err(e);
+                }
+                return Ok(ChainRun::Degraded);
             }
             for (b, sq) in slots.iter().enumerate() {
                 if sq.is_some() {
@@ -485,6 +564,13 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
                         &s.block[b * w1 + 1..(b + 1) * w1]);
                     s.written_len[j * batch + b] = w;
                 }
+            }
+            if ctx.check_logits && !logits_ok(&s.p_cur) {
+                ctx.rec.observe_fault(verifier, FnKind::Verify);
+                if is_final {
+                    bail!("target {verifier} produced non-finite logits");
+                }
+                return Ok(ChainRun::Degraded);
             }
         }
 
@@ -606,7 +692,7 @@ pub fn run_spec_step(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
         }
     }
 
-    Ok(())
+    Ok(ChainRun::Completed)
 }
 
 /// Target-only autoregressive step (TMO baseline; also the [M_t] chain the
@@ -617,16 +703,27 @@ fn run_tmo_step(ctx: &mut StepCtx, target: &str, slots: &SlotSeqs, pad: i32)
     // already at C-1, so this is a no-op; after a truncating commit or a
     // chain switch it may not be).
     let w0 = ctx.exec.manifest().windows[0];
-    catch_up(ctx, target, w0, slots)?;
+    if let Err(e) = catch_up(ctx, target, w0, slots) {
+        ctx.rec.observe_fault(target, FnKind::Verify);
+        return Err(e);
+    }
     base_tokens_into(slots, pad, &mut ctx.scratch.base)?;
     fill_lens(ctx.states, target, ctx.batch, &mut ctx.scratch.lens)?;
     let v = ctx.vocab;
     let st = ctx.states.get(target)?;
     let s = &mut *ctx.scratch;
-    {
+    let call = {
         let mut kv = kv_handle(ctx.exec, st, &mut s.dummy_kv);
         ctx.exec.decode(&mut *ctx.rec, target, ctx.batch, &s.base, &mut kv,
-                        &s.lens, &mut s.p_cur)?;
+                        &s.lens, &mut s.p_cur)
+    };
+    if let Err(e) = call {
+        ctx.rec.observe_fault(target, FnKind::Decode);
+        return Err(e);
+    }
+    if ctx.check_logits && !logits_ok(&s.p_cur) {
+        ctx.rec.observe_fault(target, FnKind::Decode);
+        bail!("target {target} produced non-finite logits");
     }
     s.outcome.reset(ctx.batch, 0, 1);
     for (b, sq) in slots.iter().enumerate() {
@@ -723,6 +820,15 @@ mod tests {
                                 &mut probs, &mut resid);
             assert_ne!(b, 0, "bonus sampled from residual hit q's peak");
         }
+    }
+
+    #[test]
+    fn logits_ok_flags_non_finite_rows() {
+        assert!(logits_ok(&[0.0, 1.5, -2.0]));
+        assert!(logits_ok(&[]));
+        assert!(!logits_ok(&[0.0, f32::NAN, 1.0]));
+        assert!(!logits_ok(&[f32::INFINITY, 0.0]));
+        assert!(!logits_ok(&[f32::NEG_INFINITY]));
     }
 
     #[test]

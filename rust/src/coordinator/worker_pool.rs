@@ -18,11 +18,15 @@
 //!    worker access — the same guarantee a scope join provides, without
 //!    the spawns.
 //!
-//! Task panics are caught on the executing thread and re-raised from
-//! `run`, keeping the pool (and its generation protocol) usable
-//! afterwards. The steady-state `run` path performs no heap allocation.
+//! Task panics are caught per-task on the executing thread and
+//! *contained* (DESIGN.md §13): the lane keeps claiming, so every task
+//! still runs exactly once, the generation protocol stays intact, and
+//! `run` reports the containment through its `bool` return value
+//! (`false` = at least one task panicked) instead of re-raising — a
+//! poisoned group must fail its own slots, not kill the engine thread.
+//! The steady-state `run` path performs no heap allocation.
 use std::cell::Cell;
-use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -85,20 +89,28 @@ fn lock(shared: &Shared) -> MutexGuard<'_, State> {
     shared.state.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-/// Claim-and-run loop shared by workers and the `run()` caller. Returns
-/// Err when a task panicked (payload captured for re-raise).
-fn run_tasks(batch: &Batch, next: &AtomicUsize)
-             -> std::thread::Result<()> {
-    catch_unwind(AssertUnwindSafe(|| loop {
+/// Claim-and-run loop shared by workers and the `run()` caller. Panics
+/// are caught per task (payload dropped) so a panicking task never stops
+/// this lane from draining the rest of the batch; returns `true` when
+/// every task this lane ran completed normally.
+fn run_tasks(batch: &Batch, next: &AtomicUsize) -> bool {
+    let mut clean = true;
+    loop {
         let i = next.fetch_add(1, Ordering::SeqCst);
         if i >= batch.len {
-            break;
+            return clean;
         }
         // SAFETY: index i was claimed by exactly this thread (fetch_add
         // is unique per claim) and the batch outlives the generation —
         // see the `Batch` Send justification.
-        unsafe { (batch.call)(batch.ctx, i) };
-    }))
+        if catch_unwind(AssertUnwindSafe(|| unsafe {
+            (batch.call)(batch.ctx, i)
+        }))
+        .is_err()
+        {
+            clean = false;
+        }
+    }
 }
 
 fn worker_loop(shared: &Shared) {
@@ -120,7 +132,7 @@ fn worker_loop(shared: &Shared) {
             }
         };
         let panicked = match batch {
-            Some(b) => run_tasks(&b, &shared.next).is_err(),
+            Some(b) => !run_tasks(&b, &shared.next),
             None => false,
         };
         let mut st = lock(shared);
@@ -176,12 +188,15 @@ impl WorkerPool {
     }
 
     /// Execute `f` once per task, distributing tasks over every lane.
-    /// Blocks until all tasks completed; re-raises any task panic.
-    /// Steady state allocates nothing.
+    /// Blocks until all tasks completed. Task panics are contained
+    /// per-task (every task still runs exactly once) and reported
+    /// through the return value: `true` = every task completed
+    /// normally, `false` = at least one panicked. The pool stays usable
+    /// either way. Steady state allocates nothing.
     pub fn run<T: Send, F: Fn(&mut T) + Sync>(&self, tasks: &mut [T],
-                                              f: &F) {
+                                              f: &F) -> bool {
         if tasks.is_empty() {
-            return;
+            return true;
         }
         struct RunCtx<'f, T, F> {
             tasks: *mut T,
@@ -220,7 +235,7 @@ impl WorkerPool {
             self.shared.work_cv.notify_all();
         }
         // the caller is a lane too
-        let caller_result = run_tasks(&batch, &self.shared.next);
+        let caller_clean = run_tasks(&batch, &self.shared.next);
         let worker_panicked = {
             let mut st = lock(&self.shared);
             while st.done < spawned {
@@ -231,12 +246,7 @@ impl WorkerPool {
             st.batch = None;
             st.panicked
         };
-        if let Err(p) = caller_result {
-            resume_unwind(p);
-        }
-        if worker_panicked {
-            panic!("a pool worker panicked while executing a task batch");
-        }
+        caller_clean && !worker_panicked
     }
 }
 
@@ -332,20 +342,40 @@ mod tests {
     }
 
     #[test]
-    fn task_panic_propagates_and_pool_survives() {
+    fn task_panic_is_contained_and_pool_survives() {
         let pool = WorkerPool::new(4);
         let mut tasks: Vec<usize> = (0..16).collect();
-        let r = catch_unwind(AssertUnwindSafe(|| {
-            pool.run(&mut tasks, &|t: &mut usize| {
-                if *t == 11 {
-                    panic!("boom");
-                }
-            });
-        }));
-        assert!(r.is_err(), "panic must propagate out of run()");
+        let hits = AtomicU64::new(0);
+        let clean = pool.run(&mut tasks, &|t: &mut usize| {
+            if *t == 11 {
+                panic!("boom");
+            }
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(!clean, "run() must report the contained panic");
+        // containment is per-task: every other task still ran
+        assert_eq!(hits.load(Ordering::SeqCst), 15);
         // the pool keeps working after a panicked generation
         let mut again = vec![0u8; 32];
-        pool.run(&mut again, &|t: &mut u8| *t = 1);
+        assert!(pool.run(&mut again, &|t: &mut u8| *t = 1));
         assert!(again.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn single_lane_panic_still_drains_the_batch() {
+        // per-task catch_unwind: even with no other lanes to pick up the
+        // slack, a panicking task must not abandon the rest of the batch
+        let pool = WorkerPool::new(1);
+        let mut marked: Vec<(usize, bool)> =
+            (0..9).map(|i| (i, false)).collect();
+        let clean = pool.run(&mut marked, &|t: &mut (usize, bool)| {
+            t.1 = true;
+            if t.0 == 4 {
+                panic!("boom");
+            }
+        });
+        assert!(!clean);
+        assert!(marked.iter().all(|&(_, ran)| ran),
+                "all tasks ran despite the mid-batch panic");
     }
 }

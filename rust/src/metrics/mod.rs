@@ -399,6 +399,7 @@ mod tests {
             finished_by_eos: false,
             class,
             slo_ms,
+            error: None,
         }
     }
 

@@ -394,7 +394,7 @@ pub fn request_sync(tx: &mpsc::Sender<EngineMsg>, dataset: &str,
 }
 
 fn finished_to_json(f: &Finished) -> Value {
-    json::obj(vec![
+    let mut fields = vec![
         ("id", json::num(f.id as f64)),
         ("tokens", json::arr(f.tokens.iter()
             .map(|&t| json::num(t as f64)).collect())),
@@ -405,7 +405,14 @@ fn finished_to_json(f: &Finished) -> Value {
             f.completed.duration_since(f.arrival).as_secs_f64() * 1e3)),
         ("eos", json::Value::Bool(f.finished_by_eos)),
         ("class", json::s(f.class.name())),
-    ])
+    ];
+    // requests terminated by a contained backend fault (DESIGN.md §13)
+    // carry their structured error; clean completions serialize
+    // byte-identically to the pre-fault protocol
+    if let Some(e) = &f.error {
+        fields.push(("error", json::s(e)));
+    }
+    json::obj(fields)
 }
 
 fn shed_to_json(rec: &ShedRecord) -> Value {
@@ -770,6 +777,41 @@ pub fn serve_tcp_opts(addr: &str, tx: mpsc::Sender<EngineMsg>,
     Ok(())
 }
 
+/// Connect budget for the client helpers: an unreachable server yields
+/// a structured error instead of hanging the caller on a SYN that never
+/// answers (DESIGN.md §13).
+pub const CLIENT_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Per-read budget for the client helpers: a wedged server (accepted the
+/// connection, never replies) is bounded too.
+pub const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Bounded connect shared by every client helper: connect under
+/// [`CLIENT_CONNECT_TIMEOUT`], then arm [`CLIENT_READ_TIMEOUT`] on the
+/// socket so every subsequent read is bounded as well.
+fn connect_bounded(addr: std::net::SocketAddr) -> Result<TcpStream> {
+    let stream = TcpStream::connect_timeout(&addr, CLIENT_CONNECT_TIMEOUT)
+        .with_context(|| format!(
+            "connecting {addr} (budget {CLIENT_CONNECT_TIMEOUT:?})"))?;
+    stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT))?;
+    Ok(stream)
+}
+
+/// One bounded reply-line read: a socket timeout becomes a structured
+/// error naming the budget instead of a raw `io::Error` (the platform
+/// reports it as `WouldBlock` or `TimedOut` depending on the OS).
+fn bounded_read_line(reader: &mut BufReader<TcpStream>, line: &mut String)
+                     -> Result<usize> {
+    match reader.read_line(line) {
+        Ok(n) => Ok(n),
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+            || e.kind() == std::io::ErrorKind::TimedOut => {
+            bail!("server read timed out: no reply line within \
+                   {CLIENT_READ_TIMEOUT:?}")
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
 /// Minimal client for examples/tests: one request over a fresh connection.
 pub fn client_request(addr: std::net::SocketAddr, dataset: &str,
                       prompt: &[i32], max_new: usize) -> Result<Value> {
@@ -799,13 +841,13 @@ pub fn client_request_opts(addr: std::net::SocketAddr, dataset: &str,
                            prompt: &[i32], max_new: usize,
                            slo_class: Option<&str>, slo_ms: Option<f64>)
                            -> Result<Value> {
-    let mut stream = TcpStream::connect(addr)?;
+    let mut stream = connect_bounded(addr)?;
     let req = json::obj(request_fields(dataset, prompt, max_new, slo_class,
                                        slo_ms));
     writeln!(stream, "{req}")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    bounded_read_line(&mut reader, &mut line)?;
     json::parse(line.trim())
 }
 
@@ -816,7 +858,7 @@ pub fn client_request_stream(addr: std::net::SocketAddr, dataset: &str,
                              prompt: &[i32], max_new: usize,
                              slo_class: Option<&str>, slo_ms: Option<f64>)
                              -> Result<Vec<Value>> {
-    let mut stream = TcpStream::connect(addr)?;
+    let mut stream = connect_bounded(addr)?;
     let mut fields = request_fields(dataset, prompt, max_new, slo_class,
                                     slo_ms);
     fields.push(("stream", Value::Bool(true)));
@@ -826,7 +868,7 @@ pub fn client_request_stream(addr: std::net::SocketAddr, dataset: &str,
     let mut frames = Vec::new();
     loop {
         let mut line = String::new();
-        if reader.read_line(&mut line)? == 0 {
+        if bounded_read_line(&mut reader, &mut line)? == 0 {
             bail!("connection closed mid-stream after {} frames",
                   frames.len());
         }
@@ -844,11 +886,11 @@ pub fn client_request_stream(addr: std::net::SocketAddr, dataset: &str,
 /// One control query over a fresh connection: send `line`, parse the
 /// single JSON reply.
 fn control_query(addr: std::net::SocketAddr, line: &str) -> Result<Value> {
-    let mut stream = TcpStream::connect(addr)?;
+    let mut stream = connect_bounded(addr)?;
     writeln!(stream, "{line}")?;
     let mut reader = BufReader::new(stream);
     let mut reply = String::new();
-    reader.read_line(&mut reply)?;
+    bounded_read_line(&mut reader, &mut reply)?;
     json::parse(reply.trim())
 }
 

@@ -71,6 +71,25 @@ pub struct Telemetry {
     pub accept_len: Hist,
     pub rollback_depth: Hist,
     pub tick_us: Hist,
+    /// Per-tick count of groups that degraded (target-only fallback) or
+    /// failed outright — one sample per tick that saw at least one
+    /// (DESIGN.md §13).
+    pub degraded_groups: Hist,
+    /// Failed backend calls observed by steps (call errors, deadline
+    /// overruns, corrupt logits).
+    pub faults_observed: u64,
+    /// Steps completed target-only after a draft/intermediate failure.
+    pub degraded_steps: u64,
+    /// Groups whose step failed outright (target-side failure/panic).
+    pub failed_groups: u64,
+    /// Requests finished with a structured error.
+    pub failed_requests: u64,
+    /// Circuit breakers: quarantine trips.
+    pub breaker_trips: u64,
+    /// Circuit breakers: half-open probe windows opened (retries).
+    pub breaker_probes: u64,
+    /// Circuit breakers: re-closes after successful probes.
+    pub breaker_recoveries: u64,
     per_class: [ClassHists; SloClass::ALL.len()],
     /// Per-(group,chain) acceptance-length histograms. Labels reuse the
     /// interned strings from the router's group/chain label caches; an
@@ -97,6 +116,14 @@ impl Telemetry {
             accept_len: Hist::new(),
             rollback_depth: Hist::new(),
             tick_us: Hist::new(),
+            degraded_groups: Hist::new(),
+            faults_observed: 0,
+            degraded_steps: 0,
+            failed_groups: 0,
+            failed_requests: 0,
+            breaker_trips: 0,
+            breaker_probes: 0,
+            breaker_recoveries: 0,
             per_class: std::array::from_fn(|_| ClassHists::new()),
             group_accept: Vec::new(),
         }
@@ -234,6 +261,19 @@ impl Telemetry {
                 ("accept_len", hist_json(&self.accept_len, 1.0)),
                 ("rollback_depth", hist_json(&self.rollback_depth, 1.0)),
                 ("tick_ms", hist_json(&self.tick_us, 1000.0)),
+                ("degraded_groups", hist_json(&self.degraded_groups, 1.0)),
+            ])),
+            ("faults", json::obj(vec![
+                ("observed", json::num(self.faults_observed as f64)),
+                ("degraded_steps", json::num(self.degraded_steps as f64)),
+                ("failed_groups", json::num(self.failed_groups as f64)),
+                ("failed_requests",
+                 json::num(self.failed_requests as f64)),
+            ])),
+            ("breakers", json::obj(vec![
+                ("trips", json::num(self.breaker_trips as f64)),
+                ("probes", json::num(self.breaker_probes as f64)),
+                ("recoveries", json::num(self.breaker_recoveries as f64)),
             ])),
             ("per_class", Value::Arr(per_class)),
             ("groups", Value::Arr(groups)),
@@ -318,5 +358,28 @@ mod tests {
             v.get("per_class").unwrap().as_arr().unwrap().len(),
             SloClass::ALL.len()
         );
+    }
+
+    #[test]
+    fn snapshot_exports_fault_and_breaker_counters() {
+        let mut t =
+            Telemetry::new(true, 1, 8, Arc::new(vec!["m0".to_string()]));
+        t.faults_observed = 3;
+        t.degraded_steps = 2;
+        t.failed_requests = 1;
+        t.breaker_trips = 4;
+        t.degraded_groups.record(2);
+        let v = t.snapshot();
+        let f = v.get("faults").unwrap();
+        assert_eq!(f.get("observed").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(f.get("degraded_steps").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(f.get("failed_groups").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(f.get("failed_requests").unwrap().as_f64().unwrap(), 1.0);
+        let b = v.get("breakers").unwrap();
+        assert_eq!(b.get("trips").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(b.get("probes").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(b.get("recoveries").unwrap().as_f64().unwrap(), 0.0);
+        let dg = v.get("hist").unwrap().get("degraded_groups").unwrap();
+        assert_eq!(dg.get("count").unwrap().as_f64().unwrap(), 1.0);
     }
 }

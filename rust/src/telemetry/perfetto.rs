@@ -135,6 +135,24 @@ fn event_json(tel: &Telemetry, lane: usize, ev: &SpanEvent) -> Value {
             args.push(("eos", Value::Bool(eos)));
             instant("finish", "request", lane, ev.ts_us, args)
         }
+        EventKind::Fault { model, kind } => {
+            args.push(("model", json::s(tel.model_name(model))));
+            args.push(("call", json::s(kind.name())));
+            instant("fault", "fault", lane, ev.ts_us, args)
+        }
+        EventKind::Degraded { gid } => {
+            args.push(("gid", json::num(gid as f64)));
+            instant("degraded", "fault", lane, ev.ts_us, args)
+        }
+        EventKind::Breaker { model, state } => {
+            args.push(("model", json::s(tel.model_name(model))));
+            args.push(("state", json::s(match state {
+                0 => "closed",
+                1 => "open",
+                _ => "half-open",
+            })));
+            instant("breaker", "fault", lane, ev.ts_us, args)
+        }
     }
 }
 
@@ -212,6 +230,38 @@ mod tests {
             call.get("args").unwrap().get("model").unwrap()
                 .as_str().unwrap(),
             "m0"
+        );
+    }
+
+    #[test]
+    fn fault_events_export_as_instants() {
+        let mut tel =
+            Telemetry::new(true, 1, 16, Arc::new(vec!["m0".to_string()]));
+        tel.push(0, 1, NO_REQ, EventKind::Fault {
+            model: 0,
+            kind: crate::runtime::FnKind::Draft,
+        });
+        tel.push(0, 1, NO_REQ, EventKind::Degraded { gid: 2 });
+        tel.push(0, 1, NO_REQ, EventKind::Breaker { model: 0, state: 1 });
+        let v = json::parse(&render(&tel)).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "i")
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["fault", "degraded", "breaker"]);
+        let breaker = evs
+            .iter()
+            .find(|e| {
+                e.opt("name").and_then(|n| n.as_str().ok())
+                    == Some("breaker")
+            })
+            .unwrap();
+        assert_eq!(
+            breaker.get("args").unwrap().get("state").unwrap()
+                .as_str().unwrap(),
+            "open"
         );
     }
 }

@@ -99,6 +99,15 @@ pub enum EventKind {
         start_us: u64,
         end_us: u64,
     },
+    /// One failed backend call observed by a group's step (DESIGN.md
+    /// §13): call error, deadline overrun or corrupt logits.
+    Fault { model: u16, kind: FnKind },
+    /// A group completed its step target-only after a draft/intermediate
+    /// failure (chain truncation).
+    Degraded { gid: u16 },
+    /// A model's circuit breaker changed state (`state` =
+    /// `BreakerState::code()`: 0 closed, 1 open, 2 half-open).
+    Breaker { model: u16, state: u8 },
 }
 
 /// Sentinel gid for phase spans not tied to one group.

@@ -67,6 +67,7 @@ impl Fixture {
             rule: AcceptRule::Greedy,
             rngs: &mut self.rngs,
             scratch: &mut self.scratch,
+            check_logits: false,
         }
     }
 }

@@ -141,6 +141,106 @@ fn random_traffic_preserves_state_invariants_every_tick() {
     }
 }
 
+/// ISSUE 7: the same per-tick invariant sweep under mid-step fault
+/// injection on EVERY model (target included). Drafter faults degrade
+/// chains mid-flight, target faults fail whole groups and free their
+/// slots, NaN logits trip the corruption guard — and after each of
+/// those paths the KV bookkeeping must still satisfy every invariant
+/// above, every single tick, at any worker count.
+#[test]
+fn faulted_traffic_preserves_state_invariants_every_tick() {
+    for seed in 0..seed_count(4) as u64 {
+        let mut rng = Rng::new(0xFA22 + seed);
+        let dev = [rng.f64() * 0.5, rng.f64() * 0.35, rng.f64() * 0.2];
+        let backend = Arc::new(SimBackend::new(
+            SimSpec::small_pool_seeded(0xFACE ^ seed.wrapping_mul(131),
+                                       &dev)));
+        let mut cfg = EngineConfig::new("sim://");
+        cfg.batch = 4;
+        cfg.window = 4;
+        cfg.target = "m2".into();
+        cfg.mode = Mode::Adaptive;
+        cfg.replan_every = 1;
+        cfg.explore_eps = 0.5;
+        cfg.group_policy = policy_for(seed);
+        cfg.rule = if seed % 2 == 0 {
+            AcceptRule::Greedy
+        } else {
+            AcceptRule::Probabilistic { seed: 3 + seed }
+        };
+        // fault_models empty = every model eligible, so the schedule
+        // hits target verify calls (group failure), drafter calls
+        // (degradation) and admission prefills (request failure or
+        // degraded admit) alike
+        cfg.fault_rate = 0.25;
+        cfg.fault_seed = 0xC405 ^ seed;
+        cfg.fault_kinds = vec!["transient".into(), "corrupt".into()];
+        cfg.apply_env_workers();
+        let mut router = ChainRouter::with_backend(cfg, backend.clone())
+            .expect("router");
+
+        use specrouter::coordinator::Backend;
+        let datasets: Vec<String> = backend.manifest().datasets.keys()
+            .cloned().collect();
+        let mut gens: Vec<DatasetGen> = datasets.iter().enumerate()
+            .map(|(i, d)| DatasetGen::new(
+                backend.manifest().datasets[d].clone(),
+                seed * 23 + i as u64))
+            .collect();
+        let n_total = 12usize;
+        let mut submitted = 0usize;
+        let classes = [SloClass::Interactive, SloClass::Standard,
+                       SloClass::Batch];
+        let mut submit_one = |router: &mut ChainRouter, rng: &mut Rng,
+                              i: usize| {
+            let di = rng.below(datasets.len());
+            let (prompt, _) = gens[di].sample();
+            router.submit(Request {
+                id: 0,
+                dataset: datasets[di].clone(),
+                prompt,
+                max_new: rng.range(2, 10),
+                arrival: Instant::now(),
+                class: classes[rng.below(3)],
+                slo_ms: None,
+                sample_seed: Some(seed * 2000 + i as u64),
+            });
+        };
+        for i in 0..4 {
+            submit_one(&mut router, &mut rng, i);
+            submitted += 1;
+        }
+        let mut ticks = 0usize;
+        loop {
+            if submitted < n_total && ticks % 3 == 0 {
+                submit_one(&mut router, &mut rng, submitted);
+                submitted += 1;
+            }
+            let stepped = router.tick().unwrap_or_else(|e| {
+                panic!("seed {seed} tick {ticks}: contained fault \
+                        escaped as engine-fatal: {e:#}");
+            });
+            ticks += 1;
+            assert!(ticks < 5000, "seed {seed}: engine did not drain");
+            check_invariants(&router, seed, ticks);
+            router.states.fix_caches().unwrap();
+            assert_eq!(router.states.fix_caches().unwrap(), 0,
+                       "seed {seed} tick {ticks}: fix_caches left \
+                        reclaimable stale tail behind");
+            if stepped.is_none() && submitted == n_total {
+                break;
+            }
+        }
+        // failed requests still produce Finished records (with a
+        // structured error), so conservation holds exactly
+        let shed = router.take_shed().len();
+        assert_eq!(router.finished.len() + shed, n_total,
+                   "seed {seed}: requests lost");
+        assert!(router.tel.faults_observed > 0,
+                "seed {seed}: injection never fired — fuzz is inert");
+    }
+}
+
 /// ISSUE 5: the shard-borrow guard. Slot sets that overlap — two chain
 /// groups claiming the same slot — must be rejected with a structured
 /// error before any view is handed out, never silently aliased; disjoint
