@@ -93,7 +93,7 @@ fn mk_states(backend: &SimBackend, batch: usize, models: &[String])
             seq: man.seq,
             head_dim: meta.head_dim,
         };
-        states.ensure(m, dims, man.state_len(meta, batch));
+        states.ensure(m, dims, man.state_len(meta, batch)).unwrap();
     }
     states
 }
@@ -229,6 +229,7 @@ fn run_config(backend: &SimBackend, chain: &Chain, rule: AcceptRule,
                 rngs: &mut *rngs,
                 scratch: &mut scratch,
                 check_logits: false,
+                paged: backend.supports_paged_kv(),
             };
             COUNTING.store(true, Relaxed);
             let r = run_spec_step(&mut ctx, chain, &seqs, 0);
@@ -293,6 +294,7 @@ fn run_grouped(backend: &SimBackend, configs: &[(Chain, Vec<usize>)],
                     rngs: &mut *rngs,
                     scratch: &mut scratches[gi],
                     check_logits: false,
+                    paged: backend.supports_paged_kv(),
                 };
                 COUNTING.store(true, Relaxed);
                 let r = run_spec_step(&mut ctx, chain, &seqs, 0);
@@ -406,12 +408,18 @@ fn drive_ticks(router: &mut ChainRouter, batch: usize, window: usize,
 /// `run_spec_step`. Measured admission-idle (every slot occupied, queue
 /// empty): a steady-state greedy tick must allocate nothing at all.
 fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
-                 warmup: u64, measure: u64, armed: bool) -> Row {
+                 warmup: u64, measure: u64, armed: bool, paged: bool)
+                 -> Row {
     let mut spec = SimSpec::small_pool();
     // eos_prob 0: nothing finishes early, so the per-wave measured block
     // is deterministically completion-free
     spec.eos_prob = 0.0;
     let seq_cap = spec.seq;
+    // paged-lookup row (ISSUE 8): the same admission-idle steady state
+    // with the paged KV layout on — every per-token state write resolves
+    // through the page table, and the gate demands that resolution stays
+    // at exactly 0 allocs/step (baselines.json: paged_lookup_allocs_per_step)
+    let spec = if paged { spec.with_paged() } else { spec };
     let backend = std::sync::Arc::new(SimBackend::new(spec));
     let mut cfg = EngineConfig::new("sim://");
     cfg.batch = batch;
@@ -419,6 +427,8 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
     cfg.target = "m2".into();
     cfg.mode = Mode::Fixed { chain, window };
     cfg.rule = AcceptRule::Greedy;
+    cfg.paged = paged;
+    cfg.page_tokens = 4;
     // telemetry on (the default), stated explicitly: the zero-alloc
     // contract must hold with span rings and histograms recording
     cfg.telemetry = true;
@@ -434,7 +444,9 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
         cfg.fault_models = vec!["no-such-model".into()];
     }
     let label = format!("{}:{}",
-                        if armed { "health-check" } else { "full-tick" },
+                        if paged { "paged-lookup" }
+                        else if armed { "health-check" }
+                        else { "full-tick" },
                         cfg.mode.label());
     let mut router = ChainRouter::with_backend(cfg, backend)
         .expect("sim router");
@@ -446,6 +458,14 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
     if armed {
         assert_eq!(router.faults_injected(), 0,
                    "health-check row must measure the quiet armed path");
+    }
+    if paged {
+        router.states.audit_pages().expect("paged-lookup page audit");
+        // every wave re-submits the same per-slot prompts, so warm-cycle
+        // admissions must have adopted resident pages
+        let (full, partial) = router.prefill_skips();
+        assert!(full + partial > 0,
+                "paged-lookup row never reused a resident prefix");
     }
     row_from(label, "greedy", batch, run.measured, Measured {
         tokens: run.tokens,
@@ -560,6 +580,79 @@ fn run_telemetry_overhead(warmup: u64, measure: u64) -> f64 {
     t_on / t_off.max(1e-12)
 }
 
+/// What the shared-prompt admission trace measured (ISSUE 8): cumulative
+/// prefix-index counters plus the derived miss ratio the perf gate pins.
+struct ReuseTrace {
+    lookups: u64,
+    hits_full: u64,
+    prefill_skips: u64,
+    cow_copies: u64,
+    miss_ratio: f64,
+}
+
+/// ISSUE 8 reuse trace: K = 4 distinct prompts, each submitted twice,
+/// through a paged FIFO router at batch 2K — so every admission's
+/// prefix-index consultation is part of one deterministic trace. The
+/// duplicate admissions must adopt the resident pages for every
+/// prefill-set model (2 models here): exactly K*2 full hits out of
+/// K*2*2 lookups, a prefix-miss ratio of exactly 0.5, gated via
+/// baselines.json `paged_prefix_miss_ratio`. Prompt length 5 with
+/// 4-token pages puts the fifth token on a shared boundary page, so the
+/// first speculative write after adoption must take the copy-on-write
+/// path (`cow_copies > 0`) — reuse is provably live, not vacuous.
+fn run_prefix_reuse_trace() -> ReuseTrace {
+    let mut spec = SimSpec::small_pool().with_paged();
+    spec.eos_prob = 0.0;
+    let backend = Arc::new(SimBackend::new(spec));
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = 8;
+    cfg.window = 4;
+    cfg.target = "m2".into();
+    cfg.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    cfg.rule = AcceptRule::Greedy;
+    cfg.fifo_admission = true;
+    cfg.paged = true;
+    cfg.page_tokens = 4;
+    let mut router = ChainRouter::with_backend(cfg, backend)
+        .expect("paged reuse router");
+    for i in 0..8usize {
+        let k = (i % 4) as i32;
+        let id = router.submit(Request {
+            id: 0,
+            dataset: "gsm8k".into(),
+            // distinct per-k suffixes: the only shared prefix between
+            // different prompts is the BOS token, below page size, so
+            // the full-hit count is exact
+            prompt: vec![1, 50 + 10 * k, 60 + k, 70 + k, 80 + k],
+            max_new: 8,
+            arrival: Instant::now(),
+            class: SloClass::Standard,
+            slo_ms: None,
+            sample_seed: Some(31 + i as u64),
+        });
+        assert!(id.is_some(), "reuse-trace submission shed");
+    }
+    router.run_until_idle(100_000).expect("reuse trace run");
+    router.states.audit_pages().expect("reuse trace page audit");
+    assert_eq!(router.finished.len(), 8, "reuse trace lost requests");
+    let stats = router.states.paged_stats();
+    let (full, partial) = router.prefill_skips();
+    assert!(full >= 4,
+            "each duplicated prompt must skip >= 1 model-level prefill \
+             (got {full} full skips)");
+    ReuseTrace {
+        lookups: stats.lookups,
+        hits_full: stats.hits_full,
+        prefill_skips: full + partial,
+        cow_copies: stats.cow_copies,
+        miss_ratio: 1.0 - stats.hits_full as f64
+            / stats.lookups.max(1) as f64,
+    }
+}
+
 fn main() {
     let backend = SimBackend::new(SimSpec::small_pool());
     let (warmup, measure) = if quick() { (32, 128) } else { (64, 1024) };
@@ -617,14 +710,21 @@ fn main() {
     // itself — recycled slot-seq views, cached chains and reserved
     // commit buffers must keep the whole admission-idle tick at zero
     let row = run_full_tick(vec!["m0".into(), "m2".into()], 4, batch,
-                            warmup, measure, false);
+                            warmup, measure, false, false);
     push_row(&mut table, &row);
     rows.push(row);
     // fault machinery armed but quiet (ISSUE 7): injector wrapping every
     // call, logits scans and breaker feeding live — still zero allocs,
     // and perf_gate pins the row via health_check_allocs_per_step
     let row = run_full_tick(vec!["m0".into(), "m2".into()], 4, batch,
-                            warmup, measure, true);
+                            warmup, measure, true, false);
+    push_row(&mut table, &row);
+    rows.push(row);
+    // paged KV steady state (ISSUE 8): same admission-idle tick with
+    // every state row resolved through the page tables — still zero
+    // allocs, pinned by perf_gate via paged_lookup_allocs_per_step
+    let row = run_full_tick(vec!["m0".into(), "m2".into()], 4, batch,
+                            warmup, measure, false, true);
     push_row(&mut table, &row);
     rows.push(row);
     // parallel scatter/gather tick (ISSUE 5): workers 1/2/4 over the
@@ -667,6 +767,15 @@ fn main() {
     let tel_ratio = run_telemetry_overhead(warmup, par_measure);
     println!("\ntelemetry overhead (full tick, min of 3 interleaved \
               on/off runs): {tel_ratio:.3}x");
+
+    // shared-prompt reuse trace (ISSUE 8): exact miss ratio gated by
+    // perf_gate via paged_prefix_miss_ratio
+    let reuse = run_prefix_reuse_trace();
+    println!("\nprefix reuse trace (4 prompts x 2, paged FIFO batch 8): \
+              {} lookups, {} full hits, {} prefill skips, {} COW copies, \
+              miss ratio {:.3}",
+             reuse.lookups, reuse.hits_full, reuse.prefill_skips,
+             reuse.cow_copies, reuse.miss_ratio);
 
     // Full-engine context row: the same sim pool driven through the real
     // ChainRouter (admission, chain selection, commit loop, mask sync) —
@@ -711,6 +820,12 @@ fn main() {
         ratio_of(2), ratio_of(4)));
     json.push_str(&format!(
         "  \"telemetry\": {{\"overhead_ratio\": {tel_ratio:.4}}},\n"));
+    json.push_str(&format!(
+        "  \"paging\": {{\"lookups\": {}, \"hits_full\": {}, \
+         \"prefill_skips\": {}, \"cow_copies\": {}, \
+         \"prefix_miss_ratio\": {:.4}}},\n",
+        reuse.lookups, reuse.hits_full, reuse.prefill_skips,
+        reuse.cow_copies, reuse.miss_ratio));
     json.push_str(&format!(
         "  \"engine\": {{\"mode\": \"SSD[m0>m2]w4\", \"batch\": {batch}, \
          \"requests\": {n_req}, \"tokens\": {}, \"goodput_tps\": {:.1}, \

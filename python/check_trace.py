@@ -46,11 +46,17 @@ REQUIRED_STATS_KEYS = (
     "faults",
     "breakers",
     "health",
+    # paged-KV telemetry (DESIGN.md §14): always present — `enabled`
+    # false with zeroed counters when the contiguous layout is active
+    "paging",
 )
 
 REQUIRED_FAULT_KEYS = ("observed", "degraded_steps", "failed_groups",
                        "failed_requests")
 REQUIRED_BREAKER_KEYS = ("trips", "probes", "recoveries")
+REQUIRED_PAGING_KEYS = ("enabled", "lookups", "hits_full", "hits_partial",
+                        "prefill_skips", "tokens_reused", "cow_copies",
+                        "pages_dropped", "pages_live", "pages_total")
 
 REQUIRED_HIST_KEYS = ("ttft_ms", "tpot_ms", "queue_delay_ms",
                       "accept_len", "rollback_depth", "tick_ms")
@@ -152,6 +158,17 @@ def check_stats(path):
                                   "non-numeric")
         elif name in doc:
             errors.append(f"stats {name} must be an object")
+    paging = doc.get("paging")
+    if isinstance(paging, dict):
+        if not isinstance(paging.get("enabled"), bool):
+            errors.append("stats paging.enabled missing or non-boolean")
+        for key in REQUIRED_PAGING_KEYS:
+            if key == "enabled":
+                continue
+            if not is_num(paging.get(key)):
+                errors.append(f"stats paging.{key} missing or non-numeric")
+    elif "paging" in doc:
+        errors.append("stats paging must be an object")
     # `health` is one entry per manifest model (a fault-free run still
     # reports every breaker as closed)
     health = doc.get("health")

@@ -23,6 +23,14 @@
 //!     recording divided by the disabled registry, min-of-3 interleaved
 //!     pairs (ISSUE 6 / DESIGN.md §12). Baseline 1.0 at 2% per-metric
 //!     tolerance enforces the <= 1.02 policy.
+//!   * `paged_lookup_allocs_per_step` — allocs/step of the hotpath
+//!     `paged-lookup:` row: the full-engine tick with the paged KV
+//!     layout on, every state row resolved through the page tables
+//!     (ISSUE 8 / DESIGN.md §14). Baseline 0, exact.
+//!   * `paged_prefix_miss_ratio` — prefix-index miss ratio of the
+//!     shared-prompt admission trace (4 prompts x 2 through a paged
+//!     FIFO router): exactly half the lookups must hit a resident
+//!     prefix, so the deterministic trace pins 0.5.
 //!   * `scheduler_select_ns` — Algorithm-1 selection time from
 //!     BENCH_scheduler_overhead.json (DESIGN.md §7 budget).
 //!   * `admission_queue_delay_p50_ms` — interactive p50 queue delay at 2x
@@ -124,6 +132,28 @@ fn health_check_allocs(v: &Value) -> Result<f64> {
     bail!("BENCH_hotpath.json has no health-check row — stale artifact?")
 }
 
+/// Allocs/step of the paged full-engine tick row (ISSUE 8): the same
+/// admission-idle steady state as `full-tick:`, but with every per-token
+/// state write resolved through the page tables. A missing row is a
+/// stale artifact — hard error.
+fn paged_lookup_allocs(v: &Value) -> Result<f64> {
+    let rows = v.get("rows")?.as_arr()?;
+    for r in rows {
+        if r.get("chain")?.as_str()?.starts_with("paged-lookup:") {
+            return r.get("allocs_per_step")?.as_f64();
+        }
+    }
+    bail!("BENCH_hotpath.json has no paged-lookup row — stale artifact?")
+}
+
+/// Prefix-index miss ratio of the shared-prompt admission trace from the
+/// hotpath artifact's `paging` object (ISSUE 8). The trace is
+/// deterministic (fixed prompts, FIFO admission, sim backend), so the
+/// expected value is exact; a missing object is a stale artifact.
+fn paged_prefix_miss_ratio(v: &Value) -> Result<f64> {
+    v.get("paging")?.get("prefix_miss_ratio")?.as_f64()
+}
+
 /// Telemetry-on / telemetry-off full-tick time ratio from the hotpath
 /// artifact's `telemetry` object. A missing object is a hard error
 /// (stale artifact) — both sides of the pair run on the same box, so
@@ -165,6 +195,18 @@ fn gather(dir: &Path) -> Result<Vec<Check>> {
         Check {
             name: "health_check_allocs_per_step",
             measured: health_check_allocs(&hotpath)?,
+            baseline: f64::NAN,
+            tol_pct: f64::NAN,
+        },
+        Check {
+            name: "paged_lookup_allocs_per_step",
+            measured: paged_lookup_allocs(&hotpath)?,
+            baseline: f64::NAN,
+            tol_pct: f64::NAN,
+        },
+        Check {
+            name: "paged_prefix_miss_ratio",
+            measured: paged_prefix_miss_ratio(&hotpath)?,
             baseline: f64::NAN,
             tol_pct: f64::NAN,
         },
@@ -368,6 +410,25 @@ mod tests {
             r#"{"telemetry":{"overhead_ratio":1.013}}"#).unwrap();
         assert!((telemetry_ratio(&tel).unwrap() - 1.013).abs() < 1e-12);
         assert!(telemetry_ratio(&none).is_err());
+        // the paged-lookup row binds by chain-label prefix, same policy
+        // as the health-check row: missing means stale artifact
+        let paged = json::parse(
+            r#"{"rows":[
+                {"chain":"full-tick:x","rule":"greedy",
+                 "allocs_per_step":0.0},
+                {"chain":"paged-lookup:x","rule":"greedy",
+                 "allocs_per_step":0.375}]}"#).unwrap();
+        assert!((paged_lookup_allocs(&paged).unwrap() - 0.375).abs()
+                < 1e-12);
+        assert!(paged_lookup_allocs(&hot).is_err());
+        // the paging object carries the reuse-trace miss ratio
+        let pg = json::parse(
+            r#"{"paging":{"lookups":16,"hits_full":8,
+                "prefill_skips":8,"cow_copies":2,
+                "prefix_miss_ratio":0.5}}"#).unwrap();
+        assert!((paged_prefix_miss_ratio(&pg).unwrap() - 0.5).abs()
+                < 1e-12);
+        assert!(paged_prefix_miss_ratio(&none).is_err());
     }
 
     #[test]

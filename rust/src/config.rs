@@ -111,6 +111,18 @@ pub struct EngineConfig {
     /// concurrent group steps safe (`Backend::parallel_groups_safe`) or
     /// router construction fails with a structured error.
     pub workers: usize,
+    /// Paged KV state with shared-prefix reuse (DESIGN.md §14): model
+    /// state lives in fixed-size refcounted pages behind per-slot page
+    /// tables, admission looks committed prompt prefixes up in a trie
+    /// index and skips the prefill calls a resident prefix already
+    /// covers, and `fix_caches` reclaims at page granularity. Requires a
+    /// backend that addresses rows through the page tables
+    /// (`Backend::supports_paged_kv`); router construction fails
+    /// structurally otherwise. Off by default — the packed contiguous
+    /// layout is byte-identical to previous releases.
+    pub paged: bool,
+    /// Sequence positions per KV page (only read when `paged`).
+    pub page_tokens: usize,
     /// Seed the scheduler's α estimates with the manifest's offline
     /// (build-time) similarity instead of the optimistic prior.
     pub offline_sim_prior: bool,
@@ -183,6 +195,8 @@ impl EngineConfig {
             fifo_admission: false,
             group_policy: GroupPolicy::ByClass,
             workers: 1,
+            paged: false,
+            page_tokens: 16,
             offline_sim_prior: false,
             n_devices: 4,
             device_bytes: 2 << 30,
@@ -325,6 +339,9 @@ impl EngineConfig {
                 bail!("group_policy urgent_s must be a positive finite \
                        number of seconds");
             }
+        }
+        if self.paged && self.page_tokens < 1 {
+            bail!("page_tokens must be >= 1 when paging is enabled");
         }
         if !(0.0..=1.0).contains(&self.fault_rate)
             || !self.fault_rate.is_finite()

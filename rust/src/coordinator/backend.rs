@@ -46,9 +46,11 @@ use crate::state::StateBuf;
 pub enum PrefillState {
     /// Device-resident packed `[kv | tail]` buffer (XLA path).
     Xla(xla::PjRtBuffer),
-    /// The sim backend is stateless (a table-driven Markov LM); there is
-    /// nothing to carry between prefill and insert.
-    Sim,
+    /// The sim backend's Markov LM needs no KV to *decode*, but under
+    /// paged state (DESIGN.md §14) `insert` must materialize the prompt's
+    /// row fingerprints into the slot's pages, so the handle carries the
+    /// prompt tokens forward from prefill.
+    Sim { prompt: Vec<i32> },
 }
 
 /// One model-pool backend: the five processors of paper §4.3.
@@ -83,6 +85,16 @@ pub trait Backend: Send + Sync {
     /// meanwhile — so the executor answers `false` and the router rejects
     /// `workers > 1` on it with a structured error).
     fn parallel_groups_safe(&self) -> bool {
+        false
+    }
+
+    /// True when the backend addresses per-slot KV rows through the
+    /// [`crate::state::PagedKv`] tables attached to its [`StateBuf`]s
+    /// (DESIGN.md §14). The router refuses `paged = true` configs on
+    /// backends that answer `false` — a packed-layout backend would
+    /// silently ignore the page tables and the prefix index would
+    /// advertise rows nobody ever wrote.
+    fn supports_paged_kv(&self) -> bool {
         false
     }
 

@@ -77,7 +77,7 @@ use crate::metrics::ClassChainRow;
 use crate::model_pool::ModelPool;
 use crate::rng::{argmax, softmax, splitmix, Rng};
 use crate::runtime::{FnKind, Manifest};
-use crate::state::{KvDims, StateManager, StateShard};
+use crate::state::{KvDims, PagedCfg, PrefixMatch, StateManager, StateShard};
 use crate::telemetry::{AdmitOutcome, EventKind, Telemetry, TickPhase,
                        NO_GID, NO_REQ};
 
@@ -181,6 +181,19 @@ pub struct ChainRouter {
     slot_rngs: Vec<Rng>,
     /// Cached chain per group id (adaptive mode's replan cadence).
     group_chains: Vec<Option<Chain>>,
+    /// Cached admission prefill set. The per-request admission loop used
+    /// to rebuild this `Vec<String>` (clones included) for every single
+    /// admitted request; it only actually changes when a group's cached
+    /// chain does, so it is rebuilt lazily off `prefill_stale` instead.
+    prefill_cache: Vec<String>,
+    prefill_stale: bool,
+    /// Model-level admission prefills skipped because the prefix index
+    /// already held the committed prompt (DESIGN.md §14): `full` = the
+    /// whole prompt was resident (prefill + insert both skipped),
+    /// `partial` = a drafter adopted the aligned full pages and catch-up
+    /// forwards the tail inside the step.
+    prefill_skips_full: u64,
+    prefill_skips_partial: u64,
     /// Each group's running chain label, rebuilt only on chain switch so
     /// steady-state ticks don't re-format a String per step.
     group_label_cache: Vec<Option<(Chain, String)>>,
@@ -265,6 +278,13 @@ impl ChainRouter {
                    each other's lanes) — run it with workers = 1",
                   cfg.workers);
         }
+        if cfg.paged && !backend.supports_paged_kv() {
+            bail!("paged = true requires a backend that addresses KV rows \
+                   through the page tables (supports_paged_kv), but this \
+                   backend reports false — its calls would ignore the \
+                   tables and the prefix index would advertise rows \
+                   nobody ever wrote; run it with paged = false");
+        }
         // fault injection (DESIGN.md §13): only an *active* spec wraps
         // the backend — the default config keeps the raw backend and the
         // fault-free hot path byte-identical to a build without faults
@@ -325,7 +345,13 @@ impl ChainRouter {
             prof: Profiler::new(cfg.ema_alpha),
             sim,
             sched,
-            states: StateManager::new(),
+            states: if cfg.paged {
+                StateManager::with_paging(PagedCfg {
+                    page_tokens: cfg.page_tokens,
+                })
+            } else {
+                StateManager::new()
+            },
             batcher,
             finished: Vec::new(),
             rng_base,
@@ -333,6 +359,10 @@ impl ChainRouter {
                 .map(|b| Rng::new(rng_base ^ splitmix(b as u64)))
                 .collect(),
             group_chains: vec![None; n_gids],
+            prefill_cache: Vec::new(),
+            prefill_stale: false,
+            prefill_skips_full: 0,
+            prefill_skips_partial: 0,
             group_label_cache: vec![None; n_gids],
             group_labels: gid_labels(batch),
             group_slots: (0..n_gids)
@@ -359,8 +389,10 @@ impl ChainRouter {
             cfg,
             manifest,
         };
-        for m in router.prefill_set() {
-            router.backend.register(&m)?;
+        let mut router = router;
+        router.prefill_cache = router.prefill_set();
+        for m in &router.prefill_cache {
+            router.backend.register(m)?;
         }
         Ok(router)
     }
@@ -510,9 +542,20 @@ impl ChainRouter {
         self.faults.as_ref().map_or(0, |f| f.injected())
     }
 
+    /// Model-level admission prefills skipped via shared-prefix reuse:
+    /// (whole-prompt hits, drafter partial hits). Both zero unless
+    /// `cfg.paged` (DESIGN.md §14).
+    pub fn prefill_skips(&self) -> (u64, u64) {
+        (self.prefill_skips_full, self.prefill_skips_partial)
+    }
+
     /// Admit as many waiting requests as there are free slots: prefill on
     /// the prefill set, commit the first token (TTFT), insert KV.
     pub fn admit_pending(&mut self) -> Result<usize> {
+        if self.prefill_stale {
+            self.prefill_cache = self.prefill_set();
+            self.prefill_stale = false;
+        }
         let mut admitted = 0;
         while let Some((slot_idx, entry)) = self.batcher.next_admission() {
             let QueuedReq { req, class, deadline, .. } = entry;
@@ -571,12 +614,66 @@ impl ChainRouter {
             // panics are contained exactly like errors.
             let mut admit_err: Option<(String, FnKind, anyhow::Error)> =
                 None;
-            for m in self.prefill_set() {
-                let dims = self.kv_dims(&m);
-                let state_len = self.state_len(&m);
+            let prefill_models = std::mem::take(&mut self.prefill_cache);
+            // if a `?` below unwinds past the put-back, the emptied cache
+            // must not masquerade as a valid (empty) prefill set
+            self.prefill_stale = true;
+            for m in &prefill_models {
+                let dims = self.kv_dims(m);
+                let state_len = self.state_len(m);
+                let is_target = *m == target;
+                // ensure state + release the slot's previous pages before
+                // anything else; on every path below the slot restarts
+                // from an empty mask
+                let st = self.states.ensure(m, dims, state_len)?;
+                st.reset_slot(slot_idx);
+                let kv = st.paged.clone();
+                // shared-prefix reuse (DESIGN.md §14): consult the
+                // model's prefix index before paying for a prefill
+                if let Some(kv) = kv.as_ref() {
+                    let mut pm = PrefixMatch::new();
+                    kv.lookup(&req.prompt, &mut pm);
+                    if pm.exact && (!is_target || pm.has_logits) {
+                        // whole prompt resident: adopt the pages
+                        // (refcounted, copy-on-write) and skip both the
+                        // prefill and the insert for this model
+                        kv.map_prefix(slot_idx, &pm, false)?;
+                        self.states.get(m)?
+                            .mask.append_valid(slot_idx, plen);
+                        self.prefill_skips_full += 1;
+                        self.health.on_success(m);
+                        if is_target {
+                            // the terminal carries the original prefill
+                            // logits, so the first committed token is
+                            // sampled identically to an unshared run
+                            first_token = match self.cfg.rule {
+                                AcceptRule::Greedy =>
+                                    argmax(&pm.logits) as i32,
+                                AcceptRule::Probabilistic { .. } =>
+                                    slot_rng.categorical(
+                                        &softmax(&pm.logits)) as i32,
+                            };
+                        }
+                        continue;
+                    }
+                    if pm.matched > 0 && !is_target {
+                        // drafter partial hit: adopt the aligned full
+                        // pages only; catch-up forwards the unshared
+                        // tail inside the step, exactly like a lazily
+                        // admitted adaptive model
+                        let covered = kv.map_prefix(slot_idx, &pm, true)?;
+                        if covered > 0 {
+                            self.states.get(m)?
+                                .mask.append_valid(slot_idx, covered);
+                            self.prefill_skips_partial += 1;
+                            self.health.on_success(m);
+                            continue;
+                        }
+                    }
+                }
                 let called = catch_unwind(AssertUnwindSafe(|| {
                     self.backend
-                        .prefill(&mut self.prof, &m, &req.prompt)
+                        .prefill(&mut self.prof, m, &req.prompt)
                         .with_context(|| format!("prefill {m}"))
                 }));
                 let mut r = match called {
@@ -595,22 +692,22 @@ impl ChainRouter {
                 let (logits, state1) = match r {
                     Ok(v) => v,
                     Err(e) => {
-                        if m == target {
-                            admit_err = Some((m, FnKind::Prefill, e));
+                        if is_target {
+                            admit_err = Some((m.clone(), FnKind::Prefill,
+                                              e));
                             break;
                         }
-                        self.note_model_fault(&m, FnKind::Prefill, req.id);
-                        self.states.ensure(&m, dims, state_len)
-                            .mask.clear_slot(slot_idx);
+                        // slot already reset above: the sick drafter's
+                        // mask stays empty until catch-up rebuilds it
+                        self.note_model_fault(m, FnKind::Prefill, req.id);
                         continue;
                     }
                 };
                 let batch = self.cfg.batch;
-                let st = self.states.ensure(&m, dims, state_len);
-                st.mask.clear_slot(slot_idx);
+                let st = self.states.get(m)?;
                 let ins = catch_unwind(AssertUnwindSafe(|| {
                     self.backend
-                        .insert(&mut self.prof, &m, batch, &mut st.kv(),
+                        .insert(&mut self.prof, m, batch, &mut st.kv(),
                                 &state1, slot_idx)
                         .with_context(|| format!("insert {m}"))
                 }));
@@ -620,18 +717,25 @@ impl ChainRouter {
                                           panic_msg(p.as_ref()))),
                 };
                 if let Err(e) = ins {
-                    if m == target {
-                        admit_err = Some((m, FnKind::Insert, e));
+                    if is_target {
+                        admit_err = Some((m.clone(), FnKind::Insert, e));
                         break;
                     }
                     // mask was cleared before the insert, so any torn
                     // write the failure left behind is invisible
-                    self.note_model_fault(&m, FnKind::Insert, req.id);
+                    self.note_model_fault(m, FnKind::Insert, req.id);
                     continue;
                 }
                 st.mask.append_valid(slot_idx, plen);
-                self.health.on_success(&m);
-                if m == target {
+                // publish the freshly written prompt to the prefix index
+                // (target terminals keep the prefill logits so an exact
+                // hit can reproduce the first sampled token)
+                if let Some(kv) = st.paged.as_ref() {
+                    let lg = is_target.then_some(logits.as_slice());
+                    kv.register_prefix(slot_idx, &req.prompt, lg)?;
+                }
+                self.health.on_success(m);
+                if is_target {
                     first_token = match self.cfg.rule {
                         AcceptRule::Greedy => argmax(&logits) as i32,
                         AcceptRule::Probabilistic { .. } =>
@@ -639,6 +743,8 @@ impl ChainRouter {
                     };
                 }
             }
+            self.prefill_cache = prefill_models;
+            self.prefill_stale = false;
             if let Some((m, kind, e)) = admit_err {
                 self.note_model_fault(&m, kind, req.id);
                 self.states.clear_slot(slot_idx);
@@ -766,6 +872,7 @@ impl ChainRouter {
                 if self.group_chains[gid].is_none() {
                     self.group_chains[gid] =
                         Some(Chain::target_only(&self.cfg.target));
+                    self.prefill_stale = true;
                 }
             }
             Mode::Fixed { chain, window } => {
@@ -775,6 +882,7 @@ impl ChainRouter {
                     } else {
                         Chain { models: chain.clone(), window: *window }
                     });
+                    self.prefill_stale = true;
                 }
             }
             Mode::Adaptive => {
@@ -806,6 +914,11 @@ impl ChainRouter {
                             self.group_chains[gid].as_ref(),
                             self.group_slack[gid])
                     };
+                    // the admission prefill set follows the cached
+                    // chains; rebuild it lazily on the next admission
+                    if self.group_chains[gid].as_ref() != Some(&c) {
+                        self.prefill_stale = true;
+                    }
                     self.group_chains[gid] = Some(c);
                 }
             }
@@ -879,7 +992,7 @@ impl ChainRouter {
             for m in &chain.models {
                 let dims = self.kv_dims(m);
                 let state_len = self.state_len(m);
-                self.states.ensure(m, dims, state_len);
+                self.states.ensure(m, dims, state_len)?;
             }
         }
 
@@ -907,6 +1020,7 @@ impl ChainRouter {
             let rule = self.cfg.rule;
             let pad = self.manifest.special.pad;
             let check_logits = self.check_logits;
+            let paged = self.cfg.paged;
 
             let mut tasks: Vec<GroupTask<'_>> = self.task_scratch.take();
             {
@@ -976,6 +1090,7 @@ impl ChainRouter {
                         rngs: &mut *t.rngs,
                         scratch: &mut *t.scratch,
                         check_logits,
+                        paged,
                     };
                     run_spec_step(&mut ctx, t.chain, &t.seqs, pad)
                 }));
@@ -1354,6 +1469,29 @@ impl ChainRouter {
             ]))
             .collect();
         m.insert("health".to_string(), Value::Arr(health));
+        // paged-state / prefix-reuse counters (DESIGN.md §14) — always
+        // present so dashboards and check_trace need no probing, all
+        // zeros when paging is off
+        let ps = self.states.paged_stats();
+        m.insert("paging".to_string(), json::obj(vec![
+            ("enabled", Value::Bool(self.cfg.paged)),
+            ("lookups", json::num(ps.lookups as f64)),
+            ("hits_full", json::num(ps.hits_full as f64)),
+            ("hits_partial", json::num(ps.hits_partial as f64)),
+            ("prefill_skips_full",
+             json::num(self.prefill_skips_full as f64)),
+            ("prefill_skips_partial",
+             json::num(self.prefill_skips_partial as f64)),
+            ("prefill_skips",
+             json::num((self.prefill_skips_full
+                        + self.prefill_skips_partial) as f64)),
+            ("tokens_reused", json::num(ps.tokens_reused as f64)),
+            ("cow_copies", json::num(ps.cow_copies as f64)),
+            ("pages_dropped", json::num(ps.pages_dropped as f64)),
+            ("pages_live", json::num(ps.pages_live as f64)),
+            ("pages_total", json::num(ps.pages_total as f64)),
+            ("index_flushes", json::num(ps.index_flushes as f64)),
+        ]));
         let class_counters: Vec<Value> = SloClass::ALL
             .iter()
             .map(|&class| {
@@ -1395,6 +1533,26 @@ impl ChainRouter {
             Counter { name: "specrouter_breaker_trips_total", labels: &[],
                       value: self.tel.breaker_trips as f64 },
         ];
+        let ps = self.states.paged_stats();
+        counters.extend([
+            Counter { name: "specrouter_prefix_lookups_total", labels: &[],
+                      value: ps.lookups as f64 },
+            Counter { name: "specrouter_prefix_hits_full_total",
+                      labels: &[], value: ps.hits_full as f64 },
+            Counter { name: "specrouter_prefix_hits_partial_total",
+                      labels: &[], value: ps.hits_partial as f64 },
+            Counter { name: "specrouter_prefill_skips_total", labels: &[],
+                      value: (self.prefill_skips_full
+                              + self.prefill_skips_partial) as f64 },
+            Counter { name: "specrouter_kv_tokens_reused_total",
+                      labels: &[], value: ps.tokens_reused as f64 },
+            Counter { name: "specrouter_kv_cow_copies_total", labels: &[],
+                      value: ps.cow_copies as f64 },
+            Counter { name: "specrouter_kv_pages_dropped_total",
+                      labels: &[], value: ps.pages_dropped as f64 },
+            Counter { name: "specrouter_kv_pages_live", labels: &[],
+                      value: ps.pages_live as f64 },
+        ]);
         for (i, &class) in SloClass::ALL.iter().enumerate() {
             counters.push(Counter {
                 name: "specrouter_shed_total",

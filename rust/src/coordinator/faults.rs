@@ -361,6 +361,10 @@ impl Backend for FaultInjector {
         self.inner.parallel_groups_safe()
     }
 
+    fn supports_paged_kv(&self) -> bool {
+        self.inner.supports_paged_kv()
+    }
+
     fn prefill(&self, sink: &mut dyn StepSink, model: &str, prompt: &[i32])
                -> Result<(Vec<f32>, PrefillState)> {
         match self.fault_for(model) {

@@ -65,6 +65,12 @@ pub struct SimSpec {
     pub eos_prob: f64,
     /// Seeds every hash in the token process.
     pub seed: u64,
+    /// Write per-row KV fingerprints through the paged state tables
+    /// (DESIGN.md §14) and advertise [`Backend::supports_paged_kv`]. The
+    /// Markov LM never *reads* the rows — the fingerprints exist so the
+    /// fuzz/differential suites can prove a reused prefix page holds
+    /// byte-identical content to a fresh prefill.
+    pub paged: bool,
 }
 
 impl SimSpec {
@@ -100,7 +106,14 @@ impl SimSpec {
             ],
             eos_prob: 0.02,
             seed: 0xB0A7_10AD,
+            paged: false,
         }
+    }
+
+    /// Same pool with paged-state fingerprint writes enabled.
+    pub fn with_paged(mut self) -> Self {
+        self.paged = true;
+        self
     }
 
     /// `small_pool` re-seeded, with per-model deviation overrides (extra
@@ -131,6 +144,16 @@ fn unit(h: u64) -> f64 {
     (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
 }
 
+/// Deterministic KV fingerprint for the row a model writes while
+/// processing `token`: a pure function of (model salt, token), so a row
+/// is position-independent and two slots that processed the same prompt
+/// hold byte-identical pages — exactly the property shared-prefix reuse
+/// (DESIGN.md §14) depends on, and what the differential tests assert.
+pub fn kv_fingerprint(salt: u64, token: i32) -> f32 {
+    let h = splitmix(salt ^ (token as u64).wrapping_mul(0xD6E8_FEB8));
+    (h >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+}
+
 pub struct SimBackend {
     manifest: Arc<Manifest>,
     models: Vec<SimModel>,
@@ -138,6 +161,7 @@ pub struct SimBackend {
     salts: Vec<u64>,
     seed: u64,
     eos_prob: f64,
+    paged: bool,
 }
 
 impl SimBackend {
@@ -194,6 +218,7 @@ impl SimBackend {
             salts,
             seed: spec.seed,
             eos_prob: spec.eos_prob,
+            paged: spec.paged,
         }
     }
 
@@ -255,15 +280,42 @@ impl SimBackend {
     }
 
     /// Guard mirroring the XLA executor's capacity check, so logic errors
-    /// in the engine fail identically on either backend.
+    /// in the engine fail identically on either backend. Under the paged
+    /// membership convention a negative length marks a non-member lane
+    /// (its logits row is computed but never consumed, and no state row
+    /// is written), so those lanes are exempt; the engine only emits
+    /// negative lengths when `supports_paged_kv()` holds.
     fn check_capacity(&self, model: &str, lens: &[i32], positions: usize)
                       -> Result<()> {
         let s = self.manifest.seq;
         for (b, &l) in lens.iter().enumerate() {
+            if l < 0 {
+                if !self.paged {
+                    bail!("slot {b}: negative len {l} on an unpaged \
+                           backend ({model})");
+                }
+                continue;
+            }
             if l as usize + positions > s {
                 bail!("slot {b}: chunk of {positions} at len {l} exceeds \
                        capacity {s} ({model})");
             }
+        }
+        Ok(())
+    }
+
+    /// Write fingerprint rows `start..start+toks.len()` of `slot` through
+    /// the paged tables, one row per processed token. No-op when the
+    /// state buffer carries no page tables (unpaged runs keep the old
+    /// stateless behaviour bit-for-bit). The one-float row is a stack
+    /// temporary — nothing here allocates, keeping decode/draft/verify
+    /// inside the zero-alloc hot-path budget (DESIGN.md §8).
+    fn write_rows(&self, mi: usize, state: &StateBuf, slot: usize,
+                  start: usize, toks: &[i32]) -> Result<()> {
+        let Some(kv) = state.paged.as_ref() else { return Ok(()) };
+        for (i, &t) in toks.iter().enumerate() {
+            let row = [kv_fingerprint(self.salts[mi], t)];
+            kv.write_row(slot, start + i, &row)?;
         }
         Ok(())
     }
@@ -278,11 +330,12 @@ impl Backend for SimBackend {
         self.model_idx(model).map(|_| ())
     }
 
-    /// The Markov LM keeps no KV state: every `state` argument below is
-    /// ignored, so concurrent group steps may be handed dummy buffers
-    /// (no per-model lock serializing the logits compute).
+    /// The Markov LM keeps no KV state it *reads*, but a paged pool
+    /// writes fingerprint rows through the model's page tables, so the
+    /// engine must hand it the real state buffer (the tables themselves
+    /// are `Sync`; per-slot ownership keeps concurrent groups safe).
     fn state_is_inert(&self) -> bool {
-        true
+        !self.paged
     }
 
     /// Pure function of (model, prev token): lanes are fully independent
@@ -290,6 +343,10 @@ impl Backend for SimBackend {
     /// can run concurrently with bit-identical results (DESIGN.md §11).
     fn parallel_groups_safe(&self) -> bool {
         true
+    }
+
+    fn supports_paged_kv(&self) -> bool {
+        self.paged
     }
 
     fn prefill(&self, sink: &mut dyn StepSink, model: &str, prompt: &[i32])
@@ -303,26 +360,29 @@ impl Backend for SimBackend {
         self.write_logits(mi, *prompt.last().unwrap(), &mut logits);
         self.record(sink, model, FnKind::Prefill, 1, 0, prompt.len(),
                     self.models[mi].cost_per_pos);
-        Ok((logits, PrefillState::Sim))
+        Ok((logits, PrefillState::Sim { prompt: prompt.to_vec() }))
     }
 
     fn insert(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
-              _state: &mut StateBuf, one: &PrefillState, slot: usize)
+              state: &mut StateBuf, one: &PrefillState, slot: usize)
               -> Result<()> {
-        if !matches!(one, PrefillState::Sim) {
+        let PrefillState::Sim { prompt } = one else {
             bail!("sim backend handed a non-sim prefill state");
-        }
+        };
         if slot >= batch {
             bail!("insert slot {slot} out of range (batch {batch})");
         }
         let mi = self.model_idx(model)?;
+        // materialize the prompt's rows so register_prefix sees the
+        // whole prefix physically written
+        self.write_rows(mi, state, slot, 0, prompt)?;
         self.record(sink, model, FnKind::Insert, batch, 0, 1,
                     self.models[mi].cost_per_pos);
         Ok(())
     }
 
     fn decode(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
-              tokens: &[i32], _state: &mut StateBuf, lens: &[i32],
+              tokens: &[i32], state: &mut StateBuf, lens: &[i32],
               out: &mut Vec<f32>) -> Result<()> {
         if tokens.len() != batch {
             bail!("decode tokens != batch {batch}");
@@ -337,6 +397,10 @@ impl Backend for SimBackend {
         out.resize(batch * v, 0.0);
         for b in 0..batch {
             self.write_logits(mi, tokens[b], &mut out[b * v..(b + 1) * v]);
+            if lens[b] >= 0 {
+                self.write_rows(mi, state, b, lens[b] as usize,
+                                &tokens[b..b + 1])?;
+            }
         }
         self.record(sink, model, FnKind::Decode, batch, 0, batch,
                     self.models[mi].cost_per_pos);
@@ -344,7 +408,7 @@ impl Backend for SimBackend {
     }
 
     fn draft(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
-             window: usize, tokens: &[i32], _state: &mut StateBuf,
+             window: usize, tokens: &[i32], state: &mut StateBuf,
              lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
              -> Result<()> {
         if tokens.len() != batch {
@@ -363,6 +427,12 @@ impl Backend for SimBackend {
         for b in 0..batch {
             let mut prev = tokens[b];
             for i in 0..window {
+                // position lens[b]+i processes `prev` (the base token,
+                // then each drafted token in turn)
+                if lens[b] >= 0 {
+                    self.write_rows(mi, state, b, lens[b] as usize + i,
+                                    &[prev])?;
+                }
                 let row = &mut logits[(b * window + i) * v
                                       ..(b * window + i + 1) * v];
                 self.write_logits(mi, prev, row);
@@ -377,7 +447,7 @@ impl Backend for SimBackend {
     }
 
     fn verify(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
-              window: usize, block: &[i32], _state: &mut StateBuf,
+              window: usize, block: &[i32], state: &mut StateBuf,
               lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
         let w1 = window + 1;
         if block.len() != batch * w1 {
@@ -392,6 +462,10 @@ impl Backend for SimBackend {
         out.clear();
         out.resize(batch * w1 * v, 0.0);
         for b in 0..batch {
+            if lens[b] >= 0 {
+                self.write_rows(mi, state, b, lens[b] as usize,
+                                &block[b * w1..(b + 1) * w1])?;
+            }
             for i in 0..w1 {
                 self.write_logits(mi, block[b * w1 + i],
                                   &mut out[(b * w1 + i) * v
@@ -537,6 +611,55 @@ mod tests {
             b1.oracle_next(4 + t) != b2.oracle_next(4 + t)
         });
         assert!(diverges, "seed must drive the oracle process");
+    }
+
+    #[test]
+    fn paged_pool_writes_row_fingerprints_and_skips_nonmembers() {
+        use crate::state::PagedKv;
+        let b = SimBackend::new(SimSpec::small_pool().with_paged());
+        assert!(b.supports_paged_kv());
+        assert!(!b.state_is_inert(), "paged state must reach the backend");
+        let mut prof = Profiler::new(0.2);
+        let m = &b.manifest().models["m2"];
+        let batch = 2;
+        let dims = KvDims {
+            layers: m.layers,
+            batch,
+            heads: m.heads,
+            seq: b.manifest().seq,
+            head_dim: m.head_dim,
+        };
+        let per_pos = m.layers * 2 * m.heads * m.head_dim;
+        let kv = std::sync::Arc::new(
+            PagedKv::new(batch, b.manifest().seq, 4, per_pos));
+        let mut st = StateBuf::with_paged(
+            dims, b.manifest().state_len(m, batch), kv.clone());
+        let prompt = [10, 11, 12];
+        let (_, one) = b.prefill(&mut prof, "m2", &prompt).unwrap();
+        b.insert(&mut prof, "m2", batch, &mut st, &one, 0).unwrap();
+        assert_eq!(kv.written(0), 3, "insert materializes the prompt");
+        let mi = b.model_idx("m2").unwrap();
+        let mut row = [0.0f32];
+        for (p, &t) in prompt.iter().enumerate() {
+            kv.read_row(0, p, &mut row).unwrap();
+            assert_eq!(row[0], kv_fingerprint(b.salts[mi], t), "row {p}");
+        }
+        // decode: member lane 0 extends to row 3; lane 1 is a non-member
+        // (len -1) and must be left untouched
+        let mut out = Vec::new();
+        b.decode(&mut prof, "m2", batch, &[12, 99], &mut st, &[3, -1],
+                 &mut out).unwrap();
+        assert_eq!(kv.written(0), 4);
+        assert_eq!(kv.written(1), 0, "non-member lane written");
+        kv.read_row(0, 3, &mut row).unwrap();
+        assert_eq!(row[0], kv_fingerprint(b.salts[mi], 12));
+        kv.audit().unwrap();
+        // the unpaged pool rejects the membership convention outright
+        let plain = backend();
+        let mut st2 = dummy_state(&plain, "m2", batch);
+        let err = plain.decode(&mut prof, "m2", batch, &[12, 99], &mut st2,
+                               &[3, -1], &mut out);
+        assert!(err.is_err(), "negative len must bail when unpaged");
     }
 
     #[test]

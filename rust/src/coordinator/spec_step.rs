@@ -97,6 +97,13 @@ pub struct StepCtx<'a> {
     /// — the engine sets it only when fault injection or a call deadline
     /// is configured, so the fault-free hot path never pays the scan.
     pub check_logits: bool,
+    /// Paged-state membership convention (DESIGN.md §14): when set, lens
+    /// rows for non-member lanes are `-1` so a paged backend knows not to
+    /// write their state rows — a stale-length write from this group
+    /// would land in pages another group's slot owns. Unpaged backends
+    /// never see a negative length (the router only sets this when
+    /// `Backend::supports_paged_kv()` holds).
+    pub paged: bool,
 }
 
 /// Exclusive access to the state buffer a backend call should receive:
@@ -274,12 +281,21 @@ fn base_tokens_into(slots: &SlotSeqs, pad: i32, out: &mut Vec<i32>)
 /// step; each read is atomic, the value only feeds the backend's
 /// capacity check for those lanes, and the completion guard keeps every
 /// lane's frontier far enough from capacity that any snapshot passes
-/// (DESIGN.md §11).
+/// (DESIGN.md §11). Under `paged` the snapshot would additionally
+/// *position a state write*, which must never happen for lanes outside
+/// this group — those lanes get `-1` instead ([`StepCtx::paged`]).
 fn fill_lens(states: StateShard, model: &str, batch: usize,
-             lens: &mut Vec<i32>) -> Result<()> {
+             slots: &SlotSeqs, paged: bool, lens: &mut Vec<i32>)
+             -> Result<()> {
     let st = states.get(model)?;
     lens.clear();
-    lens.extend((0..batch).map(|b| st.mask.valid_len(b) as i32));
+    lens.extend((0..batch).map(|b| {
+        if paged && !slots.get(b).is_some_and(|s| s.is_some()) {
+            -1
+        } else {
+            st.mask.valid_len(b) as i32
+        }
+    }));
     Ok(())
 }
 
@@ -321,7 +337,8 @@ pub fn catch_up(ctx: &mut StepCtx, model: &str, window: usize,
         // Build one batch chunk: each active slot advances by up to w+1 of
         // its own pending tokens; already-caught-up slots harmlessly
         // re-forward their base token (identical K/V rewrite).
-        fill_lens(ctx.states, model, batch, &mut ctx.scratch.lens)?;
+        fill_lens(ctx.states, model, batch, slots, ctx.paged,
+                  &mut ctx.scratch.lens)?;
         {
             let s = &mut *ctx.scratch;
             s.block.clear();
@@ -461,7 +478,8 @@ fn run_chain_levels(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
 
     // --- Draft (level 1) -------------------------------------------------
     let drafter: &str = &chain.models[0];
-    fill_lens(ctx.states, drafter, batch, &mut ctx.scratch.lens)?;
+    fill_lens(ctx.states, drafter, batch, slots, ctx.paged,
+              &mut ctx.scratch.lens)?;
     {
         let st = ctx.states.get(drafter)?;
         let s = &mut *ctx.scratch;
@@ -529,7 +547,8 @@ fn run_chain_levels(ctx: &mut StepCtx, chain: &Chain, slots: &SlotSeqs,
         let verifier: &str = &chain.models[j];
         let proposer: &str = &chain.models[j - 1];
         let is_final = j == n_levels - 1;
-        fill_lens(ctx.states, verifier, batch, &mut ctx.scratch.lens)?;
+        fill_lens(ctx.states, verifier, batch, slots, ctx.paged,
+                  &mut ctx.scratch.lens)?;
         // rotate: last level's verify output becomes this level's q-rows
         std::mem::swap(&mut ctx.scratch.p_prev, &mut ctx.scratch.p_cur);
         {
@@ -708,7 +727,8 @@ fn run_tmo_step(ctx: &mut StepCtx, target: &str, slots: &SlotSeqs, pad: i32)
         return Err(e);
     }
     base_tokens_into(slots, pad, &mut ctx.scratch.base)?;
-    fill_lens(ctx.states, target, ctx.batch, &mut ctx.scratch.lens)?;
+    fill_lens(ctx.states, target, ctx.batch, slots, ctx.paged,
+              &mut ctx.scratch.lens)?;
     let v = ctx.vocab;
     let st = ctx.states.get(target)?;
     let s = &mut *ctx.scratch;

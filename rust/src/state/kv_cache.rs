@@ -9,7 +9,11 @@
 //! Slot-level operations (admission insert, physical truncation) are
 //! strided host copies. The index arithmetic is factored into pure
 //! functions so it is unit-testable without touching XLA.
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
+
+use crate::state::pages::PagedKv;
 
 /// Dims of a KV tensor: [L, 2, B, H, S, Dh].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -157,6 +161,12 @@ pub struct StateBuf {
     /// total packed length (kv + tail)
     pub state_len: usize,
     buf: Option<xla::PjRtBuffer>,
+    /// Paged view of this model's KV storage (DESIGN.md §14): present
+    /// when the engine runs with paging enabled, shared with the state
+    /// manager's `ModelState`. Backends that declare
+    /// `supports_paged_kv()` address rows through this instead of the
+    /// packed buffer.
+    pub paged: Option<Arc<PagedKv>>,
 }
 
 // SAFETY (DESIGN.md §11): the wrapped `xla::PjRtBuffer` is `Rc`-based and
@@ -168,7 +178,9 @@ pub struct StateBuf {
 // `Backend::parallel_groups_safe`), behind `SerialXla`'s mutex. The bound
 // exists so `Mutex<StateBuf>` is `Sync` and the scatter/gather tick's
 // scoped borrows typecheck; no materialized device buffer ever crosses a
-// thread with another clone of its `Rc` alive elsewhere.
+// thread with another clone of its `Rc` alive elsewhere. The `paged`
+// field is a genuinely `Send + Sync` `Arc` (internally synchronized) and
+// does not participate in this argument.
 unsafe impl Send for StateBuf {}
 
 impl Default for StateBuf {
@@ -178,7 +190,7 @@ impl Default for StateBuf {
     fn default() -> Self {
         let dims = KvDims { layers: 0, batch: 0, heads: 0, seq: 0,
                             head_dim: 0 };
-        StateBuf { dims, state_len: 0, buf: None }
+        StateBuf { dims, state_len: 0, buf: None, paged: None }
     }
 }
 
@@ -188,6 +200,7 @@ impl std::fmt::Debug for StateBuf {
             .field("dims", &self.dims)
             .field("state_len", &self.state_len)
             .field("materialized", &self.buf.is_some())
+            .field("paged", &self.paged.is_some())
             .finish()
     }
 }
@@ -195,7 +208,15 @@ impl std::fmt::Debug for StateBuf {
 impl StateBuf {
     pub fn new(dims: KvDims, state_len: usize) -> Self {
         assert!(state_len >= dims.elements());
-        StateBuf { dims, state_len, buf: None }
+        StateBuf { dims, state_len, buf: None, paged: None }
+    }
+
+    /// A state buffer whose rows live in the paged pool instead of the
+    /// packed device buffer.
+    pub fn with_paged(dims: KvDims, state_len: usize, paged: Arc<PagedKv>)
+                      -> Self {
+        assert!(state_len >= dims.elements());
+        StateBuf { dims, state_len, buf: None, paged: Some(paged) }
     }
 
     pub fn kv_len(&self) -> usize {

@@ -23,6 +23,8 @@
 //! is what enforces the one-writer-per-slot discipline at the API level.
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
 
+use anyhow::{bail, Result};
+
 #[derive(Debug)]
 pub struct CacheMask {
     /// valid[b] = number of leading valid positions for slot b.
@@ -142,6 +144,30 @@ impl CacheMask {
         self.written[slot].load(Relaxed).saturating_sub(frontier)
     }
 
+    /// [`CacheMask::dirty_past`] with the mask invariant checked first:
+    /// a slot whose logical frontier exceeds its physical high-water mark
+    /// (`valid > written`) is corrupt — entries are claimed valid that
+    /// were never written — and the plain `saturating_sub` would silently
+    /// report such a slot as clean. Physical truncation (`fix_caches`)
+    /// goes through this variant so a concurrent logical-rollback /
+    /// physical-truncate interleaving that breaches the invariant
+    /// surfaces as a structured error (and a debug assertion) instead of
+    /// a silent 0.
+    pub fn dirty_past_checked(&self, slot: usize, frontier: usize)
+                              -> Result<usize> {
+        let w = self.written[slot].load(Relaxed);
+        let v = self.valid[slot].load(Relaxed);
+        if w < v {
+            debug_assert!(false,
+                          "slot {slot}: valid {v} > written {w} (mask \
+                           invariant breach)");
+            bail!("slot {slot}: logical frontier {v} exceeds physical \
+                   high-water mark {w} — rollback/truncate interleaving \
+                   broke the valid <= written invariant");
+        }
+        Ok(w.saturating_sub(frontier))
+    }
+
     /// Record a physical truncation at `frontier`: written marks clamp.
     pub fn physical_truncate(&self, frontier: usize) {
         for w in &self.written {
@@ -249,6 +275,40 @@ mod tests {
         assert_eq!(m.dirty_past(0, 12), 0, "frontier beyond high-water");
         m.physical_truncate(7);
         assert_eq!(m.dirty_past(0, 7), 0, "clamped after truncation");
+    }
+
+    #[test]
+    fn dirty_past_checked_matches_plain_on_healthy_state() {
+        let m = CacheMask::new(2, 32);
+        m.append_valid(0, 4);
+        m.append_speculative(0, 6);
+        for f in [0usize, 4, 7, 10, 12] {
+            assert_eq!(m.dirty_past_checked(0, f).unwrap(),
+                       m.dirty_past(0, f), "frontier {f}");
+        }
+        // a frontier above the slot's high-water mark is legitimate (the
+        // slot just never wrote that far) and stays a clean 0
+        assert_eq!(m.dirty_past_checked(1, 9).unwrap(), 0);
+    }
+
+    #[test]
+    fn dirty_past_checked_flags_valid_above_written() {
+        let m = CacheMask::new(1, 32);
+        // in-module test: forge the invariant breach the public API
+        // cannot produce (valid > written)
+        m.written[0].store(3, Relaxed);
+        m.valid[0].store(5, Relaxed);
+        match std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| m.dirty_past_checked(0, 0)))
+        {
+            // release builds: structured error, never a silent 0
+            Ok(res) => {
+                let err = res.unwrap_err();
+                assert!(err.to_string().contains("invariant"), "{err}");
+            }
+            // debug builds: the debug assertion fires first
+            Err(_) => {}
+        }
     }
 
     #[test]

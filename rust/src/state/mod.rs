@@ -2,8 +2,12 @@
 //! the per-model state registry with two-phase rollback.
 pub mod kv_cache;
 pub mod mask;
+pub mod pages;
+pub mod prefix_index;
 pub mod state_manager;
 
 pub use kv_cache::{KvDims, StateBuf};
 pub use mask::CacheMask;
+pub use pages::{PagedCfg, PagedKv, PagedStats, PAGE_NONE};
+pub use prefix_index::{PrefixIndex, PrefixMatch};
 pub use state_manager::{ModelState, StateManager, StateShard};

@@ -1,0 +1,371 @@
+//! Radix/trie prefix index over committed token prefixes (DESIGN.md §14).
+//!
+//! The index maps token prefixes to resident KV pages so admission can
+//! skip prefill for prompt prefixes some earlier request already forwarded
+//! (shared system prompts, multi-turn continuations). Keys are *full
+//! fixed-size pages* of tokens: an edge holds exactly `page_tokens` tokens
+//! plus the id of the KV page that stores their entries. A lookup walks
+//! edges greedily, so a partial match yields the longest page-aligned
+//! resident prefix; an exact match additionally resolves a `Terminal`
+//! record carrying the sub-page tail tokens, the page holding them, and —
+//! for the target model — the stored last-position logits, which is what
+//! lets admission skip the target prefill entirely and still sample a
+//! bit-identical first token.
+//!
+//! The index does **not** own the page pool: it records page ids and
+//! reports which ids it adopted (so [`crate::state::pages::PagedKv`] can
+//! bump refcounts) and which it released on flush. Capacity is bounded by
+//! `cap_pages`; when an insert would overflow, the caller flushes the
+//! whole index (generation flush — deterministic, no clock dependence)
+//! and retries.
+use anyhow::{bail, Result};
+
+/// Result of a prefix lookup, caller-owned and reused across admissions.
+#[derive(Debug, Default)]
+pub struct PrefixMatch {
+    /// Resident full-page ids covering the matched prefix, in order.
+    pub pages: Vec<u32>,
+    /// Page holding the sub-page tail (exact matches only, when the
+    /// prompt length is not a page multiple).
+    pub tail_page: Option<u32>,
+    /// Tail tokens beyond the last full page (exact matches only).
+    pub tail_len: usize,
+    /// Tokens covered: `pages.len() * page_tokens`, plus the tail when
+    /// the match is exact.
+    pub matched: usize,
+    /// The whole prompt is resident (full pages + terminal tail).
+    pub exact: bool,
+    /// Stored last-position logits from the terminal record (target
+    /// registrations only). Valid when `has_logits`.
+    pub logits: Vec<f32>,
+    pub has_logits: bool,
+}
+
+impl PrefixMatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn clear(&mut self) {
+        self.pages.clear();
+        self.tail_page = None;
+        self.tail_len = 0;
+        self.matched = 0;
+        self.exact = false;
+        self.logits.clear();
+        self.has_logits = false;
+    }
+}
+
+#[derive(Debug, Default)]
+struct Node {
+    edges: Vec<Edge>,
+    terminals: Vec<Terminal>,
+}
+
+#[derive(Debug)]
+struct Edge {
+    key: Vec<i32>,
+    page: u32,
+    child: Node,
+}
+
+#[derive(Debug)]
+struct Terminal {
+    tail: Vec<i32>,
+    tail_page: Option<u32>,
+    logits: Option<Vec<f32>>,
+}
+
+/// The trie. Internally unsynchronized — [`crate::state::pages::PagedKv`]
+/// wraps it in a mutex and owns the refcount wiring.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    page_tokens: usize,
+    cap_pages: usize,
+    root: Node,
+    pages_held: usize,
+}
+
+impl PrefixIndex {
+    pub fn new(page_tokens: usize, cap_pages: usize) -> Self {
+        assert!(page_tokens >= 1, "page_tokens must be >= 1");
+        PrefixIndex {
+            page_tokens,
+            cap_pages,
+            root: Node::default(),
+            pages_held: 0,
+        }
+    }
+
+    /// Pages currently referenced by the index (full-page edges + tails).
+    pub fn pages_held(&self) -> usize {
+        self.pages_held
+    }
+
+    /// Would registering a prompt of `tokens_len` tokens exceed the page
+    /// budget in the worst case (no shared prefix)?
+    pub fn would_overflow(&self, tokens_len: usize) -> bool {
+        let p = self.page_tokens;
+        let need = tokens_len / p + usize::from(tokens_len % p > 0);
+        self.pages_held + need > self.cap_pages
+    }
+
+    /// Longest resident page-aligned prefix of `tokens`, plus exact-match
+    /// terminal resolution. Fills `out` (reused buffers, cleared first).
+    pub fn lookup(&self, tokens: &[i32], out: &mut PrefixMatch) {
+        out.clear();
+        let p = self.page_tokens;
+        let mut node = &self.root;
+        let mut i = 0usize;
+        while i + p <= tokens.len() {
+            match node.edges.iter().find(|e| e.key[..] == tokens[i..i + p]) {
+                Some(e) => {
+                    out.pages.push(e.page);
+                    node = &e.child;
+                    i += p;
+                }
+                None => break,
+            }
+        }
+        out.matched = i;
+        // exact resolution only makes sense when every full page matched
+        if i == (tokens.len() / p) * p {
+            let tail = &tokens[i..];
+            if let Some(t) = node.terminals.iter()
+                .find(|t| t.tail[..] == tail[..])
+            {
+                out.exact = true;
+                out.matched = tokens.len();
+                out.tail_len = tail.len();
+                out.tail_page = t.tail_page;
+                if let Some(l) = &t.logits {
+                    out.logits.extend_from_slice(l);
+                    out.has_logits = true;
+                }
+            }
+        }
+    }
+
+    /// Register a prompt: `pages` holds the slot's page id per *full*
+    /// page of `tokens`; `tail_page` the page holding the sub-page tail
+    /// (required when `tokens.len() % page_tokens != 0`). Page ids the
+    /// index adopts (new edges/terminals — the caller must bump their
+    /// refcounts) are pushed into `adopted`; ids already indexed under an
+    /// identical key are not re-adopted.
+    pub fn insert(&mut self, tokens: &[i32], pages: &[u32],
+                  tail_page: Option<u32>, logits: Option<Vec<f32>>,
+                  adopted: &mut Vec<u32>) -> Result<()> {
+        let p = self.page_tokens;
+        let n_full = tokens.len() / p;
+        if pages.len() != n_full {
+            bail!("prefix insert: {} page ids for {n_full} full pages",
+                  pages.len());
+        }
+        let tail = &tokens[n_full * p..];
+        if !tail.is_empty() && tail_page.is_none() {
+            bail!("prefix insert: {}-token tail without a tail page",
+                  tail.len());
+        }
+        let mut held = self.pages_held;
+        Self::insert_rec(&mut self.root, tokens, p, pages, tail, tail_page,
+                         logits, adopted, &mut held);
+        self.pages_held = held;
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn insert_rec(node: &mut Node, tokens: &[i32], p: usize, pages: &[u32],
+                  tail: &[i32], tail_page: Option<u32>,
+                  logits: Option<Vec<f32>>, adopted: &mut Vec<u32>,
+                  held: &mut usize) {
+        if pages.is_empty() {
+            if !node.terminals.iter().any(|t| t.tail[..] == tail[..]) {
+                let tp = if tail.is_empty() { None } else { tail_page };
+                if let Some(pg) = tp {
+                    adopted.push(pg);
+                    *held += 1;
+                }
+                node.terminals.push(Terminal {
+                    tail: tail.to_vec(),
+                    tail_page: tp,
+                    logits,
+                });
+            }
+            return;
+        }
+        let key = &tokens[..p];
+        let idx = match node.edges.iter()
+            .position(|e| e.key[..] == key[..])
+        {
+            Some(j) => j,
+            None => {
+                adopted.push(pages[0]);
+                *held += 1;
+                node.edges.push(Edge {
+                    key: key.to_vec(),
+                    page: pages[0],
+                    child: Node::default(),
+                });
+                node.edges.len() - 1
+            }
+        };
+        Self::insert_rec(&mut node.edges[idx].child, &tokens[p..], p,
+                         &pages[1..], tail, tail_page, logits, adopted,
+                         held);
+    }
+
+    /// Drop every entry; the page ids the index was holding are pushed
+    /// into `freed` so the caller can unref them.
+    pub fn flush(&mut self, freed: &mut Vec<u32>) {
+        Self::collect_pages(&self.root, &mut |p| freed.push(p));
+        self.root = Node::default();
+        self.pages_held = 0;
+    }
+
+    /// Visit every page id the index holds (audits).
+    pub fn for_each_page(&self, f: &mut dyn FnMut(u32)) {
+        Self::collect_pages(&self.root, f);
+    }
+
+    fn collect_pages(node: &Node, f: &mut dyn FnMut(u32)) {
+        for e in &node.edges {
+            f(e.page);
+            Self::collect_pages(&e.child, f);
+        }
+        for t in &node.terminals {
+            if let Some(p) = t.tail_page {
+                f(p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, salt: i32) -> Vec<i32> {
+        (0..n).map(|i| i as i32 * 3 + salt).collect()
+    }
+
+    #[test]
+    fn lookup_on_empty_index_misses() {
+        let idx = PrefixIndex::new(4, 16);
+        let mut m = PrefixMatch::new();
+        idx.lookup(&toks(10, 0), &mut m);
+        assert!(!m.exact);
+        assert_eq!(m.matched, 0);
+        assert!(m.pages.is_empty());
+    }
+
+    #[test]
+    fn exact_match_returns_pages_tail_and_logits() {
+        let mut idx = PrefixIndex::new(4, 16);
+        let t = toks(10, 1); // 2 full pages + 2-token tail
+        let mut adopted = Vec::new();
+        idx.insert(&t, &[7, 8], Some(9), Some(vec![0.5, 0.25]),
+                   &mut adopted).unwrap();
+        assert_eq!(adopted, vec![7, 8, 9]);
+        assert_eq!(idx.pages_held(), 3);
+        let mut m = PrefixMatch::new();
+        idx.lookup(&t, &mut m);
+        assert!(m.exact);
+        assert_eq!(m.matched, 10);
+        assert_eq!(m.pages, vec![7, 8]);
+        assert_eq!(m.tail_page, Some(9));
+        assert_eq!(m.tail_len, 2);
+        assert!(m.has_logits);
+        assert_eq!(m.logits, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn partial_match_stops_at_the_longest_resident_page_prefix() {
+        let mut idx = PrefixIndex::new(4, 16);
+        let t = toks(8, 1);
+        let mut adopted = Vec::new();
+        idx.insert(&t, &[3, 4], None, None, &mut adopted).unwrap();
+        // same first page, diverging second page
+        let mut other = t.clone();
+        other[6] += 100;
+        other.push(999);
+        let mut m = PrefixMatch::new();
+        idx.lookup(&other, &mut m);
+        assert!(!m.exact);
+        assert_eq!(m.matched, 4);
+        assert_eq!(m.pages, vec![3]);
+        assert!(!m.has_logits);
+        // a longer prompt extending the registered one also partial-hits
+        let mut longer = t.clone();
+        longer.extend_from_slice(&[1, 2, 3]);
+        idx.lookup(&longer, &mut m);
+        assert!(!m.exact);
+        assert_eq!(m.matched, 8);
+        assert_eq!(m.pages, vec![3, 4]);
+    }
+
+    #[test]
+    fn page_multiple_prompts_use_an_empty_tail_terminal() {
+        let mut idx = PrefixIndex::new(4, 16);
+        let t = toks(8, 2);
+        let mut adopted = Vec::new();
+        idx.insert(&t, &[1, 2], None, Some(vec![1.0]), &mut adopted)
+            .unwrap();
+        assert_eq!(adopted, vec![1, 2], "empty tail adopts no tail page");
+        let mut m = PrefixMatch::new();
+        idx.lookup(&t, &mut m);
+        assert!(m.exact);
+        assert_eq!(m.matched, 8);
+        assert_eq!(m.tail_len, 0);
+        assert_eq!(m.tail_page, None);
+        assert!(m.has_logits);
+    }
+
+    #[test]
+    fn reinsert_shares_existing_edges() {
+        let mut idx = PrefixIndex::new(4, 16);
+        let a = toks(8, 1);
+        let mut adopted = Vec::new();
+        idx.insert(&a, &[1, 2], None, None, &mut adopted).unwrap();
+        // same first page, new second page + tail
+        let mut b = a[..4].to_vec();
+        b.extend_from_slice(&[500, 501, 502, 503, 504]);
+        adopted.clear();
+        idx.insert(&b, &[10, 11], Some(12), None, &mut adopted).unwrap();
+        assert_eq!(adopted, vec![11, 12],
+                   "the shared first page must not be re-adopted");
+        assert_eq!(idx.pages_held(), 4);
+        let mut m = PrefixMatch::new();
+        idx.lookup(&b, &mut m);
+        assert!(m.exact);
+        assert_eq!(m.pages, vec![1, 11]);
+    }
+
+    #[test]
+    fn insert_validates_arity() {
+        let mut idx = PrefixIndex::new(4, 16);
+        let mut adopted = Vec::new();
+        assert!(idx.insert(&toks(8, 0), &[1], None, None, &mut adopted)
+                .is_err());
+        assert!(idx.insert(&toks(6, 0), &[1], None, None, &mut adopted)
+                .is_err(), "tail without tail page");
+    }
+
+    #[test]
+    fn flush_releases_every_held_page() {
+        let mut idx = PrefixIndex::new(4, 4);
+        let mut adopted = Vec::new();
+        idx.insert(&toks(10, 1), &[7, 8], Some(9), None, &mut adopted)
+            .unwrap();
+        assert!(idx.would_overflow(8), "3 held + 2 needed > cap 4");
+        assert!(!idx.would_overflow(4));
+        let mut freed = Vec::new();
+        idx.flush(&mut freed);
+        freed.sort_unstable();
+        assert_eq!(freed, vec![7, 8, 9]);
+        assert_eq!(idx.pages_held(), 0);
+        let mut m = PrefixMatch::new();
+        idx.lookup(&toks(10, 1), &mut m);
+        assert_eq!(m.matched, 0);
+    }
+}

@@ -27,12 +27,13 @@
 //! slot sets are rejected with a structured error before any step runs,
 //! instead of silently aliasing a slot between two groups.
 use std::collections::BTreeMap;
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{bail, Context, Result};
 
 use crate::state::kv_cache::{KvDims, StateBuf};
 use crate::state::mask::CacheMask;
+use crate::state::pages::{PagedCfg, PagedKv, PagedStats};
 
 pub struct ModelState {
     pub model: String,
@@ -41,23 +42,56 @@ pub struct ModelState {
     pub dims: KvDims,
     kv: Mutex<StateBuf>,
     pub mask: CacheMask,
+    /// Paged KV storage (DESIGN.md §14) — present when the manager was
+    /// built with [`StateManager::with_paging`]. The same `Arc` is
+    /// embedded in the `StateBuf` behind `kv`, which is how backends
+    /// reach the page tables through the existing call signatures.
+    pub paged: Option<Arc<PagedKv>>,
 }
 
 impl ModelState {
     pub fn new(model: &str, dims: KvDims, state_len: usize) -> Self {
+        Self::build(model, dims, state_len, None)
+    }
+
+    fn build(model: &str, dims: KvDims, state_len: usize,
+             paged_cfg: Option<PagedCfg>) -> Self {
+        let paged = paged_cfg.map(|cfg| {
+            let per_pos = dims.layers * 2 * dims.heads * dims.head_dim;
+            Arc::new(PagedKv::new(dims.batch, dims.seq, cfg.page_tokens,
+                                  per_pos.max(1)))
+        });
+        let buf = match &paged {
+            Some(p) => StateBuf::with_paged(dims, state_len, p.clone()),
+            None => StateBuf::new(dims, state_len),
+        };
         ModelState {
             model: model.to_string(),
             dims,
-            kv: Mutex::new(StateBuf::new(dims, state_len)),
+            kv: Mutex::new(buf),
             mask: CacheMask::new(dims.batch, dims.seq),
+            paged,
+        }
+    }
+
+    /// Reset one slot entirely: the logical mask and, when paging is on,
+    /// the slot's page table (pages unreferenced back to the pool).
+    pub fn reset_slot(&self, slot: usize) {
+        self.mask.clear_slot(slot);
+        if let Some(p) = &self.paged {
+            p.release_slot(slot);
         }
     }
 
     /// Exclusive access to the packed KV/state buffer. Uncontended on the
-    /// single-threaded paths (admission, workers = 1); under the parallel
-    /// tick only stateful backends ever lock it — and those are restricted
-    /// to workers = 1 (`Backend::parallel_groups_safe`), so the guard is
-    /// held across a backend call only when no other worker exists.
+    /// single-threaded paths (admission, workers = 1). Under the parallel
+    /// tick, packed-state backends are restricted to workers = 1
+    /// (`Backend::parallel_groups_safe`), so the guard is held across a
+    /// backend call only when no other worker exists; paged backends
+    /// (`Backend::supports_paged_kv`) may lock it from several workers —
+    /// the buffer then only carries the `Arc<PagedKv>` view, whose
+    /// per-slot tables do the real (disjoint-slot) synchronization, so
+    /// the brief contention is on metadata, not data.
     pub fn kv(&self) -> MutexGuard<'_, StateBuf> {
         self.kv.lock().unwrap_or_else(|e| e.into_inner())
     }
@@ -107,31 +141,52 @@ impl<'a> StateShard<'a> {
 /// Registry of per-model states plus lifecycle + rollback bookkeeping.
 pub struct StateManager {
     states: BTreeMap<String, ModelState>,
+    /// Paging knobs; `Some` = every model state is created with a paged
+    /// KV pool + prefix index (DESIGN.md §14).
+    paged_cfg: Option<PagedCfg>,
     pub physical_truncations: u64,
     pub elements_reclaimed: u64,
+    pub pages_dropped: u64,
 }
 
 impl StateManager {
     pub fn new() -> Self {
         StateManager {
             states: BTreeMap::new(),
+            paged_cfg: None,
             physical_truncations: 0,
             elements_reclaimed: 0,
+            pages_dropped: 0,
         }
+    }
+
+    /// A manager whose model states use the paged KV layout.
+    pub fn with_paging(cfg: PagedCfg) -> Self {
+        let mut m = Self::new();
+        m.paged_cfg = Some(cfg);
+        m
+    }
+
+    pub fn paging_enabled(&self) -> bool {
+        self.paged_cfg.is_some()
     }
 
     /// Get-or-create the state for a model. Runs every tick for every
     /// chain member, so the hit path must not allocate: probe with the
     /// borrowed key first and only materialize the owned `String` on
     /// first insertion (the `entry` API would allocate the key on every
-    /// call — DESIGN.md §8/§10 full-tick zero-alloc gate).
+    /// call — DESIGN.md §8/§10 full-tick zero-alloc gate). The lookup
+    /// after the insert goes through the structured [`StateManager::
+    /// get_mut`] path — never an `unwrap` that could turn a registry
+    /// inconsistency into an engine abort mid-degradation.
     pub fn ensure(&mut self, model: &str, dims: KvDims, state_len: usize)
-                  -> &mut ModelState {
+                  -> Result<&mut ModelState> {
         if !self.states.contains_key(model) {
-            self.states.insert(model.to_string(),
-                               ModelState::new(model, dims, state_len));
+            self.states.insert(
+                model.to_string(),
+                ModelState::build(model, dims, state_len, self.paged_cfg));
         }
-        self.states.get_mut(model).unwrap()
+        self.get_mut(model)
     }
 
     pub fn get(&self, model: &str) -> Result<&ModelState> {
@@ -216,10 +271,11 @@ impl StateManager {
         }
     }
 
-    /// Request completed: wipe the slot across every model state.
+    /// Request completed: wipe the slot across every model state (masks
+    /// and, with paging on, the slot's page tables).
     pub fn clear_slot(&self, slot: usize) {
         for st in self.states.values() {
-            st.mask.clear_slot(slot);
+            st.reset_slot(slot);
         }
     }
 
@@ -239,15 +295,30 @@ impl StateManager {
     /// wrote past the frontier). Host-staged caches (eviction, benches)
     /// use the matching bounded zeroing in
     /// `kv_cache::truncate_tail_bounded`.
+    /// With paging on, truncation is additionally page-granular: every
+    /// page lying wholly past the frontier is dropped back to the pool
+    /// (no data movement at all), and only the boundary page's dirty rows
+    /// are zeroed (`PagedKv::drop_pages_after`).
     pub fn fix_caches(&mut self) -> Result<usize> {
         let mut total = 0usize;
+        let mut pages = 0usize;
         for st in self.states.values_mut() {
             let frontier = st.mask.common_physical_frontier();
             let d = st.dims;
             let per_pos = d.layers * 2 * d.heads * d.head_dim;
-            let dirty: usize = (0..st.mask.slots())
-                .map(|s| st.mask.dirty_past(s, frontier))
-                .sum();
+            let mut dirty = 0usize;
+            for s in 0..st.mask.slots() {
+                dirty += st.mask.dirty_past_checked(s, frontier)
+                    .with_context(|| format!("fix_caches({})", st.model))?;
+            }
+            if let Some(p) = &st.paged {
+                for s in 0..st.mask.slots() {
+                    pages += p.drop_pages_after(s, frontier)
+                        .with_context(|| {
+                            format!("fix_caches({}) page drop", st.model)
+                        })?;
+                }
+            }
             if dirty > 0 {
                 total += per_pos * dirty;
                 st.mask.physical_truncate(frontier);
@@ -255,7 +326,32 @@ impl StateManager {
             }
         }
         self.elements_reclaimed += total as u64;
+        self.pages_dropped += pages as u64;
         Ok(total)
+    }
+
+    /// Aggregate paging counters across every model state (stats_json /
+    /// Prometheus), plus a refcount audit hook for the randomized suites.
+    pub fn paged_stats(&self) -> PagedStats {
+        let mut acc = PagedStats::default();
+        for st in self.states.values() {
+            if let Some(p) = &st.paged {
+                acc.accumulate(&p.stats());
+            }
+        }
+        acc
+    }
+
+    /// Run the paged refcount/mapping audit on every model (no-op when
+    /// paging is off).
+    pub fn audit_pages(&self) -> Result<()> {
+        for st in self.states.values() {
+            if let Some(p) = &st.paged {
+                p.audit().with_context(|| format!("{} page audit",
+                                                  st.model))?;
+            }
+        }
+        Ok(())
     }
 
     /// Invariant check for the randomized suites (and any caller that
@@ -313,16 +409,29 @@ mod tests {
     #[test]
     fn ensure_is_idempotent() {
         let mut sm = StateManager::new();
-        sm.ensure("m0", dims(), SLEN).mask.append_valid(0, 5);
-        assert_eq!(sm.ensure("m0", dims(), SLEN).forwarded(0), 5);
+        sm.ensure("m0", dims(), SLEN).unwrap().mask.append_valid(0, 5);
+        assert_eq!(sm.ensure("m0", dims(), SLEN).unwrap().forwarded(0), 5);
         assert!(sm.get("m1").is_err());
+    }
+
+    #[test]
+    fn lookups_of_unknown_models_are_structured_errors() {
+        // the whole registry API must degrade structurally — a missing
+        // model (dropped mid-run, typo'd chain entry) can surface from a
+        // faulted chain and must never panic the engine
+        let mut sm = StateManager::new();
+        let err = sm.get("ghost").unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+        let err = sm.get_mut("ghost").unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+        assert!(sm.rollback("ghost", 0, 0).is_err());
     }
 
     #[test]
     fn rollback_and_clear() {
         let mut sm = StateManager::new();
-        sm.ensure("m0", dims(), SLEN).mask.append_valid(0, 8);
-        sm.ensure("m1", dims(), SLEN).mask.append_valid(0, 6);
+        sm.ensure("m0", dims(), SLEN).unwrap().mask.append_valid(0, 8);
+        sm.ensure("m1", dims(), SLEN).unwrap().mask.append_valid(0, 6);
         assert_eq!(sm.rollback("m0", 0, 5).unwrap(), 3);
         assert_eq!(sm.get("m0").unwrap().forwarded(0), 5);
         sm.clear_slot(0);
@@ -334,7 +443,7 @@ mod tests {
     fn fix_caches_reclaims_the_per_slot_dirty_tail_only() {
         let mut sm = StateManager::new();
         {
-            let st = sm.ensure("m0", dims(), SLEN);
+            let st = sm.ensure("m0", dims(), SLEN).unwrap();
             st.mask.append_valid(0, 4);
             st.mask.append_speculative(0, 6); // written to 10
             st.mask.append_valid(1, 7);
@@ -357,7 +466,7 @@ mod tests {
     #[test]
     fn check_frontiers_catches_leaks_and_stale_free_slots() {
         let mut sm = StateManager::new();
-        sm.ensure("m0", dims(), SLEN).mask.append_valid(0, 5);
+        sm.ensure("m0", dims(), SLEN).unwrap().mask.append_valid(0, 5);
         // valid 5 against committed frontier 5: fine
         sm.check_frontiers(&[Some(5), None]).unwrap();
         // committed frontier rolled under the model's valid: leak
@@ -373,15 +482,53 @@ mod tests {
     #[test]
     fn drop_model_removes_state() {
         let mut sm = StateManager::new();
-        sm.ensure("m0", dims(), SLEN);
+        sm.ensure("m0", dims(), SLEN).unwrap();
         sm.drop_model("m0");
         assert!(sm.get("m0").is_err());
     }
 
     #[test]
+    fn paged_manager_threads_pages_through_lifecycle() {
+        let mut sm = StateManager::with_paging(
+            crate::state::pages::PagedCfg { page_tokens: 4 });
+        assert!(sm.paging_enabled());
+        {
+            let st = sm.ensure("m0", dims(), SLEN).unwrap();
+            let p = st.paged.clone().expect("paged state");
+            assert!(st.kv().paged.is_some(),
+                    "the StateBuf view must carry the paged Arc");
+            // 10 paged rows, 6 committed: fix_caches must drop the whole
+            // dirty page (8..10 lives in page 2) and zero rows 6..8
+            for pos in 0..10 {
+                p.write_row(0, pos, &[1.0]).unwrap();
+            }
+            st.mask.append_valid(0, 6);
+            st.mask.append_speculative(0, 4);
+        }
+        sm.fix_caches().unwrap();
+        assert_eq!(sm.pages_dropped, 1);
+        {
+            let st = sm.get("m0").unwrap();
+            let p = st.paged.as_ref().unwrap();
+            assert_eq!(p.written(0), 6);
+            let mut out = [0.0f32];
+            p.read_row(0, 6, &mut out).unwrap();
+            assert_eq!(out, [0.0], "boundary row not zeroed");
+        }
+        sm.audit_pages().unwrap();
+        // clear_slot releases the slot's pages back to the pool
+        sm.clear_slot(0);
+        let stats = sm.paged_stats();
+        assert_eq!(stats.pages_live, 0);
+        assert!(stats.pages_total > 0);
+        assert_eq!(stats.pages_dropped, 1);
+        sm.audit_pages().unwrap();
+    }
+
+    #[test]
     fn shards_split_disjoint_sets_and_reject_overlap() {
         let mut sm = StateManager::new();
-        sm.ensure("m0", dims(), SLEN);
+        sm.ensure("m0", dims(), SLEN).unwrap();
         let a = [0usize];
         let b = [1usize];
         let shards = sm.try_shards(&[&a, &b], 2).unwrap();

@@ -221,6 +221,65 @@ fn injected_panics_are_contained() {
              (injection inert?)");
 }
 
+/// ISSUE 8 satellite: engine state lookups used to reach a
+/// `get_mut(...).unwrap()` — a registry hole (a model's state dropped
+/// out from under an active chain) became a process abort instead of a
+/// contained condition. Every lookup now goes through the structured
+/// `ensure`/`get` path, so the plan phase re-creates the missing entry
+/// and catch-up rebuilds its mask from the committed sequence: ticks
+/// keep succeeding, no request is lost, and greedy output stays
+/// bit-identical to an undisturbed run.
+#[test]
+fn dropped_model_state_is_rebuilt_not_unwrapped() {
+    for seed in 0..seed_count(2) as u64 {
+        let clean = {
+            let mut r = ChainRouter::with_backend(
+                cfg_fixed(&["m0", "m2"], 2), backend_for(seed))
+                .expect("router");
+            submit_n(&mut r, seed, 4);
+            r.run_until_idle(10_000).unwrap();
+            tokens_by_id(&r)
+        };
+        let disturbed = {
+            let mut r = ChainRouter::with_backend(
+                cfg_fixed(&["m0", "m2"], 2), backend_for(seed))
+                .expect("router");
+            let ids = submit_n(&mut r, seed, 4);
+            let mut ticks = 0usize;
+            loop {
+                let stepped = r.tick().unwrap_or_else(|e| {
+                    panic!("seed {seed} tick {ticks}: registry hole \
+                            escaped as engine-fatal: {e:#}");
+                });
+                ticks += 1;
+                assert!(ticks < 10_000, "seed {seed}: did not drain");
+                if stepped.is_none() {
+                    break;
+                }
+                // rip live state out from under the chain mid-run — the
+                // old unwrap path aborted the process right here
+                if ticks % 3 == 0 {
+                    r.states.drop_model("m0");
+                }
+                if ticks % 5 == 0 {
+                    r.states.drop_model("m2");
+                }
+            }
+            assert_eq!(r.finished.len() + r.take_shed().len(), ids.len(),
+                       "seed {seed}: requests lost");
+            for f in &r.finished {
+                assert!(f.error.is_none(),
+                        "seed {seed}: dropped state failed req {}: {:?}",
+                        f.id, f.error);
+            }
+            check_invariants(&mut r, seed);
+            tokens_by_id(&r)
+        };
+        assert_eq!(clean, disturbed,
+                   "seed {seed}: state rebuild changed greedy tokens");
+    }
+}
+
 #[test]
 fn breakers_trip_then_recover_after_a_fault_burst() {
     // burst model: rate 1.0 on the drafter, hard-capped at 3 faults

@@ -30,12 +30,15 @@ fn seed_count(default: usize) -> usize {
         .unwrap_or(default)
 }
 
-fn backend_for(seed: u64) -> Arc<SimBackend> {
+fn backend_spec(seed: u64) -> SimSpec {
     let mut rng = Rng::new(0xD1FF ^ seed.wrapping_mul(7919));
     let dev = [0.05 + rng.f64() * 0.40, 0.02 + rng.f64() * 0.25,
                rng.f64() * 0.15];
-    Arc::new(SimBackend::new(SimSpec::small_pool_seeded(
-        0x9A11 ^ seed.wrapping_mul(31), &dev)))
+    SimSpec::small_pool_seeded(0x9A11 ^ seed.wrapping_mul(31), &dev)
+}
+
+fn backend_for(seed: u64) -> Arc<SimBackend> {
+    Arc::new(SimBackend::new(backend_spec(seed)))
 }
 
 fn chain_for(seed: u64) -> Mode {
@@ -206,6 +209,73 @@ fn worker_matrix_commits_identical_tokens_and_attribution() {
                                 per-(group, chain) attribution differs \
                                 at workers={workers}");
                 }
+            }
+        }
+    }
+}
+
+/// ISSUE 8: the worker matrix with the paged KV layout on. Repeated
+/// prompts land in different chain groups, so at workers > 1 the same
+/// physical pages are shared (refcounted, copy-on-write) across
+/// concurrently ticking shards — and the committed output must still be
+/// token-identical both across `workers ∈ {1, 2, 4}` and to the
+/// contiguous (unpaged) layout, under both acceptance rules, with the
+/// prefix index provably in play (>= 1 model-level prefill skipped).
+#[test]
+fn paged_worker_matrix_commits_identical_tokens() {
+    for seed in 0..seed_count(4) as u64 {
+        let mode = chain_for(seed);
+        let base = prompts_for(&backend_for(seed), 70 + seed, 3);
+        // six requests over three prompts: every prompt admitted twice
+        let prompts: Vec<(Vec<i32>, usize)> =
+            (0..6).map(|i| base[i % 3].clone()).collect();
+        let classes = [SloClass::Interactive, SloClass::Standard,
+                       SloClass::Batch];
+        for rule in [AcceptRule::Greedy,
+                     AcceptRule::Probabilistic { seed: 9 ^ seed }] {
+            let run = |workers: usize, paged: bool| {
+                let mut spec = backend_spec(seed);
+                if paged {
+                    spec = spec.with_paged();
+                }
+                let backend = Arc::new(SimBackend::new(spec));
+                let mut cfg = cfg_for(4, mode.clone(), rule,
+                                      GroupPolicy::PerSlot);
+                cfg.workers = workers;
+                cfg.paged = paged;
+                cfg.page_tokens = 4;
+                let mut router = ChainRouter::with_backend(cfg, backend)
+                    .expect("router");
+                let mut ids = Vec::new();
+                for (i, (p, m)) in prompts.iter().enumerate() {
+                    let id = router.submit(req(i, "gsm8k", p.clone(), *m,
+                                               classes[i % 3]))
+                        .expect("submit");
+                    ids.push(id);
+                }
+                router.run_until_idle(100_000).expect("run");
+                if paged {
+                    router.states.audit_pages().unwrap_or_else(|e| {
+                        panic!("seed {seed} workers={workers}: page \
+                                audit: {e:#}");
+                    });
+                }
+                let (full, partial) = router.prefill_skips();
+                let tokens: Vec<Vec<i32>> = ids.iter().map(|id| {
+                    router.finished.iter().find(|f| f.id == *id)
+                        .expect("finished").tokens.clone()
+                }).collect();
+                (tokens, full + partial)
+            };
+            let (anchor, _) = run(1, false);
+            for workers in [1usize, 2, 4] {
+                let (tokens, skips) = run(workers, true);
+                assert_eq!(anchor, tokens,
+                           "seed {seed} {rule:?}: paged workers={workers} \
+                            diverged from the contiguous layout");
+                assert!(skips >= 1,
+                        "seed {seed} {rule:?} workers={workers}: repeated \
+                         prompts never skipped a prefill");
             }
         }
     }

@@ -26,7 +26,7 @@ fn mk_states(backend: &SimBackend, batch: usize, models: &[&str])
             seq: man.seq,
             head_dim: meta.head_dim,
         };
-        states.ensure(m, dims, man.state_len(meta, batch));
+        states.ensure(m, dims, man.state_len(meta, batch)).unwrap();
     }
     states
 }
@@ -68,6 +68,7 @@ impl Fixture {
             rngs: &mut self.rngs,
             scratch: &mut self.scratch,
             check_logits: false,
+            paged: self.backend.supports_paged_kv(),
         }
     }
 }

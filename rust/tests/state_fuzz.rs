@@ -141,6 +141,195 @@ fn random_traffic_preserves_state_invariants_every_tick() {
     }
 }
 
+/// ISSUE 8: the same random-traffic sweep with the paged KV layout on
+/// (DESIGN.md §14). On top of every frontier/mask invariant above, after
+/// EVERY tick the page machinery must satisfy `PagedKv::audit`: each
+/// page's refcount equals its live references (slot tables + prefix
+/// index), mapped entries agree with the written high-water mark, and
+/// the free list holds exactly the unreferenced pages — so shared-prefix
+/// adoption, COW claims and page-granular rollback can never leak or
+/// double-free a page no matter how the traffic interleaves.
+#[test]
+fn paged_random_traffic_preserves_page_invariants_every_tick() {
+    for seed in 0..seed_count(4) as u64 {
+        let mut rng = Rng::new(0xFA6E + seed);
+        let dev = [rng.f64() * 0.5, rng.f64() * 0.35, rng.f64() * 0.2];
+        let backend = Arc::new(SimBackend::new(
+            SimSpec::small_pool_seeded(0xD00D ^ seed.wrapping_mul(131),
+                                       &dev).with_paged()));
+        let mut cfg = EngineConfig::new("sim://");
+        cfg.batch = 4;
+        cfg.window = 4;
+        cfg.target = "m2".into();
+        cfg.mode = Mode::Adaptive;
+        cfg.replan_every = 1;
+        cfg.explore_eps = 0.5;
+        cfg.group_policy = policy_for(seed);
+        cfg.paged = true;
+        // small pages so rollback regularly crosses page boundaries
+        cfg.page_tokens = match seed % 3 { 0 => 1, 1 => 4, _ => 16 };
+        cfg.rule = if seed % 2 == 0 {
+            AcceptRule::Greedy
+        } else {
+            AcceptRule::Probabilistic { seed: 3 + seed }
+        };
+        cfg.apply_env_workers();
+        let mut router = ChainRouter::with_backend(cfg, backend.clone())
+            .expect("router");
+
+        use specrouter::coordinator::Backend;
+        let datasets: Vec<String> = backend.manifest().datasets.keys()
+            .cloned().collect();
+        let mut gens: Vec<DatasetGen> = datasets.iter().enumerate()
+            .map(|(i, d)| DatasetGen::new(
+                backend.manifest().datasets[d].clone(),
+                seed * 29 + i as u64))
+            .collect();
+        // few distinct prompts, each submitted several times: admissions
+        // regularly hit a resident prefix, so COW + shared pages are
+        // actually exercised rather than every slot owning all its pages
+        let prompts: Vec<(String, Vec<i32>)> = (0..4)
+            .map(|i| {
+                let di = i % datasets.len();
+                (datasets[di].clone(), gens[di].sample().0)
+            })
+            .collect();
+        let n_total = 12usize;
+        let mut submitted = 0usize;
+        let classes = [SloClass::Interactive, SloClass::Standard,
+                       SloClass::Batch];
+        let mut submit_one = |router: &mut ChainRouter, rng: &mut Rng,
+                              i: usize| {
+            let (dataset, prompt) = prompts[rng.below(prompts.len())]
+                .clone();
+            router.submit(Request {
+                id: 0,
+                dataset,
+                prompt,
+                max_new: rng.range(2, 10),
+                arrival: Instant::now(),
+                class: classes[rng.below(3)],
+                slo_ms: None,
+                sample_seed: Some(seed * 3000 + i as u64),
+            });
+        };
+        for i in 0..4 {
+            submit_one(&mut router, &mut rng, i);
+            submitted += 1;
+        }
+        let mut ticks = 0usize;
+        loop {
+            if submitted < n_total && ticks % 3 == 0 {
+                submit_one(&mut router, &mut rng, submitted);
+                submitted += 1;
+            }
+            let stepped = router.tick().unwrap_or_else(|e| {
+                panic!("seed {seed} tick {ticks}: {e:#}");
+            });
+            ticks += 1;
+            assert!(ticks < 5000, "seed {seed}: engine did not drain");
+            check_invariants(&router, seed, ticks);
+            router.states.audit_pages().unwrap_or_else(|e| {
+                panic!("seed {seed} tick {ticks}: page audit: {e:#}");
+            });
+            // page-granular reclamation must also converge immediately
+            router.states.fix_caches().unwrap();
+            assert_eq!(router.states.fix_caches().unwrap(), 0,
+                       "seed {seed} tick {ticks}: fix_caches left \
+                        reclaimable stale tail behind");
+            router.states.audit_pages().unwrap_or_else(|e| {
+                panic!("seed {seed} tick {ticks}: post-fix audit: {e:#}");
+            });
+            if stepped.is_none() && submitted == n_total {
+                break;
+            }
+        }
+        let shed = router.take_shed().len();
+        assert_eq!(router.finished.len() + shed, n_total,
+                   "seed {seed}: requests lost");
+        let stats = router.states.paged_stats();
+        assert!(stats.lookups > 0, "seed {seed}: paging never consulted");
+    }
+}
+
+/// ISSUE 8: the paged layout is an *optimization*, not a semantics
+/// change — the committed output of every request must be token-
+/// identical to the contiguous layout across the existing seed matrix
+/// (greedy and probabilistic, repeated prompts so shared-prefix reuse
+/// actually fires), and reuse must have skipped at least one model-level
+/// prefill along the way.
+#[test]
+fn paged_output_token_identical_to_contiguous() {
+    for seed in 0..seed_count(4) as u64 {
+        let run = |paged: bool| -> (Vec<(u64, Vec<i32>)>, u64) {
+            let mut rng = Rng::new(0xD1FF + seed);
+            let dev = [rng.f64() * 0.5, rng.f64() * 0.35, rng.f64() * 0.2];
+            let mut spec = SimSpec::small_pool_seeded(
+                0xFEED ^ seed.wrapping_mul(131), &dev);
+            if paged {
+                spec = spec.with_paged();
+            }
+            let backend = Arc::new(SimBackend::new(spec));
+            let mut cfg = EngineConfig::new("sim://");
+            cfg.batch = 4;
+            cfg.window = 4;
+            cfg.target = "m2".into();
+            // fixed chain + FIFO admission: both runs make identical
+            // scheduling decisions, so any token difference is the state
+            // layer's fault and nothing else's
+            cfg.mode = Mode::Fixed {
+                chain: vec!["m0".into(), "m2".into()],
+                window: 4,
+            };
+            cfg.fifo_admission = true;
+            cfg.paged = paged;
+            cfg.page_tokens = match seed % 3 { 0 => 1, 1 => 4, _ => 16 };
+            cfg.rule = if seed % 2 == 0 {
+                AcceptRule::Greedy
+            } else {
+                AcceptRule::Probabilistic { seed: 3 + seed }
+            };
+            let mut router =
+                ChainRouter::with_backend(cfg, backend).expect("router");
+            let spec_ds = router.manifest.datasets["gsm8k"].clone();
+            let mut gen = DatasetGen::new(spec_ds, seed * 31 + 7);
+            let prompts: Vec<Vec<i32>> =
+                (0..4).map(|_| gen.sample().0).collect();
+            // every prompt twice: the second admission of each must hit
+            // the resident prefix in the paged run
+            for i in 0..8usize {
+                router.submit(Request {
+                    id: 0,
+                    dataset: "gsm8k".into(),
+                    prompt: prompts[i % 4].clone(),
+                    max_new: 8,
+                    arrival: Instant::now(),
+                    class: SloClass::Standard,
+                    slo_ms: None,
+                    sample_seed: Some(seed * 4000 + i as u64),
+                }).expect("fifo admission never sheds");
+            }
+            router.run_until_idle(100_000).unwrap();
+            if paged {
+                router.states.audit_pages().unwrap();
+            }
+            let mut out: Vec<(u64, Vec<i32>)> = router.finished.iter()
+                .map(|f| (f.id, f.tokens.clone()))
+                .collect();
+            out.sort_by_key(|(id, _)| *id);
+            let (full, partial) = router.prefill_skips();
+            (out, full + partial)
+        };
+        let (base, base_skips) = run(false);
+        let (paged, paged_skips) = run(true);
+        assert_eq!(base_skips, 0, "seed {seed}: unpaged run skipped");
+        assert!(paged_skips >= 1,
+                "seed {seed}: repeated prompts never reused a prefix");
+        assert_eq!(base, paged,
+                   "seed {seed}: paged output diverged from contiguous");
+    }
+}
+
 /// ISSUE 7: the same per-tick invariant sweep under mid-step fault
 /// injection on EVERY model (target included). Drafter faults degrade
 /// chains mid-flight, target faults fail whole groups and free their
@@ -251,7 +440,7 @@ fn shard_borrow_guard_rejects_overlapping_slot_sets() {
     let mut sm = StateManager::new();
     let dims = KvDims { layers: 2, batch: 4, heads: 2, seq: 32,
                         head_dim: 4 };
-    sm.ensure("m2", dims, dims.elements());
+    sm.ensure("m2", dims, dims.elements()).unwrap();
     let a = [0usize, 2];
     let b = [1usize, 3];
     let shards = sm.try_shards(&[&a, &b], 4).expect("disjoint sets split");
