@@ -427,8 +427,8 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
     cfg.target = "m2".into();
     cfg.mode = Mode::Fixed { chain, window };
     cfg.rule = AcceptRule::Greedy;
-    cfg.paged = paged;
-    cfg.page_tokens = 4;
+    cfg.paging.enabled = paged;
+    cfg.paging.page_tokens = 4;
     // telemetry on (the default), stated explicitly: the zero-alloc
     // contract must hold with span rings and histograms recording
     cfg.telemetry = true;
@@ -440,8 +440,8 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
         // so zero faults ever fire. This armed-but-quiet steady state
         // must still tick at 0 allocs (DESIGN.md §8/§13); the deadline
         // stays 0 because a live budget buys a capture sink per call.
-        cfg.fault_rate = 1.0;
-        cfg.fault_models = vec!["no-such-model".into()];
+        cfg.faults.rate = 1.0;
+        cfg.faults.models = vec!["no-such-model".into()];
     }
     let label = format!("{}:{}",
                         if paged { "paged-lookup" }
@@ -614,8 +614,8 @@ fn run_prefix_reuse_trace() -> ReuseTrace {
     };
     cfg.rule = AcceptRule::Greedy;
     cfg.fifo_admission = true;
-    cfg.paged = true;
-    cfg.page_tokens = 4;
+    cfg.paging.enabled = true;
+    cfg.paging.page_tokens = 4;
     let mut router = ChainRouter::with_backend(cfg, backend)
         .expect("paged reuse router");
     for i in 0..8usize {

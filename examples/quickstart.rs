@@ -17,9 +17,10 @@ use specrouter::workload::DatasetGen;
 
 fn main() -> Result<()> {
     // 1. engine configuration: 1 slot, adaptive routing toward target m2
-    let mut cfg = EngineConfig::new("artifacts");
-    cfg.batch = 1;
-    cfg.target = "m2".into();
+    let cfg = EngineConfig::builder("artifacts")
+        .batch(1)
+        .target("m2")
+        .build();
 
     // 2. the router loads the manifest, places models on logical devices
     //    and lazily compiles whatever executables it needs

@@ -41,7 +41,7 @@ fn main() -> Result<()> {
     let mut cfg = EngineConfig::new("artifacts");
     cfg.batch = batch;
     cfg.slo_ms = 30_000.0;
-    cfg.apply_env_workers();
+    cfg.apply_env();
     let label = cfg.mode.label();
     // keep a pool handle for the compilation report at the end
     let pool = Arc::new(ModelPool::open(&cfg.art_dir)?);

@@ -114,7 +114,7 @@ fn main() -> Result<()> {
         chain: vec!["m0".into(), "m2".into()],
         window: 4,
     };
-    cfg.apply_env_workers();
+    cfg.apply_env();
     let label = cfg.mode.label();
     let engine = spawn_engine_with(move || {
         ChainRouter::with_backend(
@@ -158,9 +158,9 @@ fn main() -> Result<()> {
             let out = if e.stream {
                 stream_one(addr, &e).map(|(r, d)| (Some(r), d))
             } else {
-                specrouter::server::client_request_opts(
-                    addr, &e.dataset, &e.prompt, e.max_new,
-                    Some(e.class.name()), None)
+                specrouter::server::Client::new(addr)
+                    .request_opts(&e.dataset, &e.prompt, e.max_new,
+                                  Some(e.class.name()), None)
                     .map(|d| (None, d))
             };
             let _ = rec_tx.send(out);
@@ -212,12 +212,12 @@ fn main() -> Result<()> {
 
     // control-protocol exports, scraped before the engine shuts down
     if let Some(path) = stats_out {
-        let stats = specrouter::server::client_stats(addr)?;
+        let stats = specrouter::server::Client::new(addr).stats()?;
         std::fs::write(&path, format!("{stats}\n"))?;
         println!("wrote stats snapshot to {path}");
     }
     if let Some(path) = perfetto {
-        let trace = specrouter::server::client_trace(addr)?;
+        let trace = specrouter::server::Client::new(addr).trace()?;
         std::fs::write(&path, format!("{trace}\n"))?;
         println!("wrote Perfetto trace to {path} \
                   (open in ui.perfetto.dev)");

@@ -7,7 +7,7 @@ use std::sync::mpsc;
 
 use anyhow::Result;
 use specrouter::config::EngineConfig;
-use specrouter::server::{client_request, serve_tcp, spawn_engine, EngineMsg};
+use specrouter::server::{serve_tcp, spawn_engine, Client, EngineMsg};
 use specrouter::workload::DatasetGen;
 
 fn main() -> Result<()> {
@@ -43,7 +43,7 @@ fn main() -> Result<()> {
             };
             let mut gen = DatasetGen::new(manifest_spec, i as u64);
             let (prompt, max_new) = gen.sample();
-            let resp = client_request(addr, &ds, &prompt, max_new)?;
+            let resp = Client::new(addr).request(&ds, &prompt, max_new)?;
             Ok((ds,
                 resp.get("tokens")?.as_arr()?.len(),
                 resp.get("ttft_ms")?.as_f64()?,

@@ -36,6 +36,10 @@
 //!   * `admission_queue_delay_p50_ms` — interactive p50 queue delay at 2x
 //!     overload from BENCH_admission.json (virtual-time sim:
 //!     deterministic per seed, machine-independent).
+//!   * `ttft_burst_p99_ratio` — chunked/atomic interactive p99 TTFT on
+//!     the bursty long-prompt trace from BENCH_prefill.json (ISSUE 9 /
+//!     DESIGN.md §15; another virtual-time replay, so deterministic).
+//!     Baseline 0.75 demands >= 25% TTFT improvement under burst.
 //!
 //! Usage: perf_gate [baselines.json] [bench-artifact-dir]
 //! (defaults: benches/baselines.json and the current directory — matching
@@ -95,7 +99,7 @@ fn load(dir: &Path, file: &str) -> Result<Value> {
     let text = std::fs::read_to_string(&path).with_context(|| {
         format!("reading {path:?} — run the SPECROUTER_QUICK=1 benches \
                  first (bench_hotpath, bench_admission, \
-                 bench_scheduler_overhead)")
+                 bench_scheduler_overhead, bench_prefill)")
     })?;
     json::parse(&text).with_context(|| format!("parsing {path:?}"))
 }
@@ -184,6 +188,7 @@ fn gather(dir: &Path) -> Result<Vec<Check>> {
     let hotpath = load(dir, "BENCH_hotpath.json")?;
     let sched = load(dir, "BENCH_scheduler_overhead.json")?;
     let adm = load(dir, "BENCH_admission.json")?;
+    let prefill = load(dir, "BENCH_prefill.json")?;
     // baseline and tol_pct are filled from baselines.json
     let mut checks = vec![
         Check {
@@ -225,6 +230,12 @@ fn gather(dir: &Path) -> Result<Vec<Check>> {
         Check {
             name: "admission_queue_delay_p50_ms",
             measured: adm.get("queue_delay_p50_ms")?.as_f64()?,
+            baseline: f64::NAN,
+            tol_pct: f64::NAN,
+        },
+        Check {
+            name: "ttft_burst_p99_ratio",
+            measured: prefill.get("ttft_burst_p99_ratio")?.as_f64()?,
             baseline: f64::NAN,
             tol_pct: f64::NAN,
         },

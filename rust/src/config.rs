@@ -1,4 +1,11 @@
 //! Engine configuration: every knob of the serving system in one place.
+//!
+//! Feature knobs are grouped into nested sub-configs ([`FaultConfig`],
+//! [`BreakerConfig`], [`PagingConfig`], [`PrefillConfig`]), each with a
+//! `Default` and its own validation, folded into the single
+//! [`EngineConfig::validate`] entry point. Environment overrides live in
+//! the single [`EngineConfig::apply_env`]. Programmatic construction can
+//! use the struct directly or the fluent [`EngineConfig::builder`].
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
@@ -67,6 +74,226 @@ pub enum GroupPolicy {
     PerSlot,
 }
 
+/// Fault-injection knobs (DESIGN.md §13), nested under
+/// [`EngineConfig::faults`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Per-call fault-injection probability in `[0, 1]`. `0` (the
+    /// default) disables the injector entirely: the backend is never
+    /// wrapped and the fault-free path is byte-identical to a build
+    /// without the fault layer.
+    pub rate: f64,
+    /// Seed for the deterministic `FaultPlan` schedule.
+    pub seed: u64,
+    /// Models eligible for injection; empty = every model.
+    pub models: Vec<String>,
+    /// Fault kinds to draw from (`"transient"`, `"spike"`, `"stuck"`,
+    /// `"corrupt"`, `"panic"`); empty = all but `"panic"`.
+    pub kinds: Vec<String>,
+    /// Stop injecting after this many faults (`0` = unlimited) — models
+    /// a fault burst that ends, so breaker recovery is observable.
+    pub max: u64,
+    /// Wall time an injected latency spike burns, in milliseconds.
+    pub spike_ms: u64,
+    /// Per-backend-call deadline budget in milliseconds (`0` =
+    /// unbounded). Nonzero values wrap the backend even at `rate = 0`,
+    /// so genuinely wedged calls surface as structured deadline errors.
+    pub call_deadline_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            rate: 0.0,
+            seed: 0xFA17,
+            models: Vec::new(),
+            kinds: Vec::new(),
+            max: 0,
+            spike_ms: 20,
+            call_deadline_ms: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.rate) || !self.rate.is_finite() {
+            bail!("fault_rate must be in [0, 1]");
+        }
+        for k in &self.kinds {
+            if !matches!(k.as_str(),
+                         "transient" | "spike" | "stuck" | "corrupt"
+                         | "panic")
+            {
+                bail!("unknown fault kind {k:?} (expected transient, \
+                       spike, stuck, corrupt or panic)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Circuit-breaker knobs (DESIGN.md §13), nested under
+/// [`EngineConfig::breaker`]. The EMA factor the breaker's failure-rate
+/// estimate uses is the engine-wide [`EngineConfig::ema_alpha`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BreakerConfig {
+    /// Consecutive failures that quarantine a model.
+    pub trip_after: u32,
+    /// Hold ticks for the first quarantine period.
+    pub backoff_ticks: u64,
+    /// Backoff multiplier per successive re-open.
+    pub backoff_mult: f64,
+    /// Backoff cap in ticks.
+    pub backoff_max_ticks: u64,
+    /// Successful half-open probes needed to re-close.
+    pub probe_successes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            trip_after: 3,
+            backoff_ticks: 8,
+            backoff_mult: 2.0,
+            backoff_max_ticks: 512,
+            probe_successes: 2,
+        }
+    }
+}
+
+impl BreakerConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.trip_after < 1 {
+            bail!("breaker_trip_after must be >= 1");
+        }
+        if self.probe_successes < 1 {
+            bail!("breaker_probe_successes must be >= 1");
+        }
+        if !self.backoff_mult.is_finite() || self.backoff_mult < 1.0 {
+            bail!("breaker_backoff_mult must be >= 1");
+        }
+        if self.backoff_ticks < 1
+            || self.backoff_max_ticks < self.backoff_ticks
+        {
+            bail!("breaker backoff ticks must satisfy \
+                   1 <= backoff_ticks <= backoff_max_ticks");
+        }
+        Ok(())
+    }
+}
+
+/// Paged-KV knobs (DESIGN.md §14), nested under [`EngineConfig::paging`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PagingConfig {
+    /// Paged KV state with shared-prefix reuse: model state lives in
+    /// fixed-size refcounted pages behind per-slot page tables, admission
+    /// looks committed prompt prefixes up in a trie index and skips the
+    /// prefill work a resident prefix already covers, and `fix_caches`
+    /// reclaims at page granularity. Requires a backend that addresses
+    /// rows through the page tables (`Backend::supports_paged_kv`);
+    /// router construction fails structurally otherwise. Off by default —
+    /// the packed contiguous layout is byte-identical to previous
+    /// releases.
+    pub enabled: bool,
+    /// Sequence positions per KV page (only read when `enabled`).
+    pub page_tokens: usize,
+}
+
+impl Default for PagingConfig {
+    fn default() -> Self {
+        PagingConfig { enabled: false, page_tokens: 16 }
+    }
+}
+
+impl PagingConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.enabled && self.page_tokens < 1 {
+            bail!("page_tokens must be >= 1 when paging is enabled");
+        }
+        Ok(())
+    }
+}
+
+/// Chunked-prefill knobs (DESIGN.md §15), nested under
+/// [`EngineConfig::prefill`]. When `chunked` is set, admission stops
+/// prefilling synchronously: a new request occupies its slot in the
+/// `Prefilling` phase and the prompt is forwarded in per-tick chunks by
+/// dedicated `PrefillTask`s scheduled next to the decode groups, with
+/// the chunk size adapted each tick to the tightest in-flight decode
+/// headroom (tight interactive slack → `min_chunk`, idle → `max_chunk`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillConfig {
+    /// Consume prompts in scheduled chunks instead of atomically inside
+    /// admission. Off by default: atomic admission-side prefill is the
+    /// historical behaviour and the committed output is identical either
+    /// way (the `group_parity` chunked matrix enforces it).
+    pub chunked: bool,
+    /// Prompt tokens a prefilling slot may consume per tick when decode
+    /// headroom is tight (at or below `slack_tight_s`).
+    pub min_chunk: usize,
+    /// Prompt tokens per tick when the engine is idle or decode headroom
+    /// is relaxed (at or above `slack_relaxed_s`).
+    pub max_chunk: usize,
+    /// Decode-slack level (seconds) at or below which the budget pins to
+    /// `min_chunk`.
+    pub slack_tight_s: f64,
+    /// Decode-slack level (seconds) at or above which the budget opens up
+    /// to `max_chunk`. Between the two thresholds the budget
+    /// interpolates linearly.
+    pub slack_relaxed_s: f64,
+}
+
+impl Default for PrefillConfig {
+    fn default() -> Self {
+        PrefillConfig {
+            chunked: false,
+            min_chunk: 4,
+            max_chunk: 64,
+            slack_tight_s: 0.05,
+            slack_relaxed_s: 1.0,
+        }
+    }
+}
+
+impl PrefillConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.min_chunk < 1 || self.max_chunk < self.min_chunk {
+            bail!("prefill chunks must satisfy \
+                   1 <= min_chunk <= max_chunk");
+        }
+        if !self.slack_tight_s.is_finite()
+            || !self.slack_relaxed_s.is_finite()
+            || self.slack_relaxed_s < self.slack_tight_s
+        {
+            bail!("prefill slack thresholds must be finite with \
+                   slack_tight_s <= slack_relaxed_s");
+        }
+        Ok(())
+    }
+
+    /// Map a decode-headroom slack reading onto a per-tick chunk budget.
+    /// `None` (no decode traffic in flight, or no TPOT estimate yet)
+    /// means prefill has the tick to itself and gets `max_chunk`.
+    pub fn chunk_budget(&self, slack_s: Option<f64>) -> usize {
+        let s = match slack_s {
+            None => return self.max_chunk,
+            Some(s) if !s.is_finite() => return self.max_chunk,
+            Some(s) => s,
+        };
+        if s <= self.slack_tight_s {
+            return self.min_chunk;
+        }
+        if s >= self.slack_relaxed_s {
+            return self.max_chunk;
+        }
+        let span = self.slack_relaxed_s - self.slack_tight_s;
+        let frac = (s - self.slack_tight_s) / span;
+        let range = (self.max_chunk - self.min_chunk) as f64;
+        self.min_chunk + (frac * range).floor() as usize
+    }
+}
+
 /// Full engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -111,18 +338,6 @@ pub struct EngineConfig {
     /// concurrent group steps safe (`Backend::parallel_groups_safe`) or
     /// router construction fails with a structured error.
     pub workers: usize,
-    /// Paged KV state with shared-prefix reuse (DESIGN.md §14): model
-    /// state lives in fixed-size refcounted pages behind per-slot page
-    /// tables, admission looks committed prompt prefixes up in a trie
-    /// index and skips the prefill calls a resident prefix already
-    /// covers, and `fix_caches` reclaims at page granularity. Requires a
-    /// backend that addresses rows through the page tables
-    /// (`Backend::supports_paged_kv`); router construction fails
-    /// structurally otherwise. Off by default — the packed contiguous
-    /// layout is byte-identical to previous releases.
-    pub paged: bool,
-    /// Sequence positions per KV page (only read when `paged`).
-    pub page_tokens: usize,
     /// Seed the scheduler's α estimates with the manifest's offline
     /// (build-time) similarity instead of the optimistic prior.
     pub offline_sim_prior: bool,
@@ -143,38 +358,14 @@ pub struct EngineConfig {
     /// on GPUs; the miniature pool's real CPU ratio is ~12×). Empty =
     /// honest measured costs.
     pub cost_multipliers: Vec<(String, f64)>,
-    /// Per-call fault-injection probability in `[0, 1]` (DESIGN.md §13).
-    /// `0` (the default) disables the injector entirely: the backend is
-    /// never wrapped and the fault-free path is byte-identical to a
-    /// build without the fault layer.
-    pub fault_rate: f64,
-    /// Seed for the deterministic `FaultPlan` schedule.
-    pub fault_seed: u64,
-    /// Models eligible for injection; empty = every model.
-    pub fault_models: Vec<String>,
-    /// Fault kinds to draw from (`"transient"`, `"spike"`, `"stuck"`,
-    /// `"corrupt"`, `"panic"`); empty = all but `"panic"`.
-    pub fault_kinds: Vec<String>,
-    /// Stop injecting after this many faults (`0` = unlimited) — models
-    /// a fault burst that ends, so breaker recovery is observable.
-    pub fault_max: u64,
-    /// Wall time an injected latency spike burns, in milliseconds.
-    pub fault_spike_ms: u64,
-    /// Per-backend-call deadline budget in milliseconds (`0` =
-    /// unbounded). Nonzero values wrap the backend even at
-    /// `fault_rate = 0`, so genuinely wedged calls surface as structured
-    /// deadline errors.
-    pub call_deadline_ms: u64,
-    /// Circuit breaker: consecutive failures that quarantine a model.
-    pub breaker_trip_after: u32,
-    /// Circuit breaker: hold ticks for the first quarantine period.
-    pub breaker_backoff_ticks: u64,
-    /// Circuit breaker: backoff multiplier per successive re-open.
-    pub breaker_backoff_mult: f64,
-    /// Circuit breaker: backoff cap in ticks.
-    pub breaker_backoff_max_ticks: u64,
-    /// Circuit breaker: successful half-open probes needed to re-close.
-    pub breaker_probe_successes: u32,
+    /// Fault-injection layer (DESIGN.md §13).
+    pub faults: FaultConfig,
+    /// Per-model circuit breakers (DESIGN.md §13).
+    pub breaker: BreakerConfig,
+    /// Paged KV state with shared-prefix reuse (DESIGN.md §14).
+    pub paging: PagingConfig,
+    /// Chunked, headroom-paced prefill (DESIGN.md §15).
+    pub prefill: PrefillConfig,
 }
 
 impl EngineConfig {
@@ -195,27 +386,22 @@ impl EngineConfig {
             fifo_admission: false,
             group_policy: GroupPolicy::ByClass,
             workers: 1,
-            paged: false,
-            page_tokens: 16,
             offline_sim_prior: false,
             n_devices: 4,
             device_bytes: 2 << 30,
             replan_every: 1,
             telemetry: true,
             cost_multipliers: Vec::new(),
-            fault_rate: 0.0,
-            fault_seed: 0xFA17,
-            fault_models: Vec::new(),
-            fault_kinds: Vec::new(),
-            fault_max: 0,
-            fault_spike_ms: 20,
-            call_deadline_ms: 0,
-            breaker_trip_after: 3,
-            breaker_backoff_ticks: 8,
-            breaker_backoff_mult: 2.0,
-            breaker_backoff_max_ticks: 512,
-            breaker_probe_successes: 2,
+            faults: FaultConfig::default(),
+            breaker: BreakerConfig::default(),
+            paging: PagingConfig::default(),
+            prefill: PrefillConfig::default(),
         }
+    }
+
+    /// Fluent construction: `EngineConfig::builder(dir).batch(8).build()`.
+    pub fn builder(art_dir: impl Into<PathBuf>) -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: EngineConfig::new(art_dir) }
     }
 
     /// The worker-lane count the engine actually runs: `workers` clamped
@@ -227,11 +413,17 @@ impl EngineConfig {
         self.workers.min(self.batch).max(1)
     }
 
-    /// Override `workers` from `SPECROUTER_WORKERS` when set to a valid
-    /// positive integer (the CI parity matrix re-runs whole suites under
-    /// a parallel tick this way). Invalid or absent values leave the
-    /// config untouched.
-    pub fn apply_env_workers(&mut self) {
+    /// Apply every supported environment override in one call (the CI
+    /// parity and chaos matrices re-run whole suites this way). Invalid
+    /// or absent values leave the config untouched.
+    ///
+    /// Recognised variables: `SPECROUTER_WORKERS` (positive integer
+    /// lane count), `SPECROUTER_FAULT_RATE`, `SPECROUTER_FAULT_SEED`,
+    /// `SPECROUTER_FAULT_MODELS` (comma-separated),
+    /// `SPECROUTER_FAULT_KINDS` (comma-separated),
+    /// `SPECROUTER_FAULT_MAX`, `SPECROUTER_FAULT_SPIKE_MS` and
+    /// `SPECROUTER_CALL_DEADLINE_MS`.
+    pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("SPECROUTER_WORKERS") {
             if let Ok(n) = v.parse::<usize>() {
                 if n >= 1 {
@@ -239,55 +431,43 @@ impl EngineConfig {
                 }
             }
         }
-    }
-
-    /// Override the fault-injection knobs from the environment, in the
-    /// same spirit as [`EngineConfig::apply_env_workers`] (the chaos CI
-    /// job drives whole suites through a seeded fault matrix this way):
-    /// `SPECROUTER_FAULT_RATE`, `SPECROUTER_FAULT_SEED`,
-    /// `SPECROUTER_FAULT_MODELS` (comma-separated),
-    /// `SPECROUTER_FAULT_KINDS` (comma-separated),
-    /// `SPECROUTER_FAULT_MAX`, `SPECROUTER_FAULT_SPIKE_MS` and
-    /// `SPECROUTER_CALL_DEADLINE_MS`. Invalid or absent values leave the
-    /// config untouched.
-    pub fn apply_env_faults(&mut self) {
         if let Ok(v) = std::env::var("SPECROUTER_FAULT_RATE") {
             if let Ok(r) = v.parse::<f64>() {
                 if (0.0..=1.0).contains(&r) {
-                    self.fault_rate = r;
+                    self.faults.rate = r;
                 }
             }
         }
         if let Ok(v) = std::env::var("SPECROUTER_FAULT_SEED") {
             if let Ok(s) = v.parse::<u64>() {
-                self.fault_seed = s;
+                self.faults.seed = s;
             }
         }
         if let Ok(v) = std::env::var("SPECROUTER_FAULT_MODELS") {
-            self.fault_models = v.split(',')
+            self.faults.models = v.split(',')
                 .map(|s| s.trim().to_string())
                 .filter(|s| !s.is_empty())
                 .collect();
         }
         if let Ok(v) = std::env::var("SPECROUTER_FAULT_KINDS") {
-            self.fault_kinds = v.split(',')
+            self.faults.kinds = v.split(',')
                 .map(|s| s.trim().to_string())
                 .filter(|s| !s.is_empty())
                 .collect();
         }
         if let Ok(v) = std::env::var("SPECROUTER_FAULT_MAX") {
             if let Ok(n) = v.parse::<u64>() {
-                self.fault_max = n;
+                self.faults.max = n;
             }
         }
         if let Ok(v) = std::env::var("SPECROUTER_FAULT_SPIKE_MS") {
             if let Ok(n) = v.parse::<u64>() {
-                self.fault_spike_ms = n;
+                self.faults.spike_ms = n;
             }
         }
         if let Ok(v) = std::env::var("SPECROUTER_CALL_DEADLINE_MS") {
             if let Ok(n) = v.parse::<u64>() {
-                self.call_deadline_ms = n;
+                self.faults.call_deadline_ms = n;
             }
         }
     }
@@ -340,42 +520,122 @@ impl EngineConfig {
                        number of seconds");
             }
         }
-        if self.paged && self.page_tokens < 1 {
-            bail!("page_tokens must be >= 1 when paging is enabled");
-        }
-        if !(0.0..=1.0).contains(&self.fault_rate)
-            || !self.fault_rate.is_finite()
-        {
-            bail!("fault_rate must be in [0, 1]");
-        }
-        for k in &self.fault_kinds {
-            if !matches!(k.as_str(),
-                         "transient" | "spike" | "stuck" | "corrupt"
-                         | "panic")
-            {
-                bail!("unknown fault kind {k:?} (expected transient, \
-                       spike, stuck, corrupt or panic)");
-            }
-        }
-        if self.breaker_trip_after < 1 {
-            bail!("breaker_trip_after must be >= 1");
-        }
-        if self.breaker_probe_successes < 1 {
-            bail!("breaker_probe_successes must be >= 1");
-        }
-        if !self.breaker_backoff_mult.is_finite()
-            || self.breaker_backoff_mult < 1.0
-        {
-            bail!("breaker_backoff_mult must be >= 1");
-        }
-        if self.breaker_backoff_ticks < 1
-            || self.breaker_backoff_max_ticks < self.breaker_backoff_ticks
-        {
-            bail!("breaker backoff ticks must satisfy \
-                   1 <= backoff_ticks <= backoff_max_ticks");
-        }
+        self.paging.validate()?;
+        self.prefill.validate()?;
+        self.faults.validate()?;
+        self.breaker.validate()?;
         self.slo_classes.validate()?;
         Ok(())
+    }
+}
+
+/// Fluent builder over [`EngineConfig`]; every setter has the defaults
+/// of [`EngineConfig::new`] until overridden. Built configs are
+/// field-for-field identical to struct-literal construction (the
+/// `builder_matches_struct_literal` test pins this).
+#[derive(Debug, Clone)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    pub fn batch(mut self, n: usize) -> Self {
+        self.cfg.batch = n;
+        self
+    }
+
+    pub fn window(mut self, n: usize) -> Self {
+        self.cfg.window = n;
+        self
+    }
+
+    pub fn target(mut self, model: impl Into<String>) -> Self {
+        self.cfg.target = model.into();
+        self
+    }
+
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    pub fn rule(mut self, rule: AcceptRule) -> Self {
+        self.cfg.rule = rule;
+        self
+    }
+
+    pub fn max_chain_len(mut self, n: usize) -> Self {
+        self.cfg.max_chain_len = n;
+        self
+    }
+
+    pub fn explore_eps(mut self, eps: f64) -> Self {
+        self.cfg.explore_eps = eps;
+        self
+    }
+
+    pub fn ema_alpha(mut self, alpha: f64) -> Self {
+        self.cfg.ema_alpha = alpha;
+        self
+    }
+
+    pub fn slo_ms(mut self, ms: f64) -> Self {
+        self.cfg.slo_ms = ms;
+        self
+    }
+
+    pub fn slo_classes(mut self, table: SloTable) -> Self {
+        self.cfg.slo_classes = table;
+        self
+    }
+
+    pub fn max_queue(mut self, n: usize) -> Self {
+        self.cfg.max_queue = n;
+        self
+    }
+
+    pub fn fifo_admission(mut self, on: bool) -> Self {
+        self.cfg.fifo_admission = on;
+        self
+    }
+
+    pub fn group_policy(mut self, policy: GroupPolicy) -> Self {
+        self.cfg.group_policy = policy;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    pub fn telemetry(mut self, on: bool) -> Self {
+        self.cfg.telemetry = on;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultConfig) -> Self {
+        self.cfg.faults = faults;
+        self
+    }
+
+    pub fn breaker(mut self, breaker: BreakerConfig) -> Self {
+        self.cfg.breaker = breaker;
+        self
+    }
+
+    pub fn paging(mut self, paging: PagingConfig) -> Self {
+        self.cfg.paging = paging;
+        self
+    }
+
+    pub fn prefill(mut self, prefill: PrefillConfig) -> Self {
+        self.cfg.prefill = prefill;
+        self
+    }
+
+    pub fn build(self) -> EngineConfig {
+        self.cfg
     }
 }
 
@@ -459,25 +719,132 @@ mod tests {
         let batches = [1, 4, 8];
         let windows = [4, 8];
         let mut c = EngineConfig::new("/tmp/a");
-        assert_eq!(c.fault_rate, 0.0, "faults off by default");
-        assert_eq!(c.call_deadline_ms, 0, "no deadline by default");
+        assert_eq!(c.faults.rate, 0.0, "faults off by default");
+        assert_eq!(c.faults.call_deadline_ms, 0, "no deadline by default");
         assert!(c.validate(&batches, &windows).is_ok());
-        c.fault_rate = 1.5;
+        c.faults.rate = 1.5;
         assert!(c.validate(&batches, &windows).is_err());
-        c.fault_rate = 0.1;
-        c.fault_kinds = vec!["transient".into(), "corrupt".into()];
+        c.faults.rate = 0.1;
+        c.faults.kinds = vec!["transient".into(), "corrupt".into()];
         assert!(c.validate(&batches, &windows).is_ok());
-        c.fault_kinds = vec!["gremlins".into()];
+        c.faults.kinds = vec!["gremlins".into()];
         assert!(c.validate(&batches, &windows).is_err());
-        c.fault_kinds.clear();
-        c.breaker_trip_after = 0;
+        c.faults.kinds.clear();
+        c.breaker.trip_after = 0;
         assert!(c.validate(&batches, &windows).is_err());
-        c.breaker_trip_after = 3;
-        c.breaker_backoff_mult = 0.5;
+        c.breaker.trip_after = 3;
+        c.breaker.backoff_mult = 0.5;
         assert!(c.validate(&batches, &windows).is_err());
-        c.breaker_backoff_mult = 2.0;
-        c.breaker_backoff_max_ticks = 1; // below backoff_ticks (8)
+        c.breaker.backoff_mult = 2.0;
+        c.breaker.backoff_max_ticks = 1; // below backoff_ticks (8)
         assert!(c.validate(&batches, &windows).is_err());
+    }
+
+    #[test]
+    fn validation_covers_paging_and_prefill_knobs() {
+        let batches = [1, 4, 8];
+        let windows = [4, 8];
+        let mut c = EngineConfig::new("/tmp/a");
+        // page_tokens is only checked once paging is enabled
+        c.paging.page_tokens = 0;
+        assert!(c.validate(&batches, &windows).is_ok());
+        c.paging.enabled = true;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.paging.page_tokens = 16;
+        assert!(c.validate(&batches, &windows).is_ok());
+        // prefill chunk bounds must be ordered and >= 1
+        c.prefill.chunked = true;
+        assert!(c.validate(&batches, &windows).is_ok());
+        c.prefill.min_chunk = 0;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.prefill.min_chunk = 8;
+        c.prefill.max_chunk = 4;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.prefill.max_chunk = 8;
+        assert!(c.validate(&batches, &windows).is_ok());
+        // slack thresholds: finite and ordered
+        c.prefill.slack_tight_s = f64::NAN;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.prefill.slack_tight_s = 0.5;
+        c.prefill.slack_relaxed_s = 0.1;
+        assert!(c.validate(&batches, &windows).is_err());
+    }
+
+    #[test]
+    fn builder_matches_struct_literal() {
+        let built = EngineConfig::builder("/tmp/a")
+            .batch(8)
+            .window(8)
+            .target("m1")
+            .mode(Mode::Tmo)
+            .rule(AcceptRule::Probabilistic { seed: 11 })
+            .max_chain_len(2)
+            .explore_eps(0.5)
+            .ema_alpha(0.3)
+            .slo_ms(1234.0)
+            .max_queue(7)
+            .fifo_admission(true)
+            .group_policy(GroupPolicy::PerSlot)
+            .workers(4)
+            .telemetry(false)
+            .faults(FaultConfig { rate: 0.25, ..FaultConfig::default() })
+            .breaker(BreakerConfig { trip_after: 5,
+                                     ..BreakerConfig::default() })
+            .paging(PagingConfig { enabled: true, page_tokens: 8 })
+            .prefill(PrefillConfig { chunked: true,
+                                     ..PrefillConfig::default() })
+            .build();
+        let mut lit = EngineConfig::new("/tmp/a");
+        lit.batch = 8;
+        lit.window = 8;
+        lit.target = "m1".into();
+        lit.mode = Mode::Tmo;
+        lit.rule = AcceptRule::Probabilistic { seed: 11 };
+        lit.max_chain_len = 2;
+        lit.explore_eps = 0.5;
+        lit.ema_alpha = 0.3;
+        lit.slo_ms = 1234.0;
+        lit.max_queue = 7;
+        lit.fifo_admission = true;
+        lit.group_policy = GroupPolicy::PerSlot;
+        lit.workers = 4;
+        lit.telemetry = false;
+        lit.faults.rate = 0.25;
+        lit.breaker.trip_after = 5;
+        lit.paging = PagingConfig { enabled: true, page_tokens: 8 };
+        lit.prefill.chunked = true;
+        // Debug output covers every field of every nested sub-config, so
+        // string equality is field-for-field equality.
+        assert_eq!(format!("{built:?}"), format!("{lit:?}"));
+    }
+
+    #[test]
+    fn chunk_budget_tracks_decode_slack() {
+        let pf = PrefillConfig {
+            chunked: true,
+            min_chunk: 4,
+            max_chunk: 64,
+            slack_tight_s: 0.0,
+            slack_relaxed_s: 1.0,
+        };
+        // no decode headroom reading → prefill owns the tick
+        assert_eq!(pf.chunk_budget(None), 64);
+        assert_eq!(pf.chunk_budget(Some(f64::NAN)), 64);
+        // tight (or negative) slack pins to min_chunk
+        assert_eq!(pf.chunk_budget(Some(0.0)), 4);
+        assert_eq!(pf.chunk_budget(Some(-3.0)), 4);
+        // relaxed slack opens up to max_chunk
+        assert_eq!(pf.chunk_budget(Some(1.0)), 64);
+        assert_eq!(pf.chunk_budget(Some(250.0)), 64);
+        // in between: monotone interpolation, strictly inside the range
+        let mid = pf.chunk_budget(Some(0.5));
+        assert!(mid > 4 && mid < 64, "{mid}");
+        assert!(pf.chunk_budget(Some(0.25)) <= mid);
+        // degenerate band: min == max is a fixed budget
+        let pinned = PrefillConfig { min_chunk: 8, max_chunk: 8, ..pf };
+        for s in [None, Some(0.0), Some(0.5), Some(10.0)] {
+            assert_eq!(pinned.chunk_budget(s), 8);
+        }
     }
 
     #[test]

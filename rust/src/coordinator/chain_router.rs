@@ -60,16 +60,18 @@ use crate::config::{AcceptRule, EngineConfig, GroupPolicy, Mode};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::engine::{committed_frontier, retype_empty,
                                  Batcher, Finished, Request, SeqScratch,
-                                 Slot};
+                                 Slot, SlotPhase};
 use crate::coordinator::executor::{Executor, SerialXla};
 use crate::coordinator::faults::{FaultInjector, FaultSpec};
-use crate::coordinator::groups::{gid_for, gid_labels, gid_space};
+use crate::coordinator::groups::{gid_for, gid_labels, gid_space,
+                                 GID_SLOT0};
 use crate::coordinator::health::{BreakerConfig, HealthRegistry};
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::recorder::GroupRecorder;
 use crate::coordinator::scheduler::{Chain, Scheduler};
 use crate::coordinator::similarity::SimilarityTracker;
-use crate::coordinator::spec_step::{run_spec_step, SlotSeqs, StepCtx,
+use crate::coordinator::spec_step::{prefill_advance, run_spec_step,
+                                    PrefillProgress, SlotSeqs, StepCtx,
                                     StepScratch};
 use crate::coordinator::worker_pool::{current_lane, WorkerPool};
 use crate::json::{self, Value};
@@ -120,6 +122,37 @@ struct GroupTask<'t> {
     err: Option<anyhow::Error>,
 }
 
+/// One scattered prefill-lane unit (DESIGN.md §15): a single
+/// `Prefilling` slot advancing its prompt through the prefill-set models
+/// by up to `budget` tokens this tick. Indexed into the per-gid scratch
+/// arenas at `GID_SLOT0 + slot` — never a live decode group the same
+/// tick, because a slot in `Prefilling` phase joins no decode group.
+struct PrefillTask<'t> {
+    slot: usize,
+    gid: usize,
+    /// Member view: the prefilling slot's prompt; every other lane None.
+    seqs: SlotSeqs<'t>,
+    scratch: &'t mut StepScratch,
+    recorder: &'t mut GroupRecorder,
+    shard: StateShard<'t>,
+    budget: usize,
+    /// Router-owned per-slot capture buffer for the target's terminal
+    /// prompt logits (filled on the tick the prompt completes), so
+    /// steady-state chunking stays off the allocator.
+    first_logits: &'t mut Vec<f32>,
+    progress: PrefillProgress,
+    err: Option<anyhow::Error>,
+}
+
+/// One unit of scattered tick work — a decode group's speculative step
+/// or one prefilling slot's chunk advance. Both lane kinds ride the same
+/// [`WorkerPool::run`] dispatch (it is generic over the task type), so a
+/// tick mixes prefill and decode lanes freely over the fixed pool.
+enum TickTask<'t> {
+    Group(GroupTask<'t>),
+    Prefill(PrefillTask<'t>),
+}
+
 /// Recycled allocation for the per-tick task list — the same
 /// lifetime-erasure pattern as [`SeqScratch`]: the buffer is parked empty
 /// under an unreachable placeholder lifetime, so taking it back at the
@@ -128,18 +161,18 @@ struct GroupTask<'t> {
 /// worker count (§8 full-tick gate).
 #[derive(Default)]
 struct TaskScratch {
-    parked: Vec<GroupTask<'static>>,
+    parked: Vec<TickTask<'static>>,
 }
 
 impl TaskScratch {
-    fn take<'t>(&mut self) -> Vec<GroupTask<'t>> {
-        // SAFETY: `GroupTask<'t>` and `GroupTask<'static>` differ only in
+    fn take<'t>(&mut self) -> Vec<TickTask<'t>> {
+        // SAFETY: `TickTask<'t>` and `TickTask<'static>` differ only in
         // lifetime parameters (retype_empty's contract); parked buffers
         // are always empty.
         unsafe { retype_empty(std::mem::take(&mut self.parked)) }
     }
 
-    fn put(&mut self, v: Vec<GroupTask<'_>>) {
+    fn put(&mut self, v: Vec<TickTask<'_>>) {
         // SAFETY: same layout argument as `take`; the retype clears the
         // vec, dropping the tasks (references and a `None` error slot —
         // their seq views must already be parked by the caller).
@@ -194,6 +227,16 @@ pub struct ChainRouter {
     /// forwards the tail inside the step.
     prefill_skips_full: u64,
     prefill_skips_partial: u64,
+    /// `Prefilling` slots this tick, ascending (build_groups output);
+    /// each is scheduled as one [`PrefillTask`] alongside the decode
+    /// groups (DESIGN.md §15).
+    prefill_slots: Vec<usize>,
+    /// Per-slot capture of the target's last-prompt-row logits, written
+    /// by the slot's prefill task on the tick the prompt completes and
+    /// consumed by the gather phase's first-token commit.
+    prefill_logits: Vec<Vec<f32>>,
+    /// Per-slot chunk progress copied back when the tick's tasks park.
+    prefill_progress: Vec<PrefillProgress>,
     /// Each group's running chain label, rebuilt only on chain switch so
     /// steady-state ticks don't re-format a String per step.
     group_label_cache: Vec<Option<(Chain, String)>>,
@@ -278,12 +321,13 @@ impl ChainRouter {
                    each other's lanes) — run it with workers = 1",
                   cfg.workers);
         }
-        if cfg.paged && !backend.supports_paged_kv() {
-            bail!("paged = true requires a backend that addresses KV rows \
-                   through the page tables (supports_paged_kv), but this \
-                   backend reports false — its calls would ignore the \
-                   tables and the prefix index would advertise rows \
-                   nobody ever wrote; run it with paged = false");
+        if cfg.paging.enabled && !backend.supports_paged_kv() {
+            bail!("paging.enabled = true requires a backend that \
+                   addresses KV rows through the page tables \
+                   (supports_paged_kv), but this backend reports false — \
+                   its calls would ignore the tables and the prefix index \
+                   would advertise rows nobody ever wrote; run it with \
+                   paging disabled");
         }
         // fault injection (DESIGN.md §13): only an *active* spec wraps
         // the backend — the default config keeps the raw backend and the
@@ -345,9 +389,9 @@ impl ChainRouter {
             prof: Profiler::new(cfg.ema_alpha),
             sim,
             sched,
-            states: if cfg.paged {
+            states: if cfg.paging.enabled {
                 StateManager::with_paging(PagedCfg {
-                    page_tokens: cfg.page_tokens,
+                    page_tokens: cfg.paging.page_tokens,
                 })
             } else {
                 StateManager::new()
@@ -363,6 +407,9 @@ impl ChainRouter {
             prefill_stale: false,
             prefill_skips_full: 0,
             prefill_skips_partial: 0,
+            prefill_slots: Vec::with_capacity(batch),
+            prefill_logits: (0..batch).map(|_| Vec::new()).collect(),
+            prefill_progress: vec![PrefillProgress::default(); batch],
             group_label_cache: vec![None; n_gids],
             group_labels: gid_labels(batch),
             group_slots: (0..n_gids)
@@ -544,7 +591,7 @@ impl ChainRouter {
 
     /// Model-level admission prefills skipped via shared-prefix reuse:
     /// (whole-prompt hits, drafter partial hits). Both zero unless
-    /// `cfg.paged` (DESIGN.md §14).
+    /// `cfg.paging.enabled` (DESIGN.md §14).
     pub fn prefill_skips(&self) -> (u64, u64) {
         (self.prefill_skips_full, self.prefill_skips_partial)
     }
@@ -603,6 +650,98 @@ impl ChainRouter {
             });
             // target prefill: produces the first committed token
             let target = self.cfg.target.clone();
+            if self.cfg.prefill.chunked {
+                // chunked admission (DESIGN.md §15): no synchronous
+                // prefill — the slot is occupied in `Prefilling` phase
+                // and the tick's prefill lanes consume the prompt in
+                // headroom-budgeted chunks. Only the prefix index is
+                // consulted here: a whole-prompt target hit carrying the
+                // terminal logits short-circuits straight to `Decoding`,
+                // exactly like atomic admission's exact-hit path.
+                let prefill_models =
+                    std::mem::take(&mut self.prefill_cache);
+                self.prefill_stale = true;
+                let mut hit_token: Option<i32> = None;
+                for m in &prefill_models {
+                    let dims = self.kv_dims(m);
+                    let state_len = self.state_len(m);
+                    let is_target = *m == target;
+                    let st = self.states.ensure(m, dims, state_len)?;
+                    st.reset_slot(slot_idx);
+                    let Some(kv) = st.paged.clone() else { continue };
+                    let mut pm = PrefixMatch::new();
+                    kv.lookup(&req.prompt, &mut pm);
+                    if pm.exact && (!is_target || pm.has_logits) {
+                        kv.map_prefix(slot_idx, &pm, false)?;
+                        self.states.get(m)?
+                            .mask.append_valid(slot_idx, plen);
+                        self.prefill_skips_full += 1;
+                        self.health.on_success(m);
+                        if is_target {
+                            hit_token = Some(match self.cfg.rule {
+                                AcceptRule::Greedy =>
+                                    argmax(&pm.logits) as i32,
+                                AcceptRule::Probabilistic { .. } =>
+                                    slot_rng.categorical(
+                                        &softmax(&pm.logits)) as i32,
+                            });
+                        }
+                    } else if pm.matched > 0 && !is_target {
+                        // drafter partial hit: adopt the aligned full
+                        // pages; the prefill chunks forward the tail
+                        let covered = kv.map_prefix(slot_idx, &pm, true)?;
+                        if covered > 0 {
+                            self.states.get(m)?
+                                .mask.append_valid(slot_idx, covered);
+                            self.prefill_skips_partial += 1;
+                            self.health.on_success(m);
+                        }
+                    }
+                }
+                self.prefill_cache = prefill_models;
+                self.prefill_stale = false;
+                self.slot_rngs[slot_idx] = slot_rng;
+                let mut committed =
+                    Vec::with_capacity(plen + req.max_new.max(1));
+                committed.extend_from_slice(&req.prompt);
+                let (phase, first_token_at, finished_by_eos) =
+                    match hit_token {
+                        Some(t) => {
+                            committed.push(t);
+                            (SlotPhase::Decoding, Instant::now(),
+                             t == self.manifest.special.eos)
+                        }
+                        // placeholder stamp, overwritten the tick the
+                        // final chunk commits the real first token
+                        None => (SlotPhase::Prefilling, admitted_at,
+                                 false),
+                    };
+                if phase == SlotPhase::Decoding && self.tel.enabled() {
+                    let us = first_token_at
+                        .saturating_duration_since(req.arrival)
+                        .as_micros() as u64;
+                    self.tel.ttft_us.record(us);
+                    self.tel.class_hists(class).ttft_us.record(us);
+                }
+                let slot = Slot {
+                    req,
+                    committed,
+                    phase,
+                    admitted: admitted_at,
+                    first_token: first_token_at,
+                    finished_by_eos,
+                    class,
+                    deadline,
+                };
+                let done = slot.phase == SlotPhase::Decoding
+                    && (slot.finished_by_eos || slot.remaining() == 0);
+                self.batcher.occupy(slot_idx, slot);
+                admitted += 1;
+                if done {
+                    self.complete(slot_idx);
+                }
+                continue;
+            }
             let mut first_token = 0i32;
             // contained admission (DESIGN.md §13): a *target* failure
             // fails THIS request with a structured record; a drafter
@@ -750,6 +889,7 @@ impl ChainRouter {
                 self.states.clear_slot(slot_idx);
                 self.tel.failed_requests += 1;
                 if self.tel.enabled() {
+                    let tick = self.steps;
                     self.tel.push(0, tick, req.id,
                                   EventKind::Finish { eos: false });
                 }
@@ -789,6 +929,7 @@ impl ChainRouter {
             let slot = Slot {
                 req,
                 committed,
+                phase: SlotPhase::Decoding,
                 admitted: admitted_at,
                 first_token: first_token_at,
                 finished_by_eos: first_token == self.manifest.special.eos,
@@ -834,8 +975,16 @@ impl ChainRouter {
         };
         let now = Instant::now();
         let tpot = self.tpot_for_headroom();
+        self.prefill_slots.clear();
         for (b, slot) in self.batcher.slots.iter().enumerate() {
             let Some(slot) = slot else { continue };
+            if slot.phase == SlotPhase::Prefilling {
+                // prefill lanes (DESIGN.md §15): a prefilling slot joins
+                // no decode group; the tick schedules one PrefillTask
+                // per slot alongside the group steps instead
+                self.prefill_slots.push(b);
+                continue;
+            }
             let slack = tpot.map(|t| {
                 crate::admission::signed_since(slot.deadline, now)
                     - slot.remaining() as f64 * t
@@ -961,6 +1110,21 @@ impl ChainRouter {
         // half-open here, before this tick's chain selection
         self.health.begin_tick();
         self.build_groups();
+        // headroom-adaptive prefill budget (DESIGN.md §15): the minimum
+        // decode slack across this tick's groups — the same signal
+        // urgency grouping runs on — sets how many prompt tokens each
+        // prefilling slot may consume this tick. No slack signal (FIFO
+        // baseline, no TPOT estimate yet, or nothing decoding) means the
+        // engine is not latency-constrained: use the largest chunk.
+        let prefill_budget = if self.prefill_slots.is_empty() {
+            0
+        } else {
+            let slack = self.group_slack.iter().flatten().copied()
+                .fold(None::<f64>, |acc, s| {
+                    Some(acc.map_or(s, |a| a.min(s)))
+                });
+            self.cfg.prefill.chunk_budget(slack)
+        };
         let eos = self.manifest.special.eos;
         let seq_cap = self.manifest.seq;
         // completion guard: a slot kept alive must survive the deepest
@@ -996,16 +1160,30 @@ impl ChainRouter {
             }
         }
 
+        // prefill lanes need state entries for every prefill-set model
+        // before the shards are built (the set can change between a
+        // slot's admission and this tick under adaptive replanning)
+        if !self.prefill_slots.is_empty() {
+            for m in &self.prefill_cache {
+                let dims = self.kv_dims(m);
+                let state_len = self.state_len(m);
+                self.states.ensure(m, dims, state_len)?;
+            }
+        }
+
         // --- split-borrow guard: groups must partition the batch --------
-        // (disjoint by construction of gid_for; this is the structured
+        // (disjoint by construction of gid_for, and a slot is either
+        // Prefilling or grouped, never both; this is the structured
         // backstop that turns a future partitioning bug into an error
         // instead of two workers aliasing a slot)
         StateManager::check_disjoint(
             self.cfg.batch,
-            self.group_slots.iter().map(|g| g.as_slice()),
+            self.group_slots.iter().map(|g| g.as_slice())
+                .chain(std::iter::once(self.prefill_slots.as_slice())),
             &mut self.overlap_marks)?;
 
-        // --- execute: scatter one task per active group ------------------
+        // --- execute: scatter one task per active group + one per ------
+        // --- prefilling slot (DESIGN.md §15) ---------------------------
         let t_exec = Instant::now();
         {
             let backend = self.backend.as_ref();
@@ -1013,6 +1191,9 @@ impl ChainRouter {
             let states = &self.states;
             let group_slots = &self.group_slots;
             let group_chains = &self.group_chains;
+            let prefill_slots = &self.prefill_slots;
+            let prefill_models: &[String] = &self.prefill_cache;
+            let target_name = self.cfg.target.as_str();
             let member_mask = &mut self.member_mask;
             let slot_rngs = &mut self.slot_rngs;
             let batch = self.cfg.batch;
@@ -1020,20 +1201,61 @@ impl ChainRouter {
             let rule = self.cfg.rule;
             let pad = self.manifest.special.pad;
             let check_logits = self.check_logits;
-            let paged = self.cfg.paged;
+            let paged = self.cfg.paging.enabled;
+            // prefill chunks ride the catch-up chunk window
+            let w0 = self.manifest.windows.first().copied()
+                .unwrap_or(self.cfg.window);
 
-            let mut tasks: Vec<GroupTask<'_>> = self.task_scratch.take();
+            let mut tasks: Vec<TickTask<'_>> = self.task_scratch.take();
             {
                 let mut rec_it = self.recorders.iter_mut();
                 let mut sc_it = self.scratches.iter_mut();
                 let mut rng_it = self.rng_scratch.iter_mut();
                 let mut seq_it = self.seq_scratches.iter_mut();
+                let mut fl_it = self.prefill_logits.iter_mut();
+                // cursor over the (ascending) prefilling slots; their
+                // gids GID_SLOT0 + b ascend with the loop
+                let mut next_pf = 0usize;
                 for (gid, slots) in group_slots.iter().enumerate() {
                     let recorder = rec_it.next().unwrap();
                     let scratch = sc_it.next().unwrap();
                     let rng_buf = rng_it.next().unwrap();
                     let seq_sc = seq_it.next().unwrap();
+                    // upper gids double as prefill lanes: slot b rides
+                    // gid GID_SLOT0 + b, never a live decode group the
+                    // same tick (a Prefilling slot joins no group)
+                    let pf_lane = gid.checked_sub(GID_SLOT0)
+                        .map(|b| (b, fl_it.next().unwrap()));
                     if slots.is_empty() {
+                        let Some((b, first_logits)) = pf_lane else {
+                            continue;
+                        };
+                        if next_pf >= prefill_slots.len()
+                            || prefill_slots[next_pf] != b {
+                            continue;
+                        }
+                        // one-element shard slice carved from the
+                        // router-owned buffer (the shard stores it)
+                        let shard_slots =
+                            &prefill_slots[next_pf..next_pf + 1];
+                        next_pf += 1;
+                        member_mask.fill(false);
+                        member_mask[b] = true;
+                        let mut seqs: SlotSeqs<'_> = seq_sc.take();
+                        batcher.fill_slot_seqs(
+                            Some(member_mask.as_slice()), &mut seqs);
+                        tasks.push(TickTask::Prefill(PrefillTask {
+                            slot: b,
+                            gid,
+                            seqs,
+                            scratch,
+                            recorder,
+                            shard: states.shard_for(shard_slots),
+                            budget: prefill_budget,
+                            first_logits,
+                            progress: PrefillProgress::default(),
+                            err: None,
+                        }));
                         continue;
                     }
                     // sub-batch view: members carry their committed
@@ -1057,7 +1279,7 @@ impl ChainRouter {
                     for &b in slots.iter() {
                         rng_buf[b] = slot_rngs[b].clone();
                     }
-                    tasks.push(GroupTask {
+                    tasks.push(TickTask::Group(GroupTask {
                         gid,
                         chain: group_chains[gid].as_ref().unwrap(),
                         seqs,
@@ -1066,48 +1288,89 @@ impl ChainRouter {
                         rngs: &mut rng_buf[..],
                         shard: states.shard_for(slots),
                         err: None,
-                    });
+                    }));
                 }
             }
 
             let epoch = self.tel.epoch();
-            let f = |t: &mut GroupTask| {
+            let f = |t: &mut TickTask| {
                 let t0 = Instant::now();
                 // panic containment (DESIGN.md §13): a panicking step —
                 // injected or genuine — is caught here and converted to
-                // the same contained per-group error a failing call
-                // produces, so one poisoned group never takes down the
+                // the same contained per-lane error a failing call
+                // produces, so one poisoned lane never takes down the
                 // tick (the pool's own per-task catch is the backstop
                 // for panics outside this wrapper)
-                let result = catch_unwind(AssertUnwindSafe(|| {
-                    let mut ctx = StepCtx {
-                        exec: backend,
-                        rec: &mut *t.recorder,
-                        states: t.shard,
-                        batch,
-                        vocab,
-                        rule,
-                        rngs: &mut *t.rngs,
-                        scratch: &mut *t.scratch,
-                        check_logits,
-                        paged,
-                    };
-                    run_spec_step(&mut ctx, t.chain, &t.seqs, pad)
-                }));
-                t.recorder.wall = t0.elapsed();
-                if tel_on {
-                    // stamp lane + start for the gather-side span export;
-                    // workers never touch the rings themselves (§11)
-                    t.recorder.lane = current_lane();
-                    t.recorder.start_us = t0
-                        .saturating_duration_since(epoch)
-                        .as_micros() as u64;
+                match t {
+                    TickTask::Group(t) => {
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            let mut ctx = StepCtx {
+                                exec: backend,
+                                rec: &mut *t.recorder,
+                                states: t.shard,
+                                batch,
+                                vocab,
+                                rule,
+                                rngs: &mut *t.rngs,
+                                scratch: &mut *t.scratch,
+                                check_logits,
+                                paged,
+                            };
+                            run_spec_step(&mut ctx, t.chain, &t.seqs, pad)
+                        }));
+                        t.recorder.wall = t0.elapsed();
+                        if tel_on {
+                            // stamp lane + start for the gather-side span
+                            // export; workers never touch the rings
+                            // themselves (§11)
+                            t.recorder.lane = current_lane();
+                            t.recorder.start_us = t0
+                                .saturating_duration_since(epoch)
+                                .as_micros() as u64;
+                        }
+                        t.err = match result {
+                            Ok(r) => r.err(),
+                            Err(p) => Some(anyhow!(
+                                "group step panicked: {}",
+                                panic_msg(p.as_ref()))),
+                        };
+                    }
+                    TickTask::Prefill(t) => {
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            let mut ctx = StepCtx {
+                                exec: backend,
+                                rec: &mut *t.recorder,
+                                states: t.shard,
+                                batch,
+                                vocab,
+                                rule,
+                                // chunked prefill draws no RNG (the
+                                // chunked-parity guarantee)
+                                rngs: &mut [],
+                                scratch: &mut *t.scratch,
+                                check_logits,
+                                paged,
+                            };
+                            prefill_advance(&mut ctx, prefill_models,
+                                            target_name, w0, &t.seqs,
+                                            t.budget, t.first_logits)
+                        }));
+                        t.recorder.wall = t0.elapsed();
+                        if tel_on {
+                            t.recorder.lane = current_lane();
+                            t.recorder.start_us = t0
+                                .saturating_duration_since(epoch)
+                                .as_micros() as u64;
+                        }
+                        match result {
+                            Ok(Ok(p)) => t.progress = p,
+                            Ok(Err(e)) => t.err = Some(e),
+                            Err(p) => t.err = Some(anyhow!(
+                                "prefill chunk panicked: {}",
+                                panic_msg(p.as_ref()))),
+                        }
+                    }
                 }
-                t.err = match result {
-                    Ok(r) => r.err(),
-                    Err(p) => Some(anyhow!("group step panicked: {}",
-                                           panic_msg(p.as_ref()))),
-                };
             };
             let clean = match self.pool.as_ref() {
                 Some(pool) if tasks.len() > 1 => pool.run(&mut tasks, &f),
@@ -1121,16 +1384,28 @@ impl ChainRouter {
             };
 
             // park the views/tasks and collect contained errors per gid
-            // (resolved at gather: the group's member requests fail with
-            // a structured error, every other group commits normally)
+            // (resolved at gather: the lane's member requests fail with
+            // a structured error, every other lane commits normally)
             for t in tasks.iter_mut() {
-                let seqs = std::mem::take(&mut t.seqs);
-                self.seq_scratches[t.gid].put(seqs);
-                for &b in &group_slots[t.gid] {
-                    slot_rngs[b] = t.rngs[b].clone();
-                }
-                if let Some(e) = t.err.take() {
-                    self.group_errs[t.gid] = Some(e);
+                match t {
+                    TickTask::Group(t) => {
+                        let seqs = std::mem::take(&mut t.seqs);
+                        self.seq_scratches[t.gid].put(seqs);
+                        for &b in &group_slots[t.gid] {
+                            slot_rngs[b] = t.rngs[b].clone();
+                        }
+                        if let Some(e) = t.err.take() {
+                            self.group_errs[t.gid] = Some(e);
+                        }
+                    }
+                    TickTask::Prefill(t) => {
+                        let seqs = std::mem::take(&mut t.seqs);
+                        self.seq_scratches[t.gid].put(seqs);
+                        self.prefill_progress[t.slot] = t.progress;
+                        if let Some(e) = t.err.take() {
+                            self.group_errs[t.gid] = Some(e);
+                        }
+                    }
                 }
             }
             self.task_scratch.put(tasks);
@@ -1320,6 +1595,142 @@ impl ChainRouter {
             self.prof.record_group_step(&self.group_labels[gid],
                                         chain_label, group_total as u64);
         }
+        // --- gather, prefill lanes (DESIGN.md §15): fold each chunk's
+        // spans/health/profile observations exactly like a decode group,
+        // then — on the lane that consumed the last prompt token — draw
+        // the first token from the captured terminal logits. The draw
+        // happens here, on the engine thread, from the slot's own RNG
+        // stream: byte-identical to the atomic-admission draw, which is
+        // the chunked-parity guarantee.
+        let prefill_slots = std::mem::take(&mut self.prefill_slots);
+        for &b in &prefill_slots {
+            let gid = GID_SLOT0 + b;
+            if tel_on {
+                let rec = &self.recorders[gid];
+                let lane = rec.lane;
+                let start = rec.start_us;
+                let end = start + rec.wall.as_micros() as u64;
+                self.tel.push(lane, tick_no, NO_REQ, EventKind::Phase {
+                    phase: TickPhase::Execute,
+                    gid: gid.min(u16::MAX as usize) as u16,
+                    start_us: start,
+                    end_us: end,
+                });
+                let mut off = start;
+                rec.for_each_call(|model, kind, cb, cw, dur| {
+                    let dur_us = dur.as_micros() as u64;
+                    self.tel.push(lane, tick_no, NO_REQ, EventKind::Call {
+                        model,
+                        kind,
+                        batch: cb.min(u16::MAX as u32) as u16,
+                        window: cw.min(u16::MAX as u32) as u16,
+                        start_us: off,
+                        dur_us,
+                    });
+                    off += dur_us;
+                });
+            }
+            let g_err = self.group_errs[gid].take();
+            let mut n_faults = 0u64;
+            {
+                let rec = &self.recorders[gid];
+                let health = &mut self.health;
+                rec.for_each_call(|model, _, _, _, _| {
+                    health.on_success_idx(model as usize);
+                });
+                let tel = &mut self.tel;
+                let lane = rec.lane;
+                rec.for_each_fault(|model, kind| {
+                    n_faults += 1;
+                    health.on_failure_idx(model as usize);
+                    tel.push(lane, tick_no, NO_REQ,
+                             EventKind::Fault { model, kind });
+                });
+            }
+            self.tel.faults_observed += n_faults;
+            {
+                let rec = &mut self.recorders[gid];
+                rec.drain_into(&mut self.prof, &mut self.sim);
+                self.prof.record_group_wall(&self.group_labels[gid],
+                                            rec.wall);
+            }
+            if let Some(e) = g_err {
+                // contained prefill failure (the target pass failed or
+                // the chunk panicked): a failed target pass can never
+                // produce a first token, so the request terminates with
+                // a structured error, same as a failed decode group
+                self.tel.failed_groups += 1;
+                let msg = format!("{e:#}");
+                self.fail_slot(b, &msg);
+                continue;
+            }
+            let prog = self.prefill_progress[b];
+            if prog.consumed > 0 {
+                self.tel.prefill_chunks += 1;
+                self.tel.prefill_chunk_tokens.record(prog.consumed as u64);
+                if tel_on {
+                    let req_id = self.batcher.slots[b]
+                        .as_ref()
+                        .map(|s| s.req.id)
+                        .unwrap_or(NO_REQ);
+                    self.tel.push(0, tick_no, req_id,
+                                  EventKind::PrefillChunk {
+                        slot: b.min(u8::MAX as usize) as u8,
+                        tokens: prog.consumed.min(u16::MAX as usize) as u16,
+                        budget: prefill_budget
+                            .min(u16::MAX as usize) as u16,
+                    });
+                }
+            }
+            if !prog.captured {
+                continue;
+            }
+            // final chunk landed: the captured row is the target's
+            // terminal prompt logits — same row atomic admission samples
+            let Some(slot) = self.batcher.slots[b].as_mut() else {
+                continue;
+            };
+            let logits = self.prefill_logits[b].as_slice();
+            let t = match self.cfg.rule {
+                AcceptRule::Greedy => argmax(logits) as i32,
+                AcceptRule::Probabilistic { .. } => {
+                    self.slot_rngs[b].categorical(&softmax(logits)) as i32
+                }
+            };
+            slot.committed.push(t);
+            slot.phase = SlotPhase::Decoding;
+            slot.first_token = Instant::now();
+            slot.finished_by_eos = t == eos;
+            total += 1;
+            if tel_on {
+                let us = slot
+                    .first_token
+                    .saturating_duration_since(slot.req.arrival)
+                    .as_micros() as u64;
+                self.tel.ttft_us.record(us);
+                self.tel.class_hists(slot.class).ttft_us.record(us);
+                self.tel.push(0, tick_no, slot.req.id,
+                              EventKind::Commit { tokens: 1 });
+            }
+            // publish the fully-prefilled prompt pages to the shared
+            // prefix index (target keeps the terminal logits so a future
+            // exact hit can re-sample without a forward pass)
+            let plen = slot.req.prompt.len();
+            for m in &self.prefill_cache {
+                let Ok(st) = self.states.get(m) else { continue };
+                if st.mask.valid_len(b) < plen {
+                    continue;
+                }
+                if let Some(kv) = st.paged.as_ref() {
+                    let lg = (*m == self.cfg.target).then_some(logits);
+                    kv.register_prefix(b, &slot.req.prompt, lg)?;
+                }
+            }
+            if slot.finished_by_eos || slot.remaining() == 0 {
+                self.done_buf.push(b);
+            }
+        }
+        self.prefill_slots = prefill_slots;
         if tick_degraded > 0 {
             self.tel.degraded_groups.record(tick_degraded);
         }
@@ -1474,7 +1885,7 @@ impl ChainRouter {
         // zeros when paging is off
         let ps = self.states.paged_stats();
         m.insert("paging".to_string(), json::obj(vec![
-            ("enabled", Value::Bool(self.cfg.paged)),
+            ("enabled", Value::Bool(self.cfg.paging.enabled)),
             ("lookups", json::num(ps.lookups as f64)),
             ("hits_full", json::num(ps.hits_full as f64)),
             ("hits_partial", json::num(ps.hits_partial as f64)),

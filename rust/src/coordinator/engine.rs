@@ -77,12 +77,31 @@ pub struct Finished {
     pub error: Option<String>,
 }
 
+/// Lifecycle phase of an occupied slot (DESIGN.md §15).
+///
+/// Atomic admission occupies a slot directly in `Decoding` (the prompt
+/// was forwarded synchronously and the first token committed). Under
+/// chunked prefill (`EngineConfig::prefill.chunked`) a slot is occupied
+/// in `Prefilling` instead, its prompt is consumed by scheduled
+/// `PrefillTask` chunks, and it flips to `Decoding` the tick the final
+/// chunk's logits commit the first token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPhase {
+    /// The prompt is still being forwarded chunk by chunk: `committed`
+    /// holds exactly the prompt, no generated position exists, and the
+    /// slot joins no decode group.
+    Prefilling,
+    /// Normal decode lifecycle.
+    Decoding,
+}
+
 /// One occupied batch slot.
 #[derive(Debug)]
 pub struct Slot {
     pub req: Request,
     /// committed = prompt ++ generated (authoritative sequence)
     pub committed: Vec<i32>,
+    pub phase: SlotPhase,
     pub admitted: Instant,
     pub first_token: Instant,
     pub finished_by_eos: bool,
@@ -100,6 +119,18 @@ impl Slot {
 
     pub fn remaining(&self) -> usize {
         self.req.max_new.saturating_sub(self.generated().len())
+    }
+
+    /// Upper bound on any model's mask frontier for state audits. While
+    /// `Prefilling`, chunks may have forwarded up to the whole prompt
+    /// (C = prompt length, nothing is re-forwarded yet); once decoding,
+    /// the last committed token is re-forwarded on the next step by
+    /// convention, so the bound is the committed frontier C-1.
+    pub fn audit_frontier(&self) -> usize {
+        match self.phase {
+            SlotPhase::Prefilling => self.committed.len(),
+            SlotPhase::Decoding => self.committed.len().saturating_sub(1),
+        }
     }
 }
 
@@ -294,6 +325,7 @@ mod tests {
         Slot {
             req: entry.req,
             committed,
+            phase: SlotPhase::Decoding,
             admitted: Instant::now(),
             first_token: Instant::now(),
             finished_by_eos: false,

@@ -115,15 +115,15 @@ impl FaultSpec {
     /// checked ranges and kind names; unknown names here are skipped).
     pub fn from_config(cfg: &crate::config::EngineConfig) -> Self {
         FaultSpec {
-            seed: cfg.fault_seed,
-            rate: cfg.fault_rate,
-            models: cfg.fault_models.clone(),
-            kinds: cfg.fault_kinds.iter()
+            seed: cfg.faults.seed,
+            rate: cfg.faults.rate,
+            models: cfg.faults.models.clone(),
+            kinds: cfg.faults.kinds.iter()
                 .filter_map(|k| FaultKind::parse(k))
                 .collect(),
-            deadline: Duration::from_millis(cfg.call_deadline_ms),
-            spike: Duration::from_millis(cfg.fault_spike_ms),
-            max_faults: cfg.fault_max,
+            deadline: Duration::from_millis(cfg.faults.call_deadline_ms),
+            spike: Duration::from_millis(cfg.faults.spike_ms),
+            max_faults: cfg.faults.max,
         }
     }
 

@@ -34,7 +34,8 @@ use std::sync::Arc;
 
 use crate::coordinator::scheduler::Chain;
 
-/// Breaker tuning (see `EngineConfig::breaker_spec`).
+/// Breaker tuning, distilled from `EngineConfig::breaker` plus the
+/// engine-wide `ema_alpha`.
 #[derive(Debug, Clone)]
 pub struct BreakerConfig {
     /// Consecutive failures that trip `Closed -> Open`.
@@ -55,11 +56,11 @@ impl BreakerConfig {
     /// Distill the engine config's breaker knobs (already validated).
     pub fn from_config(cfg: &crate::config::EngineConfig) -> Self {
         BreakerConfig {
-            trip_after: cfg.breaker_trip_after,
-            backoff_ticks: cfg.breaker_backoff_ticks,
-            backoff_mult: cfg.breaker_backoff_mult,
-            backoff_max_ticks: cfg.breaker_backoff_max_ticks,
-            probe_successes: cfg.breaker_probe_successes,
+            trip_after: cfg.breaker.trip_after,
+            backoff_ticks: cfg.breaker.backoff_ticks,
+            backoff_mult: cfg.breaker.backoff_mult,
+            backoff_max_ticks: cfg.breaker.backoff_max_ticks,
+            probe_successes: cfg.breaker.probe_successes,
             ema_alpha: cfg.ema_alpha,
         }
     }

@@ -26,7 +26,7 @@ pub mod worker_pool;
 pub use backend::{Backend, PrefillState};
 pub use chain_router::ChainRouter;
 pub use engine::{committed_frontier, Batcher, Finished, Request,
-                 SeqScratch, Slot};
+                 SeqScratch, Slot, SlotPhase};
 pub use executor::{Executor, SerialXla};
 pub use faults::{FaultInjector, FaultKind, FaultPlan, FaultSpec};
 pub use groups::GroupKey;
@@ -36,6 +36,7 @@ pub use recorder::{GroupRecorder, ProfSimSink, StepSink};
 pub use scheduler::{Chain, Scheduler, ScoredChain};
 pub use sim_backend::{SimBackend, SimModel, SimSpec};
 pub use similarity::SimilarityTracker;
-pub use spec_step::{catch_up, run_spec_step, SlotSeqs, StepCtx,
-                    StepOutcome, StepScratch};
+pub use spec_step::{catch_up, prefill_advance, run_spec_step,
+                    PrefillProgress, SlotSeqs, StepCtx, StepOutcome,
+                    StepScratch};
 pub use worker_pool::WorkerPool;

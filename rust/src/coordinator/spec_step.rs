@@ -374,6 +374,146 @@ pub fn catch_up(ctx: &mut StepCtx, model: &str, window: usize,
     }
 }
 
+/// Outcome of one [`prefill_advance`] call (DESIGN.md §15).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefillProgress {
+    /// Target-model prompt tokens promoted by this call.
+    pub consumed: usize,
+    /// Set once the target's frontier reached the full prompt this call:
+    /// `first_logits` now holds the logits row after the last prompt
+    /// token — the row an atomic `Backend::prefill` would have returned
+    /// — and the engine can draw the request's first token.
+    pub captured: bool,
+}
+
+/// One budgeted model pass of [`prefill_advance`]: chunked verify calls
+/// identical to [`catch_up`]'s, except the deficit targets the FULL
+/// prompt (valid == C, not C-1 — no first token is committed yet, and
+/// the final prompt position must be forwarded to produce its logits)
+/// and at most `left` tokens are promoted before yielding the tick.
+#[allow(clippy::too_many_arguments)]
+fn prefill_model_chunks(ctx: &mut StepCtx, model: &str, is_target: bool,
+                        window: usize, slots: &SlotSeqs, left: &mut usize,
+                        consumed: &mut usize, first_logits: &mut Vec<f32>,
+                        captured: &mut bool) -> Result<()> {
+    let w1 = window + 1;
+    let batch = ctx.batch;
+    let v = ctx.vocab;
+    let mut calls = 0usize;
+    loop {
+        let mut deficit = 0usize;
+        {
+            let st = ctx.states.get(model)?;
+            for (b, s) in slots.iter().enumerate() {
+                if let Some(c) = s {
+                    deficit = deficit.max(
+                        c.len().saturating_sub(st.mask.valid_len(b)));
+                }
+            }
+        }
+        if deficit == 0 || *left == 0 {
+            return Ok(());
+        }
+        if calls >= 64 {
+            bail!("chunked prefill did not converge for {model} after \
+                   {calls} calls (remaining deficit {deficit})");
+        }
+        fill_lens(ctx.states, model, batch, slots, ctx.paged,
+                  &mut ctx.scratch.lens)?;
+        {
+            let s = &mut *ctx.scratch;
+            s.block.clear();
+            s.block.resize(batch * w1, 0);
+            s.advance.clear();
+            s.advance.resize(batch, 0);
+            for (b, sq) in slots.iter().enumerate() {
+                if let Some(c) = sq {
+                    let vl = s.lens[b] as usize;
+                    let n = (c.len() - vl).min(w1).min(*left);
+                    for i in 0..w1 {
+                        s.block[b * w1 + i] = c[(vl + i).min(c.len() - 1)];
+                    }
+                    s.advance[b] = n;
+                }
+            }
+        }
+        let st = ctx.states.get(model)?;
+        let s = &mut *ctx.scratch;
+        {
+            let mut kv = kv_handle(ctx.exec, st, &mut s.dummy_kv);
+            ctx.exec.verify(&mut *ctx.rec, model, batch, window, &s.block,
+                            &mut kv, &s.lens, &mut s.catch_logits)?;
+        }
+        if ctx.check_logits && !logits_ok(&s.catch_logits) {
+            bail!("{model} produced non-finite logits during chunked \
+                   prefill");
+        }
+        let mut step = 0usize;
+        for (b, sq) in slots.iter().enumerate() {
+            if let Some(c) = sq {
+                let n = s.advance[b];
+                if n == 0 {
+                    continue;
+                }
+                ctx.states.debug_check(b);
+                st.mask.append_speculative(b, w1);
+                st.mask.promote(b, n);
+                step = step.max(n);
+                let vl = s.lens[b] as usize;
+                if is_target && vl + n == c.len() {
+                    // the chunk's last promoted row is the logits after
+                    // the final prompt token — byte-identical to what
+                    // atomic admission prefill returns for this prompt
+                    first_logits.clear();
+                    first_logits.extend_from_slice(
+                        &s.catch_logits[(b * w1 + n - 1) * v
+                                        ..(b * w1 + n) * v]);
+                    *captured = true;
+                }
+            }
+        }
+        if is_target {
+            *consumed += step;
+        }
+        *left = left.saturating_sub(step);
+        calls += 1;
+    }
+}
+
+/// Advance a `Prefilling` slot's prompt through every prefill-set model
+/// by up to `budget` prompt tokens (DESIGN.md §15), using the same
+/// chunked verify traffic as [`catch_up`] — under paged state the chunks
+/// write pages incrementally exactly like lazy drafter catch-up does.
+/// Draws no RNG, so pacing a prefill over any number of ticks leaves the
+/// slot's sampling stream untouched (the chunked-parity guarantee).
+///
+/// `slots` is the task's member view (the prefilling slot's prompt;
+/// every other lane `None`). A failed *drafter* pass is contained: the
+/// fault is reported and the model keeps whatever frontier it reached —
+/// decode-phase `catch_up` repairs it later. A failed *target* pass
+/// propagates as `Err` (no first token can ever be produced).
+pub fn prefill_advance(ctx: &mut StepCtx, models: &[String], target: &str,
+                       window: usize, slots: &SlotSeqs, budget: usize,
+                       first_logits: &mut Vec<f32>)
+                       -> Result<PrefillProgress> {
+    validate_slots(slots)?;
+    let mut progress = PrefillProgress::default();
+    for model in models {
+        let is_target = model.as_str() == target;
+        let mut left = budget;
+        if let Err(e) = prefill_model_chunks(
+            ctx, model, is_target, window, slots, &mut left,
+            &mut progress.consumed, first_logits, &mut progress.captured)
+        {
+            ctx.rec.observe_fault(model, FnKind::Verify);
+            if is_target {
+                return Err(e);
+            }
+        }
+    }
+    Ok(progress)
+}
+
 /// Acceptance decision for one candidate under the configured rule.
 /// `p_row` is the verifier's logits; `q_row` the proposer's (None => the
 /// proposer is trusted blindly — not used in practice). Allocation-free:

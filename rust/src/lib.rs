@@ -29,4 +29,5 @@ pub mod state;
 pub mod telemetry;
 pub mod workload;
 
-pub use config::EngineConfig;
+pub use config::{EngineConfig, EngineConfigBuilder, FaultConfig,
+                 PagingConfig, PrefillConfig};

@@ -69,7 +69,7 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig> {
     }
     // parallel tick lanes (DESIGN.md §11): flag wins over the
     // SPECROUTER_WORKERS env override; validation rejects 0
-    cfg.apply_env_workers();
+    cfg.apply_env();
     if let Some(w) = flags.get("workers") {
         cfg.workers = w.parse().context("--workers")?;
     }

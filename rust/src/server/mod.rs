@@ -28,12 +28,16 @@
 //! request the admission controller sheds gets a structured `rejected`
 //! response instead of a hang — clients can retry elsewhere.
 //!
-//! Control queries share the same wire (DESIGN.md §12):
-//!   {"stats": true}          -> one-line JSON telemetry/counter snapshot
-//!   {"stats": "prometheus"}  -> {"prom": "<exposition text>"}
-//!   {"trace": true}          -> Chrome trace-event JSON of the span rings
-//! The engine answers between ticks, so a scrape never interleaves with
-//! a partially applied tick.
+//! Control queries share the same wire (DESIGN.md §12), one tagged
+//! request shape:
+//!   {"control": "stats"}  -> one-line JSON telemetry/counter snapshot
+//!   {"control": "prom"}   -> {"prom": "<exposition text>"}
+//!   {"control": "trace"}  -> Chrome trace-event JSON of the span rings
+//! The legacy spellings `{"stats": true}`, `{"stats": "prometheus"}` and
+//! `{"trace": true}` remain accepted and answer byte-identically. The
+//! engine answers between ticks, so a scrape never interleaves with a
+//! partially applied tick. [`Client`] wraps the whole client side —
+//! requests, streaming, control — behind bounded connect/read timeouts.
 //!
 //! The engine thread multiplexes: it drains the submission channel, runs
 //! `tick()`, pushes newly committed tokens to per-request stream sinks,
@@ -632,17 +636,31 @@ fn control_reply(tx: &mpsc::Sender<EngineMsg>, writer: &mut TcpStream,
 enum ParsedLine {
     /// A generation request plus its `stream` flag.
     Generate(Request, bool),
-    /// `{"stats": true}` / `{"stats": "prometheus"}`.
+    /// `{"control": "stats"}` / `{"control": "prom"}` (legacy:
+    /// `{"stats": true}` / `{"stats": "prometheus"}`).
     Stats { prom: bool },
-    /// `{"trace": true}`.
+    /// `{"control": "trace"}` (legacy: `{"trace": true}`).
     Trace,
 }
 
-/// Dispatch one protocol line: control queries are keyed by their
-/// `stats`/`trace` field (they carry no `prompt`); everything else is
-/// parsed as a generation request.
+/// Dispatch one protocol line. Control queries use the tagged grammar
+/// `{"control": "stats" | "prom" | "trace"}`; the legacy spellings
+/// (`{"stats": true}`, `{"stats": "prometheus"}`, `{"trace": true}`)
+/// remain accepted and answer byte-identically (the
+/// `control_grammar_legacy_and_tagged_agree` test pins this). Everything
+/// else is parsed as a generation request.
 fn parse_line(line: &str) -> Result<ParsedLine> {
     let v = json::parse(line).context("bad request JSON")?;
+    if let Some(c) = v.opt("control") {
+        return match c.as_str()? {
+            "stats" => Ok(ParsedLine::Stats { prom: false }),
+            "prom" => Ok(ParsedLine::Stats { prom: true }),
+            "trace" => Ok(ParsedLine::Trace),
+            other => bail!(
+                "control must be \"stats\", \"prom\" or \"trace\", \
+                 got {other:?}"),
+        };
+    }
     if let Some(s) = v.opt("stats") {
         let prom = match s {
             Value::Bool(true) => false,
@@ -777,46 +795,13 @@ pub fn serve_tcp_opts(addr: &str, tx: mpsc::Sender<EngineMsg>,
     Ok(())
 }
 
-/// Connect budget for the client helpers: an unreachable server yields
+/// Default connect budget for [`Client`]: an unreachable server yields
 /// a structured error instead of hanging the caller on a SYN that never
 /// answers (DESIGN.md §13).
 pub const CLIENT_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
-/// Per-read budget for the client helpers: a wedged server (accepted the
+/// Default per-read budget for [`Client`]: a wedged server (accepted the
 /// connection, never replies) is bounded too.
 pub const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(30);
-
-/// Bounded connect shared by every client helper: connect under
-/// [`CLIENT_CONNECT_TIMEOUT`], then arm [`CLIENT_READ_TIMEOUT`] on the
-/// socket so every subsequent read is bounded as well.
-fn connect_bounded(addr: std::net::SocketAddr) -> Result<TcpStream> {
-    let stream = TcpStream::connect_timeout(&addr, CLIENT_CONNECT_TIMEOUT)
-        .with_context(|| format!(
-            "connecting {addr} (budget {CLIENT_CONNECT_TIMEOUT:?})"))?;
-    stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT))?;
-    Ok(stream)
-}
-
-/// One bounded reply-line read: a socket timeout becomes a structured
-/// error naming the budget instead of a raw `io::Error` (the platform
-/// reports it as `WouldBlock` or `TimedOut` depending on the OS).
-fn bounded_read_line(reader: &mut BufReader<TcpStream>, line: &mut String)
-                     -> Result<usize> {
-    match reader.read_line(line) {
-        Ok(n) => Ok(n),
-        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
-            || e.kind() == std::io::ErrorKind::TimedOut => {
-            bail!("server read timed out: no reply line within \
-                   {CLIENT_READ_TIMEOUT:?}")
-        }
-        Err(e) => Err(e.into()),
-    }
-}
-
-/// Minimal client for examples/tests: one request over a fresh connection.
-pub fn client_request(addr: std::net::SocketAddr, dataset: &str,
-                      prompt: &[i32], max_new: usize) -> Result<Value> {
-    client_request_opts(addr, dataset, prompt, max_new, None, None)
-}
 
 fn request_fields(dataset: &str, prompt: &[i32], max_new: usize,
                   slo_class: Option<&str>, slo_ms: Option<f64>)
@@ -836,77 +821,139 @@ fn request_fields(dataset: &str, prompt: &[i32], max_new: usize,
     fields
 }
 
-/// `client_request` with explicit SLO class / target fields.
-pub fn client_request_opts(addr: std::net::SocketAddr, dataset: &str,
-                           prompt: &[i32], max_new: usize,
-                           slo_class: Option<&str>, slo_ms: Option<f64>)
-                           -> Result<Value> {
-    let mut stream = connect_bounded(addr)?;
-    let req = json::obj(request_fields(dataset, prompt, max_new, slo_class,
-                                       slo_ms));
-    writeln!(stream, "{req}")?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    bounded_read_line(&mut reader, &mut line)?;
-    json::parse(line.trim())
+/// JSON-lines TCP client for examples/tests: one connection per call,
+/// every connect and read bounded by its timeouts. Control queries use
+/// the tagged `{"control": ...}` grammar.
+#[derive(Debug, Clone, Copy)]
+pub struct Client {
+    addr: std::net::SocketAddr,
+    connect_timeout: Duration,
+    read_timeout: Duration,
 }
 
-/// Streaming client: sends one `stream:true` request and collects every
-/// frame — token frames plus the terminal `done`/`shed` frame (or a
-/// single `error` object) — in arrival order.
-pub fn client_request_stream(addr: std::net::SocketAddr, dataset: &str,
-                             prompt: &[i32], max_new: usize,
-                             slo_class: Option<&str>, slo_ms: Option<f64>)
-                             -> Result<Vec<Value>> {
-    let mut stream = connect_bounded(addr)?;
-    let mut fields = request_fields(dataset, prompt, max_new, slo_class,
-                                    slo_ms);
-    fields.push(("stream", Value::Bool(true)));
-    let req = json::obj(fields);
-    writeln!(stream, "{req}")?;
-    let mut reader = BufReader::new(stream);
-    let mut frames = Vec::new();
-    loop {
-        let mut line = String::new();
-        if bounded_read_line(&mut reader, &mut line)? == 0 {
-            bail!("connection closed mid-stream after {} frames",
-                  frames.len());
-        }
-        let v = json::parse(line.trim())?;
-        let terminal = v.opt("error").is_some()
-            || v.opt("event").and_then(|e| e.as_str().ok())
-                .is_some_and(|e| e == "done" || e == "shed");
-        frames.push(v);
-        if terminal {
-            return Ok(frames);
+impl Client {
+    /// Client with the default [`CLIENT_CONNECT_TIMEOUT`] /
+    /// [`CLIENT_READ_TIMEOUT`] budgets.
+    pub fn new(addr: std::net::SocketAddr) -> Self {
+        Client {
+            addr,
+            connect_timeout: CLIENT_CONNECT_TIMEOUT,
+            read_timeout: CLIENT_READ_TIMEOUT,
         }
     }
-}
 
-/// One control query over a fresh connection: send `line`, parse the
-/// single JSON reply.
-fn control_query(addr: std::net::SocketAddr, line: &str) -> Result<Value> {
-    let mut stream = connect_bounded(addr)?;
-    writeln!(stream, "{line}")?;
-    let mut reader = BufReader::new(stream);
-    let mut reply = String::new();
-    bounded_read_line(&mut reader, &mut reply)?;
-    json::parse(reply.trim())
-}
+    /// Override the connect budget.
+    pub fn connect_timeout(mut self, t: Duration) -> Self {
+        self.connect_timeout = t;
+        self
+    }
 
-/// Fetch the engine's telemetry/counter snapshot (`{"stats": true}`).
-pub fn client_stats(addr: std::net::SocketAddr) -> Result<Value> {
-    control_query(addr, "{\"stats\": true}")
-}
+    /// Override the per-read-line budget.
+    pub fn read_timeout(mut self, t: Duration) -> Self {
+        self.read_timeout = t;
+        self
+    }
 
-/// Fetch the Prometheus exposition text (`{"stats": "prometheus"}`);
-/// the multi-line text rides the JSON-lines wire inside `{"prom": ...}`.
-pub fn client_stats_prom(addr: std::net::SocketAddr) -> Result<String> {
-    let v = control_query(addr, "{\"stats\": \"prometheus\"}")?;
-    Ok(v.get("prom")?.as_str()?.to_string())
-}
+    /// Bounded connect: dial under the connect budget, then arm the read
+    /// budget on the socket so every subsequent read is bounded as well.
+    fn connect(&self) -> Result<TcpStream> {
+        let stream =
+            TcpStream::connect_timeout(&self.addr, self.connect_timeout)
+                .with_context(|| format!(
+                    "connecting {} (budget {:?})",
+                    self.addr, self.connect_timeout))?;
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        Ok(stream)
+    }
 
-/// Fetch the Chrome trace-event JSON of the span rings (`{"trace": true}`).
-pub fn client_trace(addr: std::net::SocketAddr) -> Result<Value> {
-    control_query(addr, "{\"trace\": true}")
+    /// One bounded reply-line read: a socket timeout becomes a structured
+    /// error naming the budget instead of a raw `io::Error` (the platform
+    /// reports it as `WouldBlock` or `TimedOut` depending on the OS).
+    fn read_line(&self, reader: &mut BufReader<TcpStream>,
+                 line: &mut String) -> Result<usize> {
+        match reader.read_line(line) {
+            Ok(n) => Ok(n),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut => {
+                bail!("server read timed out: no reply line within {:?}",
+                      self.read_timeout)
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Send one pre-serialized line, parse the single JSON reply.
+    fn round_trip(&self, line: &str) -> Result<Value> {
+        let mut stream = self.connect()?;
+        writeln!(stream, "{line}")?;
+        let mut reader = BufReader::new(stream);
+        let mut reply = String::new();
+        self.read_line(&mut reader, &mut reply)?;
+        json::parse(reply.trim())
+    }
+
+    /// One buffered generation request.
+    pub fn request(&self, dataset: &str, prompt: &[i32], max_new: usize)
+                   -> Result<Value> {
+        self.request_opts(dataset, prompt, max_new, None, None)
+    }
+
+    /// [`Client::request`] with explicit SLO class / target fields.
+    pub fn request_opts(&self, dataset: &str, prompt: &[i32],
+                        max_new: usize, slo_class: Option<&str>,
+                        slo_ms: Option<f64>) -> Result<Value> {
+        let req = json::obj(request_fields(dataset, prompt, max_new,
+                                           slo_class, slo_ms));
+        self.round_trip(&req.to_string())
+    }
+
+    /// Streaming request: sends one `stream:true` request and collects
+    /// every frame — token frames plus the terminal `done`/`shed` frame
+    /// (or a single `error` object) — in arrival order.
+    pub fn request_stream(&self, dataset: &str, prompt: &[i32],
+                          max_new: usize, slo_class: Option<&str>,
+                          slo_ms: Option<f64>) -> Result<Vec<Value>> {
+        let mut stream = self.connect()?;
+        let mut fields = request_fields(dataset, prompt, max_new,
+                                        slo_class, slo_ms);
+        fields.push(("stream", Value::Bool(true)));
+        let req = json::obj(fields);
+        writeln!(stream, "{req}")?;
+        let mut reader = BufReader::new(stream);
+        let mut frames = Vec::new();
+        loop {
+            let mut line = String::new();
+            if self.read_line(&mut reader, &mut line)? == 0 {
+                bail!("connection closed mid-stream after {} frames",
+                      frames.len());
+            }
+            let v = json::parse(line.trim())?;
+            let terminal = v.opt("error").is_some()
+                || v.opt("event").and_then(|e| e.as_str().ok())
+                    .is_some_and(|e| e == "done" || e == "shed");
+            frames.push(v);
+            if terminal {
+                return Ok(frames);
+            }
+        }
+    }
+
+    /// Fetch the engine's telemetry/counter snapshot
+    /// (`{"control": "stats"}`).
+    pub fn stats(&self) -> Result<Value> {
+        self.round_trip("{\"control\": \"stats\"}")
+    }
+
+    /// Fetch the Prometheus exposition text (`{"control": "prom"}`); the
+    /// multi-line text rides the JSON-lines wire inside `{"prom": ...}`.
+    pub fn stats_prom(&self) -> Result<String> {
+        let v = self.round_trip("{\"control\": \"prom\"}")?;
+        Ok(v.get("prom")?.as_str()?.to_string())
+    }
+
+    /// Fetch the Chrome trace-event JSON of the span rings
+    /// (`{"control": "trace"}`).
+    pub fn trace(&self) -> Result<Value> {
+        self.round_trip("{\"control\": \"trace\"}")
+    }
 }

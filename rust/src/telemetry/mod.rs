@@ -75,6 +75,11 @@ pub struct Telemetry {
     /// failed outright — one sample per tick that saw at least one
     /// (DESIGN.md §13).
     pub degraded_groups: Hist,
+    /// Target-prompt tokens consumed per chunked-prefill advance — one
+    /// sample per (slot, tick) with prefill progress (DESIGN.md §15).
+    pub prefill_chunk_tokens: Hist,
+    /// Total chunked-prefill advances scheduled.
+    pub prefill_chunks: u64,
     /// Failed backend calls observed by steps (call errors, deadline
     /// overruns, corrupt logits).
     pub faults_observed: u64,
@@ -117,6 +122,8 @@ impl Telemetry {
             rollback_depth: Hist::new(),
             tick_us: Hist::new(),
             degraded_groups: Hist::new(),
+            prefill_chunk_tokens: Hist::new(),
+            prefill_chunks: 0,
             faults_observed: 0,
             degraded_steps: 0,
             failed_groups: 0,
@@ -262,6 +269,11 @@ impl Telemetry {
                 ("rollback_depth", hist_json(&self.rollback_depth, 1.0)),
                 ("tick_ms", hist_json(&self.tick_us, 1000.0)),
                 ("degraded_groups", hist_json(&self.degraded_groups, 1.0)),
+                ("prefill_chunk_tokens",
+                 hist_json(&self.prefill_chunk_tokens, 1.0)),
+            ])),
+            ("prefill", json::obj(vec![
+                ("chunks", json::num(self.prefill_chunks as f64)),
             ])),
             ("faults", json::obj(vec![
                 ("observed", json::num(self.faults_observed as f64)),

@@ -123,6 +123,12 @@ fn event_json(tel: &Telemetry, lane: usize, ev: &SpanEvent) -> Value {
             args.push(("depth", json::num(depth as f64)));
             instant("rollback", "spec", lane, ev.ts_us, args)
         }
+        EventKind::PrefillChunk { slot, tokens, budget } => {
+            args.push(("slot", json::num(slot as f64)));
+            args.push(("tokens", json::num(tokens as f64)));
+            args.push(("budget", json::num(budget as f64)));
+            instant("prefill_chunk", "request", lane, ev.ts_us, args)
+        }
         EventKind::Commit { tokens } => {
             args.push(("tokens", json::num(tokens as f64)));
             instant("commit", "request", lane, ev.ts_us, args)

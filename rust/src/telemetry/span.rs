@@ -85,6 +85,10 @@ pub enum EventKind {
         start_us: u64,
         dur_us: u64,
     },
+    /// One chunked-prefill advance for a `Prefilling` slot (DESIGN.md
+    /// §15): `tokens` target-model prompt tokens were consumed this
+    /// tick under the headroom-adaptive `budget`.
+    PrefillChunk { slot: u8, tokens: u16, budget: u16 },
     /// Tokens committed to a slot this tick.
     Commit { tokens: u16 },
     /// Tokens pushed to a streaming client.

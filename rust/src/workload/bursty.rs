@@ -1,0 +1,152 @@
+//! Bursty arrival process (DESIGN.md §15): a steady Poisson stream of
+//! short interactive requests with periodic bursts of long-prompt batch
+//! jobs landing on top of it. This is the workload where atomic
+//! admission prefill hurts most — each burst stalls the decode loop for
+//! several whole-prompt prefills in a row, and every interactive request
+//! admitted behind the burst pays that stall in TTFT. Chunked prefill
+//! amortizes the same prompt work across decode ticks, which is exactly
+//! what `benches/bench_prefill.rs` measures and CI gates.
+use crate::admission::SloClass;
+use crate::rng::Rng;
+use crate::workload::datasets::DatasetGen;
+use crate::workload::trace::TraceEntry;
+
+/// Specification of one bursty stream: the interactive baseline plus the
+/// recurring long-prompt burst riding on it.
+#[derive(Debug, Clone)]
+pub struct BurstSpec {
+    /// mean interactive arrivals per second (Poisson)
+    pub base_rate: f64,
+    /// number of interactive requests in the stream
+    pub n_interactive: usize,
+    /// seconds between burst fronts (first burst at one period in, so
+    /// the engine has warmed up on interactive traffic)
+    pub burst_every_s: f64,
+    /// long-prompt batch requests per burst, arriving back to back
+    pub burst_len: usize,
+    pub seed: u64,
+}
+
+impl BurstSpec {
+    /// The shape CI's `bench-trajectory` job replays: 8 interactive
+    /// req/s with a 3-wide long-prompt burst every 2 seconds.
+    pub fn default_burst() -> Self {
+        BurstSpec {
+            base_rate: 8.0,
+            n_interactive: 48,
+            burst_every_s: 2.0,
+            burst_len: 3,
+            seed: 0xB065,
+        }
+    }
+}
+
+/// Generate the bursty trace: interactive requests with Poisson offsets
+/// drawn from `interactive`, and at every `burst_every_s` boundary
+/// inside the stream's span, `burst_len` batch-class requests drawn from
+/// `long` (sampled prompts — typically a generator configured with much
+/// longer prompt lengths). Entries come back sorted by offset and the
+/// whole trace is deterministic per seed.
+pub fn bursty_trace(spec: &BurstSpec, interactive: &mut DatasetGen,
+                    long: &mut DatasetGen) -> Vec<TraceEntry> {
+    let mut rng = Rng::new(spec.seed);
+    let mut t = 0.0f64;
+    let mut out: Vec<TraceEntry> = (0..spec.n_interactive)
+        .map(|i| {
+            if i > 0 {
+                t += rng.exp(spec.base_rate.max(1e-9));
+            }
+            let (prompt, max_new) = interactive.sample();
+            TraceEntry {
+                offset_s: t,
+                dataset: interactive.spec.name.clone(),
+                prompt,
+                max_new,
+                class: SloClass::Interactive,
+                stream: false,
+            }
+        })
+        .collect();
+    let span = t;
+    let period = spec.burst_every_s.max(1e-9);
+    let mut front = period;
+    while front < span {
+        for _ in 0..spec.burst_len {
+            let (prompt, max_new) = long.sample();
+            out.push(TraceEntry {
+                offset_s: front,
+                dataset: long.spec.name.clone(),
+                prompt,
+                max_new,
+                class: SloClass::Batch,
+                stream: false,
+            });
+        }
+        front += period;
+    }
+    out.sort_by(|a, b| a.offset_s.total_cmp(&b.offset_s));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::DatasetSpec;
+
+    fn gen(lengths: (usize, usize, usize, usize), seed: u64) -> DatasetGen {
+        DatasetGen::new(DatasetSpec {
+            name: "gsm8k".into(),
+            range: (64, 192),
+            p_det: 0.75,
+            lengths,
+            paper_size: 8500,
+        }, seed)
+    }
+
+    fn spec() -> BurstSpec {
+        BurstSpec {
+            base_rate: 10.0,
+            n_interactive: 100,
+            burst_every_s: 1.0,
+            burst_len: 3,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn bursts_ride_on_the_interactive_baseline() {
+        let t = bursty_trace(&spec(), &mut gen((8, 16, 4, 8), 1),
+                             &mut gen((40, 60, 4, 8), 2));
+        let inter: Vec<_> = t.iter()
+            .filter(|e| e.class == SloClass::Interactive).collect();
+        let burst: Vec<_> = t.iter()
+            .filter(|e| e.class == SloClass::Batch).collect();
+        assert_eq!(inter.len(), 100);
+        assert!(!burst.is_empty(), "no bursts landed inside the span");
+        assert_eq!(burst.len() % 3, 0, "partial burst front");
+        // burst fronts sit on whole periods, three entries each
+        for e in &burst {
+            let k = e.offset_s / 1.0;
+            assert!((k - k.round()).abs() < 1e-9, "front at {}", e.offset_s);
+        }
+        // long prompts are actually long relative to the baseline
+        let max_inter = inter.iter().map(|e| e.prompt.len()).max().unwrap();
+        let min_burst = burst.iter().map(|e| e.prompt.len()).min().unwrap();
+        assert!(min_burst > max_inter,
+                "burst prompts ({min_burst}) not longer than interactive \
+                 ({max_inter})");
+        // sorted by offset
+        for w in t.windows(2) {
+            assert!(w[1].offset_s >= w[0].offset_s);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = bursty_trace(&spec(), &mut gen((8, 16, 4, 8), 1),
+                             &mut gen((40, 60, 4, 8), 2));
+        let b = bursty_trace(&spec(), &mut gen((8, 16, 4, 8), 1),
+                             &mut gen((40, 60, 4, 8), 2));
+        assert_eq!(a, b, "bursty trace must be seed-deterministic");
+    }
+}

@@ -1,9 +1,12 @@
 //! Workload generation (paper §5 Workloads): the four synthetic datasets
-//! and Poisson request arrival processes, plus trace record/replay.
+//! and Poisson request arrival processes (steady and bursty), plus trace
+//! record/replay.
+pub mod bursty;
 pub mod datasets;
 pub mod poisson;
 pub mod trace;
 
+pub use bursty::{bursty_trace, BurstSpec};
 pub use datasets::DatasetGen;
 pub use poisson::{open_loop_trace, open_loop_trace_classed, ArrivalSpec,
                   ClassMix};

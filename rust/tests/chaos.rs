@@ -56,7 +56,7 @@ fn cfg_fixed(chain: &[&str], batch: usize) -> EngineConfig {
     c.group_policy = GroupPolicy::PerSlot;
     // CI re-runs the whole suite under SPECROUTER_WORKERS=4: every
     // containment guarantee must hold for any worker count
-    c.apply_env_workers();
+    c.apply_env();
     c
 }
 
@@ -70,16 +70,16 @@ fn cfg_adaptive(batch: usize) -> EngineConfig {
     c.explore_eps = 0.0;
     c.rule = AcceptRule::Greedy;
     c.group_policy = GroupPolicy::PerSlot;
-    c.apply_env_workers();
+    c.apply_env();
     c
 }
 
 fn faulty(mut c: EngineConfig, rate: f64, models: &[&str], kinds: &[&str])
           -> EngineConfig {
-    c.fault_rate = rate;
-    c.fault_seed = 0xFA17;
-    c.fault_models = models.iter().map(|m| m.to_string()).collect();
-    c.fault_kinds = kinds.iter().map(|k| k.to_string()).collect();
+    c.faults.rate = rate;
+    c.faults.seed = 0xFA17;
+    c.faults.models = models.iter().map(|m| m.to_string()).collect();
+    c.faults.kinds = kinds.iter().map(|k| k.to_string()).collect();
     c
 }
 
@@ -288,8 +288,8 @@ fn breakers_trip_then_recover_after_a_fault_burst() {
     // Open -> HalfOpen -> Closed on the tick clock
     let mut cfg = faulty(cfg_fixed(&["m0", "m2"], 1),
                          1.0, &["m0"], &["transient"]);
-    cfg.fault_max = 3;
-    cfg.breaker_backoff_ticks = 2;
+    cfg.faults.max = 3;
+    cfg.breaker.backoff_ticks = 2;
     let mut router = ChainRouter::with_backend(cfg, backend_for(0))
         .expect("router");
     let spec = router.manifest.datasets["gsm8k"].clone();
@@ -377,7 +377,7 @@ fn spike_faults_are_indistinguishable_from_transient_faults() {
         let run = |kinds: &[&str]| {
             let mut c = faulty(cfg_adaptive(4), 0.25, &["m0", "m1"],
                                kinds);
-            c.fault_spike_ms = 20;
+            c.faults.spike_ms = 20;
             // the injector's per-model call counters are claimed in
             // arrival order, which races across worker lanes; pin to
             // one lane so both runs see the same schedule

@@ -87,7 +87,7 @@ pub fn cfg(batch: usize, mode: Mode) -> EngineConfig {
     // concurrent group steps safe, so the override applies on the
     // artifact-free path only — XLA routers keep workers = 1.
     if !artifacts_available() {
-        c.apply_env_workers();
+        c.apply_env();
     }
     c
 }

@@ -63,7 +63,7 @@ fn cfg_for(batch: usize, mode: Mode, rule: AcceptRule,
     // the CI seeded-sim job re-runs this whole suite with
     // SPECROUTER_WORKERS=4: every parity property must survive the
     // parallel tick unchanged (batch=1 routers clamp back to 1 lane)
-    c.apply_env_workers();
+    c.apply_env();
     c
 }
 
@@ -242,8 +242,8 @@ fn paged_worker_matrix_commits_identical_tokens() {
                 let mut cfg = cfg_for(4, mode.clone(), rule,
                                       GroupPolicy::PerSlot);
                 cfg.workers = workers;
-                cfg.paged = paged;
-                cfg.page_tokens = 4;
+                cfg.paging.enabled = paged;
+                cfg.paging.page_tokens = 4;
                 let mut router = ChainRouter::with_backend(cfg, backend)
                     .expect("router");
                 let mut ids = Vec::new();
@@ -276,6 +276,82 @@ fn paged_worker_matrix_commits_identical_tokens() {
                 assert!(skips >= 1,
                         "seed {seed} {rule:?} workers={workers}: repeated \
                          prompts never skipped a prefill");
+            }
+        }
+    }
+}
+
+/// ISSUE 9: chunked prefill must be committed-token-identical to atomic
+/// admission-side prefill. The chunked run consumes each prompt in
+/// pinned 3-token chunks spread over many ticks (interleaved with other
+/// slots' decode groups), yet the captured terminal logits row — and the
+/// slot RNG stream position at the first-token draw — match the atomic
+/// path exactly, so every downstream token agrees. Checked across
+/// workers {1, 2, 4}, paged and contiguous layouts, both acceptance
+/// rules.
+#[test]
+fn chunked_prefill_matches_atomic_admission() {
+    for seed in 0..seed_count(3) as u64 {
+        let mode = chain_for(seed);
+        let prompts = prompts_for(&backend_for(seed), 30 + seed, 5);
+        let classes = [SloClass::Interactive, SloClass::Standard,
+                       SloClass::Batch];
+        for rule in [AcceptRule::Greedy,
+                     AcceptRule::Probabilistic { seed: 3 ^ seed }] {
+            let run = |workers: usize, paged: bool, chunked: bool| {
+                let mut spec = backend_spec(seed);
+                if paged {
+                    spec = spec.with_paged();
+                }
+                let backend = Arc::new(SimBackend::new(spec));
+                let mut cfg = cfg_for(4, mode.clone(), rule,
+                                      GroupPolicy::PerSlot);
+                cfg.workers = workers;
+                cfg.paging.enabled = paged;
+                cfg.paging.page_tokens = 4;
+                cfg.prefill.chunked = chunked;
+                // pinned tiny budget: every prompt needs several ticks,
+                // maximizing prefill/decode interleave
+                cfg.prefill.min_chunk = 3;
+                cfg.prefill.max_chunk = 3;
+                let mut router = ChainRouter::with_backend(cfg, backend)
+                    .expect("router");
+                let mut ids = Vec::new();
+                for (i, (p, m)) in prompts.iter().enumerate() {
+                    let id = router.submit(req(i, "gsm8k", p.clone(), *m,
+                                               classes[i % 3]))
+                        .expect("submit");
+                    ids.push(id);
+                }
+                router.run_until_idle(100_000).expect("run");
+                if paged {
+                    router.states.audit_pages().unwrap_or_else(|e| {
+                        panic!("seed {seed} workers={workers} \
+                                chunked={chunked}: page audit: {e:#}");
+                    });
+                }
+                let chunks = router.tel.prefill_chunks;
+                let tokens: Vec<Vec<i32>> = ids.iter().map(|id| {
+                    router.finished.iter().find(|f| f.id == *id)
+                        .expect("finished").tokens.clone()
+                }).collect();
+                (tokens, chunks)
+            };
+            for paged in [false, true] {
+                let (atomic, atomic_chunks) = run(1, paged, false);
+                assert_eq!(atomic_chunks, 0,
+                           "atomic admission recorded prefill chunks");
+                for workers in [1usize, 2, 4] {
+                    let (tokens, chunks) = run(workers, paged, true);
+                    assert_eq!(atomic, tokens,
+                               "seed {seed} {rule:?} paged={paged} \
+                                workers={workers}: chunked prefill \
+                                diverged from atomic admission");
+                    assert!(chunks > 0,
+                            "seed {seed} {rule:?} paged={paged} \
+                             workers={workers}: chunked run never \
+                             recorded a prefill chunk");
+                }
             }
         }
     }

@@ -9,11 +9,9 @@ use std::sync::{mpsc, Arc};
 
 use specrouter::config::{EngineConfig, Mode};
 use specrouter::coordinator::{ChainRouter, SimBackend, SimSpec};
-use specrouter::server::{client_request, client_request_opts,
-                         client_request_stream, client_stats,
-                         client_stats_prom, client_trace, serve_tcp,
-                         serve_tcp_opts, spawn_engine, spawn_engine_with,
-                         EngineHandle, EngineMsg};
+use specrouter::server::{serve_tcp, serve_tcp_opts, spawn_engine,
+                         spawn_engine_with, Client, EngineHandle,
+                         EngineMsg};
 
 /// Engine + TCP front-end over the deterministic SimBackend (eos_prob 0
 /// so long requests cannot end early), on an ephemeral port. The router
@@ -49,8 +47,9 @@ fn sim_prompt() -> Vec<i32> {
 #[test]
 fn streaming_e2e_incremental_frames_match_committed_tokens() {
     let (engine, addr) = sim_server(4);
-    let frames = client_request_stream(addr, "gsm8k", &sim_prompt(), 8,
-                                       None, None).expect("stream");
+    let frames = Client::new(addr)
+        .request_stream("gsm8k", &sim_prompt(), 8, None, None)
+        .expect("stream");
     // first `token` frame observed before `done`, and exactly one
     // terminal frame
     assert!(frames.len() >= 2, "expected token + done, got {frames:?}");
@@ -79,7 +78,7 @@ fn streaming_e2e_incremental_frames_match_committed_tokens() {
 
     // a non-streaming request on the same server keeps the pre-streaming
     // response shape exactly: one object, same keys, no `event`
-    let resp = client_request(addr, "gsm8k", &sim_prompt(), 6)
+    let resp = Client::new(addr).request("gsm8k", &sim_prompt(), 6)
         .expect("buffered client");
     assert!(resp.opt("event").is_none(), "buffered reply grew: {resp}");
     let keys: Vec<&str> = resp.as_obj().unwrap().keys()
@@ -113,7 +112,7 @@ fn stream_disconnect_mid_generation_keeps_engine_serving() {
         // cancels the request engine-side and frees the slot
     }
     // a queued request is admitted into the freed slot and completes
-    let resp = client_request(addr, "gsm8k", &sim_prompt(), 4)
+    let resp = Client::new(addr).request("gsm8k", &sim_prompt(), 4)
         .expect("post-disconnect client");
     assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
     assert!(!resp.get("tokens").unwrap().as_arr().unwrap().is_empty());
@@ -137,7 +136,7 @@ fn buffered_disconnect_mid_wait_keeps_engine_serving() {
         writeln!(s, "{}", r#"{"prompt":[1,70,71],"max_new":80}"#).unwrap();
         // close without ever reading the response
     }
-    let resp = client_request(addr, "gsm8k", &sim_prompt(), 4)
+    let resp = Client::new(addr).request("gsm8k", &sim_prompt(), 4)
         .expect("post-disconnect client");
     assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
     assert!(!resp.get("tokens").unwrap().as_arr().unwrap().is_empty());
@@ -209,7 +208,7 @@ fn tcp_roundtrip_and_concurrent_clients() {
     let handles: Vec<_> = (0..2).map(|_| {
         let (prompt, _) = gen.sample();
         std::thread::spawn(move || {
-            client_request(addr, "gsm8k", &prompt, 8).expect("client")
+            Client::new(addr).request("gsm8k", &prompt, 8).expect("client")
         })
     }).collect();
     for h in handles {
@@ -252,8 +251,8 @@ fn doomed_request_gets_structured_rejection_not_a_hang() {
     // an interactive request with a 0ms deadline is doomed by the time the
     // engine sees it: the admission controller must shed it and the client
     // must receive a structured rejection
-    let resp = client_request_opts(addr, "gsm8k", &prompt, 8,
-                                   Some("interactive"), Some(0.0))
+    let resp = Client::new(addr)
+        .request_opts("gsm8k", &prompt, 8, Some("interactive"), Some(0.0))
         .expect("client");
     assert_eq!(resp.get("rejected").unwrap().as_str().unwrap(), "doomed",
                "expected a shed response, got {resp}");
@@ -261,8 +260,8 @@ fn doomed_request_gets_structured_rejection_not_a_hang() {
     assert!(resp.get("id").unwrap().as_f64().unwrap() > 0.0);
 
     // a feasible request on the same engine still completes normally
-    let resp = client_request_opts(addr, "gsm8k", &prompt, 8,
-                                   Some("interactive"), None)
+    let resp = Client::new(addr)
+        .request_opts("gsm8k", &prompt, 8, Some("interactive"), None)
         .expect("client");
     assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
     assert!(!resp.get("tokens").unwrap().as_arr().unwrap().is_empty());
@@ -275,11 +274,11 @@ fn doomed_request_gets_structured_rejection_not_a_hang() {
 fn stats_and_trace_queries_answer_over_tcp() {
     let (engine, addr) = sim_server(2);
     // generate something first so the registry has data to expose
-    let resp = client_request(addr, "gsm8k", &sim_prompt(), 6)
+    let resp = Client::new(addr).request("gsm8k", &sim_prompt(), 6)
         .expect("warm-up request");
     assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
 
-    let stats = client_stats(addr).expect("stats query");
+    let stats = Client::new(addr).stats().expect("stats query");
     for key in ["queued", "active", "ticks", "admitted_total",
                 "shed_total", "downgraded_total", "cancelled_total",
                 "telemetry_dropped_events", "telemetry_enabled", "hist",
@@ -293,12 +292,12 @@ fn stats_and_trace_queries_answer_over_tcp() {
                 .as_f64().unwrap() >= 1.0,
             "TTFT histogram empty after a completed request: {stats}");
 
-    let prom = client_stats_prom(addr).expect("prometheus query");
+    let prom = Client::new(addr).stats_prom().expect("prometheus query");
     assert!(prom.contains("# TYPE specrouter_ttft_seconds summary"),
             "{prom}");
     assert!(prom.contains("specrouter_admitted_total"), "{prom}");
 
-    let trace = client_trace(addr).expect("trace query");
+    let trace = Client::new(addr).trace().expect("trace query");
     let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
     let names: Vec<&str> = events.iter()
         .filter_map(|e| e.opt("name").and_then(|n| n.as_str().ok()))
@@ -310,9 +309,45 @@ fn stats_and_trace_queries_answer_over_tcp() {
     assert!(names.contains(&"commit"), "no commit events: {names:?}");
 
     // control queries don't consume request ids or wedge the engine
-    let resp = client_request(addr, "gsm8k", &sim_prompt(), 4)
+    let resp = Client::new(addr).request("gsm8k", &sim_prompt(), 4)
         .expect("post-stats request");
     assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn control_grammar_legacy_and_tagged_agree() {
+    let (engine, addr) = sim_server(2);
+    // generate something first so the snapshots have content to disagree
+    // about if the two grammars ever route differently
+    let resp = Client::new(addr).request("gsm8k", &sim_prompt(), 6)
+        .expect("warm-up request");
+    assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
+
+    let query = |line: &str| -> String {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(s, "{line}").unwrap();
+        let mut reply = String::new();
+        BufReader::new(s).read_line(&mut reply).unwrap();
+        reply
+    };
+    // no traffic flows between the paired scrapes, so every snapshot is
+    // stable and the legacy spelling must answer byte-identically to its
+    // tagged replacement
+    for (legacy, tagged) in [
+        (r#"{"stats": true}"#, r#"{"control": "stats"}"#),
+        (r#"{"stats": "prometheus"}"#, r#"{"control": "prom"}"#),
+        (r#"{"trace": true}"#, r#"{"control": "trace"}"#),
+    ] {
+        assert_eq!(query(legacy), query(tagged),
+                   "legacy {legacy} and tagged {tagged} replies differ");
+    }
+    // an unknown control verb gets a structured error, not a hang
+    let err = query(r#"{"control": "reboot"}"#);
+    assert!(err.contains("error"), "{err}");
 
     engine.tx.send(EngineMsg::Shutdown).ok();
     engine.join.join().unwrap().unwrap();

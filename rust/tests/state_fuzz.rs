@@ -39,9 +39,11 @@ fn policy_for(seed: u64) -> GroupPolicy {
 }
 
 fn check_invariants(router: &ChainRouter, seed: u64, tick: usize) {
-    // committed frontiers per slot (None = free)
+    // per-slot frontier bound (None = free). `audit_frontier` is
+    // phase-aware: a Prefilling slot may have forwarded up to the whole
+    // prompt, a Decoding slot is bounded by C-1 (DESIGN.md §15).
     let frontiers: Vec<Option<usize>> = router.batcher.slots.iter()
-        .map(|s| s.as_ref().map(|s| s.committed.len().saturating_sub(1)))
+        .map(|s| s.as_ref().map(|s| s.audit_frontier()))
         .collect();
     router.states.check_frontiers(&frontiers).unwrap_or_else(|e| {
         panic!("seed {seed} tick {tick}: {e:#}");
@@ -70,6 +72,14 @@ fn random_traffic_preserves_state_invariants_every_tick() {
         cfg.replan_every = 1;
         cfg.explore_eps = 0.5;
         cfg.group_policy = policy_for(seed);
+        // odd seeds run admission through the chunked-prefill lanes with
+        // a tiny pinned chunk, so slots sit in `Prefilling` across many
+        // ticks while decode groups churn around them
+        if seed % 2 == 1 {
+            cfg.prefill.chunked = true;
+            cfg.prefill.min_chunk = 3;
+            cfg.prefill.max_chunk = 3;
+        }
         cfg.rule = if seed % 2 == 0 {
             AcceptRule::Greedy
         } else {
@@ -78,7 +88,7 @@ fn random_traffic_preserves_state_invariants_every_tick() {
         // CI re-runs the fuzz under the parallel tick
         // (SPECROUTER_WORKERS=4): every per-tick invariant must hold for
         // any worker count
-        cfg.apply_env_workers();
+        cfg.apply_env();
         let mut router = ChainRouter::with_backend(cfg, backend.clone())
             .expect("router");
 
@@ -165,15 +175,23 @@ fn paged_random_traffic_preserves_page_invariants_every_tick() {
         cfg.replan_every = 1;
         cfg.explore_eps = 0.5;
         cfg.group_policy = policy_for(seed);
-        cfg.paged = true;
+        cfg.paging.enabled = true;
         // small pages so rollback regularly crosses page boundaries
-        cfg.page_tokens = match seed % 3 { 0 => 1, 1 => 4, _ => 16 };
+        cfg.paging.page_tokens = match seed % 3 { 0 => 1, 1 => 4, _ => 16 };
+        // odd seeds interleave chunked prefill with paged decode: the
+        // register_prefix-at-completion path and COW adoption must keep
+        // every page refcount exact while chunks land
+        if seed % 2 == 1 {
+            cfg.prefill.chunked = true;
+            cfg.prefill.min_chunk = 3;
+            cfg.prefill.max_chunk = 3;
+        }
         cfg.rule = if seed % 2 == 0 {
             AcceptRule::Greedy
         } else {
             AcceptRule::Probabilistic { seed: 3 + seed }
         };
-        cfg.apply_env_workers();
+        cfg.apply_env();
         let mut router = ChainRouter::with_backend(cfg, backend.clone())
             .expect("router");
 
@@ -282,8 +300,9 @@ fn paged_output_token_identical_to_contiguous() {
                 window: 4,
             };
             cfg.fifo_admission = true;
-            cfg.paged = paged;
-            cfg.page_tokens = match seed % 3 { 0 => 1, 1 => 4, _ => 16 };
+            cfg.paging.enabled = paged;
+            cfg.paging.page_tokens =
+                match seed % 3 { 0 => 1, 1 => 4, _ => 16 };
             cfg.rule = if seed % 2 == 0 {
                 AcceptRule::Greedy
             } else {
@@ -361,10 +380,18 @@ fn faulted_traffic_preserves_state_invariants_every_tick() {
         // hits target verify calls (group failure), drafter calls
         // (degradation) and admission prefills (request failure or
         // degraded admit) alike
-        cfg.fault_rate = 0.25;
-        cfg.fault_seed = 0xC405 ^ seed;
-        cfg.fault_kinds = vec!["transient".into(), "corrupt".into()];
-        cfg.apply_env_workers();
+        cfg.faults.rate = 0.25;
+        cfg.faults.seed = 0xC405 ^ seed;
+        cfg.faults.kinds = vec!["transient".into(), "corrupt".into()];
+        // odd seeds also push admission through the chunked lanes so
+        // mid-prefill drafter/target faults (degrade vs fail_slot) leave
+        // the state layer clean too
+        if seed % 2 == 1 {
+            cfg.prefill.chunked = true;
+            cfg.prefill.min_chunk = 3;
+            cfg.prefill.max_chunk = 3;
+        }
+        cfg.apply_env();
         let mut router = ChainRouter::with_backend(cfg, backend.clone())
             .expect("router");
 

@@ -125,7 +125,7 @@ fn sim_cfg(telemetry: bool) -> EngineConfig {
     };
     c.group_policy = GroupPolicy::ByClass;
     c.telemetry = telemetry;
-    c.apply_env_workers();
+    c.apply_env();
     c
 }
 
