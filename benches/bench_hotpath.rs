@@ -475,6 +475,68 @@ fn run_full_tick(chain: Vec<String>, window: usize, batch: usize,
     })
 }
 
+/// ISSUE 10 satellite: the replica heartbeat line — `write_heartbeat`
+/// into the engine loop's reused `String`, the exact call every fleet
+/// probe round triggers — measured after real served traffic so the SLO
+/// counters, queue gauges and paged-stats summary it formats are all
+/// live. The buffer's capacity warms on the first (uncounted) call;
+/// after that a probe must allocate NOTHING, however fast the fleet
+/// router's cadence is. The row joins the greedy max-allocs gate and
+/// perf_gate pins it via `heartbeat_allocs_per_step` (exactly 0).
+fn run_heartbeat_row(measure: u64) -> Row {
+    let mut spec = SimSpec::small_pool();
+    spec.eos_prob = 0.0;
+    let backend = Arc::new(SimBackend::new(spec));
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = 4;
+    cfg.window = 4;
+    cfg.target = "m2".into();
+    cfg.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    cfg.rule = AcceptRule::Greedy;
+    let label = format!("heartbeat:{}", cfg.mode.label());
+    let mut router = ChainRouter::with_backend(cfg, backend)
+        .expect("sim router");
+    // served traffic first: the measured heartbeats report real SLO
+    // attainment and gauges, not a blank engine
+    for b in 0..4usize {
+        let id = router.submit(Request {
+            id: 0,
+            dataset: "gsm8k".into(),
+            prompt: vec![1, 100 + b as i32, 7],
+            max_new: 8,
+            arrival: Instant::now(),
+            class: SloClass::Standard,
+            slo_ms: None,
+            sample_seed: Some(17 ^ b as u64),
+        });
+        assert!(id.is_some(), "heartbeat-row submission shed");
+    }
+    router.run_until_idle(100_000).expect("heartbeat warm traffic");
+    router.drain_finished();
+
+    let mut buf = String::new();
+    router.write_heartbeat(&mut buf); // grows the buffer: uncounted
+    assert!(buf.contains("\"hb\""), "heartbeat line lost its envelope");
+    let (a0, b0) = (ALLOCS.load(Relaxed), BYTES.load(Relaxed));
+    let t0 = Instant::now();
+    for _ in 0..measure {
+        COUNTING.store(true, Relaxed);
+        router.write_heartbeat(&mut buf);
+        COUNTING.store(false, Relaxed);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = Measured {
+        tokens: 0,
+        elapsed,
+        allocs: ALLOCS.load(Relaxed) - a0,
+        bytes: BYTES.load(Relaxed) - b0,
+    };
+    row_from(label, "greedy", 4, measure, m)
+}
+
 /// ISSUE 5 headline rows: the heterogeneous 2-group scenario — 4
 /// interactive + 4 batch slots under `ByClass`, a 3-level w8 chain, a
 /// vocab large enough that per-group compute dominates scheduling — run
@@ -727,6 +789,12 @@ fn main() {
                             warmup, measure, false, true);
     push_row(&mut table, &row);
     rows.push(row);
+    // replica heartbeat (ISSUE 10): write_heartbeat into the engine
+    // loop's reused buffer — the fleet probe's data plane — pinned at
+    // zero steady-state allocs via heartbeat_allocs_per_step
+    let row = run_heartbeat_row(measure);
+    push_row(&mut table, &row);
+    rows.push(row);
     // parallel scatter/gather tick (ISSUE 5): workers 1/2/4 over the
     // 2-group heterogeneous scenario — 0 allocs/step at every count,
     // wall-clock speedup reported below and gated by perf_gate
@@ -851,7 +919,7 @@ fn main() {
         std::process::exit(1);
     }
     println!("OK: zero steady-state allocations on the greedy hot path \
-              (spec step, grouped step, full tick, and the parallel \
-              scatter/gather tick at workers 1/2/4 — telemetry \
-              recording throughout)");
+              (spec step, grouped step, full tick, the replica \
+              heartbeat line, and the parallel scatter/gather tick at \
+              workers 1/2/4 — telemetry recording throughout)");
 }

@@ -1,0 +1,153 @@
+//! Fleet-tier quickstart (DESIGN.md §16): three sim-backed replicas, a
+//! fleet router probing them with `{"control":"heartbeat"}`, sessions
+//! streaming through [`FleetClient`] with mid-stream failover, and a
+//! rolling drain — all in one process, no artifacts needed.
+//!
+//!   cargo run --release --example fleet_demo -- [n_sessions] \
+//!       [--stats-out stats.json]
+//!
+//! What to look for in the output:
+//!   - the lifecycle event log (`joined -> ready -> drain_started ->
+//!     drained`), which replays to the registry state bit-identically;
+//!   - session outcomes: `completed` vs `failed_over` (a session that
+//!     was re-landed mid-stream and still finished — never a shed);
+//!   - per-replica health rows with heartbeat age in probe ticks.
+//!
+//! The multi-process version of this topology (separate `replica_sim`
+//! processes, one killed mid-stream) is the `fleet` integration suite.
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use specrouter::config::{EngineConfig, FleetConfig, Mode};
+use specrouter::coordinator::{ChainRouter, SimBackend, SimSpec};
+use specrouter::fleet::{FleetClient, FleetRouter, Registry, ReplicaState};
+use specrouter::server::{serve_tcp, spawn_engine_with, EngineHandle};
+
+/// One in-process replica: engine thread + TCP front-end on an ephemeral
+/// port. Every replica shares `seed` — the sim token process depends only
+/// on the previous token, so identically-seeded replicas continue each
+/// other's streams bit-identically (what failover replay leans on).
+fn spawn_replica(seed: u64) -> Result<(EngineHandle, String)> {
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = 4;
+    cfg.window = 4;
+    cfg.target = "m2".into();
+    cfg.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    let mut spec = SimSpec::small_pool_seeded(seed, &[]);
+    spec.eos_prob = 0.0;
+    let engine = spawn_engine_with(move || {
+        ChainRouter::with_backend(cfg, Arc::new(SimBackend::new(spec)))
+    })?;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let tx = engine.tx.clone();
+    std::thread::spawn(move || {
+        serve_tcp("127.0.0.1:0", tx, Some(ready_tx)).ok();
+    });
+    let addr = ready_rx.recv().context("replica listener")?;
+    Ok((engine, addr.to_string()))
+}
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let stats_out = args.iter().position(|a| a == "--stats-out")
+        .map(|i| { let v = args.remove(i + 1); args.remove(i); v });
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let seed = 0xF1EE7u64;
+    println!("spawning 3 sim replicas (shared seed {seed:#x}) ...");
+    let replicas: Vec<(EngineHandle, String)> = (0..3)
+        .map(|_| spawn_replica(seed))
+        .collect::<Result<_>>()?;
+
+    let fcfg = FleetConfig {
+        probe_interval_ms: 25,
+        ..FleetConfig::default()
+    };
+    let fleet = FleetRouter::new(fcfg.clone())?;
+    for (_, addr) in &replicas {
+        fleet.add_replica(addr);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let probe = fleet.spawn_probe_loop(stop.clone());
+    let (ready_tx, ready_rx) = mpsc::channel();
+    {
+        let fleet = fleet.clone();
+        std::thread::spawn(move || {
+            fleet.serve("127.0.0.1:0", Some(ready_tx)).ok();
+        });
+    }
+    let router_addr = ready_rx.recv().context("fleet router listener")?;
+    println!("fleet router on {router_addr}, probing every \
+              {}ms ...", fcfg.probe_interval_ms);
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fleet.replicas().iter()
+        .filter(|r| r.state == ReplicaState::Ready).count() < 3 {
+        anyhow::ensure!(Instant::now() < deadline,
+                        "replicas never became Ready");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("all replicas Ready\n");
+
+    // sessions stream through the fleet client: router assignment,
+    // direct client<->replica token flow, watermark failover if needed
+    let fc = FleetClient::new(router_addr, &fcfg);
+    let prompt = vec![1, 70, 71, 72];
+    let mut first_tokens: Option<Vec<i32>> = None;
+    for i in 0..n {
+        // drain replica 0 halfway through: later sessions must land
+        // elsewhere, and anything in flight on it finishes first
+        if i == n / 2 {
+            println!("\n-- draining replica 0 mid-run --\n");
+            specrouter::server::Client::new(router_addr)
+                .rpc(r#"{"fleet":"drain","replica":0}"#)?;
+        }
+        let r = fc.generate("gsm8k", &prompt, 16, None)?;
+        println!("session {}: {} on replicas {:?} ({} tokens, \
+                  ttft {:.2} ms)",
+                 r.session, r.outcome, r.replicas, r.tokens.len(),
+                 r.ttft_ms);
+        match &first_tokens {
+            None => first_tokens = Some(r.tokens),
+            Some(t) => anyhow::ensure!(
+                *t == r.tokens,
+                "identical prompts on a shared seed must produce \
+                 identical tokens"),
+        }
+    }
+
+    // the registry's own story: the lifecycle log, and proof it replays
+    println!("\nlifecycle event log:");
+    for ev in fleet.events() {
+        println!("  seq {:>2} tick {:>3} replica {} {}",
+                 ev.seq, ev.tick, ev.replica, ev.kind.label());
+    }
+    let replayed = Registry::replay(fcfg.suspect_after, fcfg.down_after,
+                                    &fleet.events());
+    anyhow::ensure!(replayed.core() == fleet.registry_core(),
+                    "event-log replay diverged from the live registry");
+    println!("replay check: event log reconstructs the registry core \
+              bit-identically");
+
+    let stats = fleet.stats_json();
+    println!("\nfleet stats:\n{stats}");
+    if let Some(path) = stats_out {
+        std::fs::write(&path, format!("{stats}\n"))?;
+        println!("wrote fleet stats snapshot to {path}");
+    }
+
+    stop.store(true, Ordering::SeqCst);
+    probe.join().ok();
+    for (engine, addr) in replicas {
+        // replica 0 is already draining and will exit on its own; the
+        // rest get the drain verb now — nobody needs a kill
+        let _ = specrouter::server::Client::new(addr.parse()?).drain();
+        engine.join.join().expect("engine thread")?;
+    }
+    Ok(())
+}

@@ -3,6 +3,10 @@
 //! downstream user would run (`specrouter serve-tcp`) exercised end to end.
 //!
 //!   cargo run --release --example tcp_serving -- [n_clients]
+//!
+//! This is ONE engine; for the tier above it — several replicas behind
+//! the fleet router, with heartbeat health, mid-stream failover and
+//! rolling drains — see `examples/fleet_demo.rs` (DESIGN.md §16).
 use std::sync::mpsc;
 
 use anyhow::Result;

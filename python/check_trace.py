@@ -15,6 +15,12 @@ metadata record — one track per worker lane, with the plan/execute/
 gather phase spans present so the lane view reconstructs the parallel
 tick. The stats snapshot must expose the keys the dashboards scrape.
 
+The fleet-chaos CI step additionally validates the fleet router's own
+snapshot (the `{"fleet":"stats"}` reply, e.g. from
+`examples/fleet_demo.rs --stats-out`):
+
+    python3 python/check_trace.py --fleet fleet.json
+
 Stdlib only; exits non-zero with one line per violation.
 """
 import argparse
@@ -49,6 +55,9 @@ REQUIRED_STATS_KEYS = (
     # paged-KV telemetry (DESIGN.md §14): always present — `enabled`
     # false with zeroed counters when the contiguous layout is active
     "paging",
+    # fleet-tier replica block (DESIGN.md §16): the engine's own drain
+    # flag and heartbeat sequence counter
+    "fleet",
 )
 
 REQUIRED_FAULT_KEYS = ("observed", "degraded_steps", "failed_groups",
@@ -60,6 +69,20 @@ REQUIRED_PAGING_KEYS = ("enabled", "lookups", "hits_full", "hits_partial",
 
 REQUIRED_HIST_KEYS = ("ttft_ms", "tpot_ms", "queue_delay_ms",
                       "accept_len", "rollback_depth", "tick_ms")
+
+# the fleet router snapshot ({"fleet":"stats"} reply, DESIGN.md §16):
+# session/failover counters plus a per-replica health array
+REQUIRED_FLEET_COUNTER_KEYS = (
+    "sessions_active", "assigned_total", "completed_total",
+    "failed_over_total", "failovers_total", "shed_total",
+    "cancelled_total", "failed_total", "no_capacity_total",
+    "drains_total", "probes_total", "probe_failures_total",
+    "events_total", "registry_tick",
+)
+REQUIRED_FLEET_HEALTH_KEYS = ("replica", "addr", "state",
+                              "heartbeat_age_ticks", "misses", "queued",
+                              "active", "draining")
+FLEET_STATES = ("joining", "ready", "suspect", "down", "draining")
 
 
 def is_num(v):
@@ -182,6 +205,16 @@ def check_stats(path):
                           "the model pool")
     elif "health" in doc:
         errors.append("stats health must be an array")
+    # the engine's fleet block: its own drain flag plus the heartbeat
+    # sequence counter the fleet router's probes advance
+    fleet = doc.get("fleet")
+    if isinstance(fleet, dict):
+        if not isinstance(fleet.get("draining"), bool):
+            errors.append("stats fleet.draining missing or non-boolean")
+        if not is_num(fleet.get("heartbeats")):
+            errors.append("stats fleet.heartbeats missing or non-numeric")
+    elif "fleet" in doc:
+        errors.append("stats fleet must be an object")
     # a smoke run admits work, so the lifecycle counters must have moved
     if is_num(doc.get("admitted_total")) and doc["admitted_total"] <= 0:
         errors.append("admitted_total is 0 — the smoke replay recorded "
@@ -189,21 +222,73 @@ def check_stats(path):
     return errors
 
 
+def check_fleet(path):
+    """Validate a fleet router stats snapshot (DESIGN.md §16)."""
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        return ["fleet snapshot must be a JSON object"]
+    fleet = doc.get("fleet")
+    if not isinstance(fleet, dict):
+        return ["fleet snapshot needs a top-level fleet object"]
+    for key in REQUIRED_FLEET_COUNTER_KEYS:
+        if not is_num(fleet.get(key)):
+            errors.append(f"fleet.{key} missing or non-numeric")
+    ttft = fleet.get("ttft_ms")
+    if not isinstance(ttft, dict) or "count" not in ttft:
+        errors.append("fleet.ttft_ms missing or lacks count")
+    health = doc.get("health")
+    if not isinstance(health, list):
+        return errors + ["fleet snapshot needs a health array"]
+    if not health:
+        errors.append("fleet health is empty — the registry must cover "
+                      "the replica set")
+    for i, h in enumerate(health):
+        where = f"fleet health[{i}]"
+        if not isinstance(h, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        for key in REQUIRED_FLEET_HEALTH_KEYS:
+            if key not in h:
+                errors.append(f"{where} missing key {key!r}")
+        if not isinstance(h.get("addr", ""), str):
+            errors.append(f"{where}.addr must be a string")
+        if not isinstance(h.get("draining", False), bool):
+            errors.append(f"{where}.draining must be a boolean")
+        state = h.get("state")
+        if state is not None and state not in FLEET_STATES:
+            errors.append(f"{where}.state {state!r} not one of "
+                          f"{FLEET_STATES}")
+    return errors
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("trace", help="Perfetto/Chrome trace-event JSON file")
+    ap.add_argument("trace", nargs="?",
+                    help="Perfetto/Chrome trace-event JSON file")
     ap.add_argument("--stats", help="stats snapshot JSON to validate too")
+    ap.add_argument("--fleet", help="fleet router stats snapshot "
+                    "(the {\"fleet\":\"stats\"} reply) to validate")
     args = ap.parse_args()
+    if not (args.trace or args.stats or args.fleet):
+        ap.error("nothing to check: pass a trace, --stats, or --fleet")
 
-    errors = [f"trace: {e}" for e in check_trace(args.trace)]
+    errors = []
+    if args.trace:
+        errors += [f"trace: {e}" for e in check_trace(args.trace)]
     if args.stats:
         errors += [f"stats: {e}" for e in check_stats(args.stats)]
+    if args.fleet:
+        errors += [f"fleet: {e}" for e in check_fleet(args.fleet)]
     for e in errors:
         print(f"FAIL {e}", file=sys.stderr)
     if errors:
         sys.exit(1)
-    extra = " and stats snapshot" if args.stats else ""
-    print(f"OK: trace-event schema{extra} valid")
+    parts = [label for label, on in (("trace-event schema", args.trace),
+                                     ("stats snapshot", args.stats),
+                                     ("fleet snapshot", args.fleet)) if on]
+    print(f"OK: {' and '.join(parts)} valid")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,10 @@
 //!     `paged-lookup:` row: the full-engine tick with the paged KV
 //!     layout on, every state row resolved through the page tables
 //!     (ISSUE 8 / DESIGN.md §14). Baseline 0, exact.
+//!   * `heartbeat_allocs_per_step` — allocs/step of the hotpath
+//!     `heartbeat:` row: `write_heartbeat` into the engine loop's reused
+//!     buffer, the line every fleet probe round reads (ISSUE 10 /
+//!     DESIGN.md §16). Baseline 0, exact.
 //!   * `paged_prefix_miss_ratio` — prefix-index miss ratio of the
 //!     shared-prompt admission trace (4 prompts x 2 through a paged
 //!     FIFO router): exactly half the lookups must hit a resident
@@ -150,6 +154,21 @@ fn paged_lookup_allocs(v: &Value) -> Result<f64> {
     bail!("BENCH_hotpath.json has no paged-lookup row — stale artifact?")
 }
 
+/// Allocs/step of the replica-heartbeat row (ISSUE 10):
+/// `write_heartbeat` into a warmed reusable buffer after real served
+/// traffic — the fleet probe's per-round cost on the replica. A missing
+/// row is a stale artifact — hard error, same policy as the other
+/// prefix-bound rows.
+fn heartbeat_allocs(v: &Value) -> Result<f64> {
+    let rows = v.get("rows")?.as_arr()?;
+    for r in rows {
+        if r.get("chain")?.as_str()?.starts_with("heartbeat:") {
+            return r.get("allocs_per_step")?.as_f64();
+        }
+    }
+    bail!("BENCH_hotpath.json has no heartbeat row — stale artifact?")
+}
+
 /// Prefix-index miss ratio of the shared-prompt admission trace from the
 /// hotpath artifact's `paging` object (ISSUE 8). The trace is
 /// deterministic (fixed prompts, FIFO admission, sim backend), so the
@@ -206,6 +225,12 @@ fn gather(dir: &Path) -> Result<Vec<Check>> {
         Check {
             name: "paged_lookup_allocs_per_step",
             measured: paged_lookup_allocs(&hotpath)?,
+            baseline: f64::NAN,
+            tol_pct: f64::NAN,
+        },
+        Check {
+            name: "heartbeat_allocs_per_step",
+            measured: heartbeat_allocs(&hotpath)?,
             baseline: f64::NAN,
             tol_pct: f64::NAN,
         },
@@ -432,6 +457,17 @@ mod tests {
         assert!((paged_lookup_allocs(&paged).unwrap() - 0.375).abs()
                 < 1e-12);
         assert!(paged_lookup_allocs(&hot).is_err());
+        // the heartbeat row binds by chain-label prefix too: the fleet
+        // probe's zero-alloc contract must come from a fresh artifact
+        let hb = json::parse(
+            r#"{"rows":[
+                {"chain":"full-tick:x","rule":"greedy",
+                 "allocs_per_step":0.0},
+                {"chain":"heartbeat:x","rule":"greedy",
+                 "allocs_per_step":0.0625}]}"#).unwrap();
+        assert!((heartbeat_allocs(&hb).unwrap() - 0.0625).abs()
+                < 1e-12);
+        assert!(heartbeat_allocs(&hot).is_err());
         // the paging object carries the reuse-trace miss ratio
         let pg = json::parse(
             r#"{"paging":{"lookups":16,"hits_full":8,

@@ -1,0 +1,175 @@
+//! One fleet replica over the deterministic SimBackend (DESIGN.md §16):
+//! an engine thread plus the JSON-lines TCP front-end, with an optional
+//! per-call throttle so generation spans real wall time — which is what
+//! lets the fleet e2e kill a replica *mid-stream* instead of racing
+//! instant completions.
+//!
+//! ```text
+//! replica_sim --addr 127.0.0.1:0 --batch 4 --throttle-us 2000 --seed 7
+//! ```
+//!
+//! Prints exactly one `LISTENING <addr>` line on stdout once bound (the
+//! spawning test parses it), then serves until killed or drained: after
+//! `{"control":"drain"}` the engine finishes in-flight work, answers its
+//! final `draining: true` heartbeats, returns from the engine loop, and
+//! this process exits 0.
+//!
+//! Every replica in a fleet must share `--seed`: the sim backend's token
+//! process depends only on the previous token, so identically seeded
+//! replicas continue each other's streams bit-identically — the property
+//! mid-stream failover leans on.
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use specrouter::config::{EngineConfig, Mode};
+use specrouter::coordinator::{Backend, ChainRouter, PrefillState,
+                              SimBackend, SimSpec, StepSink};
+use specrouter::runtime::Manifest;
+use specrouter::server::{serve_tcp, spawn_engine_with};
+use specrouter::state::StateBuf;
+
+/// Delegates every data-plane call to the inner [`SimBackend`], adding a
+/// real sleep to the three hot-path calls (decode/draft/verify). Prefill
+/// and insert stay instant — admission should not eat the budget the
+/// throttle exists to create.
+struct Throttle {
+    inner: SimBackend,
+    pause: Duration,
+}
+
+impl Backend for Throttle {
+    fn manifest(&self) -> &Arc<Manifest> {
+        self.inner.manifest()
+    }
+
+    fn register(&self, model: &str) -> Result<()> {
+        self.inner.register(model)
+    }
+
+    fn state_is_inert(&self) -> bool {
+        self.inner.state_is_inert()
+    }
+
+    fn parallel_groups_safe(&self) -> bool {
+        self.inner.parallel_groups_safe()
+    }
+
+    fn supports_paged_kv(&self) -> bool {
+        self.inner.supports_paged_kv()
+    }
+
+    fn prefill(&self, sink: &mut dyn StepSink, model: &str, prompt: &[i32])
+               -> Result<(Vec<f32>, PrefillState)> {
+        self.inner.prefill(sink, model, prompt)
+    }
+
+    fn insert(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              state: &mut StateBuf, one: &PrefillState, slot: usize)
+              -> Result<()> {
+        self.inner.insert(sink, model, batch, state, one, slot)
+    }
+
+    fn decode(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              tokens: &[i32], state: &mut StateBuf, lens: &[i32],
+              out: &mut Vec<f32>) -> Result<()> {
+        std::thread::sleep(self.pause);
+        self.inner.decode(sink, model, batch, tokens, state, lens, out)
+    }
+
+    fn draft(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+             window: usize, tokens: &[i32], state: &mut StateBuf,
+             lens: &[i32], toks: &mut Vec<i32>, logits: &mut Vec<f32>)
+             -> Result<()> {
+        std::thread::sleep(self.pause);
+        self.inner.draft(sink, model, batch, window, tokens, state, lens,
+                         toks, logits)
+    }
+
+    fn verify(&self, sink: &mut dyn StepSink, model: &str, batch: usize,
+              window: usize, block: &[i32], state: &mut StateBuf,
+              lens: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        std::thread::sleep(self.pause);
+        self.inner.verify(sink, model, batch, window, block, state, lens,
+                          out)
+    }
+}
+
+struct Args {
+    addr: String,
+    batch: usize,
+    throttle_us: u64,
+    seed: u64,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        addr: "127.0.0.1:0".to_string(),
+        batch: 4,
+        throttle_us: 0,
+        seed: 0xF1EE7,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(flag) = it.next() {
+        let mut val = || it.next()
+            .with_context(|| format!("{flag} needs a value"));
+        match flag.as_str() {
+            "--addr" => args.addr = val()?,
+            "--batch" => args.batch = val()?.parse()
+                .context("--batch must be an integer")?,
+            "--throttle-us" => args.throttle_us = val()?.parse()
+                .context("--throttle-us must be an integer")?,
+            "--seed" => args.seed = val()?.parse()
+                .context("--seed must be an integer")?,
+            other => bail!("unknown flag {other:?} (expected --addr, \
+                            --batch, --throttle-us, --seed)"),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    let mut cfg = EngineConfig::new("sim://");
+    cfg.batch = args.batch;
+    cfg.window = 4;
+    cfg.target = "m2".into();
+    cfg.mode = Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    };
+    // honour the CI parity matrix (SPECROUTER_WORKERS etc.) — the sim
+    // backend declares concurrent group steps safe, so the fleet chaos
+    // suite runs under both the serial and the parallel tick
+    cfg.apply_env();
+    // eos_prob 0: streams run their full max_new, so a kill always lands
+    // mid-generation when the e2e wants it to
+    let mut spec = SimSpec::small_pool_seeded(args.seed, &[]);
+    spec.eos_prob = 0.0;
+    let pause = Duration::from_micros(args.throttle_us);
+    let engine = spawn_engine_with(move || {
+        ChainRouter::with_backend(cfg, Arc::new(Throttle {
+            inner: SimBackend::new(spec),
+            pause,
+        }))
+    })?;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let tx = engine.tx.clone();
+    let bind = args.addr.clone();
+    std::thread::spawn(move || {
+        if let Err(e) = serve_tcp(&bind, tx, Some(ready_tx)) {
+            eprintln!("replica listener error: {e:#}");
+            std::process::exit(1);
+        }
+    });
+    let bound = ready_rx.recv().context("listener never came up")?;
+    // the contract with the spawner: exactly this line, then serve
+    println!("LISTENING {bound}");
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    // exits cleanly when the engine loop returns (drain complete);
+    // killed replicas never get here
+    engine.join.join().expect("engine thread panicked")?;
+    Ok(())
+}

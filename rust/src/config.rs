@@ -1,16 +1,18 @@
 //! Engine configuration: every knob of the serving system in one place.
 //!
 //! Feature knobs are grouped into nested sub-configs ([`FaultConfig`],
-//! [`BreakerConfig`], [`PagingConfig`], [`PrefillConfig`]), each with a
-//! `Default` and its own validation, folded into the single
-//! [`EngineConfig::validate`] entry point. Environment overrides live in
-//! the single [`EngineConfig::apply_env`]. Programmatic construction can
-//! use the struct directly or the fluent [`EngineConfig::builder`].
+//! [`BreakerConfig`], [`PagingConfig`], [`PrefillConfig`],
+//! [`FleetConfig`]), each with a `Default` and its own validation, folded
+//! into the single [`EngineConfig::validate`] entry point. Environment
+//! overrides live in the single [`EngineConfig::apply_env`]. Programmatic
+//! construction can use the struct directly or the fluent
+//! [`EngineConfig::builder`].
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
 use crate::admission::SloTable;
+use crate::rng::splitmix;
 
 /// How tokens are accepted during verification (paper §2.2 step 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -294,6 +296,141 @@ impl PrefillConfig {
     }
 }
 
+/// Bounded-retry schedule for [`crate::server::Client`] connects and
+/// round trips (DESIGN.md §16): deterministic exponential backoff with
+/// splitmix-derived jitter — no wall-clock randomness, so a given
+/// `(seed, attempt)` always waits the same number of milliseconds.
+///
+/// The delay before retry `attempt` (1-based: attempt 1 follows the
+/// first failure) is `min(max_ms, base_ms * mult^(attempt-1))`, shrunk
+/// by up to `jitter` of itself by the splitmix stream — jitter spreads
+/// retries *earlier*, never past the deterministic ceiling, so the
+/// worst-case wait is still the un-jittered schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryConfig {
+    /// Total tries (the first attempt included). `1` = no retry.
+    pub attempts: u32,
+    /// Delay before the first retry, in milliseconds.
+    pub base_ms: u64,
+    /// Backoff multiplier per successive retry.
+    pub mult: f64,
+    /// Delay ceiling in milliseconds.
+    pub max_ms: u64,
+    /// Fraction of each delay eligible for jitter, in `[0, 1]`.
+    pub jitter: f64,
+    /// Seed of the splitmix jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            attempts: 4,
+            base_ms: 20,
+            mult: 2.0,
+            max_ms: 1_000,
+            jitter: 0.5,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl RetryConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.attempts < 1 {
+            bail!("retry attempts must be >= 1 (1 = no retry)");
+        }
+        if self.base_ms < 1 || self.max_ms < self.base_ms {
+            bail!("retry delays must satisfy 1 <= base_ms <= max_ms");
+        }
+        if !self.mult.is_finite() || self.mult < 1.0 {
+            bail!("retry mult must be a finite number >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.jitter) || !self.jitter.is_finite() {
+            bail!("retry jitter must be in [0, 1]");
+        }
+        Ok(())
+    }
+
+    /// Milliseconds to wait before 1-based retry `attempt`. Pure function
+    /// of `(self, attempt)` — the backoff-schedule unit tests pin it.
+    pub fn delay_ms(&self, attempt: u32) -> u64 {
+        let exp = attempt.saturating_sub(1).min(63);
+        let raw = (self.base_ms as f64 * self.mult.powi(exp as i32))
+            .min(self.max_ms as f64);
+        // 53 uniform bits → unit interval, splitmix-derived per attempt
+        let unit = (splitmix(self.seed ^ attempt as u64) >> 11) as f64
+            / (1u64 << 53) as f64;
+        (raw - raw * self.jitter * unit).round() as u64
+    }
+}
+
+/// Fleet-tier knobs (DESIGN.md §16), nested under
+/// [`EngineConfig::fleet`]: the replica registry's heartbeat/suspicion
+/// deadlines, the fleet router's assignment scoring, and the client
+/// failover budget. Suspicion is counted in *probe ticks* (missed
+/// heartbeat rounds), never wall-clock samples, so registry histories
+/// replay deterministically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Milliseconds between heartbeat probe rounds.
+    pub probe_interval_ms: u64,
+    /// Consecutive missed probes before `Ready -> Suspect`.
+    pub suspect_after: u32,
+    /// Consecutive missed probes before `Suspect -> Down`.
+    pub down_after: u32,
+    /// Mid-stream re-lands a single session may consume before the
+    /// fleet client gives up (`0` = never fail over).
+    pub max_failovers: u32,
+    /// Load-score credit for the Ready replica that last served a
+    /// session's prefix key (ties assignment to the §14 prefix index:
+    /// landing on the same replica re-uses its resident KV pages).
+    pub affinity_bonus: f64,
+    /// Sticky prefix-key map capacity; the map is flushed wholesale when
+    /// it would exceed this (same policy as the prefix index — bounded
+    /// memory, deterministic).
+    pub affinity_cap: usize,
+    /// Retry schedule for replica/router connections.
+    pub retry: RetryConfig,
+    /// Seed for probe-pacing jitter (splitmix; no wall-clock entropy).
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            probe_interval_ms: 50,
+            suspect_after: 2,
+            down_after: 5,
+            max_failovers: 3,
+            affinity_bonus: 1.5,
+            affinity_cap: 4096,
+            retry: RetryConfig::default(),
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.probe_interval_ms < 1 {
+            bail!("fleet probe_interval_ms must be >= 1");
+        }
+        if self.suspect_after < 1 || self.down_after < self.suspect_after {
+            bail!("fleet suspicion must satisfy \
+                   1 <= suspect_after <= down_after");
+        }
+        if !self.affinity_bonus.is_finite() || self.affinity_bonus < 0.0 {
+            bail!("fleet affinity_bonus must be finite and >= 0");
+        }
+        if self.affinity_cap < 1 {
+            bail!("fleet affinity_cap must be >= 1");
+        }
+        self.retry.validate()?;
+        Ok(())
+    }
+}
+
 /// Full engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -366,6 +503,9 @@ pub struct EngineConfig {
     pub paging: PagingConfig,
     /// Chunked, headroom-paced prefill (DESIGN.md §15).
     pub prefill: PrefillConfig,
+    /// Fleet tier: registry deadlines, assignment scoring, failover
+    /// budget (DESIGN.md §16).
+    pub fleet: FleetConfig,
 }
 
 impl EngineConfig {
@@ -396,6 +536,7 @@ impl EngineConfig {
             breaker: BreakerConfig::default(),
             paging: PagingConfig::default(),
             prefill: PrefillConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 
@@ -421,8 +562,9 @@ impl EngineConfig {
     /// lane count), `SPECROUTER_FAULT_RATE`, `SPECROUTER_FAULT_SEED`,
     /// `SPECROUTER_FAULT_MODELS` (comma-separated),
     /// `SPECROUTER_FAULT_KINDS` (comma-separated),
-    /// `SPECROUTER_FAULT_MAX`, `SPECROUTER_FAULT_SPIKE_MS` and
-    /// `SPECROUTER_CALL_DEADLINE_MS`.
+    /// `SPECROUTER_FAULT_MAX`, `SPECROUTER_FAULT_SPIKE_MS`,
+    /// `SPECROUTER_CALL_DEADLINE_MS`, `SPECROUTER_FLEET_PROBE_MS` and
+    /// `SPECROUTER_FLEET_MAX_FAILOVERS`.
     pub fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("SPECROUTER_WORKERS") {
             if let Ok(n) = v.parse::<usize>() {
@@ -468,6 +610,18 @@ impl EngineConfig {
         if let Ok(v) = std::env::var("SPECROUTER_CALL_DEADLINE_MS") {
             if let Ok(n) = v.parse::<u64>() {
                 self.faults.call_deadline_ms = n;
+            }
+        }
+        if let Ok(v) = std::env::var("SPECROUTER_FLEET_PROBE_MS") {
+            if let Ok(n) = v.parse::<u64>() {
+                if n >= 1 {
+                    self.fleet.probe_interval_ms = n;
+                }
+            }
+        }
+        if let Ok(v) = std::env::var("SPECROUTER_FLEET_MAX_FAILOVERS") {
+            if let Ok(n) = v.parse::<u32>() {
+                self.fleet.max_failovers = n;
             }
         }
     }
@@ -524,6 +678,7 @@ impl EngineConfig {
         self.prefill.validate()?;
         self.faults.validate()?;
         self.breaker.validate()?;
+        self.fleet.validate()?;
         self.slo_classes.validate()?;
         Ok(())
     }
@@ -631,6 +786,11 @@ impl EngineConfigBuilder {
 
     pub fn prefill(mut self, prefill: PrefillConfig) -> Self {
         self.cfg.prefill = prefill;
+        self
+    }
+
+    pub fn fleet(mut self, fleet: FleetConfig) -> Self {
+        self.cfg.fleet = fleet;
         self
     }
 
@@ -793,6 +953,8 @@ mod tests {
             .paging(PagingConfig { enabled: true, page_tokens: 8 })
             .prefill(PrefillConfig { chunked: true,
                                      ..PrefillConfig::default() })
+            .fleet(FleetConfig { max_failovers: 9,
+                                 ..FleetConfig::default() })
             .build();
         let mut lit = EngineConfig::new("/tmp/a");
         lit.batch = 8;
@@ -813,9 +975,84 @@ mod tests {
         lit.breaker.trip_after = 5;
         lit.paging = PagingConfig { enabled: true, page_tokens: 8 };
         lit.prefill.chunked = true;
+        lit.fleet.max_failovers = 9;
         // Debug output covers every field of every nested sub-config, so
         // string equality is field-for-field equality.
         assert_eq!(format!("{built:?}"), format!("{lit:?}"));
+    }
+
+    #[test]
+    fn validation_covers_fleet_and_retry_knobs() {
+        let batches = [1, 4, 8];
+        let windows = [4, 8];
+        let mut c = EngineConfig::new("/tmp/a");
+        assert!(c.validate(&batches, &windows).is_ok());
+        c.fleet.probe_interval_ms = 0;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.probe_interval_ms = 50;
+        c.fleet.suspect_after = 0;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.suspect_after = 4;
+        c.fleet.down_after = 2; // below suspect_after
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.down_after = 6;
+        c.fleet.affinity_bonus = f64::NAN;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.affinity_bonus = 1.0;
+        c.fleet.affinity_cap = 0;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.affinity_cap = 64;
+        c.fleet.retry.attempts = 0;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.retry.attempts = 3;
+        c.fleet.retry.mult = 0.5;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.retry.mult = 2.0;
+        c.fleet.retry.jitter = 1.5;
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.retry.jitter = 0.5;
+        c.fleet.retry.max_ms = 1; // below base_ms
+        assert!(c.validate(&batches, &windows).is_err());
+        c.fleet.retry.max_ms = 1_000;
+        assert!(c.validate(&batches, &windows).is_ok());
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_capped_and_jitter_bounded() {
+        let r = RetryConfig {
+            attempts: 8,
+            base_ms: 20,
+            mult: 2.0,
+            max_ms: 300,
+            jitter: 0.5,
+            seed: 0xD1CE,
+        };
+        // deterministic: the same (seed, attempt) always waits the same
+        let a: Vec<u64> = (1..8).map(|i| r.delay_ms(i)).collect();
+        let b: Vec<u64> = (1..8).map(|i| r.delay_ms(i)).collect();
+        assert_eq!(a, b);
+        // every delay sits inside the jitter band of its raw value, and
+        // the raw schedule doubles until the cap
+        for (i, &d) in a.iter().enumerate() {
+            let raw = (20.0 * 2f64.powi(i as i32)).min(300.0);
+            let lo = (raw * (1.0 - r.jitter)).floor() as u64;
+            let hi = raw.ceil() as u64;
+            assert!(d >= lo && d <= hi,
+                    "attempt {}: {d}ms outside [{lo}, {hi}]", i + 1);
+        }
+        // capped: far-out attempts never exceed max_ms
+        assert!(r.delay_ms(40) <= 300);
+        assert!(r.delay_ms(u32::MAX) <= 300);
+        // a different seed reshuffles the jitter, not the ceiling
+        let r2 = RetryConfig { seed: 0xBEEF, ..r };
+        assert!(r2.delay_ms(3) <= r.delay_ms(3).max(r2.delay_ms(3)));
+        // zero jitter degenerates to the pure exponential schedule
+        let pure = RetryConfig { jitter: 0.0, ..r };
+        assert_eq!(pure.delay_ms(1), 20);
+        assert_eq!(pure.delay_ms(2), 40);
+        assert_eq!(pure.delay_ms(3), 80);
+        assert_eq!(pure.delay_ms(5), 300);
+        assert_eq!(pure.delay_ms(7), 300);
     }
 
     #[test]

@@ -276,6 +276,28 @@ pub struct ChainRouter {
     pub tel: Telemetry,
     pub steps: u64,
     next_id: u64,
+    /// Drain mode (DESIGN.md §16): set by the `{"control":"drain"}` verb.
+    /// The engine loop stops admitting while this is up and exits once
+    /// in-flight slots finish; heartbeats advertise it so the fleet
+    /// registry can move the replica `Draining -> Down` cleanly.
+    draining: bool,
+    /// Heartbeat lines served (doubles as the heartbeat sequence number).
+    heartbeats: u64,
+    /// Per-class SLO attainment, indexed like [`SloClass::ALL`]: clean
+    /// completions at or before their deadline (`slo_ok`) vs late
+    /// (`slo_late`). Error-terminated requests count in neither — they
+    /// carry a structured error instead of a latency verdict.
+    slo_ok: [u64; 3],
+    slo_late: [u64; 3],
+}
+
+/// Index of a class in [`SloClass::ALL`] (per-class counter arrays).
+fn class_idx(c: SloClass) -> usize {
+    match c {
+        SloClass::Interactive => 0,
+        SloClass::Standard => 1,
+        SloClass::Batch => 2,
+    }
 }
 
 impl ChainRouter {
@@ -433,6 +455,10 @@ impl ChainRouter {
             tel,
             steps: 0,
             next_id: 1,
+            draining: false,
+            heartbeats: 0,
+            slo_ok: [0; 3],
+            slo_late: [0; 3],
             cfg,
             manifest,
         };
@@ -1844,6 +1870,63 @@ impl ChainRouter {
             .collect()
     }
 
+    /// Enter (or leave) drain mode. Idempotent: the engine loop calls it
+    /// on every `{"control":"drain"}` and the second call is a no-op.
+    pub fn set_draining(&mut self, on: bool) {
+        self.draining = on;
+    }
+
+    /// Whether the router is draining (refusing new admissions).
+    pub fn draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Heartbeat lines served so far.
+    pub fn heartbeats(&self) -> u64 {
+        self.heartbeats
+    }
+
+    /// Per-class (attained, late) SLO completion counts, indexed like
+    /// [`SloClass::ALL`].
+    pub fn slo_attainment(&self) -> ([u64; 3], [u64; 3]) {
+        (self.slo_ok, self.slo_late)
+    }
+
+    /// Format one heartbeat line into `buf` (cleared first) and bump the
+    /// heartbeat sequence number. This is the replica half of the fleet
+    /// control plane (DESIGN.md §16): a flat JSON object carrying the
+    /// queue/slot gauges, per-class SLO attainment and the prefix-cache
+    /// summary the fleet router scores assignments with.
+    ///
+    /// Steady-state zero-alloc by design — integer/bool formatting into a
+    /// caller-owned `String` whose capacity warms on the first call — so
+    /// a fast probe cadence never pressures the allocator mid-tick
+    /// (`heartbeat_allocs_per_step` in `benches/baselines.json` pins
+    /// this; the engine loop reuses one buffer across probes).
+    pub fn write_heartbeat(&mut self, buf: &mut String) {
+        use std::fmt::Write as _;
+        self.heartbeats += 1;
+        let ps = self.states.paged_stats();
+        buf.clear();
+        let _ = write!(
+            buf,
+            "{{\"hb\":{{\"seq\":{},\"tick\":{},\"queued\":{},\
+             \"active\":{},\"draining\":{}",
+            self.heartbeats, self.steps, self.batcher.queued(),
+            self.batcher.active(), self.draining);
+        for (i, class) in SloClass::ALL.iter().enumerate() {
+            let _ = write!(
+                buf, ",\"ok_{}\":{},\"late_{}\":{}",
+                class.name(), self.slo_ok[i],
+                class.name(), self.slo_late[i]);
+        }
+        let _ = write!(
+            buf,
+            ",\"prefix_lookups\":{},\"prefix_hits_full\":{},\
+             \"pages_live\":{}}}}}",
+            ps.lookups, ps.hits_full, ps.pages_live);
+    }
+
     /// The server `stats` reply: the telemetry snapshot (histograms +
     /// dropped-events counter) merged with the router's queue/admission
     /// counters. CI's telemetry-smoke step asserts the top-level keys.
@@ -1905,16 +1988,25 @@ impl ChainRouter {
         ]));
         let class_counters: Vec<Value> = SloClass::ALL
             .iter()
-            .map(|&class| {
+            .enumerate()
+            .map(|(i, &class)| {
                 json::obj(vec![
                     ("class", json::s(class.name())),
                     ("shed", json::num(adm.shed_by_class(class) as f64)),
                     ("cancelled",
                      json::num(adm.cancelled_by_class(class) as f64)),
+                    ("attained", json::num(self.slo_ok[i] as f64)),
+                    ("late", json::num(self.slo_late[i] as f64)),
                 ])
             })
             .collect();
         m.insert("class_counters".to_string(), Value::Arr(class_counters));
+        // fleet-tier view of this replica (DESIGN.md §16) — always
+        // present so check_trace and dashboards need no probing
+        m.insert("fleet".to_string(), json::obj(vec![
+            ("draining", Value::Bool(self.draining)),
+            ("heartbeats", json::num(self.heartbeats as f64)),
+        ]));
         Value::Obj(m)
     }
 
@@ -1943,6 +2035,10 @@ impl ChainRouter {
                       value: self.tel.failed_requests as f64 },
             Counter { name: "specrouter_breaker_trips_total", labels: &[],
                       value: self.tel.breaker_trips as f64 },
+            Counter { name: "specrouter_heartbeats_total", labels: &[],
+                      value: self.heartbeats as f64 },
+            Counter { name: "specrouter_draining", labels: &[],
+                      value: if self.draining { 1.0 } else { 0.0 } },
         ];
         let ps = self.states.paged_stats();
         counters.extend([
@@ -1975,6 +2071,16 @@ impl ChainRouter {
                 labels: &class_labels[i],
                 value: adm.cancelled_by_class(class) as f64,
             });
+            counters.push(Counter {
+                name: "specrouter_slo_attained_total",
+                labels: &class_labels[i],
+                value: self.slo_ok[i] as f64,
+            });
+            counters.push(Counter {
+                name: "specrouter_slo_late_total",
+                labels: &class_labels[i],
+                value: self.slo_late[i] as f64,
+            });
         }
         render(&self.tel, &counters)
     }
@@ -1989,6 +2095,15 @@ impl ChainRouter {
         let Some(slot) = self.batcher.free(slot_idx) else { return };
         self.states.clear_slot(slot_idx);
         let completed = Instant::now();
+        // per-class SLO attainment (DESIGN.md §16): a clean completion is
+        // attained iff it lands at or before the slot's deadline. Cancels
+        // never reach here and failed slots go through fail_slot — neither
+        // counts, mirroring the shed-accounting principle (§6).
+        if completed <= slot.deadline {
+            self.slo_ok[class_idx(slot.class)] += 1;
+        } else {
+            self.slo_late[class_idx(slot.class)] += 1;
+        }
         let ntok = slot.generated().len();
         if ntok >= 2 {
             // feed the observed per-token service time back into the

@@ -1,0 +1,342 @@
+//! The fleet session client (DESIGN.md §16): ask the router for an
+//! assignment, stream from the replica directly, and on mid-stream death
+//! re-land the session elsewhere, replayed from the committed-token
+//! watermark.
+//!
+//! The watermark lives HERE — the client is the only party that knows
+//! exactly which tokens it has received — so failover recovery needs no
+//! replica-to-replica state transfer: the continuation request simply
+//! carries `prompt ++ committed` as its prompt and asks for the remaining
+//! budget. Under the sim backend's Markov token process (next token
+//! depends only on the previous one) the re-landed stream is
+//! bit-identical to the uninterrupted one; the fleet e2e pins this.
+//!
+//! TTFT is measured once, from the original session start to the first
+//! token *ever* received — a failover never resets it, so a re-landed
+//! session reports honest (worse) latency instead of a fresh replica's
+//! flattering one.
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{FleetConfig, RetryConfig};
+use crate::json::{self, Value};
+use crate::server::{is_terminal_frame, Client};
+
+/// Outcome of one fleet session, as the router recorded it.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    /// Router-assigned session id.
+    pub session: u64,
+    /// Every generated token, across all re-lands, in commit order.
+    pub tokens: Vec<i32>,
+    /// How many times the session was re-landed (0 = never failed over).
+    pub failovers: u32,
+    /// The replicas that served this session, in assignment order.
+    pub replicas: Vec<u64>,
+    /// The router's recorded outcome label: `completed`, `failed_over`,
+    /// `shed`, or `failed`.
+    pub outcome: String,
+    /// First-token latency from the *original* session start, ms.
+    pub ttft_ms: f64,
+    /// Whether generation terminated on EOS.
+    pub eos: bool,
+}
+
+/// Session-side fleet client: one `generate` call = one session, however
+/// many replicas end up serving it.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetClient {
+    router: SocketAddr,
+    retry: RetryConfig,
+    max_failovers: u32,
+    connect_timeout: Duration,
+    read_timeout: Duration,
+}
+
+impl FleetClient {
+    pub fn new(router: SocketAddr, cfg: &FleetConfig) -> Self {
+        FleetClient {
+            router,
+            retry: cfg.retry,
+            max_failovers: cfg.max_failovers,
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+
+    /// Override the per-connection budgets (both router and replica).
+    pub fn timeouts(mut self, connect: Duration, read: Duration) -> Self {
+        self.connect_timeout = connect;
+        self.read_timeout = read;
+        self
+    }
+
+    fn router_client(&self) -> Client {
+        Client::new(self.router)
+            .retry(self.retry)
+            .connect_timeout(self.connect_timeout)
+            .read_timeout(self.read_timeout)
+    }
+
+    fn replica_client(&self, addr: &str) -> Result<Client> {
+        let sock: SocketAddr = addr.parse()
+            .with_context(|| format!("replica addr {addr:?}"))?;
+        // deliberately retry-free: a replica that stops answering is a
+        // failover signal the fleet loop must see, not retry through
+        Ok(Client::new(sock)
+            .connect_timeout(self.connect_timeout)
+            .read_timeout(self.read_timeout))
+    }
+
+    /// One router control round trip.
+    fn router_rpc(&self, line: &str) -> Result<Value> {
+        self.router_client().rpc(line)
+    }
+
+    /// Ask the router for a (re)assignment; `line` is the pre-serialized
+    /// verb. Waits out transient `no_ready_replica` windows (e.g. every
+    /// replica momentarily Suspect during a kill) under the retry
+    /// schedule, resending with `kind: "retry"` so the session is not
+    /// charged extra failovers for the router's own recovery lag.
+    fn assignment(&self, first: String, again: Option<String>)
+                  -> Result<(Value, bool)> {
+        let mut line = first;
+        for attempt in 1..=self.retry.attempts {
+            let v = self.router_rpc(&line)?;
+            match v.opt("rejected").map(|r| r.as_str()).transpose()? {
+                None => return Ok((v, false)),
+                Some("no_ready_replica") => {
+                    if let Some(retry_line) = &again {
+                        line = retry_line.clone();
+                    }
+                    if attempt < self.retry.attempts {
+                        std::thread::sleep(Duration::from_millis(
+                            self.retry.delay_ms(attempt)));
+                    }
+                }
+                Some(other) => {
+                    // budget exhausted (or an unknown refusal): terminal
+                    let budget = other == "failover_budget";
+                    return Ok((v, budget));
+                }
+            }
+        }
+        bail!("{} assignment attempts exhausted (no ready replica)",
+              self.retry.attempts)
+    }
+
+    /// Run one session to completion; see [`FleetClient::generate_with`].
+    pub fn generate(&self, dataset: &str, prompt: &[i32], max_new: usize,
+                    sample_seed: Option<u64>) -> Result<FleetResult> {
+        self.generate_with(dataset, prompt, max_new, sample_seed,
+                           |_, _| {})
+    }
+
+    /// Run one session to completion, calling `on_token(index, token)`
+    /// per committed token (the fleet e2e uses this to know when streams
+    /// are mid-flight before killing a replica). Handles assignment,
+    /// streaming, mid-stream failover with watermark replay, and the
+    /// final outcome report to the router.
+    pub fn generate_with(&self, dataset: &str, prompt: &[i32],
+                         max_new: usize, sample_seed: Option<u64>,
+                         mut on_token: impl FnMut(usize, i32))
+                         -> Result<FleetResult> {
+        let start = Instant::now();
+        let key = super::prefix_key(prompt);
+        let assign = json::obj(vec![
+            ("fleet", json::s("assign")),
+            ("prefix_key", json::num(key as f64)),
+        ]).to_string();
+        let (first, _) = self.assignment(assign, None)?;
+        if let Some(r) = first.opt("rejected") {
+            bail!("fleet admission rejected: {r}");
+        }
+        let session = first.get("session")?.as_f64()? as u64;
+        let mut replica = first.get("replica")?.as_f64()? as u64;
+        let mut addr = first.get("addr")?.as_str()?.to_string();
+
+        let mut committed: Vec<i32> = Vec::new();
+        let mut replicas = vec![replica];
+        let mut failovers = 0u32;
+        let mut ttft_ms: Option<f64> = None;
+        let mut eos = false;
+        let mut full_prompt = prompt.to_vec();
+
+        // per-re-land attempt loop; each iteration streams from the
+        // current assignment until a terminal frame or a failure
+        let status = 'session: loop {
+            full_prompt.truncate(prompt.len());
+            full_prompt.extend_from_slice(&committed);
+            let remaining = max_new - committed.len();
+            let base = committed.len();
+            // kind of the failure that ends this attempt, if any
+            let fail_kind: &str;
+            match self.stream_attempt(&addr, dataset, &full_prompt,
+                                      remaining, sample_seed) {
+                Ok(attempt) => {
+                    for (i, &t) in attempt.tokens.iter().enumerate() {
+                        if ttft_ms.is_none() {
+                            ttft_ms = Some(start.elapsed()
+                                           .as_secs_f64() * 1e3);
+                        }
+                        committed.push(t);
+                        on_token(base + i, t);
+                    }
+                    match attempt.end {
+                        AttemptEnd::Done { eos: e, error } => {
+                            if let Some(e) = error {
+                                log::warn!("session {session} ended with \
+                                            engine error: {e}");
+                                break 'session "failed";
+                            }
+                            eos = e;
+                            break 'session "done";
+                        }
+                        AttemptEnd::Shed if committed.is_empty() => {
+                            // never produced anything anywhere: a real
+                            // shed, reported as such
+                            break 'session "shed";
+                        }
+                        AttemptEnd::Shed => fail_kind = "busy",
+                        AttemptEnd::Draining => fail_kind = "draining",
+                        AttemptEnd::Died => fail_kind = "died",
+                    }
+                }
+                // connect/write failure: the replica is unreachable
+                Err(e) => {
+                    log::debug!("session {session} lost replica \
+                                 {replica}@{addr}: {e:#}");
+                    fail_kind = "died";
+                }
+            }
+            if committed.len() >= max_new {
+                // the replica died between its last token and the `done`
+                // frame: the watermark already holds the full budget, so
+                // there is nothing to replay
+                break 'session "done";
+            }
+            failovers += 1;
+            if failovers > self.max_failovers {
+                break 'session "failed";
+            }
+            let failed = json::obj(vec![
+                ("fleet", json::s("failed")),
+                ("session", json::num(session as f64)),
+                ("kind", json::s(fail_kind)),
+            ]).to_string();
+            let retry_line = json::obj(vec![
+                ("fleet", json::s("failed")),
+                ("session", json::num(session as f64)),
+                ("kind", json::s("retry")),
+            ]).to_string();
+            let (v, terminal) =
+                self.assignment(failed, Some(retry_line))?;
+            if terminal || v.opt("rejected").is_some() {
+                break 'session "failed";
+            }
+            replica = v.get("replica")?.as_f64()? as u64;
+            addr = v.get("addr")?.as_str()?.to_string();
+            replicas.push(replica);
+        };
+
+        let mut done = vec![
+            ("fleet", json::s("done")),
+            ("session", json::num(session as f64)),
+            ("status", json::s(status)),
+        ];
+        if let Some(t) = ttft_ms {
+            done.push(("ttft_ms", json::num(t)));
+        }
+        let closed = self.router_rpc(&json::obj(done).to_string())?;
+        let outcome = closed.get("outcome")?.as_str()?.to_string();
+        Ok(FleetResult {
+            session,
+            tokens: committed,
+            failovers,
+            replicas,
+            outcome,
+            ttft_ms: ttft_ms.unwrap_or(f64::NAN),
+            eos,
+        })
+    }
+
+    /// Stream one request from `addr` until a terminal frame, EOF, or a
+    /// read error. Tokens received before the failure are returned either
+    /// way — they advance the watermark.
+    fn stream_attempt(&self, addr: &str, dataset: &str, prompt: &[i32],
+                      max_new: usize, sample_seed: Option<u64>)
+                      -> Result<Attempt> {
+        let client = self.replica_client(addr)?;
+        let mut handle = client.start_stream(
+            dataset, prompt, max_new, None, None, sample_seed)?;
+        let mut tokens = Vec::new();
+        loop {
+            let frame = match handle.next_frame() {
+                Ok(Some(v)) => v,
+                // clean EOF or read error mid-stream: the replica died
+                // (or was killed) — partial progress still counts
+                Ok(None) => {
+                    return Ok(Attempt { tokens, end: AttemptEnd::Died });
+                }
+                Err(e) => {
+                    log::debug!("stream from {addr} broke: {e:#}");
+                    return Ok(Attempt { tokens, end: AttemptEnd::Died });
+                }
+            };
+            if !is_terminal_frame(&frame) {
+                // token frame; index is its position within THIS stream
+                let idx = frame.get("index")?.as_usize()?;
+                if idx != tokens.len() {
+                    bail!("stream from {addr} skipped: frame index {idx}, \
+                           expected {}", tokens.len());
+                }
+                tokens.push(frame.get("token")?.as_f64()? as i32);
+                continue;
+            }
+            let end = match frame.opt("event")
+                .and_then(|e| e.as_str().ok()) {
+                Some("done") => AttemptEnd::Done {
+                    eos: matches!(frame.opt("eos"),
+                                  Some(Value::Bool(true))),
+                    error: frame.opt("error")
+                        .and_then(|e| e.as_str().ok())
+                        .map(str::to_string),
+                },
+                Some("shed") => AttemptEnd::Shed,
+                // bare error object: a draining refusal, or an engine
+                // error surfaced as the terminal frame
+                _ => {
+                    let draining = frame.opt("rejected")
+                        .and_then(|r| r.as_str().ok())
+                        .is_some_and(|r| r == "draining");
+                    if draining {
+                        AttemptEnd::Draining
+                    } else {
+                        AttemptEnd::Died
+                    }
+                }
+            };
+            return Ok(Attempt { tokens, end });
+        }
+    }
+}
+
+/// What one streaming attempt produced.
+struct Attempt {
+    tokens: Vec<i32>,
+    end: AttemptEnd,
+}
+
+enum AttemptEnd {
+    /// Terminal `done` frame (possibly carrying a contained engine
+    /// error).
+    Done { eos: bool, error: Option<String> },
+    /// Terminal `shed` frame.
+    Shed,
+    /// Draining refusal.
+    Draining,
+    /// Connection died mid-stream (EOF, reset, timeout).
+    Died,
+}

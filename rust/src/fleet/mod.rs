@@ -1,0 +1,53 @@
+//! Fleet tier (DESIGN.md §16): multi-replica serving on top of the
+//! single-engine TCP control plane.
+//!
+//! Three pieces, strictly off the token hot path:
+//!
+//! * [`registry`] — the replica membership + health state machine
+//!   (`Joining -> Ready -> Suspect -> Down`, with `Draining` for rolling
+//!   replacement), driven by pull-based heartbeats and recorded as an
+//!   append-only lifecycle event log with monotone sequence numbers.
+//!   Replaying the log reconstructs the registry's event-sourced core
+//!   bit-identically — transitions happen *only* by applying events, so
+//!   reconciliation and audit read the same history the live registry
+//!   wrote.
+//! * [`router`] — the fleet router: admits sessions and hands clients a
+//!   replica *assignment* rather than proxying tokens (topology is
+//!   control-plane work; token bytes flow client <-> replica directly).
+//!   Ready replicas are scored by heartbeat load and prefix affinity,
+//!   and a mid-stream replica death re-lands the session elsewhere with
+//!   failover-aware SLO accounting: a failed-over session is recorded as
+//!   `FailedOver`, never a shed, and its TTFT is measured once from the
+//!   original session start.
+//! * [`client`] — the session-side failover loop: stream from the
+//!   assigned replica, and on death or a draining refusal replay the
+//!   request from the committed-token watermark on the next assignment.
+//!
+//! Everything is deterministic modulo the wall-clock: suspicion counts
+//! missed probe *ticks*, jitter comes from splitmix streams, and the sim
+//! backend's token process depends only on the previous token — so a
+//! replayed continuation is bit-identical to the uninterrupted stream
+//! under greedy acceptance (the fleet e2e asserts exactly this).
+pub mod client;
+pub mod registry;
+pub mod router;
+
+pub use client::{FleetClient, FleetResult};
+pub use registry::{EventKind, HeartbeatSummary, LifecycleEvent, Registry,
+                   Replica, ReplicaState};
+pub use router::FleetRouter;
+
+use crate::rng::splitmix;
+
+/// Prefix-affinity key of a prompt: a splitmix fold over its head. The
+/// fleet router remembers which replica last served a key and credits it
+/// at assignment time, so sessions sharing a prompt prefix land where the
+/// §14 prefix index already holds their pages. Capped to 53 bits so the
+/// key survives the JSON wire (numbers travel as f64) without rounding.
+pub fn prefix_key(prompt: &[i32]) -> u64 {
+    let mut h = 0x5EC0_FEE7u64;
+    for &t in prompt.iter().take(16) {
+        h = splitmix(h ^ t as u64);
+    }
+    h & ((1u64 << 53) - 1)
+}

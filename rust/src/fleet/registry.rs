@@ -1,0 +1,411 @@
+//! Replica registry: the fleet's membership + health state machine,
+//! event-sourced (DESIGN.md §16).
+//!
+//! Health states: `Joining -> Ready -> Suspect -> Down`, plus `Draining`
+//! (entered from any live state for rolling replacement; a draining
+//! replica that stops answering is `Down` via a clean `Drained` event
+//! rather than `Suspected`/`Downed`). Suspicion is deadline-based in
+//! *probe ticks*: every probe round advances the registry tick, a failed
+//! probe counts one miss, and `suspect_after`/`down_after` consecutive
+//! misses drive the transitions — no wall-clock sampling anywhere, so a
+//! registry history is a pure function of the probe outcomes.
+//!
+//! Every transition is appended to the lifecycle event log with a
+//! monotone sequence number and applied through the single
+//! [`Registry::apply`] fold. [`Registry::replay`] re-runs that fold over
+//! a recorded log, reconstructing the event-sourced core (membership,
+//! addresses, states, next sequence number) bit-identically — the
+//! `fleet` test suite asserts `Debug`-string equality. Soft observational
+//! state (miss counters, heartbeat gauges) is deliberately *not* in the
+//! log: it is refreshed by the next probe round and plays no part in
+//! desired-state reconciliation.
+use anyhow::{Context, Result};
+
+use crate::json::{self, Value};
+
+/// Health state of one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Registered, no heartbeat answered yet.
+    Joining,
+    /// Heartbeating; eligible for session assignment.
+    Ready,
+    /// Missed `suspect_after` consecutive probes (or a client reported a
+    /// mid-stream death); excluded from assignment, may recover.
+    Suspect,
+    /// Missed `down_after` consecutive probes, or finished draining.
+    Down,
+    /// Told to drain: finishing in-flight work, refusing new sessions.
+    Draining,
+}
+
+impl ReplicaState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplicaState::Joining => "joining",
+            ReplicaState::Ready => "ready",
+            ReplicaState::Suspect => "suspect",
+            ReplicaState::Down => "down",
+            ReplicaState::Draining => "draining",
+        }
+    }
+}
+
+/// One lifecycle transition. `seq` is monotone over the whole log;
+/// `tick` is the registry probe tick the event was emitted on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleEvent {
+    pub seq: u64,
+    pub tick: u64,
+    pub replica: u64,
+    pub kind: EventKind,
+}
+
+/// What happened. The variants carry exactly what `apply` needs to
+/// reconstruct state; observational extras (`misses`) ride along for
+/// audit but do not influence the fold.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Replica registered under `addr` (state `Joining`).
+    Joined { addr: String },
+    /// First heartbeat answered (`Joining -> Ready`).
+    Ready,
+    /// Suspicion deadline hit or a client reported a mid-stream death.
+    Suspected { misses: u32 },
+    /// Down deadline hit while `Suspect`.
+    Downed { misses: u32 },
+    /// A `Suspect`/`Down` replica answered a heartbeat again.
+    Recovered,
+    /// Drain initiated (operator verb or self-reported via heartbeat).
+    DrainStarted,
+    /// A draining replica stopped answering: clean exit, state `Down`.
+    Drained,
+}
+
+impl EventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Joined { .. } => "joined",
+            EventKind::Ready => "ready",
+            EventKind::Suspected { .. } => "suspected",
+            EventKind::Downed { .. } => "downed",
+            EventKind::Recovered => "recovered",
+            EventKind::DrainStarted => "drain_started",
+            EventKind::Drained => "drained",
+        }
+    }
+}
+
+/// Parsed replica heartbeat (the flat `{"hb": {...}}` line the engine's
+/// `{"control":"heartbeat"}` verb answers): queue/slot gauges, per-class
+/// SLO attainment counters (indexed interactive/standard/batch) and the
+/// prefix-cache summary assignment scoring uses.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HeartbeatSummary {
+    pub seq: u64,
+    pub tick: u64,
+    pub queued: usize,
+    pub active: usize,
+    pub draining: bool,
+    pub ok: [u64; 3],
+    pub late: [u64; 3],
+    pub prefix_lookups: u64,
+    pub prefix_hits_full: u64,
+    pub pages_live: u64,
+}
+
+impl HeartbeatSummary {
+    /// Parse one heartbeat reply line (the whole `{"hb": {...}}` value).
+    pub fn parse(v: &Value) -> Result<HeartbeatSummary> {
+        let hb = v.get("hb").context("heartbeat reply missing \"hb\"")?;
+        let b = |key: &str| -> Result<bool> {
+            match hb.get(key)? {
+                Value::Bool(b) => Ok(*b),
+                other => anyhow::bail!("{key} must be a bool, got {other}"),
+            }
+        };
+        let n = |key: &str| -> Result<u64> {
+            Ok(hb.get(key)?.as_f64()? as u64)
+        };
+        let mut ok = [0u64; 3];
+        let mut late = [0u64; 3];
+        for (i, name) in ["interactive", "standard", "batch"]
+            .iter().enumerate() {
+            ok[i] = n(&format!("ok_{name}"))?;
+            late[i] = n(&format!("late_{name}"))?;
+        }
+        Ok(HeartbeatSummary {
+            seq: n("seq")?,
+            tick: n("tick")?,
+            queued: hb.get("queued")?.as_usize()?,
+            active: hb.get("active")?.as_usize()?,
+            draining: b("draining")?,
+            ok,
+            late,
+            prefix_lookups: n("prefix_lookups")?,
+            prefix_hits_full: n("prefix_hits_full")?,
+            pages_live: n("pages_live")?,
+        })
+    }
+
+    /// Fraction of clean completions that met their deadline, across
+    /// classes (`None` until something completed).
+    pub fn attainment(&self) -> Option<f64> {
+        let ok: u64 = self.ok.iter().sum();
+        let late: u64 = self.late.iter().sum();
+        let total = ok + late;
+        (total > 0).then(|| ok as f64 / total as f64)
+    }
+}
+
+/// One fleet member.
+#[derive(Debug, Clone)]
+pub struct Replica {
+    pub id: u64,
+    pub addr: String,
+    pub state: ReplicaState,
+    /// Consecutive missed probes (soft state, reset by any heartbeat).
+    pub misses: u32,
+    /// Registry tick of the last answered heartbeat (soft state).
+    pub last_hb_tick: u64,
+    /// Last heartbeat body (soft state; assignment scoring reads it).
+    pub hb: HeartbeatSummary,
+}
+
+/// The event-sourced core of a registry: everything the lifecycle log
+/// determines. Two registries whose logs are equal have equal cores —
+/// `replay` + `Debug`-string equality is the bit-identity check.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegistryCore {
+    pub next_seq: u64,
+    pub replicas: Vec<(u64, String, ReplicaState)>,
+}
+
+/// Replica membership + health, driven exclusively by event application.
+#[derive(Debug)]
+pub struct Registry {
+    suspect_after: u32,
+    down_after: u32,
+    tick: u64,
+    next_seq: u64,
+    replicas: Vec<Replica>,
+    events: Vec<LifecycleEvent>,
+}
+
+impl Registry {
+    /// Empty registry with the given suspicion deadlines (in probe
+    /// ticks). `suspect_after <= down_after` is the caller's contract
+    /// ([`crate::config::FleetConfig::validate`] enforces it).
+    pub fn new(suspect_after: u32, down_after: u32) -> Registry {
+        Registry {
+            suspect_after,
+            down_after,
+            tick: 0,
+            next_seq: 0,
+            replicas: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Rebuild a registry from a recorded lifecycle log. The fold is the
+    /// same [`Registry::apply`] the live registry used, so the resulting
+    /// [`RegistryCore`] is bit-identical to the producer's.
+    pub fn replay(suspect_after: u32, down_after: u32,
+                  events: &[LifecycleEvent]) -> Registry {
+        let mut r = Registry::new(suspect_after, down_after);
+        for ev in events {
+            r.apply(ev);
+            r.events.push(ev.clone());
+        }
+        r
+    }
+
+    /// The event-sourced core (see [`RegistryCore`]).
+    pub fn core(&self) -> RegistryCore {
+        RegistryCore {
+            next_seq: self.next_seq,
+            replicas: self.replicas.iter()
+                .map(|r| (r.id, r.addr.clone(), r.state))
+                .collect(),
+        }
+    }
+
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Replica> {
+        self.replicas.get(id as usize)
+    }
+
+    pub fn events(&self) -> &[LifecycleEvent] {
+        &self.events
+    }
+
+    /// Current probe tick.
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Replicas currently in `state`.
+    pub fn count(&self, state: ReplicaState) -> usize {
+        self.replicas.iter().filter(|r| r.state == state).count()
+    }
+
+    /// Advance the probe tick: one call per heartbeat round, before the
+    /// round's outcomes are applied.
+    pub fn advance_tick(&mut self) {
+        self.tick += 1;
+    }
+
+    /// Register a replica; returns its id (dense, monotone — replicas
+    /// are never removed, only downed).
+    pub fn join(&mut self, addr: &str) -> u64 {
+        let id = self.replicas.len() as u64;
+        self.emit(id, EventKind::Joined { addr: addr.to_string() });
+        id
+    }
+
+    /// Record an answered heartbeat: refreshes the soft gauges and drives
+    /// `Joining -> Ready`, `Suspect/Down -> Ready` (recovery) and the
+    /// self-reported `-> Draining` transitions.
+    pub fn heartbeat(&mut self, id: u64, hb: HeartbeatSummary) {
+        let tick = self.tick;
+        let Some(r) = self.replicas.get_mut(id as usize) else { return };
+        r.misses = 0;
+        r.last_hb_tick = tick;
+        r.hb = hb;
+        let state = r.state;
+        match state {
+            ReplicaState::Joining => self.emit(id, EventKind::Ready),
+            ReplicaState::Suspect | ReplicaState::Down =>
+                self.emit(id, EventKind::Recovered),
+            ReplicaState::Ready | ReplicaState::Draining => {}
+        }
+        if hb.draining {
+            let state = self.replicas[id as usize].state;
+            if state != ReplicaState::Draining
+                && state != ReplicaState::Down {
+                self.emit(id, EventKind::DrainStarted);
+            }
+        }
+    }
+
+    /// Record a failed probe (connect/read error or malformed reply):
+    /// one missed tick toward the suspicion deadlines. A draining replica
+    /// that stops answering has finished: clean `Drained`, not a crash.
+    pub fn probe_missed(&mut self, id: u64) {
+        let Some(r) = self.replicas.get_mut(id as usize) else { return };
+        r.misses = r.misses.saturating_add(1);
+        let misses = r.misses;
+        match r.state {
+            ReplicaState::Draining =>
+                self.emit(id, EventKind::Drained),
+            ReplicaState::Joining | ReplicaState::Ready
+                if misses >= self.suspect_after =>
+                self.emit(id, EventKind::Suspected { misses }),
+            ReplicaState::Suspect if misses >= self.down_after =>
+                self.emit(id, EventKind::Downed { misses }),
+            _ => {}
+        }
+    }
+
+    /// Fail-fast suspicion: a client reported a mid-stream death, don't
+    /// wait for the probe deadline. No-op on already-suspect/down
+    /// replicas; a draining one gets its clean `Drained` instead.
+    pub fn suspect_now(&mut self, id: u64) {
+        let Some(r) = self.replicas.get(id as usize) else { return };
+        let misses = r.misses;
+        match r.state {
+            ReplicaState::Joining | ReplicaState::Ready =>
+                self.emit(id, EventKind::Suspected { misses }),
+            ReplicaState::Draining => self.emit(id, EventKind::Drained),
+            ReplicaState::Suspect | ReplicaState::Down => {}
+        }
+    }
+
+    /// Initiate drain (operator/reconciler side). Idempotent: draining
+    /// and down replicas are left alone.
+    pub fn begin_drain(&mut self, id: u64) {
+        let Some(r) = self.replicas.get(id as usize) else { return };
+        match r.state {
+            ReplicaState::Joining | ReplicaState::Ready
+            | ReplicaState::Suspect =>
+                self.emit(id, EventKind::DrainStarted),
+            ReplicaState::Draining | ReplicaState::Down => {}
+        }
+    }
+
+    /// Optimistic load accounting: a session was just assigned here, so
+    /// count one more active stream until the next heartbeat refreshes
+    /// the gauge (prevents a burst of assignments between two probe
+    /// rounds from all piling onto the same least-loaded replica).
+    pub fn bump_load(&mut self, id: u64) {
+        if let Some(r) = self.replicas.get_mut(id as usize) {
+            r.hb.active = r.hb.active.saturating_add(1);
+        }
+    }
+
+    /// Append one event and run it through the state fold.
+    fn emit(&mut self, replica: u64, kind: EventKind) {
+        let ev = LifecycleEvent {
+            seq: self.next_seq,
+            tick: self.tick,
+            replica,
+            kind,
+        };
+        self.apply(&ev);
+        self.events.push(ev);
+    }
+
+    /// The single state-machine fold. Both the live path ([`emit`]) and
+    /// [`replay`] go through here — transitions cannot happen any other
+    /// way, which is what makes the log authoritative.
+    fn apply(&mut self, ev: &LifecycleEvent) {
+        self.next_seq = ev.seq + 1;
+        self.tick = self.tick.max(ev.tick);
+        match &ev.kind {
+            EventKind::Joined { addr } => {
+                debug_assert_eq!(ev.replica as usize, self.replicas.len());
+                self.replicas.push(Replica {
+                    id: ev.replica,
+                    addr: addr.clone(),
+                    state: ReplicaState::Joining,
+                    misses: 0,
+                    last_hb_tick: ev.tick,
+                    hb: HeartbeatSummary::default(),
+                });
+            }
+            kind => {
+                let Some(r) = self.replicas.get_mut(ev.replica as usize)
+                else { return };
+                r.state = match kind {
+                    EventKind::Ready | EventKind::Recovered =>
+                        ReplicaState::Ready,
+                    EventKind::Suspected { .. } => ReplicaState::Suspect,
+                    EventKind::Downed { .. } | EventKind::Drained =>
+                        ReplicaState::Down,
+                    EventKind::DrainStarted => ReplicaState::Draining,
+                    EventKind::Joined { .. } => unreachable!(),
+                };
+            }
+        }
+    }
+}
+
+/// JSON form of one lifecycle event (the `{"fleet":"events"}` verb).
+pub fn event_json(ev: &LifecycleEvent) -> Value {
+    let mut fields = vec![
+        ("seq", json::num(ev.seq as f64)),
+        ("tick", json::num(ev.tick as f64)),
+        ("replica", json::num(ev.replica as f64)),
+        ("kind", json::s(ev.kind.label())),
+    ];
+    match &ev.kind {
+        EventKind::Joined { addr } => fields.push(("addr", json::s(addr))),
+        EventKind::Suspected { misses } | EventKind::Downed { misses } =>
+            fields.push(("misses", json::num(*misses as f64))),
+        _ => {}
+    }
+    json::obj(fields)
+}

@@ -1,0 +1,670 @@
+//! The fleet router (DESIGN.md §16): session admission, replica
+//! assignment and failover accounting over the replica [`Registry`].
+//!
+//! Topology, not hot path: the router hands a client `(session, replica,
+//! addr)` and the token stream flows client <-> replica directly. The
+//! router's own work — heartbeat probing, scoring, failover bookkeeping —
+//! is control-plane traffic on its own TCP listener, one tagged
+//! JSON-lines grammar:
+//!
+//! ```text
+//! {"fleet":"assign","prefix_key":K}            -> {"session":S,"replica":R,"addr":A}
+//! {"fleet":"failed","session":S,"kind":"died"} -> {"replica":R,"addr":A}
+//! {"fleet":"done","session":S,"status":"done","ttft_ms":T}
+//!                                              -> {"outcome":"completed"|"failed_over"}
+//! {"fleet":"drain","replica":R}                -> {"draining":R}
+//! {"fleet":"stats"} / {"fleet":"prom"} / {"fleet":"events"}
+//! ```
+//!
+//! SLO accounting rules (the `fleet` test suite pins them): a session
+//! that completed after >= 1 re-land closes as `FailedOver` — never a
+//! shed, and distinct from `Completed` so dashboards see degraded-but-
+//! served traffic. TTFT is recorded once per session, measured by the
+//! client from the original session start — a failover never resets it.
+//! Sheds and cancels keep their single-engine meanings.
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::FleetConfig;
+use crate::json::{self, Value};
+use crate::rng::splitmix;
+use crate::server::Client;
+use crate::telemetry::{hist_json, Hist};
+
+use super::registry::{event_json, HeartbeatSummary, Registry, Replica,
+                      ReplicaState};
+
+/// Why a client is asking for a new assignment mid-session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailKind {
+    /// The replica connection died mid-stream: fail-fast suspicion.
+    Died,
+    /// The replica refused with a `draining` rejection: mark it draining.
+    Draining,
+    /// The replica shed the re-landed request (busy): no health change,
+    /// just pick somewhere else.
+    Busy,
+    /// Retry after `no_ready_replica`: no health change, no new failover
+    /// charged — the session already paid for this re-land.
+    Retry,
+}
+
+impl FailKind {
+    fn parse(s: &str) -> Result<FailKind> {
+        Ok(match s {
+            "died" => FailKind::Died,
+            "draining" => FailKind::Draining,
+            "busy" => FailKind::Busy,
+            "retry" => FailKind::Retry,
+            other => bail!("unknown failure kind {other:?} \
+                            (expected died|draining|busy|retry)"),
+        })
+    }
+}
+
+/// Terminal status a client reports on `{"fleet":"done"}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CloseStatus {
+    Done,
+    Shed,
+    Cancelled,
+    Failed,
+}
+
+impl CloseStatus {
+    fn parse(s: &str) -> Result<CloseStatus> {
+        Ok(match s {
+            "done" => CloseStatus::Done,
+            "shed" => CloseStatus::Shed,
+            "cancelled" => CloseStatus::Cancelled,
+            "failed" => CloseStatus::Failed,
+            other => bail!("unknown close status {other:?} \
+                            (expected done|shed|cancelled|failed)"),
+        })
+    }
+}
+
+/// One admitted session.
+struct Session {
+    replica: u64,
+    prefix_key: Option<u64>,
+    failovers: u32,
+}
+
+#[derive(Default)]
+struct Counters {
+    assigned: u64,
+    completed: u64,
+    failed_over: u64,
+    failovers: u64,
+    shed: u64,
+    cancelled: u64,
+    failed: u64,
+    no_capacity: u64,
+    drains: u64,
+    probes: u64,
+    probe_failures: u64,
+}
+
+struct Inner {
+    registry: Registry,
+    sessions: HashMap<u64, Session>,
+    next_session: u64,
+    /// Sticky prefix-key -> replica map (bounded: flushed wholesale at
+    /// `affinity_cap`, mirroring the prefix index's flush policy).
+    affinity: HashMap<u64, u64>,
+    counters: Counters,
+    round: u64,
+}
+
+/// Outcome of an assignment / failover pick, pre-serialization.
+enum Assignment {
+    Landed { replica: u64, addr: String },
+    NoCapacity,
+    Exhausted,
+}
+
+/// The fleet router. Shared (`Arc`) between the TCP accept threads and
+/// the heartbeat probe loop; all mutable state sits behind one mutex —
+/// this is control-plane traffic, contention is not a concern, and
+/// network I/O (probes, drains) always happens *outside* the lock.
+pub struct FleetRouter {
+    cfg: FleetConfig,
+    inner: Mutex<Inner>,
+    /// Session TTFT in microseconds, recorded once per session at close.
+    ttft_us: Hist,
+}
+
+impl FleetRouter {
+    pub fn new(cfg: FleetConfig) -> Result<Arc<FleetRouter>> {
+        cfg.validate()?;
+        Ok(Arc::new(FleetRouter {
+            inner: Mutex::new(Inner {
+                registry: Registry::new(cfg.suspect_after, cfg.down_after),
+                sessions: HashMap::new(),
+                next_session: 1,
+                affinity: HashMap::new(),
+                counters: Counters::default(),
+                round: 0,
+            }),
+            ttft_us: Hist::new(),
+            cfg,
+        }))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // a poisoned control-plane mutex means a panic already escaped a
+        // holder; keep serving the surviving state rather than wedging
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Register a replica by address; returns its registry id.
+    pub fn add_replica(&self, addr: &str) -> u64 {
+        self.lock().registry.join(addr)
+    }
+
+    /// Immutable snapshot of the registry's replicas (tests, demos).
+    pub fn replicas(&self) -> Vec<Replica> {
+        self.lock().registry.replicas().to_vec()
+    }
+
+    /// The lifecycle event log (cloned snapshot).
+    pub fn events(&self) -> Vec<super::registry::LifecycleEvent> {
+        self.lock().registry.events().to_vec()
+    }
+
+    /// The registry's event-sourced core (replay-equality checks).
+    pub fn registry_core(&self) -> super::registry::RegistryCore {
+        self.lock().registry.core()
+    }
+
+    /// Sessions currently open against `replica`.
+    pub fn sessions_on(&self, replica: u64) -> usize {
+        self.lock().sessions.values()
+            .filter(|s| s.replica == replica).count()
+    }
+
+    /// Offline heartbeat injection: apply `hb` for `replica` without any
+    /// network probe. Unit tests and sims drive the registry through this
+    /// instead of standing up TCP replicas.
+    pub fn inject_heartbeat(&self, replica: u64, hb: HeartbeatSummary) {
+        self.lock().registry.heartbeat(replica, hb);
+    }
+
+    /// Offline probe-miss injection (advance the tick first with
+    /// [`FleetRouter::advance_tick`]); see [`Registry::probe_missed`].
+    pub fn inject_probe_miss(&self, replica: u64) {
+        self.lock().registry.probe_missed(replica);
+    }
+
+    /// Advance the registry probe tick without probing (offline driving).
+    pub fn advance_tick(&self) {
+        self.lock().registry.advance_tick();
+    }
+
+    /// One heartbeat round: advance the registry tick, probe every
+    /// not-Down replica with `{"control":"heartbeat"}`, then apply the
+    /// outcomes. Network I/O runs outside the lock; a connect/read
+    /// failure, a timeout or a malformed reply all count as one missed
+    /// probe tick (deadline-based suspicion).
+    pub fn probe_round(&self) {
+        let targets: Vec<(u64, String)> = {
+            let mut inner = self.lock();
+            inner.registry.advance_tick();
+            inner.registry.replicas().iter()
+                .filter(|r| r.state != ReplicaState::Down)
+                .map(|r| (r.id, r.addr.clone()))
+                .collect()
+        };
+        // probe replies normally arrive between engine ticks; budget a
+        // few probe intervals before a slow replica counts as missed
+        let budget =
+            Duration::from_millis(self.cfg.probe_interval_ms.max(25) * 4);
+        for (id, addr) in targets {
+            let hb = probe_one(&addr, budget);
+            let mut inner = self.lock();
+            inner.counters.probes += 1;
+            match hb {
+                Ok(hb) => inner.registry.heartbeat(id, hb),
+                Err(e) => {
+                    log::debug!("probe {id}@{addr} missed: {e:#}");
+                    inner.counters.probe_failures += 1;
+                    inner.registry.probe_missed(id);
+                }
+            }
+        }
+    }
+
+    /// Run [`probe_round`] until `stop` is raised. Pacing: the configured
+    /// interval plus a splitmix jitter of up to a quarter interval —
+    /// deterministic per round, staggering multiple routers without any
+    /// wall-clock entropy.
+    pub fn spawn_probe_loop(self: &Arc<Self>, stop: Arc<AtomicBool>)
+                            -> JoinHandle<()> {
+        let me = self.clone();
+        std::thread::Builder::new()
+            .name("fleet-probe".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    me.probe_round();
+                    let round = {
+                        let mut inner = me.lock();
+                        inner.round += 1;
+                        inner.round
+                    };
+                    let base = me.cfg.probe_interval_ms;
+                    let jitter =
+                        splitmix(me.cfg.seed ^ round) % (base / 4 + 1);
+                    std::thread::sleep(
+                        Duration::from_millis(base + jitter));
+                }
+            })
+            .expect("spawning fleet-probe thread")
+    }
+
+    /// Score Ready replicas and pick the winner: lowest load
+    /// (queued + active from the last heartbeat), minus the affinity
+    /// bonus for the replica that last served `prefix_key`; ties break
+    /// to the lowest id. Deterministic given the registry snapshot.
+    fn pick(&self, inner: &Inner, prefix_key: Option<u64>,
+            exclude: Option<u64>) -> Option<u64> {
+        let mut best: Option<(f64, u64)> = None;
+        for r in inner.registry.replicas() {
+            if r.state != ReplicaState::Ready || Some(r.id) == exclude {
+                continue;
+            }
+            let mut score = (r.hb.queued + r.hb.active) as f64;
+            if let Some(k) = prefix_key {
+                if inner.affinity.get(&k) == Some(&r.id) {
+                    score -= self.cfg.affinity_bonus;
+                }
+            }
+            best = match best {
+                None => Some((score, r.id)),
+                Some((bs, _)) if score < bs => Some((score, r.id)),
+                keep => keep,
+            };
+        }
+        best.map(|(_, id)| id)
+    }
+
+    fn remember_affinity(inner: &mut Inner, cap: usize,
+                         prefix_key: Option<u64>, replica: u64) {
+        let Some(k) = prefix_key else { return };
+        if inner.affinity.len() >= cap && !inner.affinity.contains_key(&k)
+        {
+            inner.affinity.clear();
+        }
+        inner.affinity.insert(k, replica);
+    }
+
+    /// Admit a session: pick a Ready replica, record the session, return
+    /// the assignment.
+    pub fn open_session(&self, prefix_key: Option<u64>)
+                        -> Option<(u64, u64, String)> {
+        let mut inner = self.lock();
+        let Some(rid) = self.pick(&inner, prefix_key, None) else {
+            inner.counters.no_capacity += 1;
+            return None;
+        };
+        let sid = inner.next_session;
+        inner.next_session += 1;
+        inner.sessions.insert(sid, Session {
+            replica: rid,
+            prefix_key,
+            failovers: 0,
+        });
+        inner.counters.assigned += 1;
+        Self::remember_affinity(&mut inner, self.cfg.affinity_cap,
+                                prefix_key, rid);
+        inner.registry.bump_load(rid);
+        let addr = inner.registry.get(rid)
+            .map(|r| r.addr.clone())
+            .unwrap_or_default();
+        Some((sid, rid, addr))
+    }
+
+    /// Re-land `session` after a mid-stream failure. `Died` marks the old
+    /// replica Suspect immediately (fail-fast — the probe deadline
+    /// confirms later), `Draining` marks it draining, `Busy`/`Retry`
+    /// leave health alone. Each re-land except `Retry` charges one
+    /// failover against the session's budget.
+    fn fail_over(&self, session: u64, kind: FailKind)
+                 -> Result<Assignment> {
+        let mut inner = self.lock();
+        let sess = inner.sessions.get(&session)
+            .with_context(|| format!("unknown session {session}"))?;
+        let old = sess.replica;
+        let prefix_key = sess.prefix_key;
+        let charged = kind != FailKind::Retry;
+        if charged {
+            let sess = inner.sessions.get_mut(&session).unwrap();
+            sess.failovers += 1;
+            inner.counters.failovers += 1;
+        }
+        match kind {
+            FailKind::Died => inner.registry.suspect_now(old),
+            FailKind::Draining => inner.registry.begin_drain(old),
+            FailKind::Busy | FailKind::Retry => {}
+        }
+        if inner.sessions[&session].failovers > self.cfg.max_failovers {
+            return Ok(Assignment::Exhausted);
+        }
+        let Some(rid) = self.pick(&inner, prefix_key, Some(old)) else {
+            inner.counters.no_capacity += 1;
+            return Ok(Assignment::NoCapacity);
+        };
+        inner.sessions.get_mut(&session).unwrap().replica = rid;
+        Self::remember_affinity(&mut inner, self.cfg.affinity_cap,
+                                prefix_key, rid);
+        inner.registry.bump_load(rid);
+        let addr = inner.registry.get(rid)
+            .map(|r| r.addr.clone())
+            .unwrap_or_default();
+        Ok(Assignment::Landed { replica: rid, addr })
+    }
+
+    /// Close a session with the client-reported terminal status; returns
+    /// the recorded outcome label. `FailedOver` is decided *here*, from
+    /// the router's own failover count — a completed session that was
+    /// ever re-landed closes as `failed_over`, never as a shed. The TTFT
+    /// sample (client-measured from original session start) is recorded
+    /// exactly once, at close.
+    fn close_session(&self, session: u64, status: CloseStatus,
+                     ttft_ms: Option<f64>) -> Result<&'static str> {
+        let mut inner = self.lock();
+        let sess = inner.sessions.remove(&session)
+            .with_context(|| format!("unknown session {session}"))?;
+        if let Some(ms) = ttft_ms {
+            if ms.is_finite() && ms >= 0.0 {
+                self.ttft_us.record((ms * 1e3) as u64);
+            }
+        }
+        let label = match status {
+            CloseStatus::Done if sess.failovers > 0 => {
+                inner.counters.failed_over += 1;
+                "failed_over"
+            }
+            CloseStatus::Done => {
+                inner.counters.completed += 1;
+                "completed"
+            }
+            CloseStatus::Shed => {
+                inner.counters.shed += 1;
+                "shed"
+            }
+            CloseStatus::Cancelled => {
+                inner.counters.cancelled += 1;
+                "cancelled"
+            }
+            CloseStatus::Failed => {
+                inner.counters.failed += 1;
+                "failed"
+            }
+        };
+        Ok(label)
+    }
+
+    /// Ask `replica` to drain: send the engine `{"control":"drain"}`
+    /// (with the fleet retry schedule) and mark it draining in the
+    /// registry. The replica finishes in-flight slots, answers its final
+    /// heartbeats with `draining: true`, then exits — the probe loop
+    /// records the clean `Drained` event when it stops answering.
+    pub fn drain_replica(&self, replica: u64) -> Result<()> {
+        let addr = {
+            let mut inner = self.lock();
+            let r = inner.registry.get(replica)
+                .with_context(|| format!("unknown replica {replica}"))?;
+            let addr = r.addr.clone();
+            inner.registry.begin_drain(replica);
+            inner.counters.drains += 1;
+            addr
+        };
+        let sock: std::net::SocketAddr = addr.parse()
+            .with_context(|| format!("replica {replica} addr {addr:?}"))?;
+        let reply = Client::new(sock)
+            .retry(self.cfg.retry)
+            .connect_timeout(Duration::from_millis(500))
+            .read_timeout(Duration::from_secs(5))
+            .drain()?;
+        log::info!("replica {replica} draining: {reply}");
+        Ok(())
+    }
+
+    /// The router's stats snapshot. Top-level keys `fleet` (session and
+    /// failover counters + session TTFT) and `health` (per-replica state,
+    /// heartbeat age in probe ticks, load gauges) — `check_trace.py
+    /// --fleet` pins the schema.
+    pub fn stats_json(&self) -> Value {
+        let inner = self.lock();
+        let c = &inner.counters;
+        let fleet = json::obj(vec![
+            ("sessions_active", json::num(inner.sessions.len() as f64)),
+            ("assigned_total", json::num(c.assigned as f64)),
+            ("completed_total", json::num(c.completed as f64)),
+            ("failed_over_total", json::num(c.failed_over as f64)),
+            ("failovers_total", json::num(c.failovers as f64)),
+            ("shed_total", json::num(c.shed as f64)),
+            ("cancelled_total", json::num(c.cancelled as f64)),
+            ("failed_total", json::num(c.failed as f64)),
+            ("no_capacity_total", json::num(c.no_capacity as f64)),
+            ("drains_total", json::num(c.drains as f64)),
+            ("probes_total", json::num(c.probes as f64)),
+            ("probe_failures_total", json::num(c.probe_failures as f64)),
+            ("events_total",
+             json::num(inner.registry.events().len() as f64)),
+            ("registry_tick", json::num(inner.registry.tick() as f64)),
+            ("ttft_ms", hist_json(&self.ttft_us, 1e3)),
+        ]);
+        let tick = inner.registry.tick();
+        let health: Vec<Value> = inner.registry.replicas().iter()
+            .map(|r| json::obj(vec![
+                ("replica", json::num(r.id as f64)),
+                ("addr", json::s(&r.addr)),
+                ("state", json::s(r.state.label())),
+                ("heartbeat_age_ticks",
+                 json::num(tick.saturating_sub(r.last_hb_tick) as f64)),
+                ("misses", json::num(r.misses as f64)),
+                ("queued", json::num(r.hb.queued as f64)),
+                ("active", json::num(r.hb.active as f64)),
+                ("draining", Value::Bool(
+                    r.state == ReplicaState::Draining || r.hb.draining)),
+            ]))
+            .collect();
+        json::obj(vec![
+            ("fleet", fleet),
+            ("health", Value::Arr(health)),
+        ])
+    }
+
+    /// Prometheus text exposition of the fleet counters and per-replica
+    /// health gauges.
+    pub fn prom_text(&self) -> String {
+        use std::fmt::Write as _;
+        let inner = self.lock();
+        let c = &inner.counters;
+        let mut out = String::new();
+        let _ = writeln!(out, "# TYPE specrouter_fleet_replicas gauge");
+        for st in [ReplicaState::Joining, ReplicaState::Ready,
+                   ReplicaState::Suspect, ReplicaState::Down,
+                   ReplicaState::Draining] {
+            let _ = writeln!(
+                out, "specrouter_fleet_replicas{{state=\"{}\"}} {}",
+                st.label(), inner.registry.count(st));
+        }
+        let _ = writeln!(
+            out, "# TYPE specrouter_fleet_heartbeat_age_ticks gauge");
+        let tick = inner.registry.tick();
+        for r in inner.registry.replicas() {
+            let _ = writeln!(
+                out,
+                "specrouter_fleet_heartbeat_age_ticks{{replica=\"{}\"}} {}",
+                r.id, tick.saturating_sub(r.last_hb_tick));
+        }
+        let _ = writeln!(
+            out, "# TYPE specrouter_fleet_sessions_total counter");
+        for (label, v) in [("completed", c.completed),
+                           ("failed_over", c.failed_over),
+                           ("shed", c.shed),
+                           ("cancelled", c.cancelled),
+                           ("failed", c.failed)] {
+            let _ = writeln!(
+                out,
+                "specrouter_fleet_sessions_total{{outcome=\"{label}\"}} {v}");
+        }
+        for (name, v) in [("specrouter_fleet_assigned_total", c.assigned),
+                          ("specrouter_fleet_failovers_total", c.failovers),
+                          ("specrouter_fleet_probes_total", c.probes),
+                          ("specrouter_fleet_probe_failures_total",
+                           c.probe_failures),
+                          ("specrouter_fleet_drains_total", c.drains)] {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        out
+    }
+
+    /// The lifecycle event log as JSON (the `{"fleet":"events"}` verb).
+    pub fn events_json(&self) -> Value {
+        let inner = self.lock();
+        json::obj(vec![(
+            "events",
+            json::arr(inner.registry.events().iter()
+                      .map(event_json).collect()),
+        )])
+    }
+
+    /// Serve the fleet control plane on `addr` (JSON-lines TCP, one
+    /// tagged `{"fleet": ...}` verb per line). `ready` is signalled with
+    /// the bound address; tests bind ":0".
+    pub fn serve(self: &Arc<Self>, addr: &str,
+                 ready: Option<mpsc::Sender<std::net::SocketAddr>>)
+                 -> Result<()> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding fleet router {addr}"))?;
+        let local = listener.local_addr()?;
+        log::info!("fleet router listening on {local}");
+        if let Some(r) = ready {
+            let _ = r.send(local);
+        }
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let me = self.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = me.handle_conn(stream) {
+                    log::warn!("fleet connection error: {e:#}");
+                }
+            });
+        }
+        Ok(())
+    }
+
+    fn handle_conn(&self, stream: TcpStream) -> Result<()> {
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = match self.handle_line(&line) {
+                Ok(v) => v,
+                Err(e) => json::obj(vec![
+                    ("error", json::s(&format!("{e:#}"))),
+                ]),
+            };
+            writeln!(writer, "{reply}")?;
+        }
+        Ok(())
+    }
+
+    /// Dispatch one control-plane line — the TCP loop and the offline
+    /// unit tests drive the router through exactly this entry point, so
+    /// both exercise the same verb grammar.
+    pub fn handle_line(&self, line: &str) -> Result<Value> {
+        let v = json::parse(line).context("bad fleet JSON")?;
+        let verb = v.get("fleet")
+            .context("fleet router speaks {\"fleet\": ...} verbs")?
+            .as_str()?;
+        match verb {
+            "assign" => {
+                let prefix_key = v.opt("prefix_key")
+                    .map(|k| k.as_f64()).transpose()?
+                    .map(|k| k as u64);
+                match self.open_session(prefix_key) {
+                    Some((sid, rid, addr)) => Ok(json::obj(vec![
+                        ("session", json::num(sid as f64)),
+                        ("replica", json::num(rid as f64)),
+                        ("addr", json::s(&addr)),
+                    ])),
+                    None => Ok(json::obj(vec![
+                        ("rejected", json::s("no_ready_replica")),
+                    ])),
+                }
+            }
+            "failed" => {
+                let session = v.get("session")?.as_f64()? as u64;
+                let kind = FailKind::parse(
+                    v.opt("kind").map(|k| k.as_str()).transpose()?
+                        .unwrap_or("died"))?;
+                match self.fail_over(session, kind)? {
+                    Assignment::Landed { replica, addr } =>
+                        Ok(json::obj(vec![
+                            ("replica", json::num(replica as f64)),
+                            ("addr", json::s(&addr)),
+                        ])),
+                    Assignment::NoCapacity => Ok(json::obj(vec![
+                        ("rejected", json::s("no_ready_replica")),
+                    ])),
+                    Assignment::Exhausted => Ok(json::obj(vec![
+                        ("rejected", json::s("failover_budget")),
+                    ])),
+                }
+            }
+            "done" => {
+                let session = v.get("session")?.as_f64()? as u64;
+                let status = CloseStatus::parse(
+                    v.opt("status").map(|s| s.as_str()).transpose()?
+                        .unwrap_or("done"))?;
+                let ttft = v.opt("ttft_ms")
+                    .map(|t| t.as_f64()).transpose()?;
+                let label = self.close_session(session, status, ttft)?;
+                Ok(json::obj(vec![("outcome", json::s(label))]))
+            }
+            "drain" => {
+                let replica = v.get("replica")?.as_f64()? as u64;
+                self.drain_replica(replica)?;
+                Ok(json::obj(vec![
+                    ("draining", json::num(replica as f64)),
+                ]))
+            }
+            "stats" => Ok(self.stats_json()),
+            "prom" => Ok(json::obj(vec![
+                ("prom", json::s(&self.prom_text())),
+            ])),
+            "events" => Ok(self.events_json()),
+            other => bail!("unknown fleet verb {other:?} (expected \
+                            assign|failed|done|drain|stats|prom|events)"),
+        }
+    }
+}
+
+/// One heartbeat probe: bounded connect + `{"control":"heartbeat"}`
+/// round trip + parse. Deliberately retry-free — a miss IS the signal
+/// the suspicion deadline counts.
+fn probe_one(addr: &str, budget: Duration) -> Result<HeartbeatSummary> {
+    let sock: std::net::SocketAddr = addr.parse()
+        .with_context(|| format!("replica addr {addr:?}"))?;
+    let reply = Client::new(sock)
+        .connect_timeout(budget)
+        .read_timeout(budget)
+        .heartbeat()?;
+    HeartbeatSummary::parse(&reply)
+}

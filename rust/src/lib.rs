@@ -18,6 +18,7 @@
 pub mod admission;
 pub mod config;
 pub mod coordinator;
+pub mod fleet;
 pub mod harness;
 pub mod json;
 pub mod metrics;
@@ -30,4 +31,4 @@ pub mod telemetry;
 pub mod workload;
 
 pub use config::{EngineConfig, EngineConfigBuilder, FaultConfig,
-                 PagingConfig, PrefillConfig};
+                 FleetConfig, PagingConfig, PrefillConfig, RetryConfig};

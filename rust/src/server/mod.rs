@@ -30,14 +30,26 @@
 //!
 //! Control queries share the same wire (DESIGN.md §12), one tagged
 //! request shape:
-//!   {"control": "stats"}  -> one-line JSON telemetry/counter snapshot
-//!   {"control": "prom"}   -> {"prom": "<exposition text>"}
-//!   {"control": "trace"}  -> Chrome trace-event JSON of the span rings
+//!   {"control": "stats"}     -> one-line JSON telemetry/counter snapshot
+//!   {"control": "prom"}      -> {"prom": "<exposition text>"}
+//!   {"control": "trace"}     -> Chrome trace-event JSON of the span rings
+//!   {"control": "heartbeat"} -> {"hb": {...}} fleet health snapshot
+//!   {"control": "drain"}     -> {"draining": true, "already": ..., ...}
 //! The legacy spellings `{"stats": true}`, `{"stats": "prometheus"}` and
 //! `{"trace": true}` remain accepted and answer byte-identically. The
 //! engine answers between ticks, so a scrape never interleaves with a
 //! partially applied tick. [`Client`] wraps the whole client side —
-//! requests, streaming, control — behind bounded connect/read timeouts.
+//! requests, streaming, control — behind bounded connect/read timeouts
+//! and an optional deterministic exponential-backoff retry schedule.
+//!
+//! Draining (DESIGN.md §16): after `{"control":"drain"}` the engine stops
+//! admitting — new requests get the structured refusal
+//! `{"error":"server draining","rejected":"draining"}` (distinct from the
+//! connection-cap `saturated` rejection: draining is a fleet-level
+//! redirect, not an admission shed, and counts in neither shed nor SLO
+//! accounting) — finishes its in-flight slots, answers heartbeats with
+//! `draining: true` during a short grace window, then exits cleanly. A
+//! second drain is idempotent (`"already": true`).
 //!
 //! The engine thread multiplexes: it drains the submission channel, runs
 //! `tick()`, pushes newly committed tokens to per-request stream sinks,
@@ -54,7 +66,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::admission::{ShedRecord, SloClass};
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, RetryConfig};
 use crate::coordinator::engine::{Finished, Request};
 use crate::coordinator::ChainRouter;
 use crate::json::{self, Value};
@@ -81,6 +93,15 @@ pub enum EngineMsg {
     },
     /// Control query: Chrome trace-event JSON of the span rings.
     Trace(mpsc::Sender<String>),
+    /// Fleet health probe: one `{"hb": {...}}` line (queued/active,
+    /// per-class SLO attainment, prefix-cache summary, draining flag).
+    /// Formatted into a buffer the engine loop reuses — the replica-side
+    /// handler allocates nothing per probe beyond this reply clone.
+    Heartbeat(mpsc::Sender<String>),
+    /// Stop admitting, finish in-flight work, heartbeat `draining: true`
+    /// through a short grace window, then exit the engine loop cleanly.
+    /// Idempotent: a second drain acks with `"already": true`.
+    Drain(mpsc::Sender<String>),
     Shutdown,
 }
 
@@ -95,6 +116,11 @@ pub enum EngineReply {
     Accepted(u64),
     Done(Finished),
     Rejected(ShedRecord),
+    /// Terminal: the engine refused the request before admission ever saw
+    /// it (currently only `"draining"`). Distinct from `Rejected` — a
+    /// refusal is a fleet-level redirect, not a shed, and is invisible to
+    /// the admission counters.
+    Refused { reason: &'static str },
 }
 
 /// Incremental events of one streaming request, in order: one
@@ -114,6 +140,9 @@ pub enum StreamEvent {
     Done(Finished),
     /// Terminal: admission shed the request.
     Shed(ShedRecord),
+    /// Terminal: refused before admission (currently only `"draining"`);
+    /// see [`EngineReply::Refused`].
+    Refused { reason: &'static str },
 }
 
 /// What the engine loop holds per in-flight request.
@@ -162,6 +191,21 @@ where
 fn submit(router: &mut ChainRouter,
           waiters: &mut HashMap<u64, Waiter>, req: Request,
           waiter: Waiter) {
+    if router.draining() {
+        // refused before admission: the request never existed as far as
+        // shed/SLO accounting is concerned — the fleet tier re-lands it
+        match waiter {
+            Waiter::Sync(tx) => {
+                let _ = tx.send(EngineReply::Refused {
+                    reason: "draining" });
+            }
+            Waiter::Stream { sink, .. } => {
+                let _ = sink.send(StreamEvent::Refused {
+                    reason: "draining" });
+            }
+        }
+        return;
+    }
     let (id, outcome) = router.submit_detailed(req);
     if outcome.is_shed() {
         if let Some(rec) = router.take_shed().into_iter()
@@ -197,9 +241,12 @@ fn submit(router: &mut ChainRouter,
     }
 }
 
-/// Apply one message; returns true on shutdown.
+/// Apply one message; returns true on shutdown. `hb_buf` is the engine
+/// loop's reusable heartbeat scratch buffer (steady-state heartbeat
+/// formatting allocates nothing; `bench_hotpath` pins this).
 fn handle_msg(router: &mut ChainRouter,
-              waiters: &mut HashMap<u64, Waiter>, msg: EngineMsg) -> bool {
+              waiters: &mut HashMap<u64, Waiter>, hb_buf: &mut String,
+              msg: EngineMsg) -> bool {
     match msg {
         EngineMsg::Submit(req, reply) => {
             submit(router, waiters, req, Waiter::Sync(reply));
@@ -231,6 +278,25 @@ fn handle_msg(router: &mut ChainRouter,
             let _ = reply.send(router.trace_json());
             false
         }
+        EngineMsg::Heartbeat(reply) => {
+            router.write_heartbeat(hb_buf);
+            // the clone is the reply's wire copy — control plane, not the
+            // token hot path (the formatting itself is alloc-free)
+            let _ = reply.send(hb_buf.clone());
+            false
+        }
+        EngineMsg::Drain(reply) => {
+            let already = router.draining();
+            router.set_draining(true);
+            let ack = json::obj(vec![
+                ("draining", Value::Bool(true)),
+                ("already", Value::Bool(already)),
+                ("queued", json::num(router.batcher.queued() as f64)),
+                ("active", json::num(router.batcher.active() as f64)),
+            ]);
+            let _ = reply.send(ack.to_string());
+            false
+        }
         EngineMsg::Shutdown => true,
     }
 }
@@ -240,14 +306,15 @@ fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
     let mut waiters: HashMap<u64, Waiter> = HashMap::new();
     let mut cancels: Vec<u64> = Vec::new();
     let mut emits: Vec<(u64, usize)> = Vec::new();
+    let mut hb_buf = String::new();
     loop {
         // 1. drain submissions (block briefly when idle to avoid spinning)
         let idle = router.batcher.is_idle();
         let mut shutdown = false;
         if idle {
             match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(msg) =>
-                    shutdown = handle_msg(&mut router, &mut waiters, msg),
+                Ok(msg) => shutdown = handle_msg(
+                    &mut router, &mut waiters, &mut hb_buf, msg),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
             }
@@ -255,7 +322,8 @@ fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
         loop {
             match rx.try_recv() {
                 Ok(msg) => {
-                    if handle_msg(&mut router, &mut waiters, msg) {
+                    if handle_msg(&mut router, &mut waiters, &mut hb_buf,
+                                  msg) {
                         shutdown = true;
                         break;
                     }
@@ -356,6 +424,34 @@ fn engine_loop(mut router: ChainRouter, rx: mpsc::Receiver<EngineMsg>)
         if shutdown && router.batcher.is_idle() {
             return Ok(());
         }
+        if router.draining() && router.batcher.is_idle() {
+            // drain complete: every in-flight slot finished and its reply
+            // was delivered above. Serve control traffic through a short
+            // grace window so the fleet router's probe loop observes at
+            // least one final `draining: true` heartbeat, then exit — the
+            // process (replica_sim) joins this thread and terminates.
+            let grace = Instant::now() + Duration::from_millis(200);
+            loop {
+                let now = Instant::now();
+                if now >= grace {
+                    return Ok(());
+                }
+                match rx.recv_timeout(grace - now) {
+                    Ok(msg) => {
+                        // new submissions refuse via the draining gate;
+                        // heartbeats/stats answer normally
+                        if handle_msg(&mut router, &mut waiters,
+                                      &mut hb_buf, msg) {
+                            return Ok(());
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout)
+                    | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Ok(());
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -392,6 +488,8 @@ pub fn request_sync(tx: &mpsc::Sender<EngineMsg>, dataset: &str,
         EngineReply::Done(f) => Ok(f),
         EngineReply::Rejected(rec) =>
             bail!("request rejected: {}", rec.reason),
+        EngineReply::Refused { reason } =>
+            bail!("request refused: {reason}"),
         EngineReply::Accepted(_) =>
             bail!("non-terminal reply leaked through request_reply"),
     }
@@ -431,6 +529,18 @@ fn error_to_json(e: &anyhow::Error) -> Value {
     json::obj(vec![("error", json::s(&format!("{e:#}")))])
 }
 
+/// Wire shape of a pre-admission refusal, e.g.
+/// `{"error":"server draining","rejected":"draining"}`. The `error` key
+/// makes it a terminal frame on the streaming path; the `rejected` key
+/// gives retrying clients the machine-readable reason — deliberately a
+/// different value from the connection-cap `"saturated"`.
+fn refused_to_json(reason: &str) -> Value {
+    json::obj(vec![
+        ("error", json::s(&format!("server {reason}"))),
+        ("rejected", json::s(reason)),
+    ])
+}
+
 fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -454,6 +564,10 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
                 |reply| EngineMsg::Stats { prom, reply })?,
             Ok(ParsedLine::Trace) =>
                 control_reply(&tx, &mut writer, EngineMsg::Trace)?,
+            Ok(ParsedLine::Heartbeat) =>
+                control_reply(&tx, &mut writer, EngineMsg::Heartbeat)?,
+            Ok(ParsedLine::Drain) =>
+                control_reply(&tx, &mut writer, EngineMsg::Drain)?,
         }
     }
     log::debug!("connection {peer:?} closed");
@@ -508,6 +622,10 @@ fn buffered_reply(tx: &mpsc::Sender<EngineMsg>, req: Request,
             }
             Ok(EngineReply::Rejected(rec)) => {
                 writeln!(writer, "{}", shed_to_json(&rec))?;
+                return Ok(());
+            }
+            Ok(EngineReply::Refused { reason }) => {
+                writeln!(writer, "{}", refused_to_json(reason))?;
                 return Ok(());
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -604,6 +722,12 @@ fn stream_reply(tx: &mpsc::Sender<EngineMsg>, req: Request,
                 writeln!(writer, "{shed}")?;
                 return Ok(());
             }
+            StreamEvent::Refused { reason } => {
+                // the `error` key is a documented stream terminator, so
+                // streaming clients need no extra grammar for refusals
+                writeln!(writer, "{}", refused_to_json(reason))?;
+                return Ok(());
+            }
         }
     }
 }
@@ -641,6 +765,10 @@ enum ParsedLine {
     Stats { prom: bool },
     /// `{"control": "trace"}` (legacy: `{"trace": true}`).
     Trace,
+    /// `{"control": "heartbeat"}` — fleet health probe.
+    Heartbeat,
+    /// `{"control": "drain"}` — stop admitting, finish, exit.
+    Drain,
 }
 
 /// Dispatch one protocol line. Control queries use the tagged grammar
@@ -656,9 +784,11 @@ fn parse_line(line: &str) -> Result<ParsedLine> {
             "stats" => Ok(ParsedLine::Stats { prom: false }),
             "prom" => Ok(ParsedLine::Stats { prom: true }),
             "trace" => Ok(ParsedLine::Trace),
+            "heartbeat" => Ok(ParsedLine::Heartbeat),
+            "drain" => Ok(ParsedLine::Drain),
             other => bail!(
-                "control must be \"stats\", \"prom\" or \"trace\", \
-                 got {other:?}"),
+                "control must be \"stats\", \"prom\", \"trace\", \
+                 \"heartbeat\" or \"drain\", got {other:?}"),
         };
     }
     if let Some(s) = v.opt("stats") {
@@ -821,24 +951,52 @@ fn request_fields(dataset: &str, prompt: &[i32], max_new: usize,
     fields
 }
 
+/// One bounded reply-line read: a socket timeout becomes a structured
+/// error naming the budget instead of a raw `io::Error` (the platform
+/// reports it as `WouldBlock` or `TimedOut` depending on the OS). Free
+/// function so [`StreamHandle`] shares it with [`Client`].
+fn read_bounded_line(reader: &mut BufReader<TcpStream>,
+                     line: &mut String, budget: Duration) -> Result<usize> {
+    match reader.read_line(line) {
+        Ok(n) => Ok(n),
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+            || e.kind() == std::io::ErrorKind::TimedOut => {
+            bail!("server read timed out: no reply line within {budget:?}")
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
 /// JSON-lines TCP client for examples/tests: one connection per call,
 /// every connect and read bounded by its timeouts. Control queries use
 /// the tagged `{"control": ...}` grammar.
+///
+/// With [`Client::retry`] set, request submission retries under a bounded
+/// *deterministic* exponential backoff (splitmix jitter, capped attempts;
+/// [`RetryConfig::delay_ms`] is the schedule). Retry covers whole
+/// round trips and stream *establishment* only — a failure mid-stream
+/// must surface to the caller with the tokens already received, because
+/// only the caller holds the committed-token watermark a fleet-level
+/// re-land replays from (DESIGN.md §16). Retrying a half-done exchange is
+/// safe server-side: a dead connection cancels its request, so the retry
+/// never duplicates work.
 #[derive(Debug, Clone, Copy)]
 pub struct Client {
     addr: std::net::SocketAddr,
     connect_timeout: Duration,
     read_timeout: Duration,
+    retry: Option<RetryConfig>,
 }
 
 impl Client {
     /// Client with the default [`CLIENT_CONNECT_TIMEOUT`] /
-    /// [`CLIENT_READ_TIMEOUT`] budgets.
+    /// [`CLIENT_READ_TIMEOUT`] budgets and no retry.
     pub fn new(addr: std::net::SocketAddr) -> Self {
         Client {
             addr,
             connect_timeout: CLIENT_CONNECT_TIMEOUT,
             read_timeout: CLIENT_READ_TIMEOUT,
+            retry: None,
         }
     }
 
@@ -854,6 +1012,39 @@ impl Client {
         self
     }
 
+    /// Enable bounded deterministic exponential-backoff retry.
+    pub fn retry(mut self, r: RetryConfig) -> Self {
+        self.retry = Some(r);
+        self
+    }
+
+    /// Run `f` under the retry schedule (or once, with no schedule set).
+    /// Exhausting the budget wraps the last error in a structured
+    /// `attempts exhausted` context so callers can tell "server said no"
+    /// from "gave up retrying".
+    fn with_retries<T>(&self, mut f: impl FnMut() -> Result<T>)
+                       -> Result<T> {
+        let Some(r) = self.retry else { return f() };
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 1..=r.attempts {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    log::debug!("attempt {attempt}/{} against {} failed: \
+                                 {e:#}", r.attempts, self.addr);
+                    last = Some(e);
+                    if attempt < r.attempts {
+                        std::thread::sleep(
+                            Duration::from_millis(r.delay_ms(attempt)));
+                    }
+                }
+            }
+        }
+        Err(last.expect("attempts >= 1 guarantees one recorded error")
+            .context(format!("{} attempts exhausted (retry budget)",
+                             r.attempts)))
+    }
+
     /// Bounded connect: dial under the connect budget, then arm the read
     /// budget on the socket so every subsequent read is bounded as well.
     fn connect(&self) -> Result<TcpStream> {
@@ -866,30 +1057,32 @@ impl Client {
         Ok(stream)
     }
 
-    /// One bounded reply-line read: a socket timeout becomes a structured
-    /// error naming the budget instead of a raw `io::Error` (the platform
-    /// reports it as `WouldBlock` or `TimedOut` depending on the OS).
+    /// One bounded reply-line read (see [`read_bounded_line`]).
     fn read_line(&self, reader: &mut BufReader<TcpStream>,
                  line: &mut String) -> Result<usize> {
-        match reader.read_line(line) {
-            Ok(n) => Ok(n),
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
-                || e.kind() == std::io::ErrorKind::TimedOut => {
-                bail!("server read timed out: no reply line within {:?}",
-                      self.read_timeout)
-            }
-            Err(e) => Err(e.into()),
-        }
+        read_bounded_line(reader, line, self.read_timeout)
     }
 
-    /// Send one pre-serialized line, parse the single JSON reply.
+    /// Send one pre-serialized line, parse the single JSON reply. The
+    /// whole exchange retries under the schedule: the server cancels a
+    /// request whose connection died, so a re-sent line never duplicates
+    /// engine work.
     fn round_trip(&self, line: &str) -> Result<Value> {
-        let mut stream = self.connect()?;
-        writeln!(stream, "{line}")?;
-        let mut reader = BufReader::new(stream);
-        let mut reply = String::new();
-        self.read_line(&mut reader, &mut reply)?;
-        json::parse(reply.trim())
+        self.with_retries(|| {
+            let mut stream = self.connect()?;
+            writeln!(stream, "{line}")?;
+            let mut reader = BufReader::new(stream);
+            let mut reply = String::new();
+            self.read_line(&mut reader, &mut reply)?;
+            json::parse(reply.trim())
+        })
+    }
+
+    /// Send one raw pre-serialized request line and parse the single JSON
+    /// reply — the fleet control plane (and any custom verb) rides the
+    /// same timeouts and retry schedule as the typed helpers.
+    pub fn rpc(&self, line: &str) -> Result<Value> {
+        self.round_trip(line)
     }
 
     /// One buffered generation request.
@@ -907,30 +1100,49 @@ impl Client {
         self.round_trip(&req.to_string())
     }
 
+    /// Open a streaming request and return the live frame reader. Only
+    /// the *establishment* (connect + request write) retries under the
+    /// schedule; once the handle exists, a read failure surfaces to the
+    /// caller together with every frame already consumed — that partial
+    /// progress is the committed-token watermark the fleet tier replays
+    /// from, and swallowing it inside a retry would lose it.
+    pub fn start_stream(&self, dataset: &str, prompt: &[i32],
+                        max_new: usize, slo_class: Option<&str>,
+                        slo_ms: Option<f64>, sample_seed: Option<u64>)
+                        -> Result<StreamHandle> {
+        let mut fields = request_fields(dataset, prompt, max_new,
+                                        slo_class, slo_ms);
+        if let Some(seed) = sample_seed {
+            fields.push(("sample_seed", json::num(seed as f64)));
+        }
+        fields.push(("stream", Value::Bool(true)));
+        let req = json::obj(fields).to_string();
+        let stream = self.with_retries(|| {
+            let mut s = self.connect()?;
+            writeln!(s, "{req}")?;
+            Ok(s)
+        })?;
+        Ok(StreamHandle {
+            reader: BufReader::new(stream),
+            read_timeout: self.read_timeout,
+        })
+    }
+
     /// Streaming request: sends one `stream:true` request and collects
     /// every frame — token frames plus the terminal `done`/`shed` frame
     /// (or a single `error` object) — in arrival order.
     pub fn request_stream(&self, dataset: &str, prompt: &[i32],
                           max_new: usize, slo_class: Option<&str>,
                           slo_ms: Option<f64>) -> Result<Vec<Value>> {
-        let mut stream = self.connect()?;
-        let mut fields = request_fields(dataset, prompt, max_new,
-                                        slo_class, slo_ms);
-        fields.push(("stream", Value::Bool(true)));
-        let req = json::obj(fields);
-        writeln!(stream, "{req}")?;
-        let mut reader = BufReader::new(stream);
+        let mut handle = self.start_stream(dataset, prompt, max_new,
+                                           slo_class, slo_ms, None)?;
         let mut frames = Vec::new();
         loop {
-            let mut line = String::new();
-            if self.read_line(&mut reader, &mut line)? == 0 {
+            let Some(v) = handle.next_frame()? else {
                 bail!("connection closed mid-stream after {} frames",
                       frames.len());
-            }
-            let v = json::parse(line.trim())?;
-            let terminal = v.opt("error").is_some()
-                || v.opt("event").and_then(|e| e.as_str().ok())
-                    .is_some_and(|e| e == "done" || e == "shed");
+            };
+            let terminal = is_terminal_frame(&v);
             frames.push(v);
             if terminal {
                 return Ok(frames);
@@ -955,5 +1167,46 @@ impl Client {
     /// (`{"control": "trace"}`).
     pub fn trace(&self) -> Result<Value> {
         self.round_trip("{\"control\": \"trace\"}")
+    }
+
+    /// Fetch the fleet health heartbeat (`{"control": "heartbeat"}`);
+    /// returns the whole `{"hb": {...}}` line.
+    pub fn heartbeat(&self) -> Result<Value> {
+        self.round_trip("{\"control\": \"heartbeat\"}")
+    }
+
+    /// Ask the engine to drain (`{"control": "drain"}`); returns the
+    /// `{"draining": true, "already": ..., ...}` acknowledgement.
+    pub fn drain(&self) -> Result<Value> {
+        self.round_trip("{\"control\": \"drain\"}")
+    }
+}
+
+/// True for the frames that end a stream: the `done`/`shed` events and
+/// any `error` object (refusals ride the latter).
+pub fn is_terminal_frame(v: &Value) -> bool {
+    v.opt("error").is_some()
+        || v.opt("event").and_then(|e| e.as_str().ok())
+            .is_some_and(|e| e == "done" || e == "shed")
+}
+
+/// A live streaming request: reads one frame at a time so callers (the
+/// fleet failover loop, incremental UIs) can act per token instead of
+/// waiting for the full collect.
+pub struct StreamHandle {
+    reader: BufReader<TcpStream>,
+    read_timeout: Duration,
+}
+
+impl StreamHandle {
+    /// Next frame, `Ok(None)` on clean EOF (the server closed without a
+    /// terminal frame — mid-stream death from the client's perspective).
+    pub fn next_frame(&mut self) -> Result<Option<Value>> {
+        let mut line = String::new();
+        if read_bounded_line(&mut self.reader, &mut line,
+                             self.read_timeout)? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(json::parse(line.trim())?))
     }
 }

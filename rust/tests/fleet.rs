@@ -1,0 +1,616 @@
+//! Fleet tier (DESIGN.md §16): registry state-machine unit suite,
+//! lifecycle-log replay reconstruction, offline router
+//! assignment/failover accounting, and the multi-process chaos e2e —
+//! N `replica_sim` processes plus a fleet router over localhost TCP,
+//! one replica killed mid-stream, every session completing elsewhere
+//! from its committed-token watermark with `FailedOver` (never shed)
+//! accounting and bit-identical tokens.
+mod common;
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use specrouter::config::{FleetConfig, Mode, RetryConfig};
+use specrouter::fleet::{EventKind, FleetClient, FleetRouter,
+                        HeartbeatSummary, Registry, ReplicaState};
+use specrouter::server::Client;
+
+// ---------------------------------------------------------------- registry
+
+fn ready_registry(n: usize) -> Registry {
+    let mut reg = Registry::new(2, 5);
+    for i in 0..n {
+        let id = reg.join(&format!("127.0.0.1:{}", 9000 + i));
+        assert_eq!(id, i as u64);
+        reg.heartbeat(id, HeartbeatSummary::default());
+    }
+    reg
+}
+
+#[test]
+fn health_state_machine_join_ready_suspect_down_recover() {
+    let mut reg = Registry::new(2, 5);
+    let id = reg.join("127.0.0.1:9000");
+    assert_eq!(reg.get(id).unwrap().state, ReplicaState::Joining);
+
+    reg.advance_tick();
+    reg.heartbeat(id, HeartbeatSummary::default());
+    assert_eq!(reg.get(id).unwrap().state, ReplicaState::Ready);
+
+    // one miss: below the suspicion deadline, still Ready
+    reg.advance_tick();
+    reg.probe_missed(id);
+    assert_eq!(reg.get(id).unwrap().state, ReplicaState::Ready);
+    // second consecutive miss hits suspect_after = 2
+    reg.advance_tick();
+    reg.probe_missed(id);
+    assert_eq!(reg.get(id).unwrap().state, ReplicaState::Suspect);
+    // further misses up to down_after = 5 take it Down
+    for _ in 0..3 {
+        reg.advance_tick();
+        reg.probe_missed(id);
+    }
+    assert_eq!(reg.get(id).unwrap().state, ReplicaState::Down);
+    assert_eq!(reg.count(ReplicaState::Down), 1);
+
+    // an answered heartbeat recovers it
+    reg.advance_tick();
+    reg.heartbeat(id, HeartbeatSummary::default());
+    assert_eq!(reg.get(id).unwrap().state, ReplicaState::Ready);
+    assert_eq!(reg.get(id).unwrap().misses, 0);
+
+    // the log tells exactly this story, with contiguous monotone seqs
+    let kinds: Vec<&str> = reg.events().iter()
+        .map(|e| e.kind.label()).collect();
+    assert_eq!(kinds, ["joined", "ready", "suspected", "downed",
+                       "recovered"]);
+    for (i, ev) in reg.events().iter().enumerate() {
+        assert_eq!(ev.seq, i as u64, "seq gap at {i}");
+    }
+    // heartbeat resets the miss streak: one fresh miss stays Ready
+    reg.advance_tick();
+    reg.probe_missed(id);
+    assert_eq!(reg.get(id).unwrap().state, ReplicaState::Ready);
+}
+
+#[test]
+fn draining_is_idempotent_and_exits_clean() {
+    let mut reg = ready_registry(1);
+    reg.begin_drain(0);
+    assert_eq!(reg.get(0).unwrap().state, ReplicaState::Draining);
+    let events_before = reg.events().len();
+    // second drain: no-op, no duplicate event
+    reg.begin_drain(0);
+    assert_eq!(reg.events().len(), events_before);
+
+    // a draining replica that stops answering exits via Drained, not
+    // Suspected/Downed
+    reg.advance_tick();
+    reg.probe_missed(0);
+    assert_eq!(reg.get(0).unwrap().state, ReplicaState::Down);
+    assert_eq!(reg.events().last().unwrap().kind, EventKind::Drained);
+    // and suspect_now on a downed replica is a no-op
+    let n = reg.events().len();
+    reg.suspect_now(0);
+    assert_eq!(reg.events().len(), n);
+}
+
+#[test]
+fn self_reported_draining_heartbeat_emits_drain_started() {
+    let mut reg = ready_registry(1);
+    let hb = HeartbeatSummary { draining: true, ..Default::default() };
+    reg.heartbeat(0, hb);
+    assert_eq!(reg.get(0).unwrap().state, ReplicaState::Draining);
+    assert_eq!(reg.events().last().unwrap().kind, EventKind::DrainStarted);
+    // repeating the draining heartbeat adds nothing
+    let n = reg.events().len();
+    reg.heartbeat(0, hb);
+    assert_eq!(reg.events().len(), n);
+}
+
+#[test]
+fn event_log_replay_reconstructs_core_bit_identically() {
+    // a messy history: joins interleaved with failures, recovery, drain
+    let mut reg = Registry::new(2, 5);
+    let a = reg.join("127.0.0.1:9100");
+    reg.advance_tick();
+    reg.heartbeat(a, HeartbeatSummary::default());
+    let b = reg.join("127.0.0.1:9101");
+    reg.advance_tick();
+    reg.heartbeat(b, HeartbeatSummary::default());
+    for _ in 0..2 {
+        reg.advance_tick();
+        reg.probe_missed(a);
+        reg.heartbeat(b, HeartbeatSummary::default());
+    }
+    reg.suspect_now(b); // client-reported death on a Ready replica
+    reg.advance_tick();
+    reg.heartbeat(a, HeartbeatSummary::default()); // a recovers
+    let c = reg.join("127.0.0.1:9102");
+    reg.advance_tick();
+    reg.heartbeat(c, HeartbeatSummary::default());
+    reg.begin_drain(c);
+    reg.advance_tick();
+    reg.probe_missed(c); // clean Drained
+
+    let replayed = Registry::replay(2, 5, reg.events());
+    assert_eq!(replayed.core(), reg.core());
+    // bit-identity in the strongest observable sense available here
+    assert_eq!(format!("{:?}", replayed.core()),
+               format!("{:?}", reg.core()));
+    assert_eq!(replayed.events(), reg.events());
+    // replay is a fixed point: replaying the replay changes nothing
+    let again = Registry::replay(2, 5, replayed.events());
+    assert_eq!(again.core(), reg.core());
+}
+
+#[test]
+fn engine_heartbeat_line_roundtrips_the_registry_parser() {
+    let mut router = common::router(2, Mode::Fixed {
+        chain: vec!["m0".into(), "m2".into()],
+        window: 4,
+    });
+    let mut buf = String::new();
+    router.write_heartbeat(&mut buf);
+    let v = specrouter::json::parse(&buf).expect("heartbeat line parses");
+    let hb = HeartbeatSummary::parse(&v).expect("summary parses");
+    assert_eq!(hb.seq, 1);
+    assert_eq!(hb.queued, 0);
+    assert_eq!(hb.active, 0);
+    assert!(!hb.draining);
+    assert_eq!(hb.attainment(), None, "nothing completed yet");
+
+    router.set_draining(true);
+    router.write_heartbeat(&mut buf);
+    let hb2 = HeartbeatSummary::parse(
+        &specrouter::json::parse(&buf).unwrap()).unwrap();
+    assert_eq!(hb2.seq, 2, "heartbeat seq must be monotone");
+    assert!(hb2.draining);
+}
+
+// ------------------------------------------------------------ fleet router
+
+fn fleet_cfg() -> FleetConfig {
+    FleetConfig {
+        probe_interval_ms: 25,
+        suspect_after: 2,
+        down_after: 5,
+        max_failovers: 3,
+        affinity_bonus: 1.5,
+        affinity_cap: 4096,
+        retry: RetryConfig {
+            attempts: 6,
+            base_ms: 10,
+            mult: 1.5,
+            max_ms: 100,
+            jitter: 0.3,
+            seed: 0x5EED,
+        },
+        seed: 0xF1EE7,
+    }
+}
+
+fn hb(queued: usize, active: usize) -> HeartbeatSummary {
+    HeartbeatSummary { queued, active, ..Default::default() }
+}
+
+/// Router with `n` Ready replicas (offline: injected heartbeats).
+fn offline_router(n: usize) -> Arc<FleetRouter> {
+    let router = FleetRouter::new(fleet_cfg()).unwrap();
+    for i in 0..n {
+        let id = router.add_replica(&format!("127.0.0.1:{}", 9200 + i));
+        router.inject_heartbeat(id, hb(0, 0));
+    }
+    router
+}
+
+#[test]
+fn assignment_prefers_low_load_then_prefix_affinity() {
+    let router = offline_router(2);
+    // first assignment: tie on load, lowest id wins
+    let a = router.handle_line(
+        r#"{"fleet":"assign","prefix_key":42}"#).unwrap();
+    assert_eq!(a.get("replica").unwrap().as_f64().unwrap() as u64, 0);
+    // same key sticks to replica 0 while the bonus outweighs its bumped
+    // load (1 session - 1.5 bonus < 0 load on replica 1)
+    let b = router.handle_line(
+        r#"{"fleet":"assign","prefix_key":42}"#).unwrap();
+    assert_eq!(b.get("replica").unwrap().as_f64().unwrap() as u64, 0,
+               "affinity should hold: {b}");
+    // a different key sees raw load only and lands on the idle replica
+    let c = router.handle_line(
+        r#"{"fleet":"assign","prefix_key":7}"#).unwrap();
+    assert_eq!(c.get("replica").unwrap().as_f64().unwrap() as u64, 1,
+               "load balance should win without affinity: {c}");
+}
+
+#[test]
+fn failover_closes_as_failed_over_never_shed() {
+    let router = offline_router(2);
+    let a = router.handle_line(r#"{"fleet":"assign"}"#).unwrap();
+    let sid = a.get("session").unwrap().as_f64().unwrap() as u64;
+    let first = a.get("replica").unwrap().as_f64().unwrap() as u64;
+
+    // mid-stream death: re-land on the other replica, old goes Suspect
+    let f = router.handle_line(&format!(
+        r#"{{"fleet":"failed","session":{sid},"kind":"died"}}"#)).unwrap();
+    let second = f.get("replica").unwrap().as_f64().unwrap() as u64;
+    assert_ne!(second, first);
+    assert_eq!(router.replicas()[first as usize].state,
+               ReplicaState::Suspect);
+
+    // completion after a re-land closes as failed_over
+    let done = router.handle_line(&format!(
+        r#"{{"fleet":"done","session":{sid},"status":"done","ttft_ms":12.5}}"#
+    )).unwrap();
+    assert_eq!(done.get("outcome").unwrap().as_str().unwrap(),
+               "failed_over");
+
+    let stats = router.stats_json();
+    let fleet = stats.get("fleet").unwrap();
+    assert_eq!(fleet.get("failed_over_total").unwrap().as_f64().unwrap(),
+               1.0);
+    assert_eq!(fleet.get("completed_total").unwrap().as_f64().unwrap(),
+               0.0);
+    assert_eq!(fleet.get("shed_total").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(fleet.get("failovers_total").unwrap().as_f64().unwrap(),
+               1.0);
+    assert_eq!(fleet.get("sessions_active").unwrap().as_f64().unwrap(),
+               0.0);
+    // TTFT recorded once, at close
+    let ttft = fleet.get("ttft_ms").unwrap();
+    assert_eq!(ttft.get("count").unwrap().as_f64().unwrap(), 1.0);
+
+    // per-replica health rows carry the schema check_trace.py pins
+    let health = stats.get("health").unwrap().as_arr().unwrap();
+    assert_eq!(health.len(), 2);
+    for row in health {
+        for key in ["replica", "addr", "state", "heartbeat_age_ticks",
+                    "misses", "queued", "active", "draining"] {
+            assert!(row.opt(key).is_some(), "health row missing {key}");
+        }
+    }
+    let prom = router.prom_text();
+    assert!(prom.contains(
+        "specrouter_fleet_sessions_total{outcome=\"failed_over\"} 1"),
+        "prom missing failed_over counter:\n{prom}");
+    assert!(prom.contains("specrouter_fleet_replicas{state=\"suspect\"} 1"),
+            "prom missing suspect gauge:\n{prom}");
+}
+
+#[test]
+fn failover_budget_and_capacity_rejections_are_structured() {
+    let router = offline_router(1);
+    let a = router.handle_line(r#"{"fleet":"assign"}"#).unwrap();
+    let sid = a.get("session").unwrap().as_f64().unwrap() as u64;
+    // only replica died: nowhere to land
+    let f = router.handle_line(&format!(
+        r#"{{"fleet":"failed","session":{sid},"kind":"died"}}"#)).unwrap();
+    assert_eq!(f.get("rejected").unwrap().as_str().unwrap(),
+               "no_ready_replica");
+    // client gives up: closes as failed (not shed, not cancelled)
+    let done = router.handle_line(&format!(
+        r#"{{"fleet":"done","session":{sid},"status":"failed"}}"#)).unwrap();
+    assert_eq!(done.get("outcome").unwrap().as_str().unwrap(), "failed");
+
+    // budget exhaustion on a healthy pool is its own rejection
+    let router = offline_router(3);
+    let a = router.handle_line(r#"{"fleet":"assign"}"#).unwrap();
+    let sid = a.get("session").unwrap().as_f64().unwrap() as u64;
+    for i in 0..4u32 {
+        let f = router.handle_line(&format!(
+            r#"{{"fleet":"failed","session":{sid},"kind":"busy"}}"#))
+            .unwrap();
+        if i < 3 {
+            assert!(f.opt("replica").is_some(),
+                    "failover {i} within budget should land: {f}");
+        } else {
+            assert_eq!(f.get("rejected").unwrap().as_str().unwrap(),
+                       "failover_budget", "budget must exhaust: {f}");
+        }
+    }
+    // "retry" kind is not charged against the budget
+    let b = router.handle_line(r#"{"fleet":"assign"}"#).unwrap();
+    let sid2 = b.get("session").unwrap().as_f64().unwrap() as u64;
+    for _ in 0..10 {
+        let f = router.handle_line(&format!(
+            r#"{{"fleet":"failed","session":{sid2},"kind":"retry"}}"#))
+            .unwrap();
+        assert!(f.opt("replica").is_some(),
+                "retry must never exhaust the budget: {f}");
+    }
+}
+
+// ------------------------------------------------------------- chaos e2e
+
+struct ReplicaProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for ReplicaProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_replica(batch: usize, throttle_us: u64, seed: u64) -> ReplicaProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_replica_sim"))
+        .args(["--addr", "127.0.0.1:0",
+               "--batch", &batch.to_string(),
+               "--throttle-us", &throttle_us.to_string(),
+               "--seed", &seed.to_string()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawning replica_sim");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("LISTENING line");
+    let addr = line.trim()
+        .strip_prefix("LISTENING ")
+        .unwrap_or_else(|| panic!("bad replica banner: {line:?}"))
+        .to_string();
+    ReplicaProc { child, addr }
+}
+
+fn wait_all_ready(router: &FleetRouter, n: usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.replicas().iter()
+        .filter(|r| r.state == ReplicaState::Ready).count() < n {
+        assert!(Instant::now() < deadline,
+                "replicas never all became Ready: {:?}",
+                router.replicas().iter().map(|r| r.state)
+                    .collect::<Vec<_>>());
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn kill_replica_mid_stream_sessions_complete_elsewhere() {
+    const SESSIONS: usize = 6;
+    const MAX_NEW: usize = 32;
+    let seed = 0xF1EE7u64;
+    let mut replicas: Vec<ReplicaProc> = (0..3)
+        .map(|_| spawn_replica(8, 4000, seed))
+        .collect();
+
+    let fcfg = fleet_cfg();
+    let router = FleetRouter::new(fcfg.clone()).unwrap();
+    for r in &replicas {
+        router.add_replica(&r.addr);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let probe = router.spawn_probe_loop(stop.clone());
+    let (ready_tx, ready_rx) = mpsc::channel();
+    {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            router.serve("127.0.0.1:0", Some(ready_tx)).ok();
+        });
+    }
+    let raddr = ready_rx.recv().expect("router listening");
+    wait_all_ready(&router, 3);
+
+    // identical prompts: every session shares one Markov token chain, so
+    // afterwards every token vector — re-landed or not — must be equal
+    let prompt = vec![1, 70, 71, 72];
+    let fc = FleetClient::new(raddr, &fcfg)
+        .timeouts(Duration::from_secs(2), Duration::from_secs(20));
+    let progress: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..SESSIONS).map(|_| AtomicUsize::new(0)).collect());
+    let mut workers = Vec::new();
+    for i in 0..SESSIONS {
+        let prompt = prompt.clone();
+        let progress = progress.clone();
+        workers.push(std::thread::spawn(move || {
+            fc.generate_with("gsm8k", &prompt, MAX_NEW, None, |_, _| {
+                progress[i].fetch_add(1, Ordering::SeqCst);
+            })
+        }));
+    }
+
+    // every session must be visibly mid-stream before the kill
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while progress.iter().any(|p| p.load(Ordering::SeqCst) < 2) {
+        assert!(Instant::now() < deadline, "sessions never got moving: \
+                {:?}", progress.iter().map(|p| p.load(Ordering::SeqCst))
+                    .collect::<Vec<_>>());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let victim = (0..replicas.len() as u64)
+        .max_by_key(|&id| router.sessions_on(id))
+        .unwrap();
+    assert!(router.sessions_on(victim) > 0,
+            "kill must land on a replica with live sessions");
+    replicas[victim as usize].child.kill().expect("kill victim");
+    replicas[victim as usize].child.wait().expect("reap victim");
+
+    let results: Vec<_> = workers.into_iter()
+        .map(|w| w.join().expect("session thread panicked")
+             .expect("session failed outright"))
+        .collect();
+
+    // every request completed somewhere, in full
+    let mut failed_over = 0;
+    for r in &results {
+        assert_eq!(r.tokens.len(), MAX_NEW,
+                   "session {} finished short: {} tokens (outcome {})",
+                   r.session, r.tokens.len(), r.outcome);
+        assert_eq!(r.tokens, results[0].tokens,
+                   "re-landed session {} diverged from the shared chain",
+                   r.session);
+        if r.failovers > 0 {
+            failed_over += 1;
+            assert_eq!(r.outcome, "failed_over",
+                       "re-landed session {} mislabeled", r.session);
+            assert!(r.replicas.contains(&victim),
+                    "failed-over session {} never touched the victim",
+                    r.session);
+            assert!(r.ttft_ms.is_finite() && r.ttft_ms >= 0.0);
+        } else {
+            assert_eq!(r.outcome, "completed");
+        }
+    }
+    assert!(failed_over > 0, "the kill landed on a replica with \
+             sessions, so at least one must have failed over");
+
+    // a clean post-chaos run continues the same chain: watermark replay
+    // was bit-identical to uninterrupted generation
+    let reference = fc.generate("gsm8k", &prompt, MAX_NEW, None)
+        .expect("reference session");
+    assert_eq!(reference.outcome, "completed");
+    assert_eq!(reference.tokens, results[0].tokens,
+               "failed-over tokens differ from an uninterrupted run");
+
+    // router accounting: failovers never counted as sheds or cancels
+    let stats = Client::new(raddr).rpc(r#"{"fleet":"stats"}"#)
+        .expect("router stats");
+    let fleet = stats.get("fleet").unwrap();
+    assert_eq!(fleet.get("shed_total").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(fleet.get("cancelled_total").unwrap().as_f64().unwrap(),
+               0.0);
+    assert_eq!(fleet.get("failed_total").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(fleet.get("failed_over_total").unwrap().as_f64().unwrap(),
+               failed_over as f64);
+    assert_eq!(fleet.get("completed_total").unwrap().as_f64().unwrap(),
+               (SESSIONS - failed_over + 1) as f64);
+    assert_eq!(fleet.get("ttft_ms").unwrap().get("count").unwrap()
+               .as_f64().unwrap(), (SESSIONS + 1) as f64,
+               "TTFT must be recorded exactly once per session");
+
+    // no orphaned slots on the survivors: their engines are fully idle
+    for (id, r) in replicas.iter().enumerate() {
+        if id as u64 == victim {
+            continue;
+        }
+        let hb = HeartbeatSummary::parse(
+            &Client::new(r.addr.parse().unwrap())
+                .read_timeout(Duration::from_secs(5))
+                .heartbeat().expect("survivor heartbeat")).unwrap();
+        assert_eq!(hb.active, 0, "survivor {id} has orphaned active slots");
+        assert_eq!(hb.queued, 0, "survivor {id} has orphaned queue depth");
+        assert!(!hb.draining);
+    }
+
+    // the victim's death is in the health view and the event log replays
+    // to the live core bit-identically
+    let dead = &router.replicas()[victim as usize];
+    assert!(dead.state == ReplicaState::Suspect
+            || dead.state == ReplicaState::Down,
+            "victim should be suspect/down, is {:?}", dead.state);
+    let replayed = Registry::replay(fcfg.suspect_after, fcfg.down_after,
+                                    &router.events());
+    assert_eq!(replayed.core(), router.registry_core());
+    assert_eq!(format!("{:?}", replayed.core()),
+               format!("{:?}", router.registry_core()));
+
+    stop.store(true, Ordering::SeqCst);
+    probe.join().unwrap();
+    drop(replicas);
+}
+
+#[test]
+fn drain_via_fleet_router_finishes_streams_and_exits_clean() {
+    let seed = 0xD4A1u64;
+    let mut replicas: Vec<ReplicaProc> = (0..2)
+        .map(|_| spawn_replica(8, 2000, seed))
+        .collect();
+    let fcfg = fleet_cfg();
+    let router = FleetRouter::new(fcfg.clone()).unwrap();
+    for r in &replicas {
+        router.add_replica(&r.addr);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let probe = router.spawn_probe_loop(stop.clone());
+    let (ready_tx, ready_rx) = mpsc::channel();
+    {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            router.serve("127.0.0.1:0", Some(ready_tx)).ok();
+        });
+    }
+    let raddr = ready_rx.recv().expect("router listening");
+    wait_all_ready(&router, 2);
+
+    // one in-flight stream on replica 0 (affinity-free assign lands on
+    // the lowest id at equal load)
+    let fc = FleetClient::new(raddr, &fcfg)
+        .timeouts(Duration::from_secs(2), Duration::from_secs(20));
+    let prompt = vec![1, 70, 71, 72];
+    let started = Arc::new(AtomicUsize::new(0));
+    let worker = {
+        let prompt = prompt.clone();
+        let started = started.clone();
+        std::thread::spawn(move || {
+            fc.generate_with("gsm8k", &prompt, 24, None, |_, _| {
+                started.fetch_add(1, Ordering::SeqCst);
+            })
+        })
+    };
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while started.load(Ordering::SeqCst) < 2 {
+        assert!(Instant::now() < deadline, "stream never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let serving = (0..2).max_by_key(|&i| router.sessions_on(i)).unwrap();
+
+    // drain the replica that is serving the stream, mid-stream
+    let ack = Client::new(raddr).rpc(
+        &format!(r#"{{"fleet":"drain","replica":{serving}}}"#))
+        .expect("drain verb");
+    assert_eq!(ack.get("draining").unwrap().as_f64().unwrap(),
+               serving as f64);
+
+    // the in-flight stream still finishes (drain refuses only NEW work).
+    // Depending on timing it completes on the draining replica or — if
+    // the process exits under it first — re-lands; both are correct, and
+    // either way it is never a shed.
+    let result = worker.join().unwrap().expect("drained stream");
+    assert_eq!(result.tokens.len(), 24);
+    assert!(result.outcome == "completed"
+            || result.outcome == "failed_over",
+            "drain must not shed in-flight work: {}", result.outcome);
+
+    // the drained replica exits 0 on its own once idle
+    let exit_deadline = Instant::now() + Duration::from_secs(10);
+    let status = loop {
+        if let Some(st) = replicas[serving as usize].child.try_wait()
+            .expect("try_wait") {
+            break st;
+        }
+        assert!(Instant::now() < exit_deadline,
+                "drained replica never exited");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "drained replica exited {status:?}");
+
+    // registry recorded the drain lifecycle, and new sessions avoid it
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let st = router.replicas()[serving as usize].state;
+        if st == ReplicaState::Down || st == ReplicaState::Draining {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "drain never reached the registry: {st:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(router.events().iter()
+            .any(|e| e.replica == serving
+                 && e.kind == EventKind::DrainStarted),
+            "missing DrainStarted event: {:?}", router.events());
+    let survivor = 1 - serving;
+    let after = fc.generate("gsm8k", &prompt, 8, None)
+        .expect("post-drain session");
+    assert_eq!(after.outcome, "completed");
+    assert_eq!(after.replicas, vec![survivor],
+               "new sessions must land on the survivor");
+
+    stop.store(true, Ordering::SeqCst);
+    probe.join().unwrap();
+    drop(replicas);
+}

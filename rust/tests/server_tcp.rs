@@ -354,6 +354,129 @@ fn control_grammar_legacy_and_tagged_agree() {
 }
 
 #[test]
+fn drain_refuses_new_work_finishes_streams_and_exits_unprompted() {
+    let (engine, addr) = sim_server(2);
+    let client = Client::new(addr);
+    // an in-flight stream straddling the drain verb
+    let mut handle = client
+        .start_stream("gsm8k", &sim_prompt(), 16, None, None, None)
+        .expect("stream establishment");
+    let first = handle.next_frame().expect("first frame").unwrap();
+    assert_eq!(first.get("event").unwrap().as_str().unwrap(), "token");
+
+    let ack = client.drain().expect("drain verb");
+    assert!(matches!(ack.get("draining").unwrap(),
+                     specrouter::json::Value::Bool(true)), "{ack}");
+    assert!(matches!(ack.get("already").unwrap(),
+                     specrouter::json::Value::Bool(false)), "{ack}");
+
+    // new work is refused with a structured draining rejection — distinct
+    // from the connection-cap "saturated" and from an admission shed
+    let refused = client.request("gsm8k", &sim_prompt(), 4)
+        .expect("refusal is a reply, not a dead socket");
+    assert_eq!(refused.get("rejected").unwrap().as_str().unwrap(),
+               "draining", "{refused}");
+    assert!(refused.get("error").unwrap().as_str().unwrap()
+            .contains("draining"), "{refused}");
+    assert!(!refused.to_string().contains("saturated"), "{refused}");
+    // streaming admission is refused the same way, as a terminal frame
+    let frames = client
+        .request_stream("gsm8k", &sim_prompt(), 4, None, None)
+        .expect("refused stream still answers");
+    assert_eq!(frames.len(), 1, "{frames:?}");
+    assert_eq!(frames[0].get("rejected").unwrap().as_str().unwrap(),
+               "draining", "{:?}", frames[0]);
+
+    // the straddling stream still runs to completion: drain sheds no
+    // in-flight work
+    let mut tokens = 1;
+    loop {
+        let frame = handle.next_frame().expect("mid-drain frame").unwrap();
+        if specrouter::server::is_terminal_frame(&frame) {
+            assert_eq!(frame.get("event").unwrap().as_str().unwrap(),
+                       "done", "in-flight stream must finish: {frame}");
+            assert_eq!(frame.get("tokens").unwrap().as_arr().unwrap()
+                       .len(), 16, "{frame}");
+            break;
+        }
+        tokens += 1;
+    }
+    assert_eq!(tokens, 16);
+
+    // a second drain is idempotent and says so
+    let again = client.drain().expect("second drain");
+    assert!(matches!(again.get("already").unwrap(),
+                     specrouter::json::Value::Bool(true)), "{again}");
+
+    // no Shutdown message: the engine exits on its own once drained idle
+    engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn heartbeat_verb_reports_monotone_seq_and_live_gauges() {
+    use specrouter::fleet::HeartbeatSummary;
+    let (engine, addr) = sim_server(2);
+    let client = Client::new(addr);
+    let hb1 = HeartbeatSummary::parse(&client.heartbeat().unwrap())
+        .expect("heartbeat parses into the registry summary");
+    assert_eq!(hb1.seq, 1);
+    assert_eq!((hb1.queued, hb1.active), (0, 0));
+    assert!(!hb1.draining);
+    assert_eq!(hb1.attainment(), None, "no completions yet");
+
+    let resp = client.request("gsm8k", &sim_prompt(), 6).unwrap();
+    assert!(resp.opt("rejected").is_none(), "unexpected shed: {resp}");
+    let hb2 = HeartbeatSummary::parse(&client.heartbeat().unwrap())
+        .unwrap();
+    assert!(hb2.seq > hb1.seq, "heartbeat seq must be monotone");
+    assert!(hb2.tick > 0, "engine ticked serving the request");
+    assert!(hb2.attainment().is_some(),
+            "a completed request must land in the SLO counters");
+
+    // the stats snapshot exposes the same fleet view under a stable key
+    let stats = client.stats().unwrap();
+    let fleet = stats.get("fleet").expect("stats must carry fleet block");
+    assert!(matches!(fleet.get("draining").unwrap(),
+                     specrouter::json::Value::Bool(false)));
+    assert_eq!(fleet.get("heartbeats").unwrap().as_f64().unwrap(), 2.0);
+
+    engine.tx.send(EngineMsg::Shutdown).ok();
+    engine.join.join().unwrap().unwrap();
+}
+
+#[test]
+fn client_retry_is_bounded_and_reports_exhaustion() {
+    use specrouter::config::RetryConfig;
+    use std::time::{Duration, Instant};
+    // grab a port with no listener behind it
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let retry = RetryConfig {
+        attempts: 3,
+        base_ms: 5,
+        mult: 2.0,
+        max_ms: 40,
+        jitter: 0.5,
+        seed: 0x5EED,
+    };
+    let start = Instant::now();
+    let err = Client::new(dead)
+        .connect_timeout(Duration::from_millis(200))
+        .retry(retry)
+        .rpc(r#"{"control":"stats"}"#)
+        .expect_err("no listener: the retry budget must exhaust");
+    let chain = format!("{err:#}");
+    assert!(chain.contains("3 attempts exhausted"),
+            "missing structured exhaustion context: {chain}");
+    // bounded: 3 attempts, 2 sleeps of at most base*mult^k <= 15ms total,
+    // plus connect failures — nowhere near an unbounded backoff
+    assert!(start.elapsed() < Duration::from_secs(5),
+            "retry loop ran away: {:?}", start.elapsed());
+}
+
+#[test]
 fn connection_cap_returns_saturated_error() {
     // no engine needed: saturation is decided before any request is read
     let (tx, _rx) = mpsc::channel();
